@@ -1,0 +1,110 @@
+//! End-to-end serving driver (deliverable (e) of DESIGN.md): load the
+//! trained model pair, run the full coordinator (admission -> continuous
+//! batching -> speculative rounds -> streaming), push an open-loop
+//! Poisson workload of real corpus prompts through it, and report
+//! latency/throughput. Results are recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example serve_batch
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use rsd::bench::workload;
+use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::engine::{spawn_with, Event, Request};
+use rsd::model::PjrtLm;
+use rsd::runtime::Runtime;
+
+const N_REQUESTS: usize = 24;
+const MAX_NEW: usize = 32;
+const RATE: f64 = 4.0; // requests/second (open loop)
+
+fn main() -> anyhow::Result<()> {
+    for decoder in [DecoderConfig::Ar, DecoderConfig::RsdS { w: 3, l: 3 }] {
+        run_one(decoder)?;
+    }
+    Ok(())
+}
+
+fn run_one(decoder: DecoderConfig) -> anyhow::Result<()> {
+    let cfg = EngineConfig {
+        max_concurrency: 4,
+        max_queue: 64,
+        default_max_tokens: MAX_NEW,
+        sampling: SamplingConfig { temperature: 0.3, top_p: 1.0 },
+        decoder: decoder.clone(),
+        seed: 0,
+    };
+    let (tx, handle) = spawn_with(move || {
+        let rt = Runtime::cpu()?;
+        let (target, draft) = PjrtLm::load_pair(&rt, "artifacts")?;
+        Ok(rsd::coordinator::engine::Engine::new(target, draft, cfg))
+    });
+
+    let prompts = workload::corpus_prompts("artifacts", N_REQUESTS, 32, 7)?;
+    let arrivals = workload::poisson_arrivals(N_REQUESTS, RATE, 11);
+
+    println!("\n=== serve_batch: decoder {} ===", decoder.label());
+    println!("{N_REQUESTS} requests, Poisson {RATE}/s, {MAX_NEW} tokens each");
+
+    let t0 = Instant::now();
+    let mut receivers = Vec::new();
+    for (i, (prompt, at)) in prompts.into_iter().zip(arrivals).enumerate() {
+        // open-loop arrivals
+        let now = t0.elapsed().as_secs_f64();
+        if at > now {
+            std::thread::sleep(Duration::from_secs_f64(at - now));
+        }
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id: i as u64,
+            prompt,
+            max_new: MAX_NEW,
+            decoder: None,
+            sampling: None,
+            resp: rtx,
+        })
+        .unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+
+    let mut total_tokens = 0usize;
+    let mut effs = Vec::new();
+    for (i, rrx) in receivers.into_iter().enumerate() {
+        loop {
+            match rrx.recv() {
+                Ok(Event::Tokens(t)) => total_tokens += t.len(),
+                Ok(Event::Done(stats)) => {
+                    effs.push(stats.block_efficiency());
+                    break;
+                }
+                Ok(Event::Error(e)) => {
+                    println!("request {i}: ERROR {e}");
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = handle.join().unwrap()?;
+    let snap = metrics.snapshot();
+    let mean_eff = effs.iter().sum::<f64>() / effs.len().max(1) as f64;
+
+    println!("completed {} / rejected {}", snap.completed, snap.rejected);
+    println!(
+        "throughput {:.1} tok/s  |  mean block efficiency {:.3}",
+        total_tokens as f64 / wall,
+        mean_eff
+    );
+    println!(
+        "latency p50/p95/p99: {:.2}/{:.2}/{:.2} s  |  TTFT p50/p95: {:.2}/{:.2} s",
+        snap.latency_p50, snap.latency_p95, snap.latency_p99, snap.ttft_p50, snap.ttft_p95
+    );
+    println!(
+        "decode rounds {}  |  draft calls {}  |  tokens out {}",
+        snap.decode_rounds, snap.draft_calls, snap.tokens_out
+    );
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Didactic: print the draft-token trees RSD-C and RSD-S actually build
+//! (paper Figure 3) and trace one verification walk through each.
+//!
+//!     cargo run --release --example tree_visualize [--sim]
+
+use rsd::config::SamplingConfig;
+use rsd::decode::rrs::Rrs;
+use rsd::decode::spec::{verify_tree, DraftTree, TreeNode, TreeStrategy};
+use rsd::decode::strategies::{GumbelTopK, StochasticBeam};
+use rsd::llm::{EvalNode, Llm};
+use rsd::sampling::process_logits;
+use rsd::sim::SimLm;
+use rsd::tokenizer::Tokenizer;
+use rsd::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let tok = Tokenizer::new();
+    let (target, draft) = SimLm::pair(4, 0.75, 32);
+    let prompt = tok.encode("speculative ");
+    let sampling = SamplingConfig { temperature: 0.8, top_p: 1.0 };
+    let mut rng = Rng::seed_from_u64(3);
+
+    println!("=== RSD-C, b = (3, 2, 1)  (paper Fig. 3a) ===");
+    let mut strat = GumbelTopK { branches: vec![3, 2, 1] };
+    build_and_show(&target, &draft, &mut strat, &sampling, &prompt, &tok, &mut rng)?;
+
+    println!("\n=== RSD-S, W = 3, L = 3  (paper Fig. 3b) ===");
+    let mut strat = StochasticBeam::new(3, 3);
+    build_and_show(&target, &draft, &mut strat, &sampling, &prompt, &tok, &mut rng)?;
+    Ok(())
+}
+
+fn build_and_show<S: TreeStrategy>(
+    target: &SimLm,
+    draft: &SimLm,
+    strategy: &mut S,
+    sampling: &SamplingConfig,
+    prompt: &[u32],
+    tok: &Tokenizer,
+    rng: &mut Rng,
+) -> anyhow::Result<()> {
+    // --- draft phase (mirrors SpecStepper::step, instrumented) ----------
+    let mut dsess = draft.begin()?;
+    let nodes: Vec<EvalNode> = prompt
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| if i == 0 { EvalNode::root(t) } else { EvalNode::child(t, i - 1) })
+        .collect();
+    let drows = draft.eval(&mut dsess, &nodes)?;
+    let root_lp = process_logits(drows.last().unwrap(), sampling.temperature, sampling.top_p);
+    let mut tree = DraftTree { nodes: Vec::new(), levels: Vec::new(), root_draft_lp: root_lp };
+    strategy.begin_round();
+    let mut pending = prompt.len();
+    for level in 0..strategy.depth() {
+        let children = strategy.expand(&tree, level, rng);
+        if children.is_empty() {
+            break;
+        }
+        let mut created = Vec::new();
+        for c in &children {
+            let id = tree.nodes.len();
+            tree.nodes.push(TreeNode {
+                token: c.token,
+                parent: c.parent,
+                level,
+                mult: 1,
+                draft_pending: None,
+                draft_lp: None,
+            });
+            created.push(id);
+        }
+        tree.levels.push(created.clone());
+        strategy.on_created(&tree, level, &created);
+        if level + 1 < strategy.depth() {
+            let nodes: Vec<EvalNode> = created
+                .iter()
+                .map(|&id| {
+                    let p = match tree.nodes[id].parent {
+                        None => prompt.len() as i64 - 1,
+                        Some(pp) => tree.nodes[pp].draft_pending.unwrap() as i64,
+                    };
+                    EvalNode { token: tree.nodes[id].token, parent: p }
+                })
+                .collect();
+            let rows = draft.eval(&mut dsess, &nodes)?;
+            for (i, &id) in created.iter().enumerate() {
+                tree.nodes[id].draft_pending = Some(pending + i);
+                tree.nodes[id].draft_lp =
+                    Some(process_logits(&rows[i], sampling.temperature, sampling.top_p));
+            }
+            pending += created.len();
+        }
+    }
+
+    // print the tree
+    fn show(tree: &DraftTree, tok: &Tokenizer, parent: Option<usize>, indent: usize) {
+        for level in tree.levels.iter() {
+            for &id in level {
+                if tree.nodes[id].parent == parent {
+                    let ch = tok.decode(&[tree.nodes[id].token]);
+                    println!("{:indent$}└─ [{id}] {ch:?}", "", indent = indent);
+                    show(tree, tok, Some(id), indent + 3);
+                }
+            }
+        }
+    }
+    println!("(root context: {:?})", tok.decode(prompt));
+    show(&tree, tok, None, 0);
+
+    // --- target phase + verification -------------------------------------
+    let mut tsess = target.begin()?;
+    let mut tnodes: Vec<EvalNode> = prompt
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| if i == 0 { EvalNode::root(t) } else { EvalNode::child(t, i - 1) })
+        .collect();
+    for n in &tree.nodes {
+        let parent = match n.parent {
+            None => (prompt.len() - 1) as i64,
+            Some(p) => (prompt.len() + p) as i64,
+        };
+        tnodes.push(EvalNode { token: n.token, parent });
+    }
+    let trows = target.eval(&mut tsess, &tnodes)?;
+    let root_q =
+        process_logits(&trows[prompt.len() - 1], sampling.temperature, sampling.top_p);
+    let node_q: Vec<_> = trows[prompt.len()..]
+        .iter()
+        .map(|r| process_logits(r, sampling.temperature, sampling.top_p))
+        .collect();
+    let vr = verify_tree(&tree, &Rrs, &root_q, &node_q, rng);
+    let path: Vec<String> = vr
+        .accepted
+        .iter()
+        .map(|&id| format!("[{id}] {:?}", tok.decode(&[tree.nodes[id].token])))
+        .collect();
+    println!(
+        "verification: accepted path {{ {} }} + final {:?} ({})",
+        path.join(" -> "),
+        tok.decode(&[vr.final_token]),
+        if vr.bonus { "bonus from q" } else { "residual resample" },
+    );
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT export: lower the L2 step function to HLO *text* and emit all
+artifacts the Rust coordinator needs.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Emits into artifacts/:
+  target_step.hlo.txt, draft_step.hlo.txt   — step executables
+  target.tensors, draft.tensors             — trained weights (tensorfile)
+  corpus.bin                                — synthetic corpus (bench prompts)
+  manifest.json                             — shapes/dims/tiles for Rust
+  train_log.json                            — loss curves (EXPERIMENTS.md)
+
+`make artifacts` skips this when outputs are newer than inputs.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import tensorfile
+from .configs import DRAFT, TARGET, TRAIN, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Tile variants compiled per model: the runtime picks the smallest tile
+# that fits the nodes of one eval call, so single-token decode does not
+# pay for a 32-wide tile (EXPERIMENTS.md §Perf iteration 2).
+S_TILES = [1, 4, 8, 16, 32]
+
+
+def lower_step(cfg: ModelConfig, s_tile: int, *, use_pallas: bool = True) -> str:
+    """Lower step() for `cfg` at tile width `s_tile` (weights as inputs)."""
+    B, S, Mlen = cfg.batch, s_tile, cfg.cache_len
+    L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+
+    def fn(params: M.Params, tokens, positions, dest, attn_mask, kc, vc):
+        logits, kc2, vc2 = M.step(cfg, params, tokens, positions, dest,
+                                  attn_mask, kc, vc, use_pallas=use_pallas)
+        return logits, kc2, vc2
+
+    f32, i32 = jnp.float32, jnp.int32
+    p0 = M.init_params(cfg, jax.random.PRNGKey(0))
+    pspec = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), p0)
+    cache = jax.ShapeDtypeStruct((L, B, H, Mlen, Dh), M.CACHE_DTYPE)
+    args = (
+        pspec,
+        jax.ShapeDtypeStruct((B, S), i32),
+        jax.ShapeDtypeStruct((B, S), i32),
+        jax.ShapeDtypeStruct((B, S), i32),
+        jax.ShapeDtypeStruct((B, S, Mlen), f32),
+        cache, cache,
+    )
+    # donate the KV caches: they are pure state threaded through the call.
+    lowered = jax.jit(fn, donate_argnums=(5, 6)).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def params_to_tensors(params: M.Params) -> dict:
+    return {name: np.asarray(getattr(params, name))
+            for name in M.PARAM_FIELDS}
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="random-init weights (CI smoke mode)")
+    ap.add_argument("--retrain", action="store_true",
+                    help="force re-training even when weights exist")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    t_path = os.path.join(out, "target.tensors")
+    d_path = os.path.join(out, "draft.tensors")
+    c_path = os.path.join(out, "corpus.bin")
+    if args.skip_train:
+        raw = b"\x00" * 4096
+        tparams = M.init_params(TARGET, jax.random.PRNGKey(1))
+        dparams = M.init_params(DRAFT, jax.random.PRNGKey(2))
+        logs = {"target": [], "draft": [], "skip_train": True}
+    elif (not args.retrain and os.path.exists(t_path) and os.path.exists(d_path)
+          and os.path.exists(c_path)):
+        # reuse the trained checkpoint; re-lower only (tile changes etc.)
+        print("reusing existing weights (pass --retrain to re-train)")
+        with open(c_path, "rb") as f:
+            raw = f.read()
+        tparams = M.Params(**{k: jnp.asarray(v) for k, v in
+                              tensorfile.load(t_path).items()})
+        dparams = M.Params(**{k: jnp.asarray(v) for k, v in
+                              tensorfile.load(d_path).items()})
+        logs = {"target": [], "draft": [], "reused": True}
+    else:
+        from . import train as train_mod
+        raw, tparams, dparams, logs = train_mod.run(TRAIN)
+
+    with open(os.path.join(out, "corpus.bin"), "wb") as f:
+        f.write(raw)
+    tensorfile.save(os.path.join(out, "target.tensors"),
+                    params_to_tensors(tparams))
+    tensorfile.save(os.path.join(out, "draft.tensors"),
+                    params_to_tensors(dparams))
+
+    manifest = {"models": {}, "param_fields": M.PARAM_FIELDS}
+    for cfg, params in ((TARGET, tparams), (DRAFT, dparams)):
+        tiles = {}
+        for s_tile in S_TILES:
+            hlo = lower_step(cfg, s_tile, use_pallas=True)
+            name = f"{cfg.name}_step_s{s_tile}.hlo.txt"
+            hlo_path = os.path.join(out, name)
+            with open(hlo_path, "w") as f:
+                f.write(hlo)
+            print(f"wrote {hlo_path}: {len(hlo)} chars")
+            tiles[str(s_tile)] = {"hlo": name, "hlo_sha256": _sha256(hlo_path)}
+        # keep the legacy single-tile alias pointing at the widest tile
+        manifest["models"][cfg.name] = {
+            **cfg.to_dict(),
+            "hlo": tiles[str(max(S_TILES))]["hlo"],
+            "tiles": tiles,
+            "tensors": f"{cfg.name}.tensors",
+            "tensors_sha256": _sha256(os.path.join(out, f"{cfg.name}.tensors")),
+            # input order for the rust runtime: params fields, then operands
+            "input_order": M.PARAM_FIELDS + [
+                "tokens", "positions", "dest", "attn_mask", "kcache", "vcache"],
+            "outputs": ["logits", "kcache", "vcache"],
+        }
+    with open(os.path.join(out, "train_log.json"), "w") as f:
+        json.dump(logs, f)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Model + artifact configurations shared by the compile path.
+
+Two checkpoints are built: a *target* LM (~2.9M params) trained on the
+synthetic corpus and a *draft* LM (~0.12M params) distilled from the
+target. Both share the same step-executable contract (see DESIGN.md §1);
+only the dimensions differ. The size ratio (~24x) drives MBSU the same
+way the paper's 7B/115M pairing does.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 256
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    d_ff: int = 512
+    # step-executable tile sizes (static shapes)
+    s_tile: int = 32        # max tokens per step call (tree width / prefill chunk)
+    cache_len: int = 256    # M: KV-cache slots; slot M-1 is the padding scratch slot
+    batch: int = 1
+    rope_theta: float = 10000.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        L, D, F, V = self.n_layers, self.d_model, self.d_ff, self.vocab
+        attn = 4 * D * D
+        ffn = 3 * D * F
+        norms = 2 * D
+        return V * D + L * (attn + ffn + norms) + D + D * V
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        d["params"] = self.param_count()
+        return d
+
+
+TARGET = ModelConfig(name="target", n_layers=4, d_model=256, n_heads=4, d_ff=512)
+DRAFT = ModelConfig(name="draft", n_layers=2, d_model=64, n_heads=2, d_ff=128)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seed: int = 0
+    seq_len: int = 96
+    batch: int = 8
+    target_steps: int = 400
+    draft_steps: int = 300
+    lr: float = 3e-3
+    warmup: int = 20
+    corpus_chars: int = 1_000_000
+    distill_kl_weight: float = 1.0  # draft trains on pure KL to target
+
+
+TRAIN = TrainConfig()

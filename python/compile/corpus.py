@@ -1,0 +1,63 @@
+"""Synthetic tiny-corpus generator.
+
+The paper evaluates on WMT/XSum/Dolly, which are unavailable here
+(DESIGN.md §2). Block efficiency depends on the *draft-target
+distributional discrepancy*, not on the corpus itself, so we substitute a
+seeded character-level source with real learnable structure: a sparse
+trigram ("Markov English") model over a 32-symbol alphabet with Zipfian
+marginals and word-like segmentation. The target LM learns it well; the
+2-layer draft learns it imperfectly — reproducing the alignment regime
+the paper's distilled drafters sit in (App. C.1).
+
+Deterministic per seed. Emitted as raw bytes (tokens ARE bytes).
+"""
+
+import numpy as np
+
+ALPHABET = "abcdefghijklmnopqrstuvwxyz .,;\n'"
+assert len(ALPHABET) == 32
+
+
+def build_trigram(seed: int):
+    """Sparse trigram transition table over the alphabet.
+
+    For each (c1, c2) context: 6 permitted successors with Dirichlet
+    weights, biased so that ' ' terminates words at plausible lengths.
+    """
+    rng = np.random.default_rng(seed)
+    n = len(ALPHABET)
+    space = ALPHABET.index(" ")
+    succ = np.zeros((n, n, n), dtype=np.float64)
+    for a in range(n):
+        for b in range(n):
+            k = 6
+            choices = rng.choice(n, size=k, replace=False)
+            w = rng.dirichlet(np.full(k, 0.4))
+            succ[a, b, choices] = w
+            # word-boundary pressure: after 2 letters, some mass to space
+            if b != space:
+                succ[a, b, space] += 0.12
+            succ[a, b] /= succ[a, b].sum()
+    return succ
+
+
+def generate(seed: int, n_chars: int) -> bytes:
+    """Sample n_chars from the trigram source; returns token bytes 0..31."""
+    rng = np.random.default_rng(seed + 1)
+    table = build_trigram(seed)
+    n = len(ALPHABET)
+    out = np.empty(n_chars, dtype=np.uint8)
+    a, b = 0, 1
+    # vectorised-ish sampling: draw uniforms in bulk, walk the chain
+    us = rng.random(n_chars)
+    for i in range(n_chars):
+        cdf = np.cumsum(table[a, b])
+        c = int(np.searchsorted(cdf, us[i]))
+        c = min(c, n - 1)
+        out[i] = c
+        a, b = b, c
+    return out.tobytes()
+
+
+def to_text(tokens: bytes) -> str:
+    return "".join(ALPHABET[t] for t in tokens)

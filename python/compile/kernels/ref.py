@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the tree-attention kernel.
+
+This is the CORE correctness signal for Layer 1: the Pallas kernel in
+`tree_attention.py` must match `tree_attention_ref` to float tolerance for
+every shape/mask the model can feed it (pytest + hypothesis sweeps in
+python/tests/test_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # additive mask value for "cannot attend"
+
+
+def tree_attention_ref(q, k, v, mask):
+    """Masked attention over a KV cache with an arbitrary (tree) mask.
+
+    Args:
+      q:    [B, H, S, Dh] queries for the S new (tree) tokens.
+      k:    [B, H, M, Dh] full KV cache keys (new tokens already scattered).
+      v:    [B, H, M, Dh] full KV cache values.
+      mask: [B, S, M] additive mask, 0 where token s may attend cache slot m,
+            <= NEG_INF where it may not. Built by the Rust coordinator from
+            the draft-tree topology (paper Alg. 5 BuildAttentionMask).
+
+    Returns:
+      [B, H, S, Dh] attention output.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("bhsd,bhmd->bhsm", q, k) * scale
+    scores = scores + mask[:, None, :, :]
+    # stable softmax; fully-masked rows (padding tokens) become uniform,
+    # which is harmless: their output is never read.
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("bhsm,bhmd->bhsd", w, v)

@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernel: masked tree-attention over the KV cache.
+
+The paper's hot spot is the parallel evaluation of the draft-token tree
+(§3.2.2): one transformer pass where S "tree" tokens attend to the full
+KV cache under an arbitrary topology mask. On GPU the authors express the
+tree with threadblock attention masking; the TPU translation (DESIGN.md
+§5) is a VMEM-tiled, online-softmax (flash-style) attention kernel:
+
+  * grid over (batch, head) — each program owns one [S, Dh] query tile;
+  * keys/values/mask stream in M-blocks of MBLK slots; the running
+    (max, sum, accumulator) online-softmax state means the full [S, M]
+    score matrix never materialises in VMEM;
+  * the {0, -inf} tree mask streams with the K/V tiles, so irregular tree
+    topology costs one extra VMEM stream and zero control-flow divergence
+    — the MXU contraction stays dense.
+
+Must run with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Under jit-tracing,
+interpret mode inlines the kernel into plain HLO, so the *runtime* path
+(Rust + PJRT) never touches Python.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+# M-block width. 64 slots x Dh<=64 keeps each streamed tile
+# (k, v: MBLK x Dh, mask: S x MBLK) around 16-32 KiB — far under VMEM,
+# leaving room for double-buffering on real hardware. See EXPERIMENTS.md
+# §Perf for the footprint table.
+MBLK = 64
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, mblk: int):
+    """One (batch, head) program: online-softmax attention over M blocks."""
+    q = q_ref[0, 0]            # [S, Dh]
+    k = k_ref[0, 0]            # [M, Dh]
+    v = v_ref[0, 0]            # [M, Dh]
+    mask = mask_ref[0]         # [S, M]
+    s, dh = q.shape
+    m = k.shape[0]
+    nblk = m // mblk
+    scale = (1.0 / (dh ** 0.5)).__float__()
+
+    def body(i, carry):
+        m_run, l_run, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * mblk, mblk, axis=0)      # [MBLK, Dh]
+        vb = jax.lax.dynamic_slice_in_dim(v, i * mblk, mblk, axis=0)      # [MBLK, Dh]
+        mb = jax.lax.dynamic_slice_in_dim(mask, i * mblk, mblk, axis=1)   # [S, MBLK]
+        scores = q @ kb.T * scale + mb                                    # [S, MBLK]
+        m_new = jnp.maximum(m_run, jnp.max(scores, axis=-1))              # [S]
+        corr = jnp.exp(m_run - m_new)                                     # [S]
+        p = jnp.exp(scores - m_new[:, None])                              # [S, MBLK]
+        l_new = l_run * corr + jnp.sum(p, axis=-1)                        # [S]
+        acc = acc * corr[:, None] + p @ vb                                # [S, Dh]
+        return m_new, l_new, acc
+
+    m0 = jnp.full((s,), NEG_INF, dtype=q.dtype)
+    l0 = jnp.zeros((s,), dtype=q.dtype)
+    a0 = jnp.zeros((s, dh), dtype=q.dtype)
+    m_fin, l_fin, acc = jax.lax.fori_loop(0, nblk, body, (m0, l0, a0))
+    # fully-masked (padding) rows have l == 0; guard the division — their
+    # output is never read by the coordinator.
+    l_safe = jnp.where(l_fin == 0.0, 1.0, l_fin)
+    o_ref[0, 0] = acc / l_safe[:, None]
+
+
+def tree_attention(q, k, v, mask, *, mblk: int = MBLK, interpret: bool = True):
+    """Pallas tree-attention. Shapes as in ref.tree_attention_ref.
+
+    q: [B, H, S, Dh]; k, v: [B, H, M, Dh]; mask: [B, S, M] additive.
+    Returns [B, H, S, Dh].
+    """
+    b, h, s, dh = q.shape
+    m = k.shape[2]
+    if m % mblk != 0:
+        raise ValueError(f"cache_len {m} must be a multiple of mblk {mblk}")
+    kernel = functools.partial(_attention_kernel, mblk=mblk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, m, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, m, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, s, m), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, mask)

@@ -1,0 +1,180 @@
+"""Layer-2 JAX model: Llama-style transformer with tree attention.
+
+One `step` function serves every phase of speculative decoding (DESIGN.md
+§1): prefill chunks, single-token decode, per-level draft-tree expansion
+and the target pass over the whole flattened tree. The Rust coordinator
+owns the semantics — it supplies position ids, KV scatter destinations and
+the {0,-inf} topology mask; the model is a pure tensor program.
+
+Contract (static shapes; B=batch, S=s_tile, M=cache_len):
+
+  step(params,
+       tokens    i32[B, S],
+       positions i32[B, S],
+       dest      i32[B, S],        # KV-cache scatter slots; pad -> M-1
+       attn_mask f32[B, S, M],
+       kcache    f32[L, B, H, M, Dh],
+       vcache    f32[L, B, H, M, Dh])
+    -> (logits f32[B, S, V], kcache', vcache')
+
+Weights travel as runtime inputs (stacked per kind across layers) so the
+HLO text stays small and one executable serves any checkpoint of the same
+shape — Rust loads them from artifacts/*.tensors.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.ref import tree_attention_ref
+from .kernels.tree_attention import tree_attention
+
+
+# KV-cache storage dtype. bf16 would halve HBM traffic on a real TPU, but
+# this testbed's CPU PJRT *emulates* bf16 in software: measured step
+# latency got worse (7.3ms vs 6.1ms), so f32 is kept here and the bf16
+# switch stays one line away (EXPERIMENTS.md §Perf iteration 3).
+CACHE_DTYPE = jnp.float32
+
+
+class Params(NamedTuple):
+    """Flattened weights; every field is one runtime input of the HLO."""
+
+    tok_emb: jax.Array   # [V, D]
+    w_q: jax.Array       # [L, D, D]
+    w_k: jax.Array       # [L, D, D]
+    w_v: jax.Array       # [L, D, D]
+    w_o: jax.Array       # [L, D, D]
+    w_gate: jax.Array    # [L, D, F]
+    w_up: jax.Array      # [L, D, F]
+    w_down: jax.Array    # [L, F, D]
+    rms_attn: jax.Array  # [L, D]
+    rms_ffn: jax.Array   # [L, D]
+    rms_out: jax.Array   # [D]
+    unemb: jax.Array     # [D, V]
+
+
+PARAM_FIELDS = list(Params._fields)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Scaled-normal init (1/sqrt(fan_in); residual projections down-scaled)."""
+    L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    ks = jax.random.split(key, 9)
+    resid_scale = 1.0 / (2.0 * L) ** 0.5
+
+    def nrm(k, shape, fan_in, scale=1.0):
+        return (jax.random.normal(k, shape, dtype=jnp.float32)
+                * (scale / fan_in ** 0.5))
+
+    return Params(
+        tok_emb=nrm(ks[0], (V, D), 1.0, 0.02 * D ** 0.5),
+        w_q=nrm(ks[1], (L, D, D), D),
+        w_k=nrm(ks[2], (L, D, D), D),
+        w_v=nrm(ks[3], (L, D, D), D),
+        w_o=nrm(ks[4], (L, D, D), D, resid_scale),
+        w_gate=nrm(ks[5], (L, D, F), D),
+        w_up=nrm(ks[6], (L, D, F), D),
+        w_down=nrm(ks[7], (L, F, D), F, resid_scale),
+        rms_attn=jnp.ones((L, D)),
+        rms_ffn=jnp.ones((L, D)),
+        rms_out=jnp.ones((D,)),
+        unemb=nrm(ks[8], (D, V), D),
+    )
+
+
+def _rmsnorm(x, g):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _rope(x, positions, theta: float):
+    """Rotary embedding from explicit position ids. x: [B, H, S, Dh]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,S,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _scatter_kv(cache, dest, new):
+    """cache: [B,H,M,Dh] (cache dtype); dest: [B,S]; new: [B,H,S,Dh].
+
+    Padding tokens carry dest == M-1 (the reserved scratch slot, never
+    attended), so their writes are harmless. The cache is stored in
+    CACHE_DTYPE (bf16): halves the per-call cache traffic that dominates
+    small-tile step latency (EXPERIMENTS.md §Perf iteration 3).
+    """
+    b = cache.shape[0]
+    bidx = jnp.arange(b)[:, None]                       # [B,1] -> bcast [B,S]
+    return cache.at[bidx, :, dest].set(
+        new.transpose(0, 2, 1, 3).astype(cache.dtype))
+
+
+def step(cfg: ModelConfig, params: Params, tokens, positions, dest,
+         attn_mask, kcache, vcache, *, use_pallas: bool = True):
+    """One forward pass over S tree tokens. See module docstring."""
+    B, S = tokens.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+    x = params.tok_emb[tokens]  # [B, S, D]
+    attend = tree_attention if use_pallas else tree_attention_ref
+
+    def layer(x, xs):
+        (wq, wk, wv, wo, wg, wu, wd, g1, g2, kc, vc) = xs
+        h = _rmsnorm(x, g1)
+        q = (h @ wq).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        k = (h @ wk).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        v = (h @ wv).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        kc = _scatter_kv(kc, dest, k)
+        vc = _scatter_kv(vc, dest, v)
+        att = attend(q, kc.astype(jnp.float32), vc.astype(jnp.float32),
+                     attn_mask)                         # [B, H, S, Dh]
+        att = att.transpose(0, 2, 1, 3).reshape(B, S, -1)
+        x = x + att @ wo
+        h2 = _rmsnorm(x, g2)
+        x = x + (jax.nn.silu(h2 @ wg) * (h2 @ wu)) @ wd
+        return x, (kc, vc)
+
+    xs = (params.w_q, params.w_k, params.w_v, params.w_o,
+          params.w_gate, params.w_up, params.w_down,
+          params.rms_attn, params.rms_ffn, kcache, vcache)
+    x, (kc, vc) = jax.lax.scan(layer, x, xs)
+    logits = _rmsnorm(x, params.rms_out) @ params.unemb
+    return logits, kc, vc
+
+
+def empty_cache(cfg: ModelConfig):
+    shape = (cfg.n_layers, cfg.batch, cfg.n_heads, cfg.cache_len, cfg.d_head)
+    return jnp.zeros(shape, CACHE_DTYPE), jnp.zeros(shape, CACHE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Training-time forward: full causal sequence, no external cache.
+# Reuses `step` with M == seq_len so train and serve share one code path.
+# ---------------------------------------------------------------------------
+
+def causal_logits(cfg: ModelConfig, params: Params, tokens,
+                  *, use_pallas: bool = False):
+    """tokens: i32[B, T] -> logits f32[B, T, V] under plain causal masking."""
+    from .kernels.ref import NEG_INF
+
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    dest = positions
+    col = jnp.arange(T)[None, :]
+    row = jnp.arange(T)[:, None]
+    mask = jnp.where(col <= row, 0.0, NEG_INF)[None]
+    mask = jnp.broadcast_to(mask, (B, T, T)).astype(jnp.float32)
+    shape = (cfg.n_layers, B, cfg.n_heads, T, cfg.d_head)
+    kc = jnp.zeros(shape, CACHE_DTYPE)
+    vc = jnp.zeros(shape, CACHE_DTYPE)
+    train_cfg = cfg
+    logits, _, _ = step(train_cfg, params, tokens, positions, dest, mask,
+                        kc, vc, use_pallas=use_pallas)
+    return logits

@@ -1,0 +1,132 @@
+"""L1/L2 performance analysis (EXPERIMENTS.md §Perf).
+
+interpret=True gives CPU-numpy semantics, so L1 performance on real TPU is
+*estimated from structure*: VMEM footprint of the BlockSpec tiling, MXU
+shape utilization of the contractions, and HBM<->VMEM traffic per step.
+L2 is profiled via the lowered HLO text: op census, fusion check, and an
+analytic FLOP/byte roofline for the step executable.
+
+    python -m compile.perf_analysis [--artifacts ../artifacts]
+"""
+
+import argparse
+import os
+import re
+from collections import Counter
+
+from .configs import DRAFT, TARGET, ModelConfig
+from .kernels.tree_attention import MBLK
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on contemporary TPUs
+MXU = 128                      # systolic array dimension
+
+
+def kernel_analysis(cfg: ModelConfig):
+    """VMEM footprint + MXU utilization of the tree-attention kernel."""
+    S, Dh, M = cfg.s_tile, cfg.d_head, cfg.cache_len
+    f = 4  # f32 bytes (bf16 on real TPU would halve this)
+    q_tile = S * Dh * f
+    k_blk = MBLK * Dh * f
+    v_blk = MBLK * Dh * f
+    mask_blk = S * MBLK * f
+    score = S * MBLK * f
+    acc = S * Dh * f + 2 * S * f
+    # double-buffered streams: k, v, mask
+    total = q_tile + 2 * (k_blk + v_blk + mask_blk) + score + acc
+    # MXU utilization: contraction shapes vs the 128x128 array
+    #   scores: [S, Dh] @ [Dh, MBLK]  -> S x Dh x MBLK
+    #   out:    [S, MBLK] @ [MBLK, Dh]
+    def mxu_util(m, k, n):
+        return (min(m, MXU) / MXU) * (min(k, MXU) / MXU) * (min(n, MXU) / MXU) ** 0
+
+    util_scores = (min(S, MXU) / MXU) * (min(Dh, MXU) / MXU)
+    util_out = (min(S, MXU) / MXU) * (min(MBLK, MXU) / MXU)
+    hbm_per_step = (S * Dh + 2 * M * Dh + S * M) * f  # q + k/v cache + mask
+    flops = 2 * S * M * Dh * 2  # qk^T and attn@v
+    return {
+        "S": S, "Dh": Dh, "M": M, "MBLK": MBLK,
+        "vmem_bytes": total,
+        "vmem_frac": total / VMEM_BYTES,
+        "mxu_util_scores": util_scores,
+        "mxu_util_out": util_out,
+        "hbm_bytes_per_head": hbm_per_step,
+        "flops_per_head": flops,
+        "arithmetic_intensity": flops / hbm_per_step,
+    }
+
+
+def hlo_census(path: str):
+    """Op census of the lowered step HLO: fusion coverage, convolution/dot
+    count, while-loop (layer scan) presence, any stray custom-calls."""
+    with open(path) as f:
+        text = f.read()
+    ops = Counter()
+    for m in re.finditer(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]<>{},\s]*?\s([a-z][a-z0-9\-]*)\(",
+                         text, re.M):
+        ops[m.group(1)] += 1
+    n_while = text.count("while(")
+    return ops, len(text.splitlines()), n_while
+
+
+def model_flops(cfg: ModelConfig):
+    """Analytic FLOPs of one step call (S tokens through the stack)."""
+    S, D, F, L, V, M, H, Dh = (cfg.s_tile, cfg.d_model, cfg.d_ff, cfg.n_layers,
+                               cfg.vocab, cfg.cache_len, cfg.n_heads, cfg.d_head)
+    attn_proj = 4 * 2 * S * D * D
+    attn_core = H * (2 * 2 * S * M * Dh)
+    ffn = 2 * S * (2 * D * F + F * D)
+    per_layer = attn_proj + attn_core + ffn
+    unemb = 2 * S * D * V
+    return L * per_layer + unemb
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    print("=" * 70)
+    print("L1 — Pallas tree-attention kernel: VMEM / MXU structure")
+    print("=" * 70)
+    for cfg in (TARGET, DRAFT):
+        a = kernel_analysis(cfg)
+        print(f"\n[{cfg.name}] S={a['S']} Dh={a['Dh']} M={a['M']} MBLK={a['MBLK']}")
+        print(f"  VMEM footprint (double-buffered streams): "
+              f"{a['vmem_bytes']/1024:.1f} KiB = {a['vmem_frac']*100:.2f}% of 16 MiB")
+        print(f"  MXU utilization: scores {a['mxu_util_scores']*100:.0f}% "
+              f"(S x Dh = {a['S']}x{a['Dh']} vs 128x128), "
+              f"out {a['mxu_util_out']*100:.0f}%")
+        print(f"  HBM traffic/head/step: {a['hbm_bytes_per_head']/1024:.1f} KiB, "
+              f"arithmetic intensity {a['arithmetic_intensity']:.2f} flop/byte "
+              f"(memory-bound, as the paper assumes)")
+
+    print()
+    print("=" * 70)
+    print("L2 — lowered step HLO census")
+    print("=" * 70)
+    for cfg in (TARGET, DRAFT):
+        path = os.path.join(args.artifacts, f"{cfg.name}_step.hlo.txt")
+        if not os.path.exists(path):
+            print(f"[{cfg.name}] artifact missing; run `make artifacts`")
+            continue
+        ops, lines, n_while = hlo_census(path)
+        total = sum(ops.values())
+        print(f"\n[{cfg.name}] {lines} HLO lines, {total} instructions")
+        top = ", ".join(f"{k}:{v}" for k, v in ops.most_common(10))
+        print(f"  top ops: {top}")
+        print(f"  dot/convolution ops: {ops.get('dot', 0) + ops.get('convolution', 0)}")
+        print(f"  while (layer scan): {n_while}; "
+              f"custom-call: {ops.get('custom-call', 0)} (MUST be 0 for CPU PJRT)")
+        fl = model_flops(cfg)
+        print(f"  analytic step cost: {fl/1e6:.1f} MFLOPs for S={cfg.s_tile} tokens")
+
+    print()
+    print("interpretation notes:")
+    print(" * interpret=True wallclock is NOT a TPU proxy; the structural")
+    print("   numbers above are the optimization target for L1.")
+    print(" * arithmetic intensity << MXU ridge point confirms decode is")
+    print("   memory-bandwidth-bound -> MBSU is the right speedup model.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""safetensors-lite: the weights interchange format between python and rust.
+
+Layout:  [8-byte LE u64 header_len][header JSON utf-8][raw tensor data]
+Header:  {"name": {"dtype": "f32", "shape": [..], "offset": N, "nbytes": M}, ...}
+Offsets are relative to the start of the data section; tensors are raw
+little-endian, C-contiguous. Reader lives in rust/src/tensorfile.rs.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+_DTYPES = {"f32": np.float32, "i32": np.int32}
+
+
+def save(path: str, tensors: dict):
+    header = {}
+    blobs = []
+    offset = 0
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.float32:
+            dt = "f32"
+        elif arr.dtype == np.int32:
+            dt = "i32"
+        else:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        raw = arr.tobytes()
+        header[name] = {
+            "dtype": dt,
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": len(raw),
+        }
+        blobs.append(raw)
+        offset += len(raw)
+    hjson = json.dumps(header, sort_keys=True).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(hjson)))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+
+
+def load(path: str) -> dict:
+    with open(path, "rb") as f:
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen).decode("utf-8"))
+        data = f.read()
+    out = {}
+    for name, meta in header.items():
+        dt = _DTYPES[meta["dtype"]]
+        raw = data[meta["offset"]:meta["offset"] + meta["nbytes"]]
+        out[name] = np.frombuffer(raw, dtype=dt).reshape(meta["shape"]).copy()
+    return out

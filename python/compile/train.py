@@ -1,0 +1,116 @@
+"""Build-time training: target LM on the synthetic corpus, draft by
+distillation from the target (paper App. C.1's recipe, scaled down).
+
+Runs once under `make artifacts`; never on the request path. Loss curves
+are logged to artifacts/train_log.json for EXPERIMENTS.md.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+from . import model as M
+from .configs import DRAFT, TARGET, TRAIN, ModelConfig, TrainConfig
+
+
+def batches(tokens: np.ndarray, tc: TrainConfig, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - tc.seq_len - 1
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=tc.batch)
+        x = np.stack([tokens[i:i + tc.seq_len] for i in idx])
+        y = np.stack([tokens[i + 1:i + tc.seq_len + 1] for i in idx])
+        yield jnp.asarray(x, jnp.int32), jnp.asarray(y, jnp.int32)
+
+
+def _adamw_update(p, g, m, v, step, lr, wd=0.01, b1=0.9, b2=0.99, eps=1e-8):
+    m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+    v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, v, g)
+    t = step + 1
+    def upd(p_, m_, v_):
+        mh = m_ / (1 - b1 ** t)
+        vh = v_ / (1 - b2 ** t)
+        return p_ - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p_)
+    return jax.tree.map(upd, p, m, v), m, v
+
+
+def _lr(step, tc: TrainConfig, total: int):
+    warm = jnp.minimum(1.0, (step + 1) / tc.warmup)
+    prog = jnp.clip((step - tc.warmup) / max(1, total - tc.warmup), 0.0, 1.0)
+    return tc.lr * warm * (0.5 * (1 + jnp.cos(jnp.pi * prog)))
+
+
+def train_target(cfg: ModelConfig, tc: TrainConfig, tokens: np.ndarray):
+    params = M.init_params(cfg, jax.random.PRNGKey(tc.seed))
+
+    def loss_fn(p, x, y):
+        logits = M.causal_logits(cfg, p, x, use_pallas=False)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    @jax.jit
+    def train_step(p, m, v, step, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        lr = _lr(step, tc, tc.target_steps)
+        p, m, v = _adamw_update(p, g, m, v, step, lr)
+        return p, m, v, loss
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    log = []
+    t0 = time.time()
+    for i, (x, y) in enumerate(batches(tokens, tc, tc.target_steps, tc.seed)):
+        params, m, v, loss = train_step(params, m, v, i, x, y)
+        if i % 20 == 0 or i == tc.target_steps - 1:
+            log.append({"step": i, "loss": float(loss)})
+            print(f"[target] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    return params, log
+
+
+def distill_draft(draft_cfg: ModelConfig, target_cfg: ModelConfig,
+                  target_params, tc: TrainConfig, tokens: np.ndarray):
+    """Draft trains to match the target's next-token distribution (KL)."""
+    params = M.init_params(draft_cfg, jax.random.PRNGKey(tc.seed + 7))
+
+    @jax.jit
+    def teacher_logp(x):
+        lg = M.causal_logits(target_cfg, target_params, x, use_pallas=False)
+        return jax.nn.log_softmax(lg, axis=-1)
+
+    def loss_fn(p, x, tlogp):
+        logits = M.causal_logits(draft_cfg, p, x, use_pallas=False)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return jnp.mean(jnp.sum(jnp.exp(tlogp) * (tlogp - logp), axis=-1))
+
+    @jax.jit
+    def train_step(p, m, v, step, x, tlogp):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, tlogp)
+        lr = _lr(step, tc, tc.draft_steps)
+        p, m, v = _adamw_update(p, g, m, v, step, lr)
+        return p, m, v, loss
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    log = []
+    t0 = time.time()
+    for i, (x, _) in enumerate(batches(tokens, tc, tc.draft_steps, tc.seed + 7)):
+        tlogp = teacher_logp(x)
+        params, m, v, loss = train_step(params, m, v, i, x, tlogp)
+        if i % 20 == 0 or i == tc.draft_steps - 1:
+            log.append({"step": i, "kl": float(loss)})
+            print(f"[draft ] step {i:4d} KL {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    return params, log
+
+
+def run(tc: TrainConfig = TRAIN):
+    raw = corpus_mod.generate(tc.seed, tc.corpus_chars)
+    tokens = np.frombuffer(raw, dtype=np.uint8).astype(np.int32)
+    target_params, tlog = train_target(TARGET, tc, tokens)
+    draft_params, dlog = distill_draft(DRAFT, TARGET, target_params, tc, tokens)
+    return raw, target_params, draft_params, {"target": tlog, "draft": dlog}

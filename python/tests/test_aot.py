@@ -1,0 +1,68 @@
+"""AOT export checks: HLO text structure + manifest consistency.
+
+Uses skip-train mode (random weights) — the export path itself is what is
+under test; the trained artifacts are built by `make artifacts`.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def smoke_artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("aot"))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", out, "--skip-train"],
+        check=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    return out
+
+
+def test_manifest_shape(smoke_artifacts):
+    with open(os.path.join(smoke_artifacts, "manifest.json")) as f:
+        man = json.load(f)
+    assert set(man["models"]) == {"target", "draft"}
+    for name, m in man["models"].items():
+        assert os.path.exists(os.path.join(smoke_artifacts, m["hlo"]))
+        assert os.path.exists(os.path.join(smoke_artifacts, m["tensors"]))
+        assert m["input_order"][-6:] == [
+            "tokens", "positions", "dest", "attn_mask", "kcache", "vcache"]
+        assert set(m["tiles"]) == {"1", "4", "8", "16", "32"}
+        assert m["cache_len"] % 64 == 0  # MBLK alignment
+        assert m["s_tile"] >= 30         # max paper budget fits one tile
+
+
+def test_hlo_text_is_parseable_shape(smoke_artifacts):
+    """HLO text sanity for every tile variant: ENTRY present, no
+    custom-calls (Mosaic would break the CPU PJRT client)."""
+    import glob
+
+    for name in ("target", "draft"):
+        paths = glob.glob(os.path.join(smoke_artifacts, f"{name}_step_s*.hlo.txt"))
+        assert len(paths) >= 3, "expected multiple tile variants"
+        for path in paths:
+            with open(path) as f:
+                hlo = f.read()
+            assert "ENTRY" in hlo
+            assert "custom-call" not in hlo.lower()
+            assert "f32[" in hlo
+
+
+def test_weights_match_model_shapes(smoke_artifacts):
+    from compile import tensorfile
+    from compile.configs import DRAFT, TARGET
+
+    for cfg in (TARGET, DRAFT):
+        t = tensorfile.load(os.path.join(smoke_artifacts, f"{cfg.name}.tensors"))
+        L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+        assert t["tok_emb"].shape == (V, D)
+        assert t["w_q"].shape == (L, D, D)
+        assert t["w_gate"].shape == (L, D, F)
+        assert t["unemb"].shape == (D, V)

@@ -1,0 +1,62 @@
+"""Substrate tests: corpus generator determinism + tensorfile round-trip."""
+
+import numpy as np
+import pytest
+
+from compile import corpus, tensorfile
+
+
+def test_corpus_deterministic():
+    a = corpus.generate(0, 2000)
+    b = corpus.generate(0, 2000)
+    assert a == b
+    c = corpus.generate(1, 2000)
+    assert a != c
+
+
+def test_corpus_tokens_in_alphabet():
+    toks = np.frombuffer(corpus.generate(0, 5000), dtype=np.uint8)
+    assert toks.max() < len(corpus.ALPHABET)
+    # word-like structure: spaces occur with plausible frequency
+    space = corpus.ALPHABET.index(" ")
+    frac = (toks == space).mean()
+    assert 0.05 < frac < 0.5
+
+
+def test_corpus_has_learnable_structure():
+    """A trigram source must beat the unigram entropy by a wide margin."""
+    toks = np.frombuffer(corpus.generate(0, 60_000), dtype=np.uint8)
+    # unigram entropy
+    p = np.bincount(toks, minlength=32) / len(toks)
+    h_uni = -(p[p > 0] * np.log2(p[p > 0])).sum()
+    # conditional entropy given previous 2 chars
+    ctx = toks[:-2] * 32 + toks[1:-1]
+    nxt = toks[2:]
+    h_cond = 0.0
+    for c in np.unique(ctx):
+        sel = nxt[ctx == c]
+        q = np.bincount(sel, minlength=32) / len(sel)
+        h = -(q[q > 0] * np.log2(q[q > 0])).sum()
+        h_cond += h * len(sel) / len(nxt)
+    assert h_cond < h_uni - 1.0, (h_cond, h_uni)
+
+
+def test_tensorfile_roundtrip(tmp_path):
+    path = str(tmp_path / "t.tensors")
+    tensors = {
+        "a": np.arange(24, dtype=np.float32).reshape(2, 3, 4),
+        "b": np.array([[1, -2], [3, 4]], dtype=np.int32),
+        "scalarish": np.zeros((1,), dtype=np.float32),
+    }
+    tensorfile.save(path, tensors)
+    out = tensorfile.load(path)
+    assert set(out) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_tensorfile_rejects_bad_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        tensorfile.save(str(tmp_path / "x.tensors"),
+                        {"a": np.zeros(3, dtype=np.float64)})

@@ -1,0 +1,182 @@
+"""L2 correctness: step-executable semantics.
+
+The critical invariant: incremental decoding through the KV cache (the
+serving path) must reproduce the full causal forward (the training path),
+and evaluating a draft *tree* in one call must equal evaluating each
+branch as a separate sequence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import DRAFT, ModelConfig
+from compile.kernels.ref import NEG_INF
+
+CFG = ModelConfig(name="test", vocab=64, n_layers=2, d_model=32, n_heads=2,
+                  d_ff=64, s_tile=8, cache_len=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(3))
+
+
+def pad_to(x, n, fill):
+    return np.concatenate([x, np.full(n - len(x), fill, dtype=x.dtype)])
+
+
+def run_step(params, tokens, positions, dest, mask_rows, kc, vc,
+             use_pallas=False):
+    """mask_rows: [len(tokens), M] boolean visibility."""
+    S, Mlen = CFG.s_tile, CFG.cache_len
+    n = len(tokens)
+    t = jnp.asarray(pad_to(np.asarray(tokens, np.int32), S, 0))[None]
+    p = jnp.asarray(pad_to(np.asarray(positions, np.int32), S, 0))[None]
+    d = jnp.asarray(pad_to(np.asarray(dest, np.int32), S, Mlen - 1))[None]
+    m = np.full((S, Mlen), NEG_INF, np.float32)
+    m[:n] = np.where(mask_rows, 0.0, NEG_INF)
+    logits, kc, vc = M.step(CFG, params, t, p, d, jnp.asarray(m)[None],
+                            kc, vc, use_pallas=use_pallas)
+    return np.asarray(logits)[0, :n], kc, vc
+
+
+def test_incremental_decode_matches_causal(params):
+    """Prefill+decode through the cache == full causal forward."""
+    T = 20
+    toks = np.arange(T) % CFG.vocab
+    full = np.asarray(M.causal_logits(CFG, params, jnp.asarray(toks[None], jnp.int32)))[0]
+
+    kc, vc = M.empty_cache(CFG)
+    Mlen = CFG.cache_len
+    # prefill first 12 tokens in chunks of s_tile=8, then decode one by one
+    got = []
+    pos = 0
+    for chunk in (toks[:8], toks[8:12]):
+        n = len(chunk)
+        positions = np.arange(pos, pos + n)
+        dest = positions
+        rows = np.zeros((n, Mlen), bool)
+        for i in range(n):
+            rows[i, :pos + i + 1] = True
+        lg, kc, vc = run_step(params, chunk, positions, dest, rows, kc, vc)
+        got.append(lg)
+        pos += n
+    for t in range(12, T):
+        rows = np.zeros((1, Mlen), bool)
+        rows[0, :t + 1] = True
+        lg, kc, vc = run_step(params, toks[t:t + 1], [t], [t], rows, kc, vc)
+        got.append(lg)
+    got = np.concatenate(got, axis=0)
+    np.testing.assert_allclose(got, full, rtol=2e-4, atol=2e-4)
+
+
+def test_tree_eval_matches_per_branch(params):
+    """One tree call == per-branch sequential eval.
+
+    Tree over prefix [5, 9]:        level 1: a=3, b=7 (siblings)
+                                    level 2: a->c=1, b->d=2
+    Flattened tree tokens [3, 7, 1, 2] evaluated in ONE call with the
+    topology mask must match evaluating sequences [5,9,3,1] and [5,9,7,2]
+    token-by-token.
+    """
+    Mlen = CFG.cache_len
+    prefix = np.array([5, 9])
+
+    # ---- reference: two independent sequential decodes
+    def decode_seq(seq):
+        kc, vc = M.empty_cache(CFG)
+        outs = []
+        for t, tok in enumerate(seq):
+            rows = np.zeros((1, Mlen), bool)
+            rows[0, :t + 1] = True
+            lg, kc, vc = run_step(params, [tok], [t], [t], rows, kc, vc)
+            outs.append(lg[0])
+        return np.stack(outs)
+
+    seq_a = decode_seq([5, 9, 3, 1])
+    seq_b = decode_seq([5, 9, 7, 2])
+
+    # ---- tree path: prefill prefix, then one call with 4 tree tokens
+    kc, vc = M.empty_cache(CFG)
+    rows = np.zeros((2, Mlen), bool)
+    rows[0, :1] = True
+    rows[1, :2] = True
+    lg_prefix, kc, vc = run_step(params, prefix, [0, 1], [0, 1], rows, kc, vc)
+
+    # flat tree: slots 2..5 hold tokens [3, 7, 1, 2]
+    toks = [3, 7, 1, 2]
+    positions = [2, 2, 3, 3]
+    dest = [2, 3, 4, 5]
+    vis = np.zeros((4, Mlen), bool)
+    vis[0, [0, 1, 2]] = True          # a sees prefix + self
+    vis[1, [0, 1, 3]] = True          # b sees prefix + self
+    vis[2, [0, 1, 2, 4]] = True       # c sees prefix + a + self
+    vis[3, [0, 1, 3, 5]] = True       # d sees prefix + b + self
+    lg_tree, _, _ = run_step(params, toks, positions, dest, vis, kc, vc)
+
+    np.testing.assert_allclose(lg_prefix[1], seq_a[1], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(lg_tree[0], seq_a[2], rtol=2e-4, atol=2e-4)  # after a
+    np.testing.assert_allclose(lg_tree[1], seq_b[2], rtol=2e-4, atol=2e-4)  # after b
+    np.testing.assert_allclose(lg_tree[2], seq_a[3], rtol=2e-4, atol=2e-4)  # after c
+    np.testing.assert_allclose(lg_tree[3], seq_b[3], rtol=2e-4, atol=2e-4)  # after d
+
+
+def test_pallas_and_ref_step_agree(params):
+    """The AOT artifact uses the Pallas kernel; training used ref. Equal."""
+    cfg = ModelConfig(name="t2", vocab=64, n_layers=2, d_model=32, n_heads=2,
+                      d_ff=64, s_tile=8, cache_len=64)
+    kc, vc = M.empty_cache(cfg)
+    toks = jnp.asarray(np.arange(8, dtype=np.int32))[None]
+    pos = toks
+    dest = toks
+    rows = np.tril(np.ones((8, 64), np.float32), 0)
+    mask = jnp.asarray(np.where(rows[:, :64] > 0, 0.0, NEG_INF))[None]
+    lg_ref, _, _ = M.step(cfg, params, toks, pos, dest, mask, kc, vc,
+                          use_pallas=False)
+    lg_pal, _, _ = M.step(cfg, params, toks, pos, dest, mask, kc, vc,
+                          use_pallas=True)
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_pal),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_padding_tokens_do_not_corrupt_cache(params):
+    """Padding rows write KV to the scratch slot M-1 and change nothing
+    observable: logits for real tokens are identical with or without
+    trailing padding junk."""
+    Mlen = CFG.cache_len
+    kc, vc = M.empty_cache(CFG)
+    rows = np.zeros((3, Mlen), bool)
+    for i in range(3):
+        rows[i, :i + 1] = True
+    lg_a, kca, vca = run_step(params, [1, 2, 3], [0, 1, 2], [0, 1, 2], rows, kc, vc)
+
+    # same call but padded tile carries junk tokens pointing at slot M-1
+    S = CFG.s_tile
+    t = np.array([1, 2, 3] + [42] * (S - 3), np.int32)[None]
+    p = np.array([0, 1, 2] + [7] * (S - 3), np.int32)[None]
+    d = np.array([0, 1, 2] + [Mlen - 1] * (S - 3), np.int32)[None]
+    m = np.full((S, Mlen), NEG_INF, np.float32)
+    m[:3] = np.where(rows, 0.0, NEG_INF)
+    kc, vc = M.empty_cache(CFG)
+    lg_b, kcb, vcb = M.step(CFG, params, jnp.asarray(t), jnp.asarray(p),
+                            jnp.asarray(d), jnp.asarray(m)[None], kc, vc,
+                            use_pallas=False)
+    np.testing.assert_allclose(lg_a, np.asarray(lg_b)[0, :3], rtol=1e-5, atol=1e-5)
+    # real cache slots identical
+    np.testing.assert_allclose(np.asarray(kca)[:, :, :, :3],
+                               np.asarray(kcb)[:, :, :, :3], rtol=1e-6, atol=1e-6)
+
+
+def test_cache_scatter_writes_expected_slots(params):
+    kc, vc = M.empty_cache(CFG)
+    rows = np.zeros((2, CFG.cache_len), bool)
+    rows[0, 10] = True
+    rows[1, 20] = True
+    _, kc, vc = run_step(params, [1, 2], [0, 0], [10, 20], rows, kc, vc)
+    kc = np.asarray(kc)
+    assert np.abs(kc[:, :, :, 10]).sum() > 0
+    assert np.abs(kc[:, :, :, 20]).sum() > 0
+    assert np.abs(kc[:, :, :, 11:20]).sum() == 0

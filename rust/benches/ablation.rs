@@ -1,0 +1,94 @@
+//! Ablations for the design choices DESIGN.md §6 calls out:
+//!
+//! 1. **Verification rule on the same without-replacement tree** —
+//!    RRS vs the SpecInfer multi-round rule (`rsd-c-mr`). Multi-round
+//!    assumes i.i.d. siblings, so on RSD's without-replacement trees it
+//!    is *inexact*: the TV column exposes the distortion while RRS stays
+//!    at ~0. This is the system-level version of the paper's Fig. 1
+//!    argument.
+//! 2. **Deep vs wide at a fixed budget** — RSD-C [2,2,2] vs [7,1] vs
+//!    chain at budget 14 across alignment levels (the Exp2 crossover).
+//! 3. **Drafting overhead** — tree construction cost per round vs one
+//!    draft model call (sim-free measurement of the L3 share).
+//!
+//!     cargo bench --bench ablation
+
+use rsd::bench::harness::{bench, section};
+use rsd::bench::{bench_decoder, first_token_tv, BenchOpts};
+use rsd::config::{DecoderConfig, SamplingConfig};
+use rsd::decode::spec::{DraftTree, TreeStrategy};
+use rsd::decode::strategies::{GumbelTopK, StochasticBeam};
+use rsd::sampling::process_logits;
+use rsd::sim::SimLm;
+use rsd::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let sampling = SamplingConfig { temperature: 0.7, top_p: 1.0 };
+
+    section("ablation 1: RRS vs multi-round on the SAME w/o-replacement tree");
+    let (target, draft) = SimLm::pair(3, 0.55, 48);
+    let opts = BenchOpts { max_new: 64, reps: 12, tv_trials: 0, seed: 0 };
+    let prompts: Vec<Vec<u32>> = (0..6).map(|i| vec![i as u32 + 1, 2, 3]).collect();
+    println!("{:<22} {:>7} {:>9}", "decoder", "eff", "TV(30k)");
+    for cfg in [
+        DecoderConfig::RsdC { branches: vec![2, 2, 2] },
+        DecoderConfig::RsdCMultiRound { branches: vec![2, 2, 2] },
+    ] {
+        let row = bench_decoder(&cfg, &sampling, &target, &draft, &prompts, &opts)?;
+        let tv = first_token_tv(&cfg, &sampling, &target, &draft, &[5, 1, 9], 30_000, 7)?;
+        println!("{:<22} {:>7.3} {:>9.4}", cfg.label(), row.eff, tv);
+    }
+    println!("=> RRS must match or beat eff AND keep TV ~ 0; multi-round on");
+    println!("   without-replacement siblings is inexact (elevated TV).");
+
+    section("ablation 2: deep vs wide at fixed budget 14");
+    for alpha in [0.9, 0.5] {
+        let (target, draft) = SimLm::pair(8, alpha, 48);
+        println!("alpha = {alpha}:");
+        for cfg in [
+            DecoderConfig::Sd { l: 14 },
+            DecoderConfig::RsdC { branches: vec![2, 1, 1, 1, 1, 1, 1] },
+            DecoderConfig::RsdC { branches: vec![2, 2, 2] },
+            DecoderConfig::RsdC { branches: vec![7, 1] },
+            DecoderConfig::RsdS { w: 2, l: 7 },
+            DecoderConfig::RsdS { w: 7, l: 2 },
+        ] {
+            let row = bench_decoder(&cfg, &sampling, &target, &draft, &prompts, &opts)?;
+            println!("  {:<22} eff {:>6.3}  mbsu {:>6.3}", cfg.label(), row.eff, row.mbsu);
+        }
+    }
+    println!("=> aligned drafts favour depth; misaligned favour width (paper §5.2)");
+
+    section("ablation 3: drafting overhead per level (strategy only, no model)");
+    let (_, draft) = SimLm::pair(0, 0.8, 256);
+    let logits = draft.logits(&[1, 2, 3]);
+    let root = process_logits(&logits, 0.7, 1.0);
+    let mut rng = Rng::seed_from_u64(0);
+    {
+        let mut strat = GumbelTopK { branches: vec![4, 2, 1] };
+        bench("expand/gumbel-top-k b=4 (vocab 256)", || {
+            let tree = DraftTree {
+                nodes: Vec::new(),
+                levels: Vec::new(),
+                root_draft_lp: root.clone(),
+            };
+            strat.begin_round();
+            let _ = strat.expand(&tree, 0, &mut rng);
+        });
+    }
+    {
+        let mut strat = StochasticBeam::new(6, 5);
+        bench("expand/stochastic-beam W=6 (vocab 256)", || {
+            let tree = DraftTree {
+                nodes: Vec::new(),
+                levels: Vec::new(),
+                root_draft_lp: root.clone(),
+            };
+            strat.begin_round();
+            let _ = strat.expand(&tree, 0, &mut rng);
+        });
+    }
+    println!("=> compare against one draft step call (~ms on the real model,");
+    println!("   see hotpath bench): drafting logic is noise.");
+    Ok(())
+}

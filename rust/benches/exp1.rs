@@ -1,0 +1,51 @@
+//! Exp1 (paper §5.1, Figure 4, Tables 1-27): block efficiency, MBSU and
+//! token rate at fixed draft sequence length DL ∈ {2,3,4,5}, for SD /
+//! SpecTr / RSD-C / RSD-S with the exact tree structures of App. C.3.1.
+//!
+//! This bench runs the sweep on both substrates:
+//!  * sim (fast, controlled discrepancy) — the full grid;
+//!  * the real AOT-compiled model pair — a spot-check subset (the full
+//!    real-model sweep is `rsd exp1`).
+//!
+//!     cargo bench --bench exp1
+
+use rsd::bench::{self, workload, BenchOpts};
+use rsd::config::{DecoderConfig, SamplingConfig};
+use rsd::model::PjrtLm;
+use rsd::runtime::Runtime;
+use rsd::sim::SimLm;
+
+fn main() -> anyhow::Result<()> {
+    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+
+    // ---- sim substrate: full App. C.3.1 grid ---------------------------
+    let (target, draft) = SimLm::pair(0, 0.8, 256);
+    let prompts = workload::random_prompts(6, 16, 256, 1);
+    let opts = BenchOpts { max_new: 64, reps: 6, tv_trials: 0, seed: 0 };
+    let ar = bench::bench_decoder(&DecoderConfig::Ar, &sampling, &target, &draft, &prompts, &opts)?;
+    for dl in [2usize, 3, 4, 5] {
+        let mut rows = Vec::new();
+        for cfg in bench::exp1_configs(dl) {
+            rows.push(bench::bench_decoder(&cfg, &sampling, &target, &draft, &prompts, &opts)?);
+        }
+        bench::print_table(&format!("Exp1 sim (alpha=0.8) DL = {dl}"), &ar, &rows, true);
+    }
+
+    // ---- real model: spot-check DL = 3 ---------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::cpu()?;
+        let (target, draft) = PjrtLm::load_pair(&rt, "artifacts")?;
+        let prompts = workload::corpus_prompts("artifacts", 3, 48, 2)?;
+        let opts = BenchOpts { max_new: 48, reps: 3, tv_trials: 0, seed: 0 };
+        let ar =
+            bench::bench_decoder(&DecoderConfig::Ar, &sampling, &target, &draft, &prompts, &opts)?;
+        let mut rows = Vec::new();
+        for cfg in bench::exp1_configs(3) {
+            rows.push(bench::bench_decoder(&cfg, &sampling, &target, &draft, &prompts, &opts)?);
+        }
+        bench::print_table("Exp1 REAL MODEL (AOT/PJRT) DL = 3", &ar, &rows, true);
+    } else {
+        eprintln!("artifacts missing — skipping real-model spot check (run `make artifacts`)");
+    }
+    Ok(())
+}

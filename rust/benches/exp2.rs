@@ -1,0 +1,51 @@
+//! Exp2 (paper §5.2, Figure 5, Tables 28-54): performance at fixed
+//! *target computational budget* B ∈ {6,10,14,21,30} — the number of
+//! draft-tree tokens the target processes per iteration — with the exact
+//! tree structures of App. C.3.2. This is the experiment the paper
+//! stresses no prior work ran (resource-bounded devices).
+//!
+//!     cargo bench --bench exp2
+
+use rsd::bench::{self, workload, BenchOpts};
+use rsd::config::{DecoderConfig, SamplingConfig};
+use rsd::model::PjrtLm;
+use rsd::runtime::Runtime;
+use rsd::sim::SimLm;
+
+fn main() -> anyhow::Result<()> {
+    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+
+    // ---- sim substrate: full App. C.3.2 grid at two alignments ---------
+    for alpha in [0.9, 0.6] {
+        let (target, draft) = SimLm::pair(0, alpha, 256);
+        let prompts = workload::random_prompts(6, 16, 256, 1);
+        let opts = BenchOpts { max_new: 64, reps: 6, tv_trials: 0, seed: 0 };
+        let ar =
+            bench::bench_decoder(&DecoderConfig::Ar, &sampling, &target, &draft, &prompts, &opts)?;
+        for b in [6usize, 10, 14, 21, 30] {
+            let mut rows = Vec::new();
+            for cfg in bench::exp2_configs(b) {
+                rows.push(bench::bench_decoder(&cfg, &sampling, &target, &draft, &prompts, &opts)?);
+            }
+            bench::print_table(&format!("Exp2 sim (alpha={alpha}) Budget = {b}"), &ar, &rows, true);
+        }
+    }
+
+    // ---- real model: spot-check B = 14 ---------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::cpu()?;
+        let (target, draft) = PjrtLm::load_pair(&rt, "artifacts")?;
+        let prompts = workload::corpus_prompts("artifacts", 3, 48, 2)?;
+        let opts = BenchOpts { max_new: 48, reps: 3, tv_trials: 0, seed: 0 };
+        let ar =
+            bench::bench_decoder(&DecoderConfig::Ar, &sampling, &target, &draft, &prompts, &opts)?;
+        let mut rows = Vec::new();
+        for cfg in bench::exp2_configs(14) {
+            rows.push(bench::bench_decoder(&cfg, &sampling, &target, &draft, &prompts, &opts)?);
+        }
+        bench::print_table("Exp2 REAL MODEL (AOT/PJRT) Budget = 14", &ar, &rows, true);
+    } else {
+        eprintln!("artifacts missing — skipping real-model spot check (run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Bench/regeneration target for the paper's Figure 1: the Bernoulli-toy
+//! acceptance-rate comparison (multi-round vs K-SEQ vs OTM vs RRS), plus
+//! timing of the verification rules themselves.
+//!
+//!     cargo bench --bench fig1
+
+use rsd::bench::harness::{bench, section};
+use rsd::decode::rrs::{KSeq, MultiRound, Rrs, VerifyRule};
+use rsd::decode::toy;
+use rsd::sampling::{gumbel_top_k, LogProbs};
+use rsd::util::Rng;
+
+fn main() {
+    section("Figure 1 regeneration (closed forms, K = 2)");
+    println!(
+        "{:>5} {:>5} {:>12} {:>9} {:>7} {:>7}",
+        "p", "q", "multi-round", "K-SEQ*", "OTM", "RRS"
+    );
+    for &(p, q) in &[
+        (0.5, 0.5),
+        (0.6, 0.4),
+        (0.7, 0.3),
+        (0.8, 0.2),
+        (0.9, 0.1),
+        (0.95, 0.05),
+    ] {
+        let r = toy::figure1_row(p, q);
+        println!(
+            "{:>5.2} {:>5.2} {:>12.3} {:>9.3} {:>7.3} {:>7.3}",
+            p, q, r.multiround, r.kseq, r.otm, r.rrs
+        );
+        assert!(r.rrs >= r.otm - 1e-9 && r.otm >= r.kseq - 1e-9 && r.kseq >= r.multiround - 1e-9);
+    }
+    println!("(RRS = 1.0 everywhere: the paper's without-replacement effect)");
+
+    section("verification-rule latency (vocab 256, K = 4 siblings)");
+    let mut rng = Rng::seed_from_u64(0);
+    let p = LogProbs((0..256).map(|i| -((i + 1) as f64).ln() * 1.1).collect());
+    let q = LogProbs((0..256).rev().map(|i| -((i + 1) as f64).ln() * 1.3).collect());
+    let mut pn = p.clone();
+    rsd::sampling::log_normalize(&mut pn.0);
+    let mut qn = q.clone();
+    rsd::sampling::log_normalize(&mut qn.0);
+    let sib: Vec<u32> = gumbel_top_k(&pn, 4, &mut rng).iter().map(|&(i, _)| i as u32).collect();
+
+    bench("rrs_verify/vocab=256/k=4", || {
+        let _ = Rrs.verify(&sib, &pn, &qn, &mut rng);
+    });
+    bench("multiround_verify/vocab=256/k=4", || {
+        let _ = MultiRound.verify(&sib, &pn, &qn, &mut rng);
+    });
+    bench("kseq_verify/vocab=256/k=4", || {
+        let _ = (KSeq { gamma: None }).verify(&sib, &pn, &qn, &mut rng);
+    });
+    bench("figure1_row (closed forms incl. gamma tuning)", || {
+        let _ = toy::figure1_row(0.8, 0.2);
+    });
+}

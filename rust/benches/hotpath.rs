@@ -1,0 +1,148 @@
+//! Hot-path microbenchmarks (L3 profile, EXPERIMENTS.md §Perf): every
+//! per-round operation of the coordinator, plus the PJRT step call that
+//! dominates end-to-end time. Drafting + verification must be negligible
+//! next to one model call — this bench proves (or disproves) it.
+//!
+//!     cargo bench --bench hotpath
+
+use rsd::bench::harness::{bench, section};
+use rsd::config::SamplingConfig;
+use rsd::decode::rrs::{Rrs, VerifyRule};
+use rsd::decode::spec::{SpecStepper, StepOutcome};
+use rsd::decode::{build_parts, generate};
+use rsd::llm::{EvalNode, Llm};
+use rsd::sampling::{gumbel_top_k, process_logits, truncated_gumbel};
+use rsd::sim::SimLm;
+use rsd::tree::SessionCore;
+use rsd::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seed_from_u64(0);
+    let vocab = 256usize;
+    let logits: Vec<f32> = (0..vocab).map(|i| ((i * 37) % 97) as f32 / 9.0).collect();
+
+    section("sampling substrate (per call, vocab = 256)");
+    bench("process_logits/temp", || {
+        let _ = process_logits(&logits, 0.3, 1.0);
+    });
+    bench("process_logits/temp+top_p", || {
+        let _ = process_logits(&logits, 1.0, 0.95);
+    });
+    let lp = process_logits(&logits, 0.3, 1.0);
+    bench("gumbel_top_k/k=4", || {
+        let _ = gumbel_top_k(&lp, 4, &mut rng);
+    });
+    bench("gumbel_top_k/k=12", || {
+        let _ = gumbel_top_k(&lp, 12, &mut rng);
+    });
+    let phi: Vec<f64> = lp.0.clone();
+    bench("truncated_gumbel/vocab=256", || {
+        let _ = truncated_gumbel(-0.5, 0.1, &phi);
+    });
+    let q = process_logits(&logits.iter().rev().cloned().collect::<Vec<_>>(), 0.3, 1.0);
+    let sib: Vec<u32> = gumbel_top_k(&lp, 4, &mut rng).iter().map(|&(i, _)| i as u32).collect();
+    bench("rrs_verify/k=4", || {
+        let _ = Rrs.verify(&sib, &lp, &q, &mut rng);
+    });
+
+    section("tree / session bookkeeping (cache_len = 256)");
+    bench("mask_row_build/prefix=128", || {
+        let mut s = SessionCore::new(256);
+        let nodes: Vec<EvalNode> = (0..128u32)
+            .map(|i| if i == 0 { EvalNode::root(i) } else { EvalNode::child(i, (i - 1) as usize) })
+            .collect();
+        s.add_pending(&nodes).unwrap();
+        let _ = s.visible_slots(127);
+    });
+    {
+        let mut s = SessionCore::new(256);
+        let nodes: Vec<EvalNode> = (0..128u32)
+            .map(|i| if i == 0 { EvalNode::root(i) } else { EvalNode::child(i, (i - 1) as usize) })
+            .collect();
+        s.add_pending(&nodes).unwrap();
+        bench("visible_slots only/prefix=128", || {
+            let _ = s.visible_slots(127);
+        });
+    }
+    bench("commit/30-node tree", || {
+        let mut s = SessionCore::new(256);
+        let mut nodes = vec![EvalNode::root(0)];
+        for i in 1..30u32 {
+            nodes.push(EvalNode::child(i, (i as usize).saturating_sub(1)));
+        }
+        s.add_pending(&nodes).unwrap();
+        s.commit(&[0, 1, 2, 3]).unwrap();
+    });
+
+    section("whole rounds on the sim substrate");
+    let (target, draft) = SimLm::pair(0, 0.8, vocab);
+    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+    for spec in ["sd:3", "rsd-c:2-2-2", "rsd-s:6x5"] {
+        let cfg: rsd::config::DecoderConfig = spec.parse().unwrap();
+        bench(&format!("spec_round/{spec}"), || {
+            let (strategy, rule) = build_parts(&cfg);
+            let mut st =
+                SpecStepper::new(&target, &draft, strategy, rule, sampling, &[1, 2, 3], 64)
+                    .unwrap();
+            while st.step(&target, &draft, &mut rng).unwrap() == StepOutcome::Progress {
+                if st.out.len() >= 8 {
+                    break;
+                }
+            }
+        });
+    }
+
+    // ---- the real bottleneck: one PJRT step call ------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        section("PJRT model calls (REAL artifacts)");
+        let rt = rsd::runtime::Runtime::cpu()?;
+        let (ptarget, pdraft) = rsd::model::PjrtLm::load_pair(&rt, "artifacts")?;
+        {
+            let mut sess = ptarget.begin()?;
+            // fill some prefix first
+            let nodes: Vec<EvalNode> = (0..32u32)
+                .map(|i| {
+                    if i == 0 { EvalNode::root(5) } else { EvalNode::child(7, (i - 1) as usize) }
+                })
+                .collect();
+            ptarget.eval(&mut sess, &nodes)?;
+            let chain: Vec<usize> = (0..32).collect();
+            ptarget.commit(&mut sess, &chain)?;
+            bench("target_step/one 32-token tile", || {
+                let rows = ptarget.eval(&mut sess, &[EvalNode::root(9)]).unwrap();
+                std::hint::black_box(&rows);
+                // discard pending (commit nothing) so the prefix stays fixed
+                ptarget.commit(&mut sess, &[]).unwrap();
+            });
+        }
+        {
+            let mut sess = pdraft.begin()?;
+            let nodes: Vec<EvalNode> = (0..32u32)
+                .map(|i| {
+                    if i == 0 { EvalNode::root(5) } else { EvalNode::child(7, (i - 1) as usize) }
+                })
+                .collect();
+            pdraft.eval(&mut sess, &nodes)?;
+            let chain: Vec<usize> = (0..32).collect();
+            pdraft.commit(&mut sess, &chain)?;
+            bench("draft_step/one 32-token tile", || {
+                let rows = pdraft.eval(&mut sess, &[EvalNode::root(9)]).unwrap();
+                std::hint::black_box(&rows);
+                pdraft.commit(&mut sess, &[]).unwrap();
+            });
+        }
+        section("end-to-end decode (REAL artifacts, 16 tokens)");
+        let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+        for spec in ["ar", "sd:3", "rsd-s:3x3"] {
+            let cfg: rsd::config::DecoderConfig = spec.parse().unwrap();
+            bench(&format!("generate16/{spec}"), || {
+                let _ =
+                    generate(&cfg, &sampling, &ptarget, &pdraft, &[1, 2, 3], 16, &mut rng)
+                        .unwrap();
+            });
+        }
+    } else {
+        eprintln!("artifacts missing — skipping PJRT hot-path benches");
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Micro-benchmark harness (offline substitute for criterion): warmup,
+//! timed batches, mean / stddev / throughput reporting, and a tiny
+//! comparison table. Wallclock-based, best-of-batches resistant to noise.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            return f64::INFINITY;
+        }
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f`, auto-calibrating the iteration count to roughly
+/// `target_time` per batch, over `batches` batches.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    let target_time = Duration::from_millis(120);
+    let batches = 7usize;
+
+    // calibrate
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let el = t0.elapsed();
+        if el >= Duration::from_millis(15) || iters >= 1 << 24 {
+            let scale = target_time.as_secs_f64() / el.as_secs_f64().max(1e-9);
+            iters = ((iters as f64 * scale).ceil() as u64).max(1);
+            break;
+        }
+        iters *= 4;
+    }
+
+    // measure
+    let mut samples = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / (samples.len() - 1) as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        mean: Duration::from_secs_f64(mean),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        iters,
+    };
+    println!(
+        "{:<44} {:>12} ± {:>10}   ({:>12.1} /s, {} iters/batch)",
+        r.name,
+        fmt_dur(r.mean),
+        fmt_dur(r.stddev),
+        r.per_sec(),
+        r.iters
+    );
+    r
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", d.as_secs_f64())
+    }
+}
+
+/// Section header for bench binaries.
+pub fn section(title: &str) {
+    println!("\n——— {title} ———");
+}

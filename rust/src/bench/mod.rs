@@ -1,0 +1,359 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation section.
+//!
+//! * [`exp1_configs`] / [`exp2_configs`] — the exact tree structures of
+//!   App. C.3.1 / C.3.2.
+//! * [`bench_decoder`] — measures block efficiency, MBSU, token rate and
+//!   the distribution-recovery TV distance (the accuracy analogue) for
+//!   one decoder config.
+//! * [`run_exp1`] / [`run_exp2`] / [`figure1`] — full sweeps printing
+//!   paper-style tables (Tables 1-54 rows; Figure 1/4/5 series).
+
+pub mod harness;
+pub mod workload;
+
+use anyhow::Result;
+
+use crate::config::{DecoderConfig, SamplingConfig};
+use crate::decode::{generate, toy};
+use crate::llm::Llm;
+use crate::sampling::{process_logits, tv_distance};
+use crate::util::Rng;
+
+/// One row of a paper-style results table.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub decoder: String,
+    pub spec: String,
+    pub eff: f64,
+    pub mbsu: f64,
+    pub token_rate: f64,
+    /// TV distance between the decoder's first-token distribution and the
+    /// exact target distribution (the "Acc." column analogue: all exact
+    /// decoders must sit near 0). None when not measured.
+    pub tv: Option<f64>,
+    /// Mean draft-tree nodes per target call (actual budget).
+    pub nodes_per_call: f64,
+}
+
+/// Benchmark options.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub max_new: usize,
+    pub reps: usize,
+    /// Trials for the first-token TV check (0 disables).
+    pub tv_trials: usize,
+    pub seed: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { max_new: 64, reps: 4, tv_trials: 0, seed: 0 }
+    }
+}
+
+fn split_label(cfg: &DecoderConfig) -> (String, String) {
+    let label = cfg.label();
+    match label.split_once(' ') {
+        Some((a, b)) => (a.to_string(), b.to_string()),
+        None => (label, "-".to_string()),
+    }
+}
+
+/// Measure one decoder config over `opts.reps` prompts.
+pub fn bench_decoder<T: Llm, D: Llm>(
+    cfg: &DecoderConfig,
+    sampling: &SamplingConfig,
+    target: &T,
+    draft: &D,
+    prompts: &[Vec<u32>],
+    opts: &BenchOpts,
+) -> Result<BenchRow> {
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let mut eff = 0.0;
+    let mut mbsu = 0.0;
+    let mut rate = 0.0;
+    let mut nodes = 0.0;
+    let mut n = 0usize;
+    for rep in 0..opts.reps {
+        let prompt = &prompts[rep % prompts.len()];
+        let run = generate(cfg, sampling, target, draft, prompt, opts.max_new, &mut rng)?;
+        eff += run.stats.block_efficiency();
+        mbsu += run.stats.mbsu(cfg.depth(), draft.param_count(), target.param_count());
+        rate += run.stats.token_rate();
+        nodes += if run.stats.decode_calls > 0 {
+            run.stats.tree_nodes as f64 / run.stats.decode_calls as f64
+        } else {
+            0.0
+        };
+        n += 1;
+    }
+    let tv = if opts.tv_trials > 0 {
+        Some(first_token_tv(cfg, sampling, target, draft, &prompts[0], opts.tv_trials, opts.seed)?)
+    } else {
+        None
+    };
+    let (decoder, spec) = split_label(cfg);
+    let nf = n as f64;
+    Ok(BenchRow {
+        decoder,
+        spec,
+        eff: eff / nf,
+        mbsu: mbsu / nf,
+        token_rate: rate / nf,
+        tv,
+        nodes_per_call: nodes / nf,
+    })
+}
+
+/// Distribution-recovery check: empirical first-token distribution of the
+/// decoder vs the exact (processed) target distribution at the prompt.
+/// This is the sharp version of the paper's accuracy columns — every
+/// exact decoder must drive it to 0 as trials grow.
+pub fn first_token_tv<T: Llm, D: Llm>(
+    cfg: &DecoderConfig,
+    sampling: &SamplingConfig,
+    target: &T,
+    draft: &D,
+    prompt: &[u32],
+    trials: usize,
+    seed: u64,
+) -> Result<f64> {
+    // exact target distribution at the prompt
+    let mut sess = target.begin()?;
+    let nodes: Vec<crate::llm::EvalNode> = prompt
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            if i == 0 {
+                crate::llm::EvalNode::root(t)
+            } else {
+                crate::llm::EvalNode::child(t, i - 1)
+            }
+        })
+        .collect();
+    let rows = target.eval(&mut sess, &nodes)?;
+    let exact = process_logits(rows.last().unwrap(), sampling.temperature, sampling.top_p).probs();
+
+    let mut rng = Rng::seed_from_u64(seed.wrapping_add(0x5eed));
+    let mut hist = vec![0f64; target.vocab()];
+    for _ in 0..trials {
+        let run = generate(cfg, sampling, target, draft, prompt, 1, &mut rng)?;
+        hist[run.tokens[0] as usize] += 1.0;
+    }
+    for h in &mut hist {
+        *h /= trials as f64;
+    }
+    Ok(tv_distance(&hist, &exact))
+}
+
+/// Tree structures for Exp1 (fixed draft length), App. C.3.1.
+pub fn exp1_configs(dl: usize) -> Vec<DecoderConfig> {
+    use DecoderConfig::*;
+    let spectr = |k, l| SpecTr { k, l };
+    let rsdc = |b: &[usize]| RsdC { branches: b.to_vec() };
+    match dl {
+        2 => vec![
+            Sd { l: 2 },
+            spectr(2, 2),
+            spectr(3, 2),
+            rsdc(&[2, 1]),
+            rsdc(&[2, 2]),
+            rsdc(&[3, 1]),
+            RsdS { w: 2, l: 2 },
+            RsdS { w: 3, l: 2 },
+        ],
+        3 => vec![
+            Sd { l: 3 },
+            spectr(3, 3),
+            spectr(4, 3),
+            rsdc(&[2, 2, 2]),
+            rsdc(&[3, 1, 1]),
+            rsdc(&[4, 1, 1]),
+            RsdS { w: 3, l: 3 },
+            RsdS { w: 4, l: 3 },
+        ],
+        4 => vec![
+            Sd { l: 4 },
+            spectr(5, 4),
+            spectr(7, 4),
+            rsdc(&[2, 2, 2, 2]),
+            rsdc(&[5, 1, 1, 1]),
+            rsdc(&[7, 1, 1, 1]),
+            RsdS { w: 5, l: 4 },
+            RsdS { w: 7, l: 4 },
+        ],
+        5 => vec![
+            Sd { l: 5 },
+            spectr(6, 5),
+            spectr(12, 5),
+            rsdc(&[2, 2, 2, 2, 2]),
+            rsdc(&[6, 1, 1, 1, 1]),
+            rsdc(&[12, 1, 1, 1, 1]),
+            RsdS { w: 6, l: 5 },
+            RsdS { w: 12, l: 5 },
+        ],
+        _ => panic!("paper sweeps DL in {{2,3,4,5}}, got {dl}"),
+    }
+}
+
+/// Tree structures for Exp2 (fixed target budget), App. C.3.2.
+pub fn exp2_configs(budget: usize) -> Vec<DecoderConfig> {
+    use DecoderConfig::*;
+    let spectr = |k, l| SpecTr { k, l };
+    let rsdc = |b: &[usize]| RsdC { branches: b.to_vec() };
+    match budget {
+        6 => vec![
+            Sd { l: 6 },
+            spectr(2, 3),
+            spectr(3, 2),
+            rsdc(&[2, 1, 1]),
+            rsdc(&[2, 2]),
+            rsdc(&[3, 1]),
+            RsdS { w: 2, l: 3 },
+            RsdS { w: 3, l: 2 },
+        ],
+        10 => vec![
+            Sd { l: 10 },
+            spectr(2, 5),
+            spectr(5, 2),
+            rsdc(&[2, 1, 1, 1, 1]),
+            rsdc(&[2, 2, 1]),
+            rsdc(&[5, 1]),
+            RsdS { w: 2, l: 5 },
+            RsdS { w: 5, l: 2 },
+        ],
+        14 => vec![
+            Sd { l: 14 },
+            spectr(2, 7),
+            spectr(7, 2),
+            rsdc(&[2, 1, 1, 1, 1, 1, 1]),
+            rsdc(&[2, 2, 2]),
+            rsdc(&[7, 1]),
+            RsdS { w: 2, l: 7 },
+            RsdS { w: 7, l: 2 },
+        ],
+        21 => vec![
+            Sd { l: 21 },
+            spectr(3, 7),
+            spectr(7, 3),
+            rsdc(&[3, 1, 1, 1, 1, 1, 1]),
+            rsdc(&[3, 2, 2]),
+            rsdc(&[7, 1, 1]),
+            RsdS { w: 3, l: 7 },
+            RsdS { w: 7, l: 3 },
+        ],
+        30 => vec![
+            Sd { l: 30 },
+            spectr(5, 6),
+            spectr(6, 5),
+            rsdc(&[2, 2, 2, 2]),
+            rsdc(&[5, 1, 1, 1, 1, 1]),
+            rsdc(&[6, 1, 1, 1, 1]),
+            RsdS { w: 5, l: 6 },
+            RsdS { w: 6, l: 5 },
+        ],
+        _ => panic!("paper sweeps budgets in {{6,10,14,21,30}}, got {budget}"),
+    }
+}
+
+/// Print a paper-style table (Tables 1-54 row structure). Values are
+/// normalized by the AR row when `normalize` is set (Figures 4/5 style).
+pub fn print_table(title: &str, ar: &BenchRow, rows: &[BenchRow], normalize: bool) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<8} {:<14} {:>7} {:>7} {:>9} {:>7} {:>7}",
+        "Dec.", "Spec.", "Eff.", "MBSU", "TR", "TV", "Nodes"
+    );
+    let (e0, m0, t0) = if normalize {
+        (ar.eff, ar.mbsu, ar.token_rate)
+    } else {
+        (1.0, 1.0, 1.0)
+    };
+    let print_row = |r: &BenchRow| {
+        println!(
+            "{:<8} {:<14} {:>7.3} {:>7.3} {:>9.3} {:>7} {:>7.1}",
+            r.decoder,
+            r.spec,
+            r.eff / e0,
+            r.mbsu / m0,
+            r.token_rate / t0,
+            r.tv.map(|t| format!("{t:.3}")).unwrap_or_else(|| "-".into()),
+            r.nodes_per_call,
+        );
+    };
+    print_row(ar);
+    for r in rows {
+        print_row(r);
+    }
+}
+
+/// Figure 1: acceptance rates on the Bernoulli toy, K = 2. Returns rows
+/// over a grid of (p, q) pairs; `rsd fig1` prints them.
+pub fn figure1(grid: usize) -> Vec<toy::ToyRow> {
+    let mut out = Vec::new();
+    for i in 1..grid {
+        for j in 1..grid {
+            let p = i as f64 / grid as f64;
+            let q = j as f64 / grid as f64;
+            out.push(toy::figure1_row(p, q));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimLm;
+
+    #[test]
+    fn exp_configs_budgets_are_exact() {
+        for b in [6, 10, 14, 21, 30] {
+            for cfg in exp2_configs(b).iter().skip(1) {
+                assert_eq!(cfg.budget(), b, "{cfg:?}");
+            }
+        }
+        for dl in [2, 3, 4, 5] {
+            for cfg in exp1_configs(dl) {
+                assert_eq!(cfg.depth(), dl, "{cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bench_decoder_runs_on_sim() {
+        let (target, draft) = SimLm::pair(0, 0.8, 48);
+        let sampling = SamplingConfig::default();
+        let opts = BenchOpts { max_new: 32, reps: 2, tv_trials: 0, seed: 1 };
+        let prompts = vec![vec![1u32, 2, 3]];
+        let row = bench_decoder(
+            &DecoderConfig::RsdS { w: 3, l: 3 },
+            &sampling,
+            &target,
+            &draft,
+            &prompts,
+            &opts,
+        )
+        .unwrap();
+        assert!(row.eff > 1.0);
+        assert!(row.nodes_per_call > 1.0);
+    }
+
+    #[test]
+    fn tv_check_small_on_exact_decoder() {
+        let (target, draft) = SimLm::pair(1, 0.6, 24);
+        let sampling = SamplingConfig::default();
+        let tv = first_token_tv(
+            &DecoderConfig::RsdC { branches: vec![2, 2] },
+            &sampling,
+            &target,
+            &draft,
+            &[3, 1, 4],
+            4000,
+            7,
+        )
+        .unwrap();
+        assert!(tv < 0.08, "tv {tv}");
+    }
+}

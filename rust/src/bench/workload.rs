@@ -1,0 +1,73 @@
+//! Workload generation: prompts drawn from the synthetic corpus (the
+//! trained model's native distribution — the WMT/XSum analogue) or from
+//! seeded random tokens (for the sim substrate), plus a Poisson arrival
+//! generator for the serving benchmark.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Rng;
+
+/// Prompts sliced from artifacts/corpus.bin: in-distribution inputs for
+/// the trained models.
+pub fn corpus_prompts(
+    artifacts_dir: impl AsRef<Path>,
+    n: usize,
+    len: usize,
+    seed: u64,
+) -> Result<Vec<Vec<u32>>> {
+    let path = artifacts_dir.as_ref().join("corpus.bin");
+    let data = std::fs::read(&path)
+        .with_context(|| format!("reading {} — run `make artifacts`", path.display()))?;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let start = rng.gen_range(data.len().saturating_sub(len + 1).max(1));
+        out.push(data[start..start + len].iter().map(|&b| b as u32).collect());
+    }
+    Ok(out)
+}
+
+/// Seeded random prompts over a vocab (sim substrate workloads).
+pub fn random_prompts(n: usize, len: usize, vocab: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.gen_range(vocab) as u32).collect())
+        .collect()
+}
+
+/// Poisson-process arrival offsets (seconds) for `n` requests at `rate`
+/// requests/second — the serving bench's open-loop workload.
+pub fn poisson_arrivals(n: usize, rate: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            let u: f64 = rng.gen_f64_open();
+            t += -u.ln() / rate;
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_prompts_deterministic_and_bounded() {
+        let a = random_prompts(4, 8, 32, 1);
+        let b = random_prompts(4, 8, 32, 1);
+        assert_eq!(a, b);
+        assert!(a.iter().flatten().all(|&t| t < 32));
+    }
+
+    #[test]
+    fn poisson_arrivals_increasing_with_mean_rate() {
+        let arr = poisson_arrivals(2000, 50.0, 3);
+        assert!(arr.windows(2).all(|w| w[1] > w[0]));
+        let mean_gap = arr.last().unwrap() / 2000.0;
+        assert!((mean_gap - 0.02).abs() < 0.004, "{mean_gap}");
+    }
+}

@@ -1,0 +1,381 @@
+//! Configuration system: artifact manifest (produced by the AOT step),
+//! decode configuration (which algorithm, which tree), and engine knobs.
+//!
+//! Decoder configs use compact spec strings mirroring the paper's tables:
+//! `ar`, `sd:4`, `spectr:3x7`, `rsd-c:2-2-1`, `rsd-s:6x5` — parsed by
+//! [`DecoderConfig::parse`], printed by [`DecoderConfig::label`].
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Per-model entry of `artifacts/manifest.json` (written by aot.py).
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub d_head: usize,
+    pub s_tile: usize,
+    pub cache_len: usize,
+    pub batch: usize,
+    pub params: usize,
+    pub hlo: String,
+    /// Tile-width variants: (s_tile, hlo file), ascending.
+    pub tiles: Vec<(usize, String)>,
+    pub tensors: String,
+    pub input_order: Vec<String>,
+}
+
+impl ModelManifest {
+    fn from_json(j: &Json) -> Result<Self> {
+        let input_order = j
+            .get("input_order")
+            .and_then(Json::as_arr)
+            .context("input_order missing")?
+            .iter()
+            .map(|x| x.as_str().map(str::to_string).context("input_order entry"))
+            .collect::<Result<Vec<_>>>()?;
+        let mut tiles: Vec<(usize, String)> = match j.get("tiles").and_then(Json::as_obj) {
+            Some(m) => m
+                .iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.parse::<usize>().context("tile key")?,
+                        v.str_field("hlo")?.to_string(),
+                    ))
+                })
+                .collect::<Result<_>>()?,
+            None => vec![],
+        };
+        tiles.sort();
+        Ok(Self {
+            name: j.str_field("name")?.to_string(),
+            vocab: j.usize_field("vocab")?,
+            n_layers: j.usize_field("n_layers")?,
+            d_model: j.usize_field("d_model")?,
+            n_heads: j.usize_field("n_heads")?,
+            d_ff: j.usize_field("d_ff")?,
+            d_head: j.usize_field("d_head")?,
+            s_tile: j.usize_field("s_tile")?,
+            cache_len: j.usize_field("cache_len")?,
+            batch: j.usize_field("batch")?,
+            params: j.usize_field("params")?,
+            hlo: j.str_field("hlo")?.to_string(),
+            tiles,
+            tensors: j.str_field("tensors")?.to_string(),
+            input_order,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<(Self, PathBuf)> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models").and_then(Json::as_obj).context("models missing")? {
+            models.insert(name.clone(), ModelManifest::from_json(mj)?);
+        }
+        Ok((Manifest { models }, dir))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))
+    }
+}
+
+/// Logits post-processing, matching the paper's experimental setup
+/// (temperature 0.3 for WMT/XSum analogues; 1.0 + top-p 0.95 for Dolly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingConfig {
+    pub temperature: f32,
+    /// Nucleus filtering: keep the smallest prefix of tokens (by prob)
+    /// whose mass reaches `top_p`; 1.0 disables.
+    pub top_p: f32,
+}
+
+impl Default for SamplingConfig {
+    fn default() -> Self {
+        Self { temperature: 1.0, top_p: 1.0 }
+    }
+}
+
+/// Which decoding algorithm to run, with its tree specification. The
+/// `Spec.` column of the paper's tables (App. C.3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecoderConfig {
+    /// Auto-regressive baseline.
+    Ar,
+    /// Single-sequence speculative decoding with draft length `l`.
+    Sd { l: usize },
+    /// SpecTr K-SEQ: `k` i.i.d. draft paths of length `l`. γ fixed at
+    /// the per-level candidate count (see decode::rrs::KSeq).
+    SpecTr { k: usize, l: usize },
+    /// RSD with constant branching factors (root-to-leaf), e.g. [2,2,1].
+    RsdC { branches: Vec<usize> },
+    /// ABLATION: RSD-C's without-replacement tree verified with the
+    /// SpecInfer multi-round (with-replacement) rule — isolates the gain
+    /// of recursive rejection sampling at the system level.
+    RsdCMultiRound { branches: Vec<usize> },
+    /// RSD with Stochastic Beam Search: beamwidth `w`, max depth `l`.
+    RsdS { w: usize, l: usize },
+}
+
+impl DecoderConfig {
+    /// Number of draft-token tree nodes processed at the target model per
+    /// iteration — the paper's "target computational budget" (Exp2).
+    pub fn budget(&self) -> usize {
+        match self {
+            DecoderConfig::Ar => 0,
+            DecoderConfig::Sd { l } => *l,
+            DecoderConfig::SpecTr { k, l } => k * l,
+            DecoderConfig::RsdC { branches }
+            | DecoderConfig::RsdCMultiRound { branches } => {
+                let mut n = 1usize;
+                let mut total = 0usize;
+                for b in branches {
+                    n *= b;
+                    total += n;
+                }
+                total
+            }
+            DecoderConfig::RsdS { w, l } => w * l,
+        }
+    }
+
+    /// Maximum draft sequence length (tree depth) — the paper's DL (Exp1).
+    pub fn depth(&self) -> usize {
+        match self {
+            DecoderConfig::Ar => 0,
+            DecoderConfig::Sd { l } => *l,
+            DecoderConfig::SpecTr { l, .. } => *l,
+            DecoderConfig::RsdC { branches }
+            | DecoderConfig::RsdCMultiRound { branches } => branches.len(),
+            DecoderConfig::RsdS { l, .. } => *l,
+        }
+    }
+
+    /// Short human label matching the paper's `Dec. Spec.` columns.
+    pub fn label(&self) -> String {
+        match self {
+            DecoderConfig::Ar => "AR".into(),
+            DecoderConfig::Sd { l } => format!("SD {l}"),
+            DecoderConfig::SpecTr { k, l } => format!("SpecTr {k}x{l}"),
+            DecoderConfig::RsdC { branches } => {
+                let b: Vec<String> = branches.iter().map(|x| x.to_string()).collect();
+                format!("RSD-C {}", b.join("-"))
+            }
+            DecoderConfig::RsdCMultiRound { branches } => {
+                let b: Vec<String> = branches.iter().map(|x| x.to_string()).collect();
+                format!("RSD-C/mr {}", b.join("-"))
+            }
+            DecoderConfig::RsdS { w, l } => format!("RSD-S {w}x{l}"),
+        }
+    }
+
+    /// Compact spec string: `ar | sd:L | spectr:KxL | rsd-c:B-B-.. | rsd-s:WxL`.
+    pub fn spec(&self) -> String {
+        match self {
+            DecoderConfig::Ar => "ar".into(),
+            DecoderConfig::Sd { l } => format!("sd:{l}"),
+            DecoderConfig::SpecTr { k, l } => format!("spectr:{k}x{l}"),
+            DecoderConfig::RsdC { branches } => {
+                let b: Vec<String> = branches.iter().map(|x| x.to_string()).collect();
+                format!("rsd-c:{}", b.join("-"))
+            }
+            DecoderConfig::RsdCMultiRound { branches } => {
+                let b: Vec<String> = branches.iter().map(|x| x.to_string()).collect();
+                format!("rsd-c-mr:{}", b.join("-"))
+            }
+            DecoderConfig::RsdS { w, l } => format!("rsd-s:{w}x{l}"),
+        }
+    }
+}
+
+impl FromStr for DecoderConfig {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "ar" {
+            return Ok(DecoderConfig::Ar);
+        }
+        let (kind, rest) = s
+            .split_once(':')
+            .with_context(|| format!("bad decoder spec '{s}' (want kind:params)"))?;
+        let kxl = |r: &str| -> Result<(usize, usize)> {
+            let (a, b) = r.split_once('x').with_context(|| format!("want KxL, got '{r}'"))?;
+            Ok((a.parse()?, b.parse()?))
+        };
+        match kind {
+            "sd" => Ok(DecoderConfig::Sd { l: rest.parse()? }),
+            "spectr" => {
+                let (k, l) = kxl(rest)?;
+                Ok(DecoderConfig::SpecTr { k, l })
+            }
+            "rsd-s" | "rsds" => {
+                let (w, l) = kxl(rest)?;
+                Ok(DecoderConfig::RsdS { w, l })
+            }
+            "rsd-c" | "rsdc" | "rsd-c-mr" => {
+                let branches = rest
+                    .split('-')
+                    .map(|x| x.parse::<usize>().map_err(Into::into))
+                    .collect::<Result<Vec<usize>>>()?;
+                if branches.is_empty() || branches.contains(&0) {
+                    bail!("branches must be positive");
+                }
+                if kind == "rsd-c-mr" {
+                    Ok(DecoderConfig::RsdCMultiRound { branches })
+                } else {
+                    Ok(DecoderConfig::RsdC { branches })
+                }
+            }
+            other => bail!("unknown decoder kind '{other}'"),
+        }
+    }
+}
+
+/// Serving-engine knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Maximum concurrently active sessions (bounded by KV capacity).
+    pub max_concurrency: usize,
+    /// Maximum queued requests before admission control rejects.
+    pub max_queue: usize,
+    /// Default per-request generation cap.
+    pub default_max_tokens: usize,
+    pub sampling: SamplingConfig,
+    pub decoder: DecoderConfig,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            max_concurrency: 4,
+            max_queue: 256,
+            default_max_tokens: 64,
+            sampling: SamplingConfig { temperature: 0.3, top_p: 1.0 },
+            decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+            seed: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Load from a JSON file; absent fields keep defaults.
+    /// Example: {"max_concurrency": 8, "decoder": "rsd-s:6x5",
+    ///           "temperature": 0.3, "top_p": 1.0}
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading engine config {}", path.as_ref().display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(v) = j.get("max_concurrency").and_then(Json::as_usize) {
+            cfg.max_concurrency = v;
+        }
+        if let Some(v) = j.get("max_queue").and_then(Json::as_usize) {
+            cfg.max_queue = v;
+        }
+        if let Some(v) = j.get("default_max_tokens").and_then(Json::as_usize) {
+            cfg.default_max_tokens = v;
+        }
+        if let Some(v) = j.get("temperature").and_then(Json::as_f64) {
+            cfg.sampling.temperature = v as f32;
+        }
+        if let Some(v) = j.get("top_p").and_then(Json::as_f64) {
+            cfg.sampling.top_p = v as f32;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            cfg.seed = v as u64;
+        }
+        if let Some(s) = j.get("decoder").and_then(Json::as_str) {
+            cfg.decoder = s.parse()?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_match_paper_appendix_c3() {
+        // App. C.3.2, B = 6
+        assert_eq!(DecoderConfig::RsdC { branches: vec![2, 1, 1] }.budget(), 6);
+        assert_eq!(DecoderConfig::RsdC { branches: vec![2, 2] }.budget(), 6);
+        assert_eq!(DecoderConfig::RsdC { branches: vec![3, 1] }.budget(), 6);
+        assert_eq!(DecoderConfig::SpecTr { k: 2, l: 3 }.budget(), 6);
+        assert_eq!(DecoderConfig::RsdS { w: 3, l: 2 }.budget(), 6);
+        // B = 30
+        assert_eq!(DecoderConfig::RsdC { branches: vec![2, 2, 2, 2] }.budget(), 30);
+        assert_eq!(DecoderConfig::RsdS { w: 5, l: 6 }.budget(), 30);
+        assert_eq!(DecoderConfig::RsdC { branches: vec![6, 1, 1, 1, 1] }.budget(), 30);
+    }
+
+    #[test]
+    fn depth_is_draft_length() {
+        assert_eq!(DecoderConfig::Sd { l: 4 }.depth(), 4);
+        assert_eq!(DecoderConfig::RsdC { branches: vec![2, 2, 2] }.depth(), 3);
+        assert_eq!(DecoderConfig::RsdS { w: 6, l: 5 }.depth(), 5);
+    }
+
+    #[test]
+    fn spec_string_roundtrip() {
+        let cfgs = vec![
+            DecoderConfig::Ar,
+            DecoderConfig::Sd { l: 3 },
+            DecoderConfig::SpecTr { k: 2, l: 5 },
+            DecoderConfig::RsdC { branches: vec![3, 2, 1] },
+            DecoderConfig::RsdS { w: 6, l: 5 },
+        ];
+        for c in cfgs {
+            let s = c.spec();
+            let back: DecoderConfig = s.parse().unwrap();
+            assert_eq!(c, back, "{s}");
+        }
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for s in ["", "sd", "sd:x", "spectr:3", "rsd-c:2-0", "warp:9"] {
+            assert!(s.parse::<DecoderConfig>().is_err(), "{s}");
+        }
+    }
+
+    #[test]
+    fn engine_config_from_json() {
+        let j = Json::parse(
+            r#"{"max_concurrency": 8, "decoder": "rsd-c:2-2-1", "temperature": 0.7}"#,
+        )
+        .unwrap();
+        let cfg = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.max_concurrency, 8);
+        assert_eq!(cfg.decoder, DecoderConfig::RsdC { branches: vec![2, 2, 1] });
+        assert!((cfg.sampling.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(cfg.max_queue, 256); // default kept
+    }
+}

@@ -1,0 +1,107 @@
+//! Admission queue + fairness policy: the "dynamic batcher" half of the
+//! coordinator. Decides which requests are active (stepped every engine
+//! turn) and which wait, with bounded queueing and load shedding.
+
+use std::collections::VecDeque;
+
+/// Why an offer was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejected {
+    QueueFull,
+}
+
+/// FIFO admission with a bounded waiting queue and a concurrency cap.
+/// Generic over the queued item so it is testable without an engine.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    max_concurrency: usize,
+    max_queue: usize,
+    queue: VecDeque<T>,
+    active: usize,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_concurrency: usize, max_queue: usize) -> Self {
+        assert!(max_concurrency > 0);
+        Self { max_concurrency, max_queue, queue: VecDeque::new(), active: 0 }
+    }
+
+    /// Offer a new request; reject when the waiting queue is full
+    /// (admission control / load shedding).
+    pub fn offer(&mut self, item: T) -> Result<(), (T, Rejected)> {
+        if self.queue.len() >= self.max_queue {
+            return Err((item, Rejected::QueueFull));
+        }
+        self.queue.push_back(item);
+        Ok(())
+    }
+
+    /// Admit the next waiting request if a concurrency slot is free.
+    pub fn admit(&mut self) -> Option<T> {
+        if self.active < self.max_concurrency {
+            if let Some(item) = self.queue.pop_front() {
+                self.active += 1;
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// A previously admitted request finished; its slot frees up.
+    pub fn release(&mut self) {
+        debug_assert!(self.active > 0);
+        self.active = self.active.saturating_sub(1);
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active == 0 && self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_concurrency() {
+        let mut b: Batcher<u32> = Batcher::new(2, 8);
+        for i in 0..4 {
+            b.offer(i).unwrap();
+        }
+        assert_eq!(b.admit(), Some(0));
+        assert_eq!(b.admit(), Some(1));
+        assert_eq!(b.admit(), None); // cap reached
+        b.release();
+        assert_eq!(b.admit(), Some(2));
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn sheds_load_when_queue_full() {
+        let mut b: Batcher<u32> = Batcher::new(1, 2);
+        b.offer(1).unwrap();
+        b.offer(2).unwrap();
+        let (item, why) = b.offer(3).unwrap_err();
+        assert_eq!(item, 3);
+        assert_eq!(why, Rejected::QueueFull);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b: Batcher<u32> = Batcher::new(4, 8);
+        for i in 0..3 {
+            b.offer(i).unwrap();
+        }
+        assert_eq!(b.admit(), Some(0));
+        assert_eq!(b.admit(), Some(1));
+        assert_eq!(b.admit(), Some(2));
+    }
+}

@@ -1,0 +1,250 @@
+//! The serving engine: owns the (target, draft) model pair and steps
+//! every active request one speculative round per turn — continuous
+//! batching at iteration granularity, so long generations never starve
+//! newly admitted requests.
+//!
+//! The engine core is synchronous (PJRT execution is blocking); it runs
+//! on its own thread and talks to front-ends through std channels.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use crate::decode::ar::ArStepper;
+use crate::decode::spec::{SpecStepper, StepOutcome};
+use crate::decode::{build_parts, DecodeStats};
+use crate::llm::Llm;
+use crate::util::Rng;
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+
+/// A generation request submitted to the engine.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    /// Per-request overrides (None = engine defaults).
+    pub decoder: Option<DecoderConfig>,
+    pub sampling: Option<SamplingConfig>,
+    pub resp: mpsc::Sender<Event>,
+}
+
+/// Streamed response events.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// Newly generated tokens (one speculative round's worth).
+    Tokens(Vec<u32>),
+    /// Request finished; final stats.
+    Done(DecodeStats),
+    /// Request failed or was shed.
+    Error(String),
+}
+
+enum AnyStepper<T: Llm, D: Llm> {
+    Ar(ArStepper<T>),
+    Spec(SpecStepper<T, D>),
+}
+
+struct Active<T: Llm, D: Llm> {
+    req: Request,
+    stepper: AnyStepper<T, D>,
+    sent: usize,
+    started: Instant,
+    first_token_at: Option<f64>,
+}
+
+/// The engine. Generic over the LM implementation so the full coordinator
+/// is testable on the sim substrate.
+pub struct Engine<T: Llm, D: Llm> {
+    target: T,
+    draft: D,
+    cfg: EngineConfig,
+    pub metrics: Arc<Metrics>,
+}
+
+impl<T: Llm, D: Llm> Engine<T, D> {
+    pub fn new(target: T, draft: D, cfg: EngineConfig) -> Self {
+        Self { target, draft, cfg, metrics: Arc::new(Metrics::default()) }
+    }
+
+    fn make_stepper(&self, req: &Request) -> Result<AnyStepper<T, D>> {
+        let decoder = req.decoder.clone().unwrap_or_else(|| self.cfg.decoder.clone());
+        let sampling = req.sampling.unwrap_or(self.cfg.sampling);
+        Ok(match decoder {
+            DecoderConfig::Ar => {
+                AnyStepper::Ar(ArStepper::new(&self.target, sampling, &req.prompt, req.max_new)?)
+            }
+            other => {
+                let (strategy, rule) = build_parts(&other);
+                AnyStepper::Spec(SpecStepper::new(
+                    &self.target,
+                    &self.draft,
+                    strategy,
+                    rule,
+                    sampling,
+                    &req.prompt,
+                    req.max_new,
+                )?)
+            }
+        })
+    }
+
+    /// Blocking serve loop. Returns when the request channel closes and
+    /// all in-flight work drained.
+    pub fn run(self, rx: mpsc::Receiver<Request>) -> Arc<Metrics> {
+        let mut rng = Rng::seed_from_u64(self.cfg.seed);
+        let mut batcher: Batcher<Request> =
+            Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue);
+        let mut active: Vec<Active<T, D>> = Vec::new();
+        let mut closed = false;
+
+        loop {
+            // ---- intake --------------------------------------------------
+            loop {
+                match rx.try_recv() {
+                    Ok(req) => {
+                        if let Err((req, _)) = batcher.offer(req) {
+                            self.metrics.add(&self.metrics.rejected, 1);
+                            let _ = req.resp.send(Event::Error("queue full".into()));
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            // block when idle (nothing active, nothing queued)
+            if active.is_empty() && batcher.queued() == 0 {
+                if closed {
+                    break;
+                }
+                match rx.recv() {
+                    Ok(req) => {
+                        if let Err((req, _)) = batcher.offer(req) {
+                            self.metrics.add(&self.metrics.rejected, 1);
+                            let _ = req.resp.send(Event::Error("queue full".into()));
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+
+            // ---- admission -----------------------------------------------
+            while let Some(req) = batcher.admit() {
+                self.metrics.add(&self.metrics.admitted, 1);
+                match self.make_stepper(&req) {
+                    Ok(stepper) => active.push(Active {
+                        req,
+                        stepper,
+                        sent: 0,
+                        started: Instant::now(),
+                        first_token_at: None,
+                    }),
+                    Err(e) => {
+                        self.metrics.add(&self.metrics.failed, 1);
+                        let _ = req.resp.send(Event::Error(e.to_string()));
+                        batcher.release();
+                    }
+                }
+            }
+
+            // ---- one round per active request (round-robin fairness) -----
+            let mut i = 0;
+            while i < active.len() {
+                let a = &mut active[i];
+                let step_result = match &mut a.stepper {
+                    AnyStepper::Ar(s) => {
+                        s.step(&self.target, &mut rng).map(|o| (o, s.out.len()))
+                    }
+                    AnyStepper::Spec(s) => {
+                        s.step(&self.target, &self.draft, &mut rng).map(|o| (o, s.out.len()))
+                    }
+                };
+                match step_result {
+                    Ok((outcome, out_len)) => {
+                        self.metrics.add(&self.metrics.decode_rounds, 1);
+                        if out_len > a.sent {
+                            if a.first_token_at.is_none() {
+                                let t = a.started.elapsed().as_secs_f64();
+                                a.first_token_at = Some(t);
+                                self.metrics.record_ttft(t);
+                            }
+                            let new: Vec<u32> = match &a.stepper {
+                                AnyStepper::Ar(s) => s.out[a.sent..].to_vec(),
+                                AnyStepper::Spec(s) => s.out[a.sent..].to_vec(),
+                            };
+                            self.metrics.add(&self.metrics.tokens_out, new.len() as u64);
+                            a.sent = out_len;
+                            let _ = a.req.resp.send(Event::Tokens(new));
+                        }
+                        if outcome == StepOutcome::Done {
+                            let stats = match &a.stepper {
+                                AnyStepper::Ar(s) => s.stats.clone(),
+                                AnyStepper::Spec(s) => s.stats.clone(),
+                            };
+                            self.metrics.add(&self.metrics.completed, 1);
+                            self.metrics
+                                .add(&self.metrics.draft_calls, stats.draft_calls as u64);
+                            self.metrics.record_latency(a.started.elapsed().as_secs_f64());
+                            let _ = a.req.resp.send(Event::Done(stats));
+                            active.swap_remove(i);
+                            batcher.release();
+                            continue; // don't advance i: swapped element takes this slot
+                        }
+                    }
+                    Err(e) => {
+                        self.metrics.add(&self.metrics.failed, 1);
+                        let _ = a.req.resp.send(Event::Error(e.to_string()));
+                        active.swap_remove(i);
+                        batcher.release();
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+        self.metrics
+    }
+}
+
+/// Spawn the engine on a dedicated thread; returns the submission handle
+/// and a handle resolving to the final metrics.
+pub fn spawn<T, D>(
+    engine: Engine<T, D>,
+) -> (mpsc::Sender<Request>, std::thread::JoinHandle<Arc<Metrics>>)
+where
+    T: Llm + Send + 'static,
+    D: Llm + Send + 'static,
+    T::Session: Send,
+    D::Session: Send,
+{
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || engine.run(rx));
+    (tx, handle)
+}
+
+/// Spawn an engine whose LMs are not `Send` (the PJRT model holds raw
+/// FFI handles): the constructor runs *inside* the engine thread, so the
+/// models never cross a thread boundary.
+pub fn spawn_with<F, T, D>(
+    make: F,
+) -> (mpsc::Sender<Request>, std::thread::JoinHandle<Result<Arc<Metrics>>>)
+where
+    F: FnOnce() -> Result<Engine<T, D>> + Send + 'static,
+    T: Llm + 'static,
+    D: Llm + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let engine = make()?;
+        Ok(engine.run(rx))
+    });
+    (tx, handle)
+}

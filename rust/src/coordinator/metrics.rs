@@ -1,0 +1,103 @@
+//! Serving metrics: counters + latency distributions.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub admitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub decode_rounds: AtomicU64,
+    pub draft_calls: AtomicU64,
+    /// End-to-end request latencies (seconds).
+    latencies: Mutex<Vec<f64>>,
+    /// Time-to-first-token latencies (seconds).
+    ttft: Mutex<Vec<f64>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub tokens_out: u64,
+    pub decode_rounds: u64,
+    pub draft_calls: u64,
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_p99: f64,
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl Metrics {
+    pub fn record_latency(&self, secs: f64) {
+        self.latencies.lock().unwrap().push(secs);
+    }
+
+    pub fn record_ttft(&self, secs: f64) {
+        self.ttft.lock().unwrap().push(secs);
+    }
+
+    pub fn add(&self, counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let mut lat = self.latencies.lock().unwrap().clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut ttft = self.ttft.lock().unwrap().clone();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Snapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            tokens_out: self.tokens_out.load(Ordering::Relaxed),
+            decode_rounds: self.decode_rounds.load(Ordering::Relaxed),
+            draft_calls: self.draft_calls.load(Ordering::Relaxed),
+            latency_p50: percentile(&lat, 0.50),
+            latency_p95: percentile(&lat, 0.95),
+            latency_p99: percentile(&lat, 0.99),
+            ttft_p50: percentile(&ttft, 0.50),
+            ttft_p95: percentile(&ttft, 0.95),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_over_known_samples() {
+        let m = Metrics::default();
+        for i in 1..=100 {
+            m.record_latency(i as f64);
+        }
+        let s = m.snapshot();
+        assert!((s.latency_p50 - 50.0).abs() <= 1.0);
+        assert!((s.latency_p95 - 95.0).abs() <= 1.0);
+        assert!((s.latency_p99 - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.add(&m.tokens_out, 5);
+        m.add(&m.tokens_out, 7);
+        assert_eq!(m.snapshot().tokens_out, 12);
+    }
+}

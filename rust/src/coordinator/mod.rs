@@ -1,0 +1,19 @@
+//! The serving coordinator (Layer 3): request admission, continuous
+//! batching at speculative-round granularity, per-request decode state,
+//! metrics, and the TCP front-end.
+//!
+//! Structure follows the vLLM router/engine split: [`batcher::Batcher`]
+//! owns the admission queue and fairness policy; [`engine::Engine`] owns
+//! the models and steps active sessions round-robin (one speculative
+//! round per turn, so a long request cannot starve others);
+//! [`server`] is a thin JSON-lines TCP front-end; [`metrics`] aggregates
+//! the serving statistics the benches report.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use engine::{Engine, Event, Request};
+pub use metrics::Metrics;

@@ -1,0 +1,184 @@
+//! JSON-lines TCP front-end over the engine (std::net, thread per
+//! connection — the offline build has no async runtime, and the engine
+//! core is synchronous anyway).
+//!
+//! Protocol: one request object per line:
+//!   {"prompt": "text", "max_tokens": 32, "decoder": "rsd-s:3x3"?,
+//!    "temperature": 0.3?, "top_p": 1.0?}
+//! Streamed responses, one object per line:
+//!   {"tokens": "generated fragment"}
+//!   {"done": {"generated": n, "block_efficiency": x, ...}}
+//!   {"error": "..."}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::config::SamplingConfig;
+use crate::tokenizer::Tokenizer;
+use crate::util::Json;
+
+use super::engine::{Event, Request};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Serve forever. `submit` feeds the engine thread.
+pub fn serve(addr: &str, submit: mpsc::Sender<Request>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("rsd: serving on {addr}");
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("rsd: accept error: {e}");
+                continue;
+            }
+        };
+        let submit = submit.clone();
+        std::thread::spawn(move || {
+            let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
+            if let Err(e) = handle_conn(stream, submit) {
+                eprintln!("rsd: connection {peer} ended: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn send_line(wr: &mut TcpStream, msg: &Json) -> Result<()> {
+    wr.write_all(msg.to_string().as_bytes())?;
+    wr.write_all(b"\n")?;
+    Ok(())
+}
+
+fn err_json(e: impl std::fmt::Display) -> Json {
+    Json::obj(vec![("error", Json::Str(e.to_string()))])
+}
+
+pub(crate) fn parse_wire_request(
+    line: &str,
+    tok: &Tokenizer,
+) -> Result<(Vec<u32>, usize, Option<crate::config::DecoderConfig>, Option<SamplingConfig>)> {
+    let j = Json::parse(line)?;
+    let prompt_text = j.str_field("prompt")?;
+    let prompt = tok.encode(prompt_text);
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let max_new = j.get("max_tokens").and_then(Json::as_usize).unwrap_or(64).min(192);
+    let decoder = match j.get("decoder").and_then(Json::as_str) {
+        Some(s) => Some(s.parse()?),
+        None => None,
+    };
+    let sampling = match (
+        j.get("temperature").and_then(Json::as_f64),
+        j.get("top_p").and_then(Json::as_f64),
+    ) {
+        (None, None) => None,
+        (t, p) => Some(SamplingConfig {
+            temperature: t.unwrap_or(0.3) as f32,
+            top_p: p.unwrap_or(1.0) as f32,
+        }),
+    };
+    Ok((prompt, max_new, decoder, sampling))
+}
+
+pub(crate) fn done_json(stats: &crate::decode::DecodeStats) -> Json {
+    Json::obj(vec![(
+        "done",
+        Json::obj(vec![
+            ("generated", stats.generated.into()),
+            ("block_efficiency", stats.block_efficiency().into()),
+            ("decode_calls", stats.decode_calls.into()),
+            ("draft_calls", stats.draft_calls.into()),
+            ("accepted", stats.accepted_draft_tokens.into()),
+            ("wall_secs", stats.wall.as_secs_f64().into()),
+        ]),
+    )])
+}
+
+fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>) -> Result<()> {
+    let mut wr = stream.try_clone()?;
+    let rd = BufReader::new(stream);
+    let tok = Tokenizer::new();
+    for line in rd.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (prompt, max_new, decoder, sampling) = match parse_wire_request(&line, &tok) {
+            Ok(x) => x,
+            Err(e) => {
+                send_line(&mut wr, &err_json(format!("bad request: {e}")))?;
+                continue;
+            }
+        };
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            prompt,
+            max_new,
+            decoder,
+            sampling,
+            resp: tx,
+        };
+        if submit.send(req).is_err() {
+            send_line(&mut wr, &err_json("engine stopped"))?;
+            return Ok(());
+        }
+        while let Ok(ev) = rx.recv() {
+            match ev {
+                Event::Tokens(ts) => {
+                    let msg = Json::obj(vec![("tokens", Json::Str(tok.decode(&ts)))]);
+                    send_line(&mut wr, &msg)?;
+                }
+                Event::Done(stats) => {
+                    send_line(&mut wr, &done_json(&stats))?;
+                    break;
+                }
+                Event::Error(e) => {
+                    send_line(&mut wr, &err_json(e))?;
+                    break;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_request_parses_full_form() {
+        let tok = Tokenizer::new();
+        let (prompt, max_new, dec, samp) = parse_wire_request(
+            r#"{"prompt": "hello", "max_tokens": 9, "decoder": "rsd-c:2-2", "temperature": 0.5}"#,
+            &tok,
+        )
+        .unwrap();
+        assert_eq!(prompt.len(), 5);
+        assert_eq!(max_new, 9);
+        assert_eq!(dec, Some(crate::config::DecoderConfig::RsdC { branches: vec![2, 2] }));
+        assert!((samp.unwrap().temperature - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wire_request_defaults() {
+        let tok = Tokenizer::new();
+        let (_, max_new, dec, samp) =
+            parse_wire_request(r#"{"prompt": "hi"}"#, &tok).unwrap();
+        assert_eq!(max_new, 64);
+        assert!(dec.is_none());
+        assert!(samp.is_none());
+    }
+
+    #[test]
+    fn wire_request_rejects_bad() {
+        let tok = Tokenizer::new();
+        assert!(parse_wire_request(r#"{"max_tokens": 2}"#, &tok).is_err());
+        assert!(parse_wire_request("not json", &tok).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Auto-regressive baseline: one target call per generated token.
+//! Resumable ([`ArStepper`]) so the coordinator can interleave AR
+//! requests with speculative ones.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::SamplingConfig;
+use crate::llm::{EvalNode, Llm};
+use crate::sampling::{process_logits, sample_categorical, LogProbs};
+use crate::util::Rng;
+
+use super::spec::StepOutcome;
+use super::{DecodeRun, DecodeStats};
+
+pub struct ArStepper<T: Llm> {
+    sampling: SamplingConfig,
+    sess: T::Session,
+    /// Distribution for the next token (None until prefill ran).
+    lp: Option<LogProbs>,
+    prompt: Vec<u32>,
+    pub out: Vec<u32>,
+    pub stats: DecodeStats,
+    max_new: usize,
+    started: Instant,
+    done: bool,
+}
+
+impl<T: Llm> ArStepper<T> {
+    pub fn new(
+        target: &T,
+        sampling: SamplingConfig,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Self> {
+        if prompt.is_empty() {
+            bail!("prompt must be non-empty");
+        }
+        Ok(Self {
+            sampling,
+            sess: target.begin()?,
+            lp: None,
+            prompt: prompt.to_vec(),
+            out: Vec::new(),
+            stats: DecodeStats::default(),
+            max_new,
+            started: Instant::now(),
+            done: false,
+        })
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn finish(&mut self) -> StepOutcome {
+        self.stats.generated = self.out.len();
+        self.stats.wall = self.started.elapsed();
+        self.done = true;
+        StepOutcome::Done
+    }
+
+    /// One iteration: sample from the current distribution and (unless
+    /// finished) evaluate the sampled token to obtain the next one.
+    pub fn step(&mut self, target: &T, rng: &mut Rng) -> Result<StepOutcome> {
+        if self.done {
+            return Ok(StepOutcome::Done);
+        }
+        if self.lp.is_none() {
+            // prefill round
+            let nodes: Vec<EvalNode> = self
+                .prompt
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| {
+                    if i == 0 {
+                        EvalNode::root(t)
+                    } else {
+                        EvalNode::child(t, i - 1)
+                    }
+                })
+                .collect();
+            let rows = target.eval(&mut self.sess, &nodes)?;
+            self.stats.decode_calls += 1;
+            let chain: Vec<usize> = (0..self.prompt.len()).collect();
+            target.commit(&mut self.sess, &chain)?;
+            self.lp = Some(process_logits(
+                rows.last().unwrap(),
+                self.sampling.temperature,
+                self.sampling.top_p,
+            ));
+        }
+        let token =
+            sample_categorical(&self.lp.as_ref().unwrap().probs(), rng) as u32;
+        self.out.push(token);
+        if self.out.len() >= self.max_new || target.capacity_left(&self.sess) < 2 {
+            return Ok(self.finish());
+        }
+        let rows = target.eval(&mut self.sess, &[EvalNode::root(token)])?;
+        self.stats.decode_calls += 1;
+        target.commit(&mut self.sess, &[0])?;
+        self.lp = Some(process_logits(
+            &rows[0],
+            self.sampling.temperature,
+            self.sampling.top_p,
+        ));
+        Ok(StepOutcome::Progress)
+    }
+}
+
+pub fn run_ar<T: Llm>(
+    target: &T,
+    sampling: &SamplingConfig,
+    prompt: &[u32],
+    max_new: usize,
+    rng: &mut Rng,
+) -> Result<DecodeRun> {
+    let mut stepper = ArStepper::new(target, *sampling, prompt, max_new)?;
+    while stepper.step(target, rng)? == StepOutcome::Progress {}
+    Ok(DecodeRun { tokens: stepper.out.clone(), stats: stepper.stats.clone() })
+}

@@ -1,0 +1,229 @@
+//! Decoding algorithms: the paper's RSD-C and RSD-S plus every baseline
+//! it evaluates against (AR, SD, SpecTr K-SEQ) and the SpecInfer-style
+//! multi-round rule used in Figure 1.
+//!
+//! All decoders are generic over [`crate::llm::Llm`], so they run
+//! unchanged on the AOT-compiled PJRT model and on the analytic sim.
+
+pub mod ar;
+pub mod rrs;
+pub mod spec;
+pub mod strategies;
+pub mod toy;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::{DecoderConfig, SamplingConfig};
+use crate::llm::Llm;
+use crate::util::Rng;
+
+use rrs::{KSeq, MultiRound, Rrs};
+use strategies::{Chain, GumbelTopK, IidPaths, StochasticBeam};
+
+/// Counters for one decode run.
+#[derive(Debug, Clone, Default)]
+pub struct DecodeStats {
+    /// Target-model iterations (block-efficiency denominator; the prompt
+    /// pass counts as the first iteration, as in the paper).
+    pub decode_calls: usize,
+    /// Draft-model invocations.
+    pub draft_calls: usize,
+    /// Total draft-tree nodes processed by the target (actual budget).
+    pub tree_nodes: usize,
+    /// Draft tokens accepted by verification.
+    pub accepted_draft_tokens: usize,
+    /// Rounds where the walk exited the tree (all levels accepted).
+    pub bonus_tokens: usize,
+    pub generated: usize,
+    pub wall: Duration,
+}
+
+impl DecodeStats {
+    /// Block efficiency η (Leviathan et al.): tokens per target call.
+    pub fn block_efficiency(&self) -> f64 {
+        if self.decode_calls == 0 {
+            return 0.0;
+        }
+        self.generated as f64 / self.decode_calls as f64
+    }
+
+    /// Memory-Bound Speed-Up (App. C.2): η / (L·r + 1) with r the
+    /// draft/target size ratio and L the draft depth.
+    pub fn mbsu(&self, depth: usize, draft_params: usize, target_params: usize) -> f64 {
+        let r = draft_params as f64 / target_params as f64;
+        self.block_efficiency() / (depth as f64 * r + 1.0)
+    }
+
+    /// Measured tokens per second.
+    pub fn token_rate(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.generated as f64 / self.wall.as_secs_f64()
+    }
+}
+
+/// Result of one decode run.
+#[derive(Debug, Clone)]
+pub struct DecodeRun {
+    pub tokens: Vec<u32>,
+    pub stats: DecodeStats,
+}
+
+/// Run `decoder` on (target, draft) for `prompt`, generating up to
+/// `max_new` tokens. The single entry point used by the engine, the
+/// benches and the examples.
+pub fn generate<T: Llm, D: Llm>(
+    decoder: &DecoderConfig,
+    sampling: &SamplingConfig,
+    target: &T,
+    draft: &D,
+    prompt: &[u32],
+    max_new: usize,
+    rng: &mut Rng,
+) -> Result<DecodeRun> {
+    match decoder {
+        DecoderConfig::Ar => ar::run_ar(target, sampling, prompt, max_new, rng),
+        _ => {
+            let (strategy, rule) = build_parts(decoder);
+            spec::run_spec(target, draft, strategy, rule, sampling, prompt, max_new, rng)
+        }
+    }
+}
+
+/// Instantiate the (strategy, rule) pair for a tree-based decoder config.
+/// Panics on `Ar` (which has no tree).
+pub fn build_parts(
+    decoder: &DecoderConfig,
+) -> (Box<dyn spec::TreeStrategy>, Box<dyn rrs::VerifyRule>) {
+    match decoder {
+        DecoderConfig::Ar => unreachable!("AR has no tree strategy"),
+        DecoderConfig::Sd { l } => (Box::new(Chain { depth: *l }), Box::new(Rrs)),
+        DecoderConfig::SpecTr { k, l } => {
+            (Box::new(IidPaths { k: *k, depth: *l }), Box::new(KSeq { gamma: None }))
+        }
+        DecoderConfig::RsdC { branches } => {
+            (Box::new(GumbelTopK { branches: branches.clone() }), Box::new(Rrs))
+        }
+        DecoderConfig::RsdCMultiRound { branches } => {
+            (Box::new(GumbelTopK { branches: branches.clone() }), Box::new(MultiRound))
+        }
+        DecoderConfig::RsdS { w, l } => (Box::new(StochasticBeam::new(*w, *l)), Box::new(Rrs)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimLm;
+
+    fn all_decoders() -> Vec<DecoderConfig> {
+        vec![
+            DecoderConfig::Ar,
+            DecoderConfig::Sd { l: 3 },
+            DecoderConfig::SpecTr { k: 3, l: 3 },
+            DecoderConfig::RsdC { branches: vec![2, 2, 1] },
+            DecoderConfig::RsdS { w: 3, l: 3 },
+        ]
+    }
+
+    #[test]
+    fn every_decoder_generates_exactly_max_new() {
+        let (target, draft) = SimLm::pair(3, 0.7, 48);
+        let mut rng = Rng::seed_from_u64(0);
+        let sampling = SamplingConfig::default();
+        for cfg in all_decoders() {
+            let run =
+                generate(&cfg, &sampling, &target, &draft, &[1, 2, 3], 24, &mut rng).unwrap();
+            assert_eq!(run.tokens.len(), 24, "{cfg:?}");
+            assert_eq!(run.stats.generated, 24);
+            assert!(run.tokens.iter().all(|&t| t < 48));
+        }
+    }
+
+    #[test]
+    fn spec_decoders_beat_ar_block_efficiency_when_aligned() {
+        let (target, draft) = SimLm::pair(5, 0.97, 48);
+        let mut rng = Rng::seed_from_u64(1);
+        let sampling = SamplingConfig { temperature: 0.5, top_p: 1.0 };
+        for cfg in all_decoders().into_iter().skip(1) {
+            let run =
+                generate(&cfg, &sampling, &target, &draft, &[7, 8], 64, &mut rng).unwrap();
+            assert!(
+                run.stats.block_efficiency() > 1.3,
+                "{cfg:?}: eff {}",
+                run.stats.block_efficiency()
+            );
+        }
+    }
+
+    #[test]
+    fn rsd_s_beats_sd_on_efficiency_misaligned() {
+        // high discrepancy: the without-replacement tree must help
+        let (target, draft) = SimLm::pair(9, 0.4, 48);
+        let sampling = SamplingConfig { temperature: 0.7, top_p: 1.0 };
+        let mut eff_sd = 0.0;
+        let mut eff_rsds = 0.0;
+        for seed in 0..8 {
+            let mut rng = Rng::seed_from_u64(seed);
+            eff_sd += generate(
+                &DecoderConfig::Sd { l: 3 },
+                &sampling,
+                &target,
+                &draft,
+                &[1],
+                64,
+                &mut rng,
+            )
+            .unwrap()
+            .stats
+            .block_efficiency();
+            let mut rng = Rng::seed_from_u64(seed);
+            eff_rsds += generate(
+                &DecoderConfig::RsdS { w: 4, l: 3 },
+                &sampling,
+                &target,
+                &draft,
+                &[1],
+                64,
+                &mut rng,
+            )
+            .unwrap()
+            .stats
+            .block_efficiency();
+        }
+        assert!(eff_rsds > eff_sd, "RSD-S {eff_rsds} vs SD {eff_sd}");
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let (target, draft) = SimLm::pair(2, 0.8, 32);
+        let mut rng = Rng::seed_from_u64(4);
+        let run = generate(
+            &DecoderConfig::RsdC { branches: vec![2, 2] },
+            &SamplingConfig::default(),
+            &target,
+            &draft,
+            &[3, 4, 5],
+            40,
+            &mut rng,
+        )
+        .unwrap();
+        let s = &run.stats;
+        assert!(s.decode_calls > 0);
+        assert!(s.tree_nodes >= s.decode_calls * 2); // budget 6 per round... >= 2
+        assert!(s.accepted_draft_tokens + s.decode_calls >= s.generated);
+        assert!(s.block_efficiency() >= 1.0);
+    }
+
+    #[test]
+    fn mbsu_normalizes_like_paper() {
+        let mut s = DecodeStats { decode_calls: 10, generated: 25, ..Default::default() };
+        s.accepted_draft_tokens = 15;
+        // eff 2.5, r = 0.05, L = 4 -> mbsu = 2.5 / 1.2
+        let m = s.mbsu(4, 50, 1000);
+        assert!((m - 2.5 / 1.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,420 @@
+//! Shared machinery for all tree-based speculative decoders: the round
+//! stepper (draft -> parallel target evaluation -> verification ->
+//! zero-copy KV commit), the draft-tree bookkeeping, and the verification
+//! walk.
+//!
+//! A decoder = a [`TreeStrategy`] (how the draft tree is grown: chain,
+//! i.i.d. paths, Gumbel-Top-k, Stochastic Beam Search) + a
+//! [`VerifyRule`](super::rrs::VerifyRule) (how a sibling set is accepted:
+//! RRS, K-SEQ, multi-round). This mirrors the paper's structure: Figure 2
+//! is [`SpecStepper::step`], Alg. 3/8 are strategies, Alg. 6 is the rule.
+//!
+//! Decoding is *resumable at round granularity* ([`SpecStepper`]), which
+//! is what lets the coordinator interleave many requests over one model
+//! (continuous batching at the iteration level, vLLM-style).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::SamplingConfig;
+use crate::llm::{EvalNode, Llm};
+use crate::sampling::{process_logits, sample_categorical, LogProbs};
+use crate::util::Rng;
+
+use super::rrs::{LevelOutcome, VerifyRule};
+use super::{DecodeRun, DecodeStats};
+
+/// One draft-tree node.
+#[derive(Debug, Clone)]
+pub struct TreeNode {
+    pub token: u32,
+    /// Parent node id; `None` = the round's root context.
+    pub parent: Option<usize>,
+    pub level: usize,
+    /// Multiplicity: how many i.i.d. draft paths merged into this node
+    /// (only > 1 for SpecTr's trie merge).
+    pub mult: usize,
+    /// Index in the draft session's pending list (None for leaf levels,
+    /// which are never evaluated by the draft model).
+    pub draft_pending: Option<usize>,
+    /// Processed draft distribution AT this node (context ending here).
+    pub draft_lp: Option<LogProbs>,
+}
+
+/// The draft-token tree of one round.
+#[derive(Debug)]
+pub struct DraftTree {
+    pub nodes: Vec<TreeNode>,
+    /// Node ids per level, construction order (= verification order).
+    pub levels: Vec<Vec<usize>>,
+    /// Processed draft distribution at the root context.
+    pub root_draft_lp: LogProbs,
+}
+
+impl DraftTree {
+    /// Ordered children of `parent` at `level`, expanded by multiplicity:
+    /// (node_id, token) per draft path.
+    pub fn sibling_candidates(&self, level: usize, parent: Option<usize>) -> Vec<(usize, u32)> {
+        let mut out = Vec::new();
+        if level >= self.levels.len() {
+            return out;
+        }
+        for &id in &self.levels[level] {
+            let n = &self.nodes[id];
+            if n.parent == parent {
+                for _ in 0..n.mult {
+                    out.push((id, n.token));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A child proposed by a strategy during level expansion.
+#[derive(Debug, Clone, Copy)]
+pub struct Child {
+    pub parent: Option<usize>,
+    pub token: u32,
+}
+
+/// How the draft-token tree is grown, level by level. Object-safe so the
+/// coordinator can hold heterogeneous deciders.
+pub trait TreeStrategy: Send {
+    fn depth(&self) -> usize;
+
+    /// Upper bound on tree nodes per round (the target budget).
+    fn max_nodes(&self) -> usize;
+
+    /// Reset per-round state.
+    fn begin_round(&mut self);
+
+    /// Propose children for `level` (0-based). Parents must be nodes of
+    /// `level - 1` (or `None` = root for level 0). The returned order is
+    /// the *verification order* (e.g. decreasing perturbed log-prob for
+    /// sampling without replacement).
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child>;
+
+    /// Post-creation hook: `node_ids[i]` is the id of the i-th *distinct*
+    /// created node, in construction order (duplicates merged for
+    /// i.i.d. strategies; without-replacement strategies never merge).
+    fn on_created(&mut self, _tree: &DraftTree, _level: usize, _node_ids: &[usize]) {}
+}
+
+/// Walk result of [`verify_tree`].
+#[derive(Debug)]
+pub struct VerifyResult {
+    /// Accepted node ids, root-ward order.
+    pub accepted: Vec<usize>,
+    /// The round's final token: residual sample on rejection, or a bonus
+    /// token from the target distribution when the walk exits the tree.
+    pub final_token: u32,
+    pub bonus: bool,
+}
+
+/// Verify a draft tree level by level (paper §3.2.2): at each level run
+/// the rule over the accepted parent's ordered children; on rejection the
+/// rule's residual sample ends the round; if the walk leaves the tree a
+/// bonus token is drawn from the target distribution at the last accepted
+/// context.
+pub fn verify_tree(
+    tree: &DraftTree,
+    rule: &dyn VerifyRule,
+    root_target_lp: &LogProbs,
+    node_target_lp: &[LogProbs],
+    rng: &mut Rng,
+) -> VerifyResult {
+    let mut cur: Option<usize> = None;
+    let mut accepted = Vec::new();
+    for level in 0..tree.levels.len() {
+        let cands = tree.sibling_candidates(level, cur);
+        if cands.is_empty() {
+            break; // branch truncated (RSD-S early truncation)
+        }
+        let tokens: Vec<u32> = cands.iter().map(|&(_, t)| t).collect();
+        let draft_lp = match cur {
+            None => &tree.root_draft_lp,
+            Some(id) => tree.nodes[id]
+                .draft_lp
+                .as_ref()
+                .expect("non-leaf parent must carry a draft distribution"),
+        };
+        let target_lp = match cur {
+            None => root_target_lp,
+            Some(id) => &node_target_lp[id],
+        };
+        match rule.verify(&tokens, draft_lp, target_lp, rng) {
+            LevelOutcome::Accept { pos } => {
+                let id = cands[pos].0;
+                accepted.push(id);
+                cur = Some(id);
+            }
+            LevelOutcome::Reject { token } => {
+                return VerifyResult { accepted, final_token: token, bonus: false };
+            }
+        }
+    }
+    // all levels accepted (or branch ended): bonus token from q(.|cur)
+    let lp = match cur {
+        None => root_target_lp,
+        Some(id) => &node_target_lp[id],
+    };
+    let token = sample_categorical(&lp.probs(), rng) as u32;
+    VerifyResult { accepted, final_token: token, bonus: true }
+}
+
+fn chain_nodes(tokens: &[u32]) -> Vec<EvalNode> {
+    tokens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            if i == 0 {
+                EvalNode::root(t)
+            } else {
+                EvalNode { token: t, parent: i as i64 - 1 }
+            }
+        })
+        .collect()
+}
+
+/// What one [`SpecStepper::step`] produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// Round completed, generation continues.
+    Progress,
+    /// Request finished (max tokens reached or capacity exhausted).
+    Done,
+}
+
+/// Resumable speculative decoding session over a (target, draft) pair.
+pub struct SpecStepper<T: Llm, D: Llm> {
+    strategy: Box<dyn TreeStrategy>,
+    rule: Box<dyn VerifyRule>,
+    sampling: SamplingConfig,
+    dsess: D::Session,
+    tsess: T::Session,
+    /// Tokens of the logical sequence not yet in the draft's KV cache
+    /// (leaf-level accepts are never draft-evaluated + the final token).
+    tail_draft: Vec<u32>,
+    /// Tokens not yet in the target's KV cache (only the final token of
+    /// the previous round; the whole prompt on round 1).
+    tail_target: Vec<u32>,
+    pub out: Vec<u32>,
+    pub stats: DecodeStats,
+    max_new: usize,
+    started: Instant,
+    done: bool,
+}
+
+impl<T: Llm, D: Llm> SpecStepper<T, D> {
+    pub fn new(
+        target: &T,
+        draft: &D,
+        strategy: Box<dyn TreeStrategy>,
+        rule: Box<dyn VerifyRule>,
+        sampling: SamplingConfig,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Self> {
+        if prompt.is_empty() {
+            bail!("prompt must be non-empty");
+        }
+        Ok(Self {
+            strategy,
+            rule,
+            sampling,
+            dsess: draft.begin()?,
+            tsess: target.begin()?,
+            tail_draft: prompt.to_vec(),
+            tail_target: prompt.to_vec(),
+            out: Vec::new(),
+            stats: DecodeStats::default(),
+            max_new,
+            started: Instant::now(),
+            done: false,
+        })
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn finish(&mut self) -> StepOutcome {
+        self.out.truncate(self.max_new);
+        self.stats.generated = self.out.len();
+        self.stats.wall = self.started.elapsed();
+        self.done = true;
+        StepOutcome::Done
+    }
+
+    /// Run one speculative round (Figure 2 of the paper).
+    pub fn step(&mut self, target: &T, draft: &D, rng: &mut Rng) -> Result<StepOutcome> {
+        if self.done {
+            return Ok(StepOutcome::Done);
+        }
+        if self.out.len() >= self.max_new {
+            return Ok(self.finish());
+        }
+        let depth = self.strategy.depth();
+        // capacity guard: tail + a full tree + bonus token
+        let need = self.tail_draft.len().max(self.tail_target.len())
+            + self.strategy.max_nodes()
+            + 2;
+        if target.capacity_left(&self.tsess) < need || draft.capacity_left(&self.dsess) < need {
+            return Ok(self.finish());
+        }
+        let sampling = self.sampling;
+        let dtail_len = self.tail_draft.len();
+
+        // ---- draft phase -------------------------------------------------
+        let tail_nodes = chain_nodes(&self.tail_draft);
+        let drows = draft.eval(&mut self.dsess, &tail_nodes)?;
+        self.stats.draft_calls += 1;
+        let root_draft_lp = process_logits(
+            drows.last().expect("tail non-empty"),
+            sampling.temperature,
+            sampling.top_p,
+        );
+        let mut tree = DraftTree { nodes: Vec::new(), levels: Vec::new(), root_draft_lp };
+        self.strategy.begin_round();
+        let mut draft_pending_count = dtail_len;
+        for level in 0..depth {
+            let children = self.strategy.expand(&tree, level, rng);
+            if children.is_empty() {
+                break;
+            }
+            // merge duplicates (same parent + token): i.i.d. strategies
+            // produce them; without-replacement strategies cannot.
+            let mut created: Vec<usize> = Vec::new();
+            for c in &children {
+                if let Some(&id) = created.iter().find(|&&id| {
+                    tree.nodes[id].parent == c.parent && tree.nodes[id].token == c.token
+                }) {
+                    tree.nodes[id].mult += 1;
+                    continue;
+                }
+                let id = tree.nodes.len();
+                tree.nodes.push(TreeNode {
+                    token: c.token,
+                    parent: c.parent,
+                    level,
+                    mult: 1,
+                    draft_pending: None,
+                    draft_lp: None,
+                });
+                created.push(id);
+            }
+            tree.levels.push(created.clone());
+            self.strategy.on_created(&tree, level, &created);
+
+            // evaluate this level with the draft model unless it is the
+            // leaf level (leaf distributions are never used for drafting).
+            if level + 1 < depth {
+                let nodes: Vec<EvalNode> = created
+                    .iter()
+                    .map(|&id| {
+                        let parent_pending = match tree.nodes[id].parent {
+                            None => dtail_len as i64 - 1,
+                            Some(p) => tree.nodes[p]
+                                .draft_pending
+                                .expect("parent evaluated at previous level")
+                                as i64,
+                        };
+                        EvalNode { token: tree.nodes[id].token, parent: parent_pending }
+                    })
+                    .collect();
+                let rows = draft.eval(&mut self.dsess, &nodes)?;
+                self.stats.draft_calls += 1;
+                for (i, &id) in created.iter().enumerate() {
+                    tree.nodes[id].draft_pending = Some(draft_pending_count + i);
+                    tree.nodes[id].draft_lp =
+                        Some(process_logits(&rows[i], sampling.temperature, sampling.top_p));
+                }
+                draft_pending_count += created.len();
+            }
+        }
+
+        // ---- target phase: tail + whole tree in one parallel pass --------
+        let ttail_len = self.tail_target.len();
+        let mut tnodes = chain_nodes(&self.tail_target);
+        for (id, n) in tree.nodes.iter().enumerate() {
+            let parent = match n.parent {
+                None => (ttail_len - 1) as i64,
+                Some(p) => (ttail_len + p) as i64,
+            };
+            debug_assert_eq!(id + ttail_len, tnodes.len());
+            tnodes.push(EvalNode { token: n.token, parent });
+        }
+        let trows = target.eval(&mut self.tsess, &tnodes)?;
+        self.stats.decode_calls += 1;
+        self.stats.tree_nodes += tree.nodes.len();
+        let root_target_lp =
+            process_logits(&trows[ttail_len - 1], sampling.temperature, sampling.top_p);
+        let node_target_lp: Vec<LogProbs> = trows[ttail_len..]
+            .iter()
+            .map(|r| process_logits(r, sampling.temperature, sampling.top_p))
+            .collect();
+
+        // ---- verification (recursive rejection sampling per level) -------
+        let vr = verify_tree(&tree, self.rule.as_ref(), &root_target_lp, &node_target_lp, rng);
+        self.stats.accepted_draft_tokens += vr.accepted.len();
+        if vr.bonus {
+            self.stats.bonus_tokens += 1;
+        }
+
+        // ---- zero-copy KV commit (FilterKVCache) --------------------------
+        let mut tchain: Vec<usize> = (0..ttail_len).collect();
+        tchain.extend(vr.accepted.iter().map(|&id| ttail_len + id));
+        target.commit(&mut self.tsess, &tchain)?;
+
+        let mut dchain: Vec<usize> = (0..dtail_len).collect();
+        let mut uncached: Vec<u32> = Vec::new();
+        for &id in &vr.accepted {
+            match tree.nodes[id].draft_pending {
+                Some(p) if uncached.is_empty() => dchain.push(p),
+                _ => uncached.push(tree.nodes[id].token),
+            }
+        }
+        draft.commit(&mut self.dsess, &dchain)?;
+
+        // ---- emit tokens ---------------------------------------------------
+        for &id in &vr.accepted {
+            self.out.push(tree.nodes[id].token);
+        }
+        self.out.push(vr.final_token);
+        // next round's per-session tails: the target already holds every
+        // accepted node's KV (only the final token is new to it); the
+        // draft additionally misses leaf-level accepts it never evaluated.
+        uncached.push(vr.final_token);
+        self.tail_draft = uncached;
+        self.tail_target = vec![vr.final_token];
+
+        if self.out.len() >= self.max_new {
+            return Ok(self.finish());
+        }
+        Ok(StepOutcome::Progress)
+    }
+}
+
+/// The full decoding loop shared by SD / SpecTr / RSD-C / RSD-S.
+#[allow(clippy::too_many_arguments)]
+pub fn run_spec<T, D>(
+    target: &T,
+    draft: &D,
+    strategy: Box<dyn TreeStrategy>,
+    rule: Box<dyn VerifyRule>,
+    sampling: &SamplingConfig,
+    prompt: &[u32],
+    max_new: usize,
+    rng: &mut Rng,
+) -> Result<DecodeRun>
+where
+    T: Llm,
+    D: Llm,
+{
+    let mut stepper =
+        SpecStepper::new(target, draft, strategy, rule, *sampling, prompt, max_new)?;
+    while stepper.step(target, draft, rng)? == StepOutcome::Progress {}
+    Ok(DecodeRun { tokens: stepper.out.clone(), stats: stepper.stats.clone() })
+}

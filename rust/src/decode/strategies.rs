@@ -1,0 +1,287 @@
+//! Draft-tree construction strategies: one per decoding algorithm.
+//!
+//! * [`Chain`] — single sampled path (classic speculative decoding).
+//! * [`IidPaths`] — K i.i.d. draft paths merged into a trie (SpecTr).
+//! * [`GumbelTopK`] — RSD-C: per-parent Gumbel-Top-b sampling *without
+//!   replacement* (paper Alg. 3/4).
+//! * [`StochasticBeam`] — RSD-S: Stochastic Beam Search over sequences
+//!   (paper Alg. 8/9, Kool et al. 2019), which samples *sequences*
+//!   without replacement and early-truncates unlikely branches.
+
+
+use crate::sampling::{gumbel, gumbel_top_k, sample_categorical, truncated_gumbel, LogProbs, NEG_INF};
+use crate::util::Rng;
+
+use super::spec::{Child, DraftTree, TreeStrategy};
+
+fn parent_lp<'t>(tree: &'t DraftTree, parent: Option<usize>) -> &'t LogProbs {
+    match parent {
+        None => &tree.root_draft_lp,
+        Some(p) => tree.nodes[p].draft_lp.as_ref().expect("parent evaluated"),
+    }
+}
+
+/// Classic SD: one sampled token per level.
+pub struct Chain {
+    pub depth: usize,
+}
+
+impl TreeStrategy for Chain {
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn max_nodes(&self) -> usize {
+        self.depth
+    }
+
+    fn begin_round(&mut self) {}
+
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
+        let parent = if level == 0 { None } else { Some(*tree.levels[level - 1].last().unwrap()) };
+        let lp = parent_lp(tree, parent);
+        let token = sample_categorical(&lp.probs(), rng) as u32;
+        vec![Child { parent, token }]
+    }
+}
+
+/// SpecTr: K i.i.d. draft paths. Duplicate (parent, token) pairs merge
+/// into trie nodes carrying multiplicity; a node with multiplicity m
+/// spawns m i.i.d. children at the next level.
+pub struct IidPaths {
+    pub k: usize,
+    pub depth: usize,
+}
+
+impl TreeStrategy for IidPaths {
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn max_nodes(&self) -> usize {
+        self.k * self.depth
+    }
+
+    fn begin_round(&mut self) {}
+
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
+        let mut out = Vec::new();
+        if level == 0 {
+            let probs = tree.root_draft_lp.probs();
+            for _ in 0..self.k {
+                out.push(Child { parent: None, token: sample_categorical(&probs, rng) as u32 });
+            }
+        } else {
+            for &id in &tree.levels[level - 1] {
+                let probs = parent_lp(tree, Some(id)).probs();
+                for _ in 0..tree.nodes[id].mult {
+                    out.push(Child {
+                        parent: Some(id),
+                        token: sample_categorical(&probs, rng) as u32,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// RSD-C: constant branching factors b = (b_0, .., b_{L-1}); each parent
+/// draws its b_l children via the Gumbel-Top-k trick — sampling without
+/// replacement, returned in decreasing perturbed-log-prob order (the
+/// verification order required by recursive rejection sampling).
+pub struct GumbelTopK {
+    pub branches: Vec<usize>,
+}
+
+impl TreeStrategy for GumbelTopK {
+    fn depth(&self) -> usize {
+        self.branches.len()
+    }
+
+    fn max_nodes(&self) -> usize {
+        let mut n = 1;
+        let mut total = 0;
+        for &b in &self.branches {
+            n *= b;
+            total += n;
+        }
+        total
+    }
+
+    fn begin_round(&mut self) {}
+
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
+        let b = self.branches[level];
+        let parents: Vec<Option<usize>> = if level == 0 {
+            vec![None]
+        } else {
+            tree.levels[level - 1].iter().map(|&id| Some(id)).collect()
+        };
+        let mut out = Vec::new();
+        for parent in parents {
+            let lp = parent_lp(tree, parent);
+            for (idx, _) in gumbel_top_k(lp, b, rng) {
+                out.push(Child { parent, token: idx as u32 });
+            }
+        }
+        out
+    }
+}
+
+/// RSD-S: Stochastic Beam Search with beamwidth W. Maintains per-node
+/// cumulative sequence log-probs φ and truncated perturbed values ψ
+/// (paper eq. 10-12); each level keeps the global top-W (parent, token)
+/// pairs by ψ, which is equivalent to sampling the top-W length-(l+1)
+/// sequences without replacement (Kool et al. 2019) and early-truncates
+/// branches whose continuation mass collapsed.
+pub struct StochasticBeam {
+    pub w: usize,
+    pub depth: usize,
+    /// φ, ψ per created node id.
+    state: Vec<(f64, f64)>,
+    /// (φ, ψ) of the candidates proposed by the last `expand`, in the
+    /// same order, consumed by `on_created`.
+    staged: Vec<(f64, f64)>,
+}
+
+impl StochasticBeam {
+    pub fn new(w: usize, depth: usize) -> Self {
+        Self { w, depth, state: Vec::new(), staged: Vec::new() }
+    }
+}
+
+impl TreeStrategy for StochasticBeam {
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn max_nodes(&self) -> usize {
+        self.w * self.depth
+    }
+
+    fn begin_round(&mut self) {
+        self.state.clear();
+        self.staged.clear();
+    }
+
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
+        // beam = previous level's nodes (or the root)
+        let beam: Vec<(Option<usize>, f64, f64)> = if level == 0 {
+            vec![(None, 0.0, 0.0)] // φ_{-1} = ψ_{-1} = 0 (paper footnote 1)
+        } else {
+            tree.levels[level - 1]
+                .iter()
+                .map(|&id| {
+                    let (phi, psi) = self.state[id];
+                    (Some(id), phi, psi)
+                })
+                .collect()
+        };
+
+        // candidates across the whole beam: (parent, token, φ_child, ψ_child)
+        let mut cands: Vec<(Option<usize>, u32, f64, f64)> = Vec::new();
+        for (parent, phi_p, psi_p) in beam {
+            let lp = parent_lp(tree, parent);
+            let phi_child: Vec<f64> =
+                lp.0.iter().map(|&l| if l == NEG_INF { NEG_INF } else { phi_p + l }).collect();
+            let phi_tilde: Vec<f64> = phi_child
+                .iter()
+                .map(|&f| if f == NEG_INF { NEG_INF } else { f + gumbel(rng) })
+                .collect();
+            let z = phi_tilde.iter().cloned().fold(NEG_INF, f64::max);
+            let psi = truncated_gumbel(psi_p, z, &phi_tilde);
+            for (x, (&f, &s)) in phi_child.iter().zip(&psi).enumerate() {
+                if f != NEG_INF && s != NEG_INF {
+                    cands.push((parent, x as u32, f, s));
+                }
+            }
+        }
+        // global top-W by ψ, decreasing (= verification order)
+        cands.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
+        cands.truncate(self.w);
+        self.staged = cands.iter().map(|&(_, _, f, s)| (f, s)).collect();
+        cands
+            .into_iter()
+            .map(|(parent, token, _, _)| Child { parent, token })
+            .collect()
+    }
+
+    fn on_created(&mut self, _tree: &DraftTree, _level: usize, node_ids: &[usize]) {
+        // without-replacement candidates never merge: 1:1 with staged
+        debug_assert_eq!(node_ids.len(), self.staged.len());
+        for (&id, &st) in node_ids.iter().zip(&self.staged) {
+            if self.state.len() <= id {
+                self.state.resize(id + 1, (0.0, 0.0));
+            }
+            self.state[id] = st;
+        }
+        self.staged.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::process_logits;
+
+    fn tree_with_root(logits: &[f32]) -> DraftTree {
+        DraftTree {
+            nodes: Vec::new(),
+            levels: Vec::new(),
+            root_draft_lp: process_logits(logits, 1.0, 1.0),
+        }
+    }
+
+    #[test]
+    fn chain_proposes_single_path() {
+        let t = tree_with_root(&[0.0, 1.0, 2.0]);
+        let mut s = Chain { depth: 3 };
+        let mut rng = Rng::seed_from_u64(0);
+        let c = s.expand(&t, 0, &mut rng);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].parent, None);
+    }
+
+    #[test]
+    fn gumbel_topk_children_distinct_per_parent() {
+        let t = tree_with_root(&[0.0, 0.5, 1.0, 1.5]);
+        let mut s = GumbelTopK { branches: vec![3] };
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..100 {
+            let c = s.expand(&t, 0, &mut rng);
+            assert_eq!(c.len(), 3);
+            let mut toks: Vec<u32> = c.iter().map(|x| x.token).collect();
+            toks.sort();
+            toks.dedup();
+            assert_eq!(toks.len(), 3, "without replacement => distinct");
+        }
+    }
+
+    #[test]
+    fn stochastic_beam_keeps_w_and_orders_by_psi() {
+        let t = tree_with_root(&[0.1, 0.9, 0.3, 0.7, 0.5]);
+        let mut s = StochasticBeam::new(3, 2);
+        s.begin_round();
+        let mut rng = Rng::seed_from_u64(2);
+        let c = s.expand(&t, 0, &mut rng);
+        assert_eq!(c.len(), 3);
+        // staged psi decreasing
+        assert!(s.staged.windows(2).all(|w| w[0].1 >= w[1].1));
+        // all from root
+        assert!(c.iter().all(|x| x.parent.is_none()));
+        // distinct tokens (without replacement at the root)
+        let mut toks: Vec<u32> = c.iter().map(|x| x.token).collect();
+        toks.sort();
+        toks.dedup();
+        assert_eq!(toks.len(), 3);
+    }
+
+    #[test]
+    fn max_nodes_matches_budget_definitions() {
+        assert_eq!(Chain { depth: 4 }.max_nodes(), 4);
+        assert_eq!(IidPaths { k: 3, depth: 7 }.max_nodes(), 21);
+        assert_eq!(GumbelTopK { branches: vec![2, 2, 2] }.max_nodes(), 14);
+        assert_eq!(StochasticBeam::new(6, 5).max_nodes(), 30);
+    }
+}

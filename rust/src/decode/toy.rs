@@ -1,0 +1,235 @@
+//! The didactic Bernoulli example of the paper's Figure 1: acceptance
+//! rates of multi-round rejection sampling, K-SEQ, OTM and recursive
+//! rejection sampling when draft = Ber(p), target = Ber(q) and K = 2
+//! tokens are proposed.
+//!
+//! Everything here is exact (closed form), matching how Figure 1 is a
+//! property of the rules themselves, not of any model.
+
+/// Acceptance probability of multi-round rejection sampling (SpecInfer)
+/// with K i.i.d. draft tokens from Ber(p), target Ber(q).
+/// Closed form via the recursion: round k rejects with prob
+/// 1 - sum_x min(q_k(x), p(x)) and q_{k+1} = Norm[[q_k - p]^+].
+pub fn multiround_accept(p: f64, q: f64, k: usize) -> f64 {
+    let pv = [1.0 - p, p];
+    let mut qv = [1.0 - q, q];
+    let mut reject_mass = 1.0;
+    let mut accepted = 0.0;
+    for _ in 0..k {
+        let overlap: f64 = (0..2).map(|i| pv[i].min(qv[i])).sum();
+        accepted += reject_mass * overlap;
+        if overlap >= 1.0 - 1e-15 {
+            break;
+        }
+        let mut res = [0.0, 0.0];
+        let mut z = 0.0;
+        for i in 0..2 {
+            res[i] = (qv[i] - pv[i]).max(0.0);
+            z += res[i];
+        }
+        if z <= 0.0 {
+            break;
+        }
+        qv = [res[0] / z, res[1] / z];
+        reject_mass *= 1.0 - overlap;
+    }
+    accepted
+}
+
+/// Acceptance probability of K-SEQ (SpecTr) with parameter gamma:
+/// each of the K i.i.d. tokens accepted with min(1, q(x)/(gamma p(x)));
+/// overall accept = 1 - (1 - beta)^K with beta = sum_x min(p(x), q(x)/gamma).
+pub fn kseq_accept(p: f64, q: f64, k: usize, gamma: f64) -> f64 {
+    let pv = [1.0 - p, p];
+    let qv = [1.0 - q, q];
+    let beta: f64 = (0..2).map(|i| pv[i].min(qv[i] / gamma)).sum();
+    1.0 - (1.0 - beta).powi(k as i32)
+}
+
+/// Is gamma *valid* for (p, q, K)? K-SEQ recovers q exactly only when its
+/// residual q - min(p, q/γ)·(1-(1-β)^K)/β is pointwise non-negative;
+/// small γ over-accepts and cannot be compensated. (This is why the
+/// paper's γ search is over a restricted range.)
+pub fn kseq_gamma_valid(p: f64, q: f64, k: usize, gamma: f64) -> bool {
+    let pv = [1.0 - p, p];
+    let qv = [1.0 - q, q];
+    let beta: f64 = (0..2).map(|i| pv[i].min(qv[i] / gamma)).sum();
+    if beta <= 0.0 {
+        return true;
+    }
+    let scale = (1.0 - (1.0 - beta).powi(k as i32)) / beta;
+    (0..2).all(|i| qv[i] - pv[i].min(qv[i] / gamma) * scale >= -1e-12)
+}
+
+/// K-SEQ with gamma numerically optimized over the *valid* subset of
+/// [1, K] (the paper plots the tuned variant).
+pub fn kseq_accept_best_gamma(p: f64, q: f64, k: usize) -> f64 {
+    let mut best: f64 = 0.0;
+    let steps = 400;
+    for i in 0..=steps {
+        let gamma = 1.0 + (k as f64 - 1.0) * i as f64 / steps as f64;
+        if kseq_gamma_valid(p, q, k, gamma) {
+            best = best.max(kseq_accept(p, q, k, gamma));
+        }
+    }
+    best
+}
+
+/// Optimal-transport acceptance upper bound with membership cost (OTM,
+/// SpecTr Thm. 3): accept_opt = sum_x min(q(x), 1 - (1 - p(x))^K).
+/// For |X| = 2 the bound is achieved, so this is exact for the toy.
+pub fn otm_accept(p: f64, q: f64, k: usize) -> f64 {
+    let pv = [1.0 - p, p];
+    let qv = [1.0 - q, q];
+    (0..2)
+        .map(|i| qv[i].min(1.0 - (1.0 - pv[i]).powi(k as i32)))
+        .sum::<f64>()
+        .min(1.0)
+}
+
+/// Acceptance probability of recursive rejection sampling with K = 2
+/// tokens drawn WITHOUT replacement from Ber(p). With a binary vocabulary
+/// the two draft tokens cover X, so the second round's draft distribution
+/// is a point mass on the untried token and RRS accepts with probability
+/// 1 whenever the residual is supported there — which it always is:
+///   round 1: accept mass sum_x min(p, q);
+///   round 2: draft = delta_{x'}, residual q_2 supported on x' only.
+pub fn rrs_accept_k2(p: f64, q: f64) -> f64 {
+    let _ = (p, q);
+    1.0
+}
+
+/// Exact RRS acceptance for general categorical p, q and siblings drawn
+/// without replacement via Gumbel-Top-k, K = 2, by enumeration.
+pub fn rrs_accept_k2_categorical(pv: &[f64], qv: &[f64]) -> f64 {
+    let n = pv.len();
+    let mut acc = 0.0;
+    for first in 0..n {
+        if pv[first] <= 0.0 {
+            continue;
+        }
+        // P(first) = p_first; accept round 1 with min(1, q/p)
+        let a1 = (qv[first] / pv[first]).min(1.0);
+        acc += pv[first] * a1;
+        // rejected: residual q2 = Norm[[q - p]^+], draft2 = p w/o first
+        let rej = pv[first] * (1.0 - a1);
+        if rej <= 0.0 {
+            continue;
+        }
+        let mut q2: Vec<f64> = qv.iter().zip(pv).map(|(&q, &p)| (q - p).max(0.0)).collect();
+        let z: f64 = q2.iter().sum();
+        if z <= 0.0 {
+            // residual empty: outcome still exact, counts as acceptance of
+            // the resample — but for the *acceptance-rate* metric we count
+            // only draft-token acceptance; skip.
+            continue;
+        }
+        for v in &mut q2 {
+            *v /= z;
+        }
+        let pz: f64 = 1.0 - pv[first];
+        if pz <= 0.0 {
+            continue;
+        }
+        for second in 0..n {
+            if second == first || pv[second] <= 0.0 {
+                continue;
+            }
+            let p2 = pv[second] / pz; // sampling w/o replacement conditional
+            let a2 = if p2 > 0.0 { (q2[second] / p2).min(1.0) } else { 0.0 };
+            acc += rej * p2 * a2;
+        }
+    }
+    acc.min(1.0)
+}
+
+/// One row of Figure 1: acceptance rates for all four methods at (p, q).
+#[derive(Debug, Clone, Copy)]
+pub struct ToyRow {
+    pub p: f64,
+    pub q: f64,
+    pub multiround: f64,
+    pub kseq: f64,
+    pub otm: f64,
+    pub rrs: f64,
+}
+
+pub fn figure1_row(p: f64, q: f64) -> ToyRow {
+    ToyRow {
+        p,
+        q,
+        multiround: multiround_accept(p, q, 2),
+        kseq: kseq_accept_best_gamma(p, q, 2),
+        otm: otm_accept(p, q, 2),
+        rrs: rrs_accept_k2_categorical(&[1.0 - p, p], &[1.0 - q, q]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rrs_always_one_on_binary() {
+        for &(p, q) in &[(0.1, 0.9), (0.5, 0.5), (0.9, 0.1), (0.3, 0.7)] {
+            let a = rrs_accept_k2_categorical(&[1.0 - p, p], &[1.0 - q, q]);
+            assert!((a - 1.0).abs() < 1e-9, "p={p} q={q}: {a}");
+        }
+    }
+
+    #[test]
+    fn ordering_matches_figure1() {
+        // RRS >= OTM >= tuned K-SEQ >= multi-round, strict at high
+        // discrepancy (paper Fig. 1)
+        for &(p, q) in &[(0.9, 0.1), (0.8, 0.2), (0.7, 0.1)] {
+            let r = figure1_row(p, q);
+            assert!(r.rrs >= r.otm - 1e-9, "{r:?}");
+            assert!(r.otm >= r.kseq - 1e-9, "{r:?}");
+            assert!(r.kseq >= r.multiround - 1e-9, "{r:?}");
+            assert!(r.rrs > r.multiround + 0.05, "strict at high discrepancy: {r:?}");
+        }
+    }
+
+    #[test]
+    fn identical_distributions_accept_everywhere() {
+        let r = figure1_row(0.4, 0.4);
+        assert!(r.multiround > 0.99);
+        assert!(r.kseq > 0.99);
+        assert!(r.otm > 0.99);
+        assert!((r.rrs - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn closed_forms_match_monte_carlo() {
+        use crate::decode::rrs::{KSeq, LevelOutcome, MultiRound, VerifyRule};
+        use crate::sampling::{sample_categorical, LogProbs};
+        use crate::util::Rng;
+        let (p, q) = (0.75, 0.25);
+        let plp = LogProbs(vec![(1.0f64 - p).ln(), p.ln()]);
+        let qlp = LogProbs(vec![(1.0f64 - q).ln(), q.ln()]);
+        let mut rng = Rng::seed_from_u64(11);
+        let n = 100_000;
+        let mut mr = 0usize;
+        let mut ks = 0usize;
+        let gamma = 1.5;
+        for _ in 0..n {
+            let sib: Vec<u32> = (0..2)
+                .map(|_| sample_categorical(&plp.probs(), &mut rng) as u32)
+                .collect();
+            if matches!(MultiRound.verify(&sib, &plp, &qlp, &mut rng), LevelOutcome::Accept { .. })
+            {
+                mr += 1;
+            }
+            if matches!(
+                (KSeq { gamma: Some(gamma) }).verify(&sib, &plp, &qlp, &mut rng),
+                LevelOutcome::Accept { .. }
+            ) {
+                ks += 1;
+            }
+        }
+        let mr_emp = mr as f64 / n as f64;
+        let ks_emp = ks as f64 / n as f64;
+        assert!((mr_emp - multiround_accept(p, q, 2)).abs() < 0.01, "{mr_emp}");
+        assert!((ks_emp - kseq_accept(p, q, 2, gamma)).abs() < 0.01, "{ks_emp}");
+    }
+}

@@ -1,0 +1,37 @@
+//! # rsd — Recursive Speculative Decoding
+//!
+//! A serving-oriented reproduction of *Recursive Speculative Decoding:
+//! Accelerating LLM Inference via Sampling Without Replacement* (Jeon et
+//! al., 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: request routing,
+//!   batching, KV-cache management, draft-tree construction (Gumbel-Top-k
+//!   and Stochastic Beam Search), and recursive rejection sampling
+//!   verification. Python never runs on the request path.
+//! * **Layer 2** — the JAX transformer step function (python/compile),
+//!   AOT-lowered once to HLO text and executed here via the PJRT C API
+//!   ([`runtime`]).
+//! * **Layer 1** — the Pallas tree-attention kernel inlined into the same
+//!   HLO (python/compile/kernels).
+//!
+//! Entry points: [`decode`] hosts the paper's algorithms over the
+//! [`llm::Llm`] abstraction; [`model::PjrtLm`] is the real AOT-compiled
+//! model; [`sim::SimLm`] is an analytic substitute for fast controlled
+//! sweeps; [`coordinator`] is the serving engine; [`bench`] regenerates
+//! every table and figure of the paper's evaluation.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod decode;
+pub mod llm;
+pub mod model;
+pub mod runtime;
+pub mod sampling;
+pub mod sim;
+pub mod tensorfile;
+pub mod tokenizer;
+pub mod tree;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

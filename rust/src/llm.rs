@@ -1,0 +1,65 @@
+//! The token-level LM abstraction every decoder runs against.
+//!
+//! Two implementations exist: [`crate::model::PjrtLm`] (the real
+//! AOT-compiled transformer executed via PJRT) and [`crate::sim::SimLm`]
+//! (an analytic categorical LM with controllable draft-target
+//! discrepancy, used for fast controlled sweeps and property tests).
+//! Decoders are generic over this trait, so every algorithm is exercised
+//! identically on both substrates.
+
+use anyhow::Result;
+
+/// One node to evaluate: a token attached either to the committed prefix
+/// tail (`parent == PARENT_PREFIX`) or to an earlier *pending* node of the
+/// same session (by pending index). This is how draft trees, prefill
+/// chains and single-token decode are all expressed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvalNode {
+    pub token: u32,
+    /// `PARENT_PREFIX` or an index into the session's pending list.
+    pub parent: i64,
+}
+
+pub const PARENT_PREFIX: i64 = -1;
+
+impl EvalNode {
+    pub fn root(token: u32) -> Self {
+        Self { token, parent: PARENT_PREFIX }
+    }
+
+    pub fn child(token: u32, parent: usize) -> Self {
+        Self { token, parent: parent as i64 }
+    }
+}
+
+/// A language model with tree-structured incremental evaluation.
+pub trait Llm {
+    type Session;
+
+    fn vocab(&self) -> usize;
+
+    /// Parameter count (drives the MBSU speed ratio, App. C.2).
+    fn param_count(&self) -> usize;
+
+    /// Open a fresh session (empty KV cache / empty context).
+    fn begin(&self) -> Result<Self::Session>;
+
+    /// Evaluate `nodes`, appending them to the session's pending set, and
+    /// return one raw-logits row per node (next-token logits given the
+    /// node's full path context). Parents must reference earlier pending
+    /// nodes (from this or previous `eval` calls since the last commit).
+    fn eval(&self, session: &mut Self::Session, nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>>;
+
+    /// Commit `accepted` (pending indices forming a rootward chain:
+    /// `accepted[0]` has prefix parent, each subsequent entry's parent is
+    /// the previous one) into the prefix; discard every other pending
+    /// node. The paper's `FilterKVCache` — here a pure index operation,
+    /// no cache data moves.
+    fn commit(&self, session: &mut Self::Session, accepted: &[usize]) -> Result<()>;
+
+    /// Logical length of the committed context.
+    fn prefix_len(&self, session: &Self::Session) -> usize;
+
+    /// How many more tokens (pending + committed) the session can hold.
+    fn capacity_left(&self, session: &Self::Session) -> usize;
+}

@@ -1,0 +1,226 @@
+//! `rsd` — the Recursive Speculative Decoding serving CLI.
+//!
+//! Subcommands:
+//! * `generate` — decode one prompt with any algorithm (PJRT or sim).
+//! * `serve`    — run the JSON-lines TCP serving engine.
+//! * `exp1`     — regenerate the paper's Exp1 tables/figure (fixed DL).
+//! * `exp2`     — regenerate Exp2 (fixed target budget).
+//! * `fig1`     — regenerate Figure 1 (Bernoulli toy acceptance rates).
+//! * `selftest` — load artifacts and check the AOT round-trip end-to-end.
+//!
+//! Run `rsd help` for flags.
+
+use anyhow::{bail, Result};
+
+use rsd::bench::{self, workload, BenchOpts};
+use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::{engine, server};
+use rsd::decode::generate;
+use rsd::llm::Llm;
+use rsd::model::PjrtLm;
+use rsd::runtime::Runtime;
+use rsd::sim::SimLm;
+use rsd::tokenizer::Tokenizer;
+use rsd::util::args::Args;
+use rsd::util::Rng;
+
+const USAGE: &str = "\
+rsd — Recursive Speculative Decoding serving framework
+
+USAGE: rsd <COMMAND> [--flags]
+
+COMMANDS:
+  generate   --prompt STR --max-tokens N --decoder SPEC --temperature T
+             --top-p P --seed N [--sim] [--artifacts DIR]
+  serve      --addr HOST:PORT [--config FILE.json] [--artifacts DIR]
+  exp1       --dl 2,3,4,5 --max-tokens N --reps N [--sim] [--alpha A]
+             [--tv-trials N] --temperature T
+  exp2       --budget 6,10,14,21,30 (same flags as exp1)
+  fig1       --grid N
+  selftest   [--artifacts DIR]
+
+Decoder SPEC strings: ar | sd:L | spectr:KxL | rsd-c:B-B-.. | rsd-s:WxL
+";
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(raw, &["sim", "help"])?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let artifacts = args.get_or("artifacts", "artifacts");
+
+    match cmd {
+        "generate" => {
+            let prompt = args.get_or("prompt", "the quick brown fox");
+            let max_tokens: usize = args.parse_or("max-tokens", 64)?;
+            let decoder: DecoderConfig = args.get_or("decoder", "rsd-s:3x3").parse()?;
+            let sampling = SamplingConfig {
+                temperature: args.parse_or("temperature", 0.3f32)?,
+                top_p: args.parse_or("top-p", 1.0f32)?,
+            };
+            let seed: u64 = args.parse_or("seed", 0)?;
+            let tok = Tokenizer::new();
+            let mut rng = Rng::seed_from_u64(seed);
+            let p = tok.encode(&prompt);
+            if args.has("sim") {
+                let (target, draft) = SimLm::pair(seed, 0.8, 256);
+                let run =
+                    generate(&decoder, &sampling, &target, &draft, &p, max_tokens, &mut rng)?;
+                report_run(&tok, &prompt, &run, decoder.depth(), &target, &draft);
+            } else {
+                let rt = Runtime::cpu()?;
+                let (target, draft) = PjrtLm::load_pair(&rt, &artifacts)?;
+                let run =
+                    generate(&decoder, &sampling, &target, &draft, &p, max_tokens, &mut rng)?;
+                report_run(&tok, &prompt, &run, decoder.depth(), &target, &draft);
+            }
+        }
+        "serve" => {
+            let addr = args.get_or("addr", "127.0.0.1:7433");
+            let cfg = match args.get("config") {
+                Some(path) => EngineConfig::from_json_file(path)?,
+                None => EngineConfig::default(),
+            };
+            let artifacts_dir = artifacts.clone();
+            let (tx, _handle) = engine::spawn_with(move || {
+                let rt = Runtime::cpu()?;
+                let (target, draft) = PjrtLm::load_pair(&rt, &artifacts_dir)?;
+                Ok(engine::Engine::new(target, draft, cfg))
+            });
+            server::serve(&addr, tx)?;
+        }
+        "exp1" | "exp2" => {
+            let sampling = SamplingConfig {
+                temperature: args.parse_or("temperature", 0.3f32)?,
+                top_p: args.parse_or("top-p", 1.0f32)?,
+            };
+            let opts = BenchOpts {
+                max_new: args.parse_or("max-tokens", 64)?,
+                reps: args.parse_or("reps", 4)?,
+                tv_trials: args.parse_or("tv-trials", 0)?,
+                seed: args.parse_or("seed", 0)?,
+            };
+            let alpha: f64 = args.parse_or("alpha", 0.8)?;
+            let (points, configs): (Vec<usize>, fn(usize) -> Vec<DecoderConfig>) = if cmd == "exp1"
+            {
+                (args.list_or("dl", &[2, 3, 4, 5])?, bench::exp1_configs)
+            } else {
+                (args.list_or("budget", &[6, 10, 14, 21, 30])?, bench::exp2_configs)
+            };
+            let axis = if cmd == "exp1" { "DL" } else { "Budget" };
+            run_sweep(&artifacts, args.has("sim"), alpha, &sampling, &opts, &points, configs, axis)?;
+        }
+        "fig1" => {
+            let grid: usize = args.parse_or("grid", 10)?;
+            println!("Figure 1 — acceptance rates, draft Ber(p), target Ber(q), K=2");
+            println!(
+                "{:>5} {:>5} {:>11} {:>9} {:>7} {:>7}",
+                "p", "q", "multi-round", "K-SEQ*", "OTM", "RRS"
+            );
+            for row in bench::figure1(grid) {
+                println!(
+                    "{:>5.2} {:>5.2} {:>11.3} {:>9.3} {:>7.3} {:>7.3}",
+                    row.p, row.q, row.multiround, row.kseq, row.otm, row.rrs
+                );
+            }
+            println!("(K-SEQ* = gamma tuned; OTM exact for binary vocab)");
+        }
+        "selftest" => {
+            let rt = Runtime::cpu()?;
+            println!("PJRT platform: {}", rt.platform());
+            let (target, draft) = PjrtLm::load_pair(&rt, &artifacts)?;
+            println!(
+                "loaded target ({} params) and draft ({} params)",
+                target.param_count(),
+                draft.param_count()
+            );
+            let tok = Tokenizer::new();
+            let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+            let mut rng = Rng::seed_from_u64(0);
+            let prompt = tok.encode("the sound of ");
+            let cfg = DecoderConfig::RsdS { w: 3, l: 3 };
+            let run = generate(&cfg, &sampling, &target, &draft, &prompt, 48, &mut rng)?;
+            println!("RSD-S sample: {:?}", tok.decode(&run.tokens));
+            println!(
+                "block efficiency {:.3}, {} rounds, {} tree nodes",
+                run.stats.block_efficiency(),
+                run.stats.decode_calls,
+                run.stats.tree_nodes
+            );
+            println!("selftest OK");
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprint!("{USAGE}");
+            bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}
+
+fn report_run<T: Llm, D: Llm>(
+    tok: &Tokenizer,
+    prompt: &str,
+    run: &rsd::decode::DecodeRun,
+    depth: usize,
+    target: &T,
+    draft: &D,
+) {
+    println!("prompt: {prompt}");
+    println!("output: {}", tok.decode(&run.tokens));
+    let s = &run.stats;
+    println!(
+        "generated {} tokens in {:.3}s | eff {:.3} | MBSU {:.3} | {:.1} tok/s | {} rounds | {} draft calls",
+        s.generated,
+        s.wall.as_secs_f64(),
+        s.block_efficiency(),
+        s.mbsu(depth, draft.param_count(), target.param_count()),
+        s.token_rate(),
+        s.decode_calls,
+        s.draft_calls,
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_sweep(
+    artifacts: &str,
+    sim: bool,
+    alpha: f64,
+    sampling: &SamplingConfig,
+    opts: &BenchOpts,
+    points: &[usize],
+    configs: fn(usize) -> Vec<DecoderConfig>,
+    axis: &str,
+) -> Result<()> {
+    if sim {
+        let (target, draft) = SimLm::pair(0, alpha, 256);
+        let prompts = workload::random_prompts(opts.reps.max(4), 16, 256, 1);
+        sweep_on(&target, &draft, sampling, opts, points, configs, axis, &prompts)
+    } else {
+        let rt = Runtime::cpu()?;
+        let (target, draft) = PjrtLm::load_pair(&rt, artifacts)?;
+        let prompts = workload::corpus_prompts(artifacts, opts.reps.max(4), 48, 1)?;
+        sweep_on(&target, &draft, sampling, opts, points, configs, axis, &prompts)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sweep_on<T: Llm, D: Llm>(
+    target: &T,
+    draft: &D,
+    sampling: &SamplingConfig,
+    opts: &BenchOpts,
+    points: &[usize],
+    configs: fn(usize) -> Vec<DecoderConfig>,
+    axis: &str,
+    prompts: &[Vec<u32>],
+) -> Result<()> {
+    let ar = bench::bench_decoder(&DecoderConfig::Ar, sampling, target, draft, prompts, opts)?;
+    for &pt in points {
+        let mut rows = Vec::new();
+        for cfg in configs(pt) {
+            rows.push(bench::bench_decoder(&cfg, sampling, target, draft, prompts, opts)?);
+        }
+        bench::print_table(&format!("{axis} = {pt}"), &ar, &rows, true);
+    }
+    Ok(())
+}

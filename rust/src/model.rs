@@ -1,0 +1,199 @@
+//! The real model: AOT-compiled transformer step executed via PJRT.
+//!
+//! `PjrtLm` implements [`Llm`] over the step-executable contract of
+//! DESIGN.md §1: one fixed-shape executable per checkpoint serves prefill
+//! chunks, single-token decode, draft-tree levels and the target pass
+//! over the whole tree. The Rust side owns all coordination state —
+//! positions, KV scatter destinations, the {0,-inf} topology mask — while
+//! the executable is a pure tensor program.
+//!
+//! Buffer strategy (§Perf): weights are uploaded to the device once at
+//! load; per call only the small operand tensors and the KV caches move.
+//! Tuple outputs come back as host literals (the PJRT binding cannot
+//! split a device tuple), so caches round-trip host<->device once per
+//! call — measured and accounted in EXPERIMENTS.md §Perf.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Manifest, ModelManifest};
+use crate::llm::{EvalNode, Llm};
+use crate::runtime::{Executable, Runtime};
+use crate::tree::SessionCore;
+
+/// f32 additive-mask value for "cannot attend" (matches kernels/ref.py).
+pub const MASK_OFF: f32 = -1e30;
+
+pub struct PjrtLm {
+    pub man: ModelManifest,
+    rt: Runtime,
+    /// (s_tile, executable), ascending tile width. `run_tile` picks the
+    /// smallest tile that fits an eval call, so single-token decode does
+    /// not pay for the full 32-wide tile (§Perf iteration 2).
+    exes: Vec<(usize, Executable)>,
+    /// Weight buffers resident on device, in executable input order.
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+pub struct PjrtSession {
+    pub core: SessionCore,
+    kcache: xla::Literal,
+    vcache: xla::Literal,
+    /// Reused host staging for the attention mask (avoids a fresh
+    /// S*M-sized allocation per call).
+    mask_host: Vec<f32>,
+}
+
+impl PjrtLm {
+    /// Load `name` ("target" | "draft") from an artifacts directory.
+    pub fn load(rt: &Runtime, artifacts_dir: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let (man, dir) = Manifest::load(&artifacts_dir)?;
+        let mm = man.model(name)?.clone();
+        let mut exes = Vec::new();
+        if mm.tiles.is_empty() {
+            exes.push((mm.s_tile, rt.load_hlo_text(dir.join(&mm.hlo))?));
+        } else {
+            for (s_tile, hlo) in &mm.tiles {
+                exes.push((*s_tile, rt.load_hlo_text(dir.join(hlo))?));
+            }
+        }
+        let tensors = crate::tensorfile::load(dir.join(&mm.tensors))?;
+        let n_params = mm.input_order.len() - 6; // trailing 6 are operands
+        let mut weights = Vec::with_capacity(n_params);
+        for field in &mm.input_order[..n_params] {
+            let t = tensors
+                .get(field)
+                .with_context(|| format!("weights missing field '{field}'"))?;
+            weights.push(rt.buffer_f32(&t.as_f32()?, &t.shape)?);
+        }
+        Ok(Self { man: mm, rt: rt.clone_handle(), exes, weights })
+    }
+
+    /// Load both models sharing one runtime.
+    pub fn load_pair(rt: &Runtime, artifacts_dir: impl AsRef<Path>) -> Result<(Self, Self)> {
+        let dir = artifacts_dir.as_ref();
+        Ok((Self::load(rt, dir, "target")?, Self::load(rt, dir, "draft")?))
+    }
+
+    fn cache_dims(&self) -> [i64; 5] {
+        [
+            self.man.n_layers as i64,
+            self.man.batch as i64,
+            self.man.n_heads as i64,
+            self.man.cache_len as i64,
+            self.man.d_head as i64,
+        ]
+    }
+
+    /// Smallest compiled tile that fits `n` nodes (falls back to max).
+    fn pick_exe(&self, n: usize) -> (usize, &Executable) {
+        for (st, exe) in &self.exes {
+            if *st >= n {
+                return (*st, exe);
+            }
+        }
+        let (st, exe) = self.exes.last().expect("at least one executable");
+        (*st, exe)
+    }
+
+    /// Execute one tile of up to `s_tile` pending nodes (already added to
+    /// the session core). Returns a logits row per node.
+    fn run_tile(&self, s: &mut PjrtSession, idxs: std::ops::Range<usize>) -> Result<Vec<Vec<f32>>> {
+        let (st, exe) = self.pick_exe(idxs.len());
+        let m = self.man.cache_len;
+        let v = self.man.vocab;
+        let n = idxs.len();
+        debug_assert!(n <= st && n > 0);
+
+        let mut tokens = vec![0i32; st];
+        let mut positions = vec![0i32; st];
+        let mut dest = vec![(m - 1) as i32; st];
+        let mask = &mut s.mask_host;
+        mask.clear();
+        mask.resize(st * m, MASK_OFF);
+        for (row, i) in idxs.clone().enumerate() {
+            let p = &s.core.pending[i];
+            tokens[row] = p.token as i32;
+            positions[row] = s.core.position(i) as i32;
+            dest[row] = p.slot as i32;
+            for slot in s.core.visible_slots(i) {
+                mask[row * m + slot as usize] = 0.0;
+            }
+        }
+        let b_tokens = self.rt.buffer_i32(&tokens, &[1, st])?;
+        let b_pos = self.rt.buffer_i32(&positions, &[1, st])?;
+        let b_dest = self.rt.buffer_i32(&dest, &[1, st])?;
+        let b_mask = self.rt.buffer_f32(mask, &[1, st, m])?;
+        let b_kc = self.rt.buffer_from_literal(&s.kcache)?;
+        let b_vc = self.rt.buffer_from_literal(&s.vcache)?;
+
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        inputs.push(&b_tokens);
+        inputs.push(&b_pos);
+        inputs.push(&b_dest);
+        inputs.push(&b_mask);
+        inputs.push(&b_kc);
+        inputs.push(&b_vc);
+
+        let mut outs = exe.run_b(&inputs)?;
+        if outs.len() != 3 {
+            bail!("step executable returned {} outputs, want 3", outs.len());
+        }
+        s.vcache = outs.pop().unwrap();
+        s.kcache = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        debug_assert_eq!(logits.len(), st * v);
+        Ok((0..n).map(|row| logits[row * v..(row + 1) * v].to_vec()).collect())
+    }
+}
+
+impl Llm for PjrtLm {
+    type Session = PjrtSession;
+
+    fn vocab(&self) -> usize {
+        self.man.vocab
+    }
+
+    fn param_count(&self) -> usize {
+        self.man.params
+    }
+
+    fn begin(&self) -> Result<Self::Session> {
+        let dims = self.cache_dims();
+        let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        // zero-initialized; dtype must match CACHE_DTYPE in model.py
+        // (f32 on this testbed — see EXPERIMENTS.md §Perf iteration 3)
+        let make = || xla::Literal::create_from_shape(xla::PrimitiveType::F32, &udims);
+        Ok(PjrtSession {
+            core: SessionCore::new(self.man.cache_len),
+            kcache: make(),
+            vcache: make(),
+            mask_host: Vec::new(),
+        })
+    }
+
+    fn eval(&self, s: &mut Self::Session, nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>> {
+        let range = s.core.add_pending(nodes)?;
+        let mut out = Vec::with_capacity(nodes.len());
+        let mut start = range.start;
+        while start < range.end {
+            let end = (start + self.man.s_tile).min(range.end);
+            out.extend(self.run_tile(s, start..end)?);
+            start = end;
+        }
+        Ok(out)
+    }
+
+    fn commit(&self, s: &mut Self::Session, accepted: &[usize]) -> Result<()> {
+        s.core.commit(accepted)
+    }
+
+    fn prefix_len(&self, s: &Self::Session) -> usize {
+        s.core.prefix_len()
+    }
+
+    fn capacity_left(&self, s: &Self::Session) -> usize {
+        s.core.capacity_left()
+    }
+}

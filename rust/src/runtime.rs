@@ -1,0 +1,116 @@
+//! PJRT runtime wrapper: load HLO-text artifacts, compile once, execute
+//! from the serving hot path.
+//!
+//! HLO *text* is the interchange format (not serialized HloModuleProto):
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; `HloModuleProto::from_text_file`
+//! reassigns ids and round-trips cleanly (see /opt/xla-example/README.md
+//! and DESIGN.md §1).
+//!
+//! Execution goes through `execute_b` with caller-owned device buffers:
+//! the crate's literal-based `execute` path leaks every input buffer per
+//! call (the C++ shim `release()`s them and never frees), and re-uploads
+//! the full weight set each call. Owning the buffers fixes the leak and
+//! lets weights live on device across the whole serving session
+//! (EXPERIMENTS.md §Perf).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A shared CPU PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable { exe })
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e}"))
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn buffer_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e}"))
+    }
+
+    /// Upload a literal (e.g. a cache tensor fetched from a previous
+    /// execution) to the device.
+    pub fn buffer_from_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("upload literal: {e}"))
+    }
+
+    /// A second handle to the same client (refcounted internally).
+    pub fn clone_handle(&self) -> Runtime {
+        Runtime { client: self.client.clone() }
+    }
+}
+
+/// A compiled step executable. Thin wrapper adding tuple unpacking and
+/// error context.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with device-buffer inputs; returns the flattened tuple
+    /// elements as host literals (the AOT step lowers with
+    /// return_tuple=True, and this PJRT binding exposes tuple outputs
+    /// only as a single buffer — splitting requires the host copy).
+    pub fn run_b<L: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute_b::<L>(inputs).map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("fetch result: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple result: {e}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        anyhow::bail!("literal_f32 shape {:?} != data len {}", dims, data.len());
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        anyhow::bail!("literal_i32 shape {:?} != data len {}", dims, data.len());
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e}"))
+}

@@ -1,0 +1,309 @@
+//! Sampling substrate: logits processing (temperature / nucleus), Gumbel
+//! machinery for sampling *without replacement* (Gumbel-Top-k and the
+//! truncated-Gumbel recursion of Stochastic Beam Search), categorical
+//! sampling and residual distributions.
+//!
+//! All verification math runs in f64 probability space: the distributions
+//! involved (vocab ≤ a few hundred here) are small, and the acceptance
+//! thresholds of recursive rejection sampling are exact identities — f32
+//! drift would show up directly as distribution-recovery error.
+
+use crate::util::Rng;
+
+pub const NEG_INF: f64 = f64::NEG_INFINITY;
+
+/// A processed, normalized categorical distribution in log space.
+/// Filtered-out tokens carry `-inf` (paper Alg. 4 line 6: filtered tokens
+/// are excluded from Gumbel-Top-k and from residuals).
+#[derive(Debug, Clone)]
+pub struct LogProbs(pub Vec<f64>);
+
+impl LogProbs {
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Probabilities (exact exp; -inf -> 0).
+    pub fn probs(&self) -> Vec<f64> {
+        self.0.iter().map(|&l| l.exp()).collect()
+    }
+}
+
+/// Convert raw model logits to a processed log-distribution:
+/// logits/temperature -> log_softmax -> nucleus(top_p) -> renormalize.
+pub fn process_logits(logits: &[f32], temperature: f32, top_p: f32) -> LogProbs {
+    assert!(temperature > 0.0, "temperature must be > 0 (greedy not supported)");
+    let inv_t = 1.0 / temperature as f64;
+    let mut lp: Vec<f64> = logits.iter().map(|&x| x as f64 * inv_t).collect();
+    log_normalize(&mut lp);
+    if top_p < 1.0 {
+        nucleus_filter(&mut lp, top_p as f64);
+        log_normalize(&mut lp);
+    }
+    LogProbs(lp)
+}
+
+/// In-place log-softmax (stable). `-inf` entries stay `-inf`.
+pub fn log_normalize(lp: &mut [f64]) {
+    let m = lp.iter().cloned().fold(NEG_INF, f64::max);
+    if m == NEG_INF {
+        return; // fully masked; caller's bug, keep as-is
+    }
+    let z: f64 = lp.iter().map(|&l| (l - m).exp()).sum();
+    let lz = m + z.ln();
+    for l in lp.iter_mut() {
+        if *l != NEG_INF {
+            *l -= lz;
+        }
+    }
+}
+
+/// Nucleus filter: keep the smallest prob-sorted prefix with mass >= top_p,
+/// set the rest to -inf. Ties broken by index for determinism.
+fn nucleus_filter(lp: &mut [f64], top_p: f64) {
+    let mut idx: Vec<usize> = (0..lp.len()).collect();
+    idx.sort_by(|&a, &b| lp[b].partial_cmp(&lp[a]).unwrap().then(a.cmp(&b)));
+    let mut mass = 0.0;
+    let mut keep = lp.len();
+    for (rank, &i) in idx.iter().enumerate() {
+        mass += lp[i].exp();
+        if mass >= top_p {
+            keep = rank + 1;
+            break;
+        }
+    }
+    for &i in &idx[keep..] {
+        lp[i] = NEG_INF;
+    }
+}
+
+/// Standard Gumbel(0,1) sample.
+pub fn gumbel(rng: &mut Rng) -> f64 {
+    let u: f64 = rng.gen_f64_open();
+    -(-u.ln()).ln()
+}
+
+/// Gumbel-Top-k trick (Vieira 2014): returns up to `k` indices sampled
+/// *without replacement* from the categorical `lp`, in decreasing order of
+/// perturbed log-prob, together with the perturbed values. `-inf` entries
+/// are never returned (paper Alg. 4 line 6).
+pub fn gumbel_top_k(lp: &LogProbs, k: usize, rng: &mut Rng) -> Vec<(usize, f64)> {
+    let mut perturbed: Vec<(usize, f64)> = lp
+        .0
+        .iter()
+        .enumerate()
+        .filter(|(_, &l)| l != NEG_INF)
+        .map(|(i, &l)| (i, l + gumbel(rng)))
+        .collect();
+    perturbed.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    perturbed.truncate(k);
+    perturbed
+}
+
+/// Numerically-stable truncated Gumbel (Kool et al. 2019, App. B.3):
+/// given the parent's truncated value `u`, the child perturbed values
+/// `phi_tilde` and their max `z`, returns values distributed as the
+/// perturbed ones conditioned on max == u:
+///   g_hat = -log(exp(-u) - exp(-z) + exp(-phi))
+pub fn truncated_gumbel(u: f64, z: f64, phi_tilde: &[f64]) -> Vec<f64> {
+    phi_tilde
+        .iter()
+        .map(|&g| {
+            if g == NEG_INF {
+                return NEG_INF;
+            }
+            let v = u - g + ln_1m_exp(g - z);
+            u - v.max(0.0) - ln_1p_exp(-v.abs())
+        })
+        .collect()
+}
+
+/// log(1 - exp(x)) for x <= 0, stable near 0 and -inf.
+fn ln_1m_exp(x: f64) -> f64 {
+    if x >= 0.0 {
+        // x == 0 => log(0) = -inf (happens exactly at the argmax child)
+        return NEG_INF;
+    }
+    if x > -f64::ln(2.0) {
+        (-f64::exp_m1(x)).ln()
+    } else {
+        f64::ln_1p(-x.exp())
+    }
+}
+
+/// log(1 + exp(x)), stable.
+fn ln_1p_exp(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else {
+        f64::ln_1p(x.exp())
+    }
+}
+
+/// Sample an index from probabilities `p` (need not be normalized).
+pub fn sample_categorical(p: &[f64], rng: &mut Rng) -> usize {
+    let total: f64 = p.iter().sum();
+    assert!(total > 0.0, "cannot sample from zero distribution");
+    let mut u: f64 = rng.gen_f64() * total;
+    for (i, &pi) in p.iter().enumerate() {
+        u -= pi;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    // floating point slack: return the last strictly-positive entry
+    p.iter().rposition(|&x| x > 0.0).expect("nonzero entry exists")
+}
+
+/// Residual distribution Norm[[q - p]^+] in probability space. Returns
+/// None when q <= p pointwise (residual mass ~ 0), which happens when the
+/// draft already covers the target.
+pub fn residual(q: &[f64], p: &[f64]) -> Option<Vec<f64>> {
+    let mut r: Vec<f64> = q.iter().zip(p).map(|(&qi, &pi)| (qi - pi).max(0.0)).collect();
+    let z: f64 = r.iter().sum();
+    if z <= 1e-300 {
+        return None;
+    }
+    for x in &mut r {
+        *x /= z;
+    }
+    Some(r)
+}
+
+/// Total-variation distance between two probability vectors.
+pub fn tv_distance(a: &[f64], b: &[f64]) -> f64 {
+    0.5 * a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    fn rng(seed: u64) -> Rng {
+        Rng::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn process_logits_normalizes() {
+        let lp = process_logits(&[1.0, 2.0, 3.0], 0.7, 1.0);
+        let s: f64 = lp.probs().iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let hot = process_logits(&[1.0, 2.0], 1.0, 1.0);
+        let cold = process_logits(&[1.0, 2.0], 0.25, 1.0);
+        assert!(cold.probs()[1] > hot.probs()[1]);
+    }
+
+    #[test]
+    fn nucleus_drops_tail_and_renormalizes() {
+        // probs ~ [0.6, 0.3, 0.1]; top_p = 0.8 keeps two tokens
+        let logits = [0.6f32.ln(), 0.3f32.ln(), 0.1f32.ln()];
+        let lp = process_logits(&logits, 1.0, 0.8);
+        assert_eq!(lp.0[2], NEG_INF);
+        let p = lp.probs();
+        assert!((p[0] + p[1] - 1.0).abs() < 1e-9);
+        assert!((p[0] / p[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gumbel_top_k_skips_filtered_and_orders() {
+        let lp = LogProbs(vec![-0.5, NEG_INF, -1.5, -0.7]);
+        let mut r = rng(0);
+        for _ in 0..50 {
+            let out = gumbel_top_k(&lp, 3, &mut r);
+            assert_eq!(out.len(), 3);
+            assert!(out.iter().all(|&(i, _)| i != 1));
+            assert!(out.windows(2).all(|w| w[0].1 >= w[1].1));
+        }
+    }
+
+    /// Gumbel-Top-1 must sample from the categorical itself.
+    #[test]
+    fn gumbel_top_one_matches_categorical() {
+        let probs = [0.5, 0.2, 0.25, 0.05];
+        let lp = LogProbs(probs.iter().map(|p| (*p as f64).ln()).collect());
+        let mut r = rng(7);
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[gumbel_top_k(&lp, 1, &mut r)[0].0] += 1;
+        }
+        for i in 0..4 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!((emp - probs[i]).abs() < 0.005, "{i}: {emp} vs {}", probs[i]);
+        }
+    }
+
+    /// The first TWO Gumbel-Top-k outputs must follow sampling without
+    /// replacement: P(first=i, second=j) = p_i * p_j / (1 - p_i).
+    #[test]
+    fn gumbel_top_two_is_without_replacement() {
+        let probs = [0.5, 0.3, 0.2];
+        let lp = LogProbs(probs.iter().map(|p| (*p as f64).ln()).collect());
+        let mut r = rng(42);
+        let n = 300_000;
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..n {
+            let out = gumbel_top_k(&lp, 2, &mut r);
+            *counts.entry((out[0].0, out[1].0)).or_insert(0usize) += 1;
+        }
+        for i in 0..3 {
+            for j in 0..3 {
+                if i == j {
+                    continue;
+                }
+                let expect = probs[i] * probs[j] / (1.0 - probs[i]);
+                let emp = *counts.get(&(i, j)).unwrap_or(&0) as f64 / n as f64;
+                assert!((emp - expect).abs() < 0.01, "({i},{j}): {emp} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_gumbel_bounded_and_monotone() {
+        let phi = vec![-1.0, 0.5, -3.0, 0.2];
+        let z = phi.iter().cloned().fold(NEG_INF, f64::max);
+        let u = -0.3;
+        let out = truncated_gumbel(u, z, &phi);
+        for &o in &out {
+            assert!(o <= u + 1e-12, "{o} > {u}");
+        }
+        // monotone in phi
+        let mut pairs: Vec<(f64, f64)> = phi.iter().cloned().zip(out.iter().cloned()).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        assert!(pairs.windows(2).all(|w| w[0].1 <= w[1].1));
+        // the argmax child attains exactly u
+        let imax = phi.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert!((out[imax] - u).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_basic() {
+        let q = [0.5, 0.5];
+        let p = [0.8, 0.2];
+        let r = residual(&q, &p).unwrap();
+        assert!((r[0] - 0.0).abs() < 1e-12);
+        assert!((r[1] - 1.0).abs() < 1e-12);
+        assert!(residual(&q, &q).is_none());
+    }
+
+    #[test]
+    fn categorical_empirical() {
+        let p = [0.1, 0.6, 0.3];
+        let mut r = rng(3);
+        let n = 100_000;
+        let mut c = [0usize; 3];
+        for _ in 0..n {
+            c[sample_categorical(&p, &mut r)] += 1;
+        }
+        for i in 0..3 {
+            assert!((c[i] as f64 / n as f64 - p[i]).abs() < 0.01);
+        }
+    }
+}

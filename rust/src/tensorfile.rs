@@ -1,0 +1,148 @@
+//! safetensors-lite reader: the weights interchange format produced by
+//! `python/compile/tensorfile.py`.
+//!
+//! Layout: `[u64 LE header_len][header JSON][raw tensor data]`, tensors
+//! raw little-endian C-contiguous. See the python writer for the header
+//! schema.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One named tensor loaded from a `.tensors` file.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    /// Raw little-endian bytes (length = product(shape) * 4).
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is not f32");
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// All tensors in a file, keyed by name (ordered for determinism).
+pub type Tensors = BTreeMap<String, Tensor>;
+
+pub fn load(path: impl AsRef<Path>) -> Result<Tensors> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening tensors file {}", path.display()))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8).context("reading header length")?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    if hlen > 16 << 20 {
+        bail!("implausible header length {hlen}");
+    }
+    let mut hjson = vec![0u8; hlen];
+    f.read_exact(&mut hjson).context("reading header json")?;
+    let htext = std::str::from_utf8(&hjson).context("header not utf-8")?;
+    let header = Json::parse(htext).context("parsing header json")?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data).context("reading data section")?;
+
+    let mut out = Tensors::new();
+    for (name, e) in header.as_obj().context("header must be an object")? {
+        let dtype = match e.str_field("dtype")? {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("{name}: unsupported dtype {other}"),
+        };
+        let shape: Vec<usize> = e
+            .get("shape")
+            .and_then(Json::as_arr)
+            .with_context(|| format!("{name}: shape missing"))?
+            .iter()
+            .map(|x| x.as_usize().with_context(|| format!("{name}: bad shape entry")))
+            .collect::<Result<_>>()?;
+        let offset = e.usize_field("offset")?;
+        let nbytes = e.usize_field("nbytes")?;
+        let want: usize = shape.iter().product::<usize>() * 4;
+        if want != nbytes {
+            bail!("{name}: shape/nbytes mismatch ({want} != {nbytes})");
+        }
+        let end = offset + nbytes;
+        if end > data.len() {
+            bail!("{name}: data range {offset}..{end} out of bounds ({})", data.len());
+        }
+        out.insert(
+            name.clone(),
+            Tensor { dtype, shape, data: data[offset..end].to_vec() },
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_file(dir: &std::path::Path, header: &str, data: &[u8]) -> std::path::PathBuf {
+        let p = dir.join("t.tensors");
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        f.write_all(data).unwrap();
+        p
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        let dir = std::env::temp_dir().join(format!("tf_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = vec![1.0, -2.5, 3.25, 0.0, 7.0, 8.0];
+        let mut data = Vec::new();
+        for v in &vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        let header = r#"{"a": {"dtype": "f32", "shape": [2, 3], "offset": 0, "nbytes": 24}}"#;
+        let p = write_file(&dir, header, &data);
+        let t = load(&p).unwrap();
+        let a = &t["a"];
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(a.as_f32().unwrap(), vals);
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        let dir = std::env::temp_dir().join(format!("tf_test_oob_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let header = r#"{"a": {"dtype": "f32", "shape": [4], "offset": 0, "nbytes": 16}}"#;
+        let p = write_file(&dir, header, &[0u8; 8]);
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join(format!("tf_test_sm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let header = r#"{"a": {"dtype": "f32", "shape": [4], "offset": 0, "nbytes": 12}}"#;
+        let p = write_file(&dir, header, &[0u8; 16]);
+        assert!(load(&p).is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Byte-level tokenizer over the synthetic corpus alphabet.
+//!
+//! Tokens are alphabet indices (0..32); the model vocab is 256 so any
+//! byte value round-trips, but corpus text only uses the 32-symbol
+//! alphabet defined in python/compile/corpus.py (kept in sync by test).
+
+pub const ALPHABET: &str = "abcdefghijklmnopqrstuvwxyz .,;\n'";
+
+pub struct Tokenizer {
+    to_id: [Option<u8>; 128],
+    to_ch: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut to_id = [None; 128];
+        let to_ch: Vec<char> = ALPHABET.chars().collect();
+        for (i, c) in to_ch.iter().enumerate() {
+            to_id[*c as usize] = Some(i as u8);
+        }
+        Self { to_id, to_ch }
+    }
+
+    /// Encode text; characters outside the alphabet map to space.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let space = ALPHABET.find(' ').unwrap() as u32;
+        text.chars()
+            .map(|c| {
+                let lc = c.to_ascii_lowercase();
+                if (lc as usize) < 128 {
+                    self.to_id[lc as usize].map(|x| x as u32).unwrap_or(space)
+                } else {
+                    space
+                }
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| *self.to_ch.get(t as usize).unwrap_or(&'?'))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tk = Tokenizer::new();
+        let s = "hello world, this is rsd;\n'quoted'";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn unknown_maps_to_space() {
+        let tk = Tokenizer::new();
+        assert_eq!(tk.decode(&tk.encode("a#b")), "a b");
+    }
+
+    #[test]
+    fn alphabet_is_32_symbols() {
+        assert_eq!(ALPHABET.chars().count(), 32);
+    }
+}

@@ -1,0 +1,271 @@
+//! Session bookkeeping substrate: slot allocation, tree topology,
+//! visibility (attention-mask rows) and the zero-copy KV filter.
+//!
+//! The KV cache itself lives wherever the [`crate::llm::Llm`]
+//! implementation keeps it (device literals for PJRT, nothing for the
+//! sim). What is shared is the *index structure*: every live token owns a
+//! cache slot; the committed prefix is an ordered slot list; pending
+//! (draft-tree) nodes form a forest hanging off the prefix tail. Paper
+//! Alg. 5 `BuildAttentionMask` and Alg. 2/7 step 4 `FilterKVCache` are
+//! both pure index operations here — accepting a path never copies cache
+//! contents.
+
+use anyhow::{bail, Result};
+
+use crate::llm::{EvalNode, PARENT_PREFIX};
+
+#[derive(Debug, Clone)]
+pub struct Pending {
+    pub token: u32,
+    pub parent: i64,
+    pub slot: u32,
+    /// Depth below the prefix tail (root nodes = 0).
+    pub depth: u32,
+}
+
+/// Core session state shared by all `Llm` implementations.
+#[derive(Debug, Clone)]
+pub struct SessionCore {
+    pub prefix_tokens: Vec<u32>,
+    pub prefix_slots: Vec<u32>,
+    pub pending: Vec<Pending>,
+    free: Vec<u32>,
+    /// One reserved slot that padding rows scatter their KV into; never
+    /// attended, never allocated.
+    pub scratch_slot: u32,
+}
+
+impl SessionCore {
+    /// `cache_len` total slots; the last is reserved as scratch.
+    pub fn new(cache_len: usize) -> Self {
+        assert!(cache_len >= 2, "cache too small");
+        let scratch = (cache_len - 1) as u32;
+        // allocate low slots first (pop from the back)
+        let free: Vec<u32> = (0..scratch).rev().collect();
+        Self {
+            prefix_tokens: Vec::new(),
+            prefix_slots: Vec::new(),
+            pending: Vec::new(),
+            free,
+            scratch_slot: scratch,
+        }
+    }
+
+    pub fn capacity_left(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn prefix_len(&self) -> usize {
+        self.prefix_tokens.len()
+    }
+
+    /// Logical position of a pending node = prefix_len + depth.
+    pub fn position(&self, pending_idx: usize) -> u32 {
+        self.prefix_len() as u32 + self.pending[pending_idx].depth
+    }
+
+    /// Append nodes, assigning slots and validating topology. Returns the
+    /// pending-index range of the new nodes.
+    pub fn add_pending(&mut self, nodes: &[EvalNode]) -> Result<std::ops::Range<usize>> {
+        if nodes.len() > self.free.len() {
+            bail!(
+                "KV cache exhausted: need {} slots, {} free",
+                nodes.len(),
+                self.free.len()
+            );
+        }
+        let start = self.pending.len();
+        for (i, n) in nodes.iter().enumerate() {
+            let depth = if n.parent == PARENT_PREFIX {
+                0
+            } else {
+                let p = n.parent as usize;
+                if p >= start + i {
+                    bail!("node {} references parent {} not yet evaluated", start + i, p);
+                }
+                self.pending[p].depth + 1
+            };
+            let slot = self.free.pop().expect("checked above");
+            self.pending.push(Pending { token: n.token, parent: n.parent, slot, depth });
+        }
+        Ok(start..self.pending.len())
+    }
+
+    /// Cache slots visible to a pending node: the whole committed prefix,
+    /// its pending ancestors, and itself. Ordered (prefix order, then
+    /// root-to-self) — order is irrelevant to attention but keeps tests
+    /// simple.
+    pub fn visible_slots(&self, pending_idx: usize) -> Vec<u32> {
+        let mut anc = Vec::new();
+        let mut cur = pending_idx as i64;
+        while cur != PARENT_PREFIX {
+            let p = &self.pending[cur as usize];
+            anc.push(p.slot);
+            cur = p.parent;
+        }
+        anc.reverse();
+        let mut out = self.prefix_slots.clone();
+        out.extend(anc);
+        out
+    }
+
+    /// Token path from the start of the sequence through a pending node
+    /// (prefix tokens + ancestor chain + self). Used by the sim LM.
+    pub fn context_tokens(&self, pending_idx: usize) -> Vec<u32> {
+        let mut anc = Vec::new();
+        let mut cur = pending_idx as i64;
+        while cur != PARENT_PREFIX {
+            let p = &self.pending[cur as usize];
+            anc.push(p.token);
+            cur = p.parent;
+        }
+        anc.reverse();
+        let mut out = self.prefix_tokens.clone();
+        out.extend(anc);
+        out
+    }
+
+    /// Commit an accepted rootward chain into the prefix and free all
+    /// other pending slots (zero-copy `FilterKVCache`).
+    pub fn commit(&mut self, accepted: &[usize]) -> Result<()> {
+        // validate chain structure
+        let mut expect_parent = PARENT_PREFIX;
+        for &idx in accepted {
+            if idx >= self.pending.len() {
+                bail!("commit index {idx} out of range");
+            }
+            if self.pending[idx].parent != expect_parent {
+                bail!(
+                    "commit chain broken at {idx}: parent {} != expected {}",
+                    self.pending[idx].parent,
+                    expect_parent
+                );
+            }
+            expect_parent = idx as i64;
+        }
+        let keep: std::collections::HashSet<usize> = accepted.iter().copied().collect();
+        for &idx in accepted {
+            let p = &self.pending[idx];
+            self.prefix_tokens.push(p.token);
+            self.prefix_slots.push(p.slot);
+        }
+        for (i, p) in self.pending.iter().enumerate() {
+            if !keep.contains(&i) {
+                self.free.push(p.slot);
+            }
+        }
+        self.pending.clear();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::EvalNode;
+
+    #[test]
+    fn slots_unique_and_bounded() {
+        let mut s = SessionCore::new(16);
+        let r = s
+            .add_pending(&[
+                EvalNode::root(1),
+                EvalNode::child(2, 0),
+                EvalNode::child(3, 0),
+                EvalNode::child(4, 1),
+            ])
+            .unwrap();
+        assert_eq!(r, 0..4);
+        let mut slots: Vec<u32> = s.pending.iter().map(|p| p.slot).collect();
+        slots.sort();
+        slots.dedup();
+        assert_eq!(slots.len(), 4);
+        assert!(slots.iter().all(|&x| x < 15)); // scratch = 15 never allocated
+    }
+
+    #[test]
+    fn depth_and_position() {
+        let mut s = SessionCore::new(16);
+        s.add_pending(&[EvalNode::root(1), EvalNode::child(2, 0)]).unwrap();
+        s.commit(&[0, 1]).unwrap();
+        assert_eq!(s.prefix_len(), 2);
+        s.add_pending(&[EvalNode::root(5), EvalNode::child(6, 0), EvalNode::child(7, 1)])
+            .unwrap();
+        assert_eq!(s.position(0), 2);
+        assert_eq!(s.position(2), 4);
+    }
+
+    #[test]
+    fn visibility_is_prefix_plus_ancestors() {
+        let mut s = SessionCore::new(32);
+        s.add_pending(&[EvalNode::root(1)]).unwrap();
+        s.commit(&[0]).unwrap();
+        // tree: a(root) -> {b, c}; b -> d
+        s.add_pending(&[
+            EvalNode::root(10),      // a = 0
+            EvalNode::child(11, 0),  // b = 1
+            EvalNode::child(12, 0),  // c = 2
+            EvalNode::child(13, 1),  // d = 3
+        ])
+        .unwrap();
+        let slot = |i: usize| s.pending[i].slot;
+        let pfx = s.prefix_slots[0];
+        assert_eq!(s.visible_slots(0), vec![pfx, slot(0)]);
+        assert_eq!(s.visible_slots(3), vec![pfx, slot(0), slot(1), slot(3)]);
+        // sibling c must NOT see b
+        assert!(!s.visible_slots(2).contains(&slot(1)));
+    }
+
+    #[test]
+    fn commit_frees_rejected_and_reuses_slots() {
+        let mut s = SessionCore::new(8); // 7 usable slots
+        s.add_pending(&[
+            EvalNode::root(1),
+            EvalNode::child(2, 0),
+            EvalNode::child(3, 0),
+            EvalNode::child(4, 1),
+            EvalNode::child(5, 2),
+        ])
+        .unwrap();
+        assert_eq!(s.capacity_left(), 2);
+        s.commit(&[0, 1, 3]).unwrap(); // accept a->b->d; free c, e
+        assert_eq!(s.prefix_tokens, vec![1, 2, 4]);
+        assert_eq!(s.capacity_left(), 4);
+        // freed slots get reused
+        s.add_pending(&[EvalNode::root(9), EvalNode::child(8, 0)]).unwrap();
+        assert_eq!(s.capacity_left(), 2);
+    }
+
+    #[test]
+    fn commit_rejects_broken_chain() {
+        let mut s = SessionCore::new(16);
+        s.add_pending(&[EvalNode::root(1), EvalNode::child(2, 0), EvalNode::child(3, 0)])
+            .unwrap();
+        assert!(s.commit(&[1]).is_err()); // does not start at prefix
+        assert!(s.commit(&[0, 2, 1]).is_err()); // 1 is not child of 2
+    }
+
+    #[test]
+    fn context_tokens_follow_path() {
+        let mut s = SessionCore::new(16);
+        s.add_pending(&[EvalNode::root(7)]).unwrap();
+        s.commit(&[0]).unwrap();
+        s.add_pending(&[EvalNode::root(1), EvalNode::child(2, 0), EvalNode::child(3, 0)])
+            .unwrap();
+        assert_eq!(s.context_tokens(1), vec![7, 1, 2]);
+        assert_eq!(s.context_tokens(2), vec![7, 1, 3]);
+    }
+
+    #[test]
+    fn cache_exhaustion_errors() {
+        let mut s = SessionCore::new(4); // 3 usable
+        assert!(s
+            .add_pending(&[
+                EvalNode::root(1),
+                EvalNode::child(2, 0),
+                EvalNode::child(3, 1),
+                EvalNode::child(4, 2)
+            ])
+            .is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Flag-style argument parser for the CLI (replaces `clap`, unavailable
+//! in this offline build). Supports `--flag value`, `--flag=value`,
+//! boolean `--flag`, and positional subcommands.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse an iterator of raw args (without argv[0]). `bools` lists
+    /// flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bools: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if bools.contains(&name) {
+                    out.flags.entry(name.to_string()).or_default().push("true".into());
+                } else {
+                    match it.next() {
+                        Some(v) => out.flags.entry(name.to_string()).or_default().push(v),
+                        None => bail!("flag --{name} expects a value"),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|x| x.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("--{name}: {e}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(sv(&["exp1", "--dl", "2,3", "--sim", "--reps=5"]), &["sim"]).unwrap();
+        assert_eq!(a.positional, vec!["exp1"]);
+        assert_eq!(a.get("dl"), Some("2,3"));
+        assert!(a.has("sim"));
+        assert_eq!(a.parse_or("reps", 0usize).unwrap(), 5);
+        assert_eq!(a.list_or("dl", &[]).unwrap(), vec![2, 3]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(sv(&["--x"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(sv(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("addr", "1.2.3.4:5"), "1.2.3.4:5");
+        assert_eq!(a.parse_or("n", 7u32).unwrap(), 7);
+    }
+}

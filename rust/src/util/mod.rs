@@ -1,0 +1,15 @@
+//! In-repo substrates for an offline build: PRNG, JSON, CLI args.
+//!
+//! The build environment ships only the `xla` crate's dependency closure,
+//! so the utilities a serving framework would normally take from
+//! crates.io are implemented here from scratch (DESIGN.md §2): a
+//! xoshiro256++ PRNG with the distribution helpers the decoders need, a
+//! small recursive-descent JSON parser/serializer (manifest, wire
+//! protocol, configs), and a flag-style argument parser for the CLI.
+
+pub mod args;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

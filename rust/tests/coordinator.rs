@@ -1,0 +1,246 @@
+//! Coordinator integration tests on the sim substrate: the engine's
+//! continuous batching, admission control, overrides, and fairness.
+
+use std::sync::mpsc;
+
+use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::engine::{spawn, Engine, Event, Request};
+use rsd::sim::SimLm;
+
+fn engine_cfg(max_concurrency: usize, max_queue: usize) -> EngineConfig {
+    EngineConfig {
+        max_concurrency,
+        max_queue,
+        default_max_tokens: 16,
+        sampling: SamplingConfig { temperature: 0.5, top_p: 1.0 },
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed: 7,
+    }
+}
+
+fn request(id: u64, max_new: usize, resp: mpsc::Sender<Event>) -> Request {
+    Request { id, prompt: vec![1, 2, 3], max_new, decoder: None, sampling: None, resp }
+}
+
+#[test]
+fn all_requests_complete_with_exact_token_counts() {
+    let (target, draft) = SimLm::pair(0, 0.8, 64);
+    let engine = Engine::new(target, draft, engine_cfg(3, 64));
+    let (tx, handle) = spawn(engine);
+
+    let mut receivers = Vec::new();
+    for i in 0..8u64 {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(request(i, 10 + i as usize, rtx)).unwrap();
+        receivers.push((i, rrx));
+    }
+    drop(tx);
+
+    for (i, rrx) in receivers {
+        let mut tokens = Vec::new();
+        let mut done = false;
+        while let Ok(ev) = rrx.recv() {
+            match ev {
+                Event::Tokens(t) => tokens.extend(t),
+                Event::Done(stats) => {
+                    assert_eq!(stats.generated, 10 + i as usize);
+                    done = true;
+                    break;
+                }
+                Event::Error(e) => panic!("request {i}: {e}"),
+            }
+        }
+        assert!(done, "request {i} did not finish");
+        assert_eq!(tokens.len(), 10 + i as usize);
+    }
+    let metrics = handle.join().unwrap();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.rejected, 0);
+    assert_eq!(snap.tokens_out, (0..8).map(|i| 10 + i).sum::<u64>());
+}
+
+#[test]
+fn queue_overflow_is_shed_with_error() {
+    let (target, draft) = SimLm::pair(1, 0.8, 64);
+    // concurrency 1, queue 2: the 4th+ concurrent offer can be shed
+    let engine = Engine::new(target, draft, engine_cfg(1, 2));
+    let (tx, handle) = spawn(engine);
+
+    let mut receivers = Vec::new();
+    for i in 0..12u64 {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(request(i, 200, rtx)).unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+
+    let mut completed = 0;
+    let mut shed = 0;
+    for rrx in receivers {
+        while let Ok(ev) = rrx.recv() {
+            match ev {
+                Event::Done(_) => {
+                    completed += 1;
+                    break;
+                }
+                Event::Error(e) => {
+                    assert!(e.contains("queue full"), "{e}");
+                    shed += 1;
+                    break;
+                }
+                Event::Tokens(_) => {}
+            }
+        }
+    }
+    let metrics = handle.join().unwrap();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.completed as usize, completed);
+    assert_eq!(snap.rejected as usize, shed);
+    assert!(shed > 0, "expected at least one shed request");
+    assert_eq!(completed + shed, 12);
+}
+
+#[test]
+fn per_request_decoder_override_applies() {
+    let (target, draft) = SimLm::pair(2, 0.9, 64);
+    let engine = Engine::new(target, draft, engine_cfg(2, 16));
+    let (tx, handle) = spawn(engine);
+
+    // AR override: stats must show zero draft calls and eff == 1
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request {
+        id: 1,
+        prompt: vec![4, 5],
+        max_new: 12,
+        decoder: Some(DecoderConfig::Ar),
+        sampling: None,
+        resp: rtx,
+    })
+    .unwrap();
+    // RSD-C override
+    let (rtx2, rrx2) = mpsc::channel();
+    tx.send(Request {
+        id: 2,
+        prompt: vec![4, 5],
+        max_new: 12,
+        decoder: Some(DecoderConfig::RsdC { branches: vec![2, 2] }),
+        sampling: None,
+        resp: rtx2,
+    })
+    .unwrap();
+    drop(tx);
+
+    let stats_of = |rrx: mpsc::Receiver<Event>| loop {
+        match rrx.recv().unwrap() {
+            Event::Done(s) => return s,
+            Event::Error(e) => panic!("{e}"),
+            _ => {}
+        }
+    };
+    let s1 = stats_of(rrx);
+    let s2 = stats_of(rrx2);
+    assert_eq!(s1.draft_calls, 0, "AR must not touch the draft model");
+    assert!((s1.block_efficiency() - 1.0).abs() < 1e-9);
+    assert!(s2.draft_calls > 0);
+    assert!(s2.tree_nodes > 0);
+    handle.join().unwrap();
+}
+
+/// Round-level fairness: with two long concurrent requests, both must
+/// stream tokens before either finishes (continuous batching, not FCFS
+/// run-to-completion).
+#[test]
+fn concurrent_requests_interleave() {
+    let (target, draft) = SimLm::pair(3, 0.8, 64);
+    let engine = Engine::new(target, draft, engine_cfg(2, 8));
+    let (tx, handle) = spawn(engine);
+
+    let (rtx_a, rrx_a) = mpsc::channel();
+    let (rtx_b, rrx_b) = mpsc::channel();
+    tx.send(request(1, 64, rtx_a)).unwrap();
+    tx.send(request(2, 64, rtx_b)).unwrap();
+    drop(tx);
+
+    // collect the event interleaving as (who, is_done)
+    let mut a_first_tokens = false;
+    let mut b_first_tokens = false;
+    let mut a_done = false;
+    let mut b_done = false;
+    // drain both receivers; order across channels is unknowable, but both
+    // must produce Tokens before either produces Done IF fairness holds.
+    let mut a_tokens_before_b_done = false;
+    let mut b_tokens_before_a_done = false;
+    loop {
+        let mut progressed = false;
+        if !a_done {
+            if let Ok(ev) = rrx_a.try_recv() {
+                progressed = true;
+                match ev {
+                    Event::Tokens(_) => {
+                        a_first_tokens = true;
+                        if !b_done {
+                            a_tokens_before_b_done = true;
+                        }
+                    }
+                    Event::Done(_) => a_done = true,
+                    Event::Error(e) => panic!("{e}"),
+                }
+            }
+        }
+        if !b_done {
+            if let Ok(ev) = rrx_b.try_recv() {
+                progressed = true;
+                match ev {
+                    Event::Tokens(_) => {
+                        b_first_tokens = true;
+                        if !a_done {
+                            b_tokens_before_a_done = true;
+                        }
+                    }
+                    Event::Done(_) => b_done = true,
+                    Event::Error(e) => panic!("{e}"),
+                }
+            }
+        }
+        if a_done && b_done {
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+    assert!(a_first_tokens && b_first_tokens);
+    assert!(a_tokens_before_b_done && b_tokens_before_a_done, "no interleaving observed");
+    handle.join().unwrap();
+}
+
+/// Metrics snapshot is consistent after a burst.
+#[test]
+fn metrics_are_consistent() {
+    let (target, draft) = SimLm::pair(4, 0.85, 64);
+    let engine = Engine::new(target, draft, engine_cfg(4, 64));
+    let (tx, handle) = spawn(engine);
+    let mut receivers = Vec::new();
+    for i in 0..6u64 {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(request(i, 20, rtx)).unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+    for rrx in receivers {
+        while let Ok(ev) = rrx.recv() {
+            if matches!(ev, Event::Done(_) | Event::Error(_)) {
+                break;
+            }
+        }
+    }
+    let snap = handle.join().unwrap().snapshot();
+    assert_eq!(snap.admitted, 6);
+    assert_eq!(snap.completed, 6);
+    assert_eq!(snap.tokens_out, 120);
+    assert!(snap.decode_rounds >= snap.completed);
+    assert!(snap.latency_p50 > 0.0);
+    assert!(snap.ttft_p50 > 0.0);
+    assert!(snap.latency_p95 >= snap.latency_p50);
+}

@@ -1,0 +1,255 @@
+//! Property-based tests (in-repo harness: seeded random case sweeps, the
+//! offline substitute for proptest): the paper's two theorems plus the
+//! coordinator-state invariants.
+
+use rsd::decode::rrs::{LevelOutcome, Rrs, VerifyRule};
+use rsd::llm::EvalNode;
+use rsd::sampling::{gumbel_top_k, process_logits, sample_categorical, tv_distance, LogProbs};
+use rsd::tree::SessionCore;
+use rsd::util::{Json, Rng};
+
+fn random_dist(rng: &mut Rng, n: usize, sharp: f64) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..n).map(|_| (-(rng.gen_f64_open()).ln()).powf(sharp)).collect();
+    let z: f64 = v.iter().sum();
+    for x in &mut v {
+        *x /= z;
+    }
+    v
+}
+
+fn lp(probs: &[f64]) -> LogProbs {
+    LogProbs(probs.iter().map(|&p| if p > 0.0 { p.ln() } else { f64::NEG_INFINITY }).collect())
+}
+
+/// Theorem 3.1, swept over random (p, q, K): siblings drawn without
+/// replacement via Gumbel-Top-k + RRS must recover q exactly.
+#[test]
+fn prop_rrs_recovers_target_over_random_instances() {
+    let mut meta = Rng::seed_from_u64(0xabc);
+    for case in 0..12 {
+        let n = 3 + meta.gen_range(6); // vocab 3..8
+        let k = 1 + meta.gen_range(n.min(4)); // 1..4 siblings
+        let sharp_p = 1.0 + meta.gen_f64() * 2.0;
+        let sharp_q = 1.0 + meta.gen_f64() * 2.0;
+        let p = random_dist(&mut meta, n, sharp_p);
+        let q = random_dist(&mut meta, n, sharp_q);
+        let plp = lp(&p);
+        let qlp = lp(&q);
+        let mut rng = Rng::seed_from_u64(case);
+        let trials = 120_000;
+        let mut hist = vec![0f64; n];
+        for _ in 0..trials {
+            let sib: Vec<u32> =
+                gumbel_top_k(&plp, k, &mut rng).iter().map(|&(i, _)| i as u32).collect();
+            let tok = match Rrs.verify(&sib, &plp, &qlp, &mut rng) {
+                LevelOutcome::Accept { pos } => sib[pos],
+                LevelOutcome::Reject { token } => token,
+            };
+            hist[tok as usize] += 1.0;
+        }
+        for h in &mut hist {
+            *h /= trials as f64;
+        }
+        let tv = tv_distance(&hist, &q);
+        assert!(tv < 0.012, "case {case} (n={n}, k={k}): TV {tv}");
+    }
+}
+
+/// Theorem 3.2: Stochastic Beam Search siblings of a common parent follow
+/// sampling without replacement from p(.|parent). We verify the exact
+/// K=2 joint: P(first=i, second=j) = p_i p_j / (1 - p_i), where
+/// first/second are the top-2 by truncated-Gumbel psi under one parent.
+#[test]
+fn prop_sbs_siblings_without_replacement() {
+    use rsd::sampling::{gumbel, truncated_gumbel};
+    let mut meta = Rng::seed_from_u64(0x5b5);
+    for case in 0..4 {
+        let n = 3 + meta.gen_range(3);
+        let p = random_dist(&mut meta, n, 1.5);
+        let plp = lp(&p);
+        let mut rng = Rng::seed_from_u64(case + 100);
+        let trials = 150_000;
+        let mut joint = std::collections::HashMap::new();
+        for _ in 0..trials {
+            // one SBS expansion from a parent with psi_parent = 0
+            let phi_tilde: Vec<f64> = plp.0.iter().map(|&l| l + gumbel(&mut rng)).collect();
+            let z = phi_tilde.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let psi = truncated_gumbel(0.0, z, &phi_tilde);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| psi[b].partial_cmp(&psi[a]).unwrap());
+            *joint.entry((idx[0], idx[1])).or_insert(0usize) += 1;
+        }
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let expect = p[i] * p[j] / (1.0 - p[i]);
+                let emp = *joint.get(&(i, j)).unwrap_or(&0) as f64 / trials as f64;
+                assert!(
+                    (emp - expect).abs() < 0.012,
+                    "case {case} ({i},{j}): {emp} vs {expect}"
+                );
+            }
+        }
+    }
+}
+
+/// Coordinator-state invariant: under random add/commit sequences, slots
+/// stay unique, capacity accounting is exact, and committed prefixes grow
+/// consistently (the zero-copy FilterKVCache can never leak or alias).
+#[test]
+fn prop_session_core_slot_invariants() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let cache = 24 + rng.gen_range(40);
+        let mut s = SessionCore::new(cache);
+        let total_slots = cache - 1;
+        for _round in 0..30 {
+            // random forest of 1..8 nodes
+            let n = 1 + rng.gen_range(8);
+            if s.capacity_left() < n {
+                break;
+            }
+            let mut nodes = Vec::new();
+            for i in 0..n {
+                let node = if i == 0 || rng.gen_f64() < 0.3 {
+                    EvalNode::root(rng.gen_range(64) as u32)
+                } else {
+                    EvalNode::child(rng.gen_range(64) as u32, rng.gen_range(i))
+                };
+                nodes.push(node);
+            }
+            let before_free = s.capacity_left();
+            let range = s.add_pending(&nodes).unwrap();
+            assert_eq!(s.capacity_left(), before_free - n);
+
+            // slots unique across prefix + pending
+            let mut all: Vec<u32> = s.prefix_slots.clone();
+            all.extend(s.pending.iter().map(|p| p.slot));
+            let len = all.len();
+            all.sort();
+            all.dedup();
+            assert_eq!(all.len(), len, "seed {seed}: slot aliasing");
+            assert!(all.iter().all(|&x| (x as usize) < total_slots));
+
+            // commit a random chain starting from a root node
+            let roots: Vec<usize> =
+                range.clone().filter(|&i| s.pending[i].parent == -1).collect();
+            let mut chain = vec![roots[rng.gen_range(roots.len())]];
+            loop {
+                let last = *chain.last().unwrap();
+                let kids: Vec<usize> = range
+                    .clone()
+                    .filter(|&i| s.pending[i].parent == last as i64)
+                    .collect();
+                if kids.is_empty() || rng.gen_f64() < 0.4 {
+                    break;
+                }
+                chain.push(kids[rng.gen_range(kids.len())]);
+            }
+            let prefix_before = s.prefix_len();
+            s.commit(&chain).unwrap();
+            assert_eq!(s.prefix_len(), prefix_before + chain.len());
+            assert!(s.pending.is_empty());
+            // conservation: free + prefix == total
+            assert_eq!(s.capacity_left() + s.prefix_len(), total_slots, "seed {seed}");
+        }
+    }
+}
+
+/// JSON round-trip over randomly generated documents.
+#[test]
+fn prop_json_roundtrip_random_docs() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_f64() < 0.5),
+            2 => Json::Num((rng.gen_f64() * 2000.0 - 1000.0 * rng.gen_f64()).round() / 8.0),
+            3 => {
+                let alphabet: Vec<char> = "ab\"\\\nπé x".chars().collect();
+                let n = rng.gen_range(8);
+                Json::Str((0..n).map(|_| alphabet[rng.gen_range(alphabet.len())]).collect())
+            }
+            4 => Json::Arr((0..rng.gen_range(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..200 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let doc = gen(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, doc, "seed {seed}: {text}");
+    }
+}
+
+/// Degenerate corners of RRS.
+#[test]
+fn prop_rrs_corner_cases() {
+    let mut rng = Rng::seed_from_u64(9);
+    // q concentrated where p is not
+    let p = lp(&[0.98, 0.01, 0.01]);
+    let q = lp(&[0.0, 0.0, 1.0]);
+    for _ in 0..2000 {
+        let sib: Vec<u32> =
+            gumbel_top_k(&p, 2, &mut rng).iter().map(|&(i, _)| i as u32).collect();
+        let tok = match Rrs.verify(&sib, &p, &q, &mut rng) {
+            LevelOutcome::Accept { pos } => sib[pos],
+            LevelOutcome::Reject { token } => token,
+        };
+        assert_eq!(tok, 2, "must always emit the only q-supported token");
+    }
+    // identical p == q: the first sibling is always accepted
+    let d = lp(&[0.25, 0.75]);
+    for _ in 0..2000 {
+        let x = sample_categorical(&d.probs(), &mut rng) as u32;
+        assert!(matches!(Rrs.verify(&[x], &d, &d, &mut rng), LevelOutcome::Accept { pos: 0 }));
+    }
+}
+
+/// process_logits + nucleus filtering invariants over random logits: the
+/// kept set is always a probability-sorted prefix and renormalizes to 1.
+#[test]
+fn prop_nucleus_keeps_top_mass() {
+    let mut rng = Rng::seed_from_u64(77);
+    for _ in 0..100 {
+        let n = 4 + rng.gen_range(60);
+        let logits: Vec<f32> = (0..n).map(|_| (rng.gen_f64() * 8.0 - 4.0) as f32).collect();
+        let top_p = 0.5 + rng.gen_f64() * 0.45;
+        let lp = process_logits(&logits, 1.0, top_p as f32);
+        let full = process_logits(&logits, 1.0, 1.0);
+        let probs = lp.probs();
+        let sum: f64 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        // kept mass under the unfiltered distribution reaches top_p
+        let kept_mass: f64 = full
+            .probs()
+            .iter()
+            .zip(&lp.0)
+            .filter(|(_, &l)| l.is_finite())
+            .map(|(&p, _)| p)
+            .sum();
+        assert!(kept_mass >= top_p - 1e-9, "kept {kept_mass} < {top_p}");
+        // every kept token is at least as probable as every dropped one
+        let min_kept = full
+            .0
+            .iter()
+            .zip(&lp.0)
+            .filter(|(_, &l)| l.is_finite())
+            .map(|(&f, _)| f)
+            .fold(f64::INFINITY, f64::min);
+        let max_dropped = full
+            .0
+            .iter()
+            .zip(&lp.0)
+            .filter(|(_, &l)| !l.is_finite())
+            .map(|(&f, _)| f)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(min_kept >= max_dropped - 1e-12);
+    }
+}

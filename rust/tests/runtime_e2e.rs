@@ -1,0 +1,200 @@
+//! End-to-end tests over the REAL three-layer stack: AOT HLO artifacts
+//! loaded through PJRT, exercised by the same decoders as the sim tests.
+//!
+//! Requires `make artifacts` to have run (the repo ships a Makefile rule;
+//! tests fail with a clear message otherwise).
+
+use rsd::config::{DecoderConfig, SamplingConfig};
+use rsd::decode::generate;
+use rsd::llm::{EvalNode, Llm};
+use rsd::model::PjrtLm;
+use rsd::runtime::Runtime;
+use rsd::sampling::process_logits;
+use rsd::tokenizer::Tokenizer;
+use rsd::util::Rng;
+
+fn artifacts_dir() -> String {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        manifest.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    manifest.to_string_lossy().into_owned()
+}
+
+fn load() -> (Runtime, PjrtLm, PjrtLm) {
+    let rt = Runtime::cpu().expect("PJRT cpu client");
+    let (t, d) = PjrtLm::load_pair(&rt, artifacts_dir()).expect("load artifacts");
+    (rt, t, d)
+}
+
+/// Incremental decode through the KV cache must match a fresh prefill of
+/// the same sequence (the L3 equivalent of python/tests/test_model.py).
+#[test]
+fn incremental_matches_fresh_prefill() {
+    let (_rt, target, _draft) = load();
+    let toks: Vec<u32> = vec![5, 9, 13, 2, 7, 1, 30, 12];
+
+    // path A: prefill all 8 tokens in one eval
+    let mut sa = target.begin().unwrap();
+    let nodes: Vec<EvalNode> = toks
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| if i == 0 { EvalNode::root(t) } else { EvalNode::child(t, i - 1) })
+        .collect();
+    let rows_a = target.eval(&mut sa, &nodes).unwrap();
+
+    // path B: feed in chunks of 3 with commits between
+    let mut sb = target.begin().unwrap();
+    let mut rows_b: Vec<Vec<f32>> = Vec::new();
+    for chunk in toks.chunks(3) {
+        let nodes: Vec<EvalNode> = chunk
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| if i == 0 { EvalNode::root(t) } else { EvalNode::child(t, i - 1) })
+            .collect();
+        let rows = target.eval(&mut sb, &nodes).unwrap();
+        rows_b.extend(rows);
+        let chain: Vec<usize> = (0..chunk.len()).collect();
+        target.commit(&mut sb, &chain).unwrap();
+    }
+
+    for (i, (a, b)) in rows_a.iter().zip(&rows_b).enumerate() {
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                (x - y).abs() < 2e-3,
+                "row {i}: logits diverge ({x} vs {y})"
+            );
+        }
+    }
+}
+
+/// Tree evaluation in one call must match evaluating each branch as its
+/// own sequence — the core of the paper's parallel tree verification.
+#[test]
+fn tree_eval_matches_per_branch_decode() {
+    let (_rt, target, _draft) = load();
+    let prefix = [4u32, 8];
+
+    let decode_branch = |branch: &[u32]| -> Vec<Vec<f32>> {
+        let mut s = target.begin().unwrap();
+        let mut rows = Vec::new();
+        for (i, &t) in branch.iter().enumerate() {
+            let node =
+                if i == 0 { EvalNode::root(t) } else { EvalNode::child(t, i - 1) };
+            rows.push(target.eval(&mut s, &[node]).unwrap().remove(0));
+        }
+        rows
+    };
+    let seq_a = decode_branch(&[4, 8, 3, 1]);
+    let seq_b = decode_branch(&[4, 8, 7, 2]);
+
+    // one session: prefill prefix, then the 4-node tree in one eval
+    let mut s = target.begin().unwrap();
+    target
+        .eval(&mut s, &[EvalNode::root(prefix[0]), EvalNode::child(prefix[1], 0)])
+        .unwrap();
+    target.commit(&mut s, &[0, 1]).unwrap();
+    let tree_rows = target
+        .eval(
+            &mut s,
+            &[
+                EvalNode::root(3),      // a
+                EvalNode::root(7),      // b (sibling of a)
+                EvalNode::child(1, 0),  // a -> c
+                EvalNode::child(2, 1),  // b -> d
+            ],
+        )
+        .unwrap();
+
+    let close = |x: &[f32], y: &[f32], what: &str| {
+        for (a, b) in x.iter().zip(y) {
+            assert!((a - b).abs() < 2e-3, "{what}: {a} vs {b}");
+        }
+    };
+    close(&tree_rows[0], &seq_a[2], "node a");
+    close(&tree_rows[1], &seq_b[2], "node b");
+    close(&tree_rows[2], &seq_a[3], "node c");
+    close(&tree_rows[3], &seq_b[3], "node d");
+}
+
+/// Zero-copy KV filtering: after commit of one branch, continuing from
+/// the accepted path matches a fresh session over the same tokens.
+#[test]
+fn kv_filter_keeps_accepted_branch_only() {
+    let (_rt, target, _draft) = load();
+    // session X: tree {a, b} under prefix [6]; accept b; then eval token 9
+    let mut sx = target.begin().unwrap();
+    target.eval(&mut sx, &[EvalNode::root(6)]).unwrap();
+    target.commit(&mut sx, &[0]).unwrap();
+    target.eval(&mut sx, &[EvalNode::root(3), EvalNode::root(7)]).unwrap();
+    target.commit(&mut sx, &[1]).unwrap(); // accept token 7 (slot of b reused later)
+    let rows_x = target.eval(&mut sx, &[EvalNode::root(9)]).unwrap();
+
+    // fresh session Y over [6, 7, 9]
+    let mut sy = target.begin().unwrap();
+    let rows_y = target
+        .eval(
+            &mut sy,
+            &[EvalNode::root(6), EvalNode::child(7, 0), EvalNode::child(9, 1)],
+        )
+        .unwrap();
+
+    for (a, b) in rows_x[0].iter().zip(&rows_y[2]) {
+        assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+    }
+}
+
+/// Every decoder runs on the real model and generates the requested
+/// number of tokens with sane stats.
+#[test]
+fn all_decoders_run_on_real_model() {
+    let (_rt, target, draft) = load();
+    let tok = Tokenizer::new();
+    let prompt = tok.encode("he said ");
+    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+    let mut rng = Rng::seed_from_u64(1);
+    for cfg in [
+        DecoderConfig::Ar,
+        DecoderConfig::Sd { l: 3 },
+        DecoderConfig::SpecTr { k: 2, l: 3 },
+        DecoderConfig::RsdC { branches: vec![2, 2] },
+        DecoderConfig::RsdS { w: 3, l: 3 },
+    ] {
+        let run =
+            generate(&cfg, &sampling, &target, &draft, &prompt, 24, &mut rng).unwrap();
+        assert_eq!(run.tokens.len(), 24, "{cfg:?}");
+        assert!(run.tokens.iter().all(|&t| t < target.vocab() as u32));
+        if cfg != DecoderConfig::Ar {
+            assert!(
+                run.stats.block_efficiency() > 1.0,
+                "{cfg:?}: eff {}",
+                run.stats.block_efficiency()
+            );
+        }
+    }
+}
+
+/// The trained draft must actually be aligned with the target: the
+/// processed next-token distributions should be close on corpus-like
+/// context (this is what makes speculative decoding profitable at all).
+#[test]
+fn draft_is_aligned_with_target() {
+    let (_rt, target, draft) = load();
+    let tok = Tokenizer::new();
+    let prompt = tok.encode("in the ");
+    let nodes: Vec<EvalNode> = prompt
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| if i == 0 { EvalNode::root(t) } else { EvalNode::child(t, i - 1) })
+        .collect();
+    let mut st = target.begin().unwrap();
+    let mut sd = draft.begin().unwrap();
+    let qt = target.eval(&mut st, &nodes).unwrap();
+    let qd = draft.eval(&mut sd, &nodes).unwrap();
+    let q = process_logits(qt.last().unwrap(), 1.0, 1.0).probs();
+    let p = process_logits(qd.last().unwrap(), 1.0, 1.0).probs();
+    let tv = rsd::sampling::tv_distance(&q, &p);
+    assert!(tv < 0.5, "draft/target TV {tv} — distillation failed?");
+    assert!(tv > 0.001, "draft identical to target — suspicious");
+}
