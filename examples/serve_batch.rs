@@ -1,50 +1,100 @@
-//! End-to-end serving driver (deliverable (e) of DESIGN.md): load the
-//! trained model pair, run the full coordinator (admission -> continuous
-//! batching -> speculative rounds -> streaming), push an open-loop
-//! Poisson workload of real corpus prompts through it, and report
-//! latency/throughput. Results are recorded in EXPERIMENTS.md.
+//! End-to-end serving driver: run the full coordinator (admission ->
+//! continuous batching -> speculative rounds -> streaming), push an
+//! open-loop Poisson workload through it, and report latency/throughput.
 //!
-//!     make artifacts && cargo run --release --example serve_batch
+//! Scenarios: the AR baseline, a static RSD-S tree, a fleet-wide
+//! adaptive decoder (`adaptive:30`), and a *heterogeneous* mix where
+//! alternating requests carry `adaptive:6` / `adaptive:30` overrides —
+//! exercising the engine's budget-weighted admission
+//! (`EngineConfig::max_active_budget`).
+//!
+//! Runs against the AOT/PJRT model pair when `artifacts/` exists, and
+//! falls back to the analytic sim substrate otherwise, so the example
+//! works on any machine:
+//!
+//!     cargo run --release --example serve_batch
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use rsd::bench::workload;
-use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
-use rsd::coordinator::engine::{spawn_with, Event, Request};
+use rsd::config::{AdaptiveFamily, DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::engine::{spawn_with, Engine, Event, Request};
 use rsd::model::PjrtLm;
 use rsd::runtime::Runtime;
+use rsd::sim::SimLm;
 
 const N_REQUESTS: usize = 24;
 const MAX_NEW: usize = 32;
 const RATE: f64 = 4.0; // requests/second (open loop)
 
 fn main() -> anyhow::Result<()> {
-    for decoder in [DecoderConfig::Ar, DecoderConfig::RsdS { w: 3, l: 3 }] {
-        run_one(decoder)?;
+    // sim fallback: no artifacts, or a build without the PJRT runtime
+    let use_sim = cfg!(not(pjrt_runtime))
+        || !std::path::Path::new("artifacts/manifest.json").exists();
+    if use_sim {
+        eprintln!("no artifacts / PJRT runtime — driving the engine on the SimLm substrate");
     }
+    for decoder in [
+        DecoderConfig::Ar,
+        DecoderConfig::RsdS { w: 3, l: 3 },
+        DecoderConfig::Adaptive { budget: 30, family: AdaptiveFamily::Auto },
+    ] {
+        run_one(decoder, None, use_sim)?;
+    }
+    // heterogeneous per-request budgets: latency-sensitive requests get
+    // adaptive:6, throughput-hungry ones adaptive:30; the weighted
+    // admission cap keeps the wide trees from crowding out the narrow
+    let overrides: Vec<Option<DecoderConfig>> = (0..N_REQUESTS)
+        .map(|i| {
+            let budget = if i % 2 == 0 { 6 } else { 30 };
+            Some(DecoderConfig::Adaptive { budget, family: AdaptiveFamily::Auto })
+        })
+        .collect();
+    run_one(DecoderConfig::RsdS { w: 3, l: 3 }, Some(overrides), use_sim)?;
     Ok(())
 }
 
-fn run_one(decoder: DecoderConfig) -> anyhow::Result<()> {
+fn run_one(
+    decoder: DecoderConfig,
+    overrides: Option<Vec<Option<DecoderConfig>>>,
+    use_sim: bool,
+) -> anyhow::Result<()> {
     let cfg = EngineConfig {
         max_concurrency: 4,
         max_queue: 64,
         default_max_tokens: MAX_NEW,
+        max_active_budget: 72, // two wide trees + change, never four
         sampling: SamplingConfig { temperature: 0.3, top_p: 1.0 },
         decoder: decoder.clone(),
         seed: 0,
     };
-    let (tx, handle) = spawn_with(move || {
-        let rt = Runtime::cpu()?;
-        let (target, draft) = PjrtLm::load_pair(&rt, "artifacts")?;
-        Ok(rsd::coordinator::engine::Engine::new(target, draft, cfg))
-    });
+    let (tx, handle) = if use_sim {
+        let cfg = cfg.clone();
+        spawn_with(move || {
+            let (target, draft) = SimLm::pair(0, 0.8, 256);
+            Ok(Engine::new(target, draft, cfg))
+        })
+    } else {
+        spawn_with(move || {
+            let rt = Runtime::cpu()?;
+            let (target, draft) = PjrtLm::load_pair(&rt, "artifacts")?;
+            Ok(Engine::new(target, draft, cfg))
+        })
+    };
 
-    let prompts = workload::corpus_prompts("artifacts", N_REQUESTS, 32, 7)?;
+    let prompts = if use_sim {
+        workload::random_prompts(N_REQUESTS, 32, 256, 7)
+    } else {
+        workload::corpus_prompts("artifacts", N_REQUESTS, 32, 7)?
+    };
     let arrivals = workload::poisson_arrivals(N_REQUESTS, RATE, 11);
 
-    println!("\n=== serve_batch: decoder {} ===", decoder.label());
+    let title = match &overrides {
+        Some(_) => "heterogeneous adaptive:6 / adaptive:30".to_string(),
+        None => format!("decoder {}", decoder.label()),
+    };
+    println!("\n=== serve_batch: {title} ===");
     println!("{N_REQUESTS} requests, Poisson {RATE}/s, {MAX_NEW} tokens each");
 
     let t0 = Instant::now();
@@ -60,7 +110,7 @@ fn run_one(decoder: DecoderConfig) -> anyhow::Result<()> {
             id: i as u64,
             prompt,
             max_new: MAX_NEW,
-            decoder: None,
+            decoder: overrides.as_ref().and_then(|o| o[i].clone()),
             sampling: None,
             resp: rtx,
         })
@@ -106,5 +156,16 @@ fn run_one(decoder: DecoderConfig) -> anyhow::Result<()> {
         "decode rounds {}  |  draft calls {}  |  tokens out {}",
         snap.decode_rounds, snap.draft_calls, snap.tokens_out
     );
+    if !snap.accept_rate_by_level.is_empty() {
+        let rates: Vec<String> =
+            snap.accept_rate_by_level.iter().map(|r| format!("{r:.2}")).collect();
+        println!("acceptance by level: [{}]", rates.join(", "));
+        let hist: Vec<String> = snap
+            .round_nodes_hist
+            .iter()
+            .map(|(nodes, count)| format!("{nodes}:{count}"))
+            .collect();
+        println!("nodes-per-round histogram: {{{}}}", hist.join(", "));
+    }
     Ok(())
 }

@@ -1,0 +1,50 @@
+//! Adaptive vs. static tree shaping at fixed target computational
+//! budgets (the Exp2 axis, §5.2 / App. C.3.2): at B ∈ {6, 30} the
+//! static rows are the paper's exact shapes and the adaptive rows are
+//! `adaptive:B` (auto / rsd-c / rsd-s families). Same block-efficiency
+//! metrics as `exp2.rs`, so the trajectories are directly comparable —
+//! the adaptive controller should sit within noise of (or above) the
+//! best static shape on the default workload, and clearly above
+//! mismatched static shapes when alignment drops.
+//!
+//!     cargo bench --bench adaptive
+
+use rsd::bench::{self, workload, BenchOpts};
+use rsd::config::{AdaptiveFamily, DecoderConfig, SamplingConfig};
+use rsd::sim::SimLm;
+
+fn main() -> anyhow::Result<()> {
+    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+
+    // two alignment regimes: well-aligned (deep shapes win) and
+    // misaligned (width-heavy shapes win) — adaptive must track both
+    for alpha in [0.9, 0.5] {
+        let (target, draft) = SimLm::pair(0, alpha, 256);
+        let prompts = workload::random_prompts(6, 16, 256, 1);
+        let opts = BenchOpts { max_new: 64, reps: 6, tv_trials: 0, seed: 0 };
+        let ar =
+            bench::bench_decoder(&DecoderConfig::Ar, &sampling, &target, &draft, &prompts, &opts)?;
+        for b in [6usize, 30] {
+            let mut rows = Vec::new();
+            for cfg in bench::exp2_configs(b) {
+                rows.push(bench::bench_decoder(&cfg, &sampling, &target, &draft, &prompts, &opts)?);
+            }
+            for family in [AdaptiveFamily::Auto, AdaptiveFamily::RsdC, AdaptiveFamily::RsdS] {
+                let cfg = DecoderConfig::Adaptive { budget: b, family };
+                rows.push(bench::bench_decoder(&cfg, &sampling, &target, &draft, &prompts, &opts)?);
+            }
+            bench::print_table(
+                &format!("Adaptive vs static (alpha={alpha}) Budget = {b}"),
+                &ar,
+                &rows,
+                true,
+            );
+        }
+    }
+    println!(
+        "\nNodes column = mean draft-tree nodes per target call: for the \
+         adaptive rows it is the realized budget (hard-capped at B), \
+         typically below B when early truncation prunes doomed branches."
+    );
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! Budget-constrained tree-shape allocation.
+//!
+//! Given per-level per-candidate acceptance rates `a_l` (estimated
+//! online) and a hard per-round node budget `B`, pick the draft-tree
+//! shape maximizing the expected accepted tokens per round under the
+//! paper's acceptance model: a level offering `b` without-replacement
+//! candidates is accepted with probability ≈ `1 - (1 - a_l)^b`, and the
+//! verification walk survives to level `l` with the product of the
+//! preceding level probabilities. Every round additionally emits one
+//! final token (residual or bonus), hence the `1 +` in the objective.
+//!
+//! The search space is the paper's two families (App. C.3.2) under the
+//! budget: non-increasing RSD-C branch vectors with
+//! `sum_l prod_{j<=l} b_j <= B`, and RSD-S beams `(w, l)` with
+//! `w * l <= B`, both capped at [`ADAPTIVE_MAX_DEPTH`]. The spaces are
+//! tiny (tens of shapes for B = 30), so exhaustive scoring per round is
+//! cheaper than a single draft-model call.
+
+use crate::config::{
+    rsd_c_budget, AdaptiveFamily, DecoderConfig, ADAPTIVE_MAX_BUDGET, ADAPTIVE_MAX_DEPTH,
+};
+use crate::decode::spec::TreeStrategy;
+use crate::decode::strategies::{GumbelTopK, StochasticBeam};
+
+/// Acceptance rate assumed for levels with no evidence at all (also the
+/// prior mean the estimators shrink towards).
+pub const DEFAULT_RATE: f64 = 0.6;
+
+/// Early-truncation gap (log-prob units) applied to adaptive RSD-S
+/// shapes: beam branches trailing the level-best sequence by more than
+/// this are not drafted, returning unused nodes to the budget.
+pub const DEFAULT_PHI_GAP: f64 = 10.0;
+
+/// Shape search is capped here even when a programmatic budget is
+/// larger: beyond a few hundred nodes per round no additional shape can
+/// raise expected tokens (depth is capped and width saturates
+/// `1 - (1-a)^b`), while the search space would grow without bound.
+/// Kept equal to the parser's [`ADAPTIVE_MAX_BUDGET`], so a request's
+/// declared budget (its admission weight) is never above what a round
+/// can actually use.
+pub const MAX_SEARCH_BUDGET: usize = ADAPTIVE_MAX_BUDGET;
+
+/// A concrete draft-tree shape the controller can run for one round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TreeShape {
+    RsdC { branches: Vec<usize> },
+    RsdS { w: usize, l: usize },
+}
+
+impl TreeShape {
+    /// Worst-case draft-tree nodes per round (the shape's budget).
+    pub fn budget(&self) -> usize {
+        match self {
+            TreeShape::RsdC { branches } => rsd_c_budget(branches),
+            TreeShape::RsdS { w, l } => w * l,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        match self {
+            TreeShape::RsdC { branches } => branches.len(),
+            TreeShape::RsdS { l, .. } => *l,
+        }
+    }
+
+    /// The equivalent static decoder config (labels, budget math).
+    pub fn to_decoder(&self) -> DecoderConfig {
+        match self {
+            TreeShape::RsdC { branches } => DecoderConfig::RsdC { branches: branches.clone() },
+            TreeShape::RsdS { w, l } => DecoderConfig::RsdS { w: *w, l: *l },
+        }
+    }
+
+    /// Instantiate the drafting strategy for one round.
+    pub fn build(&self, phi_gap: f64) -> Box<dyn TreeStrategy> {
+        match self {
+            TreeShape::RsdC { branches } => {
+                Box::new(GumbelTopK { branches: branches.clone() })
+            }
+            TreeShape::RsdS { w, l } => Box::new(StochasticBeam::with_gap(*w, *l, phi_gap)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.to_decoder().label()
+    }
+}
+
+/// Per-level survival probability of a sibling set with `b` candidates.
+fn level_accept(rate: f64, b: usize) -> f64 {
+    1.0 - (1.0 - rate.clamp(0.0, 1.0)).powi(b as i32)
+}
+
+/// Expected tokens emitted per round by `shape` under rates `a` (indexed
+/// by level; levels beyond `a.len()` reuse the last known rate).
+pub fn expected_tokens(shape: &TreeShape, a: &[f64]) -> f64 {
+    let rate_at = |l: usize| -> f64 {
+        a.get(l).copied().or_else(|| a.last().copied()).unwrap_or(DEFAULT_RATE)
+    };
+    let mut survive = 1.0;
+    let mut expected = 1.0; // the round's final token (residual or bonus)
+    match shape {
+        TreeShape::RsdC { branches } => {
+            for (l, &b) in branches.iter().enumerate() {
+                survive *= level_accept(rate_at(l), b);
+                expected += survive;
+            }
+        }
+        TreeShape::RsdS { w, l } => {
+            for lvl in 0..*l {
+                survive *= level_accept(rate_at(lvl), *w);
+                expected += survive;
+            }
+        }
+    }
+    expected
+}
+
+/// All non-increasing RSD-C branch vectors within `budget` nodes and
+/// [`ADAPTIVE_MAX_DEPTH`] levels.
+fn rsdc_shapes(budget: usize) -> Vec<TreeShape> {
+    fn rec(
+        out: &mut Vec<TreeShape>,
+        cur: &mut Vec<usize>,
+        level_nodes: usize,
+        used: usize,
+        max_branch: usize,
+        budget: usize,
+    ) {
+        if !cur.is_empty() {
+            out.push(TreeShape::RsdC { branches: cur.clone() });
+        }
+        if cur.len() >= ADAPTIVE_MAX_DEPTH {
+            return;
+        }
+        for b in 1..=max_branch {
+            let Some(nodes) = level_nodes.checked_mul(b) else { break };
+            if used + nodes > budget {
+                break; // nodes grows with b
+            }
+            cur.push(b);
+            rec(out, cur, nodes, used + nodes, b, budget);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(&mut out, &mut Vec::new(), 1, 0, budget, budget);
+    out
+}
+
+/// All RSD-S beams with `w * l <= budget` and depth within the cap.
+fn rsds_shapes(budget: usize) -> Vec<TreeShape> {
+    let mut out = Vec::new();
+    for l in 1..=budget.min(ADAPTIVE_MAX_DEPTH) {
+        for w in 1..=(budget / l) {
+            out.push(TreeShape::RsdS { w, l });
+        }
+    }
+    out
+}
+
+/// Candidate shapes for `family` under `budget`. Never empty: budget is
+/// clamped to [1, [`MAX_SEARCH_BUDGET`]] before searching (a zero budget
+/// is meaningless for a speculative decoder — the spec-string parser
+/// rejects it — so programmatic callers get the single-node chain
+/// instead of a panic), and emitted shapes always respect the caller's
+/// budget for `budget >= 1`, whatever its magnitude.
+pub fn enumerate_shapes(budget: usize, family: AdaptiveFamily) -> Vec<TreeShape> {
+    let budget = budget.clamp(1, MAX_SEARCH_BUDGET);
+    let mut out = Vec::new();
+    if matches!(family, AdaptiveFamily::Auto | AdaptiveFamily::RsdC) {
+        out.extend(rsdc_shapes(budget));
+    }
+    if matches!(family, AdaptiveFamily::Auto | AdaptiveFamily::RsdS) {
+        out.extend(rsds_shapes(budget));
+    }
+    out
+}
+
+/// The shape in `shapes` maximizing [`expected_tokens`]. Ties break
+/// towards the cheaper shape (fewer nodes), then first-listed, so the
+/// choice is deterministic. The per-round hot path: the controller
+/// enumerates its shape space once and re-scores it here every round.
+pub fn best_shape_from(shapes: &[TreeShape], rates: &[f64]) -> TreeShape {
+    let mut best: Option<(&TreeShape, usize, f64)> = None;
+    for shape in shapes {
+        let nodes = shape.budget();
+        let score = expected_tokens(shape, rates);
+        let better = match &best {
+            None => true,
+            Some((_, cur_nodes, cur_score)) => {
+                score > cur_score + 1e-9
+                    || ((score - cur_score).abs() <= 1e-9 && nodes < *cur_nodes)
+            }
+        };
+        if better {
+            best = Some((shape, nodes, score));
+        }
+    }
+    best.expect("shape list must be non-empty").0.clone()
+}
+
+/// Convenience: enumerate + select in one call (tests, `build_parts`).
+pub fn best_shape(budget: usize, family: AdaptiveFamily, rates: &[f64]) -> TreeShape {
+    best_shape_from(&enumerate_shapes(budget, family), rates)
+}
+
+/// The shape used before any acceptance evidence exists (uniform prior).
+pub fn initial_shape(budget: usize, family: AdaptiveFamily) -> TreeShape {
+    best_shape(budget, family, &[DEFAULT_RATE])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumeration_respects_budget_and_monotonicity() {
+        for b in [1usize, 2, 6, 14, 30] {
+            let shapes = enumerate_shapes(b, AdaptiveFamily::Auto);
+            assert!(!shapes.is_empty());
+            for s in &shapes {
+                assert!(s.budget() <= b, "{s:?} exceeds budget {b}");
+                assert!(s.depth() <= ADAPTIVE_MAX_DEPTH);
+                if let TreeShape::RsdC { branches } = s {
+                    assert!(branches.windows(2).all(|w| w[0] >= w[1]), "{branches:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn high_acceptance_prefers_depth_low_prefers_width() {
+        // near-perfect draft: deep chains dominate (every level survives)
+        let deep = best_shape(6, AdaptiveFamily::Auto, &[0.97]);
+        assert!(deep.depth() >= 4, "{deep:?}");
+        // poor draft: spend the budget on sibling width up front
+        let wide = best_shape(6, AdaptiveFamily::Auto, &[0.25]);
+        assert!(wide.depth() <= 3, "{wide:?}");
+        let first_width = match &wide {
+            TreeShape::RsdC { branches } => branches[0],
+            TreeShape::RsdS { w, .. } => *w,
+        };
+        assert!(first_width >= 2, "{wide:?}");
+    }
+
+    #[test]
+    fn expected_tokens_matches_closed_form() {
+        // chain of depth 2 at rate a: 1 + a + a^2
+        let e = expected_tokens(&TreeShape::RsdC { branches: vec![1, 1] }, &[0.5]);
+        assert!((e - (1.0 + 0.5 + 0.25)).abs() < 1e-12);
+        // width-2 single level: 1 + (1 - 0.25)
+        let e = expected_tokens(&TreeShape::RsdC { branches: vec![2] }, &[0.5]);
+        assert!((e - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn family_restriction_is_honoured() {
+        for b in [6usize, 30] {
+            for s in enumerate_shapes(b, AdaptiveFamily::RsdC) {
+                assert!(matches!(s, TreeShape::RsdC { .. }));
+            }
+            for s in enumerate_shapes(b, AdaptiveFamily::RsdS) {
+                assert!(matches!(s, TreeShape::RsdS { .. }));
+            }
+        }
+    }
+
+    #[test]
+    fn initial_shape_fits_every_budget() {
+        for b in 1..=40 {
+            for fam in [AdaptiveFamily::Auto, AdaptiveFamily::RsdC, AdaptiveFamily::RsdS] {
+                assert!(initial_shape(b, fam).budget() <= b);
+            }
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! The per-request controller: estimator + allocator + re-shaping loop.
+//!
+//! [`AdaptiveController`] owns a request's acceptance statistics and
+//! turns them into one [`TreeShape`] per speculative round.
+//! [`AdaptiveStepper`] binds a controller to a resumable
+//! [`SpecStepper`], swapping the tree strategy between rounds — the
+//! engine steps it exactly like a static speculative session, so
+//! continuous batching, streaming and fairness are untouched.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{AdaptiveFamily, SamplingConfig, ADAPTIVE_MAX_DEPTH};
+use crate::decode::rrs::Rrs;
+use crate::decode::spec::{RoundReport, SpecStepper, StepOutcome};
+use crate::decode::{DecodeRun, DecodeStats};
+use crate::llm::Llm;
+use crate::util::Rng;
+
+use super::allocator::{self, TreeShape, DEFAULT_PHI_GAP, DEFAULT_RATE};
+use super::estimator::{AcceptanceEstimator, GlobalEstimator};
+
+/// Pseudo-trials backing the engine-global prior when blending it into a
+/// request's local estimate.
+const GLOBAL_PRIOR_STRENGTH: f64 = 4.0;
+/// Pseudo-trials the local estimate needs before it dominates the prior.
+const LOCAL_PRIOR_STRENGTH: f64 = 8.0;
+
+/// Chooses a draft-tree shape each round under a hard node budget.
+pub struct AdaptiveController {
+    budget: usize,
+    /// Candidate shapes, enumerated once: the space depends only on
+    /// (budget, family), so each round only re-scores it.
+    shapes: Vec<TreeShape>,
+    local: AcceptanceEstimator,
+    global: Option<Arc<GlobalEstimator>>,
+}
+
+impl AdaptiveController {
+    /// `global` carries engine-wide decayed statistics (None outside the
+    /// serving engine, e.g. in single-shot [`crate::decode::generate`]).
+    /// Programmatic budgets are clamped to the parser's accepted range
+    /// `[1, ADAPTIVE_MAX_BUDGET]`.
+    pub fn new(
+        budget: usize,
+        family: AdaptiveFamily,
+        global: Option<Arc<GlobalEstimator>>,
+    ) -> Self {
+        let budget = budget.clamp(1, allocator::MAX_SEARCH_BUDGET);
+        Self {
+            budget,
+            shapes: allocator::enumerate_shapes(budget, family),
+            local: AcceptanceEstimator::default(),
+            global,
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Blended per-level acceptance rates: the global estimator acts as
+    /// the prior mean, local evidence takes over as it accumulates.
+    /// Clamped away from {0, 1} so no shape's score ever degenerates.
+    pub fn rates(&self) -> Vec<f64> {
+        (0..ADAPTIVE_MAX_DEPTH)
+            .map(|level| {
+                let prior = match &self.global {
+                    Some(g) => g.rate(level, DEFAULT_RATE, GLOBAL_PRIOR_STRENGTH),
+                    None => DEFAULT_RATE,
+                };
+                self.local.rate(level, prior, LOCAL_PRIOR_STRENGTH).clamp(0.02, 0.98)
+            })
+            .collect()
+    }
+
+    /// The shape to run next round. Guaranteed `budget() <= self.budget`.
+    pub fn next_shape(&self) -> TreeShape {
+        allocator::best_shape_from(&self.shapes, &self.rates())
+    }
+
+    /// Fold one round's verification telemetry into both scopes.
+    pub fn observe(&mut self, report: &RoundReport) {
+        self.local.observe(report);
+        if let Some(g) = &self.global {
+            g.observe(report);
+        }
+    }
+}
+
+/// A resumable adaptive decoding session: one speculative round per
+/// `step`, with the tree re-shaped from live acceptance estimates before
+/// every round.
+pub struct AdaptiveStepper<T: Llm, D: Llm> {
+    inner: SpecStepper<T, D>,
+    ctl: AdaptiveController,
+    /// Shape the inner stepper currently holds: re-building the boxed
+    /// strategy is skipped while the controller's choice is stable
+    /// (the steady state once estimates converge).
+    current: TreeShape,
+}
+
+impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
+    pub fn new(
+        target: &T,
+        draft: &D,
+        ctl: AdaptiveController,
+        sampling: SamplingConfig,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<Self> {
+        let shape = ctl.next_shape();
+        let inner = SpecStepper::new(
+            target,
+            draft,
+            shape.build(DEFAULT_PHI_GAP),
+            Box::new(Rrs),
+            sampling,
+            prompt,
+            max_new,
+        )?;
+        Ok(Self { inner, ctl, current: shape })
+    }
+
+    /// Re-shape, run one speculative round, learn from its outcome.
+    pub fn step(&mut self, target: &T, draft: &D, rng: &mut Rng) -> Result<StepOutcome> {
+        if !self.inner.is_done() {
+            let shape = self.ctl.next_shape();
+            debug_assert!(shape.budget() <= self.ctl.budget());
+            if shape != self.current {
+                self.inner.set_strategy(shape.build(DEFAULT_PHI_GAP));
+                self.current = shape;
+            }
+        }
+        let outcome = self.inner.step(target, draft, rng)?;
+        if let Some(report) = self.inner.last_round() {
+            // clone keeps the report available for the engine's metrics
+            let report = report.clone();
+            self.ctl.observe(&report);
+        }
+        Ok(outcome)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.inner.is_done()
+    }
+
+    pub fn out(&self) -> &[u32] {
+        &self.inner.out
+    }
+
+    pub fn stats(&self) -> &DecodeStats {
+        &self.inner.stats
+    }
+
+    pub fn last_round(&self) -> Option<&RoundReport> {
+        self.inner.last_round()
+    }
+
+    pub fn controller(&self) -> &AdaptiveController {
+        &self.ctl
+    }
+}
+
+/// Full adaptive decoding loop (the [`crate::decode::generate`] path —
+/// no engine, so no global statistics are shared).
+#[allow(clippy::too_many_arguments)]
+pub fn run_adaptive<T: Llm, D: Llm>(
+    target: &T,
+    draft: &D,
+    budget: usize,
+    family: AdaptiveFamily,
+    sampling: &SamplingConfig,
+    prompt: &[u32],
+    max_new: usize,
+    rng: &mut Rng,
+) -> Result<DecodeRun> {
+    let ctl = AdaptiveController::new(budget, family, None);
+    let mut stepper = AdaptiveStepper::new(target, draft, ctl, *sampling, prompt, max_new)?;
+    while stepper.step(target, draft, rng)? == StepOutcome::Progress {}
+    Ok(DecodeRun { tokens: stepper.out().to_vec(), stats: stepper.stats().clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimLm;
+
+    #[test]
+    fn controller_adapts_shape_to_evidence() {
+        let mut ctl = AdaptiveController::new(6, AdaptiveFamily::Auto, None);
+        // feed rounds where level 0 always accepts instantly: the shape
+        // should move towards depth
+        for _ in 0..100 {
+            let depth = ctl.next_shape().depth().min(3);
+            let trials = (0..depth).map(|_| (1, 1)).collect();
+            ctl.observe(&RoundReport {
+                level_trials: trials,
+                nodes: 6,
+                accepted: depth,
+                bonus: true,
+            });
+        }
+        let deep = ctl.next_shape();
+        assert!(deep.depth() >= 3, "{deep:?}");
+        // now feed heavy rejection: the shape should widen / shallow out
+        let mut ctl = AdaptiveController::new(6, AdaptiveFamily::Auto, None);
+        for _ in 0..100 {
+            let b = match ctl.next_shape() {
+                TreeShape::RsdC { branches } => branches[0],
+                TreeShape::RsdS { w, .. } => w,
+            };
+            ctl.observe(&RoundReport {
+                level_trials: vec![(b, 0)],
+                nodes: 6,
+                accepted: 0,
+                bonus: false,
+            });
+        }
+        let wide = ctl.next_shape();
+        assert!(wide.depth() <= 2, "{wide:?}");
+    }
+
+    #[test]
+    fn every_chosen_shape_respects_budget() {
+        for budget in [1usize, 3, 6, 10, 30] {
+            let ctl = AdaptiveController::new(budget, AdaptiveFamily::Auto, None);
+            assert!(ctl.next_shape().budget() <= budget);
+        }
+    }
+
+    #[test]
+    fn adaptive_generation_is_exact_length_and_budget_bounded() {
+        let (target, draft) = SimLm::pair(3, 0.7, 48);
+        let mut rng = Rng::seed_from_u64(0);
+        let sampling = SamplingConfig::default();
+        for budget in [6usize, 30] {
+            let run = run_adaptive(
+                &target,
+                &draft,
+                budget,
+                AdaptiveFamily::Auto,
+                &sampling,
+                &[1, 2, 3],
+                32,
+                &mut rng,
+            )
+            .unwrap();
+            assert_eq!(run.tokens.len(), 32);
+            assert!(run
+                .stats
+                .round_nodes
+                .iter()
+                .all(|&n| n as usize <= budget), "budget {budget}: {:?}", run.stats.round_nodes);
+        }
+    }
+}

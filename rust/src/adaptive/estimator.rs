@@ -1,0 +1,148 @@
+//! Online acceptance estimation from verification telemetry.
+//!
+//! Every walked level of a verified draft tree yields Bernoulli evidence
+//! about the *per-candidate* acceptance rate at that depth: an accepted
+//! level at sibling position `k` is `k` rejections followed by one
+//! acceptance (`k + 1` trials, 1 success); a rejected level with `b`
+//! candidates is `b` trials, 0 successes ([`RoundReport::level_trials`]).
+//! The estimator keeps exponentially decayed trial/success counts per
+//! level, so shifts in draft-target alignment along a generation (topic
+//! drift, code vs. prose, ...) are tracked within a few dozen rounds.
+//!
+//! Two scopes exist in the serving engine: a per-request
+//! [`AcceptanceEstimator`] (fast, noisy) and an engine-global
+//! [`GlobalEstimator`] shared across requests (slow, smooth) that serves
+//! as the prior for freshly admitted requests.
+
+use std::sync::Mutex;
+
+use crate::decode::spec::RoundReport;
+
+/// Exponentially decayed per-level acceptance statistics.
+#[derive(Debug, Clone)]
+pub struct AcceptanceEstimator {
+    /// Multiplicative decay applied to a level's counts on each new
+    /// observation of that level.
+    decay: f64,
+    trials: Vec<f64>,
+    successes: Vec<f64>,
+}
+
+impl Default for AcceptanceEstimator {
+    fn default() -> Self {
+        Self::new(0.97)
+    }
+}
+
+impl AcceptanceEstimator {
+    pub fn new(decay: f64) -> Self {
+        assert!((0.0..=1.0).contains(&decay));
+        Self { decay, trials: Vec::new(), successes: Vec::new() }
+    }
+
+    /// Fold one round's verification walk into the statistics.
+    pub fn observe(&mut self, report: &RoundReport) {
+        for (level, &(trials, successes)) in report.level_trials.iter().enumerate() {
+            if self.trials.len() <= level {
+                self.trials.resize(level + 1, 0.0);
+                self.successes.resize(level + 1, 0.0);
+            }
+            self.trials[level] = self.trials[level] * self.decay + trials as f64;
+            self.successes[level] = self.successes[level] * self.decay + successes as f64;
+        }
+    }
+
+    /// Posterior-mean per-candidate acceptance rate at `level`, shrunk
+    /// towards `prior_mean` with `prior_strength` pseudo-trials. Levels
+    /// never observed return the prior mean exactly.
+    pub fn rate(&self, level: usize, prior_mean: f64, prior_strength: f64) -> f64 {
+        let (n, s) = match self.trials.get(level) {
+            Some(&n) => (n, self.successes[level]),
+            None => (0.0, 0.0),
+        };
+        (s + prior_mean * prior_strength) / (n + prior_strength)
+    }
+
+    /// Decayed trial mass at `level` (how much evidence the rate rests on).
+    pub fn evidence(&self, level: usize) -> f64 {
+        self.trials.get(level).copied().unwrap_or(0.0)
+    }
+
+    /// Deepest level with any evidence.
+    pub fn levels(&self) -> usize {
+        self.trials.len()
+    }
+}
+
+/// Engine-global decayed acceptance statistics, shared (via `Arc`) by
+/// every adaptive request of one engine. Interior mutability keeps the
+/// engine loop borrow-free; the engine is single-threaded so the lock is
+/// uncontended.
+#[derive(Debug, Default)]
+pub struct GlobalEstimator {
+    inner: Mutex<AcceptanceEstimator>,
+}
+
+impl GlobalEstimator {
+    pub fn observe(&self, report: &RoundReport) {
+        self.inner.lock().unwrap().observe(report);
+    }
+
+    pub fn rate(&self, level: usize, prior_mean: f64, prior_strength: f64) -> f64 {
+        self.inner.lock().unwrap().rate(level, prior_mean, prior_strength)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(level_trials: Vec<(usize, usize)>) -> RoundReport {
+        let accepted = level_trials.iter().filter(|&&(_, s)| s == 1).count();
+        RoundReport { level_trials, nodes: 4, accepted, bonus: false }
+    }
+
+    #[test]
+    fn unobserved_levels_return_prior() {
+        let e = AcceptanceEstimator::default();
+        assert!((e.rate(0, 0.6, 8.0) - 0.6).abs() < 1e-12);
+        assert!((e.rate(5, 0.3, 8.0) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rates_converge_to_observed_frequency() {
+        let mut e = AcceptanceEstimator::new(1.0); // no decay: plain counts
+        // level 0: accept on the first candidate every time -> rate ~1
+        // level 1: 3 candidates all rejected every time -> rate ~0
+        for _ in 0..200 {
+            e.observe(&report(vec![(1, 1), (3, 0)]));
+        }
+        assert!(e.rate(0, 0.5, 1.0) > 0.95);
+        assert!(e.rate(1, 0.5, 1.0) < 0.05);
+        assert_eq!(e.levels(), 2);
+    }
+
+    #[test]
+    fn decay_tracks_regime_change() {
+        let mut e = AcceptanceEstimator::new(0.9);
+        for _ in 0..100 {
+            e.observe(&report(vec![(1, 1)]));
+        }
+        assert!(e.rate(0, 0.5, 1.0) > 0.9);
+        for _ in 0..100 {
+            e.observe(&report(vec![(4, 0)]));
+        }
+        assert!(e.rate(0, 0.5, 1.0) < 0.1, "decayed stats must follow the new regime");
+    }
+
+    #[test]
+    fn global_estimator_accumulates_across_observers() {
+        let g = GlobalEstimator::default();
+        for _ in 0..50 {
+            g.observe(&report(vec![(2, 1)]));
+        }
+        // 2 trials, 1 success per round -> rate near 0.5
+        let r = g.rate(0, 0.9, 1.0);
+        assert!((r - 0.5).abs() < 0.1, "{r}");
+    }
+}

@@ -1,0 +1,33 @@
+//! Adaptive draft-budget control: per-request online tree shaping under
+//! a fixed target-compute budget.
+//!
+//! The paper's Exp2 fixes the *target computational budget* B — the
+//! draft-tree nodes the target model processes per iteration — and asks
+//! which tree shape maximizes block efficiency. Statically the answer
+//! depends on draft-target alignment the server cannot know up front:
+//! well-aligned requests want deep narrow trees, misaligned ones want
+//! their budget spent on sibling width at shallow levels. This module
+//! closes the loop at runtime, per request:
+//!
+//! * [`estimator`] — decayed per-level acceptance statistics harvested
+//!   from every verification walk ([`crate::decode::spec::RoundReport`]),
+//!   kept per-request and engine-global (the prior for new requests);
+//! * [`allocator`] — exhaustive scoring of RSD-C branch vectors and
+//!   RSD-S `(w, l)` beams under the hard node budget, maximizing the
+//!   expected accepted tokens per round under the paper's acceptance
+//!   model `1 - (1 - a_l)^{b_l}`;
+//! * [`controller`] — the per-round loop: choose shape, run one
+//!   speculative round via [`crate::decode::spec::SpecStepper`]
+//!   (re-shaped in place between rounds), observe, repeat.
+//!
+//! Selected by [`crate::config::DecoderConfig::Adaptive`] (spec strings
+//! `adaptive:B`, `adaptive:B:rsd-c`, `adaptive:B:rsd-s`), per request
+//! over the serving protocol via `"decoder": "adaptive:30"`.
+
+pub mod allocator;
+pub mod controller;
+pub mod estimator;
+
+pub use allocator::TreeShape;
+pub use controller::{run_adaptive, AdaptiveController, AdaptiveStepper};
+pub use estimator::{AcceptanceEstimator, GlobalEstimator};

@@ -4,6 +4,12 @@
 //! Decoder configs use compact spec strings mirroring the paper's tables:
 //! `ar`, `sd:4`, `spectr:3x7`, `rsd-c:2-2-1`, `rsd-s:6x5` — parsed by
 //! [`DecoderConfig::parse`], printed by [`DecoderConfig::label`].
+//!
+//! `adaptive:B` (optionally `adaptive:B:rsd-c` / `adaptive:B:rsd-s`)
+//! selects the online controller of [`crate::adaptive`]: the tree shape
+//! is re-chosen every speculative round from observed acceptance rates,
+//! subject to the hard per-round node budget `B` (Exp2's target
+//! computational budget).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -118,6 +124,66 @@ impl Default for SamplingConfig {
     }
 }
 
+/// Deepest draft tree the adaptive allocator will consider. Acceptance
+/// probabilities compound multiplicatively with depth, so expected gains
+/// beyond this depth are negligible for any realistic draft.
+pub const ADAPTIVE_MAX_DEPTH: usize = 8;
+
+/// Largest accepted adaptive node budget. Matches the allocator's shape
+/// search cap ([`crate::adaptive::allocator::MAX_SEARCH_BUDGET`]), so a
+/// request's admission weight (its declared budget) never exceeds what
+/// any round can actually use.
+pub const ADAPTIVE_MAX_BUDGET: usize = 256;
+
+/// Worst-case node count of an RSD-C branch vector: `sum_l prod_{j<=l}
+/// b_j`. The single definition of the paper's "target computational
+/// budget" for constant-branching trees, shared by [`DecoderConfig`],
+/// the drafting strategy and the adaptive allocator.
+pub fn rsd_c_budget(branches: &[usize]) -> usize {
+    let mut level = 1usize;
+    let mut total = 0usize;
+    for &b in branches {
+        level *= b;
+        total += level;
+    }
+    total
+}
+
+/// Which tree family the adaptive controller may allocate from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptiveFamily {
+    /// Both RSD-C branch vectors and RSD-S beams compete on expected
+    /// accepted tokens; the argmax wins each round.
+    Auto,
+    /// Constant-branching trees only (Gumbel-Top-k drafting).
+    RsdC,
+    /// Stochastic-beam trees only (`(w, l)` plus early truncation).
+    RsdS,
+}
+
+impl AdaptiveFamily {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdaptiveFamily::Auto => "auto",
+            AdaptiveFamily::RsdC => "rsd-c",
+            AdaptiveFamily::RsdS => "rsd-s",
+        }
+    }
+}
+
+impl FromStr for AdaptiveFamily {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(AdaptiveFamily::Auto),
+            "rsd-c" | "rsdc" => Ok(AdaptiveFamily::RsdC),
+            "rsd-s" | "rsds" => Ok(AdaptiveFamily::RsdS),
+            other => bail!("unknown adaptive family '{other}' (want auto|rsd-c|rsd-s)"),
+        }
+    }
+}
+
 /// Which decoding algorithm to run, with its tree specification. The
 /// `Spec.` column of the paper's tables (App. C.3).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -137,6 +203,12 @@ pub enum DecoderConfig {
     RsdCMultiRound { branches: Vec<usize> },
     /// RSD with Stochastic Beam Search: beamwidth `w`, max depth `l`.
     RsdS { w: usize, l: usize },
+    /// Online tree shaping ([`crate::adaptive`]): every round the shape
+    /// with the highest expected accepted tokens under the hard node
+    /// budget `budget` is chosen from `family`, using per-level
+    /// acceptance rates estimated from this request (blended with
+    /// engine-global decayed statistics when serving).
+    Adaptive { budget: usize, family: AdaptiveFamily },
 }
 
 impl DecoderConfig {
@@ -148,16 +220,11 @@ impl DecoderConfig {
             DecoderConfig::Sd { l } => *l,
             DecoderConfig::SpecTr { k, l } => k * l,
             DecoderConfig::RsdC { branches }
-            | DecoderConfig::RsdCMultiRound { branches } => {
-                let mut n = 1usize;
-                let mut total = 0usize;
-                for b in branches {
-                    n *= b;
-                    total += n;
-                }
-                total
-            }
+            | DecoderConfig::RsdCMultiRound { branches } => rsd_c_budget(branches),
             DecoderConfig::RsdS { w, l } => w * l,
+            // the allocator's hard cap; every emitted shape satisfies
+            // shape.budget() <= budget (property-tested)
+            DecoderConfig::Adaptive { budget, .. } => *budget,
         }
     }
 
@@ -170,6 +237,7 @@ impl DecoderConfig {
             DecoderConfig::RsdC { branches }
             | DecoderConfig::RsdCMultiRound { branches } => branches.len(),
             DecoderConfig::RsdS { l, .. } => *l,
+            DecoderConfig::Adaptive { budget, .. } => (*budget).min(ADAPTIVE_MAX_DEPTH),
         }
     }
 
@@ -188,6 +256,10 @@ impl DecoderConfig {
                 format!("RSD-C/mr {}", b.join("-"))
             }
             DecoderConfig::RsdS { w, l } => format!("RSD-S {w}x{l}"),
+            DecoderConfig::Adaptive { budget, family } => match family {
+                AdaptiveFamily::Auto => format!("Adaptive B{budget}"),
+                f => format!("Adaptive B{budget}/{}", f.as_str()),
+            },
         }
     }
 
@@ -206,6 +278,10 @@ impl DecoderConfig {
                 format!("rsd-c-mr:{}", b.join("-"))
             }
             DecoderConfig::RsdS { w, l } => format!("rsd-s:{w}x{l}"),
+            DecoderConfig::Adaptive { budget, family } => match family {
+                AdaptiveFamily::Auto => format!("adaptive:{budget}"),
+                f => format!("adaptive:{budget}:{}", f.as_str()),
+            },
         }
     }
 }
@@ -235,6 +311,22 @@ impl FromStr for DecoderConfig {
                 let (w, l) = kxl(rest)?;
                 Ok(DecoderConfig::RsdS { w, l })
             }
+            "adaptive" => {
+                let (budget_s, family) = match rest.split_once(':') {
+                    Some((b, f)) => (b, f.parse::<AdaptiveFamily>()?),
+                    None => (rest, AdaptiveFamily::Auto),
+                };
+                let budget: usize = budget_s
+                    .parse()
+                    .with_context(|| format!("bad adaptive budget '{budget_s}'"))?;
+                if budget == 0 {
+                    bail!("adaptive budget must be positive");
+                }
+                if budget > ADAPTIVE_MAX_BUDGET {
+                    bail!("adaptive budget {budget} too large (max {ADAPTIVE_MAX_BUDGET})");
+                }
+                Ok(DecoderConfig::Adaptive { budget, family })
+            }
             "rsd-c" | "rsdc" | "rsd-c-mr" => {
                 let branches = rest
                     .split('-')
@@ -263,6 +355,12 @@ pub struct EngineConfig {
     pub max_queue: usize,
     /// Default per-request generation cap.
     pub default_max_tokens: usize,
+    /// Cap on the summed per-round node budget of concurrently active
+    /// requests (0 = unlimited). With heterogeneous per-request budgets
+    /// this keeps one burst of wide-tree requests from monopolizing the
+    /// target model's per-iteration compute; an over-budget request is
+    /// still admitted when the engine is otherwise idle.
+    pub max_active_budget: usize,
     pub sampling: SamplingConfig,
     pub decoder: DecoderConfig,
     pub seed: u64,
@@ -274,6 +372,7 @@ impl Default for EngineConfig {
             max_concurrency: 4,
             max_queue: 256,
             default_max_tokens: 64,
+            max_active_budget: 0,
             sampling: SamplingConfig { temperature: 0.3, top_p: 1.0 },
             decoder: DecoderConfig::RsdS { w: 3, l: 3 },
             seed: 0,
@@ -301,6 +400,9 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("default_max_tokens").and_then(Json::as_usize) {
             cfg.default_max_tokens = v;
+        }
+        if let Some(v) = j.get("max_active_budget").and_then(Json::as_usize) {
+            cfg.max_active_budget = v;
         }
         if let Some(v) = j.get("temperature").and_then(Json::as_f64) {
             cfg.sampling.temperature = v as f32;
@@ -334,6 +436,10 @@ mod tests {
         assert_eq!(DecoderConfig::RsdC { branches: vec![2, 2, 2, 2] }.budget(), 30);
         assert_eq!(DecoderConfig::RsdS { w: 5, l: 6 }.budget(), 30);
         assert_eq!(DecoderConfig::RsdC { branches: vec![6, 1, 1, 1, 1] }.budget(), 30);
+        // the adaptive controller inherits the budget as a hard cap
+        let ad = DecoderConfig::Adaptive { budget: 30, family: AdaptiveFamily::Auto };
+        assert_eq!(ad.budget(), 30);
+        assert_eq!(ad.depth(), ADAPTIVE_MAX_DEPTH);
     }
 
     #[test]
@@ -351,6 +457,9 @@ mod tests {
             DecoderConfig::SpecTr { k: 2, l: 5 },
             DecoderConfig::RsdC { branches: vec![3, 2, 1] },
             DecoderConfig::RsdS { w: 6, l: 5 },
+            DecoderConfig::Adaptive { budget: 30, family: AdaptiveFamily::Auto },
+            DecoderConfig::Adaptive { budget: 6, family: AdaptiveFamily::RsdC },
+            DecoderConfig::Adaptive { budget: 14, family: AdaptiveFamily::RsdS },
         ];
         for c in cfgs {
             let s = c.spec();
@@ -361,7 +470,11 @@ mod tests {
 
     #[test]
     fn bad_specs_rejected() {
-        for s in ["", "sd", "sd:x", "spectr:3", "rsd-c:2-0", "warp:9"] {
+        let bad = [
+            "", "sd", "sd:x", "spectr:3", "rsd-c:2-0", "warp:9", "adaptive:0", "adaptive:x",
+            "adaptive:6:warp", "adaptive:300",
+        ];
+        for s in bad {
             assert!(s.parse::<DecoderConfig>().is_err(), "{s}");
         }
     }

@@ -1,6 +1,14 @@
 //! Admission queue + fairness policy: the "dynamic batcher" half of the
 //! coordinator. Decides which requests are active (stepped every engine
 //! turn) and which wait, with bounded queueing and load shedding.
+//!
+//! Besides the concurrency cap, admission can be *weighted*: each item
+//! carries a cost (the engine uses the decoder's per-round node budget)
+//! and the summed cost of active items is capped. With heterogeneous
+//! per-request budgets (e.g. `adaptive:6` next to `adaptive:30`) this
+//! keeps a burst of wide-tree requests from monopolizing the target
+//! model's per-iteration compute. An over-cap item is still admitted
+//! when nothing else is active, so no request can deadlock the queue.
 
 use std::collections::VecDeque;
 
@@ -10,20 +18,37 @@ pub enum Rejected {
     QueueFull,
 }
 
-/// FIFO admission with a bounded waiting queue and a concurrency cap.
-/// Generic over the queued item so it is testable without an engine.
+/// FIFO admission with a bounded waiting queue, a concurrency cap, and
+/// an optional active-weight cap. Generic over the queued item so it is
+/// testable without an engine.
 #[derive(Debug)]
 pub struct Batcher<T> {
     max_concurrency: usize,
     max_queue: usize,
+    /// Cap on the summed weight of active items (`usize::MAX` = off).
+    max_active_weight: usize,
     queue: VecDeque<T>,
     active: usize,
+    active_weight: usize,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_concurrency: usize, max_queue: usize) -> Self {
         assert!(max_concurrency > 0);
-        Self { max_concurrency, max_queue, queue: VecDeque::new(), active: 0 }
+        Self {
+            max_concurrency,
+            max_queue,
+            max_active_weight: usize::MAX,
+            queue: VecDeque::new(),
+            active: 0,
+            active_weight: 0,
+        }
+    }
+
+    /// Enable the active-weight cap (0 disables it).
+    pub fn with_max_active_weight(mut self, cap: usize) -> Self {
+        self.max_active_weight = if cap == 0 { usize::MAX } else { cap };
+        self
     }
 
     /// Offer a new request; reject when the waiting queue is full
@@ -36,25 +61,52 @@ impl<T> Batcher<T> {
         Ok(())
     }
 
-    /// Admit the next waiting request if a concurrency slot is free.
+    /// Admit the next waiting request if a concurrency slot is free
+    /// (weight-oblivious: every item costs 0).
     pub fn admit(&mut self) -> Option<T> {
-        if self.active < self.max_concurrency {
-            if let Some(item) = self.queue.pop_front() {
-                self.active += 1;
-                return Some(item);
-            }
+        self.admit_by(|_| 0).map(|(item, _)| item)
+    }
+
+    /// Admit the next waiting request if a concurrency slot is free and
+    /// its `weight` fits under the active-weight cap. FIFO order is
+    /// preserved: a too-heavy head blocks admission (no starvation of
+    /// heavy requests by sneaking light ones past them) unless the
+    /// engine is idle, in which case it is admitted regardless. Returns
+    /// the item with the weight it was charged; pass that weight back to
+    /// [`Batcher::release_weight`] on completion.
+    pub fn admit_by<F: Fn(&T) -> usize>(&mut self, weight: F) -> Option<(T, usize)> {
+        if self.active >= self.max_concurrency {
+            return None;
         }
-        None
+        let w = weight(self.queue.front()?);
+        if self.active > 0 && self.active_weight.saturating_add(w) > self.max_active_weight {
+            return None;
+        }
+        let item = self.queue.pop_front().expect("front checked above");
+        self.active += 1;
+        self.active_weight = self.active_weight.saturating_add(w);
+        Some((item, w))
     }
 
     /// A previously admitted request finished; its slot frees up.
     pub fn release(&mut self) {
+        self.release_weight(0);
+    }
+
+    /// Release a slot, crediting back the weight charged at admission.
+    pub fn release_weight(&mut self, weight: usize) {
         debug_assert!(self.active > 0);
         self.active = self.active.saturating_sub(1);
+        self.active_weight = self.active_weight.saturating_sub(weight);
     }
 
     pub fn active(&self) -> usize {
         self.active
+    }
+
+    /// Summed weight of currently active items.
+    pub fn active_weight(&self) -> usize {
+        self.active_weight
     }
 
     pub fn queued(&self) -> usize {
@@ -92,6 +144,38 @@ mod tests {
         let (item, why) = b.offer(3).unwrap_err();
         assert_eq!(item, 3);
         assert_eq!(why, Rejected::QueueFull);
+    }
+
+    #[test]
+    fn weighted_admission_respects_budget_cap() {
+        let mut b: Batcher<usize> = Batcher::new(8, 8).with_max_active_weight(30);
+        for w in [6usize, 30, 6, 6] {
+            b.offer(w).unwrap();
+        }
+        let weigh = |x: &usize| *x;
+        assert_eq!(b.admit_by(weigh), Some((6, 6)));
+        // 6 + 30 > 30: the heavy head must wait, and FIFO holds (the
+        // light items behind it do not jump the queue)
+        assert_eq!(b.admit_by(weigh), None);
+        b.release_weight(6);
+        // idle engine: the heavy request is admitted despite the cap
+        assert_eq!(b.admit_by(weigh), Some((30, 30)));
+        assert_eq!(b.admit_by(weigh), None);
+        assert_eq!(b.active_weight(), 30);
+        b.release_weight(30);
+        assert_eq!(b.admit_by(weigh), Some((6, 6)));
+        assert_eq!(b.admit_by(weigh), Some((6, 6)));
+        assert_eq!(b.active_weight(), 12);
+    }
+
+    #[test]
+    fn unweighted_admit_is_unchanged() {
+        let mut b: Batcher<u32> = Batcher::new(2, 8).with_max_active_weight(1);
+        b.offer(1).unwrap();
+        b.offer(2).unwrap();
+        // weight 0 per item: the cap never binds
+        assert_eq!(b.admit(), Some(1));
+        assert_eq!(b.admit(), Some(2));
     }
 
     #[test]

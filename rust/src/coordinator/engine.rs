@@ -12,9 +12,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::adaptive::{AdaptiveController, AdaptiveStepper, GlobalEstimator};
 use crate::config::{DecoderConfig, EngineConfig, SamplingConfig};
 use crate::decode::ar::ArStepper;
-use crate::decode::spec::{SpecStepper, StepOutcome};
+use crate::decode::spec::{RoundReport, SpecStepper, StepOutcome};
 use crate::decode::{build_parts, DecodeStats};
 use crate::llm::Llm;
 use crate::util::Rng;
@@ -48,12 +49,43 @@ pub enum Event {
 enum AnyStepper<T: Llm, D: Llm> {
     Ar(ArStepper<T>),
     Spec(SpecStepper<T, D>),
+    /// Per-round re-shaped speculative session (`adaptive:B`), sharing
+    /// the engine-global acceptance statistics.
+    Adaptive(AdaptiveStepper<T, D>),
+}
+
+impl<T: Llm, D: Llm> AnyStepper<T, D> {
+    fn out(&self) -> &[u32] {
+        match self {
+            AnyStepper::Ar(s) => &s.out,
+            AnyStepper::Spec(s) => &s.out,
+            AnyStepper::Adaptive(s) => s.out(),
+        }
+    }
+
+    fn stats(&self) -> &DecodeStats {
+        match self {
+            AnyStepper::Ar(s) => &s.stats,
+            AnyStepper::Spec(s) => &s.stats,
+            AnyStepper::Adaptive(s) => s.stats(),
+        }
+    }
+
+    fn last_round(&self) -> Option<&RoundReport> {
+        match self {
+            AnyStepper::Ar(_) => None,
+            AnyStepper::Spec(s) => s.last_round(),
+            AnyStepper::Adaptive(s) => s.last_round(),
+        }
+    }
 }
 
 struct Active<T: Llm, D: Llm> {
     req: Request,
     stepper: AnyStepper<T, D>,
     sent: usize,
+    /// Node-budget weight this request was charged at admission.
+    weight: usize,
     started: Instant,
     first_token_at: Option<f64>,
 }
@@ -65,11 +97,26 @@ pub struct Engine<T: Llm, D: Llm> {
     draft: D,
     cfg: EngineConfig,
     pub metrics: Arc<Metrics>,
+    /// Engine-global decayed acceptance statistics: the prior every new
+    /// adaptive request starts from, updated by all of them.
+    pub acceptance: Arc<GlobalEstimator>,
 }
 
 impl<T: Llm, D: Llm> Engine<T, D> {
     pub fn new(target: T, draft: D, cfg: EngineConfig) -> Self {
-        Self { target, draft, cfg, metrics: Arc::new(Metrics::default()) }
+        Self {
+            target,
+            draft,
+            cfg,
+            metrics: Arc::new(Metrics::default()),
+            acceptance: Arc::new(GlobalEstimator::default()),
+        }
+    }
+
+    /// The per-round node budget a request occupies while active (its
+    /// admission weight under `EngineConfig::max_active_budget`).
+    fn request_weight(&self, req: &Request) -> usize {
+        req.decoder.as_ref().unwrap_or(&self.cfg.decoder).budget().max(1)
     }
 
     fn make_stepper(&self, req: &Request) -> Result<AnyStepper<T, D>> {
@@ -78,6 +125,18 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         Ok(match decoder {
             DecoderConfig::Ar => {
                 AnyStepper::Ar(ArStepper::new(&self.target, sampling, &req.prompt, req.max_new)?)
+            }
+            DecoderConfig::Adaptive { budget, family } => {
+                let ctl =
+                    AdaptiveController::new(budget, family, Some(self.acceptance.clone()));
+                AnyStepper::Adaptive(AdaptiveStepper::new(
+                    &self.target,
+                    &self.draft,
+                    ctl,
+                    sampling,
+                    &req.prompt,
+                    req.max_new,
+                )?)
             }
             other => {
                 let (strategy, rule) = build_parts(&other);
@@ -99,7 +158,8 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     pub fn run(self, rx: mpsc::Receiver<Request>) -> Arc<Metrics> {
         let mut rng = Rng::seed_from_u64(self.cfg.seed);
         let mut batcher: Batcher<Request> =
-            Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue);
+            Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue)
+                .with_max_active_weight(self.cfg.max_active_budget);
         let mut active: Vec<Active<T, D>> = Vec::new();
         let mut closed = false;
 
@@ -136,21 +196,23 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 }
             }
 
-            // ---- admission -----------------------------------------------
-            while let Some(req) = batcher.admit() {
+            // ---- admission (budget-weighted under heterogeneous
+            // per-request decoders) ----------------------------------------
+            while let Some((req, weight)) = batcher.admit_by(|r| self.request_weight(r)) {
                 self.metrics.add(&self.metrics.admitted, 1);
                 match self.make_stepper(&req) {
                     Ok(stepper) => active.push(Active {
                         req,
                         stepper,
                         sent: 0,
+                        weight,
                         started: Instant::now(),
                         first_token_at: None,
                     }),
                     Err(e) => {
                         self.metrics.add(&self.metrics.failed, 1);
                         let _ = req.resp.send(Event::Error(e.to_string()));
-                        batcher.release();
+                        batcher.release_weight(weight);
                     }
                 }
             }
@@ -160,50 +222,47 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             while i < active.len() {
                 let a = &mut active[i];
                 let step_result = match &mut a.stepper {
-                    AnyStepper::Ar(s) => {
-                        s.step(&self.target, &mut rng).map(|o| (o, s.out.len()))
-                    }
-                    AnyStepper::Spec(s) => {
-                        s.step(&self.target, &self.draft, &mut rng).map(|o| (o, s.out.len()))
-                    }
+                    AnyStepper::Ar(s) => s.step(&self.target, &mut rng),
+                    AnyStepper::Spec(s) => s.step(&self.target, &self.draft, &mut rng),
+                    AnyStepper::Adaptive(s) => s.step(&self.target, &self.draft, &mut rng),
                 };
                 match step_result {
-                    Ok((outcome, out_len)) => {
+                    Ok(outcome) => {
                         self.metrics.add(&self.metrics.decode_rounds, 1);
+                        if let Some(report) = a.stepper.last_round() {
+                            self.metrics.record_round(report);
+                        }
+                        let out_len = a.stepper.out().len();
                         if out_len > a.sent {
                             if a.first_token_at.is_none() {
                                 let t = a.started.elapsed().as_secs_f64();
                                 a.first_token_at = Some(t);
                                 self.metrics.record_ttft(t);
                             }
-                            let new: Vec<u32> = match &a.stepper {
-                                AnyStepper::Ar(s) => s.out[a.sent..].to_vec(),
-                                AnyStepper::Spec(s) => s.out[a.sent..].to_vec(),
-                            };
+                            let new: Vec<u32> = a.stepper.out()[a.sent..].to_vec();
                             self.metrics.add(&self.metrics.tokens_out, new.len() as u64);
                             a.sent = out_len;
                             let _ = a.req.resp.send(Event::Tokens(new));
                         }
                         if outcome == StepOutcome::Done {
-                            let stats = match &a.stepper {
-                                AnyStepper::Ar(s) => s.stats.clone(),
-                                AnyStepper::Spec(s) => s.stats.clone(),
-                            };
+                            let stats = a.stepper.stats().clone();
                             self.metrics.add(&self.metrics.completed, 1);
                             self.metrics
                                 .add(&self.metrics.draft_calls, stats.draft_calls as u64);
                             self.metrics.record_latency(a.started.elapsed().as_secs_f64());
                             let _ = a.req.resp.send(Event::Done(stats));
+                            let weight = a.weight;
                             active.swap_remove(i);
-                            batcher.release();
+                            batcher.release_weight(weight);
                             continue; // don't advance i: swapped element takes this slot
                         }
                     }
                     Err(e) => {
                         self.metrics.add(&self.metrics.failed, 1);
                         let _ = a.req.resp.send(Event::Error(e.to_string()));
+                        let weight = a.weight;
                         active.swap_remove(i);
-                        batcher.release();
+                        batcher.release_weight(weight);
                         continue;
                     }
                 }

@@ -1,7 +1,15 @@
-//! Serving metrics: counters + latency distributions.
+//! Serving metrics: counters, latency distributions, and the adaptive
+//! controller's telemetry — per-level acceptance rates and the per-round
+//! tree-node-budget histogram aggregated over every speculative round
+//! the engine runs.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+use crate::decode::spec::RoundReport;
+
+/// Rounds using more nodes than this share the last histogram bucket.
+pub const NODE_HIST_MAX: usize = 64;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -16,6 +24,12 @@ pub struct Metrics {
     latencies: Mutex<Vec<f64>>,
     /// Time-to-first-token latencies (seconds).
     ttft: Mutex<Vec<f64>>,
+    /// Per-level verification attempts / acceptances across all rounds.
+    level_attempts: Mutex<Vec<u64>>,
+    level_accepts: Mutex<Vec<u64>>,
+    /// Histogram of draft-tree nodes per round (index = node count,
+    /// clamped to [`NODE_HIST_MAX`]).
+    round_nodes_hist: Mutex<Vec<u64>>,
 }
 
 #[derive(Debug, Clone)]
@@ -32,6 +46,12 @@ pub struct Snapshot {
     pub latency_p99: f64,
     pub ttft_p50: f64,
     pub ttft_p95: f64,
+    /// Empirical acceptance rate per tree level (accepts / attempts);
+    /// empty until a speculative round ran.
+    pub accept_rate_by_level: Vec<f64>,
+    /// Non-empty buckets of the nodes-per-round histogram, ascending
+    /// node count.
+    pub round_nodes_hist: Vec<(usize, u64)>,
 }
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -51,6 +71,29 @@ impl Metrics {
         self.ttft.lock().unwrap().push(secs);
     }
 
+    /// Fold one speculative round's verification telemetry into the
+    /// per-level acceptance and node-budget histograms.
+    pub fn record_round(&self, report: &RoundReport) {
+        {
+            let mut attempts = self.level_attempts.lock().unwrap();
+            let mut accepts = self.level_accepts.lock().unwrap();
+            for (level, &(_, success)) in report.level_trials.iter().enumerate() {
+                if attempts.len() <= level {
+                    attempts.resize(level + 1, 0);
+                    accepts.resize(level + 1, 0);
+                }
+                attempts[level] += 1;
+                accepts[level] += success as u64;
+            }
+        }
+        let bucket = report.nodes.min(NODE_HIST_MAX);
+        let mut hist = self.round_nodes_hist.lock().unwrap();
+        if hist.len() <= bucket {
+            hist.resize(bucket + 1, 0);
+        }
+        hist[bucket] += 1;
+    }
+
     pub fn add(&self, counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
     }
@@ -60,6 +103,22 @@ impl Metrics {
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mut ttft = self.ttft.lock().unwrap().clone();
         ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let attempts = self.level_attempts.lock().unwrap();
+        let accepts = self.level_accepts.lock().unwrap();
+        let accept_rate_by_level = attempts
+            .iter()
+            .zip(accepts.iter())
+            .map(|(&n, &s)| if n == 0 { 0.0 } else { s as f64 / n as f64 })
+            .collect();
+        let round_nodes_hist = self
+            .round_nodes_hist
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(nodes, &c)| (nodes, c))
+            .collect();
         Snapshot {
             admitted: self.admitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -73,6 +132,8 @@ impl Metrics {
             latency_p99: percentile(&lat, 0.99),
             ttft_p50: percentile(&ttft, 0.50),
             ttft_p95: percentile(&ttft, 0.95),
+            accept_rate_by_level,
+            round_nodes_hist,
         }
     }
 }
@@ -99,5 +160,40 @@ mod tests {
         m.add(&m.tokens_out, 5);
         m.add(&m.tokens_out, 7);
         assert_eq!(m.snapshot().tokens_out, 12);
+    }
+
+    #[test]
+    fn round_telemetry_aggregates() {
+        let m = Metrics::default();
+        // two rounds: level 0 accepted both times, level 1 accepted once
+        m.record_round(&RoundReport {
+            level_trials: vec![(2, 1), (3, 1)],
+            nodes: 6,
+            accepted: 2,
+            bonus: true,
+        });
+        m.record_round(&RoundReport {
+            level_trials: vec![(1, 1), (3, 0)],
+            nodes: 4,
+            accepted: 1,
+            bonus: false,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.accept_rate_by_level.len(), 2);
+        assert!((s.accept_rate_by_level[0] - 1.0).abs() < 1e-12);
+        assert!((s.accept_rate_by_level[1] - 0.5).abs() < 1e-12);
+        assert_eq!(s.round_nodes_hist, vec![(4, 1), (6, 1)]);
+    }
+
+    #[test]
+    fn oversized_rounds_share_last_bucket() {
+        let m = Metrics::default();
+        m.record_round(&RoundReport {
+            level_trials: vec![(1, 0)],
+            nodes: NODE_HIST_MAX + 40,
+            accepted: 0,
+            bonus: false,
+        });
+        assert_eq!(m.snapshot().round_nodes_hist, vec![(NODE_HIST_MAX, 1)]);
     }
 }

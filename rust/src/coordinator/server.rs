@@ -5,10 +5,26 @@
 //! Protocol: one request object per line:
 //!   {"prompt": "text", "max_tokens": 32, "decoder": "rsd-s:3x3"?,
 //!    "temperature": 0.3?, "top_p": 1.0?}
+//!
+//! The optional "decoder" field accepts every spec string of
+//! [`crate::config::DecoderConfig`]:
+//!   ar | sd:L | spectr:KxL | rsd-c:B-B-.. | rsd-s:WxL
+//!   adaptive:B | adaptive:B:rsd-c | adaptive:B:rsd-s
+//! `adaptive:B` enables per-request online tree shaping under the hard
+//! per-round node budget B ([`crate::adaptive`]); different connections
+//! may use different budgets concurrently (the engine's weighted
+//! admission keeps them fair, see `EngineConfig::max_active_budget`).
+//!
 //! Streamed responses, one object per line:
 //!   {"tokens": "generated fragment"}
-//!   {"done": {"generated": n, "block_efficiency": x, ...}}
+//!   {"done": {"generated": n, "block_efficiency": x,
+//!             "accept_rate_by_level": [..],
+//!             "nodes_per_round_hist": {"nodes": rounds, ..}, ...}}
 //!   {"error": "..."}
+//! The "done" payload carries the controller telemetry for the request:
+//! empirical acceptance rate per tree level and the histogram of
+//! draft-tree nodes the target processed per round (always <= B for
+//! adaptive decoders).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -85,6 +101,22 @@ pub(crate) fn parse_wire_request(
 }
 
 pub(crate) fn done_json(stats: &crate::decode::DecodeStats) -> Json {
+    // controller telemetry: per-level acceptance rates ...
+    let accept_rate_by_level = Json::Arr(
+        stats
+            .level_attempts
+            .iter()
+            .zip(&stats.level_accepts)
+            .map(|(&n, &s)| Json::Num(if n == 0 { 0.0 } else { s as f64 / n as f64 }))
+            .collect(),
+    );
+    // ... and the nodes-per-round histogram (actual budget trajectory)
+    let mut hist = std::collections::BTreeMap::new();
+    for &nodes in &stats.round_nodes {
+        *hist.entry(nodes.to_string()).or_insert(0u64) += 1;
+    }
+    let nodes_hist =
+        Json::Obj(hist.into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect());
     Json::obj(vec![(
         "done",
         Json::obj(vec![
@@ -93,6 +125,10 @@ pub(crate) fn done_json(stats: &crate::decode::DecodeStats) -> Json {
             ("decode_calls", stats.decode_calls.into()),
             ("draft_calls", stats.draft_calls.into()),
             ("accepted", stats.accepted_draft_tokens.into()),
+            ("bonus_rounds", stats.bonus_tokens.into()),
+            ("tree_nodes", stats.tree_nodes.into()),
+            ("accept_rate_by_level", accept_rate_by_level),
+            ("nodes_per_round_hist", nodes_hist),
             ("wall_secs", stats.wall.as_secs_f64().into()),
         ]),
     )])
@@ -180,5 +216,40 @@ mod tests {
         let tok = Tokenizer::new();
         assert!(parse_wire_request(r#"{"max_tokens": 2}"#, &tok).is_err());
         assert!(parse_wire_request("not json", &tok).is_err());
+    }
+
+    #[test]
+    fn wire_request_parses_adaptive_decoder() {
+        let tok = Tokenizer::new();
+        let (_, _, dec, _) =
+            parse_wire_request(r#"{"prompt": "hi", "decoder": "adaptive:30"}"#, &tok).unwrap();
+        assert_eq!(
+            dec,
+            Some(crate::config::DecoderConfig::Adaptive {
+                budget: 30,
+                family: crate::config::AdaptiveFamily::Auto,
+            })
+        );
+        assert!(parse_wire_request(r#"{"prompt": "hi", "decoder": "adaptive:0"}"#, &tok).is_err());
+    }
+
+    #[test]
+    fn done_event_carries_controller_telemetry() {
+        let stats = crate::decode::DecodeStats {
+            generated: 10,
+            decode_calls: 4,
+            level_attempts: vec![4, 3],
+            level_accepts: vec![3, 1],
+            round_nodes: vec![6, 6, 4, 6],
+            ..Default::default()
+        };
+        let j = done_json(&stats);
+        let done = j.get("done").unwrap();
+        let rates = done.get("accept_rate_by_level").and_then(Json::as_arr).unwrap();
+        assert_eq!(rates.len(), 2);
+        assert!((rates[0].as_f64().unwrap() - 0.75).abs() < 1e-12);
+        let hist = done.get("nodes_per_round_hist").and_then(Json::as_obj).unwrap();
+        assert_eq!(hist.get("6").and_then(Json::as_usize), Some(3));
+        assert_eq!(hist.get("4").and_then(Json::as_usize), Some(1));
     }
 }

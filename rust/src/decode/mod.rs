@@ -38,6 +38,17 @@ pub struct DecodeStats {
     pub bonus_tokens: usize,
     pub generated: usize,
     pub wall: Duration,
+    /// Per-level verification attempts (index = tree level); with
+    /// `level_accepts` this is the per-request acceptance-rate telemetry
+    /// surfaced in the server's `done` event and consumed by the
+    /// adaptive controller.
+    pub level_attempts: Vec<u64>,
+    /// Per-level accepted verifications (walk survived that level).
+    pub level_accepts: Vec<u64>,
+    /// Draft-tree nodes the target processed in each round, in round
+    /// order — the actual per-round budget trajectory (histogrammed by
+    /// the serving metrics; hard-capped by `DecoderConfig::Adaptive`).
+    pub round_nodes: Vec<u32>,
 }
 
 impl DecodeStats {
@@ -86,6 +97,9 @@ pub fn generate<T: Llm, D: Llm>(
 ) -> Result<DecodeRun> {
     match decoder {
         DecoderConfig::Ar => ar::run_ar(target, sampling, prompt, max_new, rng),
+        DecoderConfig::Adaptive { budget, family } => crate::adaptive::run_adaptive(
+            target, draft, *budget, *family, sampling, prompt, max_new, rng,
+        ),
         _ => {
             let (strategy, rule) = build_parts(decoder);
             spec::run_spec(target, draft, strategy, rule, sampling, prompt, max_new, rng)
@@ -94,12 +108,18 @@ pub fn generate<T: Llm, D: Llm>(
 }
 
 /// Instantiate the (strategy, rule) pair for a tree-based decoder config.
-/// Panics on `Ar` (which has no tree).
+/// Panics on `Ar` (which has no tree). For `Adaptive` this returns the
+/// uniform-prior *initial* shape; callers wanting per-round re-shaping
+/// use [`crate::adaptive::AdaptiveStepper`] instead.
 pub fn build_parts(
     decoder: &DecoderConfig,
 ) -> (Box<dyn spec::TreeStrategy>, Box<dyn rrs::VerifyRule>) {
+    use crate::adaptive::allocator::{initial_shape, DEFAULT_PHI_GAP};
     match decoder {
         DecoderConfig::Ar => unreachable!("AR has no tree strategy"),
+        DecoderConfig::Adaptive { budget, family } => {
+            (initial_shape(*budget, *family).build(DEFAULT_PHI_GAP), Box::new(Rrs))
+        }
         DecoderConfig::Sd { l } => (Box::new(Chain { depth: *l }), Box::new(Rrs)),
         DecoderConfig::SpecTr { k, l } => {
             (Box::new(IidPaths { k: *k, depth: *l }), Box::new(KSeq { gamma: None }))
@@ -126,6 +146,10 @@ mod tests {
             DecoderConfig::SpecTr { k: 3, l: 3 },
             DecoderConfig::RsdC { branches: vec![2, 2, 1] },
             DecoderConfig::RsdS { w: 3, l: 3 },
+            DecoderConfig::Adaptive {
+                budget: 6,
+                family: crate::config::AdaptiveFamily::Auto,
+            },
         ]
     }
 

@@ -111,6 +111,26 @@ pub struct VerifyResult {
     /// token from the target distribution when the walk exits the tree.
     pub final_token: u32,
     pub bonus: bool,
+    /// Per walked level: (sibling candidates examined, 1 if one of them
+    /// was accepted else 0). Each examined candidate is one rejection
+    /// trial of the verification rule, so these are the sufficient
+    /// statistics for estimating per-candidate acceptance rates
+    /// ([`crate::adaptive::AcceptanceEstimator`]).
+    pub level_trials: Vec<(usize, usize)>,
+}
+
+/// What one speculative round observed — the telemetry consumed by the
+/// adaptive controller ([`crate::adaptive`]) and the serving metrics.
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    /// Per walked level: (candidates examined, accepted 0/1).
+    pub level_trials: Vec<(usize, usize)>,
+    /// Draft-tree nodes the target processed this round (actual budget).
+    pub nodes: usize,
+    /// Accepted draft tokens this round.
+    pub accepted: usize,
+    /// Whether the walk exited the tree (bonus token drawn from target).
+    pub bonus: bool,
 }
 
 /// Verify a draft tree level by level (paper §3.2.2): at each level run
@@ -127,6 +147,7 @@ pub fn verify_tree(
 ) -> VerifyResult {
     let mut cur: Option<usize> = None;
     let mut accepted = Vec::new();
+    let mut level_trials = Vec::new();
     for level in 0..tree.levels.len() {
         let cands = tree.sibling_candidates(level, cur);
         if cands.is_empty() {
@@ -146,12 +167,15 @@ pub fn verify_tree(
         };
         match rule.verify(&tokens, draft_lp, target_lp, rng) {
             LevelOutcome::Accept { pos } => {
+                // `pos` earlier siblings were each rejected before this one
+                level_trials.push((pos + 1, 1));
                 let id = cands[pos].0;
                 accepted.push(id);
                 cur = Some(id);
             }
             LevelOutcome::Reject { token } => {
-                return VerifyResult { accepted, final_token: token, bonus: false };
+                level_trials.push((tokens.len(), 0));
+                return VerifyResult { accepted, final_token: token, bonus: false, level_trials };
             }
         }
     }
@@ -161,7 +185,7 @@ pub fn verify_tree(
         Some(id) => &node_target_lp[id],
     };
     let token = sample_categorical(&lp.probs(), rng) as u32;
-    VerifyResult { accepted, final_token: token, bonus: true }
+    VerifyResult { accepted, final_token: token, bonus: true, level_trials }
 }
 
 fn chain_nodes(tokens: &[u32]) -> Vec<EvalNode> {
@@ -202,6 +226,9 @@ pub struct SpecStepper<T: Llm, D: Llm> {
     tail_target: Vec<u32>,
     pub out: Vec<u32>,
     pub stats: DecodeStats,
+    /// Telemetry of the most recent round; `None` when the last `step`
+    /// did not run a round (finished / capacity-stopped).
+    last_round: Option<RoundReport>,
     max_new: usize,
     started: Instant,
     done: bool,
@@ -230,6 +257,7 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             tail_target: prompt.to_vec(),
             out: Vec::new(),
             stats: DecodeStats::default(),
+            last_round: None,
             max_new,
             started: Instant::now(),
             done: false,
@@ -238,6 +266,19 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
 
     pub fn is_done(&self) -> bool {
         self.done
+    }
+
+    /// Telemetry of the most recent completed round.
+    pub fn last_round(&self) -> Option<&RoundReport> {
+        self.last_round.as_ref()
+    }
+
+    /// Swap the tree strategy before the next round (adaptive tree
+    /// re-shaping). Safe at round granularity: every per-round strategy
+    /// state is reset by `begin_round`, and the KV sessions only depend
+    /// on the committed chain, never on how past trees were shaped.
+    pub fn set_strategy(&mut self, strategy: Box<dyn TreeStrategy>) {
+        self.strategy = strategy;
     }
 
     fn finish(&mut self) -> StepOutcome {
@@ -250,6 +291,7 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
 
     /// Run one speculative round (Figure 2 of the paper).
     pub fn step(&mut self, target: &T, draft: &D, rng: &mut Rng) -> Result<StepOutcome> {
+        self.last_round = None;
         if self.done {
             return Ok(StepOutcome::Done);
         }
@@ -362,6 +404,21 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         if vr.bonus {
             self.stats.bonus_tokens += 1;
         }
+        for (lvl, &(_, success)) in vr.level_trials.iter().enumerate() {
+            if self.stats.level_attempts.len() <= lvl {
+                self.stats.level_attempts.resize(lvl + 1, 0);
+                self.stats.level_accepts.resize(lvl + 1, 0);
+            }
+            self.stats.level_attempts[lvl] += 1;
+            self.stats.level_accepts[lvl] += success as u64;
+        }
+        self.stats.round_nodes.push(tree.nodes.len() as u32);
+        self.last_round = Some(RoundReport {
+            level_trials: vr.level_trials.clone(),
+            nodes: tree.nodes.len(),
+            accepted: vr.accepted.len(),
+            bonus: vr.bonus,
+        });
 
         // ---- zero-copy KV commit (FilterKVCache) --------------------------
         let mut tchain: Vec<usize> = (0..ttail_len).collect();

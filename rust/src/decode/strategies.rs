@@ -100,13 +100,7 @@ impl TreeStrategy for GumbelTopK {
     }
 
     fn max_nodes(&self) -> usize {
-        let mut n = 1;
-        let mut total = 0;
-        for &b in &self.branches {
-            n *= b;
-            total += n;
-        }
-        total
+        crate::config::rsd_c_budget(&self.branches)
     }
 
     fn begin_round(&mut self) {}
@@ -138,6 +132,13 @@ impl TreeStrategy for GumbelTopK {
 pub struct StochasticBeam {
     pub w: usize,
     pub depth: usize,
+    /// Early-truncation threshold: after the top-W selection, candidates
+    /// whose cumulative sequence log-prob φ trails the level's best by
+    /// more than this gap are dropped before drafting. Exactness is
+    /// unaffected (verification sees fewer siblings, never wrong ones);
+    /// the saved nodes shrink the actual per-round budget. `INFINITY`
+    /// (the [`StochasticBeam::new`] default) disables truncation.
+    pub max_phi_gap: f64,
     /// φ, ψ per created node id.
     state: Vec<(f64, f64)>,
     /// (φ, ψ) of the candidates proposed by the last `expand`, in the
@@ -147,7 +148,14 @@ pub struct StochasticBeam {
 
 impl StochasticBeam {
     pub fn new(w: usize, depth: usize) -> Self {
-        Self { w, depth, state: Vec::new(), staged: Vec::new() }
+        Self::with_gap(w, depth, f64::INFINITY)
+    }
+
+    /// Beam with early truncation at `max_phi_gap` log-prob units below
+    /// the per-level best sequence (the adaptive controller's setting).
+    pub fn with_gap(w: usize, depth: usize, max_phi_gap: f64) -> Self {
+        assert!(max_phi_gap >= 0.0, "phi gap must be non-negative");
+        Self { w, depth, max_phi_gap, state: Vec::new(), staged: Vec::new() }
     }
 }
 
@@ -200,6 +208,12 @@ impl TreeStrategy for StochasticBeam {
         // global top-W by ψ, decreasing (= verification order)
         cands.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
         cands.truncate(self.w);
+        // early truncation: drop branches whose sequence mass collapsed
+        // relative to the level's best (the φ-max candidate always stays)
+        if self.max_phi_gap.is_finite() && !cands.is_empty() {
+            let best_phi = cands.iter().map(|c| c.2).fold(NEG_INF, f64::max);
+            cands.retain(|c| c.2 >= best_phi - self.max_phi_gap);
+        }
         self.staged = cands.iter().map(|&(_, _, f, s)| (f, s)).collect();
         cands
             .into_iter()
@@ -275,6 +289,21 @@ mod tests {
         toks.sort();
         toks.dedup();
         assert_eq!(toks.len(), 3);
+    }
+
+    #[test]
+    fn phi_gap_truncates_but_keeps_best() {
+        let t = tree_with_root(&[0.0, 2.0, 4.0, 6.0]);
+        let mut rng = Rng::seed_from_u64(3);
+        let mut full = StochasticBeam::new(3, 2);
+        full.begin_round();
+        assert_eq!(full.expand(&t, 0, &mut rng).len(), 3, "infinite gap keeps the beam");
+        // gap 0: only candidates tied with the best sequence log-prob
+        // survive — at least one always does
+        let mut tight = StochasticBeam::with_gap(3, 2, 0.0);
+        tight.begin_round();
+        let c = tight.expand(&t, 0, &mut rng);
+        assert!(!c.is_empty() && c.len() <= 3);
     }
 
     #[test]

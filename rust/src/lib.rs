@@ -19,7 +19,19 @@
 //! model; [`sim::SimLm`] is an analytic substitute for fast controlled
 //! sweeps; [`coordinator`] is the serving engine; [`bench`] regenerates
 //! every table and figure of the paper's evaluation.
+//!
+//! On top of the static tree shapes of the paper's tables, [`adaptive`]
+//! adds per-request *online tree shaping under a fixed target-compute
+//! budget*: per-level acceptance rates are estimated from every
+//! verification walk (per request, blended with engine-global decayed
+//! statistics) and each speculative round runs the RSD-C branch vector
+//! or RSD-S beam maximizing expected accepted tokens subject to a hard
+//! per-round node budget B — `DecoderConfig::Adaptive`, spec string
+//! `adaptive:B[:rsd-c|:rsd-s]`, available per request over the serving
+//! protocol and swept against the static Exp2 grid by
+//! `benches/adaptive.rs`.
 
+pub mod adaptive;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

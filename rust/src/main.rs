@@ -40,6 +40,8 @@ COMMANDS:
   selftest   [--artifacts DIR]
 
 Decoder SPEC strings: ar | sd:L | spectr:KxL | rsd-c:B-B-.. | rsd-s:WxL
+                      adaptive:B[:rsd-c|:rsd-s]  (online tree shaping
+                      under a hard per-round node budget B)
 ";
 
 fn main() -> Result<()> {

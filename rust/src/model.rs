@@ -13,18 +13,29 @@
 //! split a device tuple), so caches round-trip host<->device once per
 //! call — measured and accounted in EXPERIMENTS.md §Perf.
 
+//! Like [`crate::runtime`], the real implementation needs the `xla`
+//! binding and is gated behind `--cfg pjrt_runtime`; default builds get
+//! a stub whose `load` fails with a pointer at the sim substrate, so
+//! every caller (CLI, benches, examples) compiles unchanged.
+
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(pjrt_runtime)]
+use anyhow::Context;
 
+#[cfg(pjrt_runtime)]
 use crate::config::{Manifest, ModelManifest};
 use crate::llm::{EvalNode, Llm};
-use crate::runtime::{Executable, Runtime};
+#[cfg(pjrt_runtime)]
+use crate::runtime::Executable;
+use crate::runtime::Runtime;
 use crate::tree::SessionCore;
 
 /// f32 additive-mask value for "cannot attend" (matches kernels/ref.py).
 pub const MASK_OFF: f32 = -1e30;
 
+#[cfg(pjrt_runtime)]
 pub struct PjrtLm {
     pub man: ModelManifest,
     rt: Runtime,
@@ -36,6 +47,7 @@ pub struct PjrtLm {
     weights: Vec<xla::PjRtBuffer>,
 }
 
+#[cfg(pjrt_runtime)]
 pub struct PjrtSession {
     pub core: SessionCore,
     kcache: xla::Literal,
@@ -45,6 +57,7 @@ pub struct PjrtSession {
     mask_host: Vec<f32>,
 }
 
+#[cfg(pjrt_runtime)]
 impl PjrtLm {
     /// Load `name` ("target" | "draft") from an artifacts directory.
     pub fn load(rt: &Runtime, artifacts_dir: impl AsRef<Path>, name: &str) -> Result<Self> {
@@ -148,6 +161,7 @@ impl PjrtLm {
     }
 }
 
+#[cfg(pjrt_runtime)]
 impl Llm for PjrtLm {
     type Session = PjrtSession;
 
@@ -183,6 +197,71 @@ impl Llm for PjrtLm {
             start = end;
         }
         Ok(out)
+    }
+
+    fn commit(&self, s: &mut Self::Session, accepted: &[usize]) -> Result<()> {
+        s.core.commit(accepted)
+    }
+
+    fn prefix_len(&self, s: &Self::Session) -> usize {
+        s.core.prefix_len()
+    }
+
+    fn capacity_left(&self, s: &Self::Session) -> usize {
+        s.core.capacity_left()
+    }
+}
+
+/// Stub model for builds without `--cfg pjrt_runtime`: loading always
+/// fails with a descriptive error, and no instance can ever exist, so
+/// the `Llm` methods below are unreachable — they only satisfy the
+/// trait so generic callers compile.
+#[cfg(not(pjrt_runtime))]
+pub struct PjrtLm {
+    #[allow(dead_code)]
+    _private: (),
+}
+
+#[cfg(not(pjrt_runtime))]
+pub struct PjrtSession {
+    pub core: SessionCore,
+}
+
+#[cfg(not(pjrt_runtime))]
+impl PjrtLm {
+    pub fn load(_rt: &Runtime, _artifacts_dir: impl AsRef<Path>, _name: &str) -> Result<Self> {
+        bail!(
+            "PJRT model unavailable: built without --cfg pjrt_runtime \
+             (see rust/Cargo.toml); use the sim substrate (--sim / SimLm)"
+        )
+    }
+
+    pub fn load_pair(rt: &Runtime, artifacts_dir: impl AsRef<Path>) -> Result<(Self, Self)> {
+        Ok((
+            Self::load(rt, artifacts_dir.as_ref(), "target")?,
+            Self::load(rt, artifacts_dir.as_ref(), "draft")?,
+        ))
+    }
+}
+
+#[cfg(not(pjrt_runtime))]
+impl Llm for PjrtLm {
+    type Session = PjrtSession;
+
+    fn vocab(&self) -> usize {
+        0
+    }
+
+    fn param_count(&self) -> usize {
+        0
+    }
+
+    fn begin(&self) -> Result<Self::Session> {
+        bail!("PJRT model unavailable (stub build)")
+    }
+
+    fn eval(&self, _s: &mut Self::Session, _nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>> {
+        bail!("PJRT model unavailable (stub build)")
     }
 
     fn commit(&self, s: &mut Self::Session, accepted: &[usize]) -> Result<()> {

@@ -13,16 +13,57 @@
 //! the full weight set each call. Owning the buffers fixes the leak and
 //! lets weights live on device across the whole serving session
 //! (EXPERIMENTS.md §Perf).
+//!
+//! The `xla` binding is distributed from source and absent from default
+//! builds; the real implementation is gated behind `--cfg pjrt_runtime`
+//! (see Cargo.toml). Without it, the stub below keeps the same API and
+//! returns a descriptive error from `Runtime::cpu()`, so the sim
+//! substrate, the coordinator and the whole test suite work unchanged.
 
+#[cfg(pjrt_runtime)]
 use std::path::Path;
 
+#[cfg(pjrt_runtime)]
 use anyhow::{anyhow, Context, Result};
 
+#[cfg(not(pjrt_runtime))]
+use anyhow::{bail, Result};
+
+/// Stub PJRT client used when the crate is built without
+/// `--cfg pjrt_runtime` (no `xla` binding available).
+#[cfg(not(pjrt_runtime))]
+pub struct Runtime {
+    #[allow(dead_code)]
+    _private: (),
+}
+
+#[cfg(not(pjrt_runtime))]
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: this build has no `xla` binding. \
+             Rebuild with RUSTFLAGS=\"--cfg pjrt_runtime\" and the xla \
+             dependency (see rust/Cargo.toml), or use the sim substrate \
+             (--sim / SimLm)."
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn clone_handle(&self) -> Runtime {
+        Runtime { _private: () }
+    }
+}
+
 /// A shared CPU PJRT client.
+#[cfg(pjrt_runtime)]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(pjrt_runtime)]
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
@@ -78,10 +119,12 @@ impl Runtime {
 
 /// A compiled step executable. Thin wrapper adding tuple unpacking and
 /// error context.
+#[cfg(pjrt_runtime)]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(pjrt_runtime)]
 impl Executable {
     /// Execute with device-buffer inputs; returns the flattened tuple
     /// elements as host literals (the AOT step lowers with
@@ -98,6 +141,7 @@ impl Executable {
 }
 
 /// Build an f32 literal of the given shape from a flat slice.
+#[cfg(pjrt_runtime)]
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     let n: i64 = dims.iter().product();
     if n as usize != data.len() {
@@ -107,6 +151,7 @@ pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
 }
 
 /// Build an i32 literal of the given shape from a flat slice.
+#[cfg(pjrt_runtime)]
 pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     let n: i64 = dims.iter().product();
     if n as usize != data.len() {

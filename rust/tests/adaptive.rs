@@ -1,0 +1,234 @@
+//! Adaptive draft-budget controller: allocator budget-safety property
+//! tests and engine-level integration on the sim substrate.
+
+use std::sync::mpsc;
+
+use rsd::adaptive::allocator::{best_shape, enumerate_shapes, initial_shape};
+use rsd::adaptive::TreeShape;
+use rsd::config::{AdaptiveFamily, DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::engine::{spawn, Engine, Event, Request};
+use rsd::decode::generate;
+use rsd::sim::SimLm;
+use rsd::util::Rng;
+
+/// PROPERTY: whatever the acceptance estimates, the allocator never
+/// emits a shape whose worst-case node count exceeds the hard budget.
+#[test]
+fn allocator_never_exceeds_budget() {
+    let mut rng = Rng::seed_from_u64(0xadab);
+    let families = [AdaptiveFamily::Auto, AdaptiveFamily::RsdC, AdaptiveFamily::RsdS];
+    for budget in 1..=40usize {
+        for _ in 0..32 {
+            let depth = 1 + rng.gen_range(8);
+            let rates: Vec<f64> =
+                (0..depth).map(|_| 0.02 + 0.96 * rng.gen_f64()).collect();
+            for family in families {
+                let shape = best_shape(budget, family, &rates);
+                assert!(
+                    shape.budget() <= budget,
+                    "budget {budget} family {family:?} rates {rates:?} -> {shape:?}"
+                );
+            }
+        }
+        for family in families {
+            assert!(initial_shape(budget, family).budget() <= budget);
+            for shape in enumerate_shapes(budget, family) {
+                assert!(shape.budget() <= budget, "{shape:?} vs {budget}");
+            }
+        }
+    }
+}
+
+/// Degenerate rate vectors (empty, all-low, all-high) must still yield a
+/// valid shape.
+#[test]
+fn allocator_handles_degenerate_rates() {
+    for rates in [vec![], vec![0.0; 4], vec![1.0; 4]] {
+        for budget in [1usize, 6, 30] {
+            let s = best_shape(budget, AdaptiveFamily::Auto, &rates);
+            assert!(s.budget() <= budget && s.budget() >= 1, "{rates:?} -> {s:?}");
+        }
+    }
+}
+
+/// A zero budget (only reachable programmatically — the parser rejects
+/// it) is clamped to the single-node chain instead of panicking, for
+/// every family including RsdS (whose raw shape space would be empty).
+#[test]
+fn allocator_clamps_zero_budget() {
+    for family in [AdaptiveFamily::Auto, AdaptiveFamily::RsdC, AdaptiveFamily::RsdS] {
+        let shapes = enumerate_shapes(0, family);
+        assert!(!shapes.is_empty(), "{family:?}");
+        let s = best_shape(0, family, &[0.5]);
+        assert_eq!(s.budget(), 1, "{family:?} -> {s:?}");
+    }
+}
+
+/// Runtime half of the acceptance criterion: under
+/// `DecoderConfig::Adaptive { budget: B, .. }` no round's actual tree
+/// ever uses more than B nodes, for every family.
+#[test]
+fn adaptive_rounds_respect_budget_at_runtime() {
+    let (target, draft) = SimLm::pair(5, 0.6, 96);
+    let sampling = SamplingConfig { temperature: 0.6, top_p: 1.0 };
+    let mut rng = Rng::seed_from_u64(2);
+    for b in [6usize, 30] {
+        for family in [AdaptiveFamily::Auto, AdaptiveFamily::RsdC, AdaptiveFamily::RsdS] {
+            let cfg = DecoderConfig::Adaptive { budget: b, family };
+            let run =
+                generate(&cfg, &sampling, &target, &draft, &[1, 2, 3], 40, &mut rng).unwrap();
+            assert_eq!(run.tokens.len(), 40);
+            let worst = run.stats.round_nodes.iter().copied().max().unwrap_or(0);
+            assert!(
+                worst as usize <= b,
+                "{family:?} B={b}: a round used {worst} nodes"
+            );
+        }
+    }
+}
+
+fn engine_mean_efficiency(decoder: DecoderConfig, alpha: f64, seed: u64) -> f64 {
+    let (target, draft) = SimLm::pair(seed, alpha, 64);
+    let cfg = EngineConfig {
+        max_concurrency: 3,
+        max_queue: 32,
+        default_max_tokens: 48,
+        max_active_budget: 0,
+        sampling: SamplingConfig { temperature: 0.7, top_p: 1.0 },
+        decoder: decoder.clone(),
+        seed,
+    };
+    let engine = Engine::new(target, draft, cfg);
+    let (tx, handle) = spawn(engine);
+    let mut receivers = Vec::new();
+    for i in 0..6u64 {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id: i,
+            prompt: vec![3 + i as u32, 7, 11],
+            max_new: 48,
+            decoder: None,
+            sampling: None,
+            resp: rtx,
+        })
+        .unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+    let mut effs = Vec::new();
+    for rrx in receivers {
+        while let Ok(ev) = rrx.recv() {
+            match ev {
+                Event::Done(stats) => {
+                    effs.push(stats.block_efficiency());
+                    break;
+                }
+                Event::Error(e) => panic!("{e}"),
+                Event::Tokens(_) => {}
+            }
+        }
+    }
+    handle.join().unwrap();
+    assert_eq!(effs.len(), 6);
+    effs.iter().sum::<f64>() / effs.len() as f64
+}
+
+/// Integration half of the acceptance criterion: on a skewed-acceptance
+/// workload (heavily misaligned draft, where a deep chain wastes its
+/// budget on doomed levels) the adaptive controller at the same budget
+/// must match or beat the mismatched static shape's block efficiency.
+#[test]
+fn adaptive_matches_or_beats_static_on_skewed_workload() {
+    let alpha = 0.35; // high draft-target discrepancy
+    let mut chain = 0.0;
+    let mut adaptive = 0.0;
+    for seed in [9u64, 10, 11] {
+        // static budget-6 chain (SD-style): worst fit for this workload
+        chain += engine_mean_efficiency(
+            DecoderConfig::RsdC { branches: vec![1, 1, 1, 1, 1, 1] },
+            alpha,
+            seed,
+        );
+        adaptive += engine_mean_efficiency(
+            DecoderConfig::Adaptive { budget: 6, family: AdaptiveFamily::Auto },
+            alpha,
+            seed,
+        );
+    }
+    assert!(
+        adaptive >= chain * 0.97,
+        "adaptive {adaptive:.3} fell behind static chain {chain:.3}"
+    );
+}
+
+/// The engine accepts heterogeneous per-request adaptive budgets and the
+/// `done` stats carry the controller telemetry.
+#[test]
+fn engine_runs_heterogeneous_adaptive_budgets() {
+    let (target, draft) = SimLm::pair(4, 0.8, 64);
+    let cfg = EngineConfig {
+        max_concurrency: 4,
+        max_queue: 32,
+        default_max_tokens: 24,
+        max_active_budget: 40,
+        sampling: SamplingConfig { temperature: 0.5, top_p: 1.0 },
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed: 1,
+    };
+    let engine = Engine::new(target, draft, cfg);
+    let (tx, handle) = spawn(engine);
+    let budgets = [6usize, 30, 6, 30];
+    let mut receivers = Vec::new();
+    for (i, &b) in budgets.iter().enumerate() {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id: i as u64,
+            prompt: vec![2, 4, 6],
+            max_new: 24,
+            decoder: Some(DecoderConfig::Adaptive { budget: b, family: AdaptiveFamily::Auto }),
+            sampling: None,
+            resp: rtx,
+        })
+        .unwrap();
+        receivers.push((b, rrx));
+    }
+    drop(tx);
+    for (b, rrx) in receivers {
+        loop {
+            match rrx.recv().unwrap() {
+                Event::Done(stats) => {
+                    assert_eq!(stats.generated, 24);
+                    assert!(!stats.level_attempts.is_empty());
+                    assert!(stats
+                        .round_nodes
+                        .iter()
+                        .all(|&n| n as usize <= b), "budget {b}: {:?}", stats.round_nodes);
+                    break;
+                }
+                Event::Error(e) => panic!("{e}"),
+                Event::Tokens(_) => {}
+            }
+        }
+    }
+    let snap = handle.join().unwrap().snapshot();
+    assert_eq!(snap.completed, 4);
+    // engine-level controller telemetry aggregated across requests
+    assert!(!snap.accept_rate_by_level.is_empty());
+    assert!(!snap.round_nodes_hist.is_empty());
+    let max_nodes = snap.round_nodes_hist.iter().map(|&(n, _)| n).max().unwrap();
+    assert!(max_nodes <= 30, "round used {max_nodes} nodes");
+}
+
+/// The shape space always contains a shape for tiny budgets and the
+/// chosen shapes differ across acceptance regimes (the controller has
+/// something to choose between).
+#[test]
+fn shape_space_is_meaningfully_diverse() {
+    let low = best_shape(30, AdaptiveFamily::Auto, &[0.15]);
+    let high = best_shape(30, AdaptiveFamily::Auto, &[0.95]);
+    assert_ne!(low, high);
+    assert!(matches!(
+        best_shape(1, AdaptiveFamily::Auto, &[0.5]),
+        TreeShape::RsdC { .. } | TreeShape::RsdS { .. }
+    ));
+}
