@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
 
     let tok = Tokenizer::new();
     let prompt = tok.encode("the sound of the ");
-    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.3, 1.0);
 
     let decoders = [
         DecoderConfig::Ar,

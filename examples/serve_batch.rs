@@ -65,9 +65,10 @@ fn run_one(
         max_queue: 64,
         default_max_tokens: MAX_NEW,
         max_active_budget: 72, // two wide trees + change, never four
-        sampling: SamplingConfig { temperature: 0.3, top_p: 1.0 },
+        sampling: SamplingConfig::new(0.3, 1.0),
         decoder: decoder.clone(),
         seed: 0,
+        fused: true,
     };
     let (tx, handle) = if use_sim {
         let cfg = cfg.clone();

@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let tok = Tokenizer::new();
     let (target, draft) = SimLm::pair(4, 0.75, 32);
     let prompt = tok.encode("speculative ");
-    let sampling = SamplingConfig { temperature: 0.8, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.8, 1.0);
     let mut rng = Rng::seed_from_u64(3);
 
     println!("=== RSD-C, b = (3, 2, 1)  (paper Fig. 3a) ===");

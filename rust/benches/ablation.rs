@@ -23,7 +23,7 @@ use rsd::sim::SimLm;
 use rsd::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let sampling = SamplingConfig { temperature: 0.7, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.7, 1.0);
 
     section("ablation 1: RRS vs multi-round on the SAME w/o-replacement tree");
     let (target, draft) = SimLm::pair(3, 0.55, 48);

@@ -14,7 +14,7 @@ use rsd::config::{AdaptiveFamily, DecoderConfig, SamplingConfig};
 use rsd::sim::SimLm;
 
 fn main() -> anyhow::Result<()> {
-    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.3, 1.0);
 
     // two alignment regimes: well-aligned (deep shapes win) and
     // misaligned (width-heavy shapes win) — adaptive must track both

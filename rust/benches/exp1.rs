@@ -16,7 +16,7 @@ use rsd::runtime::Runtime;
 use rsd::sim::SimLm;
 
 fn main() -> anyhow::Result<()> {
-    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.3, 1.0);
 
     // ---- sim substrate: full App. C.3.1 grid ---------------------------
     let (target, draft) = SimLm::pair(0, 0.8, 256);

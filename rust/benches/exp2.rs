@@ -13,7 +13,7 @@ use rsd::runtime::Runtime;
 use rsd::sim::SimLm;
 
 fn main() -> anyhow::Result<()> {
-    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.3, 1.0);
 
     // ---- sim substrate: full App. C.3.2 grid at two alignments ---------
     for alpha in [0.9, 0.6] {

@@ -76,14 +76,21 @@ fn main() -> anyhow::Result<()> {
 
     section("whole rounds on the sim substrate");
     let (target, draft) = SimLm::pair(0, 0.8, vocab);
-    let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.3, 1.0);
     for spec in ["sd:3", "rsd-c:2-2-2", "rsd-s:6x5"] {
         let cfg: rsd::config::DecoderConfig = spec.parse().unwrap();
         bench(&format!("spec_round/{spec}"), || {
             let (strategy, rule) = build_parts(&cfg);
-            let mut st =
-                SpecStepper::new(&target, &draft, strategy, rule, sampling, &[1, 2, 3], 64)
-                    .unwrap();
+            let mut st = SpecStepper::new(
+                &target,
+                &draft,
+                strategy,
+                rule,
+                sampling.clone(),
+                &[1, 2, 3],
+                64,
+            )
+            .unwrap();
             while st.step(&target, &draft, &mut rng).unwrap() == StepOutcome::Progress {
                 if st.out.len() >= 8 {
                     break;
@@ -132,7 +139,7 @@ fn main() -> anyhow::Result<()> {
             });
         }
         section("end-to-end decode (REAL artifacts, 16 tokens)");
-        let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+        let sampling = SamplingConfig::new(0.3, 1.0);
         for spec in ["ar", "sd:3", "rsd-s:3x3"] {
             let cfg: rsd::config::DecoderConfig = spec.parse().unwrap();
             bench(&format!("generate16/{spec}"), || {

@@ -13,9 +13,9 @@ use anyhow::Result;
 
 use crate::config::{AdaptiveFamily, SamplingConfig, ADAPTIVE_MAX_DEPTH};
 use crate::decode::rrs::Rrs;
-use crate::decode::spec::{RoundReport, SpecStepper, StepOutcome};
+use crate::decode::spec::{RoundReport, RoundStart, SpecStepper, StepOutcome};
 use crate::decode::{DecodeRun, DecodeStats};
-use crate::llm::Llm;
+use crate::llm::{EvalNode, Llm};
 use crate::util::Rng;
 
 use super::allocator::{self, TreeShape, DEFAULT_PHI_GAP, DEFAULT_RATE};
@@ -123,8 +123,10 @@ impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
         Ok(Self { inner, ctl, current: shape })
     }
 
-    /// Re-shape, run one speculative round, learn from its outcome.
-    pub fn step(&mut self, target: &T, draft: &D, rng: &mut Rng) -> Result<StepOutcome> {
+    /// Swap the inner stepper's tree strategy to the controller's current
+    /// pick. Safe at round granularity only (see
+    /// [`SpecStepper::set_strategy`]).
+    fn reshape(&mut self) {
         if !self.inner.is_done() {
             let shape = self.ctl.next_shape();
             debug_assert!(shape.budget() <= self.ctl.budget());
@@ -133,12 +135,56 @@ impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
                 self.current = shape;
             }
         }
-        let outcome = self.inner.step(target, draft, rng)?;
+    }
+
+    /// Fold the just-finished round's telemetry into the controller.
+    fn observe_round(&mut self) {
         if let Some(report) = self.inner.last_round() {
             // clone keeps the report available for the engine's metrics
             let report = report.clone();
             self.ctl.observe(&report);
         }
+    }
+
+    /// Phase machine (see [`SpecStepper`]): re-shape, then start a round.
+    pub fn begin_round(&mut self, target: &T, draft: &D) -> Result<RoundStart> {
+        self.reshape();
+        self.inner.begin_round(target, draft)
+    }
+
+    /// Pending draft work of the current phase (delegates to the inner
+    /// stepper).
+    pub fn draft_group(&mut self) -> Option<(&mut D::Session, &[EvalNode])> {
+        self.inner.draft_group()
+    }
+
+    pub fn feed_draft(&mut self, rows: Vec<Vec<f32>>, rng: &mut Rng) -> Result<()> {
+        self.inner.feed_draft(rows, rng)
+    }
+
+    /// Pending target (verification) work of the current phase.
+    pub fn target_group(&mut self) -> Option<(&mut T::Session, &[EvalNode])> {
+        self.inner.target_group()
+    }
+
+    /// Verify + commit + learn from the round's outcome.
+    pub fn feed_target(
+        &mut self,
+        target: &T,
+        draft: &D,
+        rows: Vec<Vec<f32>>,
+        rng: &mut Rng,
+    ) -> Result<StepOutcome> {
+        let outcome = self.inner.feed_target(target, draft, rows, rng)?;
+        self.observe_round();
+        Ok(outcome)
+    }
+
+    /// Re-shape, run one speculative round, learn from its outcome.
+    pub fn step(&mut self, target: &T, draft: &D, rng: &mut Rng) -> Result<StepOutcome> {
+        self.reshape();
+        let outcome = self.inner.step(target, draft, rng)?;
+        self.observe_round();
         Ok(outcome)
     }
 
@@ -177,7 +223,8 @@ pub fn run_adaptive<T: Llm, D: Llm>(
     rng: &mut Rng,
 ) -> Result<DecodeRun> {
     let ctl = AdaptiveController::new(budget, family, None);
-    let mut stepper = AdaptiveStepper::new(target, draft, ctl, *sampling, prompt, max_new)?;
+    let mut stepper =
+        AdaptiveStepper::new(target, draft, ctl, sampling.clone(), prompt, max_new)?;
     while stepper.step(target, draft, rng)? == StepOutcome::Progress {}
     Ok(DecodeRun { tokens: stepper.out().to_vec(), stats: stepper.stats().clone() })
 }

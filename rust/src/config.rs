@@ -109,19 +109,82 @@ impl Manifest {
 }
 
 /// Logits post-processing, matching the paper's experimental setup
-/// (temperature 0.3 for WMT/XSum analogues; 1.0 + top-p 0.95 for Dolly).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// (temperature 0.3 for WMT/XSum analogues; 1.0 + top-p 0.95 for Dolly),
+/// plus the request's stop-token set.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SamplingConfig {
     pub temperature: f32,
     /// Nucleus filtering: keep the smallest prefix of tokens (by prob)
     /// whose mass reaches `top_p`; 1.0 disables.
     pub top_p: f32,
+    /// Stop tokens: generation finishes at the first generated occurrence
+    /// of any of these token ids. The stop token itself is not emitted,
+    /// and accepted draft tokens after it are dropped. Empty = disabled.
+    pub stop: Vec<u32>,
 }
 
 impl Default for SamplingConfig {
     fn default() -> Self {
-        Self { temperature: 1.0, top_p: 1.0 }
+        Self::new(1.0, 1.0)
     }
+}
+
+impl SamplingConfig {
+    pub fn new(temperature: f32, top_p: f32) -> Self {
+        Self { temperature, top_p, stop: Vec::new() }
+    }
+
+    /// Builder-style stop-token set.
+    pub fn with_stop(mut self, stop: Vec<u32>) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    pub fn is_stop(&self, token: u32) -> bool {
+        self.stop.contains(&token)
+    }
+}
+
+/// Per-request sampling overrides: fields left `None` inherit the
+/// engine's configured [`SamplingConfig`], so a request setting only
+/// `"stop"` keeps the fleet-wide temperature (and vice versa).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SamplingPatch {
+    pub temperature: Option<f32>,
+    pub top_p: Option<f32>,
+    pub stop: Option<Vec<u32>>,
+}
+
+impl SamplingPatch {
+    pub fn is_empty(&self) -> bool {
+        self.temperature.is_none() && self.top_p.is_none() && self.stop.is_none()
+    }
+
+    /// Resolve against the engine's configured defaults.
+    pub fn apply(&self, base: &SamplingConfig) -> SamplingConfig {
+        SamplingConfig {
+            temperature: self.temperature.unwrap_or(base.temperature),
+            top_p: self.top_p.unwrap_or(base.top_p),
+            stop: self.stop.clone().unwrap_or_else(|| base.stop.clone()),
+        }
+    }
+}
+
+/// Parse a JSON `"stop"` array of token ids — shared by the wire
+/// protocol ([`crate::coordinator::server`]) and the engine-config file,
+/// so validation can never diverge between the two. Rejects entries that
+/// are not non-negative integers in u32 range (a lossy cast would
+/// silently turn `-1` into token 0 or `10.7` into `10`).
+pub fn parse_stop_tokens(arr: &[Json]) -> Result<Vec<u32>> {
+    arr.iter()
+        .map(|x| {
+            let f = x.as_f64().context("stop entries must be token ids")?;
+            if f.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&f) {
+                bail!("stop entry {f} is not a valid token id");
+            }
+            Ok(f as u32)
+        })
+        .collect()
 }
 
 /// Deepest draft tree the adaptive allocator will consider. Acceptance
@@ -364,6 +427,12 @@ pub struct EngineConfig {
     pub sampling: SamplingConfig,
     pub decoder: DecoderConfig,
     pub seed: u64,
+    /// Whether the engine round loop issues one fused
+    /// [`crate::llm::Llm::eval_batch`] call per phase across all active
+    /// requests (the default) or falls back to one `eval` per request.
+    /// Output is token-for-token identical either way (per-request RNG
+    /// streams); the fallback exists for A/B benchmarking and debugging.
+    pub fused: bool,
 }
 
 impl Default for EngineConfig {
@@ -373,9 +442,10 @@ impl Default for EngineConfig {
             max_queue: 256,
             default_max_tokens: 64,
             max_active_budget: 0,
-            sampling: SamplingConfig { temperature: 0.3, top_p: 1.0 },
+            sampling: SamplingConfig::new(0.3, 1.0),
             decoder: DecoderConfig::RsdS { w: 3, l: 3 },
             seed: 0,
+            fused: true,
         }
     }
 }
@@ -412,6 +482,12 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             cfg.seed = v as u64;
+        }
+        if let Some(v) = j.get("fused").and_then(Json::as_bool) {
+            cfg.fused = v;
+        }
+        if let Some(arr) = j.get("stop").and_then(Json::as_arr) {
+            cfg.sampling.stop = parse_stop_tokens(arr)?;
         }
         if let Some(s) = j.get("decoder").and_then(Json::as_str) {
             cfg.decoder = s.parse()?;
@@ -477,6 +553,34 @@ mod tests {
         for s in bad {
             assert!(s.parse::<DecoderConfig>().is_err(), "{s}");
         }
+    }
+
+    #[test]
+    fn sampling_patch_inherits_unset_fields() {
+        let base = SamplingConfig::new(0.7, 0.9).with_stop(vec![10]);
+        let patch = SamplingPatch { stop: Some(vec![0]), ..Default::default() };
+        let resolved = patch.apply(&base);
+        assert!((resolved.temperature - 0.7).abs() < 1e-6);
+        assert!((resolved.top_p - 0.9).abs() < 1e-6);
+        assert_eq!(resolved.stop, vec![0]);
+        assert!(SamplingPatch::default().is_empty());
+        assert_eq!(SamplingPatch::default().apply(&base), base);
+    }
+
+    #[test]
+    fn engine_config_parses_fused_and_stop() {
+        let j = Json::parse(r#"{"fused": false, "stop": [10, 0]}"#).unwrap();
+        let cfg = EngineConfig::from_json(&j).unwrap();
+        assert!(!cfg.fused);
+        assert_eq!(cfg.sampling.stop, vec![10, 0]);
+        // non-integer / negative stop entries must be rejected, not cast
+        for bad in [r#"{"stop": [10.7]}"#, r#"{"stop": [-1]}"#, r#"{"stop": ["x"]}"#] {
+            assert!(EngineConfig::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+        let d = EngineConfig::default();
+        assert!(d.fused);
+        assert!(d.sampling.stop.is_empty());
+        assert!(!d.sampling.is_stop(7));
     }
 
     #[test]

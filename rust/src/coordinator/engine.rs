@@ -1,7 +1,36 @@
-//! The serving engine: owns the (target, draft) model pair and steps
-//! every active request one speculative round per turn — continuous
-//! batching at iteration granularity, so long generations never starve
-//! newly admitted requests.
+//! The serving engine: owns the (target, draft) model pair and runs
+//! *phase-synchronized fused rounds* — continuous batching at iteration
+//! granularity, with every model forward batched across requests.
+//!
+//! # Fused round loop
+//!
+//! Each engine turn advances every active request by one speculative
+//! round, in lockstep phases:
+//!
+//! 1. **Begin** — every stepper runs its per-round bookkeeping
+//!    ([`SpecStepper::begin_round`] / AR sampling) and stages its first
+//!    model work. No model call happens here.
+//! 2. **Draft** — all staged draft work (one tree level per request) is
+//!    executed as ONE fused [`Llm::eval_batch`] call over the draft
+//!    model; rows are fed back and each stepper stages its next level.
+//!    Repeat until no request has draft work left: requests whose trees
+//!    are shallower simply drop out of later fused calls (the fill-ratio
+//!    histogram in [`super::metrics::Metrics`] tracks exactly this).
+//!    AR requests have no draft phase and never participate.
+//! 3. **Verify** — one fused `eval_batch` over the target model covers
+//!    every request's verification pass (tail + whole tree; prefill or
+//!    single-token decode for AR). Rows are fed back; verification,
+//!    commit and emission run on the host per request.
+//!
+//! Token streams are **identical** to stepping each request alone: every
+//! request owns a deterministic RNG stream seeded from
+//! `engine_seed ^ request_id`, and model calls never consume RNG, so
+//! neither admission order nor batch composition changes any request's
+//! output. (Exception: `adaptive:B` requests share the engine-global
+//! acceptance estimator by design, so their tree *shapes* — never their
+//! distributional correctness — depend on what else ran.)
+//! `EngineConfig::fused = false` switches to one `eval` per request for
+//! A/B benchmarking; the schedule and output stay the same.
 //!
 //! The engine core is synchronous (PJRT execution is blocking); it runs
 //! on its own thread and talks to front-ends through std channels.
@@ -13,11 +42,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::adaptive::{AdaptiveController, AdaptiveStepper, GlobalEstimator};
-use crate::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use crate::config::{DecoderConfig, EngineConfig, SamplingPatch};
 use crate::decode::ar::ArStepper;
-use crate::decode::spec::{RoundReport, SpecStepper, StepOutcome};
+use crate::decode::spec::{RoundReport, RoundStart, SpecStepper, StepOutcome};
 use crate::decode::{build_parts, DecodeStats};
-use crate::llm::Llm;
+use crate::llm::{EvalNode, Llm};
 use crate::util::Rng;
 
 use super::batcher::Batcher;
@@ -31,7 +60,9 @@ pub struct Request {
     pub max_new: usize,
     /// Per-request overrides (None = engine defaults).
     pub decoder: Option<DecoderConfig>,
-    pub sampling: Option<SamplingConfig>,
+    /// Field-wise sampling overrides; unset fields inherit the engine's
+    /// configured sampling.
+    pub sampling: Option<SamplingPatch>,
     pub resp: mpsc::Sender<Event>,
 }
 
@@ -80,14 +111,58 @@ impl<T: Llm, D: Llm> AnyStepper<T, D> {
     }
 }
 
+/// Where one active request stands within the current fused round.
+enum RoundState {
+    /// Phase work staged; participating in fused calls.
+    InRound,
+    /// Round completed, generation continues.
+    Progressed,
+    /// Request finished (this round or at `begin_round`).
+    Done,
+    /// Request failed; message to deliver.
+    Failed(String),
+}
+
 struct Active<T: Llm, D: Llm> {
     req: Request,
     stepper: AnyStepper<T, D>,
+    /// This request's own deterministic RNG stream (seeded from
+    /// `engine_seed ^ request_id`), making output independent of
+    /// admission order and batch composition.
+    rng: Rng,
     sent: usize,
     /// Node-budget weight this request was charged at admission.
     weight: usize,
     started: Instant,
     first_token_at: Option<f64>,
+}
+
+/// Execute one phase's groups and return a per-group outcome (rows or
+/// error message), index-aligned with the groups.
+///
+/// Fused path: one `eval_batch` call; on error every participating
+/// session may hold half-applied pending state, so ALL groups fail.
+/// Sequential fallback (`EngineConfig::fused = false`): one `eval` per
+/// group, so an error stays confined to the request that hit it — the
+/// other sessions were touched by their own calls only.
+fn eval_phase<L: Llm>(
+    lm: &L,
+    fused: bool,
+    groups: &mut [(&mut L::Session, &[EvalNode])],
+) -> Vec<std::result::Result<Vec<Vec<f32>>, String>> {
+    if fused {
+        return match lm.eval_batch(groups) {
+            Ok(rows) => rows.into_iter().map(Ok).collect(),
+            Err(e) => {
+                let msg = e.to_string();
+                (0..groups.len()).map(|_| Err(msg.clone())).collect()
+            }
+        };
+    }
+    groups
+        .iter_mut()
+        .map(|(session, nodes)| lm.eval(session, nodes).map_err(|e| e.to_string()))
+        .collect()
 }
 
 /// The engine. Generic over the LM implementation so the full coordinator
@@ -121,7 +196,10 @@ impl<T: Llm, D: Llm> Engine<T, D> {
 
     fn make_stepper(&self, req: &Request) -> Result<AnyStepper<T, D>> {
         let decoder = req.decoder.clone().unwrap_or_else(|| self.cfg.decoder.clone());
-        let sampling = req.sampling.unwrap_or(self.cfg.sampling);
+        let sampling = match &req.sampling {
+            Some(patch) => patch.apply(&self.cfg.sampling),
+            None => self.cfg.sampling.clone(),
+        };
         Ok(match decoder {
             DecoderConfig::Ar => {
                 AnyStepper::Ar(ArStepper::new(&self.target, sampling, &req.prompt, req.max_new)?)
@@ -156,7 +234,6 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     /// Blocking serve loop. Returns when the request channel closes and
     /// all in-flight work drained.
     pub fn run(self, rx: mpsc::Receiver<Request>) -> Arc<Metrics> {
-        let mut rng = Rng::seed_from_u64(self.cfg.seed);
         let mut batcher: Batcher<Request> =
             Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue)
                 .with_max_active_weight(self.cfg.max_active_budget);
@@ -201,14 +278,18 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             while let Some((req, weight)) = batcher.admit_by(|r| self.request_weight(r)) {
                 self.metrics.add(&self.metrics.admitted, 1);
                 match self.make_stepper(&req) {
-                    Ok(stepper) => active.push(Active {
-                        req,
-                        stepper,
-                        sent: 0,
-                        weight,
-                        started: Instant::now(),
-                        first_token_at: None,
-                    }),
+                    Ok(stepper) => {
+                        let rng = Rng::seed_from_u64(self.cfg.seed ^ req.id);
+                        active.push(Active {
+                            req,
+                            stepper,
+                            rng,
+                            sent: 0,
+                            weight,
+                            started: Instant::now(),
+                            first_token_at: None,
+                        });
+                    }
                     Err(e) => {
                         self.metrics.add(&self.metrics.failed, 1);
                         let _ = req.resp.send(Event::Error(e.to_string()));
@@ -216,60 +297,186 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     }
                 }
             }
+            if active.is_empty() {
+                continue;
+            }
 
-            // ---- one round per active request (round-robin fairness) -----
+            // ---- one fused round over every active request ---------------
+            let mut state = self.run_fused_round(&mut active);
+
+            // ---- flush tokens, deliver completions/errors ----------------
             let mut i = 0;
             while i < active.len() {
-                let a = &mut active[i];
-                let step_result = match &mut a.stepper {
-                    AnyStepper::Ar(s) => s.step(&self.target, &mut rng),
-                    AnyStepper::Spec(s) => s.step(&self.target, &self.draft, &mut rng),
-                    AnyStepper::Adaptive(s) => s.step(&self.target, &self.draft, &mut rng),
+                // owned disposition so removal below can freely mutate
+                let failure: Option<String> = match &state[i] {
+                    RoundState::Failed(e) => Some(e.clone()),
+                    _ => None,
                 };
-                match step_result {
-                    Ok(outcome) => {
-                        self.metrics.add(&self.metrics.decode_rounds, 1);
-                        if let Some(report) = a.stepper.last_round() {
-                            self.metrics.record_round(report);
+                let completed = matches!(state[i], RoundState::Done);
+                if failure.is_none() {
+                    let a = &mut active[i];
+                    let out_len = a.stepper.out().len();
+                    if out_len > a.sent {
+                        if a.first_token_at.is_none() {
+                            let t = a.started.elapsed().as_secs_f64();
+                            a.first_token_at = Some(t);
+                            self.metrics.record_ttft(t);
                         }
-                        let out_len = a.stepper.out().len();
-                        if out_len > a.sent {
-                            if a.first_token_at.is_none() {
-                                let t = a.started.elapsed().as_secs_f64();
-                                a.first_token_at = Some(t);
-                                self.metrics.record_ttft(t);
-                            }
-                            let new: Vec<u32> = a.stepper.out()[a.sent..].to_vec();
-                            self.metrics.add(&self.metrics.tokens_out, new.len() as u64);
-                            a.sent = out_len;
-                            let _ = a.req.resp.send(Event::Tokens(new));
-                        }
-                        if outcome == StepOutcome::Done {
-                            let stats = a.stepper.stats().clone();
-                            self.metrics.add(&self.metrics.completed, 1);
-                            self.metrics
-                                .add(&self.metrics.draft_calls, stats.draft_calls as u64);
-                            self.metrics.record_latency(a.started.elapsed().as_secs_f64());
-                            let _ = a.req.resp.send(Event::Done(stats));
-                            let weight = a.weight;
-                            active.swap_remove(i);
-                            batcher.release_weight(weight);
-                            continue; // don't advance i: swapped element takes this slot
-                        }
-                    }
-                    Err(e) => {
-                        self.metrics.add(&self.metrics.failed, 1);
-                        let _ = a.req.resp.send(Event::Error(e.to_string()));
-                        let weight = a.weight;
-                        active.swap_remove(i);
-                        batcher.release_weight(weight);
-                        continue;
+                        let new: Vec<u32> = a.stepper.out()[a.sent..].to_vec();
+                        self.metrics.add(&self.metrics.tokens_out, new.len() as u64);
+                        a.sent = out_len;
+                        let _ = a.req.resp.send(Event::Tokens(new));
                     }
                 }
-                i += 1;
+                if let Some(e) = failure {
+                    self.metrics.add(&self.metrics.failed, 1);
+                    let _ = active[i].req.resp.send(Event::Error(e));
+                    let weight = active[i].weight;
+                    active.swap_remove(i);
+                    state.swap_remove(i);
+                    batcher.release_weight(weight);
+                } else if completed {
+                    let stats = active[i].stepper.stats().clone();
+                    self.metrics.add(&self.metrics.completed, 1);
+                    self.metrics
+                        .add(&self.metrics.draft_calls, stats.draft_calls as u64);
+                    self.metrics.record_latency(active[i].started.elapsed().as_secs_f64());
+                    let _ = active[i].req.resp.send(Event::Done(stats));
+                    let weight = active[i].weight;
+                    active.swap_remove(i);
+                    state.swap_remove(i);
+                    batcher.release_weight(weight);
+                } else {
+                    i += 1;
+                }
             }
         }
         self.metrics
+    }
+
+    /// Advance every active request by one speculative round, batching
+    /// all draft and target forwards across requests (see module docs).
+    /// Returns each request's end-of-round state, index-aligned with
+    /// `active`.
+    fn run_fused_round(&self, active: &mut [Active<T, D>]) -> Vec<RoundState> {
+        let mut state: Vec<RoundState> = Vec::with_capacity(active.len());
+
+        // ---- phase 1: begin rounds (bookkeeping, no model calls) ---------
+        for a in active.iter_mut() {
+            let start = match &mut a.stepper {
+                AnyStepper::Ar(s) => s.begin_round(&self.target, &mut a.rng),
+                AnyStepper::Spec(s) => s.begin_round(&self.target, &self.draft),
+                AnyStepper::Adaptive(s) => s.begin_round(&self.target, &self.draft),
+            };
+            state.push(match start {
+                Ok(RoundStart::Started) => RoundState::InRound,
+                Ok(RoundStart::Finished) => RoundState::Done,
+                Err(e) => RoundState::Failed(e.to_string()),
+            });
+        }
+        let in_round =
+            state.iter().filter(|s| matches!(s, RoundState::InRound)).count();
+
+        // ---- phase 2: fused draft levels ---------------------------------
+        // Requests at different tree depths drop out of later iterations;
+        // each iteration is ONE fused draft forward across the rest.
+        loop {
+            let mut groups: Vec<(&mut D::Session, &[EvalNode])> = Vec::new();
+            let mut who: Vec<usize> = Vec::new();
+            for (i, a) in active.iter_mut().enumerate() {
+                if !matches!(state[i], RoundState::InRound) {
+                    continue;
+                }
+                let g = match &mut a.stepper {
+                    AnyStepper::Spec(s) => s.draft_group(),
+                    AnyStepper::Adaptive(s) => s.draft_group(),
+                    AnyStepper::Ar(_) => None,
+                };
+                if let Some(g) = g {
+                    groups.push(g);
+                    who.push(i);
+                }
+            }
+            if groups.is_empty() {
+                break;
+            }
+            let results = eval_phase(&self.draft, self.cfg.fused, &mut groups);
+            drop(groups);
+            self.metrics.record_fused(who.len(), in_round);
+            for (res, &i) in results.into_iter().zip(who.iter()) {
+                match res {
+                    Ok(rows_i) => {
+                        let a = &mut active[i];
+                        let fed = match &mut a.stepper {
+                            AnyStepper::Spec(s) => s.feed_draft(rows_i, &mut a.rng),
+                            AnyStepper::Adaptive(s) => s.feed_draft(rows_i, &mut a.rng),
+                            AnyStepper::Ar(_) => unreachable!("AR stages no draft work"),
+                        };
+                        if let Err(e) = fed {
+                            state[i] = RoundState::Failed(e.to_string());
+                        }
+                    }
+                    Err(e) => state[i] = RoundState::Failed(e),
+                }
+            }
+        }
+
+        // ---- phase 3: one fused target pass (verification) ---------------
+        let mut groups: Vec<(&mut T::Session, &[EvalNode])> = Vec::new();
+        let mut who: Vec<usize> = Vec::new();
+        for (i, a) in active.iter_mut().enumerate() {
+            if !matches!(state[i], RoundState::InRound) {
+                continue;
+            }
+            let g = match &mut a.stepper {
+                AnyStepper::Ar(s) => s.target_group(),
+                AnyStepper::Spec(s) => s.target_group(),
+                AnyStepper::Adaptive(s) => s.target_group(),
+            };
+            match g {
+                Some(g) => {
+                    groups.push(g);
+                    who.push(i);
+                }
+                None => state[i] = RoundState::Failed("round staged no target work".into()),
+            }
+        }
+        if !groups.is_empty() {
+            let results = eval_phase(&self.target, self.cfg.fused, &mut groups);
+            drop(groups);
+            self.metrics.record_fused(who.len(), in_round);
+            for (res, &i) in results.into_iter().zip(who.iter()) {
+                let rows_i = match res {
+                    Ok(rows_i) => rows_i,
+                    Err(e) => {
+                        state[i] = RoundState::Failed(e);
+                        continue;
+                    }
+                };
+                let a = &mut active[i];
+                let fed = match &mut a.stepper {
+                    AnyStepper::Ar(s) => s.feed_target(&self.target, rows_i),
+                    AnyStepper::Spec(s) => {
+                        s.feed_target(&self.target, &self.draft, rows_i, &mut a.rng)
+                    }
+                    AnyStepper::Adaptive(s) => {
+                        s.feed_target(&self.target, &self.draft, rows_i, &mut a.rng)
+                    }
+                };
+                state[i] = match fed {
+                    Ok(StepOutcome::Progress) => RoundState::Progressed,
+                    Ok(StepOutcome::Done) => RoundState::Done,
+                    Err(e) => RoundState::Failed(e.to_string()),
+                };
+                if !matches!(state[i], RoundState::Failed(_)) {
+                    self.metrics.add(&self.metrics.decode_rounds, 1);
+                    if let Some(report) = active[i].stepper.last_round() {
+                        self.metrics.record_round(report);
+                    }
+                }
+            }
+        }
+        state
     }
 }
 

@@ -1,7 +1,9 @@
-//! Serving metrics: counters, latency distributions, and the adaptive
-//! controller's telemetry — per-level acceptance rates and the per-round
-//! tree-node-budget histogram aggregated over every speculative round
-//! the engine runs.
+//! Serving metrics: counters, latency distributions, the adaptive
+//! controller's telemetry (per-level acceptance rates, per-round
+//! tree-node-budget histogram), and the fused-execution telemetry —
+//! how many requests each fused [`crate::llm::Llm::eval_batch`] call
+//! carried and how full those batches were relative to the round's
+//! in-flight request count.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -10,6 +12,12 @@ use crate::decode::spec::RoundReport;
 
 /// Rounds using more nodes than this share the last histogram bucket.
 pub const NODE_HIST_MAX: usize = 64;
+
+/// Fused calls batching more requests than this share the last bucket.
+pub const FUSED_HIST_MAX: usize = 64;
+
+/// Number of fill-ratio buckets (deciles of participating / in-round).
+pub const FILL_BUCKETS: usize = 10;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -30,6 +38,20 @@ pub struct Metrics {
     /// Histogram of draft-tree nodes per round (index = node count,
     /// clamped to [`NODE_HIST_MAX`]).
     round_nodes_hist: Mutex<Vec<u64>>,
+    /// Total fused model calls (draft + target) issued by the engine's
+    /// round loop.
+    pub fused_calls: AtomicU64,
+    /// Exact sum of group counts across all fused calls (the clamped
+    /// histogram below cannot recover the true mean for huge batches).
+    pub fused_groups_total: AtomicU64,
+    /// Histogram of requests per fused call (index = group count,
+    /// clamped to [`FUSED_HIST_MAX`]).
+    fused_batch_hist: Mutex<Vec<u64>>,
+    /// Fill-ratio deciles: bucket `b` counts fused calls whose
+    /// participating/in-round ratio fell in `(b/10, (b+1)/10]`. A draft
+    /// call late in a round has low fill (most trees already complete);
+    /// the target call always fills the batch.
+    fused_fill_hist: Mutex<[u64; FILL_BUCKETS]>,
 }
 
 #[derive(Debug, Clone)]
@@ -52,6 +74,15 @@ pub struct Snapshot {
     /// Non-empty buckets of the nodes-per-round histogram, ascending
     /// node count.
     pub round_nodes_hist: Vec<(usize, u64)>,
+    /// Total fused model calls issued by the engine round loop.
+    pub fused_calls: u64,
+    /// Non-empty buckets of the requests-per-fused-call histogram,
+    /// ascending group count.
+    pub fused_batch_hist: Vec<(usize, u64)>,
+    /// Fill-ratio deciles (bucket `b` = ratio in `(b/10, (b+1)/10]`).
+    pub fused_fill_hist: [u64; FILL_BUCKETS],
+    /// Mean requests per fused call (0.0 before any fused call).
+    pub fused_mean_batch: f64,
 }
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -94,6 +125,30 @@ impl Metrics {
         hist[bucket] += 1;
     }
 
+    /// Record one fused model call: `groups` requests participated out of
+    /// `in_round` requests currently running this round.
+    pub fn record_fused(&self, groups: usize, in_round: usize) {
+        if groups == 0 {
+            return;
+        }
+        self.add(&self.fused_calls, 1);
+        self.add(&self.fused_groups_total, groups as u64);
+        {
+            let bucket = groups.min(FUSED_HIST_MAX);
+            let mut hist = self.fused_batch_hist.lock().unwrap();
+            if hist.len() <= bucket {
+                hist.resize(bucket + 1, 0);
+            }
+            hist[bucket] += 1;
+        }
+        let ratio = groups as f64 / in_round.max(groups) as f64;
+        // ratio in (0, 1]: bucket b covers (b/10, (b+1)/10]
+        let bucket = ((ratio * FILL_BUCKETS as f64).ceil() as usize)
+            .clamp(1, FILL_BUCKETS)
+            - 1;
+        self.fused_fill_hist.lock().unwrap()[bucket] += 1;
+    }
+
     pub fn add(&self, counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
     }
@@ -119,6 +174,23 @@ impl Metrics {
             .filter(|&(_, &c)| c > 0)
             .map(|(nodes, &c)| (nodes, c))
             .collect();
+        let fused_batch_hist: Vec<(usize, u64)> = self
+            .fused_batch_hist
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(groups, &c)| (groups, c))
+            .collect();
+        let fused_fill_hist = *self.fused_fill_hist.lock().unwrap();
+        let fused_calls = self.fused_calls.load(Ordering::Relaxed);
+        // exact mean from the unclamped counter, not the display histogram
+        let fused_mean_batch = if fused_calls == 0 {
+            0.0
+        } else {
+            self.fused_groups_total.load(Ordering::Relaxed) as f64 / fused_calls as f64
+        };
         Snapshot {
             admitted: self.admitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -134,6 +206,10 @@ impl Metrics {
             ttft_p95: percentile(&ttft, 0.95),
             accept_rate_by_level,
             round_nodes_hist,
+            fused_calls,
+            fused_batch_hist,
+            fused_fill_hist,
+            fused_mean_batch,
         }
     }
 }
@@ -183,6 +259,20 @@ mod tests {
         assert!((s.accept_rate_by_level[0] - 1.0).abs() < 1e-12);
         assert!((s.accept_rate_by_level[1] - 0.5).abs() < 1e-12);
         assert_eq!(s.round_nodes_hist, vec![(4, 1), (6, 1)]);
+    }
+
+    #[test]
+    fn fused_telemetry_aggregates() {
+        let m = Metrics::default();
+        m.record_fused(8, 8); // full batch -> top decile
+        m.record_fused(2, 8); // quarter fill -> (0.2, 0.3]
+        m.record_fused(0, 8); // no participants: not a call
+        let s = m.snapshot();
+        assert_eq!(s.fused_calls, 2);
+        assert_eq!(s.fused_batch_hist, vec![(2, 1), (8, 1)]);
+        assert_eq!(s.fused_fill_hist[9], 1);
+        assert_eq!(s.fused_fill_hist[2], 1);
+        assert!((s.fused_mean_batch - 5.0).abs() < 1e-12);
     }
 
     #[test]

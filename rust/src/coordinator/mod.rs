@@ -4,10 +4,13 @@
 //!
 //! Structure follows the vLLM router/engine split: [`batcher::Batcher`]
 //! owns the admission queue and fairness policy; [`engine::Engine`] owns
-//! the models and steps active sessions round-robin (one speculative
-//! round per turn, so a long request cannot starve others);
+//! the models and advances every active session one speculative round
+//! per turn in lockstep phases, fusing all draft/target forwards across
+//! requests into one `eval_batch` call per phase (so a long request
+//! cannot starve others, and the hardware batch dimension never idles);
 //! [`server`] is a thin JSON-lines TCP front-end; [`metrics`] aggregates
-//! the serving statistics the benches report.
+//! the serving statistics (incl. fused-batch telemetry) the benches
+//! report.
 
 pub mod batcher;
 pub mod engine;

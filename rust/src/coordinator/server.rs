@@ -4,7 +4,15 @@
 //!
 //! Protocol: one request object per line:
 //!   {"prompt": "text", "max_tokens": 32, "decoder": "rsd-s:3x3"?,
-//!    "temperature": 0.3?, "top_p": 1.0?}
+//!    "temperature": 0.3?, "top_p": 1.0?, "stop": [10]?}
+//!
+//! "stop" is an array of token ids (the tokenizer is byte-level, so an
+//! id is a byte value, e.g. 10 = "\n"); generation ends at the first
+//! generated occurrence of any of them. The stop token itself is not
+//! returned, and accepted draft tokens after it are dropped.
+//! "temperature" / "top_p" / "stop" are independent per-field overrides:
+//! any field a request leaves out inherits the engine's configured
+//! sampling (see [`crate::config::SamplingPatch`]).
 //!
 //! The optional "decoder" field accepts every spec string of
 //! [`crate::config::DecoderConfig`]:
@@ -33,7 +41,7 @@ use std::sync::mpsc;
 
 use anyhow::Result;
 
-use crate::config::SamplingConfig;
+use crate::config::{parse_stop_tokens, SamplingPatch};
 use crate::tokenizer::Tokenizer;
 use crate::util::Json;
 
@@ -77,7 +85,7 @@ fn err_json(e: impl std::fmt::Display) -> Json {
 pub(crate) fn parse_wire_request(
     line: &str,
     tok: &Tokenizer,
-) -> Result<(Vec<u32>, usize, Option<crate::config::DecoderConfig>, Option<SamplingConfig>)> {
+) -> Result<(Vec<u32>, usize, Option<crate::config::DecoderConfig>, Option<SamplingPatch>)> {
     let j = Json::parse(line)?;
     let prompt_text = j.str_field("prompt")?;
     let prompt = tok.encode(prompt_text);
@@ -87,16 +95,17 @@ pub(crate) fn parse_wire_request(
         Some(s) => Some(s.parse()?),
         None => None,
     };
-    let sampling = match (
-        j.get("temperature").and_then(Json::as_f64),
-        j.get("top_p").and_then(Json::as_f64),
-    ) {
-        (None, None) => None,
-        (t, p) => Some(SamplingConfig {
-            temperature: t.unwrap_or(0.3) as f32,
-            top_p: p.unwrap_or(1.0) as f32,
-        }),
-    };
+    let mut patch = SamplingPatch::default();
+    if let Some(t) = j.get("temperature").and_then(Json::as_f64) {
+        patch.temperature = Some(t as f32);
+    }
+    if let Some(p) = j.get("top_p").and_then(Json::as_f64) {
+        patch.top_p = Some(p as f32);
+    }
+    if let Some(arr) = j.get("stop").and_then(Json::as_arr) {
+        patch.stop = Some(parse_stop_tokens(arr)?);
+    }
+    let sampling = if patch.is_empty() { None } else { Some(patch) };
     Ok((prompt, max_new, decoder, sampling))
 }
 
@@ -198,7 +207,11 @@ mod tests {
         assert_eq!(prompt.len(), 5);
         assert_eq!(max_new, 9);
         assert_eq!(dec, Some(crate::config::DecoderConfig::RsdC { branches: vec![2, 2] }));
-        assert!((samp.unwrap().temperature - 0.5).abs() < 1e-6);
+        let samp = samp.unwrap();
+        assert!((samp.temperature.unwrap() - 0.5).abs() < 1e-6);
+        // unset fields stay None: they inherit the engine's sampling
+        assert!(samp.top_p.is_none());
+        assert!(samp.stop.is_none());
     }
 
     #[test]
@@ -209,6 +222,23 @@ mod tests {
         assert_eq!(max_new, 64);
         assert!(dec.is_none());
         assert!(samp.is_none());
+    }
+
+    #[test]
+    fn wire_request_parses_stop_tokens() {
+        let tok = Tokenizer::new();
+        let (_, _, _, samp) = parse_wire_request(
+            r#"{"prompt": "hi", "stop": [10, 0]}"#,
+            &tok,
+        )
+        .unwrap();
+        let samp = samp.unwrap();
+        assert_eq!(samp.stop, Some(vec![10, 0]));
+        // only "stop" was set: temperature/top_p inherit the engine's
+        assert!(samp.temperature.is_none());
+        assert!(samp.top_p.is_none());
+        // invalid stop entries are rejected
+        assert!(parse_wire_request(r#"{"prompt": "hi", "stop": ["x"]}"#, &tok).is_err());
     }
 
     #[test]

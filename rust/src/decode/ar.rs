@@ -1,7 +1,17 @@
 //! Auto-regressive baseline: one target call per generated token.
 //! Resumable ([`ArStepper`]) so the coordinator can interleave AR
 //! requests with speculative ones.
+//!
+//! Like [`super::spec::SpecStepper`], the stepper is a phase machine
+//! that never calls the model itself: [`ArStepper::begin_round`] samples
+//! the next token (or stages the prompt prefill on the first round) and
+//! stages a target evaluation; the caller runs it — fused with every
+//! other active request in the serving engine — and hands the rows back
+//! through [`ArStepper::feed_target`]. AR rounds have no draft phase, so
+//! AR requests simply contribute nothing to the engine's fused draft
+//! calls.
 
+use std::mem;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -11,14 +21,24 @@ use crate::llm::{EvalNode, Llm};
 use crate::sampling::{process_logits, sample_categorical, LogProbs};
 use crate::util::Rng;
 
-use super::spec::StepOutcome;
+use super::spec::{RoundStart, StepOutcome};
 use super::{DecodeRun, DecodeStats};
+
+/// Target work staged for the current AR round.
+enum Phase {
+    Idle,
+    /// Prompt prefill (first round only; emits no token).
+    AwaitPrefill { nodes: Vec<EvalNode> },
+    /// Single-token decode for the token sampled at `begin_round`.
+    AwaitDecode { nodes: Vec<EvalNode> },
+}
 
 pub struct ArStepper<T: Llm> {
     sampling: SamplingConfig,
     sess: T::Session,
     /// Distribution for the next token (None until prefill ran).
     lp: Option<LogProbs>,
+    phase: Phase,
     prompt: Vec<u32>,
     pub out: Vec<u32>,
     pub stats: DecodeStats,
@@ -41,6 +61,7 @@ impl<T: Llm> ArStepper<T> {
             sampling,
             sess: target.begin()?,
             lp: None,
+            phase: Phase::Idle,
             prompt: prompt.to_vec(),
             out: Vec::new(),
             stats: DecodeStats::default(),
@@ -61,14 +82,18 @@ impl<T: Llm> ArStepper<T> {
         StepOutcome::Done
     }
 
-    /// One iteration: sample from the current distribution and (unless
-    /// finished) evaluate the sampled token to obtain the next one.
-    pub fn step(&mut self, target: &T, rng: &mut Rng) -> Result<StepOutcome> {
+    /// Start a round: sample the next token from the current distribution
+    /// and stage its evaluation, or stage the prompt prefill on round 1.
+    /// [`RoundStart::Finished`] means the request just finished without
+    /// model work (length cap, stop token, or KV capacity) — any token
+    /// sampled this call is already in `out`.
+    pub fn begin_round(&mut self, target: &T, rng: &mut Rng) -> Result<RoundStart> {
+        debug_assert!(matches!(self.phase, Phase::Idle), "begin_round mid-round");
         if self.done {
-            return Ok(StepOutcome::Done);
+            return Ok(RoundStart::Finished);
         }
-        if self.lp.is_none() {
-            // prefill round
+        let Some(lp) = &self.lp else {
+            // prefill round: evaluate the whole prompt chain
             let nodes: Vec<EvalNode> = self
                 .prompt
                 .iter()
@@ -81,31 +106,75 @@ impl<T: Llm> ArStepper<T> {
                     }
                 })
                 .collect();
-            let rows = target.eval(&mut self.sess, &nodes)?;
-            self.stats.decode_calls += 1;
-            let chain: Vec<usize> = (0..self.prompt.len()).collect();
-            target.commit(&mut self.sess, &chain)?;
-            self.lp = Some(process_logits(
-                rows.last().unwrap(),
-                self.sampling.temperature,
-                self.sampling.top_p,
-            ));
+            self.phase = Phase::AwaitPrefill { nodes };
+            return Ok(RoundStart::Started);
+        };
+        let token = sample_categorical(&lp.probs(), rng) as u32;
+        if self.sampling.is_stop(token) {
+            // stop token: finish without emitting it
+            self.finish();
+            return Ok(RoundStart::Finished);
         }
-        let token =
-            sample_categorical(&self.lp.as_ref().unwrap().probs(), rng) as u32;
         self.out.push(token);
         if self.out.len() >= self.max_new || target.capacity_left(&self.sess) < 2 {
-            return Ok(self.finish());
+            self.finish();
+            return Ok(RoundStart::Finished);
         }
-        let rows = target.eval(&mut self.sess, &[EvalNode::root(token)])?;
+        self.phase = Phase::AwaitDecode { nodes: vec![EvalNode::root(token)] };
+        Ok(RoundStart::Started)
+    }
+
+    /// The staged target work (AR rounds always have exactly one target
+    /// phase and no draft phase).
+    pub fn target_group(&mut self) -> Option<(&mut T::Session, &[EvalNode])> {
+        match &self.phase {
+            Phase::AwaitPrefill { nodes } | Phase::AwaitDecode { nodes } => {
+                Some((&mut self.sess, nodes.as_slice()))
+            }
+            Phase::Idle => None,
+        }
+    }
+
+    /// Consume the target rows: commit the evaluated chain and refresh
+    /// the next-token distribution.
+    pub fn feed_target(&mut self, target: &T, rows: Vec<Vec<f32>>) -> Result<StepOutcome> {
+        let phase = mem::replace(&mut self.phase, Phase::Idle);
+        let nodes_len = match &phase {
+            Phase::AwaitPrefill { nodes } | Phase::AwaitDecode { nodes } => nodes.len(),
+            Phase::Idle => bail!("feed_target outside a round"),
+        };
+        if rows.len() != nodes_len {
+            bail!("feed_target: {} rows for {} staged nodes", rows.len(), nodes_len);
+        }
         self.stats.decode_calls += 1;
-        target.commit(&mut self.sess, &[0])?;
+        let chain: Vec<usize> = (0..nodes_len).collect();
+        target.commit(&mut self.sess, &chain)?;
         self.lp = Some(process_logits(
-            &rows[0],
+            rows.last().expect("staged nodes non-empty"),
             self.sampling.temperature,
             self.sampling.top_p,
         ));
         Ok(StepOutcome::Progress)
+    }
+
+    /// One iteration: sample a token and evaluate it (runs the prefill
+    /// first when needed, so each successful `step` emits exactly one
+    /// token, as before the phase split).
+    pub fn step(&mut self, target: &T, rng: &mut Rng) -> Result<StepOutcome> {
+        loop {
+            let was_prefill = self.lp.is_none();
+            if self.begin_round(target, rng)? == RoundStart::Finished {
+                return Ok(StepOutcome::Done);
+            }
+            let rows = match self.target_group() {
+                Some((sess, nodes)) => target.eval(sess, nodes)?,
+                None => bail!("round staged no target work"),
+            };
+            let outcome = self.feed_target(target, rows)?;
+            if !was_prefill {
+                return Ok(outcome);
+            }
+        }
     }
 }
 
@@ -116,7 +185,7 @@ pub fn run_ar<T: Llm>(
     max_new: usize,
     rng: &mut Rng,
 ) -> Result<DecodeRun> {
-    let mut stepper = ArStepper::new(target, *sampling, prompt, max_new)?;
+    let mut stepper = ArStepper::new(target, sampling.clone(), prompt, max_new)?;
     while stepper.step(target, rng)? == StepOutcome::Progress {}
     Ok(DecodeRun { tokens: stepper.out.clone(), stats: stepper.stats.clone() })
 }

@@ -171,7 +171,7 @@ mod tests {
     fn spec_decoders_beat_ar_block_efficiency_when_aligned() {
         let (target, draft) = SimLm::pair(5, 0.97, 48);
         let mut rng = Rng::seed_from_u64(1);
-        let sampling = SamplingConfig { temperature: 0.5, top_p: 1.0 };
+        let sampling = SamplingConfig::new(0.5, 1.0);
         for cfg in all_decoders().into_iter().skip(1) {
             let run =
                 generate(&cfg, &sampling, &target, &draft, &[7, 8], 64, &mut rng).unwrap();
@@ -187,7 +187,7 @@ mod tests {
     fn rsd_s_beats_sd_on_efficiency_misaligned() {
         // high discrepancy: the without-replacement tree must help
         let (target, draft) = SimLm::pair(9, 0.4, 48);
-        let sampling = SamplingConfig { temperature: 0.7, top_p: 1.0 };
+        let sampling = SamplingConfig::new(0.7, 1.0);
         let mut eff_sd = 0.0;
         let mut eff_rsds = 0.0;
         for seed in 0..8 {

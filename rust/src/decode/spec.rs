@@ -7,15 +7,41 @@
 //! i.i.d. paths, Gumbel-Top-k, Stochastic Beam Search) + a
 //! [`VerifyRule`](super::rrs::VerifyRule) (how a sibling set is accepted:
 //! RRS, K-SEQ, multi-round). This mirrors the paper's structure: Figure 2
-//! is [`SpecStepper::step`], Alg. 3/8 are strategies, Alg. 6 is the rule.
+//! is one [`SpecStepper`] round, Alg. 3/8 are strategies, Alg. 6 is the
+//! rule.
 //!
-//! Decoding is *resumable at round granularity* ([`SpecStepper`]), which
-//! is what lets the coordinator interleave many requests over one model
-//! (continuous batching at the iteration level, vLLM-style).
+//! # Phase machine
+//!
+//! The stepper does not own the model calls. A round is a resumable
+//! *phase machine* that stages work and consumes rows:
+//!
+//! 1. [`SpecStepper::begin_round`] — capacity/length checks, stages the
+//!    draft-tail chain ([`RoundStart::Started`]) or finishes the request
+//!    without a round ([`RoundStart::Finished`]).
+//! 2. While [`SpecStepper::draft_group`] is `Some((session, nodes))`:
+//!    run the *draft* model on them, hand the rows back through
+//!    [`SpecStepper::feed_draft`] (which expands the next tree level —
+//!    one draft phase per non-leaf level).
+//! 3. [`SpecStepper::target_group`] then stages the whole tree (plus the
+//!    target tail) for one parallel *target* pass;
+//!    [`SpecStepper::feed_target`] verifies, commits the accepted path
+//!    into both KV caches and emits tokens.
+//!
+//! [`SpecStepper::step`] drives the machine with direct per-session
+//! `eval` calls (the single-request path). The serving engine instead
+//! advances *every* active request's machine in lockstep and executes
+//! each phase as one fused [`crate::llm::Llm::eval_batch`] call across
+//! requests; because model calls never consume the per-request RNG, the
+//! fused schedule is token-for-token identical to sequential stepping.
+//!
+//! Decoding stays *resumable at round granularity*, which is what lets
+//! the coordinator interleave many requests over one model (continuous
+//! batching at the iteration level, vLLM-style).
 
+use std::mem;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::SamplingConfig;
 use crate::llm::{EvalNode, Llm};
@@ -207,8 +233,43 @@ fn chain_nodes(tokens: &[u32]) -> Vec<EvalNode> {
 pub enum StepOutcome {
     /// Round completed, generation continues.
     Progress,
-    /// Request finished (max tokens reached or capacity exhausted).
+    /// Request finished (max tokens reached, stop token generated, or
+    /// capacity exhausted).
     Done,
+}
+
+/// Did `begin_round` stage model work, or finish the request instead?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundStart {
+    /// A round is in progress: drive the draft phases, then the target
+    /// phase.
+    Started,
+    /// No round: the stepper is done (`is_done()`), no phase work is
+    /// staged, and the caller should treat this as [`StepOutcome::Done`].
+    Finished,
+}
+
+/// Where a round stands between model calls.
+enum Phase {
+    /// No round in progress.
+    Idle,
+    /// Waiting for draft rows for `nodes`. `level` is the tree level the
+    /// rows will describe (`None` = the tail chain whose last row yields
+    /// the round's root draft distribution).
+    AwaitDraft { nodes: Vec<EvalNode>, level: Option<usize> },
+    /// Tree built; waiting for target rows for `nodes` (tail + tree).
+    AwaitTarget { nodes: Vec<EvalNode> },
+}
+
+/// Per-round working state carried across phases.
+struct RoundCtx {
+    tree: DraftTree,
+    /// `strategy.depth()` captured at round start.
+    depth: usize,
+    /// Length of the draft tail chain evaluated at round start.
+    dtail_len: usize,
+    /// Next free index in the draft session's pending list.
+    draft_pending_count: usize,
 }
 
 /// Resumable speculative decoding session over a (target, draft) pair.
@@ -224,10 +285,12 @@ pub struct SpecStepper<T: Llm, D: Llm> {
     /// Tokens not yet in the target's KV cache (only the final token of
     /// the previous round; the whole prompt on round 1).
     tail_target: Vec<u32>,
+    phase: Phase,
+    round: Option<RoundCtx>,
     pub out: Vec<u32>,
     pub stats: DecodeStats,
-    /// Telemetry of the most recent round; `None` when the last `step`
-    /// did not run a round (finished / capacity-stopped).
+    /// Telemetry of the most recent round; `None` when the last round
+    /// did not run (finished / capacity-stopped).
     last_round: Option<RoundReport>,
     max_new: usize,
     started: Instant,
@@ -255,6 +318,8 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             tsess: target.begin()?,
             tail_draft: prompt.to_vec(),
             tail_target: prompt.to_vec(),
+            phase: Phase::Idle,
+            round: None,
             out: Vec::new(),
             stats: DecodeStats::default(),
             last_round: None,
@@ -289,40 +354,99 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         StepOutcome::Done
     }
 
-    /// Run one speculative round (Figure 2 of the paper).
-    pub fn step(&mut self, target: &T, draft: &D, rng: &mut Rng) -> Result<StepOutcome> {
+    /// Start a round: length/capacity checks, then stage the draft tail.
+    /// [`RoundStart::Finished`] means the stepper finished *without* a
+    /// round (already done, `max_new` reached, or out of KV capacity) and
+    /// no phase work exists.
+    pub fn begin_round(&mut self, target: &T, draft: &D) -> Result<RoundStart> {
+        debug_assert!(matches!(self.phase, Phase::Idle), "begin_round mid-round");
         self.last_round = None;
         if self.done {
-            return Ok(StepOutcome::Done);
+            return Ok(RoundStart::Finished);
         }
         if self.out.len() >= self.max_new {
-            return Ok(self.finish());
+            self.finish();
+            return Ok(RoundStart::Finished);
         }
-        let depth = self.strategy.depth();
         // capacity guard: tail + a full tree + bonus token
         let need = self.tail_draft.len().max(self.tail_target.len())
             + self.strategy.max_nodes()
             + 2;
         if target.capacity_left(&self.tsess) < need || draft.capacity_left(&self.dsess) < need {
-            return Ok(self.finish());
+            self.finish();
+            return Ok(RoundStart::Finished);
         }
-        let sampling = self.sampling;
-        let dtail_len = self.tail_draft.len();
+        let nodes = chain_nodes(&self.tail_draft);
+        self.phase = Phase::AwaitDraft { nodes, level: None };
+        Ok(RoundStart::Started)
+    }
 
-        // ---- draft phase -------------------------------------------------
-        let tail_nodes = chain_nodes(&self.tail_draft);
-        let drows = draft.eval(&mut self.dsess, &tail_nodes)?;
+    /// The pending draft work: the draft session and the staged nodes.
+    /// `None` once the tree is fully built (or no round is in progress).
+    pub fn draft_group(&mut self) -> Option<(&mut D::Session, &[EvalNode])> {
+        match &self.phase {
+            Phase::AwaitDraft { nodes, .. } => Some((&mut self.dsess, nodes.as_slice())),
+            _ => None,
+        }
+    }
+
+    /// Consume the draft rows for the staged nodes and grow the tree
+    /// until the next draft evaluation is needed (another `draft_group`)
+    /// or the tree is complete (`target_group` becomes available).
+    pub fn feed_draft(&mut self, rows: Vec<Vec<f32>>, rng: &mut Rng) -> Result<()> {
+        let phase = mem::replace(&mut self.phase, Phase::Idle);
+        let Phase::AwaitDraft { nodes, level } = phase else {
+            bail!("feed_draft outside the draft phase");
+        };
+        if rows.len() != nodes.len() {
+            bail!("feed_draft: {} rows for {} staged nodes", rows.len(), nodes.len());
+        }
         self.stats.draft_calls += 1;
-        let root_draft_lp = process_logits(
-            drows.last().expect("tail non-empty"),
-            sampling.temperature,
-            sampling.top_p,
-        );
-        let mut tree = DraftTree { nodes: Vec::new(), levels: Vec::new(), root_draft_lp };
-        self.strategy.begin_round();
-        let mut draft_pending_count = dtail_len;
-        for level in 0..depth {
-            let children = self.strategy.expand(&tree, level, rng);
+        let (temp, top_p) = (self.sampling.temperature, self.sampling.top_p);
+        let next_level = match level {
+            None => {
+                // tail chain: the last row is the root draft distribution
+                let root_draft_lp =
+                    process_logits(rows.last().expect("tail non-empty"), temp, top_p);
+                self.round = Some(RoundCtx {
+                    tree: DraftTree {
+                        nodes: Vec::new(),
+                        levels: Vec::new(),
+                        root_draft_lp,
+                    },
+                    depth: self.strategy.depth(),
+                    dtail_len: nodes.len(),
+                    draft_pending_count: nodes.len(),
+                });
+                self.strategy.begin_round();
+                0
+            }
+            Some(level) => {
+                let ctx = self.round.as_mut().context("feed_draft without a round")?;
+                let created = &ctx.tree.levels[level];
+                for (i, &id) in created.iter().enumerate() {
+                    ctx.tree.nodes[id].draft_pending = Some(ctx.draft_pending_count + i);
+                    ctx.tree.nodes[id].draft_lp =
+                        Some(process_logits(&rows[i], temp, top_p));
+                }
+                ctx.draft_pending_count += ctx.tree.levels[level].len();
+                level + 1
+            }
+        };
+        self.advance_draft(next_level, rng);
+        Ok(())
+    }
+
+    /// Grow the tree from `level`: expand levels (no model needed) until
+    /// one requires draft distributions (stages the next draft phase) or
+    /// the tree is complete (stages the target phase).
+    fn advance_draft(&mut self, mut level: usize, rng: &mut Rng) {
+        loop {
+            let ctx = self.round.as_mut().expect("round in progress");
+            if level >= ctx.depth {
+                break;
+            }
+            let children = self.strategy.expand(&ctx.tree, level, rng);
             if children.is_empty() {
                 break;
             }
@@ -331,13 +455,13 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             let mut created: Vec<usize> = Vec::new();
             for c in &children {
                 if let Some(&id) = created.iter().find(|&&id| {
-                    tree.nodes[id].parent == c.parent && tree.nodes[id].token == c.token
+                    ctx.tree.nodes[id].parent == c.parent && ctx.tree.nodes[id].token == c.token
                 }) {
-                    tree.nodes[id].mult += 1;
+                    ctx.tree.nodes[id].mult += 1;
                     continue;
                 }
-                let id = tree.nodes.len();
-                tree.nodes.push(TreeNode {
+                let id = ctx.tree.nodes.len();
+                ctx.tree.nodes.push(TreeNode {
                     token: c.token,
                     parent: c.parent,
                     level,
@@ -347,40 +471,41 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
                 });
                 created.push(id);
             }
-            tree.levels.push(created.clone());
-            self.strategy.on_created(&tree, level, &created);
+            ctx.tree.levels.push(created.clone());
+            self.strategy.on_created(&ctx.tree, level, &created);
 
             // evaluate this level with the draft model unless it is the
-            // leaf level (leaf distributions are never used for drafting).
-            if level + 1 < depth {
+            // leaf level (leaf distributions are never used for drafting)
+            if level + 1 < ctx.depth {
+                let dtail_len = ctx.dtail_len;
                 let nodes: Vec<EvalNode> = created
                     .iter()
                     .map(|&id| {
-                        let parent_pending = match tree.nodes[id].parent {
+                        let parent_pending = match ctx.tree.nodes[id].parent {
                             None => dtail_len as i64 - 1,
-                            Some(p) => tree.nodes[p]
+                            Some(p) => ctx.tree.nodes[p]
                                 .draft_pending
                                 .expect("parent evaluated at previous level")
                                 as i64,
                         };
-                        EvalNode { token: tree.nodes[id].token, parent: parent_pending }
+                        EvalNode { token: ctx.tree.nodes[id].token, parent: parent_pending }
                     })
                     .collect();
-                let rows = draft.eval(&mut self.dsess, &nodes)?;
-                self.stats.draft_calls += 1;
-                for (i, &id) in created.iter().enumerate() {
-                    tree.nodes[id].draft_pending = Some(draft_pending_count + i);
-                    tree.nodes[id].draft_lp =
-                        Some(process_logits(&rows[i], sampling.temperature, sampling.top_p));
-                }
-                draft_pending_count += created.len();
+                self.phase = Phase::AwaitDraft { nodes, level: Some(level) };
+                return;
             }
+            level += 1;
         }
+        self.stage_target();
+    }
 
-        // ---- target phase: tail + whole tree in one parallel pass --------
+    /// Tree complete: stage the target pass (tail + whole tree, one
+    /// parallel evaluation).
+    fn stage_target(&mut self) {
+        let ctx = self.round.as_ref().expect("round in progress");
         let ttail_len = self.tail_target.len();
         let mut tnodes = chain_nodes(&self.tail_target);
-        for (id, n) in tree.nodes.iter().enumerate() {
+        for (id, n) in ctx.tree.nodes.iter().enumerate() {
             let parent = match n.parent {
                 None => (ttail_len - 1) as i64,
                 Some(p) => (ttail_len + p) as i64,
@@ -388,23 +513,80 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             debug_assert_eq!(id + ttail_len, tnodes.len());
             tnodes.push(EvalNode { token: n.token, parent });
         }
-        let trows = target.eval(&mut self.tsess, &tnodes)?;
+        self.phase = Phase::AwaitTarget { nodes: tnodes };
+    }
+
+    /// The pending target (verification) work, once every draft phase has
+    /// been fed.
+    pub fn target_group(&mut self) -> Option<(&mut T::Session, &[EvalNode])> {
+        match &self.phase {
+            Phase::AwaitTarget { nodes } => Some((&mut self.tsess, nodes.as_slice())),
+            _ => None,
+        }
+    }
+
+    /// Consume the target rows: verify the tree (recursive rejection
+    /// sampling per level), commit the accepted path into both KV caches
+    /// (zero-copy `FilterKVCache`), emit tokens (honoring stop tokens)
+    /// and close the round.
+    pub fn feed_target(
+        &mut self,
+        target: &T,
+        draft: &D,
+        rows: Vec<Vec<f32>>,
+        rng: &mut Rng,
+    ) -> Result<StepOutcome> {
+        let phase = mem::replace(&mut self.phase, Phase::Idle);
+        let Phase::AwaitTarget { nodes } = phase else {
+            bail!("feed_target outside the verify phase");
+        };
+        let ctx = self.round.take().context("feed_target without a round")?;
+        let dtail_len = ctx.dtail_len;
+        let tree = ctx.tree;
+        let ttail_len = self.tail_target.len();
+        if rows.len() != nodes.len() {
+            bail!("feed_target: {} rows for {} staged nodes", rows.len(), nodes.len());
+        }
+        debug_assert_eq!(nodes.len(), ttail_len + tree.nodes.len());
+        let (temp, top_p) = (self.sampling.temperature, self.sampling.top_p);
         self.stats.decode_calls += 1;
         self.stats.tree_nodes += tree.nodes.len();
-        let root_target_lp =
-            process_logits(&trows[ttail_len - 1], sampling.temperature, sampling.top_p);
-        let node_target_lp: Vec<LogProbs> = trows[ttail_len..]
-            .iter()
-            .map(|r| process_logits(r, sampling.temperature, sampling.top_p))
-            .collect();
+        let root_target_lp = process_logits(&rows[ttail_len - 1], temp, top_p);
+        let node_target_lp: Vec<LogProbs> =
+            rows[ttail_len..].iter().map(|r| process_logits(r, temp, top_p)).collect();
 
         // ---- verification (recursive rejection sampling per level) -------
         let vr = verify_tree(&tree, self.rule.as_ref(), &root_target_lp, &node_target_lp, rng);
-        self.stats.accepted_draft_tokens += vr.accepted.len();
-        if vr.bonus {
+
+        // ---- stop-token truncation ---------------------------------------
+        // This round's emission is the accepted draft tokens plus the
+        // final (residual or bonus) token; the first stop token ends the
+        // request, is not emitted, and drops everything after it.
+        let mut emit: Vec<u32> = vr.accepted.iter().map(|&id| tree.nodes[id].token).collect();
+        emit.push(vr.final_token);
+        let cut = if self.sampling.stop.is_empty() {
+            None
+        } else {
+            emit.iter().position(|&t| self.sampling.is_stop(t))
+        };
+        let kept = cut.unwrap_or(emit.len());
+        // effective counts keep stats consistent with the truncated
+        // stream: dropped tokens contribute neither to acceptance counts
+        // nor to per-level trial telemetry (level k's trial produced
+        // accepted token k; the trial of the level that produced the
+        // dropped final token is cut as well)
+        let eff_accepted = vr.accepted.len().min(kept);
+        let eff_bonus = vr.bonus && cut.is_none();
+        let mut level_trials = vr.level_trials;
+        if cut.is_some() {
+            level_trials.truncate(eff_accepted);
+        }
+
+        self.stats.accepted_draft_tokens += eff_accepted;
+        if eff_bonus {
             self.stats.bonus_tokens += 1;
         }
-        for (lvl, &(_, success)) in vr.level_trials.iter().enumerate() {
+        for (lvl, &(_, success)) in level_trials.iter().enumerate() {
             if self.stats.level_attempts.len() <= lvl {
                 self.stats.level_attempts.resize(lvl + 1, 0);
                 self.stats.level_accepts.resize(lvl + 1, 0);
@@ -414,10 +596,10 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         }
         self.stats.round_nodes.push(tree.nodes.len() as u32);
         self.last_round = Some(RoundReport {
-            level_trials: vr.level_trials.clone(),
+            level_trials,
             nodes: tree.nodes.len(),
-            accepted: vr.accepted.len(),
-            bonus: vr.bonus,
+            accepted: eff_accepted,
+            bonus: eff_bonus,
         });
 
         // ---- zero-copy KV commit (FilterKVCache) --------------------------
@@ -436,10 +618,10 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         draft.commit(&mut self.dsess, &dchain)?;
 
         // ---- emit tokens ---------------------------------------------------
-        for &id in &vr.accepted {
-            self.out.push(tree.nodes[id].token);
+        self.out.extend_from_slice(&emit[..kept]);
+        if cut.is_some() {
+            return Ok(self.finish());
         }
-        self.out.push(vr.final_token);
         // next round's per-session tails: the target already holds every
         // accepted node's KV (only the final token is new to it); the
         // draft additionally misses leaf-level accepts it never evaluated.
@@ -451,6 +633,28 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             return Ok(self.finish());
         }
         Ok(StepOutcome::Progress)
+    }
+
+    /// Run one full speculative round (Figure 2 of the paper) by driving
+    /// the phase machine with direct per-session model calls — the
+    /// single-request path. The serving engine drives many steppers'
+    /// phases in lockstep instead and fuses the model calls.
+    pub fn step(&mut self, target: &T, draft: &D, rng: &mut Rng) -> Result<StepOutcome> {
+        if self.begin_round(target, draft)? == RoundStart::Finished {
+            return Ok(StepOutcome::Done);
+        }
+        loop {
+            let rows = match self.draft_group() {
+                Some((sess, nodes)) => draft.eval(sess, nodes)?,
+                None => break,
+            };
+            self.feed_draft(rows, rng)?;
+        }
+        let rows = match self.target_group() {
+            Some((sess, nodes)) => target.eval(sess, nodes)?,
+            None => bail!("round staged no target work"),
+        };
+        self.feed_target(target, draft, rows, rng)
     }
 }
 
@@ -471,7 +675,7 @@ where
     D: Llm,
 {
     let mut stepper =
-        SpecStepper::new(target, draft, strategy, rule, *sampling, prompt, max_new)?;
+        SpecStepper::new(target, draft, strategy, rule, sampling.clone(), prompt, max_new)?;
     while stepper.step(target, draft, rng)? == StepOutcome::Progress {}
     Ok(DecodeRun { tokens: stepper.out.clone(), stats: stepper.stats.clone() })
 }

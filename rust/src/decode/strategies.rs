@@ -38,7 +38,16 @@ impl TreeStrategy for Chain {
     fn begin_round(&mut self) {}
 
     fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
-        let parent = if level == 0 { None } else { Some(*tree.levels[level - 1].last().unwrap()) };
+        let parent = if level == 0 {
+            None
+        } else {
+            // a truncated/empty previous level ends the chain instead of
+            // panicking (possible when strategies are swapped mid-stream)
+            match tree.levels.get(level - 1).and_then(|l| l.last()) {
+                Some(&id) => Some(id),
+                None => return Vec::new(),
+            }
+        };
         let lp = parent_lp(tree, parent);
         let token = sample_categorical(&lp.probs(), rng) as u32;
         vec![Child { parent, token }]
@@ -200,13 +209,18 @@ impl TreeStrategy for StochasticBeam {
             let z = phi_tilde.iter().cloned().fold(NEG_INF, f64::max);
             let psi = truncated_gumbel(psi_p, z, &phi_tilde);
             for (x, (&f, &s)) in phi_child.iter().zip(&psi).enumerate() {
-                if f != NEG_INF && s != NEG_INF {
+                // drop NaN φ/ψ (degenerate distributions) outright: the
+                // NaN-safe sort below would rank +NaN above every real
+                // candidate, handing the beam to a broken branch
+                if f != NEG_INF && s != NEG_INF && !f.is_nan() && !s.is_nan() {
                     cands.push((parent, x as u32, f, s));
                 }
             }
         }
-        // global top-W by ψ, decreasing (= verification order)
-        cands.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
+        // global top-W by ψ, decreasing (= verification order).
+        // total_cmp: NaN-safe — a NaN ψ (degenerate distribution) must
+        // not panic the serving engine mid-round.
+        cands.sort_by(|a, b| b.3.total_cmp(&a.3));
         cands.truncate(self.w);
         // early truncation: drop branches whose sequence mass collapsed
         // relative to the level's best (the φ-max candidate always stays)

@@ -50,6 +50,34 @@ pub trait Llm {
     /// nodes (from this or previous `eval` calls since the last commit).
     fn eval(&self, session: &mut Self::Session, nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>>;
 
+    /// Evaluate many sessions' node sets in one fused forward pass: the
+    /// cross-request batch dimension of the serving engine. `groups[i]`
+    /// pairs a session with the nodes to append to it (exactly as one
+    /// [`Llm::eval`] call would); the result carries one row-set per
+    /// group, in order.
+    ///
+    /// The default implementation is the per-session fallback loop —
+    /// semantically the fused path and the loop MUST be
+    /// indistinguishable (same rows, same session state), which the
+    /// engine's fused round loop and the equivalence property tests rely
+    /// on. Implementations override this to amortize per-call overhead
+    /// (one padded device dispatch instead of N).
+    ///
+    /// On error, sessions of earlier groups may already hold the new
+    /// pending nodes while their rows are lost; callers must treat every
+    /// participating session as poisoned (the engine fails all
+    /// participating requests).
+    fn eval_batch(
+        &self,
+        groups: &mut [(&mut Self::Session, &[EvalNode])],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let mut out = Vec::with_capacity(groups.len());
+        for (session, nodes) in groups.iter_mut() {
+            out.push(self.eval(session, nodes)?);
+        }
+        Ok(out)
+    }
+
     /// Commit `accepted` (pending indices forming a rootward chain:
     /// `accepted[0]` has prefix parent, each subsequent entry's parent is
     /// the previous one) into the prefix; discard every other pending

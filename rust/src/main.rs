@@ -55,10 +55,10 @@ fn main() -> Result<()> {
             let prompt = args.get_or("prompt", "the quick brown fox");
             let max_tokens: usize = args.parse_or("max-tokens", 64)?;
             let decoder: DecoderConfig = args.get_or("decoder", "rsd-s:3x3").parse()?;
-            let sampling = SamplingConfig {
-                temperature: args.parse_or("temperature", 0.3f32)?,
-                top_p: args.parse_or("top-p", 1.0f32)?,
-            };
+            let sampling = SamplingConfig::new(
+                args.parse_or("temperature", 0.3f32)?,
+                args.parse_or("top-p", 1.0f32)?,
+            );
             let seed: u64 = args.parse_or("seed", 0)?;
             let tok = Tokenizer::new();
             let mut rng = Rng::seed_from_u64(seed);
@@ -91,10 +91,10 @@ fn main() -> Result<()> {
             server::serve(&addr, tx)?;
         }
         "exp1" | "exp2" => {
-            let sampling = SamplingConfig {
-                temperature: args.parse_or("temperature", 0.3f32)?,
-                top_p: args.parse_or("top-p", 1.0f32)?,
-            };
+            let sampling = SamplingConfig::new(
+                args.parse_or("temperature", 0.3f32)?,
+                args.parse_or("top-p", 1.0f32)?,
+            );
             let opts = BenchOpts {
                 max_new: args.parse_or("max-tokens", 64)?,
                 reps: args.parse_or("reps", 4)?,
@@ -136,7 +136,7 @@ fn main() -> Result<()> {
                 draft.param_count()
             );
             let tok = Tokenizer::new();
-            let sampling = SamplingConfig { temperature: 0.3, top_p: 1.0 };
+            let sampling = SamplingConfig::new(0.3, 1.0);
             let mut rng = Rng::seed_from_u64(0);
             let prompt = tok.encode("the sound of ");
             let cfg = DecoderConfig::RsdS { w: 3, l: 3 };

@@ -159,6 +159,124 @@ impl PjrtLm {
         debug_assert_eq!(logits.len(), st * v);
         Ok((0..n).map(|row| logits[row * v..(row + 1) * v].to_vec()).collect())
     }
+
+    /// Fused cross-session execution: pack every group into ONE padded
+    /// device call, one batch lane per session (the serving engine's
+    /// cross-request batch dimension).
+    ///
+    /// Contract (sketch — requires step executables AOT-compiled with
+    /// `batch = B > 1`, which today's artifacts do not ship): operands
+    /// become `tokens/positions/dest: [B, s_tile]`, `mask: [B, s_tile,
+    /// M]`; lane `i` carries group `i`'s rows, shorter groups are padded
+    /// with scratch-slot rows that attend nothing; the K/V caches are
+    /// stacked lane-wise (lane 0 of each session's cache literal) and
+    /// scattered back per session afterwards. Per-lane semantics are
+    /// exactly [`PjrtLm::run_tile`] on that session.
+    fn run_packed(
+        &self,
+        groups: &mut [(&mut PjrtSession, &[EvalNode])],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let m = self.man.cache_len;
+        let v = self.man.vocab;
+        let b = self.man.batch;
+        let lanes = groups.len();
+        debug_assert!(lanes >= 2 && lanes <= b);
+
+        // append pending nodes per session; the widest group picks the tile
+        let mut ranges = Vec::with_capacity(lanes);
+        let mut widest = 0usize;
+        for (s, nodes) in groups.iter_mut() {
+            let range = s.core.add_pending(nodes)?;
+            widest = widest.max(range.len());
+            ranges.push(range);
+        }
+        let (st, exe) = self.pick_exe(widest);
+        if widest > st {
+            bail!("fused group of {widest} nodes exceeds the largest tile {st}");
+        }
+
+        // lane-packed operands; padding rows scatter into scratch
+        let mut tokens = vec![0i32; b * st];
+        let mut positions = vec![0i32; b * st];
+        let mut dest = vec![(m - 1) as i32; b * st];
+        let mut mask = vec![MASK_OFF; b * st * m];
+        for (lane, ((s, _), range)) in groups.iter().zip(&ranges).enumerate() {
+            for (row, i) in range.clone().enumerate() {
+                let p = &s.core.pending[i];
+                tokens[lane * st + row] = p.token as i32;
+                positions[lane * st + row] = s.core.position(i) as i32;
+                dest[lane * st + row] = p.slot as i32;
+                for slot in s.core.visible_slots(i) {
+                    mask[(lane * st + row) * m + slot as usize] = 0.0;
+                }
+            }
+        }
+
+        // stack lane 0 of every session's K/V cache along the batch dim
+        let dims = self.cache_dims();
+        let (nl, nh, dh) = (dims[0] as usize, dims[2] as usize, dims[4] as usize);
+        let lane_elems = nh * m * dh;
+        let mut kpack = vec![0f32; nl * b * lane_elems];
+        let mut vpack = vec![0f32; nl * b * lane_elems];
+        for (lane, (s, _)) in groups.iter().enumerate() {
+            let kv = s.kcache.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let vv = s.vcache.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+            for l in 0..nl {
+                let src = (l * b) * lane_elems; // session lane 0 of layer l
+                let dst = (l * b + lane) * lane_elems;
+                kpack[dst..dst + lane_elems].copy_from_slice(&kv[src..src + lane_elems]);
+                vpack[dst..dst + lane_elems].copy_from_slice(&vv[src..src + lane_elems]);
+            }
+        }
+        let klit = crate::runtime::literal_f32(&kpack, &dims)?;
+        let vlit = crate::runtime::literal_f32(&vpack, &dims)?;
+
+        let b_tokens = self.rt.buffer_i32(&tokens, &[b, st])?;
+        let b_pos = self.rt.buffer_i32(&positions, &[b, st])?;
+        let b_dest = self.rt.buffer_i32(&dest, &[b, st])?;
+        let b_mask = self.rt.buffer_f32(&mask, &[b, st, m])?;
+        let b_kc = self.rt.buffer_from_literal(&klit)?;
+        let b_vc = self.rt.buffer_from_literal(&vlit)?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        inputs.push(&b_tokens);
+        inputs.push(&b_pos);
+        inputs.push(&b_dest);
+        inputs.push(&b_mask);
+        inputs.push(&b_kc);
+        inputs.push(&b_vc);
+
+        let mut outs = exe.run_b(&inputs)?;
+        if outs.len() != 3 {
+            bail!("step executable returned {} outputs, want 3", outs.len());
+        }
+        let vout = outs.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let kout = outs.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let logits = outs.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        debug_assert_eq!(logits.len(), b * st * v);
+
+        // scatter caches and logits rows back to their sessions
+        let mut result = Vec::with_capacity(lanes);
+        for (lane, ((s, _), range)) in groups.iter_mut().zip(&ranges).enumerate() {
+            let mut kback = vec![0f32; nl * b * lane_elems];
+            let mut vback = vec![0f32; nl * b * lane_elems];
+            for l in 0..nl {
+                let src = (l * b + lane) * lane_elems;
+                let dst = (l * b) * lane_elems;
+                kback[dst..dst + lane_elems].copy_from_slice(&kout[src..src + lane_elems]);
+                vback[dst..dst + lane_elems].copy_from_slice(&vout[src..src + lane_elems]);
+            }
+            s.kcache = crate::runtime::literal_f32(&kback, &dims)?;
+            s.vcache = crate::runtime::literal_f32(&vback, &dims)?;
+            let rows: Vec<Vec<f32>> = (0..range.len())
+                .map(|row| {
+                    let at = (lane * st + row) * v;
+                    logits[at..at + v].to_vec()
+                })
+                .collect();
+            result.push(rows);
+        }
+        Ok(result)
+    }
 }
 
 #[cfg(pjrt_runtime)]
@@ -195,6 +313,27 @@ impl Llm for PjrtLm {
             let end = (start + self.man.s_tile).min(range.end);
             out.extend(self.run_tile(s, start..end)?);
             start = end;
+        }
+        Ok(out)
+    }
+
+    /// One padded device call per fused batch when a multi-lane step
+    /// executable is available; today's batch=1 artifacts take the
+    /// per-session fallback (still one `eval` per session, each already
+    /// tile-padded). See [`PjrtLm::run_packed`] for the packing contract.
+    fn eval_batch(
+        &self,
+        groups: &mut [(&mut Self::Session, &[EvalNode])],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let packable = groups.len() >= 2
+            && groups.len() <= self.man.batch
+            && groups.iter().all(|(_, nodes)| nodes.len() <= self.man.s_tile);
+        if packable {
+            return self.run_packed(groups);
+        }
+        let mut out = Vec::with_capacity(groups.len());
+        for (session, nodes) in groups.iter_mut() {
+            out.push(self.eval(session, nodes)?);
         }
         Ok(out)
     }

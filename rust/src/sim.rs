@@ -32,6 +32,12 @@ pub struct SimLm {
     /// Logit scale (sharpness of the conditionals).
     scale: f64,
     cache_len: usize,
+    /// Synthetic per-`eval`-call dispatch cost, in splitmix64 rounds
+    /// (0 = free). Models the fixed kernel-launch / host-device overhead
+    /// a real accelerator pays per forward pass — the cost that fused
+    /// [`Llm::eval_batch`] amortizes across requests. Charged once per
+    /// `eval` or `eval_batch` call, regardless of row count.
+    call_overhead: u64,
 }
 
 impl SimLm {
@@ -45,9 +51,28 @@ impl SimLm {
             stream: 0,
             scale: 2.0,
             cache_len: 1 << 20,
+            call_overhead: 0,
         };
         let draft = SimLm { params: 290_000, alpha, stream: 1, ..target.clone() };
         (target, draft)
+    }
+
+    /// Set the synthetic per-call dispatch cost (see `call_overhead`).
+    /// Used by `benches/fused.rs` to make the sim's cost model
+    /// launch-dominated like real serving hardware.
+    pub fn with_call_overhead(mut self, rounds: u64) -> Self {
+        self.call_overhead = rounds;
+        self
+    }
+
+    /// Burn the fixed per-dispatch cost. Deterministic CPU work (not a
+    /// sleep) so bench timings reflect real computation.
+    fn spin_dispatch(&self) {
+        let mut acc = self.seed | 1;
+        for _ in 0..self.call_overhead {
+            acc = Self::mix(acc);
+        }
+        std::hint::black_box(acc);
     }
 
     /// splitmix64 — fast, well-distributed context hashing.
@@ -77,6 +102,24 @@ impl SimLm {
         let u1 = ((a >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
         let u2 = ((b >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// The single row-production path shared by `eval` and `eval_batch`:
+    /// append `nodes` to the session core and compute one logits row per
+    /// node, reusing `ctx` as the context scratch buffer.
+    fn eval_rows(
+        &self,
+        core: &mut SessionCore,
+        nodes: &[EvalNode],
+        ctx: &mut Vec<u32>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let range = core.add_pending(nodes)?;
+        let mut rows = Vec::with_capacity(nodes.len());
+        for i in range {
+            core.context_tokens_into(i, ctx);
+            rows.push(self.logits(ctx));
+        }
+        Ok(rows)
     }
 
     /// Raw logits for a context (deterministic).
@@ -121,8 +164,28 @@ impl Llm for SimLm {
     }
 
     fn eval(&self, s: &mut Self::Session, nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>> {
-        let range = s.core.add_pending(nodes)?;
-        Ok(range.map(|i| self.logits(&s.core.context_tokens(i))).collect())
+        self.spin_dispatch();
+        let mut ctx = Vec::new();
+        self.eval_rows(&mut s.core, nodes, &mut ctx)
+    }
+
+    /// Genuinely vectorized fused pass: one dispatch charge for the whole
+    /// cross-request batch and one flat row loop over every group (with a
+    /// shared context buffer), rather than N independent `eval` calls.
+    /// Rows come from the same single production path as `eval`
+    /// ([`SimLm::eval_rows`]), so fused and per-session results cannot
+    /// diverge (also property-tested in tests/fused.rs).
+    fn eval_batch(
+        &self,
+        groups: &mut [(&mut Self::Session, &[EvalNode])],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        self.spin_dispatch();
+        let mut ctx = Vec::new();
+        let mut out = Vec::with_capacity(groups.len());
+        for (s, nodes) in groups.iter_mut() {
+            out.push(self.eval_rows(&mut s.core, nodes, &mut ctx)?);
+        }
+        Ok(out)
     }
 
     fn commit(&self, s: &mut Self::Session, accepted: &[usize]) -> Result<()> {
@@ -173,6 +236,27 @@ mod tests {
             assert!(tv > last, "alpha={alpha}: tv {tv} should exceed {last}");
             last = tv;
         }
+    }
+
+    #[test]
+    fn eval_batch_matches_eval_loop() {
+        let (t, _) = SimLm::pair(11, 1.0, 24);
+        let nodes_a = [EvalNode::root(3), EvalNode::child(5, 0), EvalNode::child(6, 0)];
+        let nodes_b = [EvalNode::root(7)];
+        let mut sa = t.begin().unwrap();
+        let mut sb = t.begin().unwrap();
+        let fused = {
+            let mut groups: Vec<(&mut SimSession, &[EvalNode])> =
+                vec![(&mut sa, &nodes_a[..]), (&mut sb, &nodes_b[..])];
+            t.eval_batch(&mut groups).unwrap()
+        };
+        let mut s1 = t.begin().unwrap();
+        let mut s2 = t.begin().unwrap();
+        assert_eq!(fused[0], t.eval(&mut s1, &nodes_a).unwrap());
+        assert_eq!(fused[1], t.eval(&mut s2, &nodes_b).unwrap());
+        // fused sessions hold the same pending state as sequential ones
+        assert_eq!(sa.core.pending.len(), 3);
+        assert_eq!(sb.core.pending.len(), 1);
     }
 
     #[test]

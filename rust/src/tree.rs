@@ -112,17 +112,25 @@ impl SessionCore {
     /// Token path from the start of the sequence through a pending node
     /// (prefix tokens + ancestor chain + self). Used by the sim LM.
     pub fn context_tokens(&self, pending_idx: usize) -> Vec<u32> {
-        let mut anc = Vec::new();
+        let mut out = Vec::new();
+        self.context_tokens_into(pending_idx, &mut out);
+        out
+    }
+
+    /// [`SessionCore::context_tokens`] into a caller-owned buffer, so
+    /// batched evaluation ([`crate::llm::Llm::eval_batch`]) reuses one
+    /// allocation across every row of a fused call.
+    pub fn context_tokens_into(&self, pending_idx: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend_from_slice(&self.prefix_tokens);
+        let anc_start = out.len();
         let mut cur = pending_idx as i64;
         while cur != PARENT_PREFIX {
             let p = &self.pending[cur as usize];
-            anc.push(p.token);
+            out.push(p.token);
             cur = p.parent;
         }
-        anc.reverse();
-        let mut out = self.prefix_tokens.clone();
-        out.extend(anc);
-        out
+        out[anc_start..].reverse();
     }
 
     /// Commit an accepted rootward chain into the prefix and free all

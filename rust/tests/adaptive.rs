@@ -70,7 +70,7 @@ fn allocator_clamps_zero_budget() {
 #[test]
 fn adaptive_rounds_respect_budget_at_runtime() {
     let (target, draft) = SimLm::pair(5, 0.6, 96);
-    let sampling = SamplingConfig { temperature: 0.6, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.6, 1.0);
     let mut rng = Rng::seed_from_u64(2);
     for b in [6usize, 30] {
         for family in [AdaptiveFamily::Auto, AdaptiveFamily::RsdC, AdaptiveFamily::RsdS] {
@@ -94,9 +94,10 @@ fn engine_mean_efficiency(decoder: DecoderConfig, alpha: f64, seed: u64) -> f64 
         max_queue: 32,
         default_max_tokens: 48,
         max_active_budget: 0,
-        sampling: SamplingConfig { temperature: 0.7, top_p: 1.0 },
+        sampling: SamplingConfig::new(0.7, 1.0),
         decoder: decoder.clone(),
         seed,
+        fused: true,
     };
     let engine = Engine::new(target, draft, cfg);
     let (tx, handle) = spawn(engine);
@@ -171,9 +172,10 @@ fn engine_runs_heterogeneous_adaptive_budgets() {
         max_queue: 32,
         default_max_tokens: 24,
         max_active_budget: 40,
-        sampling: SamplingConfig { temperature: 0.5, top_p: 1.0 },
+        sampling: SamplingConfig::new(0.5, 1.0),
         decoder: DecoderConfig::RsdS { w: 3, l: 3 },
         seed: 1,
+        fused: true,
     };
     let engine = Engine::new(target, draft, cfg);
     let (tx, handle) = spawn(engine);

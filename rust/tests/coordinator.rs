@@ -13,9 +13,10 @@ fn engine_cfg(max_concurrency: usize, max_queue: usize) -> EngineConfig {
         max_queue,
         default_max_tokens: 16,
         max_active_budget: 0,
-        sampling: SamplingConfig { temperature: 0.5, top_p: 1.0 },
+        sampling: SamplingConfig::new(0.5, 1.0),
         decoder: DecoderConfig::RsdS { w: 3, l: 3 },
         seed: 7,
+        fused: true,
     }
 }
 

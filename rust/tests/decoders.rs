@@ -23,7 +23,7 @@ fn all_tree_decoders() -> Vec<DecoderConfig> {
 #[test]
 fn every_decoder_recovers_target_distribution() {
     let (target, draft) = SimLm::pair(11, 0.5, 24); // high discrepancy
-    let sampling = SamplingConfig { temperature: 0.8, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.8, 1.0);
     for cfg in all_tree_decoders() {
         let tv = first_token_tv(&cfg, &sampling, &target, &draft, &[5, 9, 2], 30_000, 3)
             .unwrap();
@@ -36,7 +36,7 @@ fn every_decoder_recovers_target_distribution() {
 #[test]
 fn recovery_holds_under_top_p() {
     let (target, draft) = SimLm::pair(13, 0.6, 24);
-    let sampling = SamplingConfig { temperature: 1.0, top_p: 0.9 };
+    let sampling = SamplingConfig::new(1.0, 0.9);
     for cfg in [DecoderConfig::RsdS { w: 3, l: 2 }, DecoderConfig::RsdC { branches: vec![3, 1] }]
     {
         let tv =
@@ -48,7 +48,7 @@ fn recovery_holds_under_top_p() {
 #[test]
 fn decoding_is_deterministic_per_seed() {
     let (target, draft) = SimLm::pair(3, 0.7, 64);
-    let sampling = SamplingConfig { temperature: 0.5, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.5, 1.0);
     for cfg in all_tree_decoders() {
         let mut r1 = Rng::seed_from_u64(42);
         let mut r2 = Rng::seed_from_u64(42);
@@ -63,7 +63,7 @@ fn decoding_is_deterministic_per_seed() {
 #[test]
 fn exp1_grid_runs_and_trees_beat_ar() {
     let (target, draft) = SimLm::pair(0, 0.93, 96);
-    let sampling = SamplingConfig { temperature: 0.4, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.4, 1.0);
     let opts = BenchOpts { max_new: 48, reps: 3, tv_trials: 0, seed: 0 };
     let prompts = vec![vec![3u32, 5, 8], vec![2, 2, 9], vec![60, 4, 33]];
     for dl in [2usize, 3] {
@@ -81,7 +81,7 @@ fn exp1_grid_runs_and_trees_beat_ar() {
 #[test]
 fn exp2_budgets_respected_at_runtime() {
     let (target, draft) = SimLm::pair(5, 0.7, 96);
-    let sampling = SamplingConfig { temperature: 0.6, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.6, 1.0);
     let mut rng = Rng::seed_from_u64(2);
     for b in [6usize, 10, 14, 21, 30] {
         for cfg in bench::exp2_configs(b).into_iter().skip(1) {
@@ -103,7 +103,7 @@ fn exp2_budgets_respected_at_runtime() {
 #[test]
 fn rsd_s_dominates_spectr() {
     let (target, draft) = SimLm::pair(21, 0.6, 64);
-    let sampling = SamplingConfig { temperature: 0.7, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.7, 1.0);
     let opts = BenchOpts { max_new: 64, reps: 6, tv_trials: 0, seed: 4 };
     let prompts = vec![vec![9u32, 1], vec![4, 4], vec![17, 60]];
     let mut wins = 0;
@@ -139,7 +139,7 @@ fn rsd_s_dominates_spectr() {
 /// higher block efficiency for RSD-S.
 #[test]
 fn efficiency_increases_with_alignment() {
-    let sampling = SamplingConfig { temperature: 0.5, top_p: 1.0 };
+    let sampling = SamplingConfig::new(0.5, 1.0);
     let opts = BenchOpts { max_new: 48, reps: 4, tv_trials: 0, seed: 6 };
     let prompts = vec![vec![1u32, 2, 3]];
     let mut last = 0.0;

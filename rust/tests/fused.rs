@@ -1,0 +1,251 @@
+//! Fused-execution properties on the sim substrate:
+//!
+//! * fused `eval_batch` stepping vs the per-request fallback path must
+//!   produce byte-identical token streams for a mixed batch of decoders
+//!   (ar / rsd-c / rsd-s / spectr / adaptive, heterogeneous depths and
+//!   budgets);
+//! * per-request RNG streams make every (non-adaptive) request's output
+//!   independent of admission order and batch composition;
+//! * stop tokens truncate the stream at the first occurrence with
+//!   consistent stats;
+//! * the engine exposes fused-batch telemetry.
+
+use std::sync::mpsc;
+
+use rsd::config::{AdaptiveFamily, DecoderConfig, EngineConfig, SamplingConfig, SamplingPatch};
+use rsd::coordinator::engine::{spawn, Engine, Event, Request};
+use rsd::coordinator::metrics::Snapshot;
+use rsd::decode::generate;
+use rsd::sim::SimLm;
+use rsd::util::Rng;
+
+/// (id, prompt, max_new, decoder override) of one request.
+type Req = (u64, Vec<u32>, usize, Option<DecoderConfig>);
+
+/// The heterogeneous decoder mix exercised by the equivalence property.
+fn mixed_decoders() -> Vec<Option<DecoderConfig>> {
+    vec![
+        None, // engine default
+        Some(DecoderConfig::Ar),
+        Some(DecoderConfig::RsdC { branches: vec![2, 2, 1] }),
+        Some(DecoderConfig::RsdS { w: 4, l: 2 }),
+        Some(DecoderConfig::SpecTr { k: 2, l: 3 }),
+        Some(DecoderConfig::Adaptive { budget: 6, family: AdaptiveFamily::Auto }),
+        Some(DecoderConfig::Adaptive { budget: 20, family: AdaptiveFamily::RsdS }),
+        Some(DecoderConfig::Sd { l: 5 }),
+    ]
+}
+
+fn engine_cfg(seed: u64, fused: bool) -> EngineConfig {
+    EngineConfig {
+        max_concurrency: 8,
+        max_queue: 64,
+        default_max_tokens: 24,
+        max_active_budget: 0,
+        sampling: SamplingConfig::new(0.6, 1.0),
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed,
+        fused,
+    }
+}
+
+/// Run a set of requests to completion; returns their token streams in
+/// submission order plus the final metrics snapshot.
+fn run_requests(alpha: f64, cfg: EngineConfig, reqs: Vec<Req>) -> (Vec<Vec<u32>>, Snapshot) {
+    let (target, draft) = SimLm::pair(9, alpha, 64);
+    let engine = Engine::new(target, draft, cfg);
+    let (tx, handle) = spawn(engine);
+    let mut receivers = Vec::new();
+    for (id, prompt, max_new, decoder) in reqs {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request { id, prompt, max_new, decoder, sampling: None, resp: rtx })
+            .unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+    let mut streams = Vec::new();
+    for rrx in receivers {
+        let mut toks = Vec::new();
+        while let Ok(ev) = rrx.recv() {
+            match ev {
+                Event::Tokens(t) => toks.extend(t),
+                Event::Done(_) => break,
+                Event::Error(e) => panic!("{e}"),
+            }
+        }
+        streams.push(toks);
+    }
+    (streams, handle.join().unwrap().snapshot())
+}
+
+fn mixed_requests() -> Vec<Req> {
+    mixed_decoders()
+        .into_iter()
+        .enumerate()
+        .map(|(i, d)| {
+            // heterogeneous prompts and lengths: requests finish at
+            // different rounds, so late fused calls run partially filled
+            (i as u64, vec![1 + i as u32, 7, 3], 12 + 3 * i, d)
+        })
+        .collect()
+}
+
+/// PROPERTY (acceptance criterion): a mixed batch decodes byte-identical
+/// streams under fused `eval_batch` and the per-request fallback path.
+#[test]
+fn fused_and_sequential_streams_identical() {
+    for (alpha_i, seed) in [(0usize, 1u64), (1, 5), (2, 11)] {
+        let alpha = [0.5, 0.8, 0.95][alpha_i];
+        let (fused, fsnap) = run_requests(alpha, engine_cfg(seed, true), mixed_requests());
+        let (seq, _) = run_requests(alpha, engine_cfg(seed, false), mixed_requests());
+        assert_eq!(fused, seq, "alpha {alpha} seed {seed}");
+        assert!(fused.iter().all(|s| !s.is_empty()));
+        // the fused run actually fused: batches larger than one request
+        assert!(
+            fsnap.fused_batch_hist.iter().any(|&(g, _)| g > 1),
+            "{:?}",
+            fsnap.fused_batch_hist
+        );
+    }
+}
+
+/// SATELLITE: per-request deterministic RNG — output is independent of
+/// admission order and of what else shares the batch (static decoders;
+/// `adaptive:B` shapes intentionally share global statistics).
+#[test]
+fn output_independent_of_batch_composition_and_order() {
+    let decoder = Some(DecoderConfig::RsdC { branches: vec![2, 2] });
+    let solo = || -> Vec<Req> { vec![(5u64, vec![6, 7, 3], 20, decoder.clone())] };
+    let crowd = || {
+        let mut reqs: Vec<Req> = (0..4u64)
+            .map(|i| (i, vec![1 + i as u32, 2], 16, Some(DecoderConfig::RsdS { w: 3, l: 2 })))
+            .collect();
+        reqs.push(solo()[0].clone());
+        reqs
+    };
+
+    let (alone, _) = run_requests(0.8, engine_cfg(7, true), solo());
+    let (crowded, _) = run_requests(0.8, engine_cfg(7, true), crowd());
+    assert_eq!(alone[0], crowded[4], "batch composition changed request 5's stream");
+
+    // admission order: same requests, reversed submission
+    let mut rev = crowd();
+    rev.reverse();
+    let (fwd, _) = run_requests(0.8, engine_cfg(7, true), crowd());
+    let (bwd, _) = run_requests(0.8, engine_cfg(7, true), rev);
+    let mut bwd_rev = bwd;
+    bwd_rev.reverse();
+    assert_eq!(fwd, bwd_rev, "admission order changed some stream");
+}
+
+/// SATELLITE: stop tokens end generation at the first occurrence; the
+/// stop token is not emitted and stats stay consistent.
+#[test]
+fn stop_tokens_truncate_streams() {
+    let (target, draft) = SimLm::pair(4, 0.8, 48);
+    for decoder in [
+        DecoderConfig::Ar,
+        DecoderConfig::RsdS { w: 3, l: 3 },
+        DecoderConfig::RsdC { branches: vec![2, 2] },
+    ] {
+        let sampling = SamplingConfig::new(0.9, 1.0);
+        let mut rng = Rng::seed_from_u64(3);
+        let full =
+            generate(&decoder, &sampling, &target, &draft, &[1, 2], 32, &mut rng).unwrap();
+        assert_eq!(full.tokens.len(), 32);
+        // pick a token that first appears mid-stream and use it as stop
+        let stop = full.tokens[16];
+        let first = full.tokens.iter().position(|&t| t == stop).unwrap();
+        let stopped_sampling = sampling.clone().with_stop(vec![stop]);
+        let mut rng = Rng::seed_from_u64(3);
+        let stopped =
+            generate(&decoder, &stopped_sampling, &target, &draft, &[1, 2], 32, &mut rng)
+                .unwrap();
+        assert_eq!(
+            stopped.tokens,
+            full.tokens[..first].to_vec(),
+            "{decoder:?}: stop must truncate at the first occurrence"
+        );
+        assert!(!stopped.tokens.contains(&stop));
+        assert_eq!(stopped.stats.generated, stopped.tokens.len(), "{decoder:?}");
+        assert!(
+            stopped.stats.accepted_draft_tokens + stopped.stats.bonus_tokens
+                <= full.stats.accepted_draft_tokens + full.stats.bonus_tokens,
+            "{decoder:?}: dropped tokens must not inflate acceptance stats"
+        );
+    }
+}
+
+/// Stop tokens work end to end over the engine (wire-level semantics).
+#[test]
+fn engine_honors_per_request_stop() {
+    let (target, draft) = SimLm::pair(2, 0.8, 48);
+    let engine = Engine::new(target, draft, engine_cfg(3, true));
+    let (tx, handle) = spawn(engine);
+
+    // first: an unstopped probe to learn the stream
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request {
+        id: 1,
+        prompt: vec![5, 6],
+        max_new: 24,
+        decoder: None,
+        sampling: None,
+        resp: rtx,
+    })
+    .unwrap();
+    let mut probe = Vec::new();
+    while let Ok(ev) = rrx.recv() {
+        match ev {
+            Event::Tokens(t) => probe.extend(t),
+            Event::Done(_) => break,
+            Event::Error(e) => panic!("{e}"),
+        }
+    }
+    let stop = probe[8];
+    let first = probe.iter().position(|&t| t == stop).unwrap();
+
+    // same request id + engine seed => same stream; the stop-only patch
+    // inherits the engine's temperature/top_p, so streams match exactly
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request {
+        id: 1,
+        prompt: vec![5, 6],
+        max_new: 24,
+        decoder: None,
+        sampling: Some(SamplingPatch { stop: Some(vec![stop]), ..Default::default() }),
+        resp: rtx,
+    })
+    .unwrap();
+    drop(tx);
+    let mut stopped = Vec::new();
+    let mut done_stats = None;
+    while let Ok(ev) = rrx.recv() {
+        match ev {
+            Event::Tokens(t) => stopped.extend(t),
+            Event::Done(s) => {
+                done_stats = Some(s);
+                break;
+            }
+            Event::Error(e) => panic!("{e}"),
+        }
+    }
+    assert_eq!(stopped, probe[..first].to_vec());
+    assert_eq!(done_stats.unwrap().generated, first);
+    handle.join().unwrap();
+}
+
+/// The engine's fused telemetry is populated and self-consistent.
+#[test]
+fn fused_telemetry_exposed() {
+    let (streams, snap) = run_requests(0.8, engine_cfg(2, true), mixed_requests());
+    assert_eq!(streams.len(), 8);
+    assert!(snap.fused_calls > 0);
+    let hist_total: u64 = snap.fused_batch_hist.iter().map(|&(_, c)| c).sum();
+    assert_eq!(hist_total, snap.fused_calls);
+    let fill_total: u64 = snap.fused_fill_hist.iter().sum();
+    assert_eq!(fill_total, snap.fused_calls);
+    assert!(snap.fused_mean_batch >= 1.0);
+    // full-width calls exist (every request participates in round 1)
+    assert!(snap.fused_batch_hist.iter().any(|&(g, _)| g >= 2));
+}
