@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::seed_from_u64(3);
 
     println!("=== RSD-C, b = (3, 2, 1)  (paper Fig. 3a) ===");
-    let mut strat = GumbelTopK { branches: vec![3, 2, 1] };
+    let mut strat = GumbelTopK::new(vec![3, 2, 1]);
     build_and_show(&target, &draft, &mut strat, &sampling, &prompt, &tok, &mut rng)?;
 
     println!("\n=== RSD-S, W = 3, L = 3  (paper Fig. 3b) ===");
@@ -52,7 +52,8 @@ fn build_and_show<S: TreeStrategy>(
     strategy.begin_round();
     let mut pending = prompt.len();
     for level in 0..strategy.depth() {
-        let children = strategy.expand(&tree, level, rng);
+        let mut children = Vec::new();
+        strategy.expand(&tree, level, rng, &mut children);
         if children.is_empty() {
             break;
         }

@@ -64,8 +64,9 @@ fn main() -> anyhow::Result<()> {
     let logits = draft.logits(&[1, 2, 3]);
     let root = process_logits(&logits, 0.7, 1.0);
     let mut rng = Rng::seed_from_u64(0);
+    let mut children = Vec::new();
     {
-        let mut strat = GumbelTopK { branches: vec![4, 2, 1] };
+        let mut strat = GumbelTopK::new(vec![4, 2, 1]);
         bench("expand/gumbel-top-k b=4 (vocab 256)", || {
             let tree = DraftTree {
                 nodes: Vec::new(),
@@ -73,7 +74,8 @@ fn main() -> anyhow::Result<()> {
                 root_draft_lp: root.clone(),
             };
             strat.begin_round();
-            let _ = strat.expand(&tree, 0, &mut rng);
+            children.clear();
+            strat.expand(&tree, 0, &mut rng, &mut children);
         });
     }
     {
@@ -85,7 +87,8 @@ fn main() -> anyhow::Result<()> {
                 root_draft_lp: root.clone(),
             };
             strat.begin_round();
-            let _ = strat.expand(&tree, 0, &mut rng);
+            children.clear();
+            strat.expand(&tree, 0, &mut rng, &mut children);
         });
     }
     println!("=> compare against one draft step call (~ms on the real model,");

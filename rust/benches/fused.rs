@@ -12,17 +12,26 @@
 //! bench reproduces the serving-hardware tradeoff end to end — both
 //! paths decode the SAME tokens (asserted), only dispatch count differs.
 //!
-//!     cargo bench --bench fused
+//!     cargo bench --bench fused             # human-readable
+//!     cargo bench --bench fused -- --json   # + BENCH_fused.json (repo root)
+//!     cargo bench --bench fused -- --quick  # shorter streams for CI
 
 use std::sync::mpsc;
 use std::time::Instant;
 
+use rsd::bench::alloc::{self, CountingAlloc};
+use rsd::bench::harness::write_snapshot;
 use rsd::config::{AdaptiveFamily, DecoderConfig, EngineConfig, SamplingConfig};
 use rsd::coordinator::engine::{spawn, Engine, Event, Request};
 use rsd::coordinator::metrics::Snapshot;
 use rsd::sim::SimLm;
+use rsd::util::json::Json;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 const N_REQUESTS: u64 = 8;
+/// Tokens per request in the full (non `--quick`) run.
 const MAX_NEW: usize = 48;
 /// splitmix64 rounds charged per model dispatch (~a few hundred µs of
 /// CPU work: the order of a real kernel-launch + transfer overhead).
@@ -40,15 +49,15 @@ fn decoder_for(i: u64) -> Option<DecoderConfig> {
 }
 
 /// Drive one full engine run; returns (per-request token streams,
-/// tokens/sec, final metrics snapshot).
-fn run(fused: bool) -> (Vec<Vec<u32>>, f64, Snapshot) {
+/// tokens/sec, (allocs, bytes) per token, final metrics snapshot).
+fn run(fused: bool, max_new: usize) -> (Vec<Vec<u32>>, f64, (f64, f64), Snapshot) {
     let (target, draft) = SimLm::pair(3, 0.8, 64);
     let target = target.with_call_overhead(DISPATCH_OVERHEAD);
     let draft = draft.with_call_overhead(DISPATCH_OVERHEAD);
     let cfg = EngineConfig {
         max_concurrency: N_REQUESTS as usize,
         max_queue: 64,
-        default_max_tokens: MAX_NEW,
+        default_max_tokens: max_new,
         max_active_budget: 0,
         sampling: SamplingConfig::new(0.5, 1.0),
         decoder: DecoderConfig::RsdS { w: 3, l: 3 },
@@ -59,13 +68,14 @@ fn run(fused: bool) -> (Vec<Vec<u32>>, f64, Snapshot) {
     let (tx, handle) = spawn(engine);
 
     let t0 = Instant::now();
+    let (a0, b0) = alloc::counts();
     let mut receivers = Vec::new();
     for i in 0..N_REQUESTS {
         let (rtx, rrx) = mpsc::channel();
         tx.send(Request {
             id: i,
             prompt: vec![1 + i as u32, 2, 3],
-            max_new: MAX_NEW,
+            max_new,
             decoder: decoder_for(i),
             sampling: None,
             resp: rtx,
@@ -90,20 +100,26 @@ fn run(fused: bool) -> (Vec<Vec<u32>>, f64, Snapshot) {
         streams.push(toks);
     }
     let wall = t0.elapsed().as_secs_f64();
+    let (a1, b1) = alloc::counts();
     let snap = handle.join().unwrap().snapshot();
-    (streams, total as f64 / wall, snap)
+    let per_tok = total.max(1) as f64;
+    let heap = ((a1 - a0) as f64 / per_tok, (b1 - b0) as f64 / per_tok);
+    (streams, total as f64 / wall, heap, snap)
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_out = args.iter().any(|a| a == "--json");
+    let max_new = if args.iter().any(|a| a == "--quick") { 16 } else { MAX_NEW };
     println!(
         "=== fused vs per-request execution ({N_REQUESTS} concurrent requests, \
          SimLm, dispatch overhead {DISPATCH_OVERHEAD} rounds) ==="
     );
     // warmup (page in, stabilize frequency scaling)
-    let _ = run(true);
+    let _ = run(true, max_new);
 
-    let (seq_streams, seq_tps, seq_snap) = run(false);
-    let (fused_streams, fused_tps, snap) = run(true);
+    let (seq_streams, seq_tps, seq_heap, seq_snap) = run(false, max_new);
+    let (fused_streams, fused_tps, fused_heap, snap) = run(true, max_new);
 
     assert_eq!(
         seq_streams, fused_streams,
@@ -139,4 +155,30 @@ fn main() {
         "fused stepping must be ≥2x sequential at {N_REQUESTS} requests (got {speedup:.2}x)"
     );
     println!("\n≥2x acceptance criterion met ✓");
+
+    if json_out {
+        let entry = |name: &str, tps: f64, (allocs, bytes): (f64, f64)| {
+            Json::obj(vec![
+                ("section", Json::from("fused-engine")),
+                ("name", Json::from(name)),
+                ("ns_per_op", Json::Num(1e9 / tps.max(1e-9))), // per decoded token
+                ("allocs_per_op", Json::Num(allocs)),
+                ("bytes_per_op", Json::Num(bytes)),
+            ])
+        };
+        let entries = vec![
+            entry("sequential/token", seq_tps, seq_heap),
+            entry("fused/token", fused_tps, fused_heap),
+        ];
+        let extra = vec![
+            ("speedup", Json::Num(speedup)),
+            ("sequential_dispatches", Json::from(seq_dispatches as usize)),
+            ("fused_dispatches", Json::from(snap.fused_calls as usize)),
+            ("max_new", Json::from(max_new)),
+        ];
+        match write_snapshot("BENCH_fused.json", entries, extra) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("failed to write BENCH_fused.json: {e}"),
+        }
+    }
 }

@@ -75,7 +75,7 @@ impl TreeShape {
     pub fn build(&self, phi_gap: f64) -> Box<dyn TreeStrategy> {
         match self {
             TreeShape::RsdC { branches } => {
-                Box::new(GumbelTopK { branches: branches.clone() })
+                Box::new(GumbelTopK::new(branches.clone()))
             }
             TreeShape::RsdS { w, l } => Box::new(StochasticBeam::with_gap(*w, *l, phi_gap)),
         }

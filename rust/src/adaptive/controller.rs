@@ -15,7 +15,7 @@ use crate::config::{AdaptiveFamily, SamplingConfig, ADAPTIVE_MAX_DEPTH};
 use crate::decode::rrs::Rrs;
 use crate::decode::spec::{RoundReport, RoundStart, SpecStepper, StepOutcome};
 use crate::decode::{DecodeRun, DecodeStats};
-use crate::llm::{EvalNode, Llm};
+use crate::llm::{EvalNode, Llm, LogitsView};
 use crate::util::Rng;
 
 use super::allocator::{self, TreeShape, DEFAULT_PHI_GAP, DEFAULT_RATE};
@@ -158,7 +158,7 @@ impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
         self.inner.draft_group()
     }
 
-    pub fn feed_draft(&mut self, rows: Vec<Vec<f32>>, rng: &mut Rng) -> Result<()> {
+    pub fn feed_draft(&mut self, rows: LogitsView<'_>, rng: &mut Rng) -> Result<()> {
         self.inner.feed_draft(rows, rng)
     }
 
@@ -172,7 +172,7 @@ impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
         &mut self,
         target: &T,
         draft: &D,
-        rows: Vec<Vec<f32>>,
+        rows: LogitsView<'_>,
         rng: &mut Rng,
     ) -> Result<StepOutcome> {
         let outcome = self.inner.feed_target(target, draft, rows, rng)?;

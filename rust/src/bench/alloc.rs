@@ -1,0 +1,50 @@
+//! Counting global allocator for the bench binaries: wraps the system
+//! allocator and counts every allocation (and reallocation) plus the
+//! bytes requested. The bench binaries install it with
+//! `#[global_allocator]`; the counters live here in the library so the
+//! harness can read them regardless of which binary registered it. When
+//! no binary registers it the counters simply stay at zero.
+//!
+//! This is how the hot-path bench *proves* the zero-allocation
+//! steady-state claim instead of asserting it by inspection: warm a
+//! stepper up, snapshot [`counts`], run N rounds, and the delta is the
+//! exact number of heap allocations those rounds performed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// (allocations, bytes requested) since process start.
+pub fn counts() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed))
+}
+
+/// System-allocator wrapper counting allocs/bytes. `realloc` counts as
+/// one allocation of the new size (a Vec growth is real heap traffic).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

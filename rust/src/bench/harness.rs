@@ -1,14 +1,38 @@
 //! Micro-benchmark harness (offline substitute for criterion): warmup,
-//! timed batches, mean / stddev / throughput reporting, and a tiny
-//! comparison table. Wallclock-based, best-of-batches resistant to noise.
+//! timed batches, mean / stddev / throughput reporting, per-op
+//! allocation counting (via [`super::alloc`], when the bench binary
+//! registered the counting global allocator) and machine-readable
+//! snapshots (`--json` writes `BENCH_*.json` at the repo root).
+//! Wallclock-based, best-of-batches resistant to noise.
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Quick mode (`--quick`): shorter batches for CI — same measurements,
+/// coarser precision.
+static QUICK: AtomicBool = AtomicBool::new(false);
+
+pub fn set_quick(quick: bool) {
+    QUICK.store(quick, Ordering::Relaxed);
+}
+
+pub fn quick() -> bool {
+    QUICK.load(Ordering::Relaxed)
+}
 
 pub struct BenchResult {
     pub name: String,
     pub mean: Duration,
     pub stddev: Duration,
     pub iters: u64,
+    /// Heap allocations per op (0 when no counting allocator is
+    /// registered — the library default).
+    pub allocs_per_op: f64,
+    /// Heap bytes requested per op.
+    pub bytes_per_op: f64,
 }
 
 impl BenchResult {
@@ -23,8 +47,11 @@ impl BenchResult {
 /// Time `f`, auto-calibrating the iteration count to roughly
 /// `target_time` per batch, over `batches` batches.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    let target_time = Duration::from_millis(120);
-    let batches = 7usize;
+    let (target_time, batches) = if quick() {
+        (Duration::from_millis(25), 3usize)
+    } else {
+        (Duration::from_millis(120), 7usize)
+    };
 
     // calibrate
     let mut iters = 1u64;
@@ -34,7 +61,7 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
             f();
         }
         let el = t0.elapsed();
-        if el >= Duration::from_millis(15) || iters >= 1 << 24 {
+        if el >= Duration::from_millis(if quick() { 5 } else { 15 }) || iters >= 1 << 24 {
             let scale = target_time.as_secs_f64() / el.as_secs_f64().max(1e-9);
             iters = ((iters as f64 * scale).ceil() as u64).max(1);
             break;
@@ -42,8 +69,10 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
         iters *= 4;
     }
 
-    // measure
+    // measure (the samples vector is pre-sized so the timed region
+    // performs no harness-side allocation)
     let mut samples = Vec::with_capacity(batches);
+    let (a0, b0) = super::alloc::counts();
     for _ in 0..batches {
         let t0 = Instant::now();
         for _ in 0..iters {
@@ -51,21 +80,26 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
         }
         samples.push(t0.elapsed().as_secs_f64() / iters as f64);
     }
+    let (a1, b1) = super::alloc::counts();
+    let total_ops = (iters * batches as u64) as f64;
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
-        / (samples.len() - 1) as f64;
+        / (samples.len().saturating_sub(1)).max(1) as f64;
     let r = BenchResult {
         name: name.to_string(),
         mean: Duration::from_secs_f64(mean),
         stddev: Duration::from_secs_f64(var.sqrt()),
         iters,
+        allocs_per_op: (a1 - a0) as f64 / total_ops,
+        bytes_per_op: (b1 - b0) as f64 / total_ops,
     };
     println!(
-        "{:<44} {:>12} ± {:>10}   ({:>12.1} /s, {} iters/batch)",
+        "{:<44} {:>12} ± {:>10}   ({:>12.1} /s, {:>8.1} allocs/op, {} iters/batch)",
         r.name,
         fmt_dur(r.mean),
         fmt_dur(r.stddev),
         r.per_sec(),
+        r.allocs_per_op,
         r.iters
     );
     r
@@ -87,4 +121,47 @@ pub fn fmt_dur(d: Duration) -> String {
 /// Section header for bench binaries.
 pub fn section(title: &str) {
     println!("\n——— {title} ———");
+}
+
+/// One entry of a perf snapshot (a measured bench or a derived scalar).
+pub fn snapshot_entry(section: &str, r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("section", Json::from(section)),
+        ("name", Json::from(r.name.as_str())),
+        ("ns_per_op", Json::Num(r.mean.as_secs_f64() * 1e9)),
+        ("stddev_ns", Json::Num(r.stddev.as_secs_f64() * 1e9)),
+        ("allocs_per_op", Json::Num(r.allocs_per_op)),
+        ("bytes_per_op", Json::Num(r.bytes_per_op)),
+        ("iters_per_batch", Json::from(r.iters as usize)),
+    ])
+}
+
+/// Where `BENCH_*.json` snapshots go: the repository root (benches run
+/// with the crate directory as CWD; fall back to CWD when run from the
+/// root itself).
+pub fn snapshot_path(file: &str) -> PathBuf {
+    let parent = PathBuf::from("..");
+    if parent.join("ROADMAP.md").exists() {
+        parent.join(file)
+    } else {
+        PathBuf::from(file)
+    }
+}
+
+/// Write a perf snapshot: `entries` (from [`snapshot_entry`]) plus
+/// free-form top-level fields. Returns the written path.
+pub fn write_snapshot(
+    file: &str,
+    entries: Vec<Json>,
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<PathBuf> {
+    let mut fields = vec![
+        ("schema", Json::from("rsd-bench-v1")),
+        ("quick", Json::Bool(quick())),
+        ("entries", Json::Arr(entries)),
+    ];
+    fields.extend(extra);
+    let path = snapshot_path(file);
+    std::fs::write(&path, format!("{}\n", Json::obj(fields)))?;
+    Ok(path)
 }

@@ -9,6 +9,7 @@
 //! * [`run_exp1`] / [`run_exp2`] / [`figure1`] — full sweeps printing
 //!   paper-style tables (Tables 1-54 rows; Figure 1/4/5 series).
 
+pub mod alloc;
 pub mod harness;
 pub mod workload;
 

@@ -46,7 +46,7 @@ use crate::config::{DecoderConfig, EngineConfig, SamplingPatch};
 use crate::decode::ar::ArStepper;
 use crate::decode::spec::{RoundReport, RoundStart, SpecStepper, StepOutcome};
 use crate::decode::{build_parts, DecodeStats};
-use crate::llm::{EvalNode, Llm};
+use crate::llm::{EvalNode, Llm, LogitsBatch};
 use crate::util::Rng;
 
 use super::batcher::Batcher;
@@ -137,22 +137,38 @@ struct Active<T: Llm, D: Llm> {
     first_token_at: Option<f64>,
 }
 
-/// Execute one phase's groups and return a per-group outcome (rows or
-/// error message), index-aligned with the groups.
+/// Execute one phase's groups into the shared flat logits buffer and
+/// return a per-group outcome (the group's row range in `out`, or an
+/// error message), index-aligned with the groups. The buffer is engine-
+/// owned and recycled across phases and rounds, so a phase performs no
+/// per-row allocation.
 ///
-/// Fused path: one `eval_batch` call; on error every participating
+/// Fused path: one `eval_batch_into` call; on error every participating
 /// session may hold half-applied pending state, so ALL groups fail.
-/// Sequential fallback (`EngineConfig::fused = false`): one `eval` per
-/// group, so an error stays confined to the request that hit it — the
-/// other sessions were touched by their own calls only.
+/// Sequential fallback (`EngineConfig::fused = false`): one `eval_into`
+/// per group, so an error stays confined to the request that hit it —
+/// the other sessions were touched by their own calls only.
 fn eval_phase<L: Llm>(
     lm: &L,
     fused: bool,
     groups: &mut [(&mut L::Session, &[EvalNode])],
-) -> Vec<std::result::Result<Vec<Vec<f32>>, String>> {
+    out: &mut LogitsBatch,
+) -> Vec<std::result::Result<std::ops::Range<usize>, String>> {
+    out.reset(lm.vocab());
     if fused {
-        return match lm.eval_batch(groups) {
-            Ok(rows) => rows.into_iter().map(Ok).collect(),
+        let counts: Vec<usize> = groups.iter().map(|(_, nodes)| nodes.len()).collect();
+        return match lm.eval_batch_into(groups, out) {
+            Ok(()) => {
+                let mut start = 0;
+                counts
+                    .into_iter()
+                    .map(|n| {
+                        let r = start..start + n;
+                        start += n;
+                        Ok(r)
+                    })
+                    .collect()
+            }
             Err(e) => {
                 let msg = e.to_string();
                 (0..groups.len()).map(|_| Err(msg.clone())).collect()
@@ -161,7 +177,12 @@ fn eval_phase<L: Llm>(
     }
     groups
         .iter_mut()
-        .map(|(session, nodes)| lm.eval(session, nodes).map_err(|e| e.to_string()))
+        .map(|(session, nodes)| {
+            let start = out.rows();
+            lm.eval_into(session, nodes, out)
+                .map(|()| start..out.rows())
+                .map_err(|e| e.to_string())
+        })
         .collect()
 }
 
@@ -238,6 +259,8 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue)
                 .with_max_active_weight(self.cfg.max_active_budget);
         let mut active: Vec<Active<T, D>> = Vec::new();
+        // the engine-wide flat logits buffer every fused phase writes into
+        let mut logits = LogitsBatch::default();
         let mut closed = false;
 
         loop {
@@ -302,7 +325,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             }
 
             // ---- one fused round over every active request ---------------
-            let mut state = self.run_fused_round(&mut active);
+            let mut state = self.run_fused_round(&mut active, &mut logits);
 
             // ---- flush tokens, deliver completions/errors ----------------
             let mut i = 0;
@@ -355,10 +378,14 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     }
 
     /// Advance every active request by one speculative round, batching
-    /// all draft and target forwards across requests (see module docs).
-    /// Returns each request's end-of-round state, index-aligned with
-    /// `active`.
-    fn run_fused_round(&self, active: &mut [Active<T, D>]) -> Vec<RoundState> {
+    /// all draft and target forwards across requests (see module docs)
+    /// into the shared flat `logits` buffer. Returns each request's
+    /// end-of-round state, index-aligned with `active`.
+    fn run_fused_round(
+        &self,
+        active: &mut [Active<T, D>],
+        logits: &mut LogitsBatch,
+    ) -> Vec<RoundState> {
         let mut state: Vec<RoundState> = Vec::with_capacity(active.len());
 
         // ---- phase 1: begin rounds (bookkeeping, no model calls) ---------
@@ -400,13 +427,14 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             if groups.is_empty() {
                 break;
             }
-            let results = eval_phase(&self.draft, self.cfg.fused, &mut groups);
+            let results = eval_phase(&self.draft, self.cfg.fused, &mut groups, logits);
             drop(groups);
             self.metrics.record_fused(who.len(), in_round);
             for (res, &i) in results.into_iter().zip(who.iter()) {
                 match res {
-                    Ok(rows_i) => {
+                    Ok(range) => {
                         let a = &mut active[i];
+                        let rows_i = logits.view(range);
                         let fed = match &mut a.stepper {
                             AnyStepper::Spec(s) => s.feed_draft(rows_i, &mut a.rng),
                             AnyStepper::Adaptive(s) => s.feed_draft(rows_i, &mut a.rng),
@@ -442,12 +470,12 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             }
         }
         if !groups.is_empty() {
-            let results = eval_phase(&self.target, self.cfg.fused, &mut groups);
+            let results = eval_phase(&self.target, self.cfg.fused, &mut groups, logits);
             drop(groups);
             self.metrics.record_fused(who.len(), in_round);
             for (res, &i) in results.into_iter().zip(who.iter()) {
                 let rows_i = match res {
-                    Ok(rows_i) => rows_i,
+                    Ok(range) => logits.view(range),
                     Err(e) => {
                         state[i] = RoundState::Failed(e);
                         continue;

@@ -10,6 +10,10 @@
 //! through [`ArStepper::feed_target`]. AR rounds have no draft phase, so
 //! AR requests simply contribute nothing to the engine's fused draft
 //! calls.
+//!
+//! The steady-state AR round is allocation-free like the speculative
+//! one: the next-token distribution, the probability scratch, the phase
+//! node vectors and the commit chain are all reused across rounds.
 
 use std::mem;
 use std::time::Instant;
@@ -17,8 +21,8 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::config::SamplingConfig;
-use crate::llm::{EvalNode, Llm};
-use crate::sampling::{process_logits, sample_categorical, LogProbs};
+use crate::llm::{EvalNode, Llm, LogitsBatch, LogitsView};
+use crate::sampling::{process_logits_into, sample_categorical, LogProbs, SelectScratch};
 use crate::util::Rng;
 
 use super::spec::{RoundStart, StepOutcome};
@@ -36,8 +40,19 @@ enum Phase {
 pub struct ArStepper<T: Llm> {
     sampling: SamplingConfig,
     sess: T::Session,
-    /// Distribution for the next token (None until prefill ran).
+    /// Distribution for the next token (None until prefill ran; the
+    /// inner buffer is reused across rounds).
     lp: Option<LogProbs>,
+    /// Nucleus-selection scratch for logits processing.
+    sel: SelectScratch,
+    /// Probability scratch for next-token sampling.
+    probs: Vec<f64>,
+    /// Pooled phase node vectors.
+    node_pool: Vec<Vec<EvalNode>>,
+    /// Reusable commit chain.
+    chain: Vec<usize>,
+    /// Flat logits buffer for the single-request `step` path.
+    logits: LogitsBatch,
     phase: Phase,
     prompt: Vec<u32>,
     pub out: Vec<u32>,
@@ -61,9 +76,16 @@ impl<T: Llm> ArStepper<T> {
             sampling,
             sess: target.begin()?,
             lp: None,
+            sel: SelectScratch::default(),
+            probs: Vec::new(),
+            node_pool: Vec::new(),
+            chain: Vec::new(),
+            logits: LogitsBatch::default(),
             phase: Phase::Idle,
             prompt: prompt.to_vec(),
-            out: Vec::new(),
+            // clamped like SpecStepper::new: a programmatic max_new of
+            // usize::MAX must not abort on the reservation
+            out: Vec::with_capacity(max_new.min(1 << 20)),
             stats: DecodeStats::default(),
             max_new,
             started: Instant::now(),
@@ -94,22 +116,20 @@ impl<T: Llm> ArStepper<T> {
         }
         let Some(lp) = &self.lp else {
             // prefill round: evaluate the whole prompt chain
-            let nodes: Vec<EvalNode> = self
-                .prompt
-                .iter()
-                .enumerate()
-                .map(|(i, &t)| {
-                    if i == 0 {
-                        EvalNode::root(t)
-                    } else {
-                        EvalNode::child(t, i - 1)
-                    }
-                })
-                .collect();
+            let mut nodes = self.node_pool.pop().unwrap_or_default();
+            nodes.clear();
+            nodes.extend(self.prompt.iter().enumerate().map(|(i, &t)| {
+                if i == 0 {
+                    EvalNode::root(t)
+                } else {
+                    EvalNode::child(t, i - 1)
+                }
+            }));
             self.phase = Phase::AwaitPrefill { nodes };
             return Ok(RoundStart::Started);
         };
-        let token = sample_categorical(&lp.probs(), rng) as u32;
+        lp.probs_into(&mut self.probs);
+        let token = sample_categorical(&self.probs, rng) as u32;
         if self.sampling.is_stop(token) {
             // stop token: finish without emitting it
             self.finish();
@@ -120,7 +140,10 @@ impl<T: Llm> ArStepper<T> {
             self.finish();
             return Ok(RoundStart::Finished);
         }
-        self.phase = Phase::AwaitDecode { nodes: vec![EvalNode::root(token)] };
+        let mut nodes = self.node_pool.pop().unwrap_or_default();
+        nodes.clear();
+        nodes.push(EvalNode::root(token));
+        self.phase = Phase::AwaitDecode { nodes };
         Ok(RoundStart::Started)
     }
 
@@ -136,24 +159,38 @@ impl<T: Llm> ArStepper<T> {
     }
 
     /// Consume the target rows: commit the evaluated chain and refresh
-    /// the next-token distribution.
-    pub fn feed_target(&mut self, target: &T, rows: Vec<Vec<f32>>) -> Result<StepOutcome> {
+    /// the next-token distribution (into the reused buffer).
+    pub fn feed_target(&mut self, target: &T, rows: LogitsView<'_>) -> Result<StepOutcome> {
         let phase = mem::replace(&mut self.phase, Phase::Idle);
-        let nodes_len = match &phase {
-            Phase::AwaitPrefill { nodes } | Phase::AwaitDecode { nodes } => nodes.len(),
+        let nodes = match phase {
+            Phase::AwaitPrefill { nodes } | Phase::AwaitDecode { nodes } => nodes,
             Phase::Idle => bail!("feed_target outside a round"),
         };
+        let nodes_len = nodes.len();
+        {
+            let mut nodes = nodes;
+            nodes.clear();
+            self.node_pool.push(nodes);
+        }
         if rows.len() != nodes_len {
             bail!("feed_target: {} rows for {} staged nodes", rows.len(), nodes_len);
         }
         self.stats.decode_calls += 1;
-        let chain: Vec<usize> = (0..nodes_len).collect();
-        target.commit(&mut self.sess, &chain)?;
-        self.lp = Some(process_logits(
+        self.chain.clear();
+        self.chain.extend(0..nodes_len);
+        target.commit(&mut self.sess, &self.chain)?;
+        let mut buf = match self.lp.take() {
+            Some(lp) => lp.0,
+            None => Vec::new(),
+        };
+        process_logits_into(
             rows.last().expect("staged nodes non-empty"),
             self.sampling.temperature,
             self.sampling.top_p,
-        ));
+            &mut self.sel,
+            &mut buf,
+        );
+        self.lp = Some(LogProbs(buf));
         Ok(StepOutcome::Progress)
     }
 
@@ -166,11 +203,14 @@ impl<T: Llm> ArStepper<T> {
             if self.begin_round(target, rng)? == RoundStart::Finished {
                 return Ok(StepOutcome::Done);
             }
-            let rows = match self.target_group() {
-                Some((sess, nodes)) => target.eval(sess, nodes)?,
+            let mut batch = mem::take(&mut self.logits);
+            batch.reset(target.vocab());
+            match self.target_group() {
+                Some((sess, nodes)) => target.eval_into(sess, nodes, &mut batch)?,
                 None => bail!("round staged no target work"),
-            };
-            let outcome = self.feed_target(target, rows)?;
+            }
+            let outcome = self.feed_target(target, batch.full())?;
+            self.logits = batch;
             if !was_prefill {
                 return Ok(outcome);
             }

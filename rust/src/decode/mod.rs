@@ -125,10 +125,10 @@ pub fn build_parts(
             (Box::new(IidPaths { k: *k, depth: *l }), Box::new(KSeq { gamma: None }))
         }
         DecoderConfig::RsdC { branches } => {
-            (Box::new(GumbelTopK { branches: branches.clone() }), Box::new(Rrs))
+            (Box::new(GumbelTopK::new(branches.clone())), Box::new(Rrs))
         }
         DecoderConfig::RsdCMultiRound { branches } => {
-            (Box::new(GumbelTopK { branches: branches.clone() }), Box::new(MultiRound))
+            (Box::new(GumbelTopK::new(branches.clone())), Box::new(MultiRound))
         }
         DecoderConfig::RsdS { w, l } => (Box::new(StochasticBeam::new(*w, *l)), Box::new(Rrs)),
     }

@@ -18,7 +18,7 @@
 //! achieves the highest acceptance rate for without-replacement siblings
 //! (Theorem 3.1, tested statistically in rust/tests/props.rs).
 
-use crate::sampling::{residual, sample_categorical, LogProbs};
+use crate::sampling::{residual_in_place, sample_categorical, LogProbs, VerifyScratch};
 use crate::util::Rng;
 
 /// Outcome of verifying one sibling set.
@@ -35,21 +35,20 @@ pub trait VerifyRule: Send {
     /// Verify an ordered sibling set `siblings` (construction order = the
     /// without-replacement order for RSD) whose parent context has
     /// processed draft distribution `draft` and target distribution
-    /// `target`.
-    fn verify(
+    /// `target`. All probability-space working state lives in `scratch`
+    /// (caller-owned, reused across levels and rounds), so verification
+    /// is allocation-free.
+    fn verify_with(
         &self,
         siblings: &[u32],
         draft: &LogProbs,
         target: &LogProbs,
+        scratch: &mut VerifyScratch,
         rng: &mut Rng,
     ) -> LevelOutcome;
-}
 
-/// Recursive rejection sampling (the paper's Alg. 6).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct Rrs;
-
-impl VerifyRule for Rrs {
+    /// Convenience wrapper allocating a throwaway scratch
+    /// (tests/benches only).
     fn verify(
         &self,
         siblings: &[u32],
@@ -57,8 +56,28 @@ impl VerifyRule for Rrs {
         target: &LogProbs,
         rng: &mut Rng,
     ) -> LevelOutcome {
-        let mut q = target.probs();
-        let mut p = draft.probs();
+        let mut scratch = VerifyScratch::default();
+        self.verify_with(siblings, draft, target, &mut scratch, rng)
+    }
+}
+
+/// Recursive rejection sampling (the paper's Alg. 6).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Rrs;
+
+impl VerifyRule for Rrs {
+    fn verify_with(
+        &self,
+        siblings: &[u32],
+        draft: &LogProbs,
+        target: &LogProbs,
+        scratch: &mut VerifyScratch,
+        rng: &mut Rng,
+    ) -> LevelOutcome {
+        let q = &mut scratch.q;
+        let p = &mut scratch.p;
+        target.probs_into(q);
+        draft.probs_into(p);
         for (pos, &x) in siblings.iter().enumerate() {
             let xi = x as usize;
             let (qx, px) = (q[xi], p[xi]);
@@ -66,14 +85,11 @@ impl VerifyRule for Rrs {
             if px > 0.0 && rng.gen_f64() < (qx / px).min(1.0) {
                 return LevelOutcome::Accept { pos };
             }
-            // q^{(k+1)} = Norm[[q^{(k)} - p^{(k)}]^+]
-            match residual(&q, &p) {
-                Some(r) => q = r,
-                None => {
-                    // residual mass vanished: the draft's remaining support
-                    // covers q exactly; fall back to sampling q directly.
-                    break;
-                }
+            // q^{(k+1)} = Norm[[q^{(k)} - p^{(k)}]^+]; when the residual
+            // mass vanished the draft's remaining support covers q
+            // exactly — fall back to sampling q directly.
+            if !residual_in_place(q, p) {
+                break;
             }
             // p^{(k+1)} = p^{(k)} conditioned on not drawing x (sampling
             // without replacement): zero the tried token, renormalize.
@@ -82,11 +98,11 @@ impl VerifyRule for Rrs {
             if z <= 0.0 {
                 break;
             }
-            for v in &mut p {
+            for v in p.iter_mut() {
                 *v /= z;
             }
         }
-        LevelOutcome::Reject { token: sample_categorical(&q, rng) as u32 }
+        LevelOutcome::Reject { token: sample_categorical(q, rng) as u32 }
     }
 }
 
@@ -96,26 +112,28 @@ impl VerifyRule for Rrs {
 pub struct MultiRound;
 
 impl VerifyRule for MultiRound {
-    fn verify(
+    fn verify_with(
         &self,
         siblings: &[u32],
         draft: &LogProbs,
         target: &LogProbs,
+        scratch: &mut VerifyScratch,
         rng: &mut Rng,
     ) -> LevelOutcome {
-        let mut q = target.probs();
-        let p = draft.probs();
+        let q = &mut scratch.q;
+        let p = &mut scratch.p;
+        target.probs_into(q);
+        draft.probs_into(p);
         for (pos, &x) in siblings.iter().enumerate() {
             let xi = x as usize;
             if p[xi] > 0.0 && rng.gen_f64() < (q[xi] / p[xi]).min(1.0) {
                 return LevelOutcome::Accept { pos };
             }
-            match residual(&q, &p) {
-                Some(r) => q = r,
-                None => break,
+            if !residual_in_place(q, p) {
+                break;
             }
         }
-        LevelOutcome::Reject { token: sample_categorical(&q, rng) as u32 }
+        LevelOutcome::Reject { token: sample_categorical(q, rng) as u32 }
     }
 }
 
@@ -156,19 +174,22 @@ impl KSeq {
 }
 
 impl VerifyRule for KSeq {
-    fn verify(
+    fn verify_with(
         &self,
         siblings: &[u32],
         draft: &LogProbs,
         target: &LogProbs,
+        scratch: &mut VerifyScratch,
         rng: &mut Rng,
     ) -> LevelOutcome {
-        let q = target.probs();
-        let p = draft.probs();
+        let q = &mut scratch.q;
+        let p = &mut scratch.p;
+        target.probs_into(q);
+        draft.probs_into(p);
         let kf = siblings.len() as f64;
         let gamma = self
             .gamma
-            .unwrap_or_else(|| Self::tune_gamma(&p, &q, siblings.len()))
+            .unwrap_or_else(|| Self::tune_gamma(p, q, siblings.len()))
             .clamp(1.0, kf.max(1.0));
         for (pos, &x) in siblings.iter().enumerate() {
             let xi = x as usize;
@@ -178,7 +199,7 @@ impl VerifyRule for KSeq {
         }
         let beta: f64 = q
             .iter()
-            .zip(&p)
+            .zip(p.iter())
             .map(|(&qi, &pi)| pi.min(qi / gamma))
             .sum();
         let scale = if beta > 0.0 {
@@ -186,16 +207,18 @@ impl VerifyRule for KSeq {
         } else {
             0.0
         };
-        let res: Vec<f64> = q
-            .iter()
-            .zip(&p)
-            .map(|(&qi, &pi)| (qi - pi.min(qi / gamma) * scale).max(0.0))
-            .collect();
+        let res = &mut scratch.aux;
+        res.clear();
+        res.extend(
+            q.iter()
+                .zip(p.iter())
+                .map(|(&qi, &pi)| (qi - pi.min(qi / gamma) * scale).max(0.0)),
+        );
         let z: f64 = res.iter().sum();
         let token = if z > 1e-300 {
-            sample_categorical(&res, rng) as u32
+            sample_categorical(res, rng) as u32
         } else {
-            sample_categorical(&q, rng) as u32
+            sample_categorical(q, rng) as u32
         };
         LevelOutcome::Reject { token }
     }

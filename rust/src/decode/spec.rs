@@ -28,11 +28,22 @@
 //!    into both KV caches and emits tokens.
 //!
 //! [`SpecStepper::step`] drives the machine with direct per-session
-//! `eval` calls (the single-request path). The serving engine instead
-//! advances *every* active request's machine in lockstep and executes
-//! each phase as one fused [`crate::llm::Llm::eval_batch`] call across
-//! requests; because model calls never consume the per-request RNG, the
-//! fused schedule is token-for-token identical to sequential stepping.
+//! `eval_into` calls (the single-request path). The serving engine
+//! instead advances *every* active request's machine in lockstep and
+//! executes each phase as one fused [`crate::llm::Llm::eval_batch_into`]
+//! call across requests; because model calls never consume the
+//! per-request RNG, the fused schedule is token-for-token identical to
+//! sequential stepping.
+//!
+//! # Allocation discipline
+//!
+//! The steady-state round is allocation-free: logits arrive in a flat
+//! recycled [`LogitsBatch`], per-node log-distributions come from the
+//! stepper's [`RoundScratch`] arena (a [`LogProbs`] buffer pool), the
+//! tree/phase/verification vectors are pooled across rounds, and all
+//! probability work happens in caller-owned scratch. The hot-path bench
+//! (`benches/hotpath.rs`) proves 0 heap allocations per round with a
+//! counting global allocator.
 //!
 //! Decoding stays *resumable at round granularity*, which is what lets
 //! the coordinator interleave many requests over one model (continuous
@@ -44,8 +55,10 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::config::SamplingConfig;
-use crate::llm::{EvalNode, Llm};
-use crate::sampling::{process_logits, sample_categorical, LogProbs};
+use crate::llm::{EvalNode, Llm, LogitsBatch, LogitsView};
+use crate::sampling::{
+    process_logits_into, sample_categorical, LogProbs, SelectScratch, VerifyScratch,
+};
 use crate::util::Rng;
 
 use super::rrs::{LevelOutcome, VerifyRule};
@@ -69,7 +82,7 @@ pub struct TreeNode {
 }
 
 /// The draft-token tree of one round.
-#[derive(Debug)]
+#[derive(Debug, Default)]
 pub struct DraftTree {
     pub nodes: Vec<TreeNode>,
     /// Node ids per level, construction order (= verification order).
@@ -80,11 +93,24 @@ pub struct DraftTree {
 
 impl DraftTree {
     /// Ordered children of `parent` at `level`, expanded by multiplicity:
-    /// (node_id, token) per draft path.
+    /// (node_id, token) per draft path. Allocating wrapper over
+    /// [`DraftTree::sibling_candidates_into`].
     pub fn sibling_candidates(&self, level: usize, parent: Option<usize>) -> Vec<(usize, u32)> {
         let mut out = Vec::new();
+        self.sibling_candidates_into(level, parent, &mut out);
+        out
+    }
+
+    /// [`DraftTree::sibling_candidates`] into a caller-owned buffer.
+    pub fn sibling_candidates_into(
+        &self,
+        level: usize,
+        parent: Option<usize>,
+        out: &mut Vec<(usize, u32)>,
+    ) {
+        out.clear();
         if level >= self.levels.len() {
-            return out;
+            return;
         }
         for &id in &self.levels[level] {
             let n = &self.nodes[id];
@@ -94,7 +120,6 @@ impl DraftTree {
                 }
             }
         }
-        out
     }
 }
 
@@ -116,11 +141,13 @@ pub trait TreeStrategy: Send {
     /// Reset per-round state.
     fn begin_round(&mut self);
 
-    /// Propose children for `level` (0-based). Parents must be nodes of
-    /// `level - 1` (or `None` = root for level 0). The returned order is
+    /// Propose children for `level` (0-based), appending them to `out`
+    /// (cleared by the caller; strategies own any further scratch, so
+    /// expansion is allocation-free once warm). Parents must be nodes of
+    /// `level - 1` (or `None` = root for level 0). The appended order is
     /// the *verification order* (e.g. decreasing perturbed log-prob for
     /// sampling without replacement).
-    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child>;
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng, out: &mut Vec<Child>);
 
     /// Post-creation hook: `node_ids[i]` is the id of the i-th *distinct*
     /// created node, in construction order (duplicates merged for
@@ -128,8 +155,47 @@ pub trait TreeStrategy: Send {
     fn on_created(&mut self, _tree: &DraftTree, _level: usize, _node_ids: &[usize]) {}
 }
 
+/// Per-request scratch arena recycled across rounds: the [`LogProbs`]
+/// buffer pool (no per-node `Vec<f64>` in steady state) plus the shared
+/// selection / verification / probability scratch every hot-path kernel
+/// writes into.
+#[derive(Debug, Default)]
+pub struct RoundScratch {
+    /// Recycled log-distribution buffers, handed out by
+    /// [`RoundScratch::process_into`] and returned by
+    /// [`RoundScratch::recycle`].
+    lp_pool: Vec<Vec<f64>>,
+    /// Nucleus partial-selection index scratch.
+    pub sel: SelectScratch,
+    /// Verification-rule probability scratch (q / p / residual).
+    pub verify: VerifyScratch,
+    /// Generic probability buffer (bonus-token sampling).
+    pub probs: Vec<f64>,
+    /// Verification-walk sibling candidates.
+    cands: Vec<(usize, u32)>,
+    /// Verification-walk sibling tokens.
+    tokens: Vec<u32>,
+}
+
+impl RoundScratch {
+    /// Process raw logits into a pooled [`LogProbs`] (allocation-free
+    /// once the pool is warm). Return it with [`RoundScratch::recycle`].
+    pub fn process_into(&mut self, logits: &[f32], temperature: f32, top_p: f32) -> LogProbs {
+        let mut buf = self.lp_pool.pop().unwrap_or_default();
+        process_logits_into(logits, temperature, top_p, &mut self.sel, &mut buf);
+        LogProbs(buf)
+    }
+
+    /// Return a pooled distribution's buffer to the arena.
+    pub fn recycle(&mut self, lp: LogProbs) {
+        let mut v = lp.0;
+        v.clear();
+        self.lp_pool.push(v);
+    }
+}
+
 /// Walk result of [`verify_tree`].
-#[derive(Debug)]
+#[derive(Debug, Default)]
 pub struct VerifyResult {
     /// Accepted node ids, root-ward order.
     pub accepted: Vec<usize>,
@@ -147,7 +213,7 @@ pub struct VerifyResult {
 
 /// What one speculative round observed — the telemetry consumed by the
 /// adaptive controller ([`crate::adaptive`]) and the serving metrics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct RoundReport {
     /// Per walked level: (candidates examined, accepted 0/1).
     pub level_trials: Vec<(usize, usize)>,
@@ -163,7 +229,7 @@ pub struct RoundReport {
 /// the rule over the accepted parent's ordered children; on rejection the
 /// rule's residual sample ends the round; if the walk leaves the tree a
 /// bonus token is drawn from the target distribution at the last accepted
-/// context.
+/// context. Allocating wrapper over [`verify_tree_into`].
 pub fn verify_tree(
     tree: &DraftTree,
     rule: &dyn VerifyRule,
@@ -171,15 +237,33 @@ pub fn verify_tree(
     node_target_lp: &[LogProbs],
     rng: &mut Rng,
 ) -> VerifyResult {
+    let mut scratch = RoundScratch::default();
+    let mut out = VerifyResult::default();
+    verify_tree_into(tree, rule, root_target_lp, node_target_lp, rng, &mut scratch, &mut out);
+    out
+}
+
+/// [`verify_tree`] into caller-owned scratch and result buffers — the
+/// allocation-free verification chain the stepper runs every round.
+pub fn verify_tree_into(
+    tree: &DraftTree,
+    rule: &dyn VerifyRule,
+    root_target_lp: &LogProbs,
+    node_target_lp: &[LogProbs],
+    rng: &mut Rng,
+    scratch: &mut RoundScratch,
+    out: &mut VerifyResult,
+) {
+    out.accepted.clear();
+    out.level_trials.clear();
     let mut cur: Option<usize> = None;
-    let mut accepted = Vec::new();
-    let mut level_trials = Vec::new();
     for level in 0..tree.levels.len() {
-        let cands = tree.sibling_candidates(level, cur);
-        if cands.is_empty() {
+        tree.sibling_candidates_into(level, cur, &mut scratch.cands);
+        if scratch.cands.is_empty() {
             break; // branch truncated (RSD-S early truncation)
         }
-        let tokens: Vec<u32> = cands.iter().map(|&(_, t)| t).collect();
+        scratch.tokens.clear();
+        scratch.tokens.extend(scratch.cands.iter().map(|&(_, t)| t));
         let draft_lp = match cur {
             None => &tree.root_draft_lp,
             Some(id) => tree.nodes[id]
@@ -191,17 +275,19 @@ pub fn verify_tree(
             None => root_target_lp,
             Some(id) => &node_target_lp[id],
         };
-        match rule.verify(&tokens, draft_lp, target_lp, rng) {
+        match rule.verify_with(&scratch.tokens, draft_lp, target_lp, &mut scratch.verify, rng) {
             LevelOutcome::Accept { pos } => {
                 // `pos` earlier siblings were each rejected before this one
-                level_trials.push((pos + 1, 1));
-                let id = cands[pos].0;
-                accepted.push(id);
+                out.level_trials.push((pos + 1, 1));
+                let id = scratch.cands[pos].0;
+                out.accepted.push(id);
                 cur = Some(id);
             }
             LevelOutcome::Reject { token } => {
-                level_trials.push((tokens.len(), 0));
-                return VerifyResult { accepted, final_token: token, bonus: false, level_trials };
+                out.level_trials.push((scratch.tokens.len(), 0));
+                out.final_token = token;
+                out.bonus = false;
+                return;
             }
         }
     }
@@ -210,22 +296,20 @@ pub fn verify_tree(
         None => root_target_lp,
         Some(id) => &node_target_lp[id],
     };
-    let token = sample_categorical(&lp.probs(), rng) as u32;
-    VerifyResult { accepted, final_token: token, bonus: true, level_trials }
+    lp.probs_into(&mut scratch.probs);
+    out.final_token = sample_categorical(&scratch.probs, rng) as u32;
+    out.bonus = true;
 }
 
-fn chain_nodes(tokens: &[u32]) -> Vec<EvalNode> {
-    tokens
-        .iter()
-        .enumerate()
-        .map(|(i, &t)| {
-            if i == 0 {
-                EvalNode::root(t)
-            } else {
-                EvalNode { token: t, parent: i as i64 - 1 }
-            }
-        })
-        .collect()
+fn chain_nodes_into(tokens: &[u32], out: &mut Vec<EvalNode>) {
+    out.clear();
+    out.extend(tokens.iter().enumerate().map(|(i, &t)| {
+        if i == 0 {
+            EvalNode::root(t)
+        } else {
+            EvalNode { token: t, parent: i as i64 - 1 }
+        }
+    }));
 }
 
 /// What one [`SpecStepper::step`] produced.
@@ -261,7 +345,8 @@ enum Phase {
     AwaitTarget { nodes: Vec<EvalNode> },
 }
 
-/// Per-round working state carried across phases.
+/// Per-round working state carried across phases. Recycled whole (tree
+/// buffers, pooled level vectors) between rounds via `SpecStepper::spare`.
 struct RoundCtx {
     tree: DraftTree,
     /// `strategy.depth()` captured at round start.
@@ -270,6 +355,12 @@ struct RoundCtx {
     dtail_len: usize,
     /// Next free index in the draft session's pending list.
     draft_pending_count: usize,
+}
+
+impl RoundCtx {
+    fn empty() -> Self {
+        Self { tree: DraftTree::default(), depth: 0, dtail_len: 0, draft_pending_count: 0 }
+    }
 }
 
 /// Resumable speculative decoding session over a (target, draft) pair.
@@ -287,11 +378,36 @@ pub struct SpecStepper<T: Llm, D: Llm> {
     tail_target: Vec<u32>,
     phase: Phase,
     round: Option<RoundCtx>,
+    /// Recycled round context from the previous round (warm tree bufs).
+    spare: Option<RoundCtx>,
+    /// The per-request scratch arena (LogProbs pool + kernel scratch).
+    scratch: RoundScratch,
+    /// Pooled `EvalNode` vectors cycled through the phases.
+    node_pool: Vec<Vec<EvalNode>>,
+    /// Pooled per-level node-id vectors for the tree.
+    level_pool: Vec<Vec<usize>>,
+    /// Strategy expansion output, reused each level.
+    children: Vec<Child>,
+    /// Reusable verification-walk result.
+    vr: VerifyResult,
+    /// Reusable per-node target distributions (pooled buffers inside).
+    node_target_lp: Vec<LogProbs>,
+    /// Reusable emission staging for one round.
+    emit: Vec<u32>,
+    /// Reusable commit chains.
+    tchain: Vec<usize>,
+    dchain: Vec<usize>,
+    /// Reusable accepted-but-uncached token staging (becomes next
+    /// round's `tail_draft` by swap).
+    uncached: Vec<u32>,
+    /// Flat logits buffer for the single-request `step` path.
+    logits: LogitsBatch,
+    /// Telemetry of the most recent round (reused buffer; valid when
+    /// `has_report`).
+    report: RoundReport,
+    has_report: bool,
     pub out: Vec<u32>,
     pub stats: DecodeStats,
-    /// Telemetry of the most recent round; `None` when the last round
-    /// did not run (finished / capacity-stopped).
-    last_round: Option<RoundReport>,
     max_new: usize,
     started: Instant,
     done: bool,
@@ -310,19 +426,54 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         if prompt.is_empty() {
             bail!("prompt must be non-empty");
         }
+        // pre-size every per-round growth vector so the steady-state
+        // round never reallocates (the zero-allocation contract the
+        // hot-path bench enforces); reserves are clamped for huge
+        // max_new values
+        let max_nodes = strategy.max_nodes().max(1);
+        let depth = strategy.depth().max(1);
+        let reserve_rounds = max_new.min(1 << 20);
+        let out = Vec::with_capacity(reserve_rounds + max_nodes + 2);
+        let mut stats = DecodeStats::default();
+        stats.round_nodes.reserve(reserve_rounds + 1);
+        stats.level_attempts.reserve(depth);
+        stats.level_accepts.reserve(depth);
+        let mut vr = VerifyResult::default();
+        vr.accepted.reserve(depth);
+        vr.level_trials.reserve(depth);
+        let mut report = RoundReport::default();
+        report.level_trials.reserve(depth);
+        let tail_cap = prompt.len() + max_nodes + 2;
+        let mut tail_draft = Vec::with_capacity(tail_cap);
+        tail_draft.extend_from_slice(prompt);
+        let mut tail_target = Vec::with_capacity(tail_cap);
+        tail_target.extend_from_slice(prompt);
         Ok(Self {
             strategy,
             rule,
             sampling,
             dsess: draft.begin()?,
             tsess: target.begin()?,
-            tail_draft: prompt.to_vec(),
-            tail_target: prompt.to_vec(),
+            tail_draft,
+            tail_target,
             phase: Phase::Idle,
             round: None,
-            out: Vec::new(),
-            stats: DecodeStats::default(),
-            last_round: None,
+            spare: None,
+            scratch: RoundScratch::default(),
+            node_pool: Vec::new(),
+            level_pool: Vec::new(),
+            children: Vec::with_capacity(max_nodes),
+            vr,
+            node_target_lp: Vec::with_capacity(max_nodes),
+            emit: Vec::with_capacity(max_nodes + 2),
+            tchain: Vec::with_capacity(tail_cap),
+            dchain: Vec::with_capacity(tail_cap),
+            uncached: Vec::with_capacity(tail_cap),
+            logits: LogitsBatch::default(),
+            report,
+            has_report: false,
+            out,
+            stats,
             max_new,
             started: Instant::now(),
             done: false,
@@ -335,7 +486,11 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
 
     /// Telemetry of the most recent completed round.
     pub fn last_round(&self) -> Option<&RoundReport> {
-        self.last_round.as_ref()
+        if self.has_report {
+            Some(&self.report)
+        } else {
+            None
+        }
     }
 
     /// Swap the tree strategy before the next round (adaptive tree
@@ -360,7 +515,7 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
     /// no phase work exists.
     pub fn begin_round(&mut self, target: &T, draft: &D) -> Result<RoundStart> {
         debug_assert!(matches!(self.phase, Phase::Idle), "begin_round mid-round");
-        self.last_round = None;
+        self.has_report = false;
         if self.done {
             return Ok(RoundStart::Finished);
         }
@@ -376,7 +531,8 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             self.finish();
             return Ok(RoundStart::Finished);
         }
-        let nodes = chain_nodes(&self.tail_draft);
+        let mut nodes = self.node_pool.pop().unwrap_or_default();
+        chain_nodes_into(&self.tail_draft, &mut nodes);
         self.phase = Phase::AwaitDraft { nodes, level: None };
         Ok(RoundStart::Started)
     }
@@ -393,7 +549,7 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
     /// Consume the draft rows for the staged nodes and grow the tree
     /// until the next draft evaluation is needed (another `draft_group`)
     /// or the tree is complete (`target_group` becomes available).
-    pub fn feed_draft(&mut self, rows: Vec<Vec<f32>>, rng: &mut Rng) -> Result<()> {
+    pub fn feed_draft(&mut self, rows: LogitsView<'_>, rng: &mut Rng) -> Result<()> {
         let phase = mem::replace(&mut self.phase, Phase::Idle);
         let Phase::AwaitDraft { nodes, level } = phase else {
             bail!("feed_draft outside the draft phase");
@@ -407,32 +563,31 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             None => {
                 // tail chain: the last row is the root draft distribution
                 let root_draft_lp =
-                    process_logits(rows.last().expect("tail non-empty"), temp, top_p);
-                self.round = Some(RoundCtx {
-                    tree: DraftTree {
-                        nodes: Vec::new(),
-                        levels: Vec::new(),
-                        root_draft_lp,
-                    },
-                    depth: self.strategy.depth(),
-                    dtail_len: nodes.len(),
-                    draft_pending_count: nodes.len(),
-                });
+                    self.scratch.process_into(rows.last().expect("tail non-empty"), temp, top_p);
+                let mut ctx = self.spare.take().unwrap_or_else(RoundCtx::empty);
+                debug_assert!(ctx.tree.nodes.is_empty() && ctx.tree.levels.is_empty());
+                ctx.tree.root_draft_lp = root_draft_lp;
+                ctx.depth = self.strategy.depth();
+                ctx.dtail_len = nodes.len();
+                ctx.draft_pending_count = nodes.len();
+                self.round = Some(ctx);
                 self.strategy.begin_round();
                 0
             }
             Some(level) => {
                 let ctx = self.round.as_mut().context("feed_draft without a round")?;
-                let created = &ctx.tree.levels[level];
-                for (i, &id) in created.iter().enumerate() {
+                for (i, &id) in ctx.tree.levels[level].iter().enumerate() {
                     ctx.tree.nodes[id].draft_pending = Some(ctx.draft_pending_count + i);
                     ctx.tree.nodes[id].draft_lp =
-                        Some(process_logits(&rows[i], temp, top_p));
+                        Some(self.scratch.process_into(rows.row(i), temp, top_p));
                 }
                 ctx.draft_pending_count += ctx.tree.levels[level].len();
                 level + 1
             }
         };
+        let mut nodes = nodes;
+        nodes.clear();
+        self.node_pool.push(nodes);
         self.advance_draft(next_level, rng);
         Ok(())
     }
@@ -446,14 +601,16 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             if level >= ctx.depth {
                 break;
             }
-            let children = self.strategy.expand(&ctx.tree, level, rng);
-            if children.is_empty() {
+            self.children.clear();
+            self.strategy.expand(&ctx.tree, level, rng, &mut self.children);
+            if self.children.is_empty() {
                 break;
             }
             // merge duplicates (same parent + token): i.i.d. strategies
             // produce them; without-replacement strategies cannot.
-            let mut created: Vec<usize> = Vec::new();
-            for c in &children {
+            let mut created = self.level_pool.pop().unwrap_or_default();
+            created.clear();
+            for c in &self.children {
                 if let Some(&id) = created.iter().find(|&&id| {
                     ctx.tree.nodes[id].parent == c.parent && ctx.tree.nodes[id].token == c.token
                 }) {
@@ -471,26 +628,25 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
                 });
                 created.push(id);
             }
-            ctx.tree.levels.push(created.clone());
-            self.strategy.on_created(&ctx.tree, level, &created);
+            ctx.tree.levels.push(created);
+            self.strategy.on_created(&ctx.tree, level, &ctx.tree.levels[level]);
 
             // evaluate this level with the draft model unless it is the
             // leaf level (leaf distributions are never used for drafting)
             if level + 1 < ctx.depth {
                 let dtail_len = ctx.dtail_len;
-                let nodes: Vec<EvalNode> = created
-                    .iter()
-                    .map(|&id| {
-                        let parent_pending = match ctx.tree.nodes[id].parent {
-                            None => dtail_len as i64 - 1,
-                            Some(p) => ctx.tree.nodes[p]
-                                .draft_pending
-                                .expect("parent evaluated at previous level")
-                                as i64,
-                        };
-                        EvalNode { token: ctx.tree.nodes[id].token, parent: parent_pending }
-                    })
-                    .collect();
+                let mut nodes = self.node_pool.pop().unwrap_or_default();
+                nodes.clear();
+                nodes.extend(ctx.tree.levels[level].iter().map(|&id| {
+                    let parent_pending = match ctx.tree.nodes[id].parent {
+                        None => dtail_len as i64 - 1,
+                        Some(p) => ctx.tree.nodes[p]
+                            .draft_pending
+                            .expect("parent evaluated at previous level")
+                            as i64,
+                    };
+                    EvalNode { token: ctx.tree.nodes[id].token, parent: parent_pending }
+                }));
                 self.phase = Phase::AwaitDraft { nodes, level: Some(level) };
                 return;
             }
@@ -504,7 +660,8 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
     fn stage_target(&mut self) {
         let ctx = self.round.as_ref().expect("round in progress");
         let ttail_len = self.tail_target.len();
-        let mut tnodes = chain_nodes(&self.tail_target);
+        let mut tnodes = self.node_pool.pop().unwrap_or_default();
+        chain_nodes_into(&self.tail_target, &mut tnodes);
         for (id, n) in ctx.tree.nodes.iter().enumerate() {
             let parent = match n.parent {
                 None => (ttail_len - 1) as i64,
@@ -533,43 +690,65 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         &mut self,
         target: &T,
         draft: &D,
-        rows: Vec<Vec<f32>>,
+        rows: LogitsView<'_>,
         rng: &mut Rng,
     ) -> Result<StepOutcome> {
         let phase = mem::replace(&mut self.phase, Phase::Idle);
         let Phase::AwaitTarget { nodes } = phase else {
             bail!("feed_target outside the verify phase");
         };
-        let ctx = self.round.take().context("feed_target without a round")?;
+        let mut ctx = self.round.take().context("feed_target without a round")?;
         let dtail_len = ctx.dtail_len;
-        let tree = ctx.tree;
         let ttail_len = self.tail_target.len();
         if rows.len() != nodes.len() {
             bail!("feed_target: {} rows for {} staged nodes", rows.len(), nodes.len());
         }
-        debug_assert_eq!(nodes.len(), ttail_len + tree.nodes.len());
+        debug_assert_eq!(nodes.len(), ttail_len + ctx.tree.nodes.len());
+        {
+            let mut nodes = nodes;
+            nodes.clear();
+            self.node_pool.push(nodes);
+        }
         let (temp, top_p) = (self.sampling.temperature, self.sampling.top_p);
         self.stats.decode_calls += 1;
-        self.stats.tree_nodes += tree.nodes.len();
-        let root_target_lp = process_logits(&rows[ttail_len - 1], temp, top_p);
-        let node_target_lp: Vec<LogProbs> =
-            rows[ttail_len..].iter().map(|r| process_logits(r, temp, top_p)).collect();
+        self.stats.tree_nodes += ctx.tree.nodes.len();
+        let root_target_lp = self.scratch.process_into(rows.row(ttail_len - 1), temp, top_p);
+        // normally a no-op (drained when the round closed); after a
+        // mid-round commit error the stale distributions must not shift
+        // this round's node indexing
+        for lp in self.node_target_lp.drain(..) {
+            self.scratch.recycle(lp);
+        }
+        for r in ttail_len..rows.len() {
+            let lp = self.scratch.process_into(rows.row(r), temp, top_p);
+            self.node_target_lp.push(lp);
+        }
 
         // ---- verification (recursive rejection sampling per level) -------
-        let vr = verify_tree(&tree, self.rule.as_ref(), &root_target_lp, &node_target_lp, rng);
+        let mut vr = mem::take(&mut self.vr);
+        verify_tree_into(
+            &ctx.tree,
+            self.rule.as_ref(),
+            &root_target_lp,
+            &self.node_target_lp,
+            rng,
+            &mut self.scratch,
+            &mut vr,
+        );
 
         // ---- stop-token truncation ---------------------------------------
         // This round's emission is the accepted draft tokens plus the
         // final (residual or bonus) token; the first stop token ends the
         // request, is not emitted, and drops everything after it.
-        let mut emit: Vec<u32> = vr.accepted.iter().map(|&id| tree.nodes[id].token).collect();
-        emit.push(vr.final_token);
+        self.emit.clear();
+        self.emit.extend(vr.accepted.iter().map(|&id| ctx.tree.nodes[id].token));
+        self.emit.push(vr.final_token);
         let cut = if self.sampling.stop.is_empty() {
             None
         } else {
-            emit.iter().position(|&t| self.sampling.is_stop(t))
+            self.emit.iter().position(|&t| self.sampling.is_stop(t))
         };
-        let kept = cut.unwrap_or(emit.len());
+        let kept = cut.unwrap_or(self.emit.len());
         // effective counts keep stats consistent with the truncated
         // stream: dropped tokens contribute neither to acceptance counts
         // nor to per-level trial telemetry (level k's trial produced
@@ -577,16 +756,15 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         // dropped final token is cut as well)
         let eff_accepted = vr.accepted.len().min(kept);
         let eff_bonus = vr.bonus && cut.is_none();
-        let mut level_trials = vr.level_trials;
         if cut.is_some() {
-            level_trials.truncate(eff_accepted);
+            vr.level_trials.truncate(eff_accepted);
         }
 
         self.stats.accepted_draft_tokens += eff_accepted;
         if eff_bonus {
             self.stats.bonus_tokens += 1;
         }
-        for (lvl, &(_, success)) in level_trials.iter().enumerate() {
+        for (lvl, &(_, success)) in vr.level_trials.iter().enumerate() {
             if self.stats.level_attempts.len() <= lvl {
                 self.stats.level_attempts.resize(lvl + 1, 0);
                 self.stats.level_accepts.resize(lvl + 1, 0);
@@ -594,40 +772,63 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             self.stats.level_attempts[lvl] += 1;
             self.stats.level_accepts[lvl] += success as u64;
         }
-        self.stats.round_nodes.push(tree.nodes.len() as u32);
-        self.last_round = Some(RoundReport {
-            level_trials,
-            nodes: tree.nodes.len(),
-            accepted: eff_accepted,
-            bonus: eff_bonus,
-        });
+        self.stats.round_nodes.push(ctx.tree.nodes.len() as u32);
+        self.report.level_trials.clear();
+        self.report.level_trials.extend_from_slice(&vr.level_trials);
+        self.report.nodes = ctx.tree.nodes.len();
+        self.report.accepted = eff_accepted;
+        self.report.bonus = eff_bonus;
+        self.has_report = true;
 
         // ---- zero-copy KV commit (FilterKVCache) --------------------------
-        let mut tchain: Vec<usize> = (0..ttail_len).collect();
-        tchain.extend(vr.accepted.iter().map(|&id| ttail_len + id));
-        target.commit(&mut self.tsess, &tchain)?;
+        self.tchain.clear();
+        self.tchain.extend(0..ttail_len);
+        self.tchain.extend(vr.accepted.iter().map(|&id| ttail_len + id));
+        target.commit(&mut self.tsess, &self.tchain)?;
 
-        let mut dchain: Vec<usize> = (0..dtail_len).collect();
-        let mut uncached: Vec<u32> = Vec::new();
+        self.dchain.clear();
+        self.dchain.extend(0..dtail_len);
+        self.uncached.clear();
         for &id in &vr.accepted {
-            match tree.nodes[id].draft_pending {
-                Some(p) if uncached.is_empty() => dchain.push(p),
-                _ => uncached.push(tree.nodes[id].token),
+            match ctx.tree.nodes[id].draft_pending {
+                Some(p) if self.uncached.is_empty() => self.dchain.push(p),
+                _ => self.uncached.push(ctx.tree.nodes[id].token),
             }
         }
-        draft.commit(&mut self.dsess, &dchain)?;
+        draft.commit(&mut self.dsess, &self.dchain)?;
+
+        let final_token = vr.final_token;
+
+        // ---- recycle round buffers ---------------------------------------
+        self.scratch.recycle(mem::take(&mut ctx.tree.root_draft_lp));
+        for n in ctx.tree.nodes.drain(..) {
+            if let Some(lp) = n.draft_lp {
+                self.scratch.recycle(lp);
+            }
+        }
+        for mut lvl in ctx.tree.levels.drain(..) {
+            lvl.clear();
+            self.level_pool.push(lvl);
+        }
+        for lp in self.node_target_lp.drain(..) {
+            self.scratch.recycle(lp);
+        }
+        self.scratch.recycle(root_target_lp);
+        self.vr = vr;
+        self.spare = Some(ctx);
 
         // ---- emit tokens ---------------------------------------------------
-        self.out.extend_from_slice(&emit[..kept]);
+        self.out.extend_from_slice(&self.emit[..kept]);
         if cut.is_some() {
             return Ok(self.finish());
         }
         // next round's per-session tails: the target already holds every
         // accepted node's KV (only the final token is new to it); the
         // draft additionally misses leaf-level accepts it never evaluated.
-        uncached.push(vr.final_token);
-        self.tail_draft = uncached;
-        self.tail_target = vec![vr.final_token];
+        self.uncached.push(final_token);
+        mem::swap(&mut self.tail_draft, &mut self.uncached);
+        self.tail_target.clear();
+        self.tail_target.push(final_token);
 
         if self.out.len() >= self.max_new {
             return Ok(self.finish());
@@ -638,23 +839,29 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
     /// Run one full speculative round (Figure 2 of the paper) by driving
     /// the phase machine with direct per-session model calls — the
     /// single-request path. The serving engine drives many steppers'
-    /// phases in lockstep instead and fuses the model calls.
+    /// phases in lockstep instead and fuses the model calls. The flat
+    /// logits buffer is owned by the stepper and recycled round to round.
     pub fn step(&mut self, target: &T, draft: &D, rng: &mut Rng) -> Result<StepOutcome> {
         if self.begin_round(target, draft)? == RoundStart::Finished {
             return Ok(StepOutcome::Done);
         }
+        let mut batch = mem::take(&mut self.logits);
         loop {
-            let rows = match self.draft_group() {
-                Some((sess, nodes)) => draft.eval(sess, nodes)?,
+            batch.reset(draft.vocab());
+            match self.draft_group() {
+                Some((sess, nodes)) => draft.eval_into(sess, nodes, &mut batch)?,
                 None => break,
-            };
-            self.feed_draft(rows, rng)?;
+            }
+            self.feed_draft(batch.full(), rng)?;
         }
-        let rows = match self.target_group() {
-            Some((sess, nodes)) => target.eval(sess, nodes)?,
+        batch.reset(target.vocab());
+        match self.target_group() {
+            Some((sess, nodes)) => target.eval_into(sess, nodes, &mut batch)?,
             None => bail!("round staged no target work"),
-        };
-        self.feed_target(target, draft, rows, rng)
+        }
+        let outcome = self.feed_target(target, draft, batch.full(), rng);
+        self.logits = batch;
+        outcome
     }
 }
 

@@ -7,9 +7,18 @@
 //! * [`StochasticBeam`] — RSD-S: Stochastic Beam Search over sequences
 //!   (paper Alg. 8/9, Kool et al. 2019), which samples *sequences*
 //!   without replacement and early-truncates unlikely branches.
+//!
+//! Every strategy owns its expansion scratch (perturbation buffers,
+//! selection heaps) and writes proposed children into the caller's
+//! buffer, so steady-state tree growth is allocation-free. Chain and
+//! IidPaths sample in log space (Gumbel-max) — no probability
+//! materialization per expand; RSD selection goes through the bounded
+//! partial-selection kernels of [`crate::sampling`].
 
-
-use crate::sampling::{gumbel, gumbel_top_k, sample_categorical, truncated_gumbel, LogProbs, NEG_INF};
+use crate::sampling::{
+    bounded_heap_offer, gumbel, gumbel_max, gumbel_top_k_into, truncated_gumbel_one, LogProbs,
+    NEG_INF,
+};
 use crate::util::Rng;
 
 use super::spec::{Child, DraftTree, TreeStrategy};
@@ -37,7 +46,7 @@ impl TreeStrategy for Chain {
 
     fn begin_round(&mut self) {}
 
-    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng, out: &mut Vec<Child>) {
         let parent = if level == 0 {
             None
         } else {
@@ -45,12 +54,13 @@ impl TreeStrategy for Chain {
             // panicking (possible when strategies are swapped mid-stream)
             match tree.levels.get(level - 1).and_then(|l| l.last()) {
                 Some(&id) => Some(id),
-                None => return Vec::new(),
+                None => return,
             }
         };
         let lp = parent_lp(tree, parent);
-        let token = sample_categorical(&lp.probs(), rng) as u32;
-        vec![Child { parent, token }]
+        if let Some(token) = gumbel_max(&lp.0, rng) {
+            out.push(Child { parent, token: token as u32 });
+        }
     }
 }
 
@@ -73,25 +83,23 @@ impl TreeStrategy for IidPaths {
 
     fn begin_round(&mut self) {}
 
-    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
-        let mut out = Vec::new();
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng, out: &mut Vec<Child>) {
         if level == 0 {
-            let probs = tree.root_draft_lp.probs();
             for _ in 0..self.k {
-                out.push(Child { parent: None, token: sample_categorical(&probs, rng) as u32 });
+                if let Some(t) = gumbel_max(&tree.root_draft_lp.0, rng) {
+                    out.push(Child { parent: None, token: t as u32 });
+                }
             }
         } else {
             for &id in &tree.levels[level - 1] {
-                let probs = parent_lp(tree, Some(id)).probs();
+                let lp = parent_lp(tree, Some(id));
                 for _ in 0..tree.nodes[id].mult {
-                    out.push(Child {
-                        parent: Some(id),
-                        token: sample_categorical(&probs, rng) as u32,
-                    });
+                    if let Some(t) = gumbel_max(&lp.0, rng) {
+                        out.push(Child { parent: Some(id), token: t as u32 });
+                    }
                 }
             }
         }
-        out
     }
 }
 
@@ -101,6 +109,14 @@ impl TreeStrategy for IidPaths {
 /// verification order required by recursive rejection sampling).
 pub struct GumbelTopK {
     pub branches: Vec<usize>,
+    /// Bounded-heap scratch for [`gumbel_top_k_into`], reused per parent.
+    topk: Vec<(usize, f64)>,
+}
+
+impl GumbelTopK {
+    pub fn new(branches: Vec<usize>) -> Self {
+        Self { branches, topk: Vec::new() }
+    }
 }
 
 impl TreeStrategy for GumbelTopK {
@@ -114,22 +130,35 @@ impl TreeStrategy for GumbelTopK {
 
     fn begin_round(&mut self) {}
 
-    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng, out: &mut Vec<Child>) {
         let b = self.branches[level];
-        let parents: Vec<Option<usize>> = if level == 0 {
-            vec![None]
+        if level == 0 {
+            gumbel_top_k_into(parent_lp(tree, None), b, rng, &mut self.topk);
+            for &(idx, _) in self.topk.iter() {
+                out.push(Child { parent: None, token: idx as u32 });
+            }
         } else {
-            tree.levels[level - 1].iter().map(|&id| Some(id)).collect()
-        };
-        let mut out = Vec::new();
-        for parent in parents {
-            let lp = parent_lp(tree, parent);
-            for (idx, _) in gumbel_top_k(lp, b, rng) {
-                out.push(Child { parent, token: idx as u32 });
+            for &id in &tree.levels[level - 1] {
+                gumbel_top_k_into(parent_lp(tree, Some(id)), b, rng, &mut self.topk);
+                for &(idx, _) in self.topk.iter() {
+                    out.push(Child { parent: Some(id), token: idx as u32 });
+                }
             }
         }
-        out
     }
+}
+
+/// One beam candidate held by the bounded top-W heap.
+#[derive(Debug, Clone, Copy)]
+struct BeamCand {
+    /// i64 encoding of `Option<usize>` (-1 = root) keeps the struct Copy.
+    parent: i64,
+    token: u32,
+    /// Candidate emission order — the tie-break that reproduces the
+    /// stable full-sort's ordering byte for byte.
+    order: u32,
+    phi: f64,
+    psi: f64,
 }
 
 /// RSD-S: Stochastic Beam Search with beamwidth W. Maintains per-node
@@ -153,6 +182,10 @@ pub struct StochasticBeam {
     /// (φ, ψ) of the candidates proposed by the last `expand`, in the
     /// same order, consumed by `on_created`.
     staged: Vec<(f64, f64)>,
+    /// Per-parent perturbed sequence log-probs φ~, reused across parents.
+    phi_tilde: Vec<f64>,
+    /// Bounded min-heap holding the current top-W candidates.
+    heap: Vec<BeamCand>,
 }
 
 impl StochasticBeam {
@@ -164,7 +197,67 @@ impl StochasticBeam {
     /// the per-level best sequence (the adaptive controller's setting).
     pub fn with_gap(w: usize, depth: usize, max_phi_gap: f64) -> Self {
         assert!(max_phi_gap >= 0.0, "phi gap must be non-negative");
-        Self { w, depth, max_phi_gap, state: Vec::new(), staged: Vec::new() }
+        Self {
+            w,
+            depth,
+            max_phi_gap,
+            state: Vec::new(),
+            staged: Vec::new(),
+            phi_tilde: Vec::new(),
+            heap: Vec::new(),
+        }
+    }
+
+    /// Worst-first ranking for the bounded heap: lower ψ is worse; equal
+    /// ψ (NaN-safe via `total_cmp`) breaks toward the LATER candidate,
+    /// reproducing the stable sort the full-sort selection used.
+    #[inline]
+    fn worse(a: &BeamCand, b: &BeamCand) -> bool {
+        match a.psi.total_cmp(&b.psi) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => a.order > b.order,
+        }
+    }
+
+    /// Stream one parent's children into the heap: draw the perturbed
+    /// sequence log-probs (one Gumbel per unfiltered token, ascending
+    /// index — the RNG order contract), condition them on the parent's
+    /// truncated value, and offer each candidate.
+    fn offer_parent(
+        &mut self,
+        lp: &LogProbs,
+        parent: Option<usize>,
+        phi_p: f64,
+        psi_p: f64,
+        order: &mut u32,
+        rng: &mut Rng,
+    ) {
+        let mut phi_tilde = std::mem::take(&mut self.phi_tilde);
+        phi_tilde.clear();
+        phi_tilde.extend(lp.0.iter().map(|&l| {
+            if l == NEG_INF {
+                NEG_INF
+            } else {
+                phi_p + l + gumbel(rng)
+            }
+        }));
+        let z = phi_tilde.iter().cloned().fold(NEG_INF, f64::max);
+        let parent_enc = parent.map_or(-1, |p| p as i64);
+        for (x, &g) in phi_tilde.iter().enumerate() {
+            let f = if lp.0[x] == NEG_INF { NEG_INF } else { phi_p + lp.0[x] };
+            let s = truncated_gumbel_one(psi_p, z, g);
+            // drop NaN φ/ψ (degenerate distributions) outright: the
+            // NaN-safe ranking would otherwise hand the beam to a broken
+            // branch
+            if f != NEG_INF && s != NEG_INF && !f.is_nan() && !s.is_nan() {
+                let cand =
+                    BeamCand { parent: parent_enc, token: x as u32, order: *order, phi: f, psi: s };
+                *order += 1;
+                bounded_heap_offer(&mut self.heap, self.w, cand, Self::worse);
+            }
+        }
+        self.phi_tilde = phi_tilde;
     }
 }
 
@@ -182,57 +275,36 @@ impl TreeStrategy for StochasticBeam {
         self.staged.clear();
     }
 
-    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
-        // beam = previous level's nodes (or the root)
-        let beam: Vec<(Option<usize>, f64, f64)> = if level == 0 {
-            vec![(None, 0.0, 0.0)] // φ_{-1} = ψ_{-1} = 0 (paper footnote 1)
+    fn expand(&mut self, tree: &DraftTree, level: usize, rng: &mut Rng, out: &mut Vec<Child>) {
+        self.heap.clear();
+        let mut order = 0u32;
+        if level == 0 {
+            // φ_{-1} = ψ_{-1} = 0 (paper footnote 1)
+            self.offer_parent(&tree.root_draft_lp, None, 0.0, 0.0, &mut order, rng);
         } else {
-            tree.levels[level - 1]
-                .iter()
-                .map(|&id| {
-                    let (phi, psi) = self.state[id];
-                    (Some(id), phi, psi)
-                })
-                .collect()
-        };
-
-        // candidates across the whole beam: (parent, token, φ_child, ψ_child)
-        let mut cands: Vec<(Option<usize>, u32, f64, f64)> = Vec::new();
-        for (parent, phi_p, psi_p) in beam {
-            let lp = parent_lp(tree, parent);
-            let phi_child: Vec<f64> =
-                lp.0.iter().map(|&l| if l == NEG_INF { NEG_INF } else { phi_p + l }).collect();
-            let phi_tilde: Vec<f64> = phi_child
-                .iter()
-                .map(|&f| if f == NEG_INF { NEG_INF } else { f + gumbel(rng) })
-                .collect();
-            let z = phi_tilde.iter().cloned().fold(NEG_INF, f64::max);
-            let psi = truncated_gumbel(psi_p, z, &phi_tilde);
-            for (x, (&f, &s)) in phi_child.iter().zip(&psi).enumerate() {
-                // drop NaN φ/ψ (degenerate distributions) outright: the
-                // NaN-safe sort below would rank +NaN above every real
-                // candidate, handing the beam to a broken branch
-                if f != NEG_INF && s != NEG_INF && !f.is_nan() && !s.is_nan() {
-                    cands.push((parent, x as u32, f, s));
-                }
+            for &id in &tree.levels[level - 1] {
+                let (phi, psi) = self.state[id];
+                let lp = parent_lp(tree, Some(id));
+                self.offer_parent(lp, Some(id), phi, psi, &mut order, rng);
             }
         }
-        // global top-W by ψ, decreasing (= verification order).
-        // total_cmp: NaN-safe — a NaN ψ (degenerate distribution) must
-        // not panic the serving engine mid-round.
-        cands.sort_by(|a, b| b.3.total_cmp(&a.3));
-        cands.truncate(self.w);
+        // global top-W by ψ, decreasing (= verification order); the
+        // order tie-break reproduces the stable sort exactly.
+        let mut heap = std::mem::take(&mut self.heap);
+        heap.sort_unstable_by(|a, b| b.psi.total_cmp(&a.psi).then(a.order.cmp(&b.order)));
         // early truncation: drop branches whose sequence mass collapsed
         // relative to the level's best (the φ-max candidate always stays)
-        if self.max_phi_gap.is_finite() && !cands.is_empty() {
-            let best_phi = cands.iter().map(|c| c.2).fold(NEG_INF, f64::max);
-            cands.retain(|c| c.2 >= best_phi - self.max_phi_gap);
+        if self.max_phi_gap.is_finite() && !heap.is_empty() {
+            let best_phi = heap.iter().map(|c| c.phi).fold(NEG_INF, f64::max);
+            heap.retain(|c| c.phi >= best_phi - self.max_phi_gap);
         }
-        self.staged = cands.iter().map(|&(_, _, f, s)| (f, s)).collect();
-        cands
-            .into_iter()
-            .map(|(parent, token, _, _)| Child { parent, token })
-            .collect()
+        self.staged.clear();
+        self.staged.extend(heap.iter().map(|c| (c.phi, c.psi)));
+        out.extend(heap.iter().map(|c| Child {
+            parent: if c.parent < 0 { None } else { Some(c.parent as usize) },
+            token: c.token,
+        }));
+        self.heap = heap;
     }
 
     fn on_created(&mut self, _tree: &DraftTree, _level: usize, node_ids: &[usize]) {
@@ -261,23 +333,80 @@ mod tests {
         }
     }
 
+    fn expand(s: &mut dyn TreeStrategy, t: &DraftTree, level: usize, rng: &mut Rng) -> Vec<Child> {
+        let mut out = Vec::new();
+        s.expand(t, level, rng, &mut out);
+        out
+    }
+
     #[test]
     fn chain_proposes_single_path() {
         let t = tree_with_root(&[0.0, 1.0, 2.0]);
         let mut s = Chain { depth: 3 };
         let mut rng = Rng::seed_from_u64(0);
-        let c = s.expand(&t, 0, &mut rng);
+        let c = expand(&mut s, &t, 0, &mut rng);
         assert_eq!(c.len(), 1);
         assert_eq!(c[0].parent, None);
+    }
+
+    /// SATELLITE: the log-space Gumbel-max expand samples from the
+    /// parent categorical (distribution equivalence with the dropped
+    /// probs() materialization path).
+    #[test]
+    fn chain_expand_matches_parent_distribution() {
+        let probs = [0.5, 0.05, 0.25, 0.2];
+        let logits: Vec<f32> = probs.iter().map(|p| (*p as f32).ln()).collect();
+        let t = tree_with_root(&logits);
+        let mut s = Chain { depth: 1 };
+        let mut rng = Rng::seed_from_u64(9);
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            let c = expand(&mut s, &t, 0, &mut rng);
+            counts[c[0].token as usize] += 1;
+        }
+        for i in 0..4 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!((emp - probs[i]).abs() < 0.005, "{i}: {emp} vs {}", probs[i]);
+        }
+    }
+
+    /// SATELLITE: i.i.d. path expansion stays i.i.d. under Gumbel-max —
+    /// each of the K root draws follows the categorical independently.
+    #[test]
+    fn iid_expand_matches_parent_distribution() {
+        let probs = [0.4, 0.1, 0.2, 0.3];
+        let logits: Vec<f32> = probs.iter().map(|p| (*p as f32).ln()).collect();
+        let t = tree_with_root(&logits);
+        let mut s = IidPaths { k: 3, depth: 2 };
+        let mut rng = Rng::seed_from_u64(17);
+        let n = 100_000;
+        let mut counts = [0usize; 4];
+        let mut pairs = std::collections::HashMap::new();
+        for _ in 0..n {
+            let c = expand(&mut s, &t, 0, &mut rng);
+            assert_eq!(c.len(), 3);
+            for ch in &c {
+                counts[ch.token as usize] += 1;
+            }
+            *pairs.entry((c[0].token, c[1].token)).or_insert(0usize) += 1;
+        }
+        for i in 0..4 {
+            let emp = counts[i] as f64 / (3 * n) as f64;
+            assert!((emp - probs[i]).abs() < 0.005, "{i}: {emp} vs {}", probs[i]);
+        }
+        // independence spot check: P(first = a, second = a) = p_a^2
+        let emp = *pairs.get(&(0, 0)).unwrap_or(&0) as f64 / n as f64;
+        assert!((emp - probs[0] * probs[0]).abs() < 0.01, "{emp}");
     }
 
     #[test]
     fn gumbel_topk_children_distinct_per_parent() {
         let t = tree_with_root(&[0.0, 0.5, 1.0, 1.5]);
-        let mut s = GumbelTopK { branches: vec![3] };
+        let mut s = GumbelTopK::new(vec![3]);
         let mut rng = Rng::seed_from_u64(1);
         for _ in 0..100 {
-            let c = s.expand(&t, 0, &mut rng);
+            let c = expand(&mut s, &t, 0, &mut rng);
             assert_eq!(c.len(), 3);
             let mut toks: Vec<u32> = c.iter().map(|x| x.token).collect();
             toks.sort();
@@ -292,7 +421,8 @@ mod tests {
         let mut s = StochasticBeam::new(3, 2);
         s.begin_round();
         let mut rng = Rng::seed_from_u64(2);
-        let c = s.expand(&t, 0, &mut rng);
+        let mut c = Vec::new();
+        s.expand(&t, 0, &mut rng, &mut c);
         assert_eq!(c.len(), 3);
         // staged psi decreasing
         assert!(s.staged.windows(2).all(|w| w[0].1 >= w[1].1));
@@ -311,12 +441,12 @@ mod tests {
         let mut rng = Rng::seed_from_u64(3);
         let mut full = StochasticBeam::new(3, 2);
         full.begin_round();
-        assert_eq!(full.expand(&t, 0, &mut rng).len(), 3, "infinite gap keeps the beam");
+        assert_eq!(expand(&mut full, &t, 0, &mut rng).len(), 3, "infinite gap keeps the beam");
         // gap 0: only candidates tied with the best sequence log-prob
         // survive — at least one always does
         let mut tight = StochasticBeam::with_gap(3, 2, 0.0);
         tight.begin_round();
-        let c = tight.expand(&t, 0, &mut rng);
+        let c = expand(&mut tight, &t, 0, &mut rng);
         assert!(!c.is_empty() && c.len() <= 3);
     }
 
@@ -324,7 +454,7 @@ mod tests {
     fn max_nodes_matches_budget_definitions() {
         assert_eq!(Chain { depth: 4 }.max_nodes(), 4);
         assert_eq!(IidPaths { k: 3, depth: 7 }.max_nodes(), 21);
-        assert_eq!(GumbelTopK { branches: vec![2, 2, 2] }.max_nodes(), 14);
+        assert_eq!(GumbelTopK::new(vec![2, 2, 2]).max_nodes(), 14);
         assert_eq!(StochasticBeam::new(6, 5).max_nodes(), 30);
     }
 }

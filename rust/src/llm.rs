@@ -6,6 +6,12 @@
 //! discrepancy, used for fast controlled sweeps and property tests).
 //! Decoders are generic over this trait, so every algorithm is exercised
 //! identically on both substrates.
+//!
+//! Logits travel in a [`LogitsBatch`]: one flat caller-owned `Vec<f32>`
+//! holding every row of a call contiguously, recycled across rounds —
+//! the steady-state decode path never allocates a per-row vector (see
+//! `rust/README.md` §Hot path). The boxed `Vec<Vec<f32>>` forms survive
+//! only as convenience wrappers for tests and examples.
 
 use anyhow::Result;
 
@@ -32,6 +38,110 @@ impl EvalNode {
     }
 }
 
+/// A flat, reusable batch of logits rows: one contiguous buffer, all
+/// rows `width` (= vocab) wide. Caller-owned and recycled — `reset`
+/// keeps the capacity, so a warm buffer makes every eval call
+/// allocation-free. Rows are appended by the `Llm` implementation in
+/// node order (and, for fused calls, group-major: group 0's rows, then
+/// group 1's, ...).
+#[derive(Debug, Clone, Default)]
+pub struct LogitsBatch {
+    data: Vec<f32>,
+    width: usize,
+}
+
+impl LogitsBatch {
+    /// Drop all rows and fix the row width, keeping capacity.
+    pub fn reset(&mut self, width: usize) {
+        self.data.clear();
+        self.width = width;
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn rows(&self) -> usize {
+        if self.width == 0 {
+            return 0;
+        }
+        debug_assert_eq!(self.data.len() % self.width, 0);
+        self.data.len() / self.width
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Append one zero-filled row and return it for in-place writing.
+    pub fn push_row(&mut self) -> &mut [f32] {
+        debug_assert!(self.width > 0, "reset() with the vocab width first");
+        let at = self.data.len();
+        self.data.resize(at + self.width, 0.0);
+        &mut self.data[at..]
+    }
+
+    /// Append a row copied from a slice (must be `width` long).
+    pub fn push_row_from(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.width);
+        self.data.extend_from_slice(row);
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Borrow a contiguous row range (e.g. one fused group's rows).
+    pub fn view(&self, rows: std::ops::Range<usize>) -> LogitsView<'_> {
+        let span = rows.start * self.width..rows.end * self.width;
+        LogitsView { data: &self.data[span], width: self.width }
+    }
+
+    /// Borrow every row.
+    pub fn full(&self) -> LogitsView<'_> {
+        LogitsView { data: &self.data, width: self.width }
+    }
+
+    /// Copy out as boxed rows (compat / tests only — allocates).
+    pub fn to_rows(&self) -> Vec<Vec<f32>> {
+        (0..self.rows()).map(|i| self.row(i).to_vec()).collect()
+    }
+}
+
+/// A borrowed view of consecutive rows in a [`LogitsBatch`].
+#[derive(Debug, Clone, Copy)]
+pub struct LogitsView<'a> {
+    data: &'a [f32],
+    width: usize,
+}
+
+impl<'a> LogitsView<'a> {
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        if self.width == 0 {
+            return 0;
+        }
+        self.data.len() / self.width
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    pub fn last(&self) -> Option<&'a [f32]> {
+        let n = self.len();
+        if n == 0 {
+            None
+        } else {
+            Some(self.row(n - 1))
+        }
+    }
+}
+
 /// A language model with tree-structured incremental evaluation.
 pub trait Llm {
     type Session;
@@ -45,16 +155,34 @@ pub trait Llm {
     fn begin(&self) -> Result<Self::Session>;
 
     /// Evaluate `nodes`, appending them to the session's pending set, and
-    /// return one raw-logits row per node (next-token logits given the
-    /// node's full path context). Parents must reference earlier pending
-    /// nodes (from this or previous `eval` calls since the last commit).
-    fn eval(&self, session: &mut Self::Session, nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>>;
+    /// APPEND one raw-logits row per node to `out` (next-token logits
+    /// given the node's full path context). The caller owns `out` and
+    /// must have `reset` it to the model's vocab width; appending (not
+    /// resetting) is what lets the fused default below share one buffer
+    /// across groups. Parents must reference earlier pending nodes (from
+    /// this or previous eval calls since the last commit).
+    fn eval_into(
+        &self,
+        session: &mut Self::Session,
+        nodes: &[EvalNode],
+        out: &mut LogitsBatch,
+    ) -> Result<()>;
+
+    /// Boxed-rows convenience wrapper over [`Llm::eval_into`]
+    /// (allocates; tests/examples only).
+    fn eval(&self, session: &mut Self::Session, nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>> {
+        let mut batch = LogitsBatch::default();
+        batch.reset(self.vocab());
+        self.eval_into(session, nodes, &mut batch)?;
+        Ok(batch.to_rows())
+    }
 
     /// Evaluate many sessions' node sets in one fused forward pass: the
     /// cross-request batch dimension of the serving engine. `groups[i]`
     /// pairs a session with the nodes to append to it (exactly as one
-    /// [`Llm::eval`] call would); the result carries one row-set per
-    /// group, in order.
+    /// [`Llm::eval_into`] call would); rows are appended to `out`
+    /// group-major (group i's rows are contiguous, in group order), so
+    /// the caller slices per-group views from the node counts.
     ///
     /// The default implementation is the per-session fallback loop —
     /// semantically the fused path and the loop MUST be
@@ -67,13 +195,32 @@ pub trait Llm {
     /// pending nodes while their rows are lost; callers must treat every
     /// participating session as poisoned (the engine fails all
     /// participating requests).
+    fn eval_batch_into(
+        &self,
+        groups: &mut [(&mut Self::Session, &[EvalNode])],
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
+        for (session, nodes) in groups.iter_mut() {
+            self.eval_into(session, nodes, out)?;
+        }
+        Ok(())
+    }
+
+    /// Boxed-rows convenience wrapper over [`Llm::eval_batch_into`]
+    /// (allocates; tests only).
     fn eval_batch(
         &self,
         groups: &mut [(&mut Self::Session, &[EvalNode])],
     ) -> Result<Vec<Vec<Vec<f32>>>> {
-        let mut out = Vec::with_capacity(groups.len());
-        for (session, nodes) in groups.iter_mut() {
-            out.push(self.eval(session, nodes)?);
+        let counts: Vec<usize> = groups.iter().map(|(_, nodes)| nodes.len()).collect();
+        let mut batch = LogitsBatch::default();
+        batch.reset(self.vocab());
+        self.eval_batch_into(groups, &mut batch)?;
+        let mut out = Vec::with_capacity(counts.len());
+        let mut row = 0;
+        for n in counts {
+            out.push((row..row + n).map(|r| batch.row(r).to_vec()).collect());
+            row += n;
         }
         Ok(out)
     }
@@ -90,4 +237,32 @@ pub trait Llm {
 
     /// How many more tokens (pending + committed) the session can hold.
     fn capacity_left(&self, session: &Self::Session) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_batch_rows_and_views() {
+        let mut b = LogitsBatch::default();
+        b.reset(3);
+        assert_eq!(b.rows(), 0);
+        b.push_row().copy_from_slice(&[1.0, 2.0, 3.0]);
+        b.push_row_from(&[4.0, 5.0, 6.0]);
+        b.push_row_from(&[7.0, 8.0, 9.0]);
+        assert_eq!(b.rows(), 3);
+        assert_eq!(b.row(1), &[4.0, 5.0, 6.0]);
+        let v = b.view(1..3);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.row(0), &[4.0, 5.0, 6.0]);
+        assert_eq!(v.last().unwrap(), &[7.0, 8.0, 9.0]);
+        assert_eq!(b.full().len(), 3);
+        assert_eq!(b.to_rows()[2], vec![7.0, 8.0, 9.0]);
+        // reset keeps capacity, drops rows
+        let cap = 9; // 3 rows x width 3 already in the buffer
+        b.reset(3);
+        assert_eq!(b.rows(), 0);
+        assert!(b.data.capacity() >= cap);
+    }
 }

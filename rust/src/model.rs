@@ -26,7 +26,7 @@ use anyhow::Context;
 
 #[cfg(pjrt_runtime)]
 use crate::config::{Manifest, ModelManifest};
-use crate::llm::{EvalNode, Llm};
+use crate::llm::{EvalNode, Llm, LogitsBatch};
 #[cfg(pjrt_runtime)]
 use crate::runtime::Executable;
 use crate::runtime::Runtime;
@@ -111,8 +111,14 @@ impl PjrtLm {
     }
 
     /// Execute one tile of up to `s_tile` pending nodes (already added to
-    /// the session core). Returns a logits row per node.
-    fn run_tile(&self, s: &mut PjrtSession, idxs: std::ops::Range<usize>) -> Result<Vec<Vec<f32>>> {
+    /// the session core), appending one logits row per node to `out` in
+    /// place (no per-row vectors).
+    fn run_tile(
+        &self,
+        s: &mut PjrtSession,
+        idxs: std::ops::Range<usize>,
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
         let (st, exe) = self.pick_exe(idxs.len());
         let m = self.man.cache_len;
         let v = self.man.vocab;
@@ -157,12 +163,16 @@ impl PjrtLm {
         s.kcache = outs.pop().unwrap();
         let logits = outs.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
         debug_assert_eq!(logits.len(), st * v);
-        Ok((0..n).map(|row| logits[row * v..(row + 1) * v].to_vec()).collect())
+        for row in 0..n {
+            out.push_row_from(&logits[row * v..(row + 1) * v]);
+        }
+        Ok(())
     }
 
     /// Fused cross-session execution: pack every group into ONE padded
     /// device call, one batch lane per session (the serving engine's
-    /// cross-request batch dimension).
+    /// cross-request batch dimension), appending each lane's rows to
+    /// `out` in group order.
     ///
     /// Contract (sketch — requires step executables AOT-compiled with
     /// `batch = B > 1`, which today's artifacts do not ship): operands
@@ -175,7 +185,8 @@ impl PjrtLm {
     fn run_packed(
         &self,
         groups: &mut [(&mut PjrtSession, &[EvalNode])],
-    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
         let m = self.man.cache_len;
         let v = self.man.vocab;
         let b = self.man.batch;
@@ -255,7 +266,6 @@ impl PjrtLm {
         debug_assert_eq!(logits.len(), b * st * v);
 
         // scatter caches and logits rows back to their sessions
-        let mut result = Vec::with_capacity(lanes);
         for (lane, ((s, _), range)) in groups.iter_mut().zip(&ranges).enumerate() {
             let mut kback = vec![0f32; nl * b * lane_elems];
             let mut vback = vec![0f32; nl * b * lane_elems];
@@ -267,15 +277,12 @@ impl PjrtLm {
             }
             s.kcache = crate::runtime::literal_f32(&kback, &dims)?;
             s.vcache = crate::runtime::literal_f32(&vback, &dims)?;
-            let rows: Vec<Vec<f32>> = (0..range.len())
-                .map(|row| {
-                    let at = (lane * st + row) * v;
-                    logits[at..at + v].to_vec()
-                })
-                .collect();
-            result.push(rows);
+            for row in 0..range.len() {
+                let at = (lane * st + row) * v;
+                out.push_row_from(&logits[at..at + v]);
+            }
         }
-        Ok(result)
+        Ok(())
     }
 }
 
@@ -305,37 +312,41 @@ impl Llm for PjrtLm {
         })
     }
 
-    fn eval(&self, s: &mut Self::Session, nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>> {
+    fn eval_into(
+        &self,
+        s: &mut Self::Session,
+        nodes: &[EvalNode],
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
         let range = s.core.add_pending(nodes)?;
-        let mut out = Vec::with_capacity(nodes.len());
         let mut start = range.start;
         while start < range.end {
             let end = (start + self.man.s_tile).min(range.end);
-            out.extend(self.run_tile(s, start..end)?);
+            self.run_tile(s, start..end, out)?;
             start = end;
         }
-        Ok(out)
+        Ok(())
     }
 
     /// One padded device call per fused batch when a multi-lane step
     /// executable is available; today's batch=1 artifacts take the
-    /// per-session fallback (still one `eval` per session, each already
+    /// per-session fallback (still one eval per session, each already
     /// tile-padded). See [`PjrtLm::run_packed`] for the packing contract.
-    fn eval_batch(
+    fn eval_batch_into(
         &self,
         groups: &mut [(&mut Self::Session, &[EvalNode])],
-    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
         let packable = groups.len() >= 2
             && groups.len() <= self.man.batch
             && groups.iter().all(|(_, nodes)| nodes.len() <= self.man.s_tile);
         if packable {
-            return self.run_packed(groups);
+            return self.run_packed(groups, out);
         }
-        let mut out = Vec::with_capacity(groups.len());
         for (session, nodes) in groups.iter_mut() {
-            out.push(self.eval(session, nodes)?);
+            self.eval_into(session, nodes, out)?;
         }
-        Ok(out)
+        Ok(())
     }
 
     fn commit(&self, s: &mut Self::Session, accepted: &[usize]) -> Result<()> {
@@ -399,7 +410,12 @@ impl Llm for PjrtLm {
         bail!("PJRT model unavailable (stub build)")
     }
 
-    fn eval(&self, _s: &mut Self::Session, _nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>> {
+    fn eval_into(
+        &self,
+        _s: &mut Self::Session,
+        _nodes: &[EvalNode],
+        _out: &mut LogitsBatch,
+    ) -> Result<()> {
         bail!("PJRT model unavailable (stub build)")
     }
 

@@ -4,9 +4,25 @@
 //! sampling and residual distributions.
 //!
 //! All verification math runs in f64 probability space: the distributions
-//! involved (vocab ≤ a few hundred here) are small, and the acceptance
+//! involved are small relative to the model, and the acceptance
 //! thresholds of recursive rejection sampling are exact identities — f32
 //! drift would show up directly as distribution-recovery error.
+//!
+//! # Allocation discipline and bit-exactness
+//!
+//! Every hot-path operation has an `_into` / in-place form writing into
+//! caller-owned buffers, so a steady-state decode round performs zero
+//! heap allocations (see `rust/README.md` §Hot path). Selection is
+//! *partial*: [`gumbel_top_k_into`] keeps a bounded min-heap (O(V + V
+//! log k)) and [`nucleus_filter`] partitions via `select_nth_unstable`
+//! instead of a full O(V log V) sort. Both are **bit-identical** to the
+//! sort-based references in [`reference`] — same kept sets, same output
+//! order (ties broken by index), same RNG draw order (one Gumbel per
+//! unfiltered entry, ascending index) — which the property tests in
+//! `tests/selection.rs` enforce. The RNG draw order is part of the API:
+//! changing it silently re-randomizes every decoder.
+
+use std::cmp::Ordering;
 
 use crate::util::Rng;
 
@@ -15,7 +31,7 @@ pub const NEG_INF: f64 = f64::NEG_INFINITY;
 /// A processed, normalized categorical distribution in log space.
 /// Filtered-out tokens carry `-inf` (paper Alg. 4 line 6: filtered tokens
 /// are excluded from Gumbel-Top-k and from residuals).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct LogProbs(pub Vec<f64>);
 
 impl LogProbs {
@@ -29,22 +45,62 @@ impl LogProbs {
 
     /// Probabilities (exact exp; -inf -> 0).
     pub fn probs(&self) -> Vec<f64> {
-        self.0.iter().map(|&l| l.exp()).collect()
+        let mut out = Vec::new();
+        self.probs_into(&mut out);
+        out
     }
+
+    /// [`LogProbs::probs`] into a caller-owned buffer (cleared first).
+    pub fn probs_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.0.iter().map(|&l| l.exp()));
+    }
+}
+
+/// Index scratch for the partial-selection nucleus filter, reusable
+/// across calls (capacity sticks at the vocab size).
+#[derive(Debug, Default)]
+pub struct SelectScratch {
+    idx: Vec<u32>,
+}
+
+/// Probability-space scratch for one verification-rule invocation:
+/// target (`q`), draft (`p`) and an auxiliary buffer (K-SEQ residual).
+#[derive(Debug, Default)]
+pub struct VerifyScratch {
+    pub q: Vec<f64>,
+    pub p: Vec<f64>,
+    pub aux: Vec<f64>,
 }
 
 /// Convert raw model logits to a processed log-distribution:
 /// logits/temperature -> log_softmax -> nucleus(top_p) -> renormalize.
 pub fn process_logits(logits: &[f32], temperature: f32, top_p: f32) -> LogProbs {
+    let mut sel = SelectScratch::default();
+    let mut out = Vec::new();
+    process_logits_into(logits, temperature, top_p, &mut sel, &mut out);
+    LogProbs(out)
+}
+
+/// [`process_logits`] into a caller-owned buffer (cleared first), using
+/// `sel` as the nucleus-selection scratch. Allocation-free once both
+/// buffers are warm.
+pub fn process_logits_into(
+    logits: &[f32],
+    temperature: f32,
+    top_p: f32,
+    sel: &mut SelectScratch,
+    out: &mut Vec<f64>,
+) {
     assert!(temperature > 0.0, "temperature must be > 0 (greedy not supported)");
     let inv_t = 1.0 / temperature as f64;
-    let mut lp: Vec<f64> = logits.iter().map(|&x| x as f64 * inv_t).collect();
-    log_normalize(&mut lp);
+    out.clear();
+    out.extend(logits.iter().map(|&x| x as f64 * inv_t));
+    log_normalize(out);
     if top_p < 1.0 {
-        nucleus_filter(&mut lp, top_p as f64);
-        log_normalize(&mut lp);
+        nucleus_filter(out, top_p as f64, sel);
+        log_normalize(out);
     }
-    LogProbs(lp)
 }
 
 /// In-place log-softmax (stable). `-inf` entries stay `-inf`.
@@ -62,22 +118,65 @@ pub fn log_normalize(lp: &mut [f64]) {
     }
 }
 
-/// Nucleus filter: keep the smallest prob-sorted prefix with mass >= top_p,
-/// set the rest to -inf. Ties broken by index for determinism.
-fn nucleus_filter(lp: &mut [f64], top_p: f64) {
-    let mut idx: Vec<usize> = (0..lp.len()).collect();
-    idx.sort_by(|&a, &b| lp[b].partial_cmp(&lp[a]).unwrap().then(a.cmp(&b)));
-    let mut mass = 0.0;
-    let mut keep = lp.len();
-    for (rank, &i) in idx.iter().enumerate() {
-        mass += lp[i].exp();
-        if mass >= top_p {
-            keep = rank + 1;
-            break;
-        }
+/// Descending-value order with ascending-index tie-break: the total
+/// order every selection routine here ranks by. `total_cmp` keeps NaN
+/// logits (degenerate upstream distributions) deterministic instead of
+/// panicking mid-round.
+#[inline]
+fn rank_desc(value_a: f64, idx_a: usize, value_b: f64, idx_b: usize) -> Ordering {
+    value_b.total_cmp(&value_a).then(idx_a.cmp(&idx_b))
+}
+
+/// Nucleus filter: keep the smallest prob-sorted prefix with mass >=
+/// top_p, set the rest to -inf. Ties broken by index for determinism.
+///
+/// Partial selection: exponentially grows a candidate prefix (32, 128,
+/// ...) and partitions with `select_nth_unstable` — O(V + keep·log keep)
+/// instead of a full sort — while accumulating mass in exactly the
+/// reference's order, so the kept set is byte-identical to
+/// [`reference::nucleus_filter`].
+pub fn nucleus_filter(lp: &mut [f64], top_p: f64, sel: &mut SelectScratch) {
+    let n = lp.len();
+    if n == 0 {
+        return;
     }
-    for &i in &idx[keep..] {
-        lp[i] = NEG_INF;
+    let mut k = 32.min(n);
+    loop {
+        let idx = &mut sel.idx;
+        idx.clear();
+        idx.extend(0..n as u32);
+        let cmp = |a: &u32, b: &u32| {
+            rank_desc(lp[*a as usize], *a as usize, lp[*b as usize], *b as usize)
+        };
+        if k < n {
+            idx.select_nth_unstable_by(k - 1, cmp);
+            idx[..k].sort_unstable_by(cmp);
+        } else {
+            idx.sort_unstable_by(cmp);
+        }
+        let mut mass = 0.0;
+        let mut keep = None;
+        for (rank, &i) in idx[..k].iter().enumerate() {
+            mass += lp[i as usize].exp();
+            if mass >= top_p {
+                keep = Some(rank + 1);
+                break;
+            }
+        }
+        match keep {
+            Some(keep) => {
+                // everything outside the kept prefix (the rest of the
+                // sorted prefix + the unsorted partition tail) is masked
+                for &i in &idx[keep..] {
+                    lp[i as usize] = NEG_INF;
+                }
+                return;
+            }
+            // mass never reached top_p (degenerate / NaN): keep all,
+            // matching the reference's `keep = len` fallthrough
+            None if k >= n => return,
+            None => k = (k * 4).min(n),
+        }
     }
 }
 
@@ -87,21 +186,107 @@ pub fn gumbel(rng: &mut Rng) -> f64 {
     -(-u.ln()).ln()
 }
 
+/// Gumbel-max trick: sample an index from the categorical `lp` directly
+/// in log space — argmax of `lp[i] + Gumbel(0,1)` — without
+/// materializing probabilities. One Gumbel per unfiltered entry, drawn
+/// in ascending index order; `-inf` entries draw nothing and never win.
+/// `None` when every entry is filtered. Ties (measure-zero) keep the
+/// lowest index, matching [`gumbel_top_k_into`] with k = 1.
+pub fn gumbel_max(lp: &[f64], rng: &mut Rng) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &l) in lp.iter().enumerate() {
+        if l == NEG_INF {
+            continue;
+        }
+        let g = l + gumbel(rng);
+        let better = match best {
+            None => true,
+            Some((bi, bg)) => rank_desc(g, i, bg, bi) == Ordering::Less,
+        };
+        if better {
+            best = Some((i, g));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 /// Gumbel-Top-k trick (Vieira 2014): returns up to `k` indices sampled
-/// *without replacement* from the categorical `lp`, in decreasing order of
-/// perturbed log-prob, together with the perturbed values. `-inf` entries
-/// are never returned (paper Alg. 4 line 6).
+/// *without replacement* from the categorical `lp`, in decreasing order
+/// of perturbed log-prob, together with the perturbed values. `-inf`
+/// entries are never returned (paper Alg. 4 line 6).
 pub fn gumbel_top_k(lp: &LogProbs, k: usize, rng: &mut Rng) -> Vec<(usize, f64)> {
-    let mut perturbed: Vec<(usize, f64)> = lp
-        .0
-        .iter()
-        .enumerate()
-        .filter(|(_, &l)| l != NEG_INF)
-        .map(|(i, &l)| (i, l + gumbel(rng)))
-        .collect();
-    perturbed.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-    perturbed.truncate(k);
-    perturbed
+    let mut out = Vec::new();
+    gumbel_top_k_into(lp, k, rng, &mut out);
+    out
+}
+
+/// Offer `cand` to a bounded worst-at-root heap of capacity `cap`:
+/// push while under capacity, otherwise replace the root when it ranks
+/// strictly below `cand`. `worse(a, b)` must be a strict total order
+/// ("a ranks below b") — the heap invariant is that every parent is
+/// worse than its children, so one root comparison decides replacement.
+/// The single selection kernel behind [`gumbel_top_k_into`] and
+/// `StochasticBeam`'s global top-W: its tie-breaking is load-bearing
+/// for the bit-exactness contract, so there is exactly one copy.
+pub fn bounded_heap_offer<T>(
+    heap: &mut Vec<T>,
+    cap: usize,
+    cand: T,
+    worse: impl Fn(&T, &T) -> bool,
+) {
+    if cap == 0 {
+        return;
+    }
+    if heap.len() < cap {
+        heap.push(cand);
+        let mut c = heap.len() - 1;
+        while c > 0 {
+            let parent = (c - 1) / 2;
+            if worse(&heap[c], &heap[parent]) {
+                heap.swap(c, parent);
+                c = parent;
+            } else {
+                break;
+            }
+        }
+    } else if worse(&heap[0], &cand) {
+        heap[0] = cand;
+        let mut c = 0;
+        loop {
+            let (l, r) = (2 * c + 1, 2 * c + 2);
+            let mut worst = c;
+            if l < heap.len() && worse(&heap[l], &heap[worst]) {
+                worst = l;
+            }
+            if r < heap.len() && worse(&heap[r], &heap[worst]) {
+                worst = r;
+            }
+            if worst == c {
+                break;
+            }
+            heap.swap(c, worst);
+            c = worst;
+        }
+    }
+}
+
+/// [`gumbel_top_k`] into a caller-owned buffer via a bounded min-heap:
+/// O(V + V log k) instead of the reference's O(V log V) full sort, with
+/// byte-identical output (same values, order, ties and RNG stream —
+/// property-tested against [`reference::gumbel_top_k`]).
+pub fn gumbel_top_k_into(lp: &LogProbs, k: usize, rng: &mut Rng, out: &mut Vec<(usize, f64)>) {
+    out.clear();
+    let worse =
+        |a: &(usize, f64), b: &(usize, f64)| rank_desc(a.1, a.0, b.1, b.0) == Ordering::Greater;
+    for (i, &l) in lp.0.iter().enumerate() {
+        if l == NEG_INF {
+            continue;
+        }
+        // the draw happens even when k == 0: RNG order is part of the API
+        let cand = (i, l + gumbel(rng));
+        bounded_heap_offer(out, k, cand, worse);
+    }
+    out.sort_unstable_by(|a, b| rank_desc(a.1, a.0, b.1, b.0));
 }
 
 /// Numerically-stable truncated Gumbel (Kool et al. 2019, App. B.3):
@@ -110,16 +295,26 @@ pub fn gumbel_top_k(lp: &LogProbs, k: usize, rng: &mut Rng) -> Vec<(usize, f64)>
 /// perturbed ones conditioned on max == u:
 ///   g_hat = -log(exp(-u) - exp(-z) + exp(-phi))
 pub fn truncated_gumbel(u: f64, z: f64, phi_tilde: &[f64]) -> Vec<f64> {
-    phi_tilde
-        .iter()
-        .map(|&g| {
-            if g == NEG_INF {
-                return NEG_INF;
-            }
-            let v = u - g + ln_1m_exp(g - z);
-            u - v.max(0.0) - ln_1p_exp(-v.abs())
-        })
-        .collect()
+    let mut out = Vec::new();
+    truncated_gumbel_into(u, z, phi_tilde, &mut out);
+    out
+}
+
+/// [`truncated_gumbel`] into a caller-owned buffer (cleared first).
+pub fn truncated_gumbel_into(u: f64, z: f64, phi_tilde: &[f64], out: &mut Vec<f64>) {
+    out.clear();
+    out.extend(phi_tilde.iter().map(|&g| truncated_gumbel_one(u, z, g)));
+}
+
+/// One element of the truncated-Gumbel map — the single shared formula
+/// (the vector form and the beam's streaming form must not drift).
+#[inline]
+pub fn truncated_gumbel_one(u: f64, z: f64, g: f64) -> f64 {
+    if g == NEG_INF {
+        return NEG_INF;
+    }
+    let v = u - g + ln_1m_exp(g - z);
+    u - v.max(0.0) - ln_1p_exp(-v.abs())
 }
 
 /// log(1 - exp(x)) for x <= 0, stable near 0 and -inf.
@@ -163,20 +358,75 @@ pub fn sample_categorical(p: &[f64], rng: &mut Rng) -> usize {
 /// None when q <= p pointwise (residual mass ~ 0), which happens when the
 /// draft already covers the target.
 pub fn residual(q: &[f64], p: &[f64]) -> Option<Vec<f64>> {
-    let mut r: Vec<f64> = q.iter().zip(p).map(|(&qi, &pi)| (qi - pi).max(0.0)).collect();
-    let z: f64 = r.iter().sum();
+    let mut r = q.to_vec();
+    if residual_in_place(&mut r, p) {
+        Some(r)
+    } else {
+        None
+    }
+}
+
+/// [`residual`] computed in place: on success `q` becomes the normalized
+/// residual and `true` is returned; when the residual mass vanishes `q`
+/// is left untouched and `false` is returned (same arithmetic, same
+/// accumulation order — bit-identical to the allocating form).
+pub fn residual_in_place(q: &mut [f64], p: &[f64]) -> bool {
+    let z: f64 = q.iter().zip(p).map(|(&qi, &pi)| (qi - pi).max(0.0)).sum();
     if z <= 1e-300 {
-        return None;
+        return false;
     }
-    for x in &mut r {
-        *x /= z;
+    for (qi, &pi) in q.iter_mut().zip(p) {
+        *qi = (*qi - pi).max(0.0) / z;
     }
-    Some(r)
+    true
 }
 
 /// Total-variation distance between two probability vectors.
 pub fn tv_distance(a: &[f64], b: &[f64]) -> f64 {
     0.5 * a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).sum::<f64>()
+}
+
+/// Sort-based reference implementations of the partial-selection
+/// routines. These ARE the specification: the optimized forms above must
+/// return byte-identical results (indices, values, order, RNG stream
+/// position), enforced by `tests/selection.rs`. Kept `pub` for those
+/// tests and for the hot-path bench's before/after comparison.
+pub mod reference {
+    use super::*;
+
+    /// Full-sort Gumbel-Top-k (the pre-optimization implementation, with
+    /// the NaN-safe `total_cmp` + index tie-break comparator).
+    pub fn gumbel_top_k(lp: &LogProbs, k: usize, rng: &mut Rng) -> Vec<(usize, f64)> {
+        let mut perturbed: Vec<(usize, f64)> = lp
+            .0
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l != NEG_INF)
+            .map(|(i, &l)| (i, l + gumbel(rng)))
+            .collect();
+        perturbed.sort_by(|a, b| rank_desc(a.1, a.0, b.1, b.0));
+        perturbed.truncate(k);
+        perturbed
+    }
+
+    /// Full-sort nucleus filter (the pre-optimization implementation,
+    /// with the NaN-safe comparator).
+    pub fn nucleus_filter(lp: &mut [f64], top_p: f64) {
+        let mut idx: Vec<usize> = (0..lp.len()).collect();
+        idx.sort_by(|&a, &b| rank_desc(lp[a], a, lp[b], b));
+        let mut mass = 0.0;
+        let mut keep = lp.len();
+        for (rank, &i) in idx.iter().enumerate() {
+            mass += lp[i].exp();
+            if mass >= top_p {
+                keep = rank + 1;
+                break;
+            }
+        }
+        for &i in &idx[keep..] {
+            lp[i] = NEG_INF;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -211,6 +461,38 @@ mod tests {
         assert!((p[0] / p[1] - 2.0).abs() < 1e-6);
     }
 
+    /// SATELLITE regression: a NaN logit must not panic either selection
+    /// routine (the old `partial_cmp().unwrap()` did) and must behave
+    /// identically in optimized and reference forms.
+    #[test]
+    fn nan_logits_do_not_panic() {
+        // NaN survives temperature scaling and log_normalize untouched
+        let lp = LogProbs(vec![-0.5, f64::NAN, -1.5, NEG_INF, -0.7]);
+        let mut r1 = rng(11);
+        let mut r2 = rng(11);
+        let heap = gumbel_top_k(&lp, 3, &mut r1);
+        let full = reference::gumbel_top_k(&lp, 3, &mut r2);
+        assert_eq!(heap.len(), 3);
+        for (a, b) in heap.iter().zip(&full) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+        // NaN ranks first under total_cmp: deterministically selected
+        assert_eq!(heap[0].0, 1);
+
+        let mut a = vec![-0.5, f64::NAN, -1.5, -0.7];
+        let mut b = a.clone();
+        let mut sel = SelectScratch::default();
+        nucleus_filter(&mut a, 0.9, &mut sel);
+        reference::nucleus_filter(&mut b, 0.9);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // NaN mass never reaches top_p: nothing gets filtered
+        assert!(a.iter().all(|x| *x != NEG_INF));
+    }
+
     #[test]
     fn gumbel_top_k_skips_filtered_and_orders() {
         let lp = LogProbs(vec![-0.5, NEG_INF, -1.5, -0.7]);
@@ -238,6 +520,31 @@ mod tests {
             let emp = counts[i] as f64 / n as f64;
             assert!((emp - probs[i]).abs() < 0.005, "{i}: {emp} vs {}", probs[i]);
         }
+    }
+
+    /// SATELLITE: log-space Gumbel-max sampling is distributionally
+    /// equivalent to materializing probs + categorical sampling (the
+    /// Chain / IidPaths expand rewrite relies on this).
+    #[test]
+    fn gumbel_max_matches_categorical() {
+        let probs = [0.45, 0.05, 0.3, 0.2];
+        let lp: Vec<f64> = probs.iter().map(|p| (*p as f64).ln()).collect();
+        let mut r = rng(13);
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[gumbel_max(&lp, &mut r).unwrap()] += 1;
+        }
+        for i in 0..4 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!((emp - probs[i]).abs() < 0.005, "{i}: {emp} vs {}", probs[i]);
+        }
+        // filtered entries never win; fully-masked input yields None
+        let masked = vec![NEG_INF, -0.1, NEG_INF];
+        for _ in 0..100 {
+            assert_eq!(gumbel_max(&masked, &mut r), Some(1));
+        }
+        assert_eq!(gumbel_max(&[NEG_INF, NEG_INF], &mut r), None);
     }
 
     /// The first TWO Gumbel-Top-k outputs must follow sampling without
@@ -291,6 +598,22 @@ mod tests {
         assert!((r[0] - 0.0).abs() < 1e-12);
         assert!((r[1] - 1.0).abs() < 1e-12);
         assert!(residual(&q, &q).is_none());
+    }
+
+    #[test]
+    fn residual_in_place_matches_allocating() {
+        let q = [0.4, 0.1, 0.3, 0.2];
+        let p = [0.1, 0.4, 0.2, 0.3];
+        let r = residual(&q, &p).unwrap();
+        let mut q2 = q.to_vec();
+        assert!(residual_in_place(&mut q2, &p));
+        for (a, b) in r.iter().zip(&q2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // vanished residual leaves q untouched
+        let mut q3 = q.to_vec();
+        assert!(!residual_in_place(&mut q3, &q));
+        assert_eq!(q3, q);
     }
 
     #[test]

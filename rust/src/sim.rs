@@ -16,8 +16,13 @@
 
 use anyhow::Result;
 
-use crate::llm::{EvalNode, Llm};
+use crate::llm::{EvalNode, Llm, LogitsBatch};
 use crate::tree::SessionCore;
+
+/// Markov order of the context hash: only this many trailing tokens
+/// shape a conditional, so per-node context builds are O(CTX_ORDER)
+/// regardless of prefix length (and the context scratch never grows).
+const CTX_ORDER: usize = 8;
 
 #[derive(Debug, Clone)]
 pub struct SimLm {
@@ -84,10 +89,11 @@ impl SimLm {
     }
 
     fn ctx_hash(&self, ctx: &[u32]) -> u64 {
-        // order-sensitive rolling hash over the last 8 tokens (a bounded
-        // Markov order keeps distinct paths distinct while staying cheap)
+        // order-sensitive rolling hash over the last CTX_ORDER tokens (a
+        // bounded Markov order keeps distinct paths distinct while
+        // staying cheap)
         let mut h = Self::mix(self.seed);
-        let tail = if ctx.len() > 8 { &ctx[ctx.len() - 8..] } else { ctx };
+        let tail = if ctx.len() > CTX_ORDER { &ctx[ctx.len() - CTX_ORDER..] } else { ctx };
         for &t in tail {
             h = Self::mix(h ^ (t as u64).wrapping_mul(0x100000001b3));
         }
@@ -104,48 +110,58 @@ impl SimLm {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
-    /// The single row-production path shared by `eval` and `eval_batch`:
-    /// append `nodes` to the session core and compute one logits row per
-    /// node, reusing `ctx` as the context scratch buffer.
-    fn eval_rows(
+    /// The single row-production path shared by all eval entry points:
+    /// append `nodes` to the session core and write one logits row per
+    /// node straight into `out`, using the session's bounded context
+    /// scratch (the hash only reads the last [`CTX_ORDER`] tokens, so
+    /// the context build is O(CTX_ORDER), not O(prefix)).
+    fn eval_rows_into(
         &self,
-        core: &mut SessionCore,
+        s: &mut SimSession,
         nodes: &[EvalNode],
-        ctx: &mut Vec<u32>,
-    ) -> Result<Vec<Vec<f32>>> {
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
+        let SimSession { core, ctx } = s;
         let range = core.add_pending(nodes)?;
-        let mut rows = Vec::with_capacity(nodes.len());
         for i in range {
-            core.context_tokens_into(i, ctx);
-            rows.push(self.logits(ctx));
+            core.context_tail_into(i, CTX_ORDER, ctx);
+            self.logits_into(ctx, out.push_row());
         }
-        Ok(rows)
+        Ok(())
     }
 
-    /// Raw logits for a context (deterministic).
-    pub fn logits(&self, ctx: &[u32]) -> Vec<f32> {
+    /// Raw logits for a context, written in place (deterministic).
+    pub fn logits_into(&self, ctx: &[u32], row: &mut [f32]) {
+        debug_assert_eq!(row.len(), self.vocab);
         let h = self.ctx_hash(ctx);
-        (0..self.vocab)
-            .map(|i| {
-                let shared = Self::normal(h, 0, i);
-                let own = if self.stream == 0 || self.alpha >= 1.0 {
-                    shared
-                } else {
-                    // unit-variance mixture: alpha controls the correlation
-                    // with the target only, never the draft's sharpness
-                    let noise = Self::normal(h, self.stream, i);
-                    let a = self.alpha;
-                    let norm = (a * a + (1.0 - a) * (1.0 - a)).sqrt();
-                    (a * shared + (1.0 - a) * noise) / norm
-                };
-                (own * self.scale) as f32
-            })
-            .collect()
+        for (i, slot) in row.iter_mut().enumerate() {
+            let shared = Self::normal(h, 0, i);
+            let own = if self.stream == 0 || self.alpha >= 1.0 {
+                shared
+            } else {
+                // unit-variance mixture: alpha controls the correlation
+                // with the target only, never the draft's sharpness
+                let noise = Self::normal(h, self.stream, i);
+                let a = self.alpha;
+                let norm = (a * a + (1.0 - a) * (1.0 - a)).sqrt();
+                (a * shared + (1.0 - a) * noise) / norm
+            };
+            *slot = (own * self.scale) as f32;
+        }
+    }
+
+    /// Raw logits for a context (deterministic; allocating wrapper).
+    pub fn logits(&self, ctx: &[u32]) -> Vec<f32> {
+        let mut row = vec![0.0; self.vocab];
+        self.logits_into(ctx, &mut row);
+        row
     }
 }
 
 pub struct SimSession {
     pub core: SessionCore,
+    /// Bounded context scratch ([`CTX_ORDER`] tokens), reused per row.
+    ctx: Vec<u32>,
 }
 
 impl Llm for SimLm {
@@ -160,32 +176,38 @@ impl Llm for SimLm {
     }
 
     fn begin(&self) -> Result<Self::Session> {
-        Ok(SimSession { core: SessionCore::new(self.cache_len) })
+        Ok(SimSession {
+            core: SessionCore::new(self.cache_len),
+            ctx: Vec::with_capacity(CTX_ORDER),
+        })
     }
 
-    fn eval(&self, s: &mut Self::Session, nodes: &[EvalNode]) -> Result<Vec<Vec<f32>>> {
+    fn eval_into(
+        &self,
+        s: &mut Self::Session,
+        nodes: &[EvalNode],
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
         self.spin_dispatch();
-        let mut ctx = Vec::new();
-        self.eval_rows(&mut s.core, nodes, &mut ctx)
+        self.eval_rows_into(s, nodes, out)
     }
 
     /// Genuinely vectorized fused pass: one dispatch charge for the whole
-    /// cross-request batch and one flat row loop over every group (with a
-    /// shared context buffer), rather than N independent `eval` calls.
-    /// Rows come from the same single production path as `eval`
-    /// ([`SimLm::eval_rows`]), so fused and per-session results cannot
-    /// diverge (also property-tested in tests/fused.rs).
-    fn eval_batch(
+    /// cross-request batch and one flat row loop over every group, rather
+    /// than N independent eval calls. Rows come from the same single
+    /// production path ([`SimLm::eval_rows_into`]), so fused and
+    /// per-session results cannot diverge (also property-tested in
+    /// tests/fused.rs).
+    fn eval_batch_into(
         &self,
         groups: &mut [(&mut Self::Session, &[EvalNode])],
-    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
         self.spin_dispatch();
-        let mut ctx = Vec::new();
-        let mut out = Vec::with_capacity(groups.len());
         for (s, nodes) in groups.iter_mut() {
-            out.push(self.eval_rows(&mut s.core, nodes, &mut ctx)?);
+            self.eval_rows_into(s, nodes, out)?;
         }
-        Ok(out)
+        Ok(())
     }
 
     fn commit(&self, s: &mut Self::Session, accepted: &[usize]) -> Result<()> {

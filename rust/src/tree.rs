@@ -42,9 +42,12 @@ impl SessionCore {
         let scratch = (cache_len - 1) as u32;
         // allocate low slots first (pop from the back)
         let free: Vec<u32> = (0..scratch).rev().collect();
+        // pre-size the prefix so steady-state commits stay allocation-free
+        // (growth past the reservation is amortized-rare, not wrong)
+        let reserve = (cache_len - 1).min(4096);
         Self {
-            prefix_tokens: Vec::new(),
-            prefix_slots: Vec::new(),
+            prefix_tokens: Vec::with_capacity(reserve),
+            prefix_slots: Vec::with_capacity(reserve),
             pending: Vec::new(),
             free,
             scratch_slot: scratch,
@@ -118,8 +121,8 @@ impl SessionCore {
     }
 
     /// [`SessionCore::context_tokens`] into a caller-owned buffer, so
-    /// batched evaluation ([`crate::llm::Llm::eval_batch`]) reuses one
-    /// allocation across every row of a fused call.
+    /// batched evaluation ([`crate::llm::Llm::eval_batch_into`]) reuses
+    /// one allocation across every row of a fused call.
     pub fn context_tokens_into(&self, pending_idx: usize, out: &mut Vec<u32>) {
         out.clear();
         out.extend_from_slice(&self.prefix_tokens);
@@ -131,6 +134,27 @@ impl SessionCore {
             cur = p.parent;
         }
         out[anc_start..].reverse();
+    }
+
+    /// The LAST `max_len` tokens of [`SessionCore::context_tokens`], into
+    /// a caller-owned buffer. For bounded-Markov substrates (the sim LM
+    /// hashes only a fixed context tail) this turns the per-node context
+    /// build from O(prefix) into O(max_len) with a fixed-size buffer.
+    pub fn context_tail_into(&self, pending_idx: usize, max_len: usize, out: &mut Vec<u32>) {
+        out.clear();
+        let mut cur = pending_idx as i64;
+        while cur != PARENT_PREFIX && out.len() < max_len {
+            let p = &self.pending[cur as usize];
+            out.push(p.token);
+            cur = p.parent;
+        }
+        if cur == PARENT_PREFIX {
+            let take = (max_len - out.len()).min(self.prefix_tokens.len());
+            for i in 0..take {
+                out.push(self.prefix_tokens[self.prefix_tokens.len() - 1 - i]);
+            }
+        }
+        out.reverse();
     }
 
     /// Commit an accepted rootward chain into the prefix and free all
@@ -151,14 +175,21 @@ impl SessionCore {
             }
             expect_parent = idx as i64;
         }
-        let keep: std::collections::HashSet<usize> = accepted.iter().copied().collect();
         for &idx in accepted {
             let p = &self.pending[idx];
             self.prefix_tokens.push(p.token);
             self.prefix_slots.push(p.slot);
         }
+        // `accepted` is a validated rootward chain, so its indices are
+        // strictly ascending (every parent precedes its child in the
+        // pending list): a two-pointer merge frees the complement in
+        // O(pending), allocation-free — prefill commits the whole prompt
+        // chain at once, so membership scans must not be O(n^2)
+        let mut next = 0;
         for (i, p) in self.pending.iter().enumerate() {
-            if !keep.contains(&i) {
+            if next < accepted.len() && accepted[next] == i {
+                next += 1;
+            } else {
                 self.free.push(p.slot);
             }
         }
@@ -262,6 +293,33 @@ mod tests {
             .unwrap();
         assert_eq!(s.context_tokens(1), vec![7, 1, 2]);
         assert_eq!(s.context_tokens(2), vec![7, 1, 3]);
+    }
+
+    #[test]
+    fn context_tail_matches_full_context() {
+        let mut s = SessionCore::new(64);
+        let chain: Vec<EvalNode> = (0..12u32)
+            .map(|i| {
+                if i == 0 {
+                    EvalNode::root(i)
+                } else {
+                    EvalNode::child(i + 100, (i - 1) as usize)
+                }
+            })
+            .collect();
+        s.add_pending(&chain).unwrap();
+        s.commit(&(0..12).collect::<Vec<_>>()).unwrap();
+        s.add_pending(&[EvalNode::root(7), EvalNode::child(8, 0), EvalNode::child(9, 1)])
+            .unwrap();
+        let mut tail = Vec::new();
+        for idx in 0..3 {
+            let full = s.context_tokens(idx);
+            for max_len in [1usize, 4, 8, 100] {
+                s.context_tail_into(idx, max_len, &mut tail);
+                let want = &full[full.len().saturating_sub(max_len)..];
+                assert_eq!(tail, want, "idx {idx} max_len {max_len}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! SATELLITE: byte-exactness properties of the partial-selection rewrite.
+//!
+//! The heap-based `gumbel_top_k_into` and the partial-partition
+//! `nucleus_filter` must be indistinguishable from the sort-based
+//! reference implementations (`rsd::sampling::reference`) — same
+//! indices, same bit-exact values, same order, same RNG stream position
+//! — across random vocabs, k, top_p, duplicate (tied) logits and `-inf`
+//! entries. The RNG draw order is part of the sampling API: any
+//! divergence would silently re-randomize every decoder in the repo.
+
+use rsd::sampling::{
+    gumbel_top_k_into, log_normalize, nucleus_filter, reference, LogProbs, SelectScratch,
+    NEG_INF,
+};
+use rsd::util::Rng;
+
+/// Random log-probs with deliberate ties (quantized values) and -inf
+/// entries; roughly normalized (exactness of normalization irrelevant).
+fn random_lp(rng: &mut Rng, vocab: usize, tie_prob: f64, inf_prob: f64) -> Vec<f64> {
+    let mut lp: Vec<f64> = (0..vocab)
+        .map(|_| {
+            if rng.gen_f64() < inf_prob {
+                NEG_INF
+            } else if rng.gen_f64() < tie_prob {
+                // heavy quantization forces exact duplicate values
+                -((rng.gen_range(4) + 1) as f64)
+            } else {
+                -8.0 * rng.gen_f64()
+            }
+        })
+        .collect();
+    log_normalize(&mut lp);
+    lp
+}
+
+#[test]
+fn gumbel_top_k_heap_matches_reference_bytes_and_rng() {
+    let mut meta = Rng::seed_from_u64(0xC0FFEE);
+    let mut out = Vec::new();
+    for trial in 0..300 {
+        let vocab = 1 + meta.gen_range(200);
+        let lp = LogProbs(random_lp(&mut meta, vocab, 0.4, 0.2));
+        let k = meta.gen_range(vocab + 4); // includes 0 and k > support
+        let seed = meta.next_u64();
+        let mut r_heap = Rng::seed_from_u64(seed);
+        let mut r_ref = Rng::seed_from_u64(seed);
+        gumbel_top_k_into(&lp, k, &mut r_heap, &mut out);
+        let want = reference::gumbel_top_k(&lp, k, &mut r_ref);
+        assert_eq!(out.len(), want.len(), "trial {trial}: length");
+        for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert_eq!(a.0, b.0, "trial {trial}: index at rank {i}");
+            assert_eq!(
+                a.1.to_bits(),
+                b.1.to_bits(),
+                "trial {trial}: perturbed value at rank {i}"
+            );
+        }
+        // identical RNG stream position afterwards
+        assert_eq!(
+            r_heap.next_u64(),
+            r_ref.next_u64(),
+            "trial {trial}: RNG stream position diverged"
+        );
+    }
+}
+
+#[test]
+fn gumbel_top_k_heap_matches_reference_with_all_ties() {
+    // fully tied distribution: ordering must fall back to index order
+    // identically in both implementations
+    let mut lp = vec![-1.0; 64];
+    log_normalize(&mut lp);
+    let lp = LogProbs(lp);
+    let mut out = Vec::new();
+    for seed in 0..50u64 {
+        let mut r1 = Rng::seed_from_u64(seed);
+        let mut r2 = Rng::seed_from_u64(seed);
+        gumbel_top_k_into(&lp, 8, &mut r1, &mut out);
+        let want = reference::gumbel_top_k(&lp, 8, &mut r2);
+        let got: Vec<(usize, u64)> = out.iter().map(|&(i, v)| (i, v.to_bits())).collect();
+        let want: Vec<(usize, u64)> = want.iter().map(|&(i, v)| (i, v.to_bits())).collect();
+        assert_eq!(got, want);
+    }
+}
+
+#[test]
+fn nucleus_partial_matches_reference_bytes() {
+    let mut meta = Rng::seed_from_u64(0xBEEF);
+    let mut sel = SelectScratch::default();
+    for trial in 0..400 {
+        let vocab = 1 + meta.gen_range(300);
+        let lp = random_lp(&mut meta, vocab, 0.5, 0.15);
+        // top_p spans tiny (keep ~1) through ~1.0 (keep everything)
+        let top_p = match trial % 4 {
+            0 => 0.01 + 0.2 * meta.gen_f64(),
+            1 => 0.5 + 0.45 * meta.gen_f64(),
+            2 => 0.9999,
+            _ => meta.gen_f64(),
+        };
+        let mut a = lp.clone();
+        let mut b = lp;
+        nucleus_filter(&mut a, top_p, &mut sel);
+        reference::nucleus_filter(&mut b, top_p);
+        let got: Vec<u64> = a.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u64> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want, "trial {trial}: vocab {vocab} top_p {top_p}");
+    }
+}
+
+#[test]
+fn nucleus_partial_matches_reference_beyond_prefix_growth() {
+    // vocabs straddling the 32/128/512 prefix-growth boundaries with a
+    // top_p that forces several doubling retries
+    let mut meta = Rng::seed_from_u64(0xF00D);
+    let mut sel = SelectScratch::default();
+    for &vocab in &[31usize, 32, 33, 127, 128, 129, 600, 2048] {
+        // near-uniform: the mass cutoff lands deep in the tail
+        let mut lp: Vec<f64> =
+            (0..vocab).map(|_| -1.0 - 0.001 * meta.gen_f64()).collect();
+        log_normalize(&mut lp);
+        for top_p in [0.3, 0.9, 0.99, 0.999999] {
+            let mut a = lp.clone();
+            let mut b = lp.clone();
+            nucleus_filter(&mut a, top_p, &mut sel);
+            reference::nucleus_filter(&mut b, top_p);
+            let got: Vec<u64> = a.iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u64> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "vocab {vocab} top_p {top_p}");
+        }
+    }
+}
+
+#[test]
+fn gumbel_top_k_wrapper_agrees_with_into() {
+    let mut meta = Rng::seed_from_u64(3);
+    let lp = LogProbs(random_lp(&mut meta, 80, 0.3, 0.1));
+    let mut out = Vec::new();
+    let mut r1 = Rng::seed_from_u64(99);
+    let mut r2 = Rng::seed_from_u64(99);
+    gumbel_top_k_into(&lp, 5, &mut r1, &mut out);
+    let wrapper = rsd::sampling::gumbel_top_k(&lp, 5, &mut r2);
+    assert_eq!(out, wrapper);
+}
