@@ -69,6 +69,7 @@ fn run_one(
         decoder: decoder.clone(),
         seed: 0,
         fused: true,
+        ..EngineConfig::default()
     };
     let (tx, handle) = if use_sim {
         let cfg = cfg.clone();

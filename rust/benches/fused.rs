@@ -63,6 +63,7 @@ fn run(fused: bool, max_new: usize) -> (Vec<Vec<u32>>, f64, (f64, f64), Snapshot
         decoder: DecoderConfig::RsdS { w: 3, l: 3 },
         seed: 42,
         fused,
+        ..EngineConfig::default()
     };
     let engine = Engine::new(target, draft, cfg);
     let (tx, handle) = spawn(engine);

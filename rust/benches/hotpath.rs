@@ -50,8 +50,26 @@ fn synth_logits(vocab: usize) -> Vec<f32> {
 /// keeps every tree at its full static shape, so the high-water mark is
 /// deterministic; the nucleus kernel's own zero-allocation behaviour is
 /// covered by the warm-scratch `process_logits` entries above.
-fn steady_state_allocs(spec: &str, vocab: usize, rounds: usize) -> anyhow::Result<(f64, f64)> {
-    let (target, draft) = SimLm::pair(0, 0.8, vocab);
+fn steady_state_allocs(
+    spec: &str,
+    vocab: usize,
+    rounds: usize,
+    paged: bool,
+) -> anyhow::Result<(f64, f64)> {
+    // `paged = true` runs the identical decode on pool-backed sessions:
+    // block-table slot lookups, block lease/release and pool headroom
+    // queries all sit on the decode path and must stay allocation-free
+    // (block vectors are capacity-reserved at session/pool creation)
+    let (target, draft) = if paged {
+        SimLm::pair_paged(
+            0,
+            0.8,
+            vocab,
+            rsd::kvcache::KvConfig { num_blocks: 512, block_size: 16, share: true },
+        )
+    } else {
+        SimLm::pair(0, 0.8, vocab)
+    };
     let sampling = SamplingConfig::new(0.5, 1.0);
     let cfg: rsd::config::DecoderConfig = spec.parse().unwrap();
     let (strategy, rule) = build_parts(&cfg);
@@ -281,17 +299,23 @@ fn main() -> anyhow::Result<()> {
     // ---- the zero-allocation acceptance gate ----------------------------
     section("steady-state heap allocations per decode round (SimLm)");
     let mut max_allocs_per_round = 0.0f64;
-    for spec in ["sd:3", "rsd-c:2-2-2", "rsd-s:6x5"] {
-        let (allocs, bytes) = steady_state_allocs(spec, 256, 64)?;
-        println!("{spec:<14} {allocs:>8.2} allocs/round  {bytes:>10.1} bytes/round");
-        entries.push(Json::obj(vec![
-            ("section", Json::from("steady-state")),
-            ("name", Json::from(format!("allocs_per_round/{spec}").as_str())),
-            ("ns_per_op", Json::Num(0.0)),
-            ("allocs_per_op", Json::Num(allocs)),
-            ("bytes_per_op", Json::Num(bytes)),
-        ]));
-        max_allocs_per_round = max_allocs_per_round.max(allocs);
+    for paged in [false, true] {
+        for spec in ["sd:3", "rsd-c:2-2-2", "rsd-s:6x5"] {
+            let (allocs, bytes) = steady_state_allocs(spec, 256, 64, paged)?;
+            let backing = if paged { "paged" } else { "dense" };
+            println!(
+                "{spec:<14} [{backing}] {allocs:>8.2} allocs/round  {bytes:>10.1} bytes/round"
+            );
+            let name = format!("allocs_per_round/{backing}/{spec}");
+            entries.push(Json::obj(vec![
+                ("section", Json::from("steady-state")),
+                ("name", Json::from(name.as_str())),
+                ("ns_per_op", Json::Num(0.0)),
+                ("allocs_per_op", Json::Num(allocs)),
+                ("bytes_per_op", Json::Num(bytes)),
+            ]));
+            max_allocs_per_round = max_allocs_per_round.max(allocs);
+        }
     }
 
     // write the snapshot BEFORE the gates below: a regressing run must

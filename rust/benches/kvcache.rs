@@ -1,0 +1,183 @@
+//! Paged KV cache with radix prefix sharing vs the same paged substrate
+//! with sharing disabled, on a shared-system-prompt serving workload.
+//!
+//! The workload models a serving fleet: every request carries the same
+//! long system prompt plus a short unique user suffix. With the radix
+//! index on, the first admission publishes the prompt's full blocks and
+//! every later session maps them as shared read-only blocks — its
+//! prefill shrinks from the whole prompt to the unique suffix. With
+//! sharing off, every session recomputes the full prompt. Each logits
+//! row costs O(vocab) real work in the sim, so the win is genuine
+//! compute, and both modes must decode bit-identical token streams
+//! (asserted) — sharing only changes which prefill rows are computed,
+//! never a distribution or an RNG draw.
+//!
+//!     cargo bench --bench kvcache             # human-readable
+//!     cargo bench --bench kvcache -- --json   # + BENCH_kvcache.json (repo root)
+//!     cargo bench --bench kvcache -- --quick  # shorter workload for CI
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use rsd::bench::alloc::CountingAlloc;
+use rsd::bench::harness::write_snapshot;
+use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::engine::{spawn, Engine, Event, Request};
+use rsd::kvcache::{KvConfig, KvStats};
+use rsd::sim::SimLm;
+use rsd::util::json::Json;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const N_REQUESTS: u64 = 8;
+const VOCAB: usize = 512;
+/// Shared system-prompt length (tokens) in the full run.
+const SYS_PROMPT: usize = 256;
+/// Unique per-request suffix length.
+const SUFFIX: usize = 4;
+/// Tokens generated per request in the full run.
+const MAX_NEW: usize = 12;
+/// Fixed per-dispatch cost (splitmix64 rounds), as in benches/fused.rs.
+const DISPATCH_OVERHEAD: u64 = 20_000;
+
+fn prompt_for(i: u64, sys_len: usize) -> Vec<u32> {
+    let mut p: Vec<u32> = (0..sys_len as u32).map(|t| (t * 7 + 3) % VOCAB as u32).collect();
+    p.extend((0..SUFFIX as u32).map(|t| (t * 31 + 11 * i as u32 + 1) % VOCAB as u32));
+    p
+}
+
+/// Drive one full engine run over the shared-prompt workload; returns
+/// (per-request streams, tokens/sec, target-pool stats).
+fn run(share: bool, sys_len: usize, max_new: usize) -> (Vec<Vec<u32>>, f64, KvStats) {
+    let cfg = KvConfig { num_blocks: 512, block_size: 16, share };
+    let (target, draft) = SimLm::pair_paged(3, 0.8, VOCAB, cfg);
+    let tpool = target.kv_pool().expect("paged").clone();
+    let target = target.with_call_overhead(DISPATCH_OVERHEAD);
+    let draft = draft.with_call_overhead(DISPATCH_OVERHEAD);
+    let ecfg = EngineConfig {
+        max_concurrency: N_REQUESTS as usize,
+        max_queue: 64,
+        default_max_tokens: max_new,
+        max_active_budget: 0,
+        sampling: SamplingConfig::new(0.5, 1.0),
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed: 42,
+        fused: true,
+        ..EngineConfig::default()
+    };
+    let engine = Engine::new(target, draft, ecfg);
+    let (tx, handle) = spawn(engine);
+
+    let t0 = Instant::now();
+    let mut receivers = Vec::new();
+    for i in 0..N_REQUESTS {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id: i,
+            prompt: prompt_for(i, sys_len),
+            max_new,
+            decoder: None,
+            sampling: None,
+            resp: rtx,
+        })
+        .unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+
+    let mut streams = Vec::new();
+    let mut total = 0usize;
+    for rrx in receivers {
+        let mut toks = Vec::new();
+        while let Ok(ev) = rrx.recv() {
+            match ev {
+                Event::Tokens(t) => toks.extend(t),
+                Event::Done(_) => break,
+                Event::Error(e) => panic!("{e}"),
+            }
+        }
+        total += toks.len();
+        streams.push(toks);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    handle.join().unwrap();
+    (streams, total as f64 / wall, tpool.stats())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_out = args.iter().any(|a| a == "--json");
+    let (sys_len, max_new) = if args.iter().any(|a| a == "--quick") {
+        (96, 8)
+    } else {
+        (SYS_PROMPT, MAX_NEW)
+    };
+    println!(
+        "=== radix prefix sharing on vs off ({N_REQUESTS} requests, shared \
+         {sys_len}-token system prompt + {SUFFIX}-token unique suffix, SimLm) ==="
+    );
+    // warmup (page in, stabilize frequency scaling)
+    let _ = run(true, sys_len, max_new);
+
+    let (off_streams, off_tps, off_stats) = run(false, sys_len, max_new);
+    let (on_streams, on_tps, on_stats) = run(true, sys_len, max_new);
+
+    assert_eq!(
+        off_streams, on_streams,
+        "prefix sharing must be token-for-token invisible"
+    );
+    println!("decoded tokens identical with sharing on vs off ✓");
+
+    let speedup = on_tps / off_tps;
+    println!("sharing off: {off_tps:>10.1} tok/s  (hit rate {:.2})", off_stats.hit_rate());
+    println!("sharing on:  {on_tps:>10.1} tok/s  (hit rate {:.2})", on_stats.hit_rate());
+    println!("speedup:     {speedup:>10.2}x");
+    println!(
+        "\ntarget-pool telemetry (sharing on): {} hit / {} looked-up tokens, \
+         {} published blocks, {} CoW copies, {} evictions",
+        on_stats.hit_tokens,
+        on_stats.lookup_tokens,
+        on_stats.published_blocks,
+        on_stats.cow_copies,
+        on_stats.evictions,
+    );
+
+    assert!(on_stats.hit_tokens > 0, "shared workload must produce prefix hits");
+    assert_eq!(off_stats.hit_tokens, 0, "sharing-off baseline must not hit");
+    assert!(
+        speedup >= 1.5,
+        "prefix sharing must be ≥1.5x on the shared-prompt workload (got {speedup:.2}x)"
+    );
+    println!("\n≥1.5x acceptance criterion met ✓");
+
+    if json_out {
+        let entry = |name: &str, tps: f64| {
+            Json::obj(vec![
+                ("section", Json::from("kvcache")),
+                ("name", Json::from(name)),
+                ("ns_per_op", Json::Num(1e9 / tps.max(1e-9))), // per decoded token
+                ("allocs_per_op", Json::Num(0.0)),
+                ("bytes_per_op", Json::Num(0.0)),
+            ])
+        };
+        let entries = vec![
+            entry("sharing-off/token", off_tps),
+            entry("sharing-on/token", on_tps),
+        ];
+        let extra = vec![
+            ("speedup", Json::Num(speedup)),
+            ("hit_rate", Json::Num(on_stats.hit_rate())),
+            ("hit_tokens", Json::from(on_stats.hit_tokens as usize)),
+            ("lookup_tokens", Json::from(on_stats.lookup_tokens as usize)),
+            ("published_blocks", Json::from(on_stats.published_blocks as usize)),
+            ("cow_copies", Json::from(on_stats.cow_copies as usize)),
+            ("sys_prompt_tokens", Json::from(sys_len)),
+            ("max_new", Json::from(max_new)),
+        ];
+        match write_snapshot("BENCH_kvcache.json", entries, extra) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("failed to write BENCH_kvcache.json: {e}"),
+        }
+    }
+}

@@ -192,6 +192,26 @@ impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
         self.inner.is_done()
     }
 
+    /// Worst-case new KV slots next round (engine preemption math).
+    /// Uses the controller's hard node budget, not the current
+    /// strategy's size: `begin_round` may re-shape to any tree within
+    /// the budget before the round's allocations happen.
+    pub fn round_need(&self) -> usize {
+        self.inner.round_need_with_budget(self.ctl.budget())
+    }
+
+    /// Spill KV state between rounds (see [`SpecStepper::suspend`]).
+    /// The controller's acceptance statistics live host-side and are
+    /// untouched.
+    pub fn suspend(&mut self, target: &T, draft: &D) -> Result<()> {
+        self.inner.suspend(target, draft)
+    }
+
+    /// Re-admit after a suspend (see [`SpecStepper::resume`]).
+    pub fn resume(&mut self, target: &T, draft: &D) -> Result<()> {
+        self.inner.resume(target, draft)
+    }
+
     pub fn out(&self) -> &[u32] {
         &self.inner.out
     }

@@ -433,6 +433,13 @@ pub struct EngineConfig {
     /// Output is token-for-token identical either way (per-request RNG
     /// streams); the fallback exists for A/B benchmarking and debugging.
     pub fused: bool,
+    /// Paged KV-cache pool size in blocks, for substrates constructed
+    /// from this config (`rsd serve --sim`): 0 = dense per-session
+    /// caches, > 0 = a [`crate::kvcache::KvPool`] per model with radix
+    /// prefix sharing and engine preemption.
+    pub kv_blocks: usize,
+    /// Tokens per KV block (only meaningful with `kv_blocks > 0`).
+    pub kv_block_size: usize,
 }
 
 impl Default for EngineConfig {
@@ -446,6 +453,8 @@ impl Default for EngineConfig {
             decoder: DecoderConfig::RsdS { w: 3, l: 3 },
             seed: 0,
             fused: true,
+            kv_blocks: 0,
+            kv_block_size: 16,
         }
     }
 }
@@ -485,6 +494,18 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("fused").and_then(Json::as_bool) {
             cfg.fused = v;
+        }
+        if let Some(v) = j.get("kv_blocks").and_then(Json::as_usize) {
+            cfg.kv_blocks = v;
+        }
+        if let Some(v) = j.get("kv_block_size").and_then(Json::as_usize) {
+            if !(1..=crate::kvcache::MAX_BLOCK_SIZE).contains(&v) {
+                bail!(
+                    "kv_block_size {v} out of range 1..={}",
+                    crate::kvcache::MAX_BLOCK_SIZE
+                );
+            }
+            cfg.kv_block_size = v;
         }
         if let Some(arr) = j.get("stop").and_then(Json::as_arr) {
             cfg.sampling.stop = parse_stop_tokens(arr)?;

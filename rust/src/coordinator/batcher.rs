@@ -61,6 +61,20 @@ impl<T> Batcher<T> {
         Ok(())
     }
 
+    /// Re-enqueue a *preempted* request at the FRONT of the waiting
+    /// queue, ahead of every fresh arrival — preemption must not cost a
+    /// request its FIFO position. Never sheds: the item was already
+    /// admitted once, so the queue cap (a guard against new load) does
+    /// not apply to it.
+    pub fn requeue_front(&mut self, item: T) {
+        self.queue.push_front(item);
+    }
+
+    /// The request that would be admitted next, if any.
+    pub fn peek(&self) -> Option<&T> {
+        self.queue.front()
+    }
+
     /// Admit the next waiting request if a concurrency slot is free
     /// (weight-oblivious: every item costs 0).
     pub fn admit(&mut self) -> Option<T> {
@@ -187,5 +201,42 @@ mod tests {
         assert_eq!(b.admit(), Some(0));
         assert_eq!(b.admit(), Some(1));
         assert_eq!(b.admit(), Some(2));
+    }
+
+    #[test]
+    fn requeue_front_precedes_fresh_arrivals() {
+        let mut b: Batcher<u32> = Batcher::new(2, 8);
+        b.offer(1).unwrap();
+        b.offer(2).unwrap();
+        assert_eq!(b.admit(), Some(1));
+        assert_eq!(b.admit(), Some(2));
+        b.offer(3).unwrap(); // fresh arrival waits
+        // 2 gets preempted: it must re-enter ahead of 3
+        b.release();
+        b.requeue_front(2);
+        assert_eq!(b.peek(), Some(&2));
+        assert_eq!(b.admit(), Some(2));
+        b.release();
+        assert_eq!(b.admit(), Some(3));
+    }
+
+    #[test]
+    fn requeue_front_bypasses_queue_cap_and_keeps_order() {
+        let mut b: Batcher<u32> = Batcher::new(1, 2);
+        b.offer(10).unwrap();
+        b.offer(11).unwrap();
+        assert!(b.offer(12).is_err(), "queue full for fresh load");
+        // a preempted request still re-enters, ahead of the queue
+        b.requeue_front(9);
+        assert_eq!(b.queued(), 3);
+        assert_eq!(b.admit(), Some(9));
+        // multiple victims requeued newest-first restore their relative
+        // order: preempting [a, b] pushes b then a
+        let mut c: Batcher<u32> = Batcher::new(2, 8);
+        c.offer(99).unwrap();
+        c.requeue_front(2);
+        c.requeue_front(1);
+        assert_eq!(c.admit(), Some(1));
+        assert_eq!(c.admit(), Some(2));
     }
 }

@@ -55,6 +55,10 @@ use super::metrics::Metrics;
 /// A generation request submitted to the engine.
 #[derive(Debug)]
 pub struct Request {
+    /// Must be unique among in-flight requests: it seeds the request's
+    /// RNG stream and keys the engine's preemption state (a duplicate
+    /// id would hand a resumed request the wrong spilled stepper). The
+    /// server allocates ids from a process-wide counter.
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
@@ -109,6 +113,34 @@ impl<T: Llm, D: Llm> AnyStepper<T, D> {
             AnyStepper::Adaptive(s) => s.last_round(),
         }
     }
+
+    /// Worst-case new KV slots the next round could consume.
+    fn round_need(&self) -> usize {
+        match self {
+            AnyStepper::Ar(s) => s.round_need(),
+            AnyStepper::Spec(s) => s.round_need(),
+            AnyStepper::Adaptive(s) => s.round_need(),
+        }
+    }
+
+    /// Spill KV state (preemption); only legal between rounds.
+    fn suspend(&mut self, target: &T, draft: &D) -> Result<()> {
+        match self {
+            AnyStepper::Ar(s) => s.suspend(target),
+            AnyStepper::Spec(s) => s.suspend(target, draft),
+            AnyStepper::Adaptive(s) => s.suspend(target, draft),
+        }
+    }
+
+    /// Rebuild KV state after a suspend (shared-prefix hits skip
+    /// recompute; the rest re-prefills through the phase machine).
+    fn resume(&mut self, target: &T, draft: &D) -> Result<()> {
+        match self {
+            AnyStepper::Ar(s) => s.resume(target),
+            AnyStepper::Spec(s) => s.resume(target, draft),
+            AnyStepper::Adaptive(s) => s.resume(target, draft),
+        }
+    }
 }
 
 /// Where one active request stands within the current fused round.
@@ -133,6 +165,25 @@ struct Active<T: Llm, D: Llm> {
     sent: usize,
     /// Node-budget weight this request was charged at admission.
     weight: usize,
+    /// FIFO rank: first-admission order, preserved across preemption.
+    /// Victim selection preempts the highest rank (the youngest), so
+    /// completion-time `swap_remove` shuffling of the active list can
+    /// never cost an older request its KV.
+    seq: u64,
+    started: Instant,
+    first_token_at: Option<f64>,
+}
+
+/// A preempted request's host-side state, parked while its `Request`
+/// waits at the front of the batcher queue. The RNG stream is preserved
+/// verbatim, so a resumed request's tokens are bit-identical to an
+/// uninterrupted run.
+struct Parked<T: Llm, D: Llm> {
+    stepper: AnyStepper<T, D>,
+    rng: Rng,
+    sent: usize,
+    /// Original FIFO rank (a resumed request is still its old age).
+    seq: u64,
     started: Instant,
     first_token_at: Option<f64>,
 }
@@ -252,6 +303,200 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         })
     }
 
+    /// Admission-time guard: a request whose worst-case lifetime
+    /// footprint — committed prefix grown to prompt + max_tokens (plus
+    /// up to one draft tree of overshoot before truncation) and one
+    /// in-flight tree — can never fit a session is answered with a
+    /// clean error instead of a mid-decode failure or a silent
+    /// truncation. Admitted requests are guaranteed to complete in
+    /// full: preemption covers multi-request pressure, and a single
+    /// request always fits by this bound. Accepted requests enter the
+    /// queue.
+    fn offer_request(
+        &self,
+        batcher: &mut Batcher<Request>,
+        in_flight: &mut std::collections::HashSet<u64>,
+        req: Request,
+    ) {
+        // the id keys RNG streams and (crucially) parked preemption
+        // state: a duplicate in-flight id could hand one client another
+        // request's spilled stepper, so refuse it up front
+        if in_flight.contains(&req.id) {
+            self.metrics.add(&self.metrics.rejected, 1);
+            let _ = req.resp.send(Event::Error(format!(
+                "duplicate request id {} (still in flight)",
+                req.id
+            )));
+            return;
+        }
+        let weight = self.request_weight(&req);
+        // saturating: a programmatic max_new of usize::MAX must reject
+        // cleanly, not overflow
+        let need = req
+            .prompt
+            .len()
+            .saturating_add(req.max_new)
+            .saturating_add(2 * weight + 4);
+        // pool-backed capacity is judged in BLOCKS, charging one extra
+        // block for the partial-tail shared-prefix match a session may
+        // pin without fully using; dense capacity is raw slots
+        let fits = |ps: Option<crate::kvcache::PoolStatus>, cap_slots: usize| match ps {
+            Some(p) => need.div_ceil(p.block_size).saturating_add(1) <= p.total_blocks,
+            None => need <= cap_slots,
+        };
+        let target_ok = fits(self.target.pool_status(), self.target.session_capacity());
+        // AR requests never open a draft session, so a smaller draft
+        // cache must not reject them
+        let decoder = req.decoder.as_ref().unwrap_or(&self.cfg.decoder);
+        let draft_ok = matches!(decoder, DecoderConfig::Ar)
+            || fits(self.draft.pool_status(), self.draft.session_capacity());
+        if !(target_ok && draft_ok) {
+            self.metrics.add(&self.metrics.rejected, 1);
+            let _ = req.resp.send(Event::Error(format!(
+                "prompt too long or max_tokens too large: {} prompt tokens + {} \
+                 max_tokens + {} decode transients exceed session capacity",
+                req.prompt.len(),
+                req.max_new,
+                2 * weight + 4,
+            )));
+            return;
+        }
+        let id = req.id;
+        if let Err((req, _)) = batcher.offer(req) {
+            self.metrics.add(&self.metrics.rejected, 1);
+            let _ = req.resp.send(Event::Error("queue full".into()));
+        } else {
+            in_flight.insert(id);
+        }
+    }
+
+    /// Neither model is pool-backed (dense substrates): every headroom
+    /// check is vacuously true.
+    fn no_pools(&self) -> bool {
+        self.target.pool_status().is_none() && self.draft.pool_status().is_none()
+    }
+
+    /// Do both pools hold enough allocatable blocks for one round of
+    /// requests with the given per-request `(slots, uses_draft)` needs?
+    /// Demand is counted block-granularly (each request may open fresh
+    /// partial blocks, so summing raw slots would under-estimate: ten
+    /// requests needing one slot each can require ten blocks), plus one
+    /// spare block per request; AR requests never open a draft session,
+    /// so they charge nothing against the draft pool. Always true on
+    /// dense substrates.
+    fn pools_fit(&self, needs: &[(usize, bool)]) -> bool {
+        let fits = |ps: Option<crate::kvcache::PoolStatus>, draft_side: bool| match ps {
+            Some(p) => {
+                let want: usize = needs
+                    .iter()
+                    .filter(|&&(_, uses_draft)| uses_draft || !draft_side)
+                    .map(|&(n, _)| n.div_ceil(p.block_size) + 1)
+                    .sum();
+                p.free_blocks + p.evictable_blocks >= want
+            }
+            None => true,
+        };
+        fits(self.target.pool_status(), false) && fits(self.draft.pool_status(), true)
+    }
+
+    /// Does this request's decoder drive a draft model?
+    fn uses_draft(&self, req: &Request) -> bool {
+        !matches!(
+            req.decoder.as_ref().unwrap_or(&self.cfg.decoder),
+            DecoderConfig::Ar
+        )
+    }
+
+    /// Would the KV pools still feed every active request's next round
+    /// if `cand` were admitted too? (Always true on dense substrates.)
+    fn admission_headroom(
+        &self,
+        active: &[Active<T, D>],
+        parked: &std::collections::HashMap<u64, Parked<T, D>>,
+        cand: &Request,
+    ) -> bool {
+        if self.no_pools() {
+            return true;
+        }
+        let cand_need = match parked.get(&cand.id) {
+            Some(p) => p.stepper.round_need(),
+            None => cand.prompt.len() + self.request_weight(cand) + 2,
+        };
+        let mut needs: Vec<(usize, bool)> = active
+            .iter()
+            .map(|a| {
+                let ar = matches!(a.stepper, AnyStepper::Ar(_));
+                (a.stepper.round_need(), !ar)
+            })
+            .collect();
+        needs.push((cand_need, self.uses_draft(cand)));
+        self.pools_fit(&needs)
+    }
+
+    /// Preempt active requests (youngest first, by FIFO rank) until
+    /// the pools can feed every remaining request's next round. Victims
+    /// spill their KV
+    /// state, park their steppers and re-enter the queue at the FRONT,
+    /// so preemption never costs a request its FIFO position — and at
+    /// least one request always keeps running, so undersized pools
+    /// degrade to sequential execution instead of deadlock/rejection.
+    fn preempt_for_headroom(
+        &self,
+        active: &mut Vec<Active<T, D>>,
+        batcher: &mut Batcher<Request>,
+        parked: &mut std::collections::HashMap<u64, Parked<T, D>>,
+    ) {
+        if self.no_pools() {
+            return;
+        }
+        while active.len() > 1 {
+            let needs: Vec<(usize, bool)> = active
+                .iter()
+                .map(|a| {
+                    let ar = matches!(a.stepper, AnyStepper::Ar(_));
+                    (a.stepper.round_need(), !ar)
+                })
+                .collect();
+            if self.pools_fit(&needs) {
+                break;
+            }
+            // victim = the youngest by FIFO rank (swap_remove at
+            // completion shuffles the list, so position is not age)
+            let victim = active
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, a)| a.seq)
+                .map(|(i, _)| i)
+                .expect("len > 1");
+            let mut a = active.swap_remove(victim);
+            match a.stepper.suspend(&self.target, &self.draft) {
+                Ok(()) => {
+                    self.metrics.add(&self.metrics.preemptions, 1);
+                    batcher.release_weight(a.weight);
+                    let prev = parked.insert(
+                        a.req.id,
+                        Parked {
+                            stepper: a.stepper,
+                            rng: a.rng,
+                            sent: a.sent,
+                            seq: a.seq,
+                            started: a.started,
+                            first_token_at: a.first_token_at,
+                        },
+                    );
+                    debug_assert!(prev.is_none(), "duplicate in-flight request id");
+                    batcher.requeue_front(a.req);
+                }
+                Err(e) => {
+                    self.metrics.add(&self.metrics.failed, 1);
+                    let _ = a.req.resp.send(Event::Error(e.to_string()));
+                    batcher.release_weight(a.weight);
+                    in_flight.remove(&a.req.id);
+                }
+            }
+        }
+    }
+
     /// Blocking serve loop. Returns when the request channel closes and
     /// all in-flight work drained.
     pub fn run(self, rx: mpsc::Receiver<Request>) -> Arc<Metrics> {
@@ -259,6 +504,15 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue)
                 .with_max_active_weight(self.cfg.max_active_budget);
         let mut active: Vec<Active<T, D>> = Vec::new();
+        // host-side state of preempted requests, keyed by request id
+        // (their `Request` halves wait at the front of the queue)
+        let mut parked: std::collections::HashMap<u64, Parked<T, D>> =
+            std::collections::HashMap::new();
+        // ids currently queued/active/parked (duplicate-id guard)
+        let mut in_flight: std::collections::HashSet<u64> =
+            std::collections::HashSet::new();
+        // FIFO rank source for preemption victim selection
+        let mut next_seq: u64 = 0;
         // the engine-wide flat logits buffer every fused phase writes into
         let mut logits = LogitsBatch::default();
         let mut closed = false;
@@ -267,12 +521,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             // ---- intake --------------------------------------------------
             loop {
                 match rx.try_recv() {
-                    Ok(req) => {
-                        if let Err((req, _)) = batcher.offer(req) {
-                            self.metrics.add(&self.metrics.rejected, 1);
-                            let _ = req.resp.send(Event::Error("queue full".into()));
-                        }
-                    }
+                    Ok(req) => self.offer_request(&mut batcher, &mut in_flight, req),
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
                         closed = true;
@@ -286,29 +535,75 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     break;
                 }
                 match rx.recv() {
-                    Ok(req) => {
-                        if let Err((req, _)) = batcher.offer(req) {
-                            self.metrics.add(&self.metrics.rejected, 1);
-                            let _ = req.resp.send(Event::Error("queue full".into()));
-                        }
-                    }
+                    Ok(req) => self.offer_request(&mut batcher, &mut in_flight, req),
                     Err(_) => break,
                 }
             }
 
             // ---- admission (budget-weighted under heterogeneous
-            // per-request decoders) ----------------------------------------
-            while let Some((req, weight)) = batcher.admit_by(|r| self.request_weight(r)) {
+            // per-request decoders; KV-headroom-gated when pool-backed) ----
+            loop {
+                let can_admit = match batcher.peek() {
+                    None => false,
+                    Some(cand) => {
+                        active.is_empty()
+                            || self.admission_headroom(&active, &parked, cand)
+                    }
+                };
+                if !can_admit {
+                    break;
+                }
+                let admitted = batcher.admit_by(|r| self.request_weight(r));
+                let Some((req, weight)) = admitted else { break };
+                if let Some(mut p) = parked.remove(&req.id) {
+                    // resume a preempted request: re-acquire whatever
+                    // prefix is still cached, re-prefill the rest
+                    match p.stepper.resume(&self.target, &self.draft) {
+                        Ok(()) => {
+                            self.metrics.add(&self.metrics.resumes, 1);
+                            active.push(Active {
+                                req,
+                                stepper: p.stepper,
+                                rng: p.rng,
+                                sent: p.sent,
+                                weight,
+                                seq: p.seq,
+                                started: p.started,
+                                first_token_at: p.first_token_at,
+                            });
+                        }
+                        Err(e) => {
+                            self.metrics.add(&self.metrics.failed, 1);
+                            let _ = req.resp.send(Event::Error(e.to_string()));
+                            batcher.release_weight(weight);
+                            in_flight.remove(&req.id);
+                        }
+                    }
+                    continue;
+                }
                 self.metrics.add(&self.metrics.admitted, 1);
+                // publish the prompt as a shareable prefix (the substrate
+                // decides if/when the blocks become servable) BEFORE the
+                // session opens, so concurrent same-prompt admissions hit;
+                // AR requests never open a draft session, so don't spend
+                // draft-pool blocks caching a prefix nobody will acquire
+                let decoder = req.decoder.as_ref().unwrap_or(&self.cfg.decoder);
+                self.target.cache_prefix(&req.prompt);
+                if !matches!(decoder, DecoderConfig::Ar) {
+                    self.draft.cache_prefix(&req.prompt);
+                }
                 match self.make_stepper(&req) {
                     Ok(stepper) => {
                         let rng = Rng::seed_from_u64(self.cfg.seed ^ req.id);
+                        let seq = next_seq;
+                        next_seq += 1;
                         active.push(Active {
                             req,
                             stepper,
                             rng,
                             sent: 0,
                             weight,
+                            seq,
                             started: Instant::now(),
                             first_token_at: None,
                         });
@@ -317,12 +612,16 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                         self.metrics.add(&self.metrics.failed, 1);
                         let _ = req.resp.send(Event::Error(e.to_string()));
                         batcher.release_weight(weight);
+                        in_flight.remove(&req.id);
                     }
                 }
             }
             if active.is_empty() {
                 continue;
             }
+
+            // ---- KV memory pressure: suspend + requeue before the round --
+            self.preempt_for_headroom(&mut active, &mut batcher, &mut parked);
 
             // ---- one fused round over every active request ---------------
             let mut state = self.run_fused_round(&mut active, &mut logits);
@@ -355,17 +654,32 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     self.metrics.add(&self.metrics.failed, 1);
                     let _ = active[i].req.resp.send(Event::Error(e));
                     let weight = active[i].weight;
+                    in_flight.remove(&active[i].req.id);
                     active.swap_remove(i);
                     state.swap_remove(i);
                     batcher.release_weight(weight);
                 } else if completed {
-                    let stats = active[i].stepper.stats().clone();
+                    let mut stats = active[i].stepper.stats().clone();
+                    // pool-wide KV telemetry rides along in the done event
+                    stats.kv_pool = self.target.pool_status();
+                    if stats.kv_pool.is_some() {
+                        // hits span both model pools for tree decoders
+                        let pools = match active[i].stepper {
+                            AnyStepper::Ar(_) => 1,
+                            _ => 2,
+                        };
+                        self.metrics.record_kv_hit_ratio(
+                            stats.kv_hit_tokens,
+                            active[i].req.prompt.len() * pools,
+                        );
+                    }
                     self.metrics.add(&self.metrics.completed, 1);
                     self.metrics
                         .add(&self.metrics.draft_calls, stats.draft_calls as u64);
                     self.metrics.record_latency(active[i].started.elapsed().as_secs_f64());
                     let _ = active[i].req.resp.send(Event::Done(stats));
                     let weight = active[i].weight;
+                    in_flight.remove(&active[i].req.id);
                     active.swap_remove(i);
                     state.swap_remove(i);
                     batcher.release_weight(weight);
@@ -373,6 +687,14 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     i += 1;
                 }
             }
+
+            // ---- export pool gauges (cheap; stores, not sums) ------------
+            if let Some(ps) = self.target.pool_status() {
+                self.metrics.set_kv_pool(&ps);
+            }
+        }
+        if let Some(ps) = self.target.pool_status() {
+            self.metrics.set_kv_pool(&ps);
         }
         self.metrics
     }

@@ -1,14 +1,17 @@
 //! Serving metrics: counters, latency distributions, the adaptive
 //! controller's telemetry (per-level acceptance rates, per-round
-//! tree-node-budget histogram), and the fused-execution telemetry —
-//! how many requests each fused [`crate::llm::Llm::eval_batch`] call
+//! tree-node-budget histogram), the fused-execution telemetry — how
+//! many requests each fused [`crate::llm::Llm::eval_batch`] call
 //! carried and how full those batches were relative to the round's
-//! in-flight request count.
+//! in-flight request count — and the paged KV-cache telemetry: prefix
+//! hit rate (plus a per-request hit-ratio decile histogram), blocks in
+//! use, copy-on-write copies, evictions, and preemption/resume counts.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::decode::spec::RoundReport;
+use crate::kvcache::PoolStatus;
 
 /// Rounds using more nodes than this share the last histogram bucket.
 pub const NODE_HIST_MAX: usize = 64;
@@ -52,6 +55,24 @@ pub struct Metrics {
     /// call late in a round has low fill (most trees already complete);
     /// the target call always fills the batch.
     fused_fill_hist: Mutex<[u64; FILL_BUCKETS]>,
+    /// Requests suspended (KV spilled, requeued at the queue front) by
+    /// the engine under pool memory pressure.
+    pub preemptions: AtomicU64,
+    /// Suspended requests re-admitted and resumed.
+    pub resumes: AtomicU64,
+    /// Latest target-pool cumulative counters (stored, not summed — the
+    /// pool owns the running totals; see [`Metrics::set_kv_pool`]).
+    pub kv_hit_tokens: AtomicU64,
+    pub kv_lookup_tokens: AtomicU64,
+    pub kv_cow_copies: AtomicU64,
+    pub kv_evictions: AtomicU64,
+    /// Latest target-pool occupancy gauges.
+    pub kv_blocks_in_use: AtomicU64,
+    pub kv_blocks_total: AtomicU64,
+    /// Per-request prefix hit-ratio deciles: bucket `b` counts completed
+    /// requests whose (hit tokens / prompt tokens) fell in
+    /// `[b/10, (b+1)/10)` (full hits land in the last bucket).
+    kv_hit_hist: Mutex<[u64; FILL_BUCKETS]>,
 }
 
 #[derive(Debug, Clone)]
@@ -83,6 +104,23 @@ pub struct Snapshot {
     pub fused_fill_hist: [u64; FILL_BUCKETS],
     /// Mean requests per fused call (0.0 before any fused call).
     pub fused_mean_batch: f64,
+    /// Engine preemptions (suspend + requeue-front) and resumes.
+    pub preemptions: u64,
+    pub resumes: u64,
+    /// Target-pool cumulative prefix-cache counters (0 when dense).
+    pub kv_hit_tokens: u64,
+    pub kv_lookup_tokens: u64,
+    pub kv_cow_copies: u64,
+    pub kv_evictions: u64,
+    /// Target-pool occupancy gauges at snapshot time.
+    pub kv_blocks_in_use: u64,
+    pub kv_blocks_total: u64,
+    /// Cumulative prefix hit rate (hit / looked-up tokens; 0 when no
+    /// lookups happened).
+    pub kv_hit_rate: f64,
+    /// Per-request hit-ratio deciles (bucket `b` = ratio in
+    /// `[b/10, (b+1)/10)`, full hits in the last bucket).
+    pub kv_hit_hist: [u64; FILL_BUCKETS],
 }
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -153,6 +191,31 @@ impl Metrics {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Mirror the target pool's occupancy + cumulative counters into the
+    /// exported gauges (the pool owns the running totals, so this is a
+    /// store, not an accumulate — safe to call every round).
+    pub fn set_kv_pool(&self, ps: &PoolStatus) {
+        let st = Ordering::Relaxed;
+        self.kv_hit_tokens.store(ps.stats.hit_tokens, st);
+        self.kv_lookup_tokens.store(ps.stats.lookup_tokens, st);
+        self.kv_cow_copies.store(ps.stats.cow_copies, st);
+        self.kv_evictions.store(ps.stats.evictions, st);
+        self.kv_blocks_in_use.store(ps.blocks_in_use() as u64, st);
+        self.kv_blocks_total.store(ps.total_blocks as u64, st);
+    }
+
+    /// Fold one completed request's prefix hit ratio (hit tokens over
+    /// prompt tokens, clamped to 1 — resumes can push hits past the
+    /// prompt length) into the decile histogram.
+    pub fn record_kv_hit_ratio(&self, hit_tokens: usize, prompt_tokens: usize) {
+        if prompt_tokens == 0 {
+            return;
+        }
+        let ratio = (hit_tokens as f64 / prompt_tokens as f64).min(1.0);
+        let bucket = ((ratio * FILL_BUCKETS as f64) as usize).min(FILL_BUCKETS - 1);
+        self.kv_hit_hist.lock().unwrap()[bucket] += 1;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let mut lat = self.latencies.lock().unwrap().clone();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -191,6 +254,13 @@ impl Metrics {
         } else {
             self.fused_groups_total.load(Ordering::Relaxed) as f64 / fused_calls as f64
         };
+        let kv_hit_tokens = self.kv_hit_tokens.load(Ordering::Relaxed);
+        let kv_lookup_tokens = self.kv_lookup_tokens.load(Ordering::Relaxed);
+        let kv_hit_rate = if kv_lookup_tokens == 0 {
+            0.0
+        } else {
+            kv_hit_tokens as f64 / kv_lookup_tokens as f64
+        };
         Snapshot {
             admitted: self.admitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -210,6 +280,16 @@ impl Metrics {
             fused_batch_hist,
             fused_fill_hist,
             fused_mean_batch,
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+            resumes: self.resumes.load(Ordering::Relaxed),
+            kv_hit_tokens,
+            kv_lookup_tokens,
+            kv_cow_copies: self.kv_cow_copies.load(Ordering::Relaxed),
+            kv_evictions: self.kv_evictions.load(Ordering::Relaxed),
+            kv_blocks_in_use: self.kv_blocks_in_use.load(Ordering::Relaxed),
+            kv_blocks_total: self.kv_blocks_total.load(Ordering::Relaxed),
+            kv_hit_rate,
+            kv_hit_hist: *self.kv_hit_hist.lock().unwrap(),
         }
     }
 }
@@ -273,6 +353,37 @@ mod tests {
         assert_eq!(s.fused_fill_hist[9], 1);
         assert_eq!(s.fused_fill_hist[2], 1);
         assert!((s.fused_mean_batch - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kv_telemetry_stores_and_histograms() {
+        use crate::kvcache::{KvConfig, KvPool};
+        let m = Metrics::default();
+        let pool = KvPool::new(KvConfig { num_blocks: 8, block_size: 4, share: true });
+        pool.publish(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let match1 = pool.acquire_prefix(&[1, 2, 3, 4, 5, 6, 7, 8], 7);
+        m.set_kv_pool(&pool.status());
+        m.add(&m.preemptions, 2);
+        m.add(&m.resumes, 2);
+        m.record_kv_hit_ratio(7, 8); // 0.875 -> bucket 8
+        m.record_kv_hit_ratio(12, 8); // clamped full hit -> bucket 9
+        m.record_kv_hit_ratio(0, 8); // miss -> bucket 0
+        m.record_kv_hit_ratio(3, 0); // no prompt: ignored
+        let s = m.snapshot();
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.resumes, 2);
+        assert_eq!(s.kv_hit_tokens, 7);
+        assert_eq!(s.kv_lookup_tokens, 7);
+        assert!((s.kv_hit_rate - 1.0).abs() < 1e-12);
+        assert_eq!(s.kv_blocks_total, 8);
+        assert!(s.kv_blocks_in_use >= 1, "leased shared blocks count as in use");
+        assert_eq!(s.kv_hit_hist[8], 1);
+        assert_eq!(s.kv_hit_hist[9], 1);
+        assert_eq!(s.kv_hit_hist[0], 1);
+        assert_eq!(s.kv_hit_hist.iter().sum::<u64>(), 3);
+        for l in &match1.leases {
+            pool.release_lease(l);
+        }
     }
 
     #[test]

@@ -126,21 +126,37 @@ pub(crate) fn done_json(stats: &crate::decode::DecodeStats) -> Json {
     }
     let nodes_hist =
         Json::Obj(hist.into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect());
-    Json::obj(vec![(
-        "done",
-        Json::obj(vec![
-            ("generated", stats.generated.into()),
-            ("block_efficiency", stats.block_efficiency().into()),
-            ("decode_calls", stats.decode_calls.into()),
-            ("draft_calls", stats.draft_calls.into()),
-            ("accepted", stats.accepted_draft_tokens.into()),
-            ("bonus_rounds", stats.bonus_tokens.into()),
-            ("tree_nodes", stats.tree_nodes.into()),
-            ("accept_rate_by_level", accept_rate_by_level),
-            ("nodes_per_round_hist", nodes_hist),
-            ("wall_secs", stats.wall.as_secs_f64().into()),
-        ]),
-    )])
+    let mut fields = vec![
+        ("generated", stats.generated.into()),
+        ("block_efficiency", stats.block_efficiency().into()),
+        ("decode_calls", stats.decode_calls.into()),
+        ("draft_calls", stats.draft_calls.into()),
+        ("accepted", stats.accepted_draft_tokens.into()),
+        ("bonus_rounds", stats.bonus_tokens.into()),
+        ("tree_nodes", stats.tree_nodes.into()),
+        ("accept_rate_by_level", accept_rate_by_level),
+        ("nodes_per_round_hist", nodes_hist),
+        ("kv_hit_tokens", stats.kv_hit_tokens.into()),
+        ("preemptions", stats.preemptions.into()),
+    ];
+    // pool-wide paged-KV telemetry (engine-attached; absent on dense
+    // substrates and single-shot decodes)
+    if let Some(ps) = &stats.kv_pool {
+        fields.push((
+            "kv_pool",
+            Json::obj(vec![
+                ("hit_rate", ps.stats.hit_rate().into()),
+                ("hit_tokens", (ps.stats.hit_tokens as usize).into()),
+                ("lookup_tokens", (ps.stats.lookup_tokens as usize).into()),
+                ("cow_copies", (ps.stats.cow_copies as usize).into()),
+                ("evictions", (ps.stats.evictions as usize).into()),
+                ("blocks_in_use", ps.blocks_in_use().into()),
+                ("blocks_total", ps.total_blocks.into()),
+            ]),
+        ));
+    }
+    fields.push(("wall_secs", stats.wall.as_secs_f64().into()));
+    Json::obj(vec![("done", Json::obj(fields))])
 }
 
 fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>) -> Result<()> {

@@ -54,7 +54,15 @@ pub struct ArStepper<T: Llm> {
     /// Flat logits buffer for the single-request `step` path.
     logits: LogitsBatch,
     phase: Phase,
+    /// The original prompt (immutable; with `out` it reconstructs the
+    /// full logical sequence for suspend/resume).
     prompt: Vec<u32>,
+    /// The chain the next prefill evaluates: the prompt initially, the
+    /// whole logical sequence after a suspend.
+    prefill: Vec<u32>,
+    /// Tokens of `prefill` already committed via a shared KV prefix
+    /// (skipped by the prefill chain).
+    prefill_start: usize,
     pub out: Vec<u32>,
     pub stats: DecodeStats,
     max_new: usize,
@@ -72,9 +80,13 @@ impl<T: Llm> ArStepper<T> {
         if prompt.is_empty() {
             bail!("prompt must be non-empty");
         }
+        let sess = target.begin_with_prefix(prompt)?;
+        let prefill_start = target.prefix_len(&sess);
+        debug_assert!(prefill_start < prompt.len());
+        let stats = DecodeStats { kv_hit_tokens: prefill_start, ..Default::default() };
         Ok(Self {
             sampling,
-            sess: target.begin()?,
+            sess,
             lp: None,
             sel: SelectScratch::default(),
             probs: Vec::new(),
@@ -83,10 +95,12 @@ impl<T: Llm> ArStepper<T> {
             logits: LogitsBatch::default(),
             phase: Phase::Idle,
             prompt: prompt.to_vec(),
+            prefill: prompt.to_vec(),
+            prefill_start,
             // clamped like SpecStepper::new: a programmatic max_new of
             // usize::MAX must not abort on the reservation
             out: Vec::with_capacity(max_new.min(1 << 20)),
-            stats: DecodeStats::default(),
+            stats,
             max_new,
             started: Instant::now(),
             done: false,
@@ -104,6 +118,47 @@ impl<T: Llm> ArStepper<T> {
         StepOutcome::Done
     }
 
+    /// Worst-case new KV slots the next round could consume (see
+    /// [`super::spec::SpecStepper::round_need`]).
+    pub fn round_need(&self) -> usize {
+        if self.lp.is_none() {
+            self.prefill.len() - self.prefill_start + 2
+        } else {
+            2
+        }
+    }
+
+    /// Spill KV state (engine preemption): the session is dropped and
+    /// the prefill chain becomes the full logical sequence; the next
+    /// round re-prefills it and re-derives the next-token distribution
+    /// from the same context (bit-identical, no RNG consumed). Only
+    /// legal between rounds.
+    pub fn suspend(&mut self, target: &T) -> Result<()> {
+        if !matches!(self.phase, Phase::Idle) {
+            bail!("suspend mid-round");
+        }
+        if self.done {
+            bail!("suspend after completion");
+        }
+        self.prefill.clear();
+        self.prefill.extend_from_slice(&self.prompt);
+        self.prefill.extend_from_slice(&self.out);
+        self.prefill_start = 0;
+        self.lp = None;
+        self.sess = target.begin()?;
+        self.stats.preemptions += 1;
+        Ok(())
+    }
+
+    /// Re-admit after a suspend: whatever prefix of the spilled sequence
+    /// is still radix-cached is mapped back without recompute.
+    pub fn resume(&mut self, target: &T) -> Result<()> {
+        self.sess = target.begin_with_prefix(&self.prefill)?;
+        self.prefill_start = target.prefix_len(&self.sess);
+        self.stats.kv_hit_tokens += self.prefill_start;
+        Ok(())
+    }
+
     /// Start a round: sample the next token from the current distribution
     /// and stage its evaluation, or stage the prompt prefill on round 1.
     /// [`RoundStart::Finished`] means the request just finished without
@@ -115,16 +170,20 @@ impl<T: Llm> ArStepper<T> {
             return Ok(RoundStart::Finished);
         }
         let Some(lp) = &self.lp else {
-            // prefill round: evaluate the whole prompt chain
+            // prefill round: evaluate the not-yet-cached tail of the
+            // prefill chain (the whole prompt unless a shared KV prefix
+            // or a pre-suspend commit already covers the head)
             let mut nodes = self.node_pool.pop().unwrap_or_default();
             nodes.clear();
-            nodes.extend(self.prompt.iter().enumerate().map(|(i, &t)| {
-                if i == 0 {
-                    EvalNode::root(t)
-                } else {
-                    EvalNode::child(t, i - 1)
-                }
-            }));
+            nodes.extend(self.prefill[self.prefill_start..].iter().enumerate().map(
+                |(i, &t)| {
+                    if i == 0 {
+                        EvalNode::root(t)
+                    } else {
+                        EvalNode::child(t, i - 1)
+                    }
+                },
+            ));
             self.phase = Phase::AwaitPrefill { nodes };
             return Ok(RoundStart::Started);
         };

@@ -49,6 +49,17 @@ pub struct DecodeStats {
     /// order — the actual per-round budget trajectory (histogrammed by
     /// the serving metrics; hard-capped by `DecoderConfig::Adaptive`).
     pub round_nodes: Vec<u32>,
+    /// Prompt/prefix tokens served from the shared KV cache instead of
+    /// being (re)computed — summed over both models and over resumes
+    /// after preemption. 0 on dense substrates.
+    pub kv_hit_tokens: usize,
+    /// Times this request was preempted (suspended + later resumed) by
+    /// the engine under KV memory pressure.
+    pub preemptions: usize,
+    /// Pool-wide KV occupancy/telemetry at completion, attached by the
+    /// serving engine when the substrate is pool-backed (None for
+    /// single-shot decodes and dense substrates).
+    pub kv_pool: Option<crate::kvcache::PoolStatus>,
 }
 
 impl DecodeStats {

@@ -406,6 +406,10 @@ pub struct SpecStepper<T: Llm, D: Llm> {
     /// `has_report`).
     report: RoundReport,
     has_report: bool,
+    /// The original prompt (immutable): with `out` it reconstructs the
+    /// full logical sequence, which is all suspend/resume needs to spill
+    /// and rebuild KV state losslessly.
+    prompt: Vec<u32>,
     pub out: Vec<u32>,
     pub stats: DecodeStats,
     max_new: usize,
@@ -434,7 +438,17 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         let depth = strategy.depth().max(1);
         let reserve_rounds = max_new.min(1 << 20);
         let out = Vec::with_capacity(reserve_rounds + max_nodes + 2);
-        let mut stats = DecodeStats::default();
+        // prefix-hinted sessions: a pool-backed substrate maps whatever
+        // radix-cached prefix of the prompt it holds; those tokens are
+        // already committed, so the tails start at the first uncached one
+        // (cap at len-1 guaranteed by the trait contract — the tail chain
+        // is never empty)
+        let tsess = target.begin_with_prefix(prompt)?;
+        let dsess = draft.begin_with_prefix(prompt)?;
+        let tm = target.prefix_len(&tsess);
+        let dm = draft.prefix_len(&dsess);
+        debug_assert!(tm < prompt.len() && dm < prompt.len());
+        let mut stats = DecodeStats { kv_hit_tokens: tm + dm, ..Default::default() };
         stats.round_nodes.reserve(reserve_rounds + 1);
         stats.level_attempts.reserve(depth);
         stats.level_accepts.reserve(depth);
@@ -445,15 +459,15 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         report.level_trials.reserve(depth);
         let tail_cap = prompt.len() + max_nodes + 2;
         let mut tail_draft = Vec::with_capacity(tail_cap);
-        tail_draft.extend_from_slice(prompt);
+        tail_draft.extend_from_slice(&prompt[dm..]);
         let mut tail_target = Vec::with_capacity(tail_cap);
-        tail_target.extend_from_slice(prompt);
+        tail_target.extend_from_slice(&prompt[tm..]);
         Ok(Self {
             strategy,
             rule,
             sampling,
-            dsess: draft.begin()?,
-            tsess: target.begin()?,
+            dsess,
+            tsess,
             tail_draft,
             tail_target,
             phase: Phase::Idle,
@@ -472,6 +486,7 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             logits: LogitsBatch::default(),
             report,
             has_report: false,
+            prompt: prompt.to_vec(),
             out,
             stats,
             max_new,
@@ -499,6 +514,63 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
     /// on the committed chain, never on how past trees were shaped.
     pub fn set_strategy(&mut self, strategy: Box<dyn TreeStrategy>) {
         self.strategy = strategy;
+    }
+
+    /// Worst-case new KV slots the next round could consume (tail chain
+    /// + a full draft tree + residual/bonus margin) — what the engine's
+    /// pre-round preemption check sums across active requests.
+    pub fn round_need(&self) -> usize {
+        self.round_need_with_budget(self.strategy.max_nodes())
+    }
+
+    /// [`SpecStepper::round_need`] under a caller-supplied tree budget —
+    /// for wrappers that may swap the strategy before the round starts
+    /// (the adaptive controller reports its hard budget, since the
+    /// current strategy's size is only last round's choice).
+    pub fn round_need_with_budget(&self, max_nodes: usize) -> usize {
+        self.tail_draft.len().max(self.tail_target.len()) + max_nodes + 2
+    }
+
+    /// Spill this request's KV state (engine preemption): both sessions
+    /// are dropped — releasing every pool block they lease — and the
+    /// per-model tails are rebuilt as the *full* logical sequence
+    /// (prompt + generated), so the next round's ordinary tail-chain
+    /// prefill restores the cache. Only legal between rounds. Consumes
+    /// no RNG, so a preempted request's token stream is bit-identical to
+    /// an uninterrupted one.
+    pub fn suspend(&mut self, target: &T, draft: &D) -> Result<()> {
+        if !matches!(self.phase, Phase::Idle) || self.round.is_some() {
+            bail!("suspend mid-round");
+        }
+        if self.done {
+            bail!("suspend after completion");
+        }
+        self.tail_target.clear();
+        self.tail_target.extend_from_slice(&self.prompt);
+        self.tail_target.extend_from_slice(&self.out);
+        self.tail_draft.clear();
+        self.tail_draft.extend_from_slice(&self.prompt);
+        self.tail_draft.extend_from_slice(&self.out);
+        // empty placeholder sessions: a paged `begin` leases nothing
+        self.tsess = target.begin()?;
+        self.dsess = draft.begin()?;
+        self.stats.preemptions += 1;
+        Ok(())
+    }
+
+    /// Re-admit a suspended request: re-open both sessions with the
+    /// spilled sequence as prefix hint — whatever prefix is still
+    /// radix-cached is mapped back without recompute, the rest stays in
+    /// the tails and is re-prefilled by the next round's phase machine.
+    pub fn resume(&mut self, target: &T, draft: &D) -> Result<()> {
+        self.tsess = target.begin_with_prefix(&self.tail_target)?;
+        let tm = target.prefix_len(&self.tsess);
+        self.tail_target.drain(..tm);
+        self.dsess = draft.begin_with_prefix(&self.tail_draft)?;
+        let dm = draft.prefix_len(&self.dsess);
+        self.tail_draft.drain(..dm);
+        self.stats.kv_hit_tokens += tm + dm;
+        Ok(())
     }
 
     fn finish(&mut self) -> StepOutcome {

@@ -1,0 +1,49 @@
+//! Paged KV-cache management: block-granular allocation, radix-tree
+//! prefix sharing, copy-on-write branch publication, LRU eviction, and
+//! the session suspend/resume substrate the engine's preemption builds
+//! on.
+//!
+//! The serving problem this solves: RSD's draft trees make the KV cache
+//! the scaling bottleneck — every tree branch shares a committed
+//! prefix, and in a serving fleet most requests share a system-prompt
+//! prefix — yet a monolithic per-session cache region recomputes shared
+//! context and over-reserves memory per request. This module replaces
+//! the per-session dense slot range with a fleet-wide pool:
+//!
+//! * [`KvPool`] — the fixed-size physical block pool (free list +
+//!   refcounts) with an embedded radix prefix index and LRU eviction of
+//!   unreferenced cached prefixes;
+//! * [`PagedSlots`] — a session's lease: read-only shared prefix blocks
+//!   plus exclusively owned private blocks, exposing the `slot =
+//!   block * block_size + offset` address space that
+//!   [`crate::tree::SessionCore`] (and the PJRT mask construction)
+//!   consume;
+//! * [`PoolStatus`] / [`KvStats`] — the occupancy and hit/CoW/eviction
+//!   telemetry surfaced through [`crate::llm::Llm::pool_status`], the
+//!   engine metrics and the server `done` payload.
+//!
+//! Ownership rules (enforced by refcounts, exercised by the tests in
+//! this module and `rust/tests/kvcache.rs`):
+//!
+//! 1. A session never writes a shared block. Draft-tree branches and
+//!    post-verification commits diverge into private slots, so no copy
+//!    happens at divergence time; the CoW cost is only paid when a
+//!    divergent prefix is *published* into the radix index
+//!    ([`KvPool::publish`]), and only for the overlapping head rows.
+//! 2. A cached prefix with zero leases stays resident and servable
+//!    until [`KvPool::alloc_block`] reclaims it (LRU, leaf-first).
+//! 3. Suspending a session (engine preemption) drops its lease — every
+//!    private block returns to the pool, shared blocks demote to cached
+//!    prefixes — while the host-side token state stays in the stepper;
+//!    resuming re-acquires whatever is still cached and re-prefills the
+//!    rest through the ordinary phase machine, consuming no RNG, so
+//!    token streams are bit-identical with and without preemption.
+
+pub mod pool;
+pub mod table;
+
+pub use pool::{
+    KvConfig, KvPool, KvStats, PoolExhausted, PoolStatus, PrefixMatch, SharedLease,
+    MAX_BLOCK_SIZE,
+};
+pub use table::PagedSlots;

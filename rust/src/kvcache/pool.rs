@@ -1,0 +1,688 @@
+//! The shared block pool: fixed-size physical KV blocks with free-list
+//! allocation, a radix prefix index deduplicating committed prefixes
+//! across sessions, and LRU eviction of unreferenced cached prefixes.
+//!
+//! One pool exists per model (target and draft KV contents differ, so
+//! they never share blocks). All state sits behind one mutex: the
+//! engine core is single-threaded and block operations happen at block
+//! granularity (once per `block_size` tokens), so contention is nil and
+//! the per-call cost is a handful of vector ops — no allocation in
+//! steady state (every internal vector is capacity-reserved at
+//! construction; radix nodes are only created by [`KvPool::publish`],
+//! which runs once per admitted prompt, off the decode hot path).
+//!
+//! # Refcount scheme
+//!
+//! `refs[b]` counts *session leases* of block `b` (a private lease from
+//! [`super::table::PagedSlots`] or a shared lease on a radix node's
+//! block). A block is always in exactly one of three states:
+//!
+//! * **free** — on the free list, `refs == 0`;
+//! * **private** — leased by one session (`refs == 1`), holds that
+//!   session's pending/committed slots;
+//! * **radix-resident** — owned by a radix node; `refs` equals the
+//!   node's shared-lease count. With `refs == 0` the node is a *cached
+//!   prefix*: still servable to future sessions, and the LRU eviction
+//!   pool [`KvPool::alloc_block`] reclaims from under memory pressure.
+//!
+//! # Content-validity contract
+//!
+//! The radix index stores *token identity*, not KV data. Whether a
+//! matched block's KV contents are actually valid is the backing
+//! substrate's contract: [`crate::sim::SimLm`] recomputes logits from
+//! tokens, so a published block is valid immediately (it may be
+//! published at admission, before any forward pass); a real paged
+//! backend must only publish after the prefill that fills the block has
+//! executed (and holds per-session caches today — see
+//! `crate::model`), which is why publication goes through the
+//! substrate-owned [`crate::llm::Llm::cache_prefix`] hook rather than
+//! being hard-wired into the engine.
+
+use std::fmt;
+use std::sync::Mutex;
+
+/// Occupancy masks in [`super::table::PagedSlots`] are `u64`.
+pub const MAX_BLOCK_SIZE: usize = 64;
+
+/// Pool geometry + feature switch.
+#[derive(Debug, Clone, Copy)]
+pub struct KvConfig {
+    /// Physical blocks in the pool.
+    pub num_blocks: usize,
+    /// Tokens (KV slots) per block; at most [`MAX_BLOCK_SIZE`].
+    pub block_size: usize,
+    /// Enable the radix prefix index (`false` = pure paged allocation,
+    /// every lookup misses — the A/B baseline of `benches/kvcache.rs`).
+    pub share: bool,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        Self { num_blocks: 512, block_size: 16, share: true }
+    }
+}
+
+/// Typed allocation failure: every physical block is leased or pinned by
+/// a shared prefix. Callers that can shed load (the engine) preempt a
+/// session instead of failing the request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted;
+
+impl fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "KV block pool exhausted (all blocks leased or pinned)")
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Cumulative pool counters (monotonic).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvStats {
+    /// Prefix lookups ([`KvPool::acquire_prefix`] calls).
+    pub lookups: u64,
+    /// Tokens satisfied from the radix index across all lookups.
+    pub hit_tokens: u64,
+    /// Tokens requested across all lookups.
+    pub lookup_tokens: u64,
+    /// Copy-on-write branch copies: a published prefix diverged from a
+    /// cached block mid-block, so the shared head rows were (logically)
+    /// copied into the new branch block.
+    pub cow_copies: u64,
+    /// Tokens covered by those copies.
+    pub cow_tokens: u64,
+    /// Radix nodes evicted (each frees one block).
+    pub evictions: u64,
+    /// Blocks registered in the radix index by [`KvPool::publish`].
+    pub published_blocks: u64,
+}
+
+impl KvStats {
+    /// Fraction of looked-up tokens served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookup_tokens == 0 {
+            0.0
+        } else {
+            self.hit_tokens as f64 / self.lookup_tokens as f64
+        }
+    }
+}
+
+/// Point-in-time pool occupancy, plus the cumulative [`KvStats`].
+#[derive(Debug, Clone, Copy)]
+pub struct PoolStatus {
+    pub block_size: usize,
+    pub total_blocks: usize,
+    /// Immediately allocatable blocks.
+    pub free_blocks: usize,
+    /// Radix-resident blocks reclaimable by LRU eviction (no session
+    /// leases anywhere in their subtree).
+    pub evictable_blocks: usize,
+    /// Blocks held by sessions (private leases + lease-pinned radix
+    /// blocks and their ancestors).
+    pub leased_blocks: usize,
+    pub stats: KvStats,
+}
+
+impl PoolStatus {
+    /// Slots a session could obtain right now (free + evictable).
+    pub fn available_slots(&self) -> usize {
+        (self.free_blocks + self.evictable_blocks) * self.block_size
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.leased_blocks
+    }
+}
+
+/// One shared (read-only) reference to a radix node's block, as handed
+/// to a session by [`KvPool::acquire_prefix`]. `used` is how many of the
+/// block's leading tokens the session maps (the full block for interior
+/// matches; possibly fewer for the last, partially matched block).
+#[derive(Debug, Clone, Copy)]
+pub struct SharedLease {
+    pub node: usize,
+    pub block: u32,
+    pub used: usize,
+}
+
+/// Result of a prefix lookup: leases (already refcounted) covering the
+/// first `matched` tokens of the queried prefix.
+#[derive(Debug, Default)]
+pub struct PrefixMatch {
+    pub leases: Vec<SharedLease>,
+    pub matched: usize,
+}
+
+const NO_NODE: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Node {
+    /// Exactly `block_size` committed tokens.
+    tokens: Vec<u32>,
+    block: u32,
+    parent: usize,
+    children: Vec<usize>,
+    /// Live shared leases on this node.
+    leases: u32,
+    /// Leased nodes in this node's subtree (itself included). A node is
+    /// evictable-reachable iff this is 0 — maintained incrementally on
+    /// lease/release so occupancy queries on the decode hot path are
+    /// O(1), not a full-tree scan.
+    pinned_desc: u32,
+    /// Last-touched tick (LRU victim selection).
+    lru: u64,
+    live: bool,
+}
+
+#[derive(Debug)]
+struct PoolInner {
+    /// Session-lease count per block (see module docs).
+    refs: Vec<u32>,
+    free: Vec<u32>,
+    nodes: Vec<Node>,
+    node_free: Vec<usize>,
+    /// Children of the virtual radix root.
+    roots: Vec<usize>,
+    tick: u64,
+    stats: KvStats,
+    /// Live radix nodes with `pinned_desc == 0` (reclaimable closure),
+    /// maintained incrementally.
+    evictable: usize,
+}
+
+/// The shared paged KV-cache pool (see module docs). Cheap to share via
+/// `Arc`; all methods take `&self`.
+#[derive(Debug)]
+pub struct KvPool {
+    block_size: usize,
+    num_blocks: usize,
+    share: bool,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvConfig) -> Self {
+        assert!(cfg.num_blocks >= 1, "pool needs at least one block");
+        assert!(
+            (1..=MAX_BLOCK_SIZE).contains(&cfg.block_size),
+            "block_size must be in 1..={MAX_BLOCK_SIZE}"
+        );
+        // allocate low blocks first (pop from the back)
+        let free: Vec<u32> = (0..cfg.num_blocks as u32).rev().collect();
+        Self {
+            block_size: cfg.block_size,
+            num_blocks: cfg.num_blocks,
+            share: cfg.share,
+            inner: Mutex::new(PoolInner {
+                refs: vec![0; cfg.num_blocks],
+                free,
+                nodes: Vec::new(),
+                node_free: Vec::new(),
+                roots: Vec::new(),
+                tick: 0,
+                stats: KvStats::default(),
+                evictable: 0,
+            }),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    /// Total KV slots the pool backs.
+    pub fn total_slots(&self) -> usize {
+        self.num_blocks * self.block_size
+    }
+
+    /// Lease one private block (evicting cached prefixes LRU-first when
+    /// the free list is empty).
+    pub fn alloc_block(&self) -> Result<u32, PoolExhausted> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(b) = g.free.pop() {
+                debug_assert_eq!(g.refs[b as usize], 0);
+                g.refs[b as usize] = 1;
+                return Ok(b);
+            }
+            if !Self::evict_one(&mut g) {
+                return Err(PoolExhausted);
+            }
+        }
+    }
+
+    /// Return a private block (lease count must be exactly 1).
+    pub fn release_block(&self, block: u32) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert_eq!(g.refs[block as usize], 1, "releasing a non-private block");
+        g.refs[block as usize] = 0;
+        g.free.push(block);
+    }
+
+    /// Look up the longest cached prefix of `tokens`, capped at
+    /// `max_tokens`, taking a shared lease on every matched node.
+    /// Interior matches are whole blocks; the final block may match
+    /// partially (the caller attends only its leading `used` slots —
+    /// sharing without copying, the branch diverges into the session's
+    /// private blocks).
+    pub fn acquire_prefix(&self, tokens: &[u32], max_tokens: usize) -> PrefixMatch {
+        let mut out = PrefixMatch::default();
+        let cap = tokens.len().min(max_tokens);
+        let mut g = self.inner.lock().unwrap();
+        g.stats.lookups += 1;
+        g.stats.lookup_tokens += cap as u64;
+        if !self.share || cap == 0 {
+            return out;
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        let mut children: &[usize] = &g.roots;
+        let mut pos = 0usize;
+        let mut path: Vec<(usize, usize)> = Vec::new(); // (node, used)
+        loop {
+            let want = &tokens[pos..cap];
+            if want.is_empty() {
+                break;
+            }
+            // longest common head among this level's children
+            let mut best: Option<(usize, usize)> = None;
+            for &id in children {
+                let n = &g.nodes[id];
+                debug_assert!(n.live);
+                let k = n
+                    .tokens
+                    .iter()
+                    .zip(want.iter())
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                if k > best.map_or(0, |(_, k)| k) {
+                    best = Some((id, k));
+                }
+            }
+            let Some((id, k)) = best else { break };
+            path.push((id, k));
+            pos += k;
+            if k < self.block_size {
+                break; // partial match: the walk cannot continue below it
+            }
+            children = &g.nodes[id].children;
+        }
+        for &(id, used) in &path {
+            let n = &mut g.nodes[id];
+            n.leases += 1;
+            n.lru = tick;
+            let block = n.block;
+            let newly_leased = n.leases == 1;
+            g.refs[block as usize] += 1;
+            if newly_leased {
+                Self::pin_path(&mut g, id);
+            }
+            out.leases.push(SharedLease { node: id, block, used });
+        }
+        out.matched = pos;
+        g.stats.hit_tokens += pos as u64;
+        out
+    }
+
+    /// Drop one shared lease previously handed out by
+    /// [`KvPool::acquire_prefix`]. The node stays in the index as an
+    /// evictable cached prefix once its lease count reaches zero.
+    pub fn release_lease(&self, lease: &SharedLease) {
+        let mut g = self.inner.lock().unwrap();
+        let n = &mut g.nodes[lease.node];
+        debug_assert!(n.live && n.leases > 0);
+        n.leases -= 1;
+        let block = n.block;
+        let last_lease = n.leases == 0;
+        debug_assert!(g.refs[block as usize] > 0);
+        g.refs[block as usize] -= 1;
+        if last_lease {
+            Self::unpin_path(&mut g, lease.node);
+        }
+    }
+
+    /// A node became leased: bump the leased-descendant count of its
+    /// whole root path (nodes leaving `pinned_desc == 0` stop being
+    /// evictable).
+    fn pin_path(g: &mut PoolInner, mut id: usize) {
+        while id != NO_NODE {
+            if g.nodes[id].pinned_desc == 0 {
+                g.evictable -= 1;
+            }
+            g.nodes[id].pinned_desc += 1;
+            id = g.nodes[id].parent;
+        }
+    }
+
+    /// A node dropped its last lease: the reverse of
+    /// [`KvPool::pin_path`].
+    fn unpin_path(g: &mut PoolInner, mut id: usize) {
+        while id != NO_NODE {
+            debug_assert!(g.nodes[id].pinned_desc > 0);
+            g.nodes[id].pinned_desc -= 1;
+            if g.nodes[id].pinned_desc == 0 {
+                g.evictable += 1;
+            }
+            id = g.nodes[id].parent;
+        }
+    }
+
+    /// Register the full-block chunks of `tokens` in the radix index so
+    /// future sessions can share them. Best-effort: uses free blocks
+    /// only (never evicts warmer prefixes to cache a colder one) and
+    /// stops at the first chunk it cannot place. Chunks already cached
+    /// are deduplicated (LRU-touched, no new block). A chunk diverging
+    /// mid-block from a cached sibling is a copy-on-write branch: the
+    /// shared head rows are (logically) copied into the fresh branch
+    /// block and counted in [`KvStats::cow_copies`] / `cow_tokens`.
+    pub fn publish(&self, tokens: &[u32]) {
+        if !self.share {
+            return;
+        }
+        let b = self.block_size;
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let mut parent = NO_NODE;
+        for chunk in tokens.chunks_exact(b) {
+            // dedupe: exact chunk already cached -> descend
+            let mut exact: Option<usize> = None;
+            let mut overlap = 0usize;
+            {
+                let children: &[usize] = if parent == NO_NODE {
+                    &g.roots
+                } else {
+                    &g.nodes[parent].children
+                };
+                for &id in children {
+                    let n = &g.nodes[id];
+                    let k = n
+                        .tokens
+                        .iter()
+                        .zip(chunk.iter())
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    if k == b {
+                        exact = Some(id);
+                        break;
+                    }
+                    overlap = overlap.max(k);
+                }
+            }
+            if let Some(id) = exact {
+                g.nodes[id].lru = tick;
+                parent = id;
+                continue;
+            }
+            // new branch: needs a block; free-list only (no eviction)
+            let Some(block) = g.free.pop() else { break };
+            debug_assert_eq!(g.refs[block as usize], 0);
+            if overlap > 0 {
+                g.stats.cow_copies += 1;
+                g.stats.cow_tokens += overlap as u64;
+            }
+            g.stats.published_blocks += 1;
+            g.evictable += 1; // fresh nodes carry no leases
+            let node = Node {
+                tokens: chunk.to_vec(),
+                block,
+                parent,
+                children: Vec::new(),
+                leases: 0,
+                pinned_desc: 0,
+                lru: tick,
+                live: true,
+            };
+            let id = match g.node_free.pop() {
+                Some(id) => {
+                    g.nodes[id] = node;
+                    id
+                }
+                None => {
+                    g.nodes.push(node);
+                    g.nodes.len() - 1
+                }
+            };
+            if parent == NO_NODE {
+                g.roots.push(id);
+            } else {
+                g.nodes[parent].children.push(id);
+            }
+            parent = id;
+        }
+    }
+
+    /// Evict the least-recently-used unreferenced radix leaf, freeing
+    /// its block. Returns false when nothing is evictable.
+    fn evict_one(g: &mut PoolInner) -> bool {
+        let mut victim: Option<(usize, u64)> = None;
+        for (id, n) in g.nodes.iter().enumerate() {
+            if n.live && n.leases == 0 && n.children.is_empty() {
+                let colder = match victim {
+                    None => true,
+                    Some((_, lru)) => n.lru < lru,
+                };
+                if colder {
+                    victim = Some((id, n.lru));
+                }
+            }
+        }
+        let Some((id, _)) = victim else { return false };
+        let (block, parent) = {
+            let n = &mut g.nodes[id];
+            debug_assert_eq!(n.pinned_desc, 0, "leafless unleased node must be unpinned");
+            n.live = false;
+            (n.block, n.parent)
+        };
+        if parent == NO_NODE {
+            g.roots.retain(|&c| c != id);
+        } else {
+            g.nodes[parent].children.retain(|&c| c != id);
+        }
+        debug_assert_eq!(g.refs[block as usize], 0, "evicting a leased block");
+        g.evictable -= 1;
+        g.free.push(block);
+        g.node_free.push(id);
+        g.stats.evictions += 1;
+        true
+    }
+
+    /// Evict every unreferenced cached prefix (test/maintenance hook —
+    /// e.g. forcing the suspend→evict→resume path).
+    pub fn evict_all(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let mut n = 0;
+        while Self::evict_one(&mut g) {
+            n += 1;
+        }
+        n
+    }
+
+    /// Blocks a session could obtain right now (free + evictable). O(1)
+    /// — the evictable count is maintained incrementally by the
+    /// lease/release/publish/evict transitions, so this is safe to call
+    /// on every decode-path capacity query.
+    pub fn available_blocks(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.free.len() + g.evictable
+    }
+
+    pub fn status(&self) -> PoolStatus {
+        let g = self.inner.lock().unwrap();
+        // leased = total - free - evictable (every non-free block is
+        // either an evictable radix block or held/pinned by sessions; a
+        // radix block is evictable when no node in its subtree holds a
+        // lease — eviction is leaf-first, so a pinned descendant pins
+        // the whole path)
+        let free_blocks = g.free.len();
+        let evictable_blocks = g.evictable;
+        PoolStatus {
+            block_size: self.block_size,
+            total_blocks: self.num_blocks,
+            free_blocks,
+            evictable_blocks,
+            leased_blocks: g.refs.len() - free_blocks - evictable_blocks,
+            stats: g.stats,
+        }
+    }
+
+    pub fn stats(&self) -> KvStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(blocks: usize, bs: usize) -> KvPool {
+        KvPool::new(KvConfig { num_blocks: blocks, block_size: bs, share: true })
+    }
+
+    fn seq(n: usize, base: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i + base).collect()
+    }
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let p = pool(4, 4);
+        let a = p.alloc_block().unwrap();
+        let b = p.alloc_block().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.status().free_blocks, 2);
+        p.release_block(a);
+        p.release_block(b);
+        assert_eq!(p.status().free_blocks, 4);
+        for _ in 0..4 {
+            p.alloc_block().unwrap();
+        }
+        assert_eq!(p.alloc_block(), Err(PoolExhausted));
+    }
+
+    #[test]
+    fn publish_then_acquire_hits_full_blocks() {
+        let p = pool(8, 4);
+        let prompt = seq(10, 0); // 2 full blocks + 2 leftover
+        p.publish(&prompt);
+        assert_eq!(p.stats().published_blocks, 2);
+        let m = p.acquire_prefix(&prompt, prompt.len() - 1);
+        assert_eq!(m.matched, 8);
+        assert_eq!(m.leases.len(), 2);
+        assert!(m.leases.iter().all(|l| l.used == 4));
+        // blocks are pinned while leased
+        assert_eq!(p.status().evictable_blocks, 0);
+        assert_eq!(p.evict_all(), 0);
+        for l in &m.leases {
+            p.release_lease(l);
+        }
+        assert_eq!(p.status().evictable_blocks, 2);
+        let s = p.stats();
+        assert_eq!(s.hit_tokens, 8);
+        assert_eq!(s.lookup_tokens, 9);
+    }
+
+    #[test]
+    fn partial_block_match_shares_without_copy() {
+        let p = pool(8, 4);
+        p.publish(&seq(8, 0)); // blocks [0..4), [4..8)
+        // prompt shares 6 tokens then diverges
+        let mut prompt = seq(6, 0);
+        prompt.extend([90, 91, 92]);
+        let m = p.acquire_prefix(&prompt, prompt.len());
+        assert_eq!(m.matched, 6);
+        assert_eq!(m.leases.len(), 2);
+        assert_eq!(m.leases[1].used, 2);
+        assert_eq!(p.stats().cow_copies, 0, "acquire never copies");
+        for l in &m.leases {
+            p.release_lease(l);
+        }
+    }
+
+    #[test]
+    fn publish_divergent_branch_counts_cow() {
+        let p = pool(8, 4);
+        p.publish(&seq(8, 0));
+        // same first block, second block diverges after 2 tokens
+        let mut other = seq(6, 0);
+        other.extend([70, 71]);
+        p.publish(&other);
+        let s = p.stats();
+        assert_eq!(s.published_blocks, 3); // 2 + 1 branch
+        assert_eq!(s.cow_copies, 1);
+        assert_eq!(s.cow_tokens, 2);
+        // both chains fully matchable
+        assert_eq!(p.acquire_prefix(&seq(8, 0), 8).matched, 8);
+        assert_eq!(p.acquire_prefix(&other, 8).matched, 8);
+    }
+
+    #[test]
+    fn lru_eviction_frees_cold_prefixes_first() {
+        let p = pool(4, 4);
+        p.publish(&seq(4, 0)); // cold
+        p.publish(&seq(4, 100)); // warm (published later)
+        // touch the cold one to make it warm
+        let m = p.acquire_prefix(&seq(4, 0), 4);
+        for l in &m.leases {
+            p.release_lease(l);
+        }
+        // exhaust the pool: 2 free blocks, ask for 3
+        let a = p.alloc_block().unwrap();
+        let b = p.alloc_block().unwrap();
+        let c = p.alloc_block().unwrap(); // must evict the LRU node (seq 100)
+        assert_eq!(p.stats().evictions, 1);
+        assert_eq!(p.acquire_prefix(&seq(4, 100), 4).matched, 0, "cold chain evicted");
+        let m = p.acquire_prefix(&seq(4, 0), 4);
+        assert_eq!(m.matched, 4, "recently touched chain survives");
+        for l in &m.leases {
+            p.release_lease(l);
+        }
+        p.release_block(a);
+        p.release_block(b);
+        p.release_block(c);
+    }
+
+    #[test]
+    fn eviction_is_leaf_first_and_skips_pinned_subtrees() {
+        let p = pool(4, 2);
+        p.publish(&seq(6, 0)); // chain of 3 nodes
+        let m = p.acquire_prefix(&seq(4, 0), 4); // pin the first two
+        assert_eq!(m.matched, 4);
+        // only the unpinned leaf is evictable
+        assert_eq!(p.status().evictable_blocks, 1);
+        assert_eq!(p.evict_all(), 1);
+        for l in &m.leases {
+            p.release_lease(l);
+        }
+        // now the rest of the chain can go, leaf first
+        assert_eq!(p.evict_all(), 2);
+        assert_eq!(p.status().free_blocks, 4);
+    }
+
+    #[test]
+    fn share_disabled_never_matches() {
+        let p = KvPool::new(KvConfig { num_blocks: 4, block_size: 4, share: false });
+        p.publish(&seq(8, 0));
+        assert_eq!(p.stats().published_blocks, 0);
+        assert_eq!(p.acquire_prefix(&seq(8, 0), 8).matched, 0);
+        assert_eq!(p.status().free_blocks, 4);
+    }
+
+    #[test]
+    fn publish_is_best_effort_under_pressure() {
+        let p = pool(2, 4);
+        let a = p.alloc_block().unwrap();
+        let b = p.alloc_block().unwrap();
+        p.publish(&seq(8, 0)); // no free blocks: publishes nothing
+        assert_eq!(p.stats().published_blocks, 0);
+        p.release_block(a);
+        p.publish(&seq(8, 0)); // one free block: publishes one chunk
+        assert_eq!(p.stats().published_blocks, 1);
+        assert_eq!(p.acquire_prefix(&seq(8, 0), 8).matched, 4);
+        p.release_block(b);
+    }
+}

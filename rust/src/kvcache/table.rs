@@ -1,0 +1,235 @@
+//! Per-session logical block table: the session-side half of the paged
+//! KV cache. A [`PagedSlots`] owns two kinds of references into the
+//! shared [`super::KvPool`]:
+//!
+//! * **shared leases** — read-only radix blocks covering a deduplicated
+//!   committed prefix (mapped at [`crate::llm::Llm::begin_with_prefix`]
+//!   time, never written);
+//! * **private blocks** — exclusively leased blocks whose individual
+//!   slots back the session's own committed tokens and pending
+//!   draft-tree nodes, tracked with a per-block occupancy bitmask.
+//!
+//! Slot ids are `block * block_size + offset`, so every slot a session
+//! hands to the attention mask is globally unique and pool-addressable.
+//! Draft-tree branches all attend the same shared/committed blocks and
+//! diverge into fresh private slots, so branching never copies a block
+//! (the copy-on-write cost only materializes when a divergent prefix is
+//! *published*, see [`super::KvPool::publish`]).
+//!
+//! Allocation discipline: `alloc_slot`/`free_slot` are allocation-free
+//! in steady state — the block vector is capacity-reserved, a freed
+//! block returns to the pool immediately (so pool headroom stays
+//! accurate for admission/preemption decisions), and re-leasing pops it
+//! straight back from the pool's free list.
+
+use std::sync::Arc;
+
+use super::pool::{KvPool, PoolExhausted, SharedLease};
+
+#[derive(Debug, Clone, Copy)]
+struct PrivateBlock {
+    id: u32,
+    /// Bit `i` set = slot `i` of the block is live.
+    mask: u64,
+}
+
+/// A session's lease on the shared pool (see module docs). Dropping it
+/// releases every shared lease and private block.
+#[derive(Debug)]
+pub struct PagedSlots {
+    pool: Arc<KvPool>,
+    shared: Vec<SharedLease>,
+    blocks: Vec<PrivateBlock>,
+    /// Every block below this index is full — committed-prefix blocks
+    /// fill once and never reopen, so allocation scans from here
+    /// instead of rescanning the whole (mostly full) block list;
+    /// `free_slot` rewinds it when an earlier block reopens.
+    cursor: usize,
+    /// All-live mask for one block (low `block_size` bits).
+    full_mask: u64,
+}
+
+impl PagedSlots {
+    /// A fresh lease with no blocks. The block vector is reserved for
+    /// the whole pool up front (a session may lease every block), so
+    /// the decode path never regrows it — part of the zero-allocation
+    /// contract `benches/hotpath.rs` gates on.
+    pub fn empty(pool: Arc<KvPool>) -> Self {
+        let bs = pool.block_size();
+        let full_mask = if bs == 64 { u64::MAX } else { (1u64 << bs) - 1 };
+        let reserve = pool.total_blocks();
+        Self {
+            pool,
+            shared: Vec::new(),
+            blocks: Vec::with_capacity(reserve),
+            cursor: 0,
+            full_mask,
+        }
+    }
+
+    /// Adopt the shared leases of a prefix match (already refcounted by
+    /// [`KvPool::acquire_prefix`]).
+    pub fn from_acquire(pool: Arc<KvPool>, leases: Vec<SharedLease>) -> Self {
+        let mut s = Self::empty(pool);
+        s.shared = leases;
+        s
+    }
+
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Slot ids of the shared prefix, in prefix order.
+    pub fn shared_slots(&self) -> impl Iterator<Item = u32> + '_ {
+        let bs = self.pool.block_size() as u32;
+        self.shared
+            .iter()
+            .flat_map(move |l| (0..l.used as u32).map(move |o| l.block * bs + o))
+    }
+
+    /// Tokens covered by the shared prefix.
+    pub fn shared_len(&self) -> usize {
+        self.shared.iter().map(|l| l.used).sum()
+    }
+
+    /// Allocate one private slot, leasing a new block from the pool when
+    /// every held block is full. Amortized O(1): the cursor skips the
+    /// (stable) full prefix of the block list.
+    pub fn alloc_slot(&mut self) -> Result<u32, PoolExhausted> {
+        let bs = self.pool.block_size() as u32;
+        while self.cursor < self.blocks.len() {
+            let b = &mut self.blocks[self.cursor];
+            let open = !b.mask & self.full_mask;
+            if open != 0 {
+                let off = open.trailing_zeros();
+                b.mask |= 1 << off;
+                return Ok(b.id * bs + off);
+            }
+            self.cursor += 1;
+        }
+        let id = self.pool.alloc_block()?;
+        self.blocks.push(PrivateBlock { id, mask: 1 });
+        self.cursor = self.blocks.len() - 1;
+        Ok(id * bs)
+    }
+
+    /// Free one private slot; a fully emptied block goes straight back
+    /// to the pool.
+    pub fn free_slot(&mut self, slot: u32) {
+        let bs = self.pool.block_size() as u32;
+        let (block, off) = (slot / bs, slot % bs);
+        // scan from the rear: frees overwhelmingly target recently
+        // allocated pending blocks, which live at the tail of the list
+        // (the head is stable, full committed-prefix blocks)
+        let idx = self
+            .blocks
+            .iter()
+            .rposition(|b| b.id == block)
+            .expect("freeing a slot of an unleased block");
+        debug_assert!(self.blocks[idx].mask & (1 << off) != 0, "double free");
+        self.blocks[idx].mask &= !(1 << off);
+        if self.blocks[idx].mask == 0 {
+            let b = self.blocks.swap_remove(idx);
+            self.pool.release_block(b.id);
+        }
+        // the block at idx (this one, or the one swapped into its place)
+        // now has - or may have - free bits
+        self.cursor = self.cursor.min(idx);
+    }
+
+    /// Slots this session could still obtain: free slots in its own
+    /// blocks plus everything allocatable pool-wide (free + evictable).
+    pub fn capacity_left(&self) -> usize {
+        let local: u32 = self
+            .blocks
+            .iter()
+            .map(|b| (!b.mask & self.full_mask).count_ones())
+            .sum();
+        local as usize + self.pool.available_blocks() * self.pool.block_size()
+    }
+
+    /// Private slots currently live (excludes the shared prefix).
+    pub fn live_slots(&self) -> usize {
+        self.blocks.iter().map(|b| b.mask.count_ones() as usize).sum()
+    }
+}
+
+impl Drop for PagedSlots {
+    fn drop(&mut self) {
+        for l in &self.shared {
+            self.pool.release_lease(l);
+        }
+        for b in &self.blocks {
+            self.pool.release_block(b.id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvConfig;
+
+    fn pool(blocks: usize, bs: usize) -> Arc<KvPool> {
+        Arc::new(KvPool::new(KvConfig { num_blocks: blocks, block_size: bs, share: true }))
+    }
+
+    #[test]
+    fn slots_are_unique_and_block_packed() {
+        let p = pool(4, 4);
+        let mut s = PagedSlots::empty(p.clone());
+        let slots: Vec<u32> = (0..6).map(|_| s.alloc_slot().unwrap()).collect();
+        let mut sorted = slots.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6);
+        // 6 slots over block_size 4 => exactly two blocks leased
+        assert_eq!(p.status().blocks_in_use(), 2);
+        assert_eq!(s.live_slots(), 6);
+    }
+
+    #[test]
+    fn freeing_a_block_returns_it_to_the_pool() {
+        let p = pool(2, 4);
+        let mut s = PagedSlots::empty(p.clone());
+        let slots: Vec<u32> = (0..8).map(|_| s.alloc_slot().unwrap()).collect();
+        assert!(s.alloc_slot().is_err(), "pool exhausted");
+        // free one whole block's slots
+        for &slot in &slots[..4] {
+            s.free_slot(slot);
+        }
+        assert_eq!(p.status().free_blocks, 1);
+        // and it is allocatable again
+        let again = s.alloc_slot().unwrap();
+        assert!(!slots[4..].contains(&again));
+    }
+
+    #[test]
+    fn capacity_counts_local_and_pool_slots() {
+        let p = pool(2, 4);
+        let mut s = PagedSlots::empty(p.clone());
+        assert_eq!(s.capacity_left(), 8);
+        let _a = s.alloc_slot().unwrap();
+        // 3 free in the leased block + 4 in the free pool block
+        assert_eq!(s.capacity_left(), 7);
+    }
+
+    #[test]
+    fn drop_releases_everything() {
+        let p = pool(4, 4);
+        p.publish(&[1, 2, 3, 4]);
+        {
+            let m = p.acquire_prefix(&[1, 2, 3, 4], 4);
+            let mut s = PagedSlots::from_acquire(p.clone(), m.leases);
+            assert_eq!(s.shared_len(), 4);
+            assert_eq!(s.shared_slots().count(), 4);
+            let _ = s.alloc_slot().unwrap();
+            // shared block pinned + one private block leased
+            assert_eq!(p.status().evictable_blocks, 0);
+        }
+        let st = p.status();
+        assert_eq!(st.blocks_in_use(), 0);
+        assert_eq!(st.evictable_blocks, 1, "cached prefix survives the session");
+        assert_eq!(st.free_blocks, 3);
+    }
+}

@@ -36,6 +36,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod decode;
+pub mod kvcache;
 pub mod llm;
 pub mod model;
 pub mod runtime;

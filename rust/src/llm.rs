@@ -154,6 +154,44 @@ pub trait Llm {
     /// Open a fresh session (empty KV cache / empty context).
     fn begin(&self) -> Result<Self::Session>;
 
+    /// Open a session with a *prefix hint*: a pool-backed implementation
+    /// may map the longest cached prefix of `prefix_hint` (shared radix
+    /// blocks, refcounted) into the session's committed context, so the
+    /// caller can skip evaluating those tokens. The match is capped at
+    /// `prefix_hint.len() - 1`: at least one hint token is always left
+    /// for the caller to evaluate (every decoder needs the logits row at
+    /// the prefix tail). Callers read the matched length back through
+    /// [`Llm::prefix_len`] and feed only `prefix_hint[matched..]` to
+    /// [`Llm::eval_into`]. Default: no sharing, identical to
+    /// [`Llm::begin`].
+    fn begin_with_prefix(&self, _prefix_hint: &[u32]) -> Result<Self::Session> {
+        self.begin()
+    }
+
+    /// Hint that `tokens` is a prompt / persistent prefix worth caching
+    /// for future sessions. When — and whether — the blocks become
+    /// servable is the implementation's contract: the sim recomputes
+    /// logits from tokens, so it publishes immediately; a real paged
+    /// backend must wait until the prefill that fills the blocks has
+    /// executed. Default: no-op.
+    fn cache_prefix(&self, _tokens: &[u32]) {}
+
+    /// Occupancy and telemetry of the shared KV block pool backing this
+    /// model's sessions, when there is one. The engine's admission and
+    /// preemption consult this instead of per-session capacity. Default:
+    /// `None` (dense per-session caches).
+    fn pool_status(&self) -> Option<crate::kvcache::PoolStatus> {
+        None
+    }
+
+    /// Upper bound on tokens (committed + pending) a fresh session could
+    /// ever hold — the admission-time guard against prompts that cannot
+    /// fit. Pool-backed implementations report the whole pool (a single
+    /// session may use all of it). Default: unbounded.
+    fn session_capacity(&self) -> usize {
+        usize::MAX
+    }
+
     /// Evaluate `nodes`, appending them to the session's pending set, and
     /// APPEND one raw-logits row per node to `out` (next-token logits
     /// given the node's full path context). The caller owns `out` and

@@ -32,7 +32,9 @@ USAGE: rsd <COMMAND> [--flags]
 COMMANDS:
   generate   --prompt STR --max-tokens N --decoder SPEC --temperature T
              --top-p P --seed N [--sim] [--artifacts DIR]
-  serve      --addr HOST:PORT [--config FILE.json] [--artifacts DIR]
+  serve      --addr HOST:PORT [--config FILE.json] [--artifacts DIR] [--sim]
+             (config "kv_blocks"/"kv_block_size" enable the paged KV
+              pool with radix prefix sharing on the sim substrate)
   exp1       --dl 2,3,4,5 --max-tokens N --reps N [--sim] [--alpha A]
              [--tv-trials N] --temperature T
   exp2       --budget 6,10,14,21,30 (same flags as exp1)
@@ -82,13 +84,35 @@ fn main() -> Result<()> {
                 Some(path) => EngineConfig::from_json_file(path)?,
                 None => EngineConfig::default(),
             };
-            let artifacts_dir = artifacts.clone();
-            let (tx, _handle) = engine::spawn_with(move || {
-                let rt = Runtime::cpu()?;
-                let (target, draft) = PjrtLm::load_pair(&rt, &artifacts_dir)?;
-                Ok(engine::Engine::new(target, draft, cfg))
-            });
-            server::serve(&addr, tx)?;
+            if args.has("sim") {
+                // sim substrate: paged KV pools when the config asks for
+                // them ("kv_blocks" > 0), dense per-session caches else
+                let seed = cfg.seed;
+                let (target, draft) = if cfg.kv_blocks > 0 {
+                    rsd::sim::SimLm::pair_paged(
+                        seed,
+                        0.8,
+                        256,
+                        rsd::kvcache::KvConfig {
+                            num_blocks: cfg.kv_blocks,
+                            block_size: cfg.kv_block_size,
+                            share: true,
+                        },
+                    )
+                } else {
+                    SimLm::pair(seed, 0.8, 256)
+                };
+                let (tx, _handle) = engine::spawn(engine::Engine::new(target, draft, cfg));
+                server::serve(&addr, tx)?;
+            } else {
+                let artifacts_dir = artifacts.clone();
+                let (tx, _handle) = engine::spawn_with(move || {
+                    let rt = Runtime::cpu()?;
+                    let (target, draft) = PjrtLm::load_pair(&rt, &artifacts_dir)?;
+                    Ok(engine::Engine::new(target, draft, cfg))
+                });
+                server::serve(&addr, tx)?;
+            }
         }
         "exp1" | "exp2" => {
             let sampling = SamplingConfig::new(

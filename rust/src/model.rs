@@ -26,6 +26,8 @@ use anyhow::Context;
 
 #[cfg(pjrt_runtime)]
 use crate::config::{Manifest, ModelManifest};
+#[cfg(pjrt_runtime)]
+use crate::kvcache::{KvPool, PagedSlots};
 use crate::llm::{EvalNode, Llm, LogitsBatch};
 #[cfg(pjrt_runtime)]
 use crate::runtime::Executable;
@@ -45,6 +47,18 @@ pub struct PjrtLm {
     exes: Vec<(usize, Executable)>,
     /// Weight buffers resident on device, in executable input order.
     weights: Vec<xla::PjRtBuffer>,
+    /// Optional paged block table for slot allocation
+    /// ([`PjrtLm::with_kv_pool`]): sessions then draw their cache slots
+    /// block-granularly from the shared pool instead of a private dense
+    /// range, so admission/preemption can reason about fleet-wide KV
+    /// headroom. Cross-session *data* sharing (radix prefix hits) stays
+    /// disabled here: each session still owns its cache literals, so a
+    /// shared slot id would not see another session's KV rows. Lifting
+    /// that needs step executables compiled against one global paged
+    /// cache buffer (lane-shared K/V operands) — the packing contract
+    /// sketched at [`PjrtLm::run_packed`]; until then
+    /// `begin_with_prefix` allocates but never matches.
+    kv: Option<std::sync::Arc<KvPool>>,
 }
 
 #[cfg(pjrt_runtime)]
@@ -80,7 +94,23 @@ impl PjrtLm {
                 .with_context(|| format!("weights missing field '{field}'"))?;
             weights.push(rt.buffer_f32(&t.as_f32()?, &t.shape)?);
         }
-        Ok(Self { man: mm, rt: rt.clone_handle(), exes, weights })
+        Ok(Self { man: mm, rt: rt.clone_handle(), exes, weights, kv: None })
+    }
+
+    /// Route this model's slot allocation through a shared paged block
+    /// pool (see the `kv` field docs for what is and is not shared).
+    /// The pool's slot range must fit inside the compiled cache minus
+    /// the scratch slot.
+    pub fn with_kv_pool(mut self, pool: std::sync::Arc<KvPool>) -> Result<Self> {
+        if pool.total_slots() > self.man.cache_len - 1 {
+            bail!(
+                "pool of {} slots exceeds compiled cache_len {} - 1",
+                pool.total_slots(),
+                self.man.cache_len
+            );
+        }
+        self.kv = Some(pool);
+        Ok(self)
     }
 
     /// Load both models sharing one runtime.
@@ -304,8 +334,19 @@ impl Llm for PjrtLm {
         // zero-initialized; dtype must match CACHE_DTYPE in model.py
         // (f32 on this testbed — see EXPERIMENTS.md §Perf iteration 3)
         let make = || xla::Literal::create_from_shape(xla::PrimitiveType::F32, &udims);
+        // paged: slots come from the fleet-wide block table (the scratch
+        // slot stays the compiled cache's last slot, outside the pool's
+        // range by the `with_kv_pool` check); dense: private slot range
+        let core = match &self.kv {
+            Some(pool) => SessionCore::paged(
+                PagedSlots::empty(pool.clone()),
+                &[],
+                (self.man.cache_len - 1) as u32,
+            ),
+            None => SessionCore::new(self.man.cache_len),
+        };
         Ok(PjrtSession {
-            core: SessionCore::new(self.man.cache_len),
+            core,
             kcache: make(),
             vcache: make(),
             mask_host: Vec::new(),
@@ -359,6 +400,17 @@ impl Llm for PjrtLm {
 
     fn capacity_left(&self, s: &Self::Session) -> usize {
         s.core.capacity_left()
+    }
+
+    fn pool_status(&self) -> Option<crate::kvcache::PoolStatus> {
+        self.kv.as_ref().map(|p| p.status())
+    }
+
+    fn session_capacity(&self) -> usize {
+        match &self.kv {
+            Some(pool) => pool.total_slots(),
+            None => self.man.cache_len - 1,
+        }
     }
 }
 

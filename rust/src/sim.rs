@@ -14,8 +14,11 @@
 //! Theorem 3.1/3.2 statistical tests run thousands of decode iterations
 //! per second with fully reproducible behaviour.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use crate::kvcache::{KvConfig, KvPool, PagedSlots, PoolStatus};
 use crate::llm::{EvalNode, Llm, LogitsBatch};
 use crate::tree::SessionCore;
 
@@ -43,6 +46,11 @@ pub struct SimLm {
     /// [`Llm::eval_batch`] amortizes across requests. Charged once per
     /// `eval` or `eval_batch` call, regardless of row count.
     call_overhead: u64,
+    /// Shared paged KV pool (None = dense per-session cache). Each row
+    /// of logits already costs O(vocab) real work, so skipping the
+    /// prefill of radix-shared prefix tokens is a genuine compute win,
+    /// not an accounting trick.
+    kv: Option<Arc<KvPool>>,
 }
 
 impl SimLm {
@@ -57,9 +65,30 @@ impl SimLm {
             scale: 2.0,
             cache_len: 1 << 20,
             call_overhead: 0,
+            kv: None,
         };
         let draft = SimLm { params: 290_000, alpha, stream: 1, ..target.clone() };
         (target, draft)
+    }
+
+    /// A (target, draft) pair whose sessions allocate from per-model
+    /// paged KV pools ([`crate::kvcache`]): block-granular slots, radix
+    /// prefix sharing (when `cfg.share`), LRU eviction, suspend/resume.
+    /// Token streams are bit-identical to the dense [`SimLm::pair`] —
+    /// the sim's logits depend only on token paths, and sharing only
+    /// changes which prefill rows are (re)computed.
+    pub fn pair_paged(seed: u64, alpha: f64, vocab: usize, cfg: KvConfig) -> (SimLm, SimLm) {
+        let (mut target, mut draft) = Self::pair(seed, alpha, vocab);
+        target.cache_len = cfg.num_blocks * cfg.block_size;
+        draft.cache_len = target.cache_len;
+        target.kv = Some(Arc::new(KvPool::new(cfg)));
+        draft.kv = Some(Arc::new(KvPool::new(cfg)));
+        (target, draft)
+    }
+
+    /// The model's shared KV pool, when paged.
+    pub fn kv_pool(&self) -> Option<&Arc<KvPool>> {
+        self.kv.as_ref()
     }
 
     /// Set the synthetic per-call dispatch cost (see `call_overhead`).
@@ -176,10 +205,55 @@ impl Llm for SimLm {
     }
 
     fn begin(&self) -> Result<Self::Session> {
+        let core = match &self.kv {
+            Some(pool) => SessionCore::paged(
+                PagedSlots::empty(pool.clone()),
+                &[],
+                pool.total_slots() as u32,
+            ),
+            None => SessionCore::new(self.cache_len),
+        };
+        Ok(SimSession { core, ctx: Vec::with_capacity(CTX_ORDER) })
+    }
+
+    /// Paged sessions map the longest radix-cached prefix of the hint as
+    /// shared read-only blocks (capped at `hint.len() - 1`, see the
+    /// trait docs); the caller skips evaluating those tokens. Dense
+    /// sessions ignore the hint.
+    fn begin_with_prefix(&self, prefix_hint: &[u32]) -> Result<Self::Session> {
+        let Some(pool) = &self.kv else { return self.begin() };
+        let m = pool.acquire_prefix(prefix_hint, prefix_hint.len().saturating_sub(1));
+        let matched = m.matched;
+        let slots = PagedSlots::from_acquire(pool.clone(), m.leases);
         Ok(SimSession {
-            core: SessionCore::new(self.cache_len),
+            core: SessionCore::paged(
+                slots,
+                &prefix_hint[..matched],
+                pool.total_slots() as u32,
+            ),
             ctx: Vec::with_capacity(CTX_ORDER),
         })
+    }
+
+    /// The sim's logits are a pure function of the token path, so a
+    /// published prefix is servable immediately — no forward pass needs
+    /// to run first (a real paged backend must publish only after the
+    /// prefill filled the blocks; see [`crate::kvcache`] module docs).
+    fn cache_prefix(&self, tokens: &[u32]) {
+        if let Some(pool) = &self.kv {
+            pool.publish(tokens);
+        }
+    }
+
+    fn pool_status(&self) -> Option<PoolStatus> {
+        self.kv.as_ref().map(|p| p.status())
+    }
+
+    fn session_capacity(&self) -> usize {
+        match &self.kv {
+            Some(pool) => pool.total_slots(),
+            None => self.cache_len - 1,
+        }
     }
 
     fn eval_into(

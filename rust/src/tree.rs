@@ -9,9 +9,18 @@
 //! Alg. 5 `BuildAttentionMask` and Alg. 2/7 step 4 `FilterKVCache` are
 //! both pure index operations here — accepting a path never copies cache
 //! contents.
+//!
+//! Slots come from one of two backings: a session-private **dense**
+//! range (the original design: `0..cache_len`, free-list managed), or a
+//! **paged** lease on the fleet-wide block pool
+//! ([`crate::kvcache::PagedSlots`]) where `slot = block * block_size +
+//! offset`, the committed prefix may begin with radix-shared read-only
+//! blocks, and capacity is a pool-wide (not per-session) resource. All
+//! topology/visibility/commit logic is backing-agnostic.
 
 use anyhow::{bail, Result};
 
+use crate::kvcache::PagedSlots;
 use crate::llm::{EvalNode, PARENT_PREFIX};
 
 #[derive(Debug, Clone)]
@@ -23,13 +32,47 @@ pub struct Pending {
     pub depth: u32,
 }
 
+/// Where a session's slots come from (see module docs).
+#[derive(Debug)]
+enum Backing {
+    /// Session-private dense slot range, free-list managed.
+    Dense { free: Vec<u32> },
+    /// Lease on the shared block pool.
+    Paged(PagedSlots),
+}
+
+impl Backing {
+    fn capacity_left(&self) -> usize {
+        match self {
+            Backing::Dense { free } => free.len(),
+            Backing::Paged(p) => p.capacity_left(),
+        }
+    }
+
+    fn alloc(&mut self) -> Result<u32> {
+        match self {
+            Backing::Dense { free } => {
+                free.pop().ok_or_else(|| anyhow::anyhow!("KV cache exhausted"))
+            }
+            Backing::Paged(p) => Ok(p.alloc_slot()?),
+        }
+    }
+
+    fn free(&mut self, slot: u32) {
+        match self {
+            Backing::Dense { free } => free.push(slot),
+            Backing::Paged(p) => p.free_slot(slot),
+        }
+    }
+}
+
 /// Core session state shared by all `Llm` implementations.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct SessionCore {
     pub prefix_tokens: Vec<u32>,
     pub prefix_slots: Vec<u32>,
     pub pending: Vec<Pending>,
-    free: Vec<u32>,
+    backing: Backing,
     /// One reserved slot that padding rows scatter their KV into; never
     /// attended, never allocated.
     pub scratch_slot: u32,
@@ -49,13 +92,51 @@ impl SessionCore {
             prefix_tokens: Vec::with_capacity(reserve),
             prefix_slots: Vec::with_capacity(reserve),
             pending: Vec::new(),
-            free,
+            backing: Backing::Dense { free },
             scratch_slot: scratch,
         }
     }
 
+    /// A pool-backed session whose committed prefix starts with
+    /// `shared_prefix` tokens mapped onto `slots`' shared (radix)
+    /// blocks — those tokens need no evaluation, their KV is already
+    /// resident. `scratch_slot` must lie outside the pool's slot range
+    /// (callers pass `pool.total_slots()` or the substrate's reserved
+    /// padding slot).
+    pub fn paged(slots: PagedSlots, shared_prefix: &[u32], scratch_slot: u32) -> Self {
+        debug_assert_eq!(
+            slots.shared_len(),
+            shared_prefix.len(),
+            "shared slots must cover exactly the matched prefix"
+        );
+        // size the prefix reservation from what the pool could actually
+        // back, so commits stay allocation-free for the session's whole
+        // lifetime (clamped like the dense path: growth past a huge
+        // reservation is amortized-rare, not wrong)
+        let reserve = shared_prefix.len() + slots.pool().total_slots().min(1 << 16);
+        let mut prefix_tokens = Vec::with_capacity(reserve);
+        prefix_tokens.extend_from_slice(shared_prefix);
+        let mut prefix_slots = Vec::with_capacity(reserve);
+        prefix_slots.extend(slots.shared_slots());
+        Self {
+            prefix_tokens,
+            prefix_slots,
+            pending: Vec::new(),
+            backing: Backing::Paged(slots),
+            scratch_slot,
+        }
+    }
+
+    /// The pool lease, when this session is pool-backed.
+    pub fn paged_slots(&self) -> Option<&PagedSlots> {
+        match &self.backing {
+            Backing::Paged(p) => Some(p),
+            Backing::Dense { .. } => None,
+        }
+    }
+
     pub fn capacity_left(&self) -> usize {
-        self.free.len()
+        self.backing.capacity_left()
     }
 
     pub fn prefix_len(&self) -> usize {
@@ -70,11 +151,11 @@ impl SessionCore {
     /// Append nodes, assigning slots and validating topology. Returns the
     /// pending-index range of the new nodes.
     pub fn add_pending(&mut self, nodes: &[EvalNode]) -> Result<std::ops::Range<usize>> {
-        if nodes.len() > self.free.len() {
+        if nodes.len() > self.backing.capacity_left() {
             bail!(
                 "KV cache exhausted: need {} slots, {} free",
                 nodes.len(),
-                self.free.len()
+                self.backing.capacity_left()
             );
         }
         let start = self.pending.len();
@@ -88,7 +169,7 @@ impl SessionCore {
                 }
                 self.pending[p].depth + 1
             };
-            let slot = self.free.pop().expect("checked above");
+            let slot = self.backing.alloc()?;
             self.pending.push(Pending { token: n.token, parent: n.parent, slot, depth });
         }
         Ok(start..self.pending.len())
@@ -186,11 +267,11 @@ impl SessionCore {
         // O(pending), allocation-free — prefill commits the whole prompt
         // chain at once, so membership scans must not be O(n^2)
         let mut next = 0;
-        for (i, p) in self.pending.iter().enumerate() {
+        for i in 0..self.pending.len() {
             if next < accepted.len() && accepted[next] == i {
                 next += 1;
             } else {
-                self.free.push(p.slot);
+                self.backing.free(self.pending[i].slot);
             }
         }
         self.pending.clear();

@@ -98,6 +98,7 @@ fn engine_mean_efficiency(decoder: DecoderConfig, alpha: f64, seed: u64) -> f64 
         decoder: decoder.clone(),
         seed,
         fused: true,
+        ..EngineConfig::default()
     };
     let engine = Engine::new(target, draft, cfg);
     let (tx, handle) = spawn(engine);
@@ -176,6 +177,7 @@ fn engine_runs_heterogeneous_adaptive_budgets() {
         decoder: DecoderConfig::RsdS { w: 3, l: 3 },
         seed: 1,
         fused: true,
+        ..EngineConfig::default()
     };
     let engine = Engine::new(target, draft, cfg);
     let (tx, handle) = spawn(engine);

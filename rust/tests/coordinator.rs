@@ -17,6 +17,7 @@ fn engine_cfg(max_concurrency: usize, max_queue: usize) -> EngineConfig {
         decoder: DecoderConfig::RsdS { w: 3, l: 3 },
         seed: 7,
         fused: true,
+        ..EngineConfig::default()
     }
 }
 

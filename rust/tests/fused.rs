@@ -46,6 +46,7 @@ fn engine_cfg(seed: u64, fused: bool) -> EngineConfig {
         decoder: DecoderConfig::RsdS { w: 3, l: 3 },
         seed,
         fused,
+        ..EngineConfig::default()
     }
 }
 
