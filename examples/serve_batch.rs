@@ -114,6 +114,10 @@ fn run_one(
             max_new: MAX_NEW,
             decoder: overrides.as_ref().and_then(|o| o[i].clone()),
             sampling: None,
+            // alternate scheduling classes: odd requests are
+            // latency-sensitive and jump the queue under load
+            priority: if i % 2 == 0 { 0 } else { 1 },
+            deadline_ms: if i % 2 == 0 { None } else { Some(500) },
             resp: rtx,
         })
         .unwrap();
@@ -153,6 +157,10 @@ fn run_one(
     println!(
         "latency p50/p95/p99: {:.2}/{:.2}/{:.2} s  |  TTFT p50/p95: {:.2}/{:.2} s",
         snap.latency_p50, snap.latency_p95, snap.latency_p99, snap.ttft_p50, snap.ttft_p95
+    );
+    println!(
+        "queue wait p50/p95: {:.3}/{:.3} s  |  mid-round admissions: {}",
+        snap.queue_wait_p50, snap.queue_wait_p95, snap.mid_round_admitted
     );
     println!(
         "decode rounds {}  |  draft calls {}  |  tokens out {}",

@@ -1,0 +1,210 @@
+//! Continuous admission vs drain-then-refill, on the sim substrate.
+//!
+//! The engine admits waiting requests at every PHASE boundary
+//! (continuous batching): as soon as a completion frees a slot — or a
+//! new request arrives mid-round — the joiner's first phase work fuses
+//! into the next model call. The alternative this bench A/Bs against is
+//! drain-then-refill (`EngineConfig::drain_batching`): admit a batch,
+//! run every member to completion, only then touch the queue.
+//!
+//! With 16 mixed requests over 4 slots and heterogeneous lengths, the
+//! drain policy makes every queued request wait for the SLOWEST member
+//! of the running batch; continuous admission backfills each slot the
+//! round it opens. That shows up directly in queue-wait and
+//! time-to-first-token (both measured from arrival), while the decoded
+//! streams stay bit-identical — admission timing is scheduling, never
+//! sampling.
+//!
+//!     cargo bench --bench continuous             # human-readable
+//!     cargo bench --bench continuous -- --json   # + BENCH_continuous.json
+//!     cargo bench --bench continuous -- --quick  # shorter streams for CI
+//!
+//! Asserted (the acceptance gate):
+//! * continuous mean TTFT < drain mean TTFT;
+//! * continuous p50 queue-wait < drain p50 queue-wait;
+//! * per-request token streams bit-identical between the two admission
+//!   modes AND the per-request (`fused = false`) execution path.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use rsd::bench::harness::write_snapshot;
+use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::engine::{spawn, Engine, Event, Request};
+use rsd::coordinator::metrics::Snapshot;
+use rsd::sim::SimLm;
+use rsd::util::json::Json;
+
+const N_REQUESTS: u64 = 16;
+const CONCURRENCY: usize = 4;
+/// splitmix64 rounds charged per model dispatch (the fixed cost real
+/// accelerators pay per forward pass; makes rounds take real time so
+/// scheduling differences are measurable).
+const DISPATCH_OVERHEAD: u64 = 150_000;
+
+/// Heterogeneous decoders — mixed tree shapes, depths, and one AR lane.
+/// No adaptive requests: their engine-global estimator intentionally
+/// couples tree shapes to scheduling, which would break the
+/// bit-identity assertion.
+fn decoder_for(i: u64) -> Option<DecoderConfig> {
+    match i % 5 {
+        0 => None, // engine default (rsd-s:3x3)
+        1 => Some(DecoderConfig::Ar),
+        2 => Some(DecoderConfig::RsdC { branches: vec![2, 2] }),
+        3 => Some(DecoderConfig::Sd { l: 4 }),
+        _ => Some(DecoderConfig::SpecTr { k: 2, l: 2 }),
+    }
+}
+
+/// Heterogeneous lengths: completions stagger, so continuous admission
+/// gets a backfill opportunity nearly every round.
+fn max_new_for(i: u64, base: usize) -> usize {
+    base + 2 * i as usize
+}
+
+/// Drive one full engine run; all 16 requests submitted at t=0.
+fn run(drain: bool, fused: bool, base: usize) -> (Vec<Vec<u32>>, Snapshot, f64) {
+    let (target, draft) = SimLm::pair(7, 0.8, 64);
+    let target = target.with_call_overhead(DISPATCH_OVERHEAD);
+    let draft = draft.with_call_overhead(DISPATCH_OVERHEAD);
+    let cfg = EngineConfig {
+        max_concurrency: CONCURRENCY,
+        max_queue: 64,
+        default_max_tokens: base,
+        max_active_budget: 0,
+        sampling: SamplingConfig::new(0.5, 1.0),
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed: 13,
+        fused,
+        drain_batching: drain,
+        ..EngineConfig::default()
+    };
+    let engine = Engine::new(target, draft, cfg);
+    let (tx, handle) = spawn(engine);
+
+    let t0 = Instant::now();
+    let mut receivers = Vec::new();
+    for i in 0..N_REQUESTS {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id: i,
+            prompt: vec![1 + i as u32, 5, 3],
+            max_new: max_new_for(i, base),
+            decoder: decoder_for(i),
+            sampling: None,
+            priority: 0,
+            deadline_ms: None,
+            resp: rtx,
+        })
+        .unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+
+    let mut streams = Vec::new();
+    let mut total = 0usize;
+    for rrx in receivers {
+        let mut toks = Vec::new();
+        while let Ok(ev) = rrx.recv() {
+            match ev {
+                Event::Tokens(t) => toks.extend(t),
+                Event::Done(_) => break,
+                Event::Error(e) => panic!("{e}"),
+            }
+        }
+        total += toks.len();
+        streams.push(toks);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = handle.join().unwrap().snapshot();
+    (streams, snap, total as f64 / wall)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_out = args.iter().any(|a| a == "--json");
+    let base = if args.iter().any(|a| a == "--quick") { 6 } else { 10 };
+    println!(
+        "=== continuous admission vs drain-then-refill ({N_REQUESTS} mixed requests, \
+         {CONCURRENCY} slots, SimLm, dispatch overhead {DISPATCH_OVERHEAD} rounds) ==="
+    );
+    // warmup (page in, stabilize frequency scaling)
+    let _ = run(false, true, base);
+
+    let (drain_streams, drain_snap, drain_tps) = run(true, true, base);
+    let (cont_streams, cont_snap, cont_tps) = run(false, true, base);
+    let (seq_streams, _, _) = run(false, false, base);
+
+    assert_eq!(
+        cont_streams, drain_streams,
+        "admission schedule must be token-invisible (continuous vs drain)"
+    );
+    assert_eq!(
+        cont_streams, seq_streams,
+        "admission schedule must be token-invisible (fused vs per-request)"
+    );
+    println!("decoded streams identical across drain / continuous / per-request ✓");
+
+    let report = |name: &str, s: &Snapshot, tps: f64| {
+        println!(
+            "{name:>12}: TTFT mean {:>7.1} ms  p50 {:>7.1} ms  |  queue-wait p50 {:>7.1} ms \
+             mean {:>7.1} ms  |  {tps:>8.1} tok/s",
+            s.ttft_mean * 1e3,
+            s.ttft_p50 * 1e3,
+            s.queue_wait_p50 * 1e3,
+            s.queue_wait_mean * 1e3,
+        );
+    };
+    report("drain", &drain_snap, drain_tps);
+    report("continuous", &cont_snap, cont_tps);
+    let ttft_ratio = drain_snap.ttft_mean / cont_snap.ttft_mean.max(1e-12);
+    let qwait_ratio = drain_snap.queue_wait_p50 / cont_snap.queue_wait_p50.max(1e-12);
+    println!("TTFT mean improvement: {ttft_ratio:.2}x  |  queue-wait p50: {qwait_ratio:.2}x");
+
+    assert!(
+        cont_snap.ttft_mean < drain_snap.ttft_mean,
+        "continuous admission must lower mean TTFT ({:.4}s vs {:.4}s)",
+        cont_snap.ttft_mean,
+        drain_snap.ttft_mean
+    );
+    assert!(
+        cont_snap.queue_wait_p50 < drain_snap.queue_wait_p50,
+        "continuous admission must lower p50 queue wait ({:.4}s vs {:.4}s)",
+        cont_snap.queue_wait_p50,
+        drain_snap.queue_wait_p50
+    );
+    println!("\nlower-TTFT + lower-queue-wait acceptance criteria met ✓");
+
+    if json_out {
+        let entry = |mode: &str, name: &str, secs: f64| {
+            Json::obj(vec![
+                ("section", Json::from("continuous-batching")),
+                ("name", Json::from(format!("{mode}/{name}").as_str())),
+                ("ns_per_op", Json::Num(secs * 1e9)),
+            ])
+        };
+        let entries = vec![
+            entry("drain", "ttft_mean", drain_snap.ttft_mean),
+            entry("drain", "ttft_p50", drain_snap.ttft_p50),
+            entry("drain", "queue_wait_p50", drain_snap.queue_wait_p50),
+            entry("drain", "queue_wait_mean", drain_snap.queue_wait_mean),
+            entry("continuous", "ttft_mean", cont_snap.ttft_mean),
+            entry("continuous", "ttft_p50", cont_snap.ttft_p50),
+            entry("continuous", "queue_wait_p50", cont_snap.queue_wait_p50),
+            entry("continuous", "queue_wait_mean", cont_snap.queue_wait_mean),
+        ];
+        let extra = vec![
+            ("ttft_mean_improvement", Json::Num(ttft_ratio)),
+            ("queue_wait_p50_improvement", Json::Num(qwait_ratio)),
+            ("requests", Json::from(N_REQUESTS as usize)),
+            ("concurrency", Json::from(CONCURRENCY)),
+            ("mid_round_admitted", Json::from(cont_snap.mid_round_admitted as usize)),
+            ("drain_tok_per_s", Json::Num(drain_tps)),
+            ("continuous_tok_per_s", Json::Num(cont_tps)),
+        ];
+        match write_snapshot("BENCH_continuous.json", entries, extra) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("failed to write BENCH_continuous.json: {e}"),
+        }
+    }
+}

@@ -79,6 +79,8 @@ fn run(fused: bool, max_new: usize) -> (Vec<Vec<u32>>, f64, (f64, f64), Snapshot
             max_new,
             decoder: decoder_for(i),
             sampling: None,
+            priority: 0,
+            deadline_ms: None,
             resp: rtx,
         })
         .unwrap();

@@ -79,6 +79,8 @@ fn run(share: bool, sys_len: usize, max_new: usize) -> (Vec<Vec<u32>>, f64, KvSt
             max_new,
             decoder: None,
             sampling: None,
+            priority: 0,
+            deadline_ms: None,
             resp: rtx,
         })
         .unwrap();

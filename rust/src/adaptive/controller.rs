@@ -216,6 +216,12 @@ impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
         &self.inner.out
     }
 
+    /// The streaming commit boundary (see
+    /// [`SpecStepper::committed_len`]).
+    pub fn committed_len(&self) -> usize {
+        self.inner.committed_len()
+    }
+
     pub fn stats(&self) -> &DecodeStats {
         &self.inner.stats
     }

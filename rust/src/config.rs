@@ -433,6 +433,15 @@ pub struct EngineConfig {
     /// Output is token-for-token identical either way (per-request RNG
     /// streams); the fallback exists for A/B benchmarking and debugging.
     pub fused: bool,
+    /// `false` (the default) = continuous batching: waiting requests
+    /// join the fused batch at the next phase boundary — mid-round when
+    /// one is in flight — as soon as a slot and KV headroom open up.
+    /// `true` = drain-then-refill: admission only happens when the
+    /// engine is completely idle, so batches run to full completion
+    /// before the queue moves. Token streams are identical either way
+    /// (per-request RNG streams); the drain mode exists as the A/B
+    /// baseline for `benches/continuous.rs`.
+    pub drain_batching: bool,
     /// Paged KV-cache pool size in blocks, for substrates constructed
     /// from this config (`rsd serve --sim`): 0 = dense per-session
     /// caches, > 0 = a [`crate::kvcache::KvPool`] per model with radix
@@ -453,6 +462,7 @@ impl Default for EngineConfig {
             decoder: DecoderConfig::RsdS { w: 3, l: 3 },
             seed: 0,
             fused: true,
+            drain_batching: false,
             kv_blocks: 0,
             kv_block_size: 16,
         }
@@ -494,6 +504,9 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("fused").and_then(Json::as_bool) {
             cfg.fused = v;
+        }
+        if let Some(v) = j.get("drain_batching").and_then(Json::as_bool) {
+            cfg.drain_batching = v;
         }
         if let Some(v) = j.get("kv_blocks").and_then(Json::as_usize) {
             cfg.kv_blocks = v;
@@ -600,8 +613,11 @@ mod tests {
         }
         let d = EngineConfig::default();
         assert!(d.fused);
+        assert!(!d.drain_batching, "continuous admission is the default");
         assert!(d.sampling.stop.is_empty());
         assert!(!d.sampling.is_stop(7));
+        let j = Json::parse(r#"{"drain_batching": true}"#).unwrap();
+        assert!(EngineConfig::from_json(&j).unwrap().drain_batching);
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! Admission queue + fairness policy: the "dynamic batcher" half of the
-//! coordinator. Decides which requests are active (stepped every engine
-//! turn) and which wait, with bounded queueing and load shedding.
+//! Admission queue + scheduling policy: the "dynamic batcher" half of
+//! the coordinator. Decides which requests are active (stepped every
+//! engine turn) and which wait, with bounded queueing, load shedding,
+//! and deadline/priority-aware ordering.
 //!
 //! Besides the concurrency cap, admission can be *weighted*: each item
 //! carries a cost (the engine uses the decoder's per-round node budget)
@@ -9,8 +10,38 @@
 //! keeps a burst of wide-tree requests from monopolizing the target
 //! model's per-iteration compute. An over-cap item is still admitted
 //! when nothing else is active, so no request can deadlock the queue.
+//!
+//! # Scheduling order
+//!
+//! The next admission candidate is chosen by, in order:
+//!
+//! 1. **Preempted requests first** ([`Batcher::requeue_front`]):
+//!    preemption must never cost a request its turn, so victims re-enter
+//!    ahead of every fresh arrival, ordered among themselves by their
+//!    original admission age (rank) — a victim of a later preemption
+//!    pass can never cut ahead of an older one still waiting.
+//! 2. **Effective priority**, descending — the request's declared
+//!    priority plus one point per [`AGING_ROUNDS`] engine rounds spent
+//!    waiting. The aging term is unbounded, so any queued request
+//!    eventually outranks every possible declared priority: a stream of
+//!    high-priority arrivals can delay a low-priority request but can
+//!    never starve it (regression-tested below).
+//! 3. **Deadline**, ascending (`None` = least urgent): among equal
+//!    effective priorities the request that declared the tightest
+//!    latency budget goes first.
+//! 4. **Arrival order** (FIFO): everything else equal, the default
+//!    offers behave exactly like the old FIFO queue.
+//!
+//! The chosen candidate is the *only* one considered against the
+//! active-weight cap: a too-heavy best candidate blocks admission
+//! rather than letting lighter items sneak past it (no starvation of
+//! heavy requests), unless the engine is idle.
 
 use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Engine rounds of queue aging worth one point of effective priority.
+pub const AGING_ROUNDS: u64 = 8;
 
 /// Why an offer was refused.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,18 +49,56 @@ pub enum Rejected {
     QueueFull,
 }
 
-/// FIFO admission with a bounded waiting queue, a concurrency cap, and
-/// an optional active-weight cap. Generic over the queued item so it is
-/// testable without an engine.
+/// One successful admission: the item, the weight it was charged
+/// (pass back to [`Batcher::release_weight`] on completion) and when it
+/// entered the queue (for queue-wait / arrival-based latency metrics).
+#[derive(Debug)]
+pub struct Admitted<T> {
+    pub item: T,
+    pub weight: usize,
+    pub queued_at: Instant,
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    item: T,
+    priority: u8,
+    /// Declared latency budget in ms; `u64::MAX` = none declared.
+    deadline_ms: u64,
+    /// Arrival rank (FIFO tie-break).
+    seq: u64,
+    /// Engine rounds spent waiting (incremented by [`Batcher::age_tick`]).
+    ticks: u64,
+    queued_at: Instant,
+}
+
+impl<T> Entry<T> {
+    fn effective_priority(&self) -> u64 {
+        self.priority as u64 + self.ticks / AGING_ROUNDS
+    }
+
+    /// Selection key: smaller = admitted sooner.
+    fn key(&self) -> (std::cmp::Reverse<u64>, u64, u64) {
+        (std::cmp::Reverse(self.effective_priority()), self.deadline_ms, self.seq)
+    }
+}
+
+/// Deadline/priority-aware admission with a bounded waiting queue, a
+/// concurrency cap, and an optional active-weight cap. Generic over the
+/// queued item so it is testable without an engine.
 #[derive(Debug)]
 pub struct Batcher<T> {
     max_concurrency: usize,
     max_queue: usize,
     /// Cap on the summed weight of active items (`usize::MAX` = off).
     max_active_weight: usize,
-    queue: VecDeque<T>,
+    /// Preempted requests awaiting resume: admitted before any queued
+    /// entry, ascending admission rank among themselves.
+    front: VecDeque<(u64, T, Instant)>,
+    queue: Vec<Entry<T>>,
     active: usize,
     active_weight: usize,
+    next_seq: u64,
 }
 
 impl<T> Batcher<T> {
@@ -39,9 +108,11 @@ impl<T> Batcher<T> {
             max_concurrency,
             max_queue,
             max_active_weight: usize::MAX,
-            queue: VecDeque::new(),
+            front: VecDeque::new(),
+            queue: Vec::new(),
             active: 0,
             active_weight: 0,
+            next_seq: 0,
         }
     }
 
@@ -51,55 +122,121 @@ impl<T> Batcher<T> {
         self
     }
 
-    /// Offer a new request; reject when the waiting queue is full
-    /// (admission control / load shedding).
+    /// Offer a new request at default priority with no deadline; reject
+    /// when the waiting queue is full (admission control / load
+    /// shedding).
     pub fn offer(&mut self, item: T) -> Result<(), (T, Rejected)> {
-        if self.queue.len() >= self.max_queue {
+        self.offer_with(item, 0, None)
+    }
+
+    /// Offer a new request with a scheduling class (`priority`, higher
+    /// admits first) and an optional declared latency budget
+    /// (`deadline_ms`, tighter admits first among equals).
+    pub fn offer_with(
+        &mut self,
+        item: T,
+        priority: u8,
+        deadline_ms: Option<u64>,
+    ) -> Result<(), (T, Rejected)> {
+        if self.queued() >= self.max_queue {
             return Err((item, Rejected::QueueFull));
         }
-        self.queue.push_back(item);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push(Entry {
+            item,
+            priority,
+            deadline_ms: deadline_ms.unwrap_or(u64::MAX),
+            seq,
+            ticks: 0,
+            queued_at: Instant::now(),
+        });
         Ok(())
     }
 
     /// Re-enqueue a *preempted* request at the FRONT of the waiting
     /// queue, ahead of every fresh arrival — preemption must not cost a
-    /// request its FIFO position. Never sheds: the item was already
-    /// admitted once, so the queue cap (a guard against new load) does
-    /// not apply to it.
-    pub fn requeue_front(&mut self, item: T) {
-        self.queue.push_front(item);
+    /// request its turn. `rank` is the request's original admission age
+    /// (the engine passes its admission sequence number): victims are
+    /// kept in ascending rank, so a younger victim from a later
+    /// preemption pass never resumes before an older one still waiting.
+    /// Never sheds: the item was already admitted once, so the queue cap
+    /// (a guard against new load) does not apply to it.
+    pub fn requeue_front(&mut self, item: T, rank: u64) {
+        let pos = self
+            .front
+            .iter()
+            .position(|e| e.0 > rank)
+            .unwrap_or(self.front.len());
+        self.front.insert(pos, (rank, item, Instant::now()));
+    }
+
+    /// One engine round passed: age every waiting request. Aging feeds
+    /// the anti-starvation promotion (see module docs).
+    pub fn age_tick(&mut self) {
+        for e in &mut self.queue {
+            e.ticks += 1;
+        }
+    }
+
+    /// Index of the best queued entry under the scheduling order.
+    fn best_idx(&self) -> Option<usize> {
+        self.queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.key())
+            .map(|(i, _)| i)
     }
 
     /// The request that would be admitted next, if any.
     pub fn peek(&self) -> Option<&T> {
-        self.queue.front()
+        if let Some((_, item, _)) = self.front.front() {
+            return Some(item);
+        }
+        self.best_idx().map(|i| &self.queue[i].item)
     }
 
     /// Admit the next waiting request if a concurrency slot is free
     /// (weight-oblivious: every item costs 0).
     pub fn admit(&mut self) -> Option<T> {
-        self.admit_by(|_| 0).map(|(item, _)| item)
+        self.admit_by(|_| 0).map(|a| a.item)
     }
 
-    /// Admit the next waiting request if a concurrency slot is free and
-    /// its `weight` fits under the active-weight cap. FIFO order is
-    /// preserved: a too-heavy head blocks admission (no starvation of
-    /// heavy requests by sneaking light ones past them) unless the
-    /// engine is idle, in which case it is admitted regardless. Returns
-    /// the item with the weight it was charged; pass that weight back to
+    /// Admit the best waiting request if a concurrency slot is free and
+    /// its `weight` fits under the active-weight cap. Only the best
+    /// candidate is considered: a too-heavy best blocks admission (no
+    /// starvation of heavy requests by sneaking light ones past them)
+    /// unless the engine is idle, in which case it is admitted
+    /// regardless. Pass the returned weight back to
     /// [`Batcher::release_weight`] on completion.
-    pub fn admit_by<F: Fn(&T) -> usize>(&mut self, weight: F) -> Option<(T, usize)> {
+    pub fn admit_by<F: Fn(&T) -> usize>(&mut self, weight: F) -> Option<Admitted<T>> {
         if self.active >= self.max_concurrency {
             return None;
         }
-        let w = weight(self.queue.front()?);
+        // candidate: lowest-rank preempted victim, else the best queued
+        // entry under the scheduling key
+        let from_front = !self.front.is_empty();
+        let (w, idx) = if from_front {
+            (weight(&self.front[0].1), 0)
+        } else {
+            let i = self.best_idx()?;
+            (weight(&self.queue[i].item), i)
+        };
         if self.active > 0 && self.active_weight.saturating_add(w) > self.max_active_weight {
             return None;
         }
-        let item = self.queue.pop_front().expect("front checked above");
+        let (item, queued_at) = if from_front {
+            let (_, item, queued_at) = self.front.pop_front().expect("checked above");
+            (item, queued_at)
+        } else {
+            // swap_remove is fine: admission order comes from the
+            // selection key, never from the backing vector's order
+            let e = self.queue.swap_remove(idx);
+            (e.item, e.queued_at)
+        };
         self.active += 1;
         self.active_weight = self.active_weight.saturating_add(w);
-        Some((item, w))
+        Some(Admitted { item, weight: w, queued_at })
     }
 
     /// A previously admitted request finished; its slot frees up.
@@ -124,11 +261,11 @@ impl<T> Batcher<T> {
     }
 
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.front.len() + self.queue.len()
     }
 
     pub fn is_idle(&self) -> bool {
-        self.active == 0 && self.queue.is_empty()
+        self.active == 0 && self.queued() == 0
     }
 }
 
@@ -167,18 +304,20 @@ mod tests {
             b.offer(w).unwrap();
         }
         let weigh = |x: &usize| *x;
-        assert_eq!(b.admit_by(weigh), Some((6, 6)));
+        let a = b.admit_by(weigh).unwrap();
+        assert_eq!((a.item, a.weight), (6, 6));
         // 6 + 30 > 30: the heavy head must wait, and FIFO holds (the
         // light items behind it do not jump the queue)
-        assert_eq!(b.admit_by(weigh), None);
+        assert!(b.admit_by(weigh).is_none());
         b.release_weight(6);
         // idle engine: the heavy request is admitted despite the cap
-        assert_eq!(b.admit_by(weigh), Some((30, 30)));
-        assert_eq!(b.admit_by(weigh), None);
+        let a = b.admit_by(weigh).unwrap();
+        assert_eq!((a.item, a.weight), (30, 30));
+        assert!(b.admit_by(weigh).is_none());
         assert_eq!(b.active_weight(), 30);
         b.release_weight(30);
-        assert_eq!(b.admit_by(weigh), Some((6, 6)));
-        assert_eq!(b.admit_by(weigh), Some((6, 6)));
+        assert_eq!(b.admit_by(weigh).unwrap().item, 6);
+        assert_eq!(b.admit_by(weigh).unwrap().item, 6);
         assert_eq!(b.active_weight(), 12);
     }
 
@@ -204,6 +343,44 @@ mod tests {
     }
 
     #[test]
+    fn priority_then_deadline_then_fifo() {
+        let mut b: Batcher<u32> = Batcher::new(8, 8);
+        b.offer_with(1, 0, Some(500)).unwrap();
+        b.offer_with(2, 0, Some(100)).unwrap();
+        b.offer_with(3, 1, None).unwrap();
+        b.offer_with(4, 0, Some(100)).unwrap();
+        assert_eq!(b.peek(), Some(&3));
+        assert_eq!(b.admit(), Some(3)); // highest priority first
+        assert_eq!(b.admit(), Some(2)); // tightest deadline next ...
+        assert_eq!(b.admit(), Some(4)); // ... FIFO among equal deadlines
+        assert_eq!(b.admit(), Some(1)); // no-deadline equals loosest
+    }
+
+    /// Regression (starvation fix): a low-priority request under a
+    /// continuous stream of high-priority arrivals must still be
+    /// admitted — aging promotes it past any declared priority.
+    #[test]
+    fn aging_promotes_starved_low_priority() {
+        let mut b: Batcher<u64> = Batcher::new(1, 64);
+        b.offer_with(999, 0, None).unwrap();
+        let mut admitted_at = None;
+        for round in 0..2_000u64 {
+            b.offer_with(round, 5, None).unwrap();
+            let got = b.admit().unwrap();
+            b.release();
+            if got == 999 {
+                admitted_at = Some(round);
+                break;
+            }
+            b.age_tick();
+        }
+        let round = admitted_at.expect("low-priority request starved");
+        // effective priority 0 + round/AGING_ROUNDS must pass 5 first
+        assert!(round >= 5 * AGING_ROUNDS, "promoted too early: {round}");
+        assert!(round <= 7 * AGING_ROUNDS, "promoted too late: {round}");
+    }
+
+    #[test]
     fn requeue_front_precedes_fresh_arrivals() {
         let mut b: Batcher<u32> = Batcher::new(2, 8);
         b.offer(1).unwrap();
@@ -213,11 +390,22 @@ mod tests {
         b.offer(3).unwrap(); // fresh arrival waits
         // 2 gets preempted: it must re-enter ahead of 3
         b.release();
-        b.requeue_front(2);
+        b.requeue_front(2, 1);
         assert_eq!(b.peek(), Some(&2));
         assert_eq!(b.admit(), Some(2));
         b.release();
         assert_eq!(b.admit(), Some(3));
+    }
+
+    #[test]
+    fn requeue_front_outranks_priorities() {
+        let mut b: Batcher<u32> = Batcher::new(1, 8);
+        b.offer_with(7, 255, Some(1)).unwrap();
+        b.requeue_front(1, 0);
+        // the preempted request beats even a max-priority fresh arrival
+        assert_eq!(b.admit(), Some(1));
+        b.release();
+        assert_eq!(b.admit(), Some(7));
     }
 
     #[test]
@@ -227,16 +415,33 @@ mod tests {
         b.offer(11).unwrap();
         assert!(b.offer(12).is_err(), "queue full for fresh load");
         // a preempted request still re-enters, ahead of the queue
-        b.requeue_front(9);
+        b.requeue_front(9, 0);
         assert_eq!(b.queued(), 3);
         assert_eq!(b.admit(), Some(9));
-        // multiple victims requeued newest-first restore their relative
-        // order: preempting [a, b] pushes b then a
+        // multiple victims requeued youngest-first (the engine's
+        // preemption order) restore their admission-age order
         let mut c: Batcher<u32> = Batcher::new(2, 8);
         c.offer(99).unwrap();
-        c.requeue_front(2);
-        c.requeue_front(1);
+        c.requeue_front(2, 2);
+        c.requeue_front(1, 1);
         assert_eq!(c.admit(), Some(1));
         assert_eq!(c.admit(), Some(2));
+    }
+
+    /// Regression: victims of SEPARATE preemption passes still resume
+    /// in admission-age order — a younger request preempted later can
+    /// never cut ahead of an older one still waiting at the front.
+    #[test]
+    fn requeued_victims_order_by_admission_age_across_passes() {
+        let mut b: Batcher<u32> = Batcher::new(1, 8);
+        b.requeue_front(30, 3); // pass 1 parks the rank-3 victim
+        b.requeue_front(10, 1); // pass 2 parks an OLDER victim
+        b.requeue_front(20, 2); // pass 3 lands between them
+        assert_eq!(b.peek(), Some(&10));
+        assert_eq!(b.admit(), Some(10));
+        b.release();
+        assert_eq!(b.admit(), Some(20));
+        b.release();
+        assert_eq!(b.admit(), Some(30));
     }
 }

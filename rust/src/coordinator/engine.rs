@@ -1,6 +1,9 @@
 //! The serving engine: owns the (target, draft) model pair and runs
-//! *phase-synchronized fused rounds* — continuous batching at iteration
-//! granularity, with every model forward batched across requests.
+//! *phase-synchronized fused rounds* with **continuous batching at phase
+//! granularity** — batch membership churns mid-stream: waiting requests
+//! join at the next phase boundary (not after a full drain, not even
+//! after the current round), completed requests leave — and free their
+//! KV blocks — the moment their last commit lands.
 //!
 //! # Fused round loop
 //!
@@ -9,7 +12,9 @@
 //!
 //! 1. **Begin** — every stepper runs its per-round bookkeeping
 //!    ([`SpecStepper::begin_round`] / AR sampling) and stages its first
-//!    model work. No model call happens here.
+//!    model work. No model call happens here. Requests that finish at
+//!    this point (length cap, stop token, KV capacity) are delivered and
+//!    dropped immediately.
 //! 2. **Draft** — all staged draft work (one tree level per request) is
 //!    executed as ONE fused [`Llm::eval_batch`] call over the draft
 //!    model; rows are fed back and each stepper stages its next level.
@@ -17,24 +22,44 @@
 //!    are shallower simply drop out of later fused calls (the fill-ratio
 //!    histogram in [`super::metrics::Metrics`] tracks exactly this).
 //!    AR requests have no draft phase and never participate.
+//!    **Admission happens at every iteration of this loop**: newly
+//!    arrived (or newly unblocked) requests begin their round mid-stream
+//!    and their first phase work — the draft-tail prefill, or the AR
+//!    prompt prefill — fuses into the very next phase call instead of
+//!    waiting for the batch to drain.
 //! 3. **Verify** — one fused `eval_batch` over the target model covers
 //!    every request's verification pass (tail + whole tree; prefill or
 //!    single-token decode for AR). Rows are fed back; verification,
-//!    commit and emission run on the host per request.
+//!    commit and emission run on the host per request. Each request's
+//!    newly committed tokens are streamed ([`Event::Tokens`]) the moment
+//!    its own commit lands — the stepper's
+//!    [`SpecStepper::committed_len`] boundary — and completed requests
+//!    (stop token, `max_tokens`) are finalized right here, returning
+//!    their KV blocks to the pool before the next admission decision
+//!    runs.
 //!
-//! Token streams are **identical** to stepping each request alone: every
-//! request owns a deterministic RNG stream seeded from
-//! `engine_seed ^ request_id`, and model calls never consume RNG, so
-//! neither admission order nor batch composition changes any request's
-//! output. (Exception: `adaptive:B` requests share the engine-global
-//! acceptance estimator by design, so their tree *shapes* — never their
+//! Scheduling is deadline/priority-aware ([`super::batcher::Batcher`]):
+//! per-request `priority` classes admit first, `deadline_ms` breaks
+//! ties, and an aging rule promotes any waiting request past every
+//! declared priority so nothing starves.
+//!
+//! Token streams are **identical** to stepping each request alone, and
+//! identical across admission schedules: every request owns a
+//! deterministic RNG stream seeded from `engine_seed ^ request_id`, and
+//! model calls never consume RNG, so neither admission order, nor batch
+//! composition, nor mid-round joining changes any request's output.
+//! (Exception: `adaptive:B` requests share the engine-global acceptance
+//! estimator by design, so their tree *shapes* — never their
 //! distributional correctness — depend on what else ran.)
 //! `EngineConfig::fused = false` switches to one `eval` per request for
-//! A/B benchmarking; the schedule and output stay the same.
+//! A/B benchmarking; `EngineConfig::drain_batching = true` switches to
+//! drain-then-refill admission (the `benches/continuous.rs` baseline).
+//! The schedule changes, the per-request output never does.
 //!
 //! The engine core is synchronous (PJRT execution is blocking); it runs
 //! on its own thread and talks to front-ends through std channels.
 
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -49,7 +74,7 @@ use crate::decode::{build_parts, DecodeStats};
 use crate::llm::{EvalNode, Llm, LogitsBatch};
 use crate::util::Rng;
 
-use super::batcher::Batcher;
+use super::batcher::{Admitted, Batcher};
 use super::metrics::Metrics;
 
 /// A generation request submitted to the engine.
@@ -67,13 +92,20 @@ pub struct Request {
     /// Field-wise sampling overrides; unset fields inherit the engine's
     /// configured sampling.
     pub sampling: Option<SamplingPatch>,
+    /// Scheduling class: higher admits first (0 = default). Aging in
+    /// the batcher guarantees low classes still cannot starve.
+    pub priority: u8,
+    /// Declared latency budget in milliseconds: among equal effective
+    /// priorities, tighter deadlines admit first. None = no preference.
+    pub deadline_ms: Option<u64>,
     pub resp: mpsc::Sender<Event>,
 }
 
 /// Streamed response events.
 #[derive(Debug, Clone)]
 pub enum Event {
-    /// Newly generated tokens (one speculative round's worth).
+    /// Newly committed tokens, sent at the request's commit boundary
+    /// (once per speculative round that emitted anything).
     Tokens(Vec<u32>),
     /// Request finished; final stats.
     Done(DecodeStats),
@@ -95,6 +127,16 @@ impl<T: Llm, D: Llm> AnyStepper<T, D> {
             AnyStepper::Ar(s) => &s.out,
             AnyStepper::Spec(s) => &s.out,
             AnyStepper::Adaptive(s) => s.out(),
+        }
+    }
+
+    /// Streaming commit boundary: tokens in `out()[..committed()]` are
+    /// final (verified + KV-committed) and safe to emit.
+    fn committed(&self) -> usize {
+        match self {
+            AnyStepper::Ar(s) => s.committed_len(),
+            AnyStepper::Spec(s) => s.committed_len(),
+            AnyStepper::Adaptive(s) => s.committed_len(),
         }
     }
 
@@ -145,13 +187,14 @@ impl<T: Llm, D: Llm> AnyStepper<T, D> {
 
 /// Where one active request stands within the current fused round.
 enum RoundState {
+    /// Between rounds: the next begin phase will start a round.
+    Idle,
     /// Phase work staged; participating in fused calls.
     InRound,
-    /// Round completed, generation continues.
-    Progressed,
-    /// Request finished (this round or at `begin_round`).
+    /// Request finished (this round or at `begin_round`); awaiting
+    /// delivery + removal at the next reap point.
     Done,
-    /// Request failed; message to deliver.
+    /// Request failed; message to deliver at the next reap point.
     Failed(String),
 }
 
@@ -160,18 +203,38 @@ struct Active<T: Llm, D: Llm> {
     stepper: AnyStepper<T, D>,
     /// This request's own deterministic RNG stream (seeded from
     /// `engine_seed ^ request_id`), making output independent of
-    /// admission order and batch composition.
+    /// admission order, admission timing, and batch composition.
     rng: Rng,
     sent: usize,
     /// Node-budget weight this request was charged at admission.
     weight: usize,
-    /// FIFO rank: first-admission order, preserved across preemption.
-    /// Victim selection preempts the highest rank (the youngest), so
-    /// completion-time `swap_remove` shuffling of the active list can
-    /// never cost an older request its KV.
+    /// Admission rank: first-admission order, preserved across
+    /// preemption. Victim selection preempts the highest rank (the
+    /// youngest), so completion-time `swap_remove` shuffling of the
+    /// active list can never cost an older request its KV.
     seq: u64,
+    /// Arrival time (queue entry): latency and TTFT are measured from
+    /// here, so they include queue wait.
     started: Instant,
     first_token_at: Option<f64>,
+    state: RoundState,
+}
+
+impl<T: Llm, D: Llm> Active<T, D> {
+    /// Start this request's round now (used both at the pre-round begin
+    /// phase and for mid-round joiners at a phase boundary).
+    fn begin(&mut self, target: &T, draft: &D) {
+        let start = match &mut self.stepper {
+            AnyStepper::Ar(s) => s.begin_round(target, &mut self.rng),
+            AnyStepper::Spec(s) => s.begin_round(target, draft),
+            AnyStepper::Adaptive(s) => s.begin_round(target, draft),
+        };
+        self.state = match start {
+            Ok(RoundStart::Started) => RoundState::InRound,
+            Ok(RoundStart::Finished) => RoundState::Done,
+            Err(e) => RoundState::Failed(e.to_string()),
+        };
+    }
 }
 
 /// A preempted request's host-side state, parked while its `Request`
@@ -182,10 +245,28 @@ struct Parked<T: Llm, D: Llm> {
     stepper: AnyStepper<T, D>,
     rng: Rng,
     sent: usize,
-    /// Original FIFO rank (a resumed request is still its old age).
+    /// Original admission rank (a resumed request is still its old age).
     seq: u64,
     started: Instant,
     first_token_at: Option<f64>,
+}
+
+/// Everything the serve loop mutates, bundled so every helper sees one
+/// coherent picture of queue + active set + bookkeeping.
+struct EngineState<T: Llm, D: Llm> {
+    batcher: Batcher<Request>,
+    active: Vec<Active<T, D>>,
+    /// Host-side state of preempted requests, keyed by request id (their
+    /// `Request` halves wait at the front of the batcher queue).
+    parked: HashMap<u64, Parked<T, D>>,
+    /// Ids currently queued/active/parked (duplicate-id guard).
+    in_flight: HashSet<u64>,
+    /// Admission-rank source for preemption victim selection.
+    next_seq: u64,
+    /// The engine-wide flat logits buffer every fused phase writes into.
+    logits: LogitsBatch,
+    /// The request channel disconnected; drain and exit.
+    closed: bool,
 }
 
 /// Execute one phase's groups into the shared flat logits buffer and
@@ -311,17 +392,12 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     /// truncation. Admitted requests are guaranteed to complete in
     /// full: preemption covers multi-request pressure, and a single
     /// request always fits by this bound. Accepted requests enter the
-    /// queue.
-    fn offer_request(
-        &self,
-        batcher: &mut Batcher<Request>,
-        in_flight: &mut std::collections::HashSet<u64>,
-        req: Request,
-    ) {
+    /// queue under their declared priority/deadline.
+    fn offer_request(&self, st: &mut EngineState<T, D>, req: Request) {
         // the id keys RNG streams and (crucially) parked preemption
         // state: a duplicate in-flight id could hand one client another
         // request's spilled stepper, so refuse it up front
-        if in_flight.contains(&req.id) {
+        if st.in_flight.contains(&req.id) {
             self.metrics.add(&self.metrics.rejected, 1);
             let _ = req.resp.send(Event::Error(format!(
                 "duplicate request id {} (still in flight)",
@@ -362,11 +438,28 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             return;
         }
         let id = req.id;
-        if let Err((req, _)) = batcher.offer(req) {
+        let (priority, deadline_ms) = (req.priority, req.deadline_ms);
+        if let Err((req, _)) = st.batcher.offer_with(req, priority, deadline_ms) {
             self.metrics.add(&self.metrics.rejected, 1);
             let _ = req.resp.send(Event::Error("queue full".into()));
         } else {
-            in_flight.insert(id);
+            st.in_flight.insert(id);
+        }
+    }
+
+    /// Drain every request currently sitting in the channel into the
+    /// queue (non-blocking). Called at every phase boundary, so arrivals
+    /// become admissible mid-round.
+    fn intake(&self, rx: &mpsc::Receiver<Request>, st: &mut EngineState<T, D>) {
+        loop {
+            match rx.try_recv() {
+                Ok(req) => self.offer_request(st, req),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    st.closed = true;
+                    break;
+                }
+            }
         }
     }
 
@@ -409,20 +502,16 @@ impl<T: Llm, D: Llm> Engine<T, D> {
 
     /// Would the KV pools still feed every active request's next round
     /// if `cand` were admitted too? (Always true on dense substrates.)
-    fn admission_headroom(
-        &self,
-        active: &[Active<T, D>],
-        parked: &std::collections::HashMap<u64, Parked<T, D>>,
-        cand: &Request,
-    ) -> bool {
+    fn admission_headroom(&self, st: &EngineState<T, D>, cand: &Request) -> bool {
         if self.no_pools() {
             return true;
         }
-        let cand_need = match parked.get(&cand.id) {
+        let cand_need = match st.parked.get(&cand.id) {
             Some(p) => p.stepper.round_need(),
             None => cand.prompt.len() + self.request_weight(cand) + 2,
         };
-        let mut needs: Vec<(usize, bool)> = active
+        let mut needs: Vec<(usize, bool)> = st
+            .active
             .iter()
             .map(|a| {
                 let ar = matches!(a.stepper, AnyStepper::Ar(_));
@@ -433,154 +522,54 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         self.pools_fit(&needs)
     }
 
-    /// Preempt active requests (youngest first, by FIFO rank) until
-    /// the pools can feed every remaining request's next round. Victims
-    /// spill their KV
-    /// state, park their steppers and re-enter the queue at the FRONT,
-    /// so preemption never costs a request its FIFO position — and at
-    /// least one request always keeps running, so undersized pools
-    /// degrade to sequential execution instead of deadlock/rejection.
-    fn preempt_for_headroom(
-        &self,
-        active: &mut Vec<Active<T, D>>,
-        batcher: &mut Batcher<Request>,
-        parked: &mut std::collections::HashMap<u64, Parked<T, D>>,
-    ) {
-        if self.no_pools() {
+    /// Admit every waiting request the scheduler, the concurrency cap,
+    /// the weight cap and the KV headroom allow. This runs at EVERY
+    /// phase boundary: `mid_round` joiners begin their round on the spot
+    /// so their first phase work fuses into the very next model call.
+    /// Under `EngineConfig::drain_batching` admission waits for a full
+    /// drain instead (the A/B baseline).
+    fn admit_ready(&self, st: &mut EngineState<T, D>, mid_round: bool) {
+        if self.cfg.drain_batching && !st.active.is_empty() {
             return;
         }
-        while active.len() > 1 {
-            let needs: Vec<(usize, bool)> = active
-                .iter()
-                .map(|a| {
-                    let ar = matches!(a.stepper, AnyStepper::Ar(_));
-                    (a.stepper.round_need(), !ar)
-                })
-                .collect();
-            if self.pools_fit(&needs) {
+        loop {
+            let can_admit = match st.batcher.peek() {
+                None => false,
+                Some(cand) => st.active.is_empty() || self.admission_headroom(st, cand),
+            };
+            if !can_admit {
                 break;
             }
-            // victim = the youngest by FIFO rank (swap_remove at
-            // completion shuffles the list, so position is not age)
-            let victim = active
-                .iter()
-                .enumerate()
-                .max_by_key(|(_, a)| a.seq)
-                .map(|(i, _)| i)
-                .expect("len > 1");
-            let mut a = active.swap_remove(victim);
-            match a.stepper.suspend(&self.target, &self.draft) {
-                Ok(()) => {
-                    self.metrics.add(&self.metrics.preemptions, 1);
-                    batcher.release_weight(a.weight);
-                    let prev = parked.insert(
-                        a.req.id,
-                        Parked {
-                            stepper: a.stepper,
-                            rng: a.rng,
-                            sent: a.sent,
-                            seq: a.seq,
-                            started: a.started,
-                            first_token_at: a.first_token_at,
-                        },
-                    );
-                    debug_assert!(prev.is_none(), "duplicate in-flight request id");
-                    batcher.requeue_front(a.req);
-                }
-                Err(e) => {
-                    self.metrics.add(&self.metrics.failed, 1);
-                    let _ = a.req.resp.send(Event::Error(e.to_string()));
-                    batcher.release_weight(a.weight);
-                    in_flight.remove(&a.req.id);
-                }
-            }
-        }
-    }
-
-    /// Blocking serve loop. Returns when the request channel closes and
-    /// all in-flight work drained.
-    pub fn run(self, rx: mpsc::Receiver<Request>) -> Arc<Metrics> {
-        let mut batcher: Batcher<Request> =
-            Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue)
-                .with_max_active_weight(self.cfg.max_active_budget);
-        let mut active: Vec<Active<T, D>> = Vec::new();
-        // host-side state of preempted requests, keyed by request id
-        // (their `Request` halves wait at the front of the queue)
-        let mut parked: std::collections::HashMap<u64, Parked<T, D>> =
-            std::collections::HashMap::new();
-        // ids currently queued/active/parked (duplicate-id guard)
-        let mut in_flight: std::collections::HashSet<u64> =
-            std::collections::HashSet::new();
-        // FIFO rank source for preemption victim selection
-        let mut next_seq: u64 = 0;
-        // the engine-wide flat logits buffer every fused phase writes into
-        let mut logits = LogitsBatch::default();
-        let mut closed = false;
-
-        loop {
-            // ---- intake --------------------------------------------------
-            loop {
-                match rx.try_recv() {
-                    Ok(req) => self.offer_request(&mut batcher, &mut in_flight, req),
-                    Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        closed = true;
-                        break;
+            let Some(adm) = st.batcher.admit_by(|r| self.request_weight(r)) else { break };
+            let Admitted { item: req, weight, queued_at } = adm;
+            self.metrics.record_queue_wait(queued_at.elapsed().as_secs_f64());
+            if let Some(mut p) = st.parked.remove(&req.id) {
+                // resume a preempted request: re-acquire whatever
+                // prefix is still cached, re-prefill the rest
+                match p.stepper.resume(&self.target, &self.draft) {
+                    Ok(()) => {
+                        self.metrics.add(&self.metrics.resumes, 1);
+                        st.active.push(Active {
+                            req,
+                            stepper: p.stepper,
+                            rng: p.rng,
+                            sent: p.sent,
+                            weight,
+                            seq: p.seq,
+                            started: p.started,
+                            first_token_at: p.first_token_at,
+                            state: RoundState::Idle,
+                        });
+                    }
+                    Err(e) => {
+                        self.metrics.add(&self.metrics.failed, 1);
+                        let _ = req.resp.send(Event::Error(e.to_string()));
+                        st.batcher.release_weight(weight);
+                        st.in_flight.remove(&req.id);
+                        continue;
                     }
                 }
-            }
-            // block when idle (nothing active, nothing queued)
-            if active.is_empty() && batcher.queued() == 0 {
-                if closed {
-                    break;
-                }
-                match rx.recv() {
-                    Ok(req) => self.offer_request(&mut batcher, &mut in_flight, req),
-                    Err(_) => break,
-                }
-            }
-
-            // ---- admission (budget-weighted under heterogeneous
-            // per-request decoders; KV-headroom-gated when pool-backed) ----
-            loop {
-                let can_admit = match batcher.peek() {
-                    None => false,
-                    Some(cand) => {
-                        active.is_empty()
-                            || self.admission_headroom(&active, &parked, cand)
-                    }
-                };
-                if !can_admit {
-                    break;
-                }
-                let admitted = batcher.admit_by(|r| self.request_weight(r));
-                let Some((req, weight)) = admitted else { break };
-                if let Some(mut p) = parked.remove(&req.id) {
-                    // resume a preempted request: re-acquire whatever
-                    // prefix is still cached, re-prefill the rest
-                    match p.stepper.resume(&self.target, &self.draft) {
-                        Ok(()) => {
-                            self.metrics.add(&self.metrics.resumes, 1);
-                            active.push(Active {
-                                req,
-                                stepper: p.stepper,
-                                rng: p.rng,
-                                sent: p.sent,
-                                weight,
-                                seq: p.seq,
-                                started: p.started,
-                                first_token_at: p.first_token_at,
-                            });
-                        }
-                        Err(e) => {
-                            self.metrics.add(&self.metrics.failed, 1);
-                            let _ = req.resp.send(Event::Error(e.to_string()));
-                            batcher.release_weight(weight);
-                            in_flight.remove(&req.id);
-                        }
-                    }
-                    continue;
-                }
+            } else {
                 self.metrics.add(&self.metrics.admitted, 1);
                 // publish the prompt as a shareable prefix (the substrate
                 // decides if/when the blocks become servable) BEFORE the
@@ -595,98 +584,220 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 match self.make_stepper(&req) {
                     Ok(stepper) => {
                         let rng = Rng::seed_from_u64(self.cfg.seed ^ req.id);
-                        let seq = next_seq;
-                        next_seq += 1;
-                        active.push(Active {
+                        let seq = st.next_seq;
+                        st.next_seq += 1;
+                        st.active.push(Active {
                             req,
                             stepper,
                             rng,
                             sent: 0,
                             weight,
                             seq,
-                            started: Instant::now(),
+                            started: queued_at,
                             first_token_at: None,
+                            state: RoundState::Idle,
                         });
                     }
                     Err(e) => {
                         self.metrics.add(&self.metrics.failed, 1);
                         let _ = req.resp.send(Event::Error(e.to_string()));
-                        batcher.release_weight(weight);
-                        in_flight.remove(&req.id);
+                        st.batcher.release_weight(weight);
+                        st.in_flight.remove(&req.id);
+                        continue;
                     }
                 }
             }
-            if active.is_empty() {
+            if mid_round {
+                // a mid-round joiner starts its round NOW; its first
+                // staged phase work rides the next fused call. Instant
+                // completions/failures are delivered at the caller's
+                // next reap point.
+                self.metrics.add(&self.metrics.mid_round_admitted, 1);
+                let a = st.active.last_mut().expect("just pushed");
+                a.begin(&self.target, &self.draft);
+            }
+        }
+    }
+
+    /// Preempt active requests (youngest first, by admission rank) until
+    /// the pools can feed every remaining request's next round. Victims
+    /// spill their KV state, park their steppers and re-enter the queue
+    /// at the FRONT, ahead of every priority class — preemption never
+    /// costs a request its turn — and at least one request always keeps
+    /// running, so undersized pools degrade to sequential execution
+    /// instead of deadlock/rejection. Only legal between rounds.
+    fn preempt_for_headroom(&self, st: &mut EngineState<T, D>) {
+        if self.no_pools() {
+            return;
+        }
+        while st.active.len() > 1 {
+            let needs: Vec<(usize, bool)> = st
+                .active
+                .iter()
+                .map(|a| {
+                    let ar = matches!(a.stepper, AnyStepper::Ar(_));
+                    (a.stepper.round_need(), !ar)
+                })
+                .collect();
+            if self.pools_fit(&needs) {
+                break;
+            }
+            // victim = the youngest by admission rank (swap_remove at
+            // completion shuffles the list, so position is not age)
+            let victim = st
+                .active
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, a)| a.seq)
+                .map(|(i, _)| i)
+                .expect("len > 1");
+            let mut a = st.active.swap_remove(victim);
+            match a.stepper.suspend(&self.target, &self.draft) {
+                Ok(()) => {
+                    self.metrics.add(&self.metrics.preemptions, 1);
+                    st.batcher.release_weight(a.weight);
+                    let prev = st.parked.insert(
+                        a.req.id,
+                        Parked {
+                            stepper: a.stepper,
+                            rng: a.rng,
+                            sent: a.sent,
+                            seq: a.seq,
+                            started: a.started,
+                            first_token_at: a.first_token_at,
+                        },
+                    );
+                    debug_assert!(prev.is_none(), "duplicate in-flight request id");
+                    // rank = original admission age: victims of separate
+                    // preemption passes still resume oldest-first
+                    st.batcher.requeue_front(a.req, a.seq);
+                }
+                Err(e) => {
+                    self.metrics.add(&self.metrics.failed, 1);
+                    let _ = a.req.resp.send(Event::Error(e.to_string()));
+                    st.batcher.release_weight(a.weight);
+                    st.in_flight.remove(&a.req.id);
+                }
+            }
+        }
+    }
+
+    /// Stream a request's newly committed tokens (commit-boundary
+    /// streaming: called right after its `feed_target` / terminal state,
+    /// not at the end of the fused round).
+    fn flush_tokens(&self, a: &mut Active<T, D>) {
+        let committed = a.stepper.committed();
+        if committed > a.sent {
+            if a.first_token_at.is_none() {
+                let t = a.started.elapsed().as_secs_f64();
+                a.first_token_at = Some(t);
+                self.metrics.record_ttft(t);
+            }
+            let new: Vec<u32> = a.stepper.out()[a.sent..committed].to_vec();
+            self.metrics.add(&self.metrics.tokens_out, new.len() as u64);
+            a.sent = committed;
+            let _ = a.req.resp.send(Event::Tokens(new));
+        }
+    }
+
+    /// Deliver a completed request's final stats and release its
+    /// resources. Dropping `a` here drops the stepper AND its sessions,
+    /// which returns every KV block to the pool immediately — waiting
+    /// requests see the headroom at the very next admission point.
+    fn finish_request(&self, st: &mut EngineState<T, D>, a: Active<T, D>) {
+        let mut stats = a.stepper.stats().clone();
+        // pool-wide KV telemetry rides along in the done event
+        stats.kv_pool = self.target.pool_status();
+        if stats.kv_pool.is_some() {
+            // hits span both model pools for tree decoders
+            let pools = match &a.stepper {
+                AnyStepper::Ar(_) => 1,
+                _ => 2,
+            };
+            self.metrics
+                .record_kv_hit_ratio(stats.kv_hit_tokens, a.req.prompt.len() * pools);
+        }
+        self.metrics.add(&self.metrics.completed, 1);
+        self.metrics.add(&self.metrics.draft_calls, stats.draft_calls as u64);
+        self.metrics.record_latency(a.started.elapsed().as_secs_f64());
+        let _ = a.req.resp.send(Event::Done(stats));
+        st.batcher.release_weight(a.weight);
+        st.in_flight.remove(&a.req.id);
+    }
+
+    /// Remove every request in a terminal state from the active set:
+    /// graceful tail handling. Runs at each phase boundary, so a stop
+    /// token or `max_tokens` exit mid-round frees its KV blocks and its
+    /// concurrency slot before the next admission decision — not after
+    /// the batch drains.
+    fn reap(&self, st: &mut EngineState<T, D>) {
+        let mut i = 0;
+        while i < st.active.len() {
+            if !matches!(st.active[i].state, RoundState::Done | RoundState::Failed(_)) {
+                i += 1;
+                continue;
+            }
+            let mut a = st.active.swap_remove(i);
+            match std::mem::replace(&mut a.state, RoundState::Idle) {
+                RoundState::Done => {
+                    // terminal flush: tokens emitted by a finishing
+                    // begin phase (e.g. AR's last sample) still stream
+                    self.flush_tokens(&mut a);
+                    self.finish_request(st, a);
+                }
+                RoundState::Failed(e) => {
+                    self.metrics.add(&self.metrics.failed, 1);
+                    let _ = a.req.resp.send(Event::Error(e));
+                    st.batcher.release_weight(a.weight);
+                    st.in_flight.remove(&a.req.id);
+                    // dropping `a` releases its KV blocks immediately
+                }
+                _ => unreachable!("terminal state checked above"),
+            }
+        }
+    }
+
+    /// Blocking serve loop. Returns when the request channel closes and
+    /// all in-flight work drained.
+    pub fn run(self, rx: mpsc::Receiver<Request>) -> Arc<Metrics> {
+        let mut st = EngineState {
+            batcher: Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue)
+                .with_max_active_weight(self.cfg.max_active_budget),
+            active: Vec::new(),
+            parked: HashMap::new(),
+            in_flight: HashSet::new(),
+            next_seq: 0,
+            logits: LogitsBatch::default(),
+            closed: false,
+        };
+
+        loop {
+            // ---- intake + idle blocking ----------------------------------
+            self.intake(&rx, &mut st);
+            if st.active.is_empty() && st.batcher.queued() == 0 {
+                if st.closed {
+                    break;
+                }
+                match rx.recv() {
+                    Ok(req) => self.offer_request(&mut st, req),
+                    Err(_) => break,
+                }
+                continue; // drain any burst before starting a round
+            }
+
+            // ---- pre-round admission (deadline/priority scheduler with
+            // aging; budget-weighted; KV-headroom-gated when pool-backed)
+            st.batcher.age_tick();
+            self.admit_ready(&mut st, false);
+            if st.active.is_empty() {
                 continue;
             }
 
             // ---- KV memory pressure: suspend + requeue before the round --
-            self.preempt_for_headroom(&mut active, &mut batcher, &mut parked);
+            self.preempt_for_headroom(&mut st);
 
-            // ---- one fused round over every active request ---------------
-            let mut state = self.run_fused_round(&mut active, &mut logits);
-
-            // ---- flush tokens, deliver completions/errors ----------------
-            let mut i = 0;
-            while i < active.len() {
-                // owned disposition so removal below can freely mutate
-                let failure: Option<String> = match &state[i] {
-                    RoundState::Failed(e) => Some(e.clone()),
-                    _ => None,
-                };
-                let completed = matches!(state[i], RoundState::Done);
-                if failure.is_none() {
-                    let a = &mut active[i];
-                    let out_len = a.stepper.out().len();
-                    if out_len > a.sent {
-                        if a.first_token_at.is_none() {
-                            let t = a.started.elapsed().as_secs_f64();
-                            a.first_token_at = Some(t);
-                            self.metrics.record_ttft(t);
-                        }
-                        let new: Vec<u32> = a.stepper.out()[a.sent..].to_vec();
-                        self.metrics.add(&self.metrics.tokens_out, new.len() as u64);
-                        a.sent = out_len;
-                        let _ = a.req.resp.send(Event::Tokens(new));
-                    }
-                }
-                if let Some(e) = failure {
-                    self.metrics.add(&self.metrics.failed, 1);
-                    let _ = active[i].req.resp.send(Event::Error(e));
-                    let weight = active[i].weight;
-                    in_flight.remove(&active[i].req.id);
-                    active.swap_remove(i);
-                    state.swap_remove(i);
-                    batcher.release_weight(weight);
-                } else if completed {
-                    let mut stats = active[i].stepper.stats().clone();
-                    // pool-wide KV telemetry rides along in the done event
-                    stats.kv_pool = self.target.pool_status();
-                    if stats.kv_pool.is_some() {
-                        // hits span both model pools for tree decoders
-                        let pools = match active[i].stepper {
-                            AnyStepper::Ar(_) => 1,
-                            _ => 2,
-                        };
-                        self.metrics.record_kv_hit_ratio(
-                            stats.kv_hit_tokens,
-                            active[i].req.prompt.len() * pools,
-                        );
-                    }
-                    self.metrics.add(&self.metrics.completed, 1);
-                    self.metrics
-                        .add(&self.metrics.draft_calls, stats.draft_calls as u64);
-                    self.metrics.record_latency(active[i].started.elapsed().as_secs_f64());
-                    let _ = active[i].req.resp.send(Event::Done(stats));
-                    let weight = active[i].weight;
-                    in_flight.remove(&active[i].req.id);
-                    active.swap_remove(i);
-                    state.swap_remove(i);
-                    batcher.release_weight(weight);
-                } else {
-                    i += 1;
-                }
-            }
+            // ---- one fused round; membership churns at phase boundaries --
+            self.run_round(&rx, &mut st);
 
             // ---- export pool gauges (cheap; stores, not sums) ------------
             if let Some(ps) = self.target.pool_status() {
@@ -701,39 +812,36 @@ impl<T: Llm, D: Llm> Engine<T, D> {
 
     /// Advance every active request by one speculative round, batching
     /// all draft and target forwards across requests (see module docs)
-    /// into the shared flat `logits` buffer. Returns each request's
-    /// end-of-round state, index-aligned with `active`.
-    fn run_fused_round(
-        &self,
-        active: &mut [Active<T, D>],
-        logits: &mut LogitsBatch,
-    ) -> Vec<RoundState> {
-        let mut state: Vec<RoundState> = Vec::with_capacity(active.len());
-
+    /// into the shared flat logits buffer. Between fused calls the
+    /// engine reaps terminal requests and admits waiting ones, so batch
+    /// membership changes while the round is in flight.
+    fn run_round(&self, rx: &mpsc::Receiver<Request>, st: &mut EngineState<T, D>) {
         // ---- phase 1: begin rounds (bookkeeping, no model calls) ---------
-        for a in active.iter_mut() {
-            let start = match &mut a.stepper {
-                AnyStepper::Ar(s) => s.begin_round(&self.target, &mut a.rng),
-                AnyStepper::Spec(s) => s.begin_round(&self.target, &self.draft),
-                AnyStepper::Adaptive(s) => s.begin_round(&self.target, &self.draft),
-            };
-            state.push(match start {
-                Ok(RoundStart::Started) => RoundState::InRound,
-                Ok(RoundStart::Finished) => RoundState::Done,
-                Err(e) => RoundState::Failed(e.to_string()),
-            });
+        for a in st.active.iter_mut() {
+            debug_assert!(matches!(a.state, RoundState::Idle));
+            a.begin(&self.target, &self.draft);
         }
-        let in_round =
-            state.iter().filter(|s| matches!(s, RoundState::InRound)).count();
+        self.reap(st);
 
         // ---- phase 2: fused draft levels ---------------------------------
         // Requests at different tree depths drop out of later iterations;
-        // each iteration is ONE fused draft forward across the rest.
+        // each iteration is ONE fused draft forward across the rest. New
+        // arrivals join at the top of every iteration.
         loop {
+            if !self.cfg.drain_batching {
+                self.intake(rx, st);
+                self.admit_ready(st, true);
+            }
+            let in_round = st
+                .active
+                .iter()
+                .filter(|a| matches!(a.state, RoundState::InRound))
+                .count();
+            let EngineState { active, logits, .. } = &mut *st;
             let mut groups: Vec<(&mut D::Session, &[EvalNode])> = Vec::new();
             let mut who: Vec<usize> = Vec::new();
             for (i, a) in active.iter_mut().enumerate() {
-                if !matches!(state[i], RoundState::InRound) {
+                if !matches!(a.state, RoundState::InRound) {
                     continue;
                 }
                 let g = match &mut a.stepper {
@@ -753,9 +861,9 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             drop(groups);
             self.metrics.record_fused(who.len(), in_round);
             for (res, &i) in results.into_iter().zip(who.iter()) {
+                let a = &mut active[i];
                 match res {
                     Ok(range) => {
-                        let a = &mut active[i];
                         let rows_i = logits.view(range);
                         let fed = match &mut a.stepper {
                             AnyStepper::Spec(s) => s.feed_draft(rows_i, &mut a.rng),
@@ -763,19 +871,26 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                             AnyStepper::Ar(_) => unreachable!("AR stages no draft work"),
                         };
                         if let Err(e) = fed {
-                            state[i] = RoundState::Failed(e.to_string());
+                            a.state = RoundState::Failed(e.to_string());
                         }
                     }
-                    Err(e) => state[i] = RoundState::Failed(e),
+                    Err(e) => a.state = RoundState::Failed(e),
                 }
             }
+            self.reap(st);
         }
 
         // ---- phase 3: one fused target pass (verification) ---------------
+        let in_round = st
+            .active
+            .iter()
+            .filter(|a| matches!(a.state, RoundState::InRound))
+            .count();
+        let EngineState { active, logits, .. } = &mut *st;
         let mut groups: Vec<(&mut T::Session, &[EvalNode])> = Vec::new();
         let mut who: Vec<usize> = Vec::new();
         for (i, a) in active.iter_mut().enumerate() {
-            if !matches!(state[i], RoundState::InRound) {
+            if !matches!(a.state, RoundState::InRound) {
                 continue;
             }
             let g = match &mut a.stepper {
@@ -788,7 +903,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     groups.push(g);
                     who.push(i);
                 }
-                None => state[i] = RoundState::Failed("round staged no target work".into()),
+                None => a.state = RoundState::Failed("round staged no target work".into()),
             }
         }
         if !groups.is_empty() {
@@ -796,14 +911,14 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             drop(groups);
             self.metrics.record_fused(who.len(), in_round);
             for (res, &i) in results.into_iter().zip(who.iter()) {
+                let a = &mut active[i];
                 let rows_i = match res {
                     Ok(range) => logits.view(range),
                     Err(e) => {
-                        state[i] = RoundState::Failed(e);
+                        a.state = RoundState::Failed(e);
                         continue;
                     }
                 };
-                let a = &mut active[i];
                 let fed = match &mut a.stepper {
                     AnyStepper::Ar(s) => s.feed_target(&self.target, rows_i),
                     AnyStepper::Spec(s) => {
@@ -813,20 +928,25 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                         s.feed_target(&self.target, &self.draft, rows_i, &mut a.rng)
                     }
                 };
-                state[i] = match fed {
-                    Ok(StepOutcome::Progress) => RoundState::Progressed,
+                a.state = match fed {
+                    Ok(StepOutcome::Progress) => RoundState::Idle,
                     Ok(StepOutcome::Done) => RoundState::Done,
                     Err(e) => RoundState::Failed(e.to_string()),
                 };
-                if !matches!(state[i], RoundState::Failed(_)) {
+                if !matches!(a.state, RoundState::Failed(_)) {
                     self.metrics.add(&self.metrics.decode_rounds, 1);
-                    if let Some(report) = active[i].stepper.last_round() {
+                    // commit-boundary streaming: this request's tokens go
+                    // out NOW, before the rest of the batch is processed
+                    self.flush_tokens(a);
+                    if let Some(report) = a.stepper.last_round() {
                         self.metrics.record_round(report);
                     }
                 }
             }
         }
-        state
+        // graceful tail: stop-token / max_tokens completions free their
+        // KV blocks and slots here, before the next admission point
+        self.reap(st);
     }
 }
 

@@ -31,10 +31,19 @@ pub struct Metrics {
     pub tokens_out: AtomicU64,
     pub decode_rounds: AtomicU64,
     pub draft_calls: AtomicU64,
-    /// End-to-end request latencies (seconds).
+    /// End-to-end request latencies (seconds), measured from arrival
+    /// (queue entry), not from admission.
     latencies: Mutex<Vec<f64>>,
-    /// Time-to-first-token latencies (seconds).
+    /// Time-to-first-token latencies (seconds), measured from arrival —
+    /// the number continuous admission exists to shrink.
     ttft: Mutex<Vec<f64>>,
+    /// Queue waits (seconds): time between entering the waiting queue
+    /// and admission (re-waits after preemption count separately).
+    queue_wait: Mutex<Vec<f64>>,
+    /// Requests admitted at a mid-round phase boundary (continuous
+    /// batching), i.e. while other requests were mid-round — as opposed
+    /// to the pre-round admission point.
+    pub mid_round_admitted: AtomicU64,
     /// Per-level verification attempts / acceptances across all rounds.
     level_attempts: Mutex<Vec<u64>>,
     level_accepts: Mutex<Vec<u64>>,
@@ -89,6 +98,14 @@ pub struct Snapshot {
     pub latency_p99: f64,
     pub ttft_p50: f64,
     pub ttft_p95: f64,
+    /// Mean time-to-first-token (0.0 before any token streamed).
+    pub ttft_mean: f64,
+    /// Queue-wait (arrival -> admission) percentiles and mean.
+    pub queue_wait_p50: f64,
+    pub queue_wait_p95: f64,
+    pub queue_wait_mean: f64,
+    /// Requests admitted at a mid-round phase boundary.
+    pub mid_round_admitted: u64,
     /// Empirical acceptance rate per tree level (accepts / attempts);
     /// empty until a speculative round ran.
     pub accept_rate_by_level: Vec<f64>,
@@ -138,6 +155,10 @@ impl Metrics {
 
     pub fn record_ttft(&self, secs: f64) {
         self.ttft.lock().unwrap().push(secs);
+    }
+
+    pub fn record_queue_wait(&self, secs: f64) {
+        self.queue_wait.lock().unwrap().push(secs);
     }
 
     /// Fold one speculative round's verification telemetry into the
@@ -221,6 +242,18 @@ impl Metrics {
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mut ttft = self.ttft.lock().unwrap().clone();
         ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let ttft_mean = if ttft.is_empty() {
+            0.0
+        } else {
+            ttft.iter().sum::<f64>() / ttft.len() as f64
+        };
+        let mut qwait = self.queue_wait.lock().unwrap().clone();
+        qwait.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let queue_wait_mean = if qwait.is_empty() {
+            0.0
+        } else {
+            qwait.iter().sum::<f64>() / qwait.len() as f64
+        };
         let attempts = self.level_attempts.lock().unwrap();
         let accepts = self.level_accepts.lock().unwrap();
         let accept_rate_by_level = attempts
@@ -274,6 +307,11 @@ impl Metrics {
             latency_p99: percentile(&lat, 0.99),
             ttft_p50: percentile(&ttft, 0.50),
             ttft_p95: percentile(&ttft, 0.95),
+            ttft_mean,
+            queue_wait_p50: percentile(&qwait, 0.50),
+            queue_wait_p95: percentile(&qwait, 0.95),
+            queue_wait_mean,
+            mid_round_admitted: self.mid_round_admitted.load(Ordering::Relaxed),
             accept_rate_by_level,
             round_nodes_hist,
             fused_calls,
@@ -308,6 +346,25 @@ mod tests {
         assert!((s.latency_p50 - 50.0).abs() <= 1.0);
         assert!((s.latency_p95 - 95.0).abs() <= 1.0);
         assert!((s.latency_p99 - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn queue_wait_and_ttft_aggregate() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.queue_wait_p50, 0.0);
+        assert_eq!(s.ttft_mean, 0.0);
+        for i in 1..=10 {
+            m.record_queue_wait(i as f64);
+            m.record_ttft(2.0 * i as f64);
+        }
+        m.add(&m.mid_round_admitted, 3);
+        let s = m.snapshot();
+        assert!((s.queue_wait_mean - 5.5).abs() < 1e-12);
+        assert!((s.queue_wait_p50 - 6.0).abs() <= 1.0);
+        assert!(s.queue_wait_p95 >= s.queue_wait_p50);
+        assert!((s.ttft_mean - 11.0).abs() < 1e-12);
+        assert_eq!(s.mid_round_admitted, 3);
     }
 
     #[test]

@@ -1,16 +1,20 @@
 //! The serving coordinator (Layer 3): request admission, continuous
-//! batching at speculative-round granularity, per-request decode state,
-//! metrics, and the TCP front-end.
+//! batching at phase granularity, per-request decode state, metrics,
+//! and the TCP front-end.
 //!
 //! Structure follows the vLLM router/engine split: [`batcher::Batcher`]
-//! owns the admission queue and fairness policy; [`engine::Engine`] owns
-//! the models and advances every active session one speculative round
-//! per turn in lockstep phases, fusing all draft/target forwards across
-//! requests into one `eval_batch` call per phase (so a long request
-//! cannot starve others, and the hardware batch dimension never idles);
-//! [`server`] is a thin JSON-lines TCP front-end; [`metrics`] aggregates
-//! the serving statistics (incl. fused-batch telemetry) the benches
-//! report.
+//! owns the admission queue and scheduling policy (priority classes,
+//! deadlines, anti-starvation aging, weighted admission);
+//! [`engine::Engine`] owns the models and advances every active session
+//! one speculative round per turn in lockstep phases, fusing all
+//! draft/target forwards across requests into one `eval_batch` call per
+//! phase — with batch membership churning at every phase boundary:
+//! arrivals join mid-round, completions free their KV immediately, and
+//! each request's committed tokens stream at its own commit boundary
+//! (so a long request cannot starve others, and the hardware batch
+//! dimension never idles); [`server`] is a thin JSON-lines TCP
+//! front-end; [`metrics`] aggregates the serving statistics (incl.
+//! fused-batch, queue-wait and TTFT telemetry) the benches report.
 
 pub mod batcher;
 pub mod engine;

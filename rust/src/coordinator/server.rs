@@ -4,7 +4,8 @@
 //!
 //! Protocol: one request object per line:
 //!   {"prompt": "text", "max_tokens": 32, "decoder": "rsd-s:3x3"?,
-//!    "temperature": 0.3?, "top_p": 1.0?, "stop": [10]?}
+//!    "temperature": 0.3?, "top_p": 1.0?, "stop": [10]?,
+//!    "priority": 0?, "deadline_ms": 250?, "stream": true?}
 //!
 //! "stop" is an array of token ids (the tokenizer is byte-level, so an
 //! id is a byte value, e.g. 10 = "\n"); generation ends at the first
@@ -13,6 +14,12 @@
 //! "temperature" / "top_p" / "stop" are independent per-field overrides:
 //! any field a request leaves out inherits the engine's configured
 //! sampling (see [`crate::config::SamplingPatch`]).
+//!
+//! "priority" (0-255, default 0) picks the scheduling class: higher
+//! admits first, with queue aging guaranteeing low classes never starve.
+//! "deadline_ms" declares a latency budget: among equal effective
+//! priorities the tightest deadline admits first. Both are scheduling
+//! hints only — they never change the request's tokens.
 //!
 //! The optional "decoder" field accepts every spec string of
 //! [`crate::config::DecoderConfig`]:
@@ -23,8 +30,15 @@
 //! may use different budgets concurrently (the engine's weighted
 //! admission keeps them fair, see `EngineConfig::max_active_budget`).
 //!
-//! Streamed responses, one object per line:
+//! Streamed responses, one object per line. Default framing batches each
+//! commit boundary into one fragment:
 //!   {"tokens": "generated fragment"}
+//! With `"stream": true` every committed token is its own event, tagged
+//! with its position in the stream:
+//!   {"token": "t", "index": 3}
+//! Either way events are emitted as the engine commits them (per
+//! speculative round), never buffered to the end, and the line stream
+//! finishes with
 //!   {"done": {"generated": n, "block_efficiency": x,
 //!             "accept_rate_by_level": [..],
 //!             "nodes_per_round_hist": {"nodes": rounds, ..}, ...}}
@@ -41,7 +55,7 @@ use std::sync::mpsc;
 
 use anyhow::Result;
 
-use crate::config::{parse_stop_tokens, SamplingPatch};
+use crate::config::{parse_stop_tokens, DecoderConfig, SamplingPatch};
 use crate::tokenizer::Tokenizer;
 use crate::util::Json;
 
@@ -82,10 +96,22 @@ fn err_json(e: impl std::fmt::Display) -> Json {
     Json::obj(vec![("error", Json::Str(e.to_string()))])
 }
 
-pub(crate) fn parse_wire_request(
-    line: &str,
-    tok: &Tokenizer,
-) -> Result<(Vec<u32>, usize, Option<crate::config::DecoderConfig>, Option<SamplingPatch>)> {
+/// One parsed wire request (everything the engine's [`Request`] needs,
+/// plus connection-local framing preferences).
+#[derive(Debug)]
+pub(crate) struct WireRequest {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub decoder: Option<DecoderConfig>,
+    pub sampling: Option<SamplingPatch>,
+    pub priority: u8,
+    pub deadline_ms: Option<u64>,
+    /// Per-token streaming: one `{"token", "index"}` event per committed
+    /// token instead of per-commit `{"tokens"}` fragments.
+    pub stream: bool,
+}
+
+pub(crate) fn parse_wire_request(line: &str, tok: &Tokenizer) -> Result<WireRequest> {
     let j = Json::parse(line)?;
     let prompt_text = j.str_field("prompt")?;
     let prompt = tok.encode(prompt_text);
@@ -105,8 +131,17 @@ pub(crate) fn parse_wire_request(
     if let Some(arr) = j.get("stop").and_then(Json::as_arr) {
         patch.stop = Some(parse_stop_tokens(arr)?);
     }
+    let priority = match j.get("priority").and_then(Json::as_usize) {
+        Some(p) if p > u8::MAX as usize => {
+            anyhow::bail!("priority {p} out of range 0..=255")
+        }
+        Some(p) => p as u8,
+        None => 0,
+    };
+    let deadline_ms = j.get("deadline_ms").and_then(Json::as_usize).map(|v| v as u64);
+    let stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
     let sampling = if patch.is_empty() { None } else { Some(patch) };
-    Ok((prompt, max_new, decoder, sampling))
+    Ok(WireRequest { prompt, max_new, decoder, sampling, priority, deadline_ms, stream })
 }
 
 pub(crate) fn done_json(stats: &crate::decode::DecodeStats) -> Json {
@@ -159,6 +194,14 @@ pub(crate) fn done_json(stats: &crate::decode::DecodeStats) -> Json {
     Json::obj(vec![("done", Json::obj(fields))])
 }
 
+/// One per-token streaming event (`"stream": true` framing).
+pub(crate) fn token_json(tok: &Tokenizer, token: u32, index: usize) -> Json {
+    Json::obj(vec![
+        ("token", Json::Str(tok.decode(&[token]))),
+        ("index", index.into()),
+    ])
+}
+
 fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>) -> Result<()> {
     let mut wr = stream.try_clone()?;
     let rd = BufReader::new(stream);
@@ -168,31 +211,43 @@ fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let (prompt, max_new, decoder, sampling) = match parse_wire_request(&line, &tok) {
+        let wire = match parse_wire_request(&line, &tok) {
             Ok(x) => x,
             Err(e) => {
                 send_line(&mut wr, &err_json(format!("bad request: {e}")))?;
                 continue;
             }
         };
+        let per_token = wire.stream;
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
-            prompt,
-            max_new,
-            decoder,
-            sampling,
+            prompt: wire.prompt,
+            max_new: wire.max_new,
+            decoder: wire.decoder,
+            sampling: wire.sampling,
+            priority: wire.priority,
+            deadline_ms: wire.deadline_ms,
             resp: tx,
         };
         if submit.send(req).is_err() {
             send_line(&mut wr, &err_json("engine stopped"))?;
             return Ok(());
         }
+        let mut emitted = 0usize;
         while let Ok(ev) = rx.recv() {
             match ev {
                 Event::Tokens(ts) => {
-                    let msg = Json::obj(vec![("tokens", Json::Str(tok.decode(&ts)))]);
-                    send_line(&mut wr, &msg)?;
+                    if per_token {
+                        for &t in &ts {
+                            send_line(&mut wr, &token_json(&tok, t, emitted))?;
+                            emitted += 1;
+                        }
+                    } else {
+                        emitted += ts.len();
+                        let msg = Json::obj(vec![("tokens", Json::Str(tok.decode(&ts)))]);
+                        send_line(&mut wr, &msg)?;
+                    }
                 }
                 Event::Done(stats) => {
                     send_line(&mut wr, &done_json(&stats))?;
@@ -215,15 +270,15 @@ mod tests {
     #[test]
     fn wire_request_parses_full_form() {
         let tok = Tokenizer::new();
-        let (prompt, max_new, dec, samp) = parse_wire_request(
+        let w = parse_wire_request(
             r#"{"prompt": "hello", "max_tokens": 9, "decoder": "rsd-c:2-2", "temperature": 0.5}"#,
             &tok,
         )
         .unwrap();
-        assert_eq!(prompt.len(), 5);
-        assert_eq!(max_new, 9);
-        assert_eq!(dec, Some(crate::config::DecoderConfig::RsdC { branches: vec![2, 2] }));
-        let samp = samp.unwrap();
+        assert_eq!(w.prompt.len(), 5);
+        assert_eq!(w.max_new, 9);
+        assert_eq!(w.decoder, Some(crate::config::DecoderConfig::RsdC { branches: vec![2, 2] }));
+        let samp = w.sampling.unwrap();
         assert!((samp.temperature.unwrap() - 0.5).abs() < 1e-6);
         // unset fields stay None: they inherit the engine's sampling
         assert!(samp.top_p.is_none());
@@ -233,22 +288,37 @@ mod tests {
     #[test]
     fn wire_request_defaults() {
         let tok = Tokenizer::new();
-        let (_, max_new, dec, samp) =
-            parse_wire_request(r#"{"prompt": "hi"}"#, &tok).unwrap();
-        assert_eq!(max_new, 64);
-        assert!(dec.is_none());
-        assert!(samp.is_none());
+        let w = parse_wire_request(r#"{"prompt": "hi"}"#, &tok).unwrap();
+        assert_eq!(w.max_new, 64);
+        assert!(w.decoder.is_none());
+        assert!(w.sampling.is_none());
+        assert_eq!(w.priority, 0);
+        assert!(w.deadline_ms.is_none());
+        assert!(!w.stream, "per-commit fragments are the default framing");
+    }
+
+    #[test]
+    fn wire_request_parses_scheduling_and_streaming_fields() {
+        let tok = Tokenizer::new();
+        let w = parse_wire_request(
+            r#"{"prompt": "hi", "priority": 7, "deadline_ms": 250, "stream": true}"#,
+            &tok,
+        )
+        .unwrap();
+        assert_eq!(w.priority, 7);
+        assert_eq!(w.deadline_ms, Some(250));
+        assert!(w.stream);
+        // scheduling hints never touch sampling
+        assert!(w.sampling.is_none());
+        // out-of-range priority is a clean parse error, not a lossy cast
+        assert!(parse_wire_request(r#"{"prompt": "hi", "priority": 300}"#, &tok).is_err());
     }
 
     #[test]
     fn wire_request_parses_stop_tokens() {
         let tok = Tokenizer::new();
-        let (_, _, _, samp) = parse_wire_request(
-            r#"{"prompt": "hi", "stop": [10, 0]}"#,
-            &tok,
-        )
-        .unwrap();
-        let samp = samp.unwrap();
+        let w = parse_wire_request(r#"{"prompt": "hi", "stop": [10, 0]}"#, &tok).unwrap();
+        let samp = w.sampling.unwrap();
         assert_eq!(samp.stop, Some(vec![10, 0]));
         // only "stop" was set: temperature/top_p inherit the engine's
         assert!(samp.temperature.is_none());
@@ -267,16 +337,24 @@ mod tests {
     #[test]
     fn wire_request_parses_adaptive_decoder() {
         let tok = Tokenizer::new();
-        let (_, _, dec, _) =
+        let w =
             parse_wire_request(r#"{"prompt": "hi", "decoder": "adaptive:30"}"#, &tok).unwrap();
         assert_eq!(
-            dec,
+            w.decoder,
             Some(crate::config::DecoderConfig::Adaptive {
                 budget: 30,
                 family: crate::config::AdaptiveFamily::Auto,
             })
         );
         assert!(parse_wire_request(r#"{"prompt": "hi", "decoder": "adaptive:0"}"#, &tok).is_err());
+    }
+
+    #[test]
+    fn token_events_carry_text_and_index() {
+        let tok = Tokenizer::new();
+        let j = token_json(&tok, b'a' as u32, 4);
+        assert_eq!(j.get("token").and_then(Json::as_str), Some("a"));
+        assert_eq!(j.get("index").and_then(Json::as_usize), Some(4));
     }
 
     #[test]

@@ -111,6 +111,13 @@ impl<T: Llm> ArStepper<T> {
         self.done
     }
 
+    /// The streaming commit boundary (see
+    /// [`super::spec::SpecStepper::committed_len`]): AR tokens are final
+    /// the moment they are sampled at `begin_round`, one per round.
+    pub fn committed_len(&self) -> usize {
+        self.out.len()
+    }
+
     fn finish(&mut self) -> StepOutcome {
         self.stats.generated = self.out.len();
         self.stats.wall = self.started.elapsed();

@@ -499,6 +499,16 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         self.done
     }
 
+    /// The streaming commit boundary: every token in
+    /// `out[..committed_len()]` has been verified AND committed into the
+    /// KV caches, so it is final and safe to emit — nothing before this
+    /// index can ever be retracted. Advances exactly once per round (at
+    /// [`SpecStepper::feed_target`]), which is the granularity at which
+    /// the serving engine streams `token` events.
+    pub fn committed_len(&self) -> usize {
+        self.out.len()
+    }
+
     /// Telemetry of the most recent completed round.
     pub fn last_round(&self) -> Option<&RoundReport> {
         if self.has_report {

@@ -34,7 +34,11 @@ COMMANDS:
              --top-p P --seed N [--sim] [--artifacts DIR]
   serve      --addr HOST:PORT [--config FILE.json] [--artifacts DIR] [--sim]
              (config "kv_blocks"/"kv_block_size" enable the paged KV
-              pool with radix prefix sharing on the sim substrate)
+              pool with radix prefix sharing on the sim substrate;
+              "drain_batching": true switches continuous phase-boundary
+              admission off, as the A/B baseline. Per-request wire
+              fields: "priority" 0-255, "deadline_ms", "stream": true
+              for per-token {"token", "index"} events)
   exp1       --dl 2,3,4,5 --max-tokens N --reps N [--sim] [--alpha A]
              [--tv-trials N] --temperature T
   exp2       --budget 6,10,14,21,30 (same flags as exp1)

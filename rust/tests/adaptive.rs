@@ -111,6 +111,8 @@ fn engine_mean_efficiency(decoder: DecoderConfig, alpha: f64, seed: u64) -> f64 
             max_new: 48,
             decoder: None,
             sampling: None,
+            priority: 0,
+            deadline_ms: None,
             resp: rtx,
         })
         .unwrap();
@@ -191,6 +193,8 @@ fn engine_runs_heterogeneous_adaptive_budgets() {
             max_new: 24,
             decoder: Some(DecoderConfig::Adaptive { budget: b, family: AdaptiveFamily::Auto }),
             sampling: None,
+            priority: 0,
+            deadline_ms: None,
             resp: rtx,
         })
         .unwrap();

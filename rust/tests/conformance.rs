@@ -1,0 +1,189 @@
+//! Statistical conformance suite: end-to-end *distribution losslessness*
+//! of every decoder mode on the sim substrate.
+//!
+//! The paper's correctness bar (Theorems 3.1/3.2, and the multi-draft
+//! analyses of SpecHub / the Xia et al. survey) is that speculative
+//! verification must leave the target model's output distribution
+//! untouched — acceleration is only legitimate if the emitted tokens
+//! are exactly `q`-distributed. The unit tests in `src/decode/rrs.rs`
+//! check the *rules* in isolation; this suite checks the whole pipeline:
+//! drafting strategy -> tree construction -> fused phase machine ->
+//! verification walk -> commit/emission.
+//!
+//! Method: for each decoder mode (sd, rsd-c, rsd-s, spectr) run 50k
+//! independent single-round decodes (one seed per draw, pinned), record
+//! the FIRST emitted token, and compare the empirical distribution
+//! against the target model's processed softmax at the prompt context.
+//! The first token is the level-0 verification outcome (accepted sibling
+//! or residual sample), so by the losslessness theorems its law must be
+//! exactly `q(. | prompt)` for every mode.
+//!
+//! The gate is a pooled Pearson chi-square test (primary, calibrated:
+//! threshold df + 8·sqrt(2·df), false-alarm probability < 1e-6 across
+//! the whole suite) plus a total-variation bound (secondary, catches
+//! mass sitting in pooled low-expectation bins).
+//!
+//! Statistical power is demonstrated by a NEGATIVE control: the same
+//! harness run against a deliberately biased verifier (accept-first,
+//! which makes the output follow the DRAFT distribution) must fail —
+//! `#[should_panic]` on the exact assertion message.
+
+use rsd::config::{DecoderConfig, SamplingConfig};
+use rsd::decode::generate;
+use rsd::decode::rrs::{LevelOutcome, VerifyRule};
+use rsd::decode::spec::run_spec;
+use rsd::decode::strategies::Chain;
+use rsd::sampling::{process_logits, LogProbs, VerifyScratch};
+use rsd::sim::SimLm;
+use rsd::util::Rng;
+
+/// Small vocabulary keeps per-bin expected counts high (chi-square
+/// power) while the analytic sim still produces a rugged distribution.
+const VOCAB: usize = 24;
+/// Draws per decoder mode (~50k, per the suite's design target).
+const DRAWS: usize = 50_000;
+/// Sim seed 9 at alpha 0.5 puts the draft FAR from the target at this
+/// context (TV(p, q) ≈ 0.90), so a biased verifier is unmissable while
+/// the lossless ones still face a genuinely adversarial draft.
+const SIM_SEED: u64 = 9;
+const ALPHA: f64 = 0.5;
+const PROMPT: [u32; 3] = [3, 1, 4];
+const TEMPERATURE: f32 = 0.7;
+
+fn sim_pair() -> (SimLm, SimLm) {
+    SimLm::pair(SIM_SEED, ALPHA, VOCAB)
+}
+
+/// The target model's processed next-token law at the prompt context —
+/// what every lossless decoder's first token must follow.
+fn target_law(target: &SimLm) -> Vec<f64> {
+    process_logits(&target.logits(&PROMPT), TEMPERATURE, 1.0).probs()
+}
+
+/// Pooled Pearson chi-square + total-variation conformance gate.
+/// Bins with expected count < 5 are pooled into one cell (the standard
+/// validity condition for the chi-square approximation).
+fn assert_conforms(label: &str, hist: &[u64], law: &[f64]) {
+    assert_eq!(hist.len(), law.len());
+    let n: u64 = hist.iter().sum();
+    let nf = n as f64;
+    assert!(n > 0, "{label}: empty histogram");
+    let mut chi2 = 0.0;
+    let mut tv = 0.0;
+    let mut cells = 0usize;
+    let (mut pooled_obs, mut pooled_exp) = (0.0f64, 0.0f64);
+    for (&h, &q) in hist.iter().zip(law) {
+        let (obs, exp) = (h as f64, nf * q);
+        tv += (obs / nf - q).abs();
+        if exp >= 5.0 {
+            chi2 += (obs - exp) * (obs - exp) / exp;
+            cells += 1;
+        } else {
+            pooled_obs += obs;
+            pooled_exp += exp;
+        }
+    }
+    tv *= 0.5;
+    if pooled_exp > 0.0 {
+        chi2 += (pooled_obs - pooled_exp) * (pooled_obs - pooled_exp) / pooled_exp;
+        cells += 1;
+    }
+    let df = (cells.max(2) - 1) as f64;
+    // mean df, sd sqrt(2 df): 8 sigma keeps the suite-wide false-alarm
+    // probability far below 1e-6 while a biased verifier lands 3-5
+    // orders of magnitude above
+    let chi2_bound = df + 8.0 * (2.0 * df).sqrt();
+    let tv_bound = 4.0 * ((VOCAB as f64) / nf).sqrt();
+    assert!(
+        chi2 <= chi2_bound && tv <= tv_bound,
+        "conformance violated for {label}: chi2 {chi2:.1} (bound {chi2_bound:.1}), \
+         TV {tv:.4} (bound {tv_bound:.4}), n {n}"
+    );
+}
+
+/// Empirical first-token histogram of `decoder` over [`DRAWS`] pinned
+/// seeds (seed = draw index: fully reproducible, independent draws).
+fn first_token_hist(decoder: &DecoderConfig) -> Vec<u64> {
+    let (target, draft) = sim_pair();
+    let sampling = SamplingConfig::new(TEMPERATURE, 1.0);
+    let mut hist = vec![0u64; VOCAB];
+    for seed in 0..DRAWS as u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let run = generate(decoder, &sampling, &target, &draft, &PROMPT, 1, &mut rng)
+            .expect("decode failed");
+        hist[run.tokens[0] as usize] += 1;
+    }
+    hist
+}
+
+fn check_mode(label: &str, decoder: DecoderConfig) {
+    let (target, _) = sim_pair();
+    assert_conforms(label, &first_token_hist(&decoder), &target_law(&target));
+}
+
+#[test]
+fn sd_is_distribution_lossless() {
+    check_mode("sd:3", DecoderConfig::Sd { l: 3 });
+}
+
+#[test]
+fn rsd_c_is_distribution_lossless() {
+    check_mode("rsd-c:2-2", DecoderConfig::RsdC { branches: vec![2, 2] });
+}
+
+#[test]
+fn rsd_s_is_distribution_lossless() {
+    check_mode("rsd-s:3x2", DecoderConfig::RsdS { w: 3, l: 2 });
+}
+
+#[test]
+fn spectr_is_distribution_lossless() {
+    check_mode("spectr:2x2", DecoderConfig::SpecTr { k: 2, l: 2 });
+}
+
+/// A deliberately broken verification rule: it accepts the first sibling
+/// unconditionally, so emitted tokens follow the DRAFT distribution
+/// instead of the target's.
+struct AcceptFirst;
+
+impl VerifyRule for AcceptFirst {
+    fn verify_with(
+        &self,
+        _siblings: &[u32],
+        _draft: &LogProbs,
+        _target: &LogProbs,
+        _scratch: &mut VerifyScratch,
+        _rng: &mut Rng,
+    ) -> LevelOutcome {
+        LevelOutcome::Accept { pos: 0 }
+    }
+}
+
+/// NEGATIVE control (statistical power): the gate must FAIL against a
+/// biased verifier. At this context TV(draft, target) ≈ 0.90, so the
+/// chi-square lands orders of magnitude above the bound even at a fifth
+/// of the positive tests' sample size.
+#[test]
+#[should_panic(expected = "conformance violated")]
+fn biased_verifier_is_detected() {
+    let (target, draft) = sim_pair();
+    let sampling = SamplingConfig::new(TEMPERATURE, 1.0);
+    let law = target_law(&target);
+    let mut hist = vec![0u64; VOCAB];
+    for seed in 0..(DRAWS / 5) as u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let run = run_spec(
+            &target,
+            &draft,
+            Box::new(Chain { depth: 2 }),
+            Box::new(AcceptFirst),
+            &sampling,
+            &PROMPT,
+            1,
+            &mut rng,
+        )
+        .expect("decode failed");
+        hist[run.tokens[0] as usize] += 1;
+    }
+    assert_conforms("accept-first (biased)", &hist, &law);
+}

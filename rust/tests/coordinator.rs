@@ -22,7 +22,16 @@ fn engine_cfg(max_concurrency: usize, max_queue: usize) -> EngineConfig {
 }
 
 fn request(id: u64, max_new: usize, resp: mpsc::Sender<Event>) -> Request {
-    Request { id, prompt: vec![1, 2, 3], max_new, decoder: None, sampling: None, resp }
+    Request {
+        id,
+        prompt: vec![1, 2, 3],
+        max_new,
+        decoder: None,
+        sampling: None,
+        priority: 0,
+        deadline_ms: None,
+        resp,
+    }
 }
 
 #[test]
@@ -118,6 +127,8 @@ fn per_request_decoder_override_applies() {
         max_new: 12,
         decoder: Some(DecoderConfig::Ar),
         sampling: None,
+        priority: 0,
+        deadline_ms: None,
         resp: rtx,
     })
     .unwrap();
@@ -129,6 +140,8 @@ fn per_request_decoder_override_applies() {
         max_new: 12,
         decoder: Some(DecoderConfig::RsdC { branches: vec![2, 2] }),
         sampling: None,
+        priority: 0,
+        deadline_ms: None,
         resp: rtx2,
     })
     .unwrap();
@@ -216,6 +229,62 @@ fn concurrent_requests_interleave() {
     assert!(a_first_tokens && b_first_tokens);
     assert!(a_tokens_before_b_done && b_tokens_before_a_done, "no interleaving observed");
     handle.join().unwrap();
+}
+
+/// Priority scheduling end to end: with one slot and the queue holding
+/// a default-priority and a high-priority request, the high-priority
+/// one must run first. Whichever of the first-arrived requests grabs
+/// the slot, the default-priority queued request always finishes LAST.
+#[test]
+fn high_priority_requests_jump_the_queue() {
+    // dispatch cost makes each request take several ms, so completion
+    // timestamps (taken by dedicated receiver threads at event arrival)
+    // order reliably despite thread-wakeup jitter
+    let (target, draft) = SimLm::pair(5, 0.8, 64);
+    let target = target.with_call_overhead(200_000);
+    let draft = draft.with_call_overhead(200_000);
+    let engine = Engine::new(target, draft, engine_cfg(1, 16));
+    let (tx, handle) = spawn(engine);
+
+    let done_order = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let mut joins = Vec::new();
+    for (id, priority) in [(1u64, 0u8), (2, 0), (3, 200)] {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id,
+            prompt: vec![1, 2, 3],
+            max_new: 16,
+            decoder: None,
+            sampling: None,
+            priority,
+            deadline_ms: None,
+            resp: rtx,
+        })
+        .unwrap();
+        let done_order = done_order.clone();
+        joins.push(std::thread::spawn(move || {
+            while let Ok(ev) = rrx.recv() {
+                match ev {
+                    Event::Done(_) => {
+                        done_order.lock().unwrap().push(id);
+                        break;
+                    }
+                    Event::Error(e) => panic!("request {id}: {e}"),
+                    Event::Tokens(_) => {}
+                }
+            }
+        }));
+    }
+    drop(tx);
+    for j in joins {
+        j.join().unwrap();
+    }
+    handle.join().unwrap();
+    let order = done_order.lock().unwrap().clone();
+    assert_eq!(order.len(), 3);
+    // whichever first arrival grabbed the single slot, the queued
+    // default-priority request is always outranked by priority 200
+    assert_eq!(*order.last().unwrap(), 2, "default-priority request must finish last: {order:?}");
 }
 
 /// Metrics snapshot is consistent after a burst.

@@ -59,8 +59,17 @@ fn run_requests(alpha: f64, cfg: EngineConfig, reqs: Vec<Req>) -> (Vec<Vec<u32>>
     let mut receivers = Vec::new();
     for (id, prompt, max_new, decoder) in reqs {
         let (rtx, rrx) = mpsc::channel();
-        tx.send(Request { id, prompt, max_new, decoder, sampling: None, resp: rtx })
-            .unwrap();
+        tx.send(Request {
+            id,
+            prompt,
+            max_new,
+            decoder,
+            sampling: None,
+            priority: 0,
+            deadline_ms: None,
+            resp: rtx,
+        })
+        .unwrap();
         receivers.push(rrx);
     }
     drop(tx);
@@ -192,6 +201,8 @@ fn engine_honors_per_request_stop() {
         max_new: 24,
         decoder: None,
         sampling: None,
+        priority: 0,
+        deadline_ms: None,
         resp: rtx,
     })
     .unwrap();
@@ -215,6 +226,8 @@ fn engine_honors_per_request_stop() {
         max_new: 24,
         decoder: None,
         sampling: Some(SamplingPatch { stop: Some(vec![stop]), ..Default::default() }),
+        priority: 0,
+        deadline_ms: None,
         resp: rtx,
     })
     .unwrap();

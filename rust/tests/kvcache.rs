@@ -59,6 +59,8 @@ fn run_engine(
             max_new,
             decoder: decoder_for(i),
             sampling: None,
+            priority: 0,
+            deadline_ms: None,
             resp: rtx,
         })
         .unwrap();
@@ -281,6 +283,8 @@ fn oversized_prompt_gets_clean_error() {
         max_new: 8,
         decoder: None,
         sampling: None,
+        priority: 0,
+        deadline_ms: None,
         resp: rtx,
     })
     .unwrap();
@@ -292,6 +296,8 @@ fn oversized_prompt_gets_clean_error() {
         max_new: 8,
         decoder: None,
         sampling: None,
+        priority: 0,
+        deadline_ms: None,
         resp: rtx2,
     })
     .unwrap();
