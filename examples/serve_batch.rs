@@ -131,8 +131,8 @@ fn run_one(
         loop {
             match rrx.recv() {
                 Ok(Event::Tokens(t)) => total_tokens += t.len(),
-                Ok(Event::Done(stats)) => {
-                    effs.push(stats.block_efficiency());
+                Ok(Event::Done(report)) => {
+                    effs.push(report.stats.block_efficiency());
                     break;
                 }
                 Ok(Event::Error(e)) => {

@@ -76,6 +76,13 @@ fn steady_state_allocs(
     let mut rng = Rng::seed_from_u64(7);
     let mut st =
         SpecStepper::new(&target, &draft, strategy, rule, sampling, &[1, 2, 3], 1 << 16)?;
+    // the gate runs with the flight recorder ENABLED: recording into the
+    // preallocated ring (commit boundaries + KV pool traffic) must not
+    // add a single allocation to the steady-state round
+    let tracer = rsd::trace::Tracer::new(4096);
+    st.set_trace(&tracer, 1);
+    target.set_trace(&tracer);
+    draft.set_trace(&tracer);
     let mut warm = 0;
     loop {
         let (a0, _) = alloc::counts();

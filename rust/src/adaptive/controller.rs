@@ -207,6 +207,12 @@ impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
         self.inner.suspend(target, draft)
     }
 
+    /// Attach a flight-recorder handle (delegates to the wrapped
+    /// [`SpecStepper`]).
+    pub fn set_trace(&mut self, tracer: &crate::trace::Tracer, id: u64) {
+        self.inner.set_trace(tracer, id);
+    }
+
     /// Re-admit after a suspend (see [`SpecStepper::resume`]).
     pub fn resume(&mut self, target: &T, draft: &D) -> Result<()> {
         self.inner.resume(target, draft)

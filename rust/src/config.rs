@@ -449,6 +449,18 @@ pub struct EngineConfig {
     pub kv_blocks: usize,
     /// Tokens per KV block (only meaningful with `kv_blocks > 0`).
     pub kv_block_size: usize,
+    /// Flight-recorder journal capacity in events (0 = tracing off).
+    /// The ring is preallocated once at engine construction and the
+    /// newest events overwrite the oldest; steady-state recording
+    /// allocates nothing (see [`crate::trace`]).
+    pub trace_events: usize,
+    /// Stall-watchdog interval in milliseconds (0 = off; needs
+    /// `trace_events > 0`): if no engine phase boundary advances for
+    /// this long while work is in flight, the journal and engine status
+    /// are dumped to `watchdog_path`.
+    pub watchdog_ms: u64,
+    /// Where the watchdog writes its post-mortem JSON dump.
+    pub watchdog_path: String,
 }
 
 impl Default for EngineConfig {
@@ -465,6 +477,9 @@ impl Default for EngineConfig {
             drain_batching: false,
             kv_blocks: 0,
             kv_block_size: 16,
+            trace_events: 0,
+            watchdog_ms: 0,
+            watchdog_path: "rsd-watchdog.json".into(),
         }
     }
 }
@@ -519,6 +534,15 @@ impl EngineConfig {
                 );
             }
             cfg.kv_block_size = v;
+        }
+        if let Some(v) = j.get("trace_events").and_then(Json::as_usize) {
+            cfg.trace_events = v;
+        }
+        if let Some(v) = j.get("watchdog_ms").and_then(Json::as_usize) {
+            cfg.watchdog_ms = v as u64;
+        }
+        if let Some(s) = j.get("watchdog_path").and_then(Json::as_str) {
+            cfg.watchdog_path = s.to_string();
         }
         if let Some(arr) = j.get("stop").and_then(Json::as_arr) {
             cfg.sampling.stop = parse_stop_tokens(arr)?;

@@ -40,6 +40,8 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::trace::{EventKind, Tracer};
+
 /// Engine rounds of queue aging worth one point of effective priority.
 pub const AGING_ROUNDS: u64 = 8;
 
@@ -99,6 +101,9 @@ pub struct Batcher<T> {
     active: usize,
     active_weight: usize,
     next_seq: u64,
+    /// Flight recorder: queue-depth samples at every membership change
+    /// (off by default).
+    tracer: Tracer,
 }
 
 impl<T> Batcher<T> {
@@ -113,6 +118,7 @@ impl<T> Batcher<T> {
             active: 0,
             active_weight: 0,
             next_seq: 0,
+            tracer: Tracer::off(),
         }
     }
 
@@ -120,6 +126,17 @@ impl<T> Batcher<T> {
     pub fn with_max_active_weight(mut self, cap: usize) -> Self {
         self.max_active_weight = if cap == 0 { usize::MAX } else { cap };
         self
+    }
+
+    /// Attach a flight-recorder handle: every queue-membership change
+    /// (offer, requeue, admit) journals a queue-depth sample.
+    pub fn set_trace(&mut self, tracer: &Tracer) {
+        self.tracer = tracer.clone();
+    }
+
+    fn sample_depth(&self) {
+        self.tracer
+            .record(EventKind::QueueDepth, 0, self.queued() as u32, self.active as u32);
     }
 
     /// Offer a new request at default priority with no deadline; reject
@@ -151,6 +168,7 @@ impl<T> Batcher<T> {
             ticks: 0,
             queued_at: Instant::now(),
         });
+        self.sample_depth();
         Ok(())
     }
 
@@ -169,6 +187,7 @@ impl<T> Batcher<T> {
             .position(|e| e.0 > rank)
             .unwrap_or(self.front.len());
         self.front.insert(pos, (rank, item, Instant::now()));
+        self.sample_depth();
     }
 
     /// One engine round passed: age every waiting request. Aging feeds
@@ -236,6 +255,7 @@ impl<T> Batcher<T> {
         };
         self.active += 1;
         self.active_weight = self.active_weight.saturating_add(w);
+        self.sample_depth();
         Some(Admitted { item, weight: w, queued_at })
     }
 

@@ -61,7 +61,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -72,6 +72,8 @@ use crate::decode::ar::ArStepper;
 use crate::decode::spec::{RoundReport, RoundStart, SpecStepper, StepOutcome};
 use crate::decode::{build_parts, DecodeStats};
 use crate::llm::{EvalNode, Llm, LogitsBatch};
+use crate::trace::watchdog::EngineStatus;
+use crate::trace::{EventKind, Tracer, PHASE_DRAFT, PHASE_HOST, PHASE_SCHED, PHASE_VERIFY};
 use crate::util::Rng;
 
 use super::batcher::{Admitted, Batcher};
@@ -101,14 +103,33 @@ pub struct Request {
     pub resp: mpsc::Sender<Event>,
 }
 
+/// Final per-request accounting, delivered with [`Event::Done`]: the
+/// stepper's decode-level statistics plus the request's scheduling
+/// timeline. All times are seconds measured from *arrival* (queue
+/// entry), so `queue_wait <= ttft <= latency`.
+#[derive(Debug, Clone, Default)]
+pub struct RequestReport {
+    /// The request this report belongs to ([`Request::id`]).
+    pub id: u64,
+    /// Decode-level statistics (rounds, acceptance, KV telemetry, ...).
+    pub stats: DecodeStats,
+    /// Queue wait before first admission.
+    pub queue_wait: f64,
+    /// Time to first streamed token (None when the request finished
+    /// without emitting anything, e.g. an immediate stop token).
+    pub ttft: Option<f64>,
+    /// Total time to completion.
+    pub latency: f64,
+}
+
 /// Streamed response events.
 #[derive(Debug, Clone)]
 pub enum Event {
     /// Newly committed tokens, sent at the request's commit boundary
     /// (once per speculative round that emitted anything).
     Tokens(Vec<u32>),
-    /// Request finished; final stats.
-    Done(DecodeStats),
+    /// Request finished; final stats + timeline.
+    Done(RequestReport),
     /// Request failed or was shed.
     Error(String),
 }
@@ -183,6 +204,16 @@ impl<T: Llm, D: Llm> AnyStepper<T, D> {
             AnyStepper::Adaptive(s) => s.resume(target, draft),
         }
     }
+
+    /// Attach the flight recorder: the stepper journals its commit
+    /// boundaries under this request's id.
+    fn set_trace(&mut self, tracer: &Tracer, id: u64) {
+        match self {
+            AnyStepper::Ar(s) => s.set_trace(tracer, id),
+            AnyStepper::Spec(s) => s.set_trace(tracer, id),
+            AnyStepper::Adaptive(s) => s.set_trace(tracer, id),
+        }
+    }
 }
 
 /// Where one active request stands within the current fused round.
@@ -216,6 +247,10 @@ struct Active<T: Llm, D: Llm> {
     /// Arrival time (queue entry): latency and TTFT are measured from
     /// here, so they include queue wait.
     started: Instant,
+    /// Seconds waited before FIRST admission (the [`RequestReport`]
+    /// timeline figure; re-admission waits after preemption are
+    /// recorded in metrics but do not overwrite it).
+    queue_wait: f64,
     first_token_at: Option<f64>,
     state: RoundState,
 }
@@ -248,6 +283,7 @@ struct Parked<T: Llm, D: Llm> {
     /// Original admission rank (a resumed request is still its old age).
     seq: u64,
     started: Instant,
+    queue_wait: f64,
     first_token_at: Option<f64>,
 }
 
@@ -265,6 +301,8 @@ struct EngineState<T: Llm, D: Llm> {
     next_seq: u64,
     /// The engine-wide flat logits buffer every fused phase writes into.
     logits: LogitsBatch,
+    /// Fused rounds completed (trace round ids, watchdog status).
+    rounds: u64,
     /// The request channel disconnected; drain and exit.
     closed: bool,
 }
@@ -328,17 +366,68 @@ pub struct Engine<T: Llm, D: Llm> {
     /// Engine-global decayed acceptance statistics: the prior every new
     /// adaptive request starts from, updated by all of them.
     pub acceptance: Arc<GlobalEstimator>,
+    /// Flight-recorder handle. Off unless `EngineConfig::trace_events`
+    /// is non-zero (or an enabled tracer was passed to
+    /// [`Engine::with_telemetry`]). Clone it before [`spawn`] consumes
+    /// the engine to dump the journal from outside.
+    pub trace: Tracer,
+    /// Coarse engine state shared with the stall watchdog, refreshed at
+    /// round boundaries (only while tracing is enabled).
+    status: Arc<Mutex<EngineStatus>>,
 }
 
 impl<T: Llm, D: Llm> Engine<T, D> {
     pub fn new(target: T, draft: D, cfg: EngineConfig) -> Self {
+        let trace = Tracer::new(cfg.trace_events);
+        Self::with_telemetry(target, draft, cfg, Arc::new(Metrics::default()), trace)
+    }
+
+    /// Build an engine around externally owned telemetry: the metrics
+    /// registry a server exports and a tracer whose journal outlives
+    /// the engine (wire `trace` command, watchdog dumps). Both model
+    /// substrates get the tracer attached, so pool-backed KV traffic
+    /// (acquire / publish / evict) lands in the same journal.
+    pub fn with_telemetry(
+        target: T,
+        draft: D,
+        cfg: EngineConfig,
+        metrics: Arc<Metrics>,
+        trace: Tracer,
+    ) -> Self {
+        target.set_trace(&trace);
+        draft.set_trace(&trace);
         Self {
             target,
             draft,
             cfg,
-            metrics: Arc::new(Metrics::default()),
+            metrics,
             acceptance: Arc::new(GlobalEstimator::default()),
+            trace,
+            status: Arc::new(Mutex::new(EngineStatus::default())),
         }
+    }
+
+    /// Shared handle to the engine's coarse status, for
+    /// [`crate::trace::watchdog::Watchdog::spawn`]. Clone before
+    /// [`spawn`] consumes the engine.
+    pub fn status_handle(&self) -> Arc<Mutex<EngineStatus>> {
+        self.status.clone()
+    }
+
+    /// Refresh the watchdog's view of the engine (cheap; round-boundary
+    /// cadence; skipped entirely when tracing is off).
+    fn update_status(&self, st: &EngineState<T, D>) {
+        if !self.trace.enabled() {
+            return;
+        }
+        let mut g = self.status.lock().unwrap();
+        g.rounds = st.rounds;
+        g.active.clear();
+        g.active
+            .extend(st.active.iter().map(|a| (a.req.id, a.stepper.committed() as u64)));
+        g.queued = st.batcher.queued();
+        g.parked = st.parked.len();
+        g.pool = self.target.pool_status();
     }
 
     /// The per-round node budget a request occupies while active (its
@@ -394,11 +483,18 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     /// request always fits by this bound. Accepted requests enter the
     /// queue under their declared priority/deadline.
     fn offer_request(&self, st: &mut EngineState<T, D>, req: Request) {
+        self.trace.record(
+            EventKind::ReqArrive,
+            req.id,
+            req.prompt.len() as u32,
+            st.batcher.queued() as u32,
+        );
         // the id keys RNG streams and (crucially) parked preemption
         // state: a duplicate in-flight id could hand one client another
         // request's spilled stepper, so refuse it up front
         if st.in_flight.contains(&req.id) {
             self.metrics.add(&self.metrics.rejected, 1);
+            self.trace.record(EventKind::ReqError, req.id, 0, 0);
             let _ = req.resp.send(Event::Error(format!(
                 "duplicate request id {} (still in flight)",
                 req.id
@@ -428,6 +524,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             || fits(self.draft.pool_status(), self.draft.session_capacity());
         if !(target_ok && draft_ok) {
             self.metrics.add(&self.metrics.rejected, 1);
+            self.trace.record(EventKind::ReqError, req.id, 0, 0);
             let _ = req.resp.send(Event::Error(format!(
                 "prompt too long or max_tokens too large: {} prompt tokens + {} \
                  max_tokens + {} decode transients exceed session capacity",
@@ -441,6 +538,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         let (priority, deadline_ms) = (req.priority, req.deadline_ms);
         if let Err((req, _)) = st.batcher.offer_with(req, priority, deadline_ms) {
             self.metrics.add(&self.metrics.rejected, 1);
+            self.trace.record(EventKind::ReqError, req.id, 0, 0);
             let _ = req.resp.send(Event::Error("queue full".into()));
         } else {
             st.in_flight.insert(id);
@@ -542,13 +640,17 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             }
             let Some(adm) = st.batcher.admit_by(|r| self.request_weight(r)) else { break };
             let Admitted { item: req, weight, queued_at } = adm;
-            self.metrics.record_queue_wait(queued_at.elapsed().as_secs_f64());
+            let wait = queued_at.elapsed().as_secs_f64();
+            self.metrics.record_queue_wait(wait);
             if let Some(mut p) = st.parked.remove(&req.id) {
                 // resume a preempted request: re-acquire whatever
                 // prefix is still cached, re-prefill the rest
+                let hit_before = p.stepper.stats().kv_hit_tokens;
                 match p.stepper.resume(&self.target, &self.draft) {
                     Ok(()) => {
                         self.metrics.add(&self.metrics.resumes, 1);
+                        let hit = p.stepper.stats().kv_hit_tokens - hit_before;
+                        self.trace.record(EventKind::ReqResume, req.id, hit as u32, 0);
                         st.active.push(Active {
                             req,
                             stepper: p.stepper,
@@ -557,12 +659,14 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                             weight,
                             seq: p.seq,
                             started: p.started,
+                            queue_wait: p.queue_wait,
                             first_token_at: p.first_token_at,
                             state: RoundState::Idle,
                         });
                     }
                     Err(e) => {
                         self.metrics.add(&self.metrics.failed, 1);
+                        self.trace.record(EventKind::ReqError, req.id, 0, 0);
                         let _ = req.resp.send(Event::Error(e.to_string()));
                         st.batcher.release_weight(weight);
                         st.in_flight.remove(&req.id);
@@ -571,6 +675,12 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 }
             } else {
                 self.metrics.add(&self.metrics.admitted, 1);
+                self.trace.record(
+                    EventKind::ReqAdmit,
+                    req.id,
+                    u32::from(mid_round),
+                    weight as u32,
+                );
                 // publish the prompt as a shareable prefix (the substrate
                 // decides if/when the blocks become servable) BEFORE the
                 // session opens, so concurrent same-prompt admissions hit;
@@ -582,7 +692,8 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     self.draft.cache_prefix(&req.prompt);
                 }
                 match self.make_stepper(&req) {
-                    Ok(stepper) => {
+                    Ok(mut stepper) => {
+                        stepper.set_trace(&self.trace, req.id);
                         let rng = Rng::seed_from_u64(self.cfg.seed ^ req.id);
                         let seq = st.next_seq;
                         st.next_seq += 1;
@@ -594,12 +705,14 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                             weight,
                             seq,
                             started: queued_at,
+                            queue_wait: wait,
                             first_token_at: None,
                             state: RoundState::Idle,
                         });
                     }
                     Err(e) => {
                         self.metrics.add(&self.metrics.failed, 1);
+                        self.trace.record(EventKind::ReqError, req.id, 0, 0);
                         let _ = req.resp.send(Event::Error(e.to_string()));
                         st.batcher.release_weight(weight);
                         st.in_flight.remove(&req.id);
@@ -655,6 +768,12 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             match a.stepper.suspend(&self.target, &self.draft) {
                 Ok(()) => {
                     self.metrics.add(&self.metrics.preemptions, 1);
+                    self.trace.record(
+                        EventKind::ReqPreempt,
+                        a.req.id,
+                        a.stepper.committed() as u32,
+                        0,
+                    );
                     st.batcher.release_weight(a.weight);
                     let prev = st.parked.insert(
                         a.req.id,
@@ -664,6 +783,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                             sent: a.sent,
                             seq: a.seq,
                             started: a.started,
+                            queue_wait: a.queue_wait,
                             first_token_at: a.first_token_at,
                         },
                     );
@@ -674,6 +794,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 }
                 Err(e) => {
                     self.metrics.add(&self.metrics.failed, 1);
+                    self.trace.record(EventKind::ReqError, a.req.id, 0, 0);
                     let _ = a.req.resp.send(Event::Error(e.to_string()));
                     st.batcher.release_weight(a.weight);
                     st.in_flight.remove(&a.req.id);
@@ -700,7 +821,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         }
     }
 
-    /// Deliver a completed request's final stats and release its
+    /// Deliver a completed request's final report and release its
     /// resources. Dropping `a` here drops the stepper AND its sessions,
     /// which returns every KV block to the pool immediately — waiting
     /// requests see the headroom at the very next admission point.
@@ -719,8 +840,22 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         }
         self.metrics.add(&self.metrics.completed, 1);
         self.metrics.add(&self.metrics.draft_calls, stats.draft_calls as u64);
-        self.metrics.record_latency(a.started.elapsed().as_secs_f64());
-        let _ = a.req.resp.send(Event::Done(stats));
+        let latency = a.started.elapsed().as_secs_f64();
+        self.metrics.record_latency(latency);
+        self.trace.record(
+            EventKind::ReqDone,
+            a.req.id,
+            stats.generated as u32,
+            stats.preemptions as u32,
+        );
+        let report = RequestReport {
+            id: a.req.id,
+            stats,
+            queue_wait: a.queue_wait,
+            ttft: a.first_token_at,
+            latency,
+        };
+        let _ = a.req.resp.send(Event::Done(report));
         st.batcher.release_weight(a.weight);
         st.in_flight.remove(&a.req.id);
     }
@@ -747,6 +882,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 }
                 RoundState::Failed(e) => {
                     self.metrics.add(&self.metrics.failed, 1);
+                    self.trace.record(EventKind::ReqError, a.req.id, 0, 0);
                     let _ = a.req.resp.send(Event::Error(e));
                     st.batcher.release_weight(a.weight);
                     st.in_flight.remove(&a.req.id);
@@ -760,20 +896,24 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     /// Blocking serve loop. Returns when the request channel closes and
     /// all in-flight work drained.
     pub fn run(self, rx: mpsc::Receiver<Request>) -> Arc<Metrics> {
+        let mut batcher = Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue)
+            .with_max_active_weight(self.cfg.max_active_budget);
+        batcher.set_trace(&self.trace);
         let mut st = EngineState {
-            batcher: Batcher::new(self.cfg.max_concurrency, self.cfg.max_queue)
-                .with_max_active_weight(self.cfg.max_active_budget),
+            batcher,
             active: Vec::new(),
             parked: HashMap::new(),
             in_flight: HashSet::new(),
             next_seq: 0,
             logits: LogitsBatch::default(),
+            rounds: 0,
             closed: false,
         };
 
         loop {
             // ---- intake + idle blocking ----------------------------------
             self.intake(&rx, &mut st);
+            self.update_status(&st);
             if st.active.is_empty() && st.batcher.queued() == 0 {
                 if st.closed {
                     break;
@@ -798,12 +938,14 @@ impl<T: Llm, D: Llm> Engine<T, D> {
 
             // ---- one fused round; membership churns at phase boundaries --
             self.run_round(&rx, &mut st);
+            self.update_status(&st);
 
             // ---- export pool gauges (cheap; stores, not sums) ------------
             if let Some(ps) = self.target.pool_status() {
                 self.metrics.set_kv_pool(&ps);
             }
         }
+        self.update_status(&st);
         if let Some(ps) = self.target.pool_status() {
             self.metrics.set_kv_pool(&ps);
         }
@@ -816,18 +958,43 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     /// engine reaps terminal requests and admits waiting ones, so batch
     /// membership changes while the round is in flight.
     fn run_round(&self, rx: &mpsc::Receiver<Request>, st: &mut EngineState<T, D>) {
+        let round = st.rounds;
+        let round_start = Instant::now();
+        self.trace.record(
+            EventKind::RoundBegin,
+            round,
+            st.active.len() as u32,
+            st.batcher.queued() as u32,
+        );
+        // Wall-clock breakdown accumulators. "sched" is everything that
+        // is neither a model call nor host-side verification: round
+        // bookkeeping, reaping, mid-round intake + admission. Draft and
+        // verify cover the fused model calls; "host" (exported as the
+        // sampling phase) covers the per-request verification / commit /
+        // emission work on the target rows.
+        let mut sched = 0.0f64;
+
         // ---- phase 1: begin rounds (bookkeeping, no model calls) ---------
+        let t0 = Instant::now();
+        self.trace
+            .record(EventKind::PhaseBegin, round, PHASE_SCHED, st.active.len() as u32);
         for a in st.active.iter_mut() {
             debug_assert!(matches!(a.state, RoundState::Idle));
             a.begin(&self.target, &self.draft);
         }
         self.reap(st);
+        self.trace
+            .record(EventKind::PhaseEnd, round, PHASE_SCHED, st.active.len() as u32);
+        self.trace.phase_advanced();
+        sched += t0.elapsed().as_secs_f64();
 
         // ---- phase 2: fused draft levels ---------------------------------
         // Requests at different tree depths drop out of later iterations;
         // each iteration is ONE fused draft forward across the rest. New
         // arrivals join at the top of every iteration.
+        let mut level: u32 = 0;
         loop {
+            let ts = Instant::now();
             if !self.cfg.drain_batching {
                 self.intake(rx, st);
                 self.admit_ready(st, true);
@@ -854,9 +1021,15 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     who.push(i);
                 }
             }
+            sched += ts.elapsed().as_secs_f64();
             if groups.is_empty() {
                 break;
             }
+            // one draft tree level across every participating request;
+            // the level rides in the phase code's high bits
+            let code = PHASE_DRAFT | (level << 8);
+            self.trace.record(EventKind::PhaseBegin, round, code, who.len() as u32);
+            let td = Instant::now();
             let results = eval_phase(&self.draft, self.cfg.fused, &mut groups, logits);
             drop(groups);
             self.metrics.record_fused(who.len(), in_round);
@@ -877,10 +1050,17 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     Err(e) => a.state = RoundState::Failed(e),
                 }
             }
+            self.metrics.record_phase(code, td.elapsed().as_secs_f64());
+            self.trace.record(EventKind::PhaseEnd, round, code, who.len() as u32);
+            self.trace.phase_advanced();
+            let tr = Instant::now();
             self.reap(st);
+            sched += tr.elapsed().as_secs_f64();
+            level += 1;
         }
 
         // ---- phase 3: one fused target pass (verification) ---------------
+        let ts = Instant::now();
         let in_round = st
             .active
             .iter()
@@ -906,10 +1086,20 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 None => a.state = RoundState::Failed("round staged no target work".into()),
             }
         }
+        sched += ts.elapsed().as_secs_f64();
         if !groups.is_empty() {
+            self.trace
+                .record(EventKind::PhaseBegin, round, PHASE_VERIFY, who.len() as u32);
+            let tv = Instant::now();
             let results = eval_phase(&self.target, self.cfg.fused, &mut groups, logits);
             drop(groups);
+            self.metrics.record_phase(PHASE_VERIFY, tv.elapsed().as_secs_f64());
+            self.trace
+                .record(EventKind::PhaseEnd, round, PHASE_VERIFY, who.len() as u32);
             self.metrics.record_fused(who.len(), in_round);
+            // host-side verification + commit + emission ("sampling")
+            self.trace.record(EventKind::PhaseBegin, round, PHASE_HOST, who.len() as u32);
+            let th = Instant::now();
             for (res, &i) in results.into_iter().zip(who.iter()) {
                 let a = &mut active[i];
                 let rows_i = match res {
@@ -943,10 +1133,18 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     }
                 }
             }
+            self.metrics.record_phase(PHASE_HOST, th.elapsed().as_secs_f64());
+            self.trace.record(EventKind::PhaseEnd, round, PHASE_HOST, who.len() as u32);
+            self.trace.phase_advanced();
         }
         // graceful tail: stop-token / max_tokens completions free their
         // KV blocks and slots here, before the next admission point
+        let tr = Instant::now();
         self.reap(st);
+        sched += tr.elapsed().as_secs_f64();
+        self.metrics.record_phase(PHASE_SCHED, sched);
+        self.metrics.record_round_time(round_start.elapsed().as_secs_f64());
+        st.rounds += 1;
     }
 }
 

@@ -3,15 +3,25 @@
 //! tree-node-budget histogram), the fused-execution telemetry — how
 //! many requests each fused [`crate::llm::Llm::eval_batch`] call
 //! carried and how full those batches were relative to the round's
-//! in-flight request count — and the paged KV-cache telemetry: prefix
+//! in-flight request count — the paged KV-cache telemetry: prefix
 //! hit rate (plus a per-request hit-ratio decile histogram), blocks in
-//! use, copy-on-write copies, evictions, and preemption/resume counts.
+//! use, copy-on-write copies, evictions, and preemption/resume counts —
+//! and the per-phase wall-clock breakdown of the engine round loop
+//! (scheduling / draft / verify / sampling), all as bounded
+//! log-bucketed histograms.
+//!
+//! Every distribution here is O(1) memory ([`LogHistogram`]): a
+//! long-running server's metrics never grow, and `snapshot()` never
+//! clones or sorts sample lists.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::decode::spec::RoundReport;
 use crate::kvcache::PoolStatus;
+use crate::trace::hist::{HistSummary, LogHistogram};
+use crate::trace::{PHASE_DRAFT, PHASE_HOST, PHASE_SCHED, PHASE_VERIFY};
+use crate::util::json::Json;
 
 /// Rounds using more nodes than this share the last histogram bucket.
 pub const NODE_HIST_MAX: usize = 64;
@@ -33,13 +43,23 @@ pub struct Metrics {
     pub draft_calls: AtomicU64,
     /// End-to-end request latencies (seconds), measured from arrival
     /// (queue entry), not from admission.
-    latencies: Mutex<Vec<f64>>,
+    latencies: LogHistogram,
     /// Time-to-first-token latencies (seconds), measured from arrival —
     /// the number continuous admission exists to shrink.
-    ttft: Mutex<Vec<f64>>,
+    ttft: LogHistogram,
     /// Queue waits (seconds): time between entering the waiting queue
     /// and admission (re-waits after preemption count separately).
-    queue_wait: Mutex<Vec<f64>>,
+    queue_wait: LogHistogram,
+    /// Wall-clock of one full engine round (begin -> commit).
+    round_time: LogHistogram,
+    /// Wall-clock per engine phase, keyed by the `PHASE_*` codes:
+    /// scheduling overhead (admission/preemption/bookkeeping between
+    /// rounds), fused draft levels, the fused target verify, and the
+    /// host-side sampling/verification walk.
+    phase_sched: LogHistogram,
+    phase_draft: LogHistogram,
+    phase_verify: LogHistogram,
+    phase_host: LogHistogram,
     /// Requests admitted at a mid-round phase boundary (continuous
     /// batching), i.e. while other requests were mid-round — as opposed
     /// to the pre-round admission point.
@@ -96,14 +116,26 @@ pub struct Snapshot {
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_p99: f64,
+    /// Mean end-to-end latency (exact; 0.0 before any completion).
+    pub latency_mean: f64,
     pub ttft_p50: f64,
     pub ttft_p95: f64,
+    pub ttft_p99: f64,
     /// Mean time-to-first-token (0.0 before any token streamed).
     pub ttft_mean: f64,
     /// Queue-wait (arrival -> admission) percentiles and mean.
     pub queue_wait_p50: f64,
     pub queue_wait_p95: f64,
+    pub queue_wait_p99: f64,
     pub queue_wait_mean: f64,
+    /// Engine-round wall-clock distribution (seconds).
+    pub round_time: HistSummary,
+    /// Per-phase wall-clock distributions: scheduling overhead, fused
+    /// draft levels, fused target verify, host sampling/verification.
+    pub phase_sched: HistSummary,
+    pub phase_draft: HistSummary,
+    pub phase_verify: HistSummary,
+    pub phase_host: HistSummary,
     /// Requests admitted at a mid-round phase boundary.
     pub mid_round_admitted: u64,
     /// Empirical acceptance rate per tree level (accepts / attempts);
@@ -140,25 +172,35 @@ pub struct Snapshot {
     pub kv_hit_hist: [u64; FILL_BUCKETS],
 }
 
-fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
-}
-
 impl Metrics {
     pub fn record_latency(&self, secs: f64) {
-        self.latencies.lock().unwrap().push(secs);
+        self.latencies.record(secs);
     }
 
     pub fn record_ttft(&self, secs: f64) {
-        self.ttft.lock().unwrap().push(secs);
+        self.ttft.record(secs);
     }
 
     pub fn record_queue_wait(&self, secs: f64) {
-        self.queue_wait.lock().unwrap().push(secs);
+        self.queue_wait.record(secs);
+    }
+
+    /// Fold one engine round's total wall-clock into the distribution.
+    pub fn record_round_time(&self, secs: f64) {
+        self.round_time.record(secs);
+    }
+
+    /// Fold one phase's wall-clock into the per-phase breakdown.
+    /// `code` is one of the `crate::trace::PHASE_*` constants (the same
+    /// codes the flight recorder carries); unknown codes are dropped.
+    pub fn record_phase(&self, code: u32, secs: f64) {
+        match code & 0xff {
+            PHASE_SCHED => self.phase_sched.record(secs),
+            PHASE_DRAFT => self.phase_draft.record(secs),
+            PHASE_VERIFY => self.phase_verify.record(secs),
+            PHASE_HOST => self.phase_host.record(secs),
+            _ => {}
+        }
     }
 
     /// Fold one speculative round's verification telemetry into the
@@ -238,22 +280,9 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let mut lat = self.latencies.lock().unwrap().clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mut ttft = self.ttft.lock().unwrap().clone();
-        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let ttft_mean = if ttft.is_empty() {
-            0.0
-        } else {
-            ttft.iter().sum::<f64>() / ttft.len() as f64
-        };
-        let mut qwait = self.queue_wait.lock().unwrap().clone();
-        qwait.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let queue_wait_mean = if qwait.is_empty() {
-            0.0
-        } else {
-            qwait.iter().sum::<f64>() / qwait.len() as f64
-        };
+        let lat = self.latencies.summary();
+        let ttft = self.ttft.summary();
+        let qwait = self.queue_wait.summary();
         let attempts = self.level_attempts.lock().unwrap();
         let accepts = self.level_accepts.lock().unwrap();
         let accept_rate_by_level = attempts
@@ -302,15 +331,23 @@ impl Metrics {
             tokens_out: self.tokens_out.load(Ordering::Relaxed),
             decode_rounds: self.decode_rounds.load(Ordering::Relaxed),
             draft_calls: self.draft_calls.load(Ordering::Relaxed),
-            latency_p50: percentile(&lat, 0.50),
-            latency_p95: percentile(&lat, 0.95),
-            latency_p99: percentile(&lat, 0.99),
-            ttft_p50: percentile(&ttft, 0.50),
-            ttft_p95: percentile(&ttft, 0.95),
-            ttft_mean,
-            queue_wait_p50: percentile(&qwait, 0.50),
-            queue_wait_p95: percentile(&qwait, 0.95),
-            queue_wait_mean,
+            latency_p50: lat.p50,
+            latency_p95: lat.p95,
+            latency_p99: lat.p99,
+            latency_mean: lat.mean,
+            ttft_p50: ttft.p50,
+            ttft_p95: ttft.p95,
+            ttft_p99: ttft.p99,
+            ttft_mean: ttft.mean,
+            queue_wait_p50: qwait.p50,
+            queue_wait_p95: qwait.p95,
+            queue_wait_p99: qwait.p99,
+            queue_wait_mean: qwait.mean,
+            round_time: self.round_time.summary(),
+            phase_sched: self.phase_sched.summary(),
+            phase_draft: self.phase_draft.summary(),
+            phase_verify: self.phase_verify.summary(),
+            phase_host: self.phase_host.summary(),
             mid_round_admitted: self.mid_round_admitted.load(Ordering::Relaxed),
             accept_rate_by_level,
             round_nodes_hist,
@@ -332,10 +369,85 @@ impl Metrics {
     }
 }
 
+fn hist_json(h: &HistSummary) -> Json {
+    Json::obj(vec![
+        ("count", Json::from(h.count as usize)),
+        ("mean", Json::Num(h.mean)),
+        ("p50", Json::Num(h.p50)),
+        ("p95", Json::Num(h.p95)),
+        ("p99", Json::Num(h.p99)),
+    ])
+}
+
+impl Snapshot {
+    /// The full snapshot as JSON — the payload of the `metrics` wire
+    /// command. Field names match the struct fields one-to-one.
+    pub fn to_json(&self) -> Json {
+        let sparse_hist = |h: &[(usize, u64)]| {
+            Json::Arr(
+                h.iter()
+                    .map(|&(k, c)| Json::Arr(vec![Json::from(k), Json::from(c as usize)]))
+                    .collect(),
+            )
+        };
+        let deciles = |h: &[u64; FILL_BUCKETS]| {
+            Json::Arr(h.iter().map(|&c| Json::from(c as usize)).collect())
+        };
+        Json::obj(vec![
+            ("admitted", Json::from(self.admitted as usize)),
+            ("rejected", Json::from(self.rejected as usize)),
+            ("completed", Json::from(self.completed as usize)),
+            ("failed", Json::from(self.failed as usize)),
+            ("tokens_out", Json::from(self.tokens_out as usize)),
+            ("decode_rounds", Json::from(self.decode_rounds as usize)),
+            ("draft_calls", Json::from(self.draft_calls as usize)),
+            ("latency_p50", Json::Num(self.latency_p50)),
+            ("latency_p95", Json::Num(self.latency_p95)),
+            ("latency_p99", Json::Num(self.latency_p99)),
+            ("latency_mean", Json::Num(self.latency_mean)),
+            ("ttft_p50", Json::Num(self.ttft_p50)),
+            ("ttft_p95", Json::Num(self.ttft_p95)),
+            ("ttft_p99", Json::Num(self.ttft_p99)),
+            ("ttft_mean", Json::Num(self.ttft_mean)),
+            ("queue_wait_p50", Json::Num(self.queue_wait_p50)),
+            ("queue_wait_p95", Json::Num(self.queue_wait_p95)),
+            ("queue_wait_p99", Json::Num(self.queue_wait_p99)),
+            ("queue_wait_mean", Json::Num(self.queue_wait_mean)),
+            ("round_time", hist_json(&self.round_time)),
+            ("phase_sched", hist_json(&self.phase_sched)),
+            ("phase_draft", hist_json(&self.phase_draft)),
+            ("phase_verify", hist_json(&self.phase_verify)),
+            ("phase_host", hist_json(&self.phase_host)),
+            ("mid_round_admitted", Json::from(self.mid_round_admitted as usize)),
+            (
+                "accept_rate_by_level",
+                Json::Arr(self.accept_rate_by_level.iter().map(|&r| Json::Num(r)).collect()),
+            ),
+            ("round_nodes_hist", sparse_hist(&self.round_nodes_hist)),
+            ("fused_calls", Json::from(self.fused_calls as usize)),
+            ("fused_batch_hist", sparse_hist(&self.fused_batch_hist)),
+            ("fused_fill_hist", deciles(&self.fused_fill_hist)),
+            ("fused_mean_batch", Json::Num(self.fused_mean_batch)),
+            ("preemptions", Json::from(self.preemptions as usize)),
+            ("resumes", Json::from(self.resumes as usize)),
+            ("kv_hit_tokens", Json::from(self.kv_hit_tokens as usize)),
+            ("kv_lookup_tokens", Json::from(self.kv_lookup_tokens as usize)),
+            ("kv_cow_copies", Json::from(self.kv_cow_copies as usize)),
+            ("kv_evictions", Json::from(self.kv_evictions as usize)),
+            ("kv_blocks_in_use", Json::from(self.kv_blocks_in_use as usize)),
+            ("kv_blocks_total", Json::from(self.kv_blocks_total as usize)),
+            ("kv_hit_rate", Json::Num(self.kv_hit_rate)),
+            ("kv_hit_hist", deciles(&self.kv_hit_hist)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// With log-bucketed histograms the percentiles are exact to within
+    /// one bucket ratio (10^(1/16) ≈ 1.155); means stay exact.
     #[test]
     fn percentiles_over_known_samples() {
         let m = Metrics::default();
@@ -343,9 +455,10 @@ mod tests {
             m.record_latency(i as f64);
         }
         let s = m.snapshot();
-        assert!((s.latency_p50 - 50.0).abs() <= 1.0);
-        assert!((s.latency_p95 - 95.0).abs() <= 1.0);
-        assert!((s.latency_p99 - 99.0).abs() <= 1.0);
+        assert!((s.latency_p50 - 50.0).abs() <= 50.0 * 0.08, "p50 {}", s.latency_p50);
+        assert!((s.latency_p95 - 95.0).abs() <= 95.0 * 0.08, "p95 {}", s.latency_p95);
+        assert!((s.latency_p99 - 99.0).abs() <= 99.0 * 0.08, "p99 {}", s.latency_p99);
+        assert!((s.latency_mean - 50.5).abs() < 1e-9, "mean is exact");
     }
 
     #[test]
@@ -368,11 +481,51 @@ mod tests {
     }
 
     #[test]
+    fn phase_timing_aggregates() {
+        let m = Metrics::default();
+        for _ in 0..4 {
+            m.record_phase(crate::trace::PHASE_DRAFT, 0.010);
+            m.record_phase(crate::trace::PHASE_VERIFY, 0.020);
+        }
+        m.record_phase(crate::trace::PHASE_SCHED, 0.001);
+        m.record_phase(crate::trace::PHASE_HOST, 0.002);
+        // level bits above the low byte must not change the routing
+        m.record_phase(crate::trace::PHASE_DRAFT | (3 << 8), 0.010);
+        m.record_round_time(0.033);
+        let s = m.snapshot();
+        assert_eq!(s.phase_draft.count, 5);
+        assert_eq!(s.phase_verify.count, 4);
+        assert_eq!(s.phase_sched.count, 1);
+        assert_eq!(s.phase_host.count, 1);
+        assert_eq!(s.round_time.count, 1);
+        assert!((s.phase_draft.mean - 0.010).abs() < 1e-12);
+        assert!((s.phase_verify.p50 - 0.020).abs() <= 0.020 * 0.08);
+        assert!(s.round_time.mean > s.phase_verify.mean);
+    }
+
+    #[test]
     fn counters_accumulate() {
         let m = Metrics::default();
         m.add(&m.tokens_out, 5);
         m.add(&m.tokens_out, 7);
         assert_eq!(m.snapshot().tokens_out, 12);
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let m = Metrics::default();
+        m.add(&m.completed, 2);
+        m.record_latency(0.5);
+        m.record_phase(crate::trace::PHASE_VERIFY, 0.02);
+        m.record_fused(4, 8);
+        let j = m.snapshot().to_json();
+        // roundtrips through the parser and keeps the headline fields
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.usize_field("completed").unwrap(), 2);
+        assert!(parsed.get("latency_p50").unwrap().as_f64().unwrap() > 0.0);
+        let verify = parsed.get("phase_verify").unwrap();
+        assert_eq!(verify.usize_field("count").unwrap(), 1);
+        assert_eq!(parsed.usize_field("fused_calls").unwrap(), 1);
     }
 
     #[test]

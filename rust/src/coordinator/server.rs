@@ -44,27 +44,53 @@
 //!             "nodes_per_round_hist": {"nodes": rounds, ..}, ...}}
 //!   {"error": "..."}
 //! The "done" payload carries the controller telemetry for the request:
-//! empirical acceptance rate per tree level and the histogram of
+//! empirical acceptance rate per tree level, the histogram of
 //! draft-tree nodes the target processed per round (always <= B for
-//! adaptive decoders).
+//! adaptive decoders), and a "timeline" object with the request's
+//! scheduling summary (queue_wait_secs / ttft_secs / latency_secs,
+//! all measured from arrival).
+//!
+//! Two admin commands share the line protocol (any object with a
+//! "cmd" field is a command, never a generation request):
+//!   {"cmd": "metrics"} → {"metrics": {..full snapshot..}}
+//!   {"cmd": "trace"}   → {"trace": {..chrome trace-event json..},
+//!                         "prometheus": "..text exposition.."}
+//! `trace` answers an error object unless the engine was started with
+//! tracing enabled ("trace_events" > 0 in the engine config).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::{parse_stop_tokens, DecoderConfig, SamplingPatch};
 use crate::tokenizer::Tokenizer;
+use crate::trace::export::{chrome_trace, prometheus};
+use crate::trace::Tracer;
 use crate::util::Json;
 
-use super::engine::{Event, Request};
+use super::engine::{Event, Request, RequestReport};
+use super::metrics::Metrics;
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-/// Serve forever. `submit` feeds the engine thread.
-pub fn serve(addr: &str, submit: mpsc::Sender<Request>) -> Result<()> {
+/// Server-side telemetry handles, shared by every connection: the
+/// metrics registry the engine updates (the `metrics` wire command) and
+/// the flight-recorder tracer (the `trace` wire command). Both default
+/// to absent/off — the observability commands then answer with an
+/// error object instead of data.
+#[derive(Clone, Default)]
+pub struct ServeCtx {
+    pub metrics: Option<Arc<Metrics>>,
+    pub trace: Tracer,
+}
+
+/// Serve forever. `submit` feeds the engine thread; `ctx` carries the
+/// telemetry handles the admin commands expose.
+pub fn serve(addr: &str, submit: mpsc::Sender<Request>, ctx: ServeCtx) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("rsd: serving on {addr}");
     for stream in listener.incoming() {
@@ -76,9 +102,10 @@ pub fn serve(addr: &str, submit: mpsc::Sender<Request>) -> Result<()> {
             }
         };
         let submit = submit.clone();
+        let ctx = ctx.clone();
         std::thread::spawn(move || {
             let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
-            if let Err(e) = handle_conn(stream, submit) {
+            if let Err(e) = handle_conn(stream, submit, ctx) {
                 eprintln!("rsd: connection {peer} ended: {e}");
             }
         });
@@ -144,7 +171,34 @@ pub(crate) fn parse_wire_request(line: &str, tok: &Tokenizer) -> Result<WireRequ
     Ok(WireRequest { prompt, max_new, decoder, sampling, priority, deadline_ms, stream })
 }
 
-pub(crate) fn done_json(stats: &crate::decode::DecodeStats) -> Json {
+/// Answer an admin command line (`{"cmd": "..."}`). Factored out of the
+/// connection loop so the protocol is testable without a socket.
+pub(crate) fn command_response(cmd: &str, ctx: &ServeCtx) -> Json {
+    match cmd {
+        // full metrics snapshot (counters, gauges, histogram summaries)
+        "metrics" => match &ctx.metrics {
+            Some(m) => Json::obj(vec![("metrics", m.snapshot().to_json())]),
+            None => err_json("metrics unavailable on this server"),
+        },
+        // flight-recorder dump: the journal as a Chrome trace-event
+        // document (load in chrome://tracing / Perfetto) plus, when
+        // metrics are attached, a Prometheus text exposition
+        "trace" => {
+            if !ctx.trace.enabled() {
+                return err_json("tracing disabled (set \"trace_events\" in the engine config)");
+            }
+            let mut fields = vec![("trace", chrome_trace(&ctx.trace.snapshot()))];
+            if let Some(m) = &ctx.metrics {
+                fields.push(("prometheus", Json::Str(prometheus(&m.snapshot()))));
+            }
+            Json::obj(fields)
+        }
+        other => err_json(format!("unknown command '{other}'")),
+    }
+}
+
+pub(crate) fn done_json(report: &RequestReport) -> Json {
+    let stats = &report.stats;
     // controller telemetry: per-level acceptance rates ...
     let accept_rate_by_level = Json::Arr(
         stats
@@ -191,6 +245,16 @@ pub(crate) fn done_json(stats: &crate::decode::DecodeStats) -> Json {
         ));
     }
     fields.push(("wall_secs", stats.wall.as_secs_f64().into()));
+    // per-request scheduling timeline (queue → first token → done), all
+    // seconds from arrival
+    fields.push((
+        "timeline",
+        Json::obj(vec![
+            ("queue_wait_secs", report.queue_wait.into()),
+            ("ttft_secs", report.ttft.map_or(Json::Null, Json::Num)),
+            ("latency_secs", report.latency.into()),
+        ]),
+    ));
     Json::obj(vec![("done", Json::obj(fields))])
 }
 
@@ -202,7 +266,7 @@ pub(crate) fn token_json(tok: &Tokenizer, token: u32, index: usize) -> Json {
     ])
 }
 
-fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>) -> Result<()> {
+fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>, ctx: ServeCtx) -> Result<()> {
     let mut wr = stream.try_clone()?;
     let rd = BufReader::new(stream);
     let tok = Tokenizer::new();
@@ -210,6 +274,14 @@ fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>) -> Result<()> {
         let line = line?;
         if line.trim().is_empty() {
             continue;
+        }
+        // admin commands share the line protocol with generation
+        // requests: {"cmd": "metrics"} / {"cmd": "trace"}
+        if let Ok(j) = Json::parse(&line) {
+            if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+                send_line(&mut wr, &command_response(cmd, &ctx))?;
+                continue;
+            }
         }
         let wire = match parse_wire_request(&line, &tok) {
             Ok(x) => x,
@@ -249,8 +321,8 @@ fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>) -> Result<()> {
                         send_line(&mut wr, &msg)?;
                     }
                 }
-                Event::Done(stats) => {
-                    send_line(&mut wr, &done_json(&stats))?;
+                Event::Done(report) => {
+                    send_line(&mut wr, &done_json(&report))?;
                     break;
                 }
                 Event::Error(e) => {
@@ -358,16 +430,63 @@ mod tests {
     }
 
     #[test]
+    fn metrics_command_returns_full_snapshot() {
+        let metrics = Arc::new(Metrics::default());
+        metrics.add(&metrics.admitted, 3);
+        metrics.add(&metrics.completed, 2);
+        metrics.record_latency(0.25);
+        let ctx = ServeCtx { metrics: Some(metrics), trace: Tracer::off() };
+        let j = command_response("metrics", &ctx);
+        // the reply must parse back and carry the full snapshot
+        let j = Json::parse(&j.to_string()).unwrap();
+        let m = j.get("metrics").expect("metrics object");
+        assert_eq!(m.get("admitted").and_then(Json::as_usize), Some(3));
+        assert_eq!(m.get("completed").and_then(Json::as_usize), Some(2));
+        let lat = m.get("latency").expect("latency summary");
+        assert_eq!(lat.get("count").and_then(Json::as_usize), Some(1));
+        // no metrics attached → an error object, not a panic
+        let none = command_response("metrics", &ServeCtx::default());
+        assert!(none.get("error").is_some());
+    }
+
+    #[test]
+    fn trace_command_dumps_journal_and_prometheus() {
+        let trace = Tracer::new(64);
+        trace.record(crate::trace::EventKind::ReqArrive, 1, 5, 0);
+        trace.record(crate::trace::EventKind::ReqDone, 1, 8, 0);
+        let ctx = ServeCtx { metrics: Some(Arc::new(Metrics::default())), trace };
+        let j = command_response("trace", &ctx);
+        let j = Json::parse(&j.to_string()).unwrap();
+        let events =
+            j.get("trace").and_then(|t| t.get("traceEvents")).and_then(Json::as_arr).unwrap();
+        // metadata event + the two recorded events
+        assert_eq!(events.len(), 3);
+        let prom = j.get("prometheus").and_then(Json::as_str).unwrap();
+        assert!(prom.contains("rsd_requests_completed_total"));
+        // tracing off → an error object
+        let off = command_response("trace", &ServeCtx::default());
+        assert!(off.get("error").is_some());
+        // unknown commands answer cleanly too
+        assert!(command_response("bogus", &ctx).get("error").is_some());
+    }
+
+    #[test]
     fn done_event_carries_controller_telemetry() {
-        let stats = crate::decode::DecodeStats {
-            generated: 10,
-            decode_calls: 4,
-            level_attempts: vec![4, 3],
-            level_accepts: vec![3, 1],
-            round_nodes: vec![6, 6, 4, 6],
-            ..Default::default()
+        let report = RequestReport {
+            id: 9,
+            stats: crate::decode::DecodeStats {
+                generated: 10,
+                decode_calls: 4,
+                level_attempts: vec![4, 3],
+                level_accepts: vec![3, 1],
+                round_nodes: vec![6, 6, 4, 6],
+                ..Default::default()
+            },
+            queue_wait: 0.05,
+            ttft: Some(0.2),
+            latency: 1.5,
         };
-        let j = done_json(&stats);
+        let j = done_json(&report);
         let done = j.get("done").unwrap();
         let rates = done.get("accept_rate_by_level").and_then(Json::as_arr).unwrap();
         assert_eq!(rates.len(), 2);
@@ -375,5 +494,10 @@ mod tests {
         let hist = done.get("nodes_per_round_hist").and_then(Json::as_obj).unwrap();
         assert_eq!(hist.get("6").and_then(Json::as_usize), Some(3));
         assert_eq!(hist.get("4").and_then(Json::as_usize), Some(1));
+        // the scheduling timeline rides along
+        let tl = done.get("timeline").expect("timeline object");
+        assert!((tl.get("queue_wait_secs").and_then(Json::as_f64).unwrap() - 0.05).abs() < 1e-12);
+        assert!((tl.get("ttft_secs").and_then(Json::as_f64).unwrap() - 0.2).abs() < 1e-12);
+        assert!((tl.get("latency_secs").and_then(Json::as_f64).unwrap() - 1.5).abs() < 1e-12);
     }
 }

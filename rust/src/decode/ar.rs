@@ -68,6 +68,10 @@ pub struct ArStepper<T: Llm> {
     max_new: usize,
     started: Instant,
     done: bool,
+    /// Flight-recorder handle (default off) and the id this request's
+    /// commit events carry.
+    tracer: crate::trace::Tracer,
+    trace_id: u64,
 }
 
 impl<T: Llm> ArStepper<T> {
@@ -104,11 +108,20 @@ impl<T: Llm> ArStepper<T> {
             max_new,
             started: Instant::now(),
             done: false,
+            tracer: crate::trace::Tracer::off(),
+            trace_id: 0,
         })
     }
 
     pub fn is_done(&self) -> bool {
         self.done
+    }
+
+    /// Attach a flight-recorder handle; this request's commit
+    /// boundaries are journaled under `id` from the next round on.
+    pub fn set_trace(&mut self, tracer: &crate::trace::Tracer, id: u64) {
+        self.tracer = tracer.clone();
+        self.trace_id = id;
     }
 
     /// The streaming commit boundary (see
@@ -202,6 +215,8 @@ impl<T: Llm> ArStepper<T> {
             return Ok(RoundStart::Finished);
         }
         self.out.push(token);
+        // AR's commit boundary: the sampled token is final immediately
+        self.tracer.record(crate::trace::EventKind::Commit, self.trace_id, 0, 1);
         if self.out.len() >= self.max_new || target.capacity_left(&self.sess) < 2 {
             self.finish();
             return Ok(RoundStart::Finished);

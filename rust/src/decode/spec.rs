@@ -406,6 +406,10 @@ pub struct SpecStepper<T: Llm, D: Llm> {
     /// `has_report`).
     report: RoundReport,
     has_report: bool,
+    /// Flight-recorder handle (default off) and the id this request's
+    /// commit-boundary events carry. Recording allocates nothing.
+    tracer: crate::trace::Tracer,
+    trace_id: u64,
     /// The original prompt (immutable): with `out` it reconstructs the
     /// full logical sequence, which is all suspend/resume needs to spill
     /// and rebuild KV state losslessly.
@@ -486,6 +490,8 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             logits: LogitsBatch::default(),
             report,
             has_report: false,
+            tracer: crate::trace::Tracer::off(),
+            trace_id: 0,
             prompt: prompt.to_vec(),
             out,
             stats,
@@ -516,6 +522,13 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         } else {
             None
         }
+    }
+
+    /// Attach a flight-recorder handle; this request's commit
+    /// boundaries are journaled under `id` from the next round on.
+    pub fn set_trace(&mut self, tracer: &crate::trace::Tracer, id: u64) {
+        self.tracer = tracer.clone();
+        self.trace_id = id;
     }
 
     /// Swap the tree strategy before the next round (adaptive tree
@@ -861,6 +874,12 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         self.report.accepted = eff_accepted;
         self.report.bonus = eff_bonus;
         self.has_report = true;
+        self.tracer.record(
+            crate::trace::EventKind::Commit,
+            self.trace_id,
+            eff_accepted as u32,
+            u32::from(eff_bonus),
+        );
 
         // ---- zero-copy KV commit (FilterKVCache) --------------------------
         self.tchain.clear();

@@ -41,6 +41,8 @@
 use std::fmt;
 use std::sync::Mutex;
 
+use crate::trace::{EventKind, Tracer};
+
 /// Occupancy masks in [`super::table::PagedSlots`] are `u64`.
 pub const MAX_BLOCK_SIZE: usize = 64;
 
@@ -189,6 +191,9 @@ struct PoolInner {
     /// Live radix nodes with `pinned_desc == 0` (reclaimable closure),
     /// maintained incrementally.
     evictable: usize,
+    /// Flight-recorder handle (default off); lives inside the pool
+    /// mutex so eviction deep in [`KvPool::alloc_block`] can record.
+    tracer: Tracer,
 }
 
 /// The shared paged KV-cache pool (see module docs). Cheap to share via
@@ -223,8 +228,16 @@ impl KvPool {
                 tick: 0,
                 stats: KvStats::default(),
                 evictable: 0,
+                tracer: Tracer::off(),
             }),
         }
+    }
+
+    /// Attach a flight-recorder handle: prefix lookups, publishes and
+    /// evictions are journaled from here on. Recording is
+    /// allocation-free (the journal is preallocated).
+    pub fn set_trace(&self, tracer: &Tracer) {
+        self.inner.lock().unwrap().tracer = tracer.clone();
     }
 
     pub fn block_size(&self) -> usize {
@@ -277,6 +290,7 @@ impl KvPool {
         g.stats.lookups += 1;
         g.stats.lookup_tokens += cap as u64;
         if !self.share || cap == 0 {
+            g.tracer.record(EventKind::KvAcquire, 0, 0, cap as u32);
             return out;
         }
         g.tick += 1;
@@ -326,6 +340,7 @@ impl KvPool {
         }
         out.matched = pos;
         g.stats.hit_tokens += pos as u64;
+        g.tracer.record(EventKind::KvAcquire, 0, pos as u32, cap as u32);
         out
     }
 
@@ -389,6 +404,7 @@ impl KvPool {
         g.tick += 1;
         let tick = g.tick;
         let mut parent = NO_NODE;
+        let mut placed = 0u32;
         for chunk in tokens.chunks_exact(b) {
             // dedupe: exact chunk already cached -> descend
             let mut exact: Option<usize> = None;
@@ -427,6 +443,7 @@ impl KvPool {
                 g.stats.cow_tokens += overlap as u64;
             }
             g.stats.published_blocks += 1;
+            placed += 1;
             g.evictable += 1; // fresh nodes carry no leases
             let node = Node {
                 tokens: chunk.to_vec(),
@@ -454,6 +471,9 @@ impl KvPool {
                 g.nodes[parent].children.push(id);
             }
             parent = id;
+        }
+        if placed > 0 {
+            g.tracer.record(EventKind::KvPublish, 0, placed, placed * b as u32);
         }
     }
 
@@ -489,6 +509,7 @@ impl KvPool {
         g.free.push(block);
         g.node_free.push(id);
         g.stats.evictions += 1;
+        g.tracer.record(EventKind::KvEvict, 0, 1, 0);
         true
     }
 

@@ -44,6 +44,7 @@ pub mod sampling;
 pub mod sim;
 pub mod tensorfile;
 pub mod tokenizer;
+pub mod trace;
 pub mod tree;
 pub mod util;
 

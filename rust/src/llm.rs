@@ -176,6 +176,12 @@ pub trait Llm {
     /// executed. Default: no-op.
     fn cache_prefix(&self, _tokens: &[u32]) {}
 
+    /// Attach a flight-recorder handle ([`crate::trace::Tracer`]) so the
+    /// substrate can journal its internal traffic (the paged sim
+    /// forwards this to its KV pool: acquire/publish/evict events).
+    /// Default: no-op — dense substrates have nothing to record.
+    fn set_trace(&self, _tracer: &crate::trace::Tracer) {}
+
     /// Occupancy and telemetry of the shared KV block pool backing this
     /// model's sessions, when there is one. The engine's admission and
     /// preemption consult this instead of per-session capacity. Default:

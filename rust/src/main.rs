@@ -10,10 +10,14 @@
 //!
 //! Run `rsd help` for flags.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use anyhow::{bail, Result};
 
 use rsd::bench::{self, workload, BenchOpts};
 use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::metrics::Metrics;
 use rsd::coordinator::{engine, server};
 use rsd::decode::generate;
 use rsd::llm::Llm;
@@ -21,6 +25,8 @@ use rsd::model::PjrtLm;
 use rsd::runtime::Runtime;
 use rsd::sim::SimLm;
 use rsd::tokenizer::Tokenizer;
+use rsd::trace::Tracer;
+use rsd::trace::watchdog::Watchdog;
 use rsd::util::args::Args;
 use rsd::util::Rng;
 
@@ -33,12 +39,18 @@ COMMANDS:
   generate   --prompt STR --max-tokens N --decoder SPEC --temperature T
              --top-p P --seed N [--sim] [--artifacts DIR]
   serve      --addr HOST:PORT [--config FILE.json] [--artifacts DIR] [--sim]
+             [--trace N] [--watchdog-ms MS] [--watchdog-path FILE]
              (config "kv_blocks"/"kv_block_size" enable the paged KV
               pool with radix prefix sharing on the sim substrate;
               "drain_batching": true switches continuous phase-boundary
               admission off, as the A/B baseline. Per-request wire
               fields: "priority" 0-255, "deadline_ms", "stream": true
-              for per-token {"token", "index"} events)
+              for per-token {"token", "index"} events.
+              --trace N keeps a flight-recorder ring of the newest N
+              events ({"cmd": "trace"} dumps Chrome trace JSON +
+              Prometheus text; {"cmd": "metrics"} dumps counters);
+              --watchdog-ms MS snapshots journal + engine state to
+              --watchdog-path when no phase boundary advances for MS)
   exp1       --dl 2,3,4,5 --max-tokens N --reps N [--sim] [--alpha A]
              [--tv-trials N] --temperature T
   exp2       --budget 6,10,14,21,30 (same flags as exp1)
@@ -84,9 +96,28 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let addr = args.get_or("addr", "127.0.0.1:7433");
-            let cfg = match args.get("config") {
+            let mut cfg = match args.get("config") {
                 Some(path) => EngineConfig::from_json_file(path)?,
                 None => EngineConfig::default(),
+            };
+            // flags override the config file's observability knobs
+            cfg.trace_events = args.parse_or("trace", cfg.trace_events)?;
+            cfg.watchdog_ms = args.parse_or("watchdog-ms", cfg.watchdog_ms)?;
+            if let Some(p) = args.get("watchdog-path") {
+                cfg.watchdog_path = p.to_string();
+            }
+            let metrics = Arc::new(Metrics::default());
+            let trace = Tracer::new(cfg.trace_events);
+            let watchdog_ms = cfg.watchdog_ms;
+            let watchdog_path = cfg.watchdog_path.clone();
+            let ctx = server::ServeCtx { metrics: Some(metrics.clone()), trace: trace.clone() };
+            let spawn_watchdog = |status| {
+                Watchdog::spawn(
+                    trace.clone(),
+                    status,
+                    Duration::from_millis(watchdog_ms),
+                    watchdog_path.clone().into(),
+                )
             };
             if args.has("sim") {
                 // sim substrate: paged KV pools when the config asks for
@@ -106,16 +137,36 @@ fn main() -> Result<()> {
                 } else {
                     SimLm::pair(seed, 0.8, 256)
                 };
-                let (tx, _handle) = engine::spawn(engine::Engine::new(target, draft, cfg));
-                server::serve(&addr, tx)?;
+                let eng =
+                    engine::Engine::with_telemetry(target, draft, cfg, metrics, trace.clone());
+                let _watchdog = spawn_watchdog(eng.status_handle());
+                let (tx, _handle) = engine::spawn(eng);
+                server::serve(&addr, tx, ctx)?;
             } else {
                 let artifacts_dir = artifacts.clone();
+                let eng_metrics = metrics;
+                let eng_trace = trace.clone();
+                // the engine is built on its own thread (PJRT wants that),
+                // so the watchdog's status handle comes back over a channel
+                let (status_tx, status_rx) = std::sync::mpsc::channel();
                 let (tx, _handle) = engine::spawn_with(move || {
                     let rt = Runtime::cpu()?;
                     let (target, draft) = PjrtLm::load_pair(&rt, &artifacts_dir)?;
-                    Ok(engine::Engine::new(target, draft, cfg))
+                    let eng = engine::Engine::with_telemetry(
+                        target,
+                        draft,
+                        cfg,
+                        eng_metrics,
+                        eng_trace,
+                    );
+                    let _ = status_tx.send(eng.status_handle());
+                    Ok(eng)
                 });
-                server::serve(&addr, tx)?;
+                let _watchdog = status_rx
+                    .recv_timeout(Duration::from_secs(60))
+                    .ok()
+                    .and_then(spawn_watchdog);
+                server::serve(&addr, tx, ctx)?;
             }
         }
         "exp1" | "exp2" => {

@@ -249,6 +249,12 @@ impl Llm for SimLm {
         self.kv.as_ref().map(|p| p.status())
     }
 
+    fn set_trace(&self, tracer: &crate::trace::Tracer) {
+        if let Some(pool) = &self.kv {
+            pool.set_trace(tracer);
+        }
+    }
+
     fn session_capacity(&self) -> usize {
         match &self.kv {
             Some(pool) => pool.total_slots(),

@@ -1,0 +1,310 @@
+//! Journal/metrics export: Chrome trace-event JSON (loadable in
+//! `chrome://tracing` or Perfetto) and a Prometheus-style text
+//! exposition of a metrics [`Snapshot`].
+//!
+//! Layout of the Chrome trace: the engine's phase machine lives on
+//! `tid 0` ("engine") as B/E duration slices (sched / draft / verify /
+//! sampling, with the draft level in the slice args); each request gets
+//! its own lane at `tid = request id + 1` carrying instant events for
+//! its lifecycle (arrive → admit → commit* → done, plus
+//! preempt/resume); batcher queue-depth samples are a counter track.
+//! All of this is cold-path: export allocates freely, recording never
+//! does.
+
+use crate::coordinator::metrics::Snapshot;
+use crate::util::json::Json;
+
+use super::{phase_name, EventKind, TraceEvent, PHASE_DRAFT};
+
+/// Lane for engine-wide events (phases, rounds, KV pool traffic).
+const ENGINE_TID: u64 = 0;
+
+fn ev(ph: &str, name: &str, tid: u64, ts_us: u64, args: Vec<(&str, Json)>) -> Json {
+    let mut fields = vec![
+        ("ph", Json::from(ph)),
+        ("name", Json::from(name)),
+        ("pid", Json::from(1usize)),
+        ("tid", Json::from(tid as usize)),
+        ("ts", Json::from(ts_us as usize)),
+    ];
+    if ph == "i" {
+        // instant scope: thread
+        fields.push(("s", Json::from("t")));
+    }
+    if !args.is_empty() {
+        fields.push(("args", Json::obj(args)));
+    }
+    Json::obj(fields)
+}
+
+/// Render journal events as a Chrome trace-event document:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let mut out = Vec::with_capacity(events.len() + 2);
+    // name the engine lane so the viewer reads "engine", not "thread 0"
+    out.push(Json::obj(vec![
+        ("ph", Json::from("M")),
+        ("name", Json::from("thread_name")),
+        ("pid", Json::from(1usize)),
+        ("tid", Json::from(ENGINE_TID as usize)),
+        ("args", Json::obj(vec![("name", Json::from("engine"))])),
+    ]));
+    for e in events {
+        let req_lane = e.id + 1;
+        match e.kind {
+            EventKind::PhaseBegin | EventKind::PhaseEnd => {
+                let ph = if e.kind == EventKind::PhaseBegin { "B" } else { "E" };
+                let mut args = vec![
+                    ("round", Json::from(e.id as usize)),
+                    ("groups", Json::from(e.b as usize)),
+                ];
+                if e.a & 0xff == PHASE_DRAFT {
+                    args.push(("level", Json::from((e.a >> 8) as usize)));
+                }
+                out.push(ev(ph, phase_name(e.a), ENGINE_TID, e.t_us, args));
+            }
+            EventKind::RoundBegin => out.push(ev(
+                "i",
+                "round",
+                ENGINE_TID,
+                e.t_us,
+                vec![
+                    ("round", Json::from(e.id as usize)),
+                    ("active", Json::from(e.a as usize)),
+                    ("queued", Json::from(e.b as usize)),
+                ],
+            )),
+            EventKind::ReqArrive => out.push(ev(
+                "i",
+                "arrive",
+                req_lane,
+                e.t_us,
+                vec![
+                    ("request", Json::from(e.id as usize)),
+                    ("prompt_tokens", Json::from(e.a as usize)),
+                    ("queue_depth", Json::from(e.b as usize)),
+                ],
+            )),
+            EventKind::ReqAdmit => out.push(ev(
+                "i",
+                "admit",
+                req_lane,
+                e.t_us,
+                vec![
+                    ("request", Json::from(e.id as usize)),
+                    ("mid_round", Json::Bool(e.a != 0)),
+                    ("weight", Json::from(e.b as usize)),
+                ],
+            )),
+            EventKind::ReqPreempt => out.push(ev(
+                "i",
+                "preempt",
+                req_lane,
+                e.t_us,
+                vec![
+                    ("request", Json::from(e.id as usize)),
+                    ("committed", Json::from(e.a as usize)),
+                ],
+            )),
+            EventKind::ReqResume => out.push(ev(
+                "i",
+                "resume",
+                req_lane,
+                e.t_us,
+                vec![
+                    ("request", Json::from(e.id as usize)),
+                    ("kv_hit_tokens", Json::from(e.a as usize)),
+                ],
+            )),
+            EventKind::ReqDone => out.push(ev(
+                "i",
+                "done",
+                req_lane,
+                e.t_us,
+                vec![
+                    ("request", Json::from(e.id as usize)),
+                    ("generated", Json::from(e.a as usize)),
+                    ("preemptions", Json::from(e.b as usize)),
+                ],
+            )),
+            EventKind::ReqError => out.push(ev(
+                "i",
+                "error",
+                req_lane,
+                e.t_us,
+                vec![("request", Json::from(e.id as usize))],
+            )),
+            EventKind::Commit => out.push(ev(
+                "i",
+                "commit",
+                req_lane,
+                e.t_us,
+                vec![
+                    ("request", Json::from(e.id as usize)),
+                    ("accepted", Json::from(e.a as usize)),
+                    ("bonus", Json::from(e.b as usize)),
+                ],
+            )),
+            EventKind::KvAcquire | EventKind::KvPublish | EventKind::KvEvict => {
+                let (ka, kb) = match e.kind {
+                    EventKind::KvAcquire => ("hit_tokens", "lookup_tokens"),
+                    EventKind::KvPublish => ("blocks", "tokens"),
+                    _ => ("blocks", "_"),
+                };
+                let mut args = vec![(ka, Json::from(e.a as usize))];
+                if kb != "_" {
+                    args.push((kb, Json::from(e.b as usize)));
+                }
+                out.push(ev("i", e.kind.name(), ENGINE_TID, e.t_us, args));
+            }
+            EventKind::QueueDepth => out.push(ev(
+                "C",
+                "queue",
+                ENGINE_TID,
+                e.t_us,
+                vec![
+                    ("queued", Json::from(e.a as usize)),
+                    ("active", Json::from(e.b as usize)),
+                ],
+            )),
+            EventKind::Watchdog => out.push(ev(
+                "i",
+                "watchdog",
+                ENGINE_TID,
+                e.t_us,
+                vec![("heartbeat", Json::from(e.a as usize))],
+            )),
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+fn prom_line(out: &mut String, name: &str, kind: &str, value: f64) {
+    out.push_str(&format!("# TYPE {name} {kind}\n{name} {value}\n"));
+}
+
+fn prom_summary(out: &mut String, name: &str, s: &crate::trace::hist::HistSummary) {
+    out.push_str(&format!("# TYPE {name} summary\n"));
+    for (q, v) in [("0.5", s.p50), ("0.95", s.p95), ("0.99", s.p99)] {
+        out.push_str(&format!("{name}{{quantile=\"{q}\"}} {v}\n"));
+    }
+    out.push_str(&format!("{name}_sum {}\n", s.mean * s.count as f64));
+    out.push_str(&format!("{name}_count {}\n", s.count));
+}
+
+/// Prometheus text exposition of a metrics snapshot. Metric names are
+/// stable (documented in the README's Observability section).
+pub fn prometheus(s: &Snapshot) -> String {
+    let mut o = String::new();
+    prom_line(&mut o, "rsd_requests_admitted_total", "counter", s.admitted as f64);
+    prom_line(&mut o, "rsd_requests_rejected_total", "counter", s.rejected as f64);
+    prom_line(&mut o, "rsd_requests_completed_total", "counter", s.completed as f64);
+    prom_line(&mut o, "rsd_requests_failed_total", "counter", s.failed as f64);
+    prom_line(&mut o, "rsd_tokens_out_total", "counter", s.tokens_out as f64);
+    prom_line(&mut o, "rsd_decode_rounds_total", "counter", s.decode_rounds as f64);
+    prom_line(&mut o, "rsd_draft_calls_total", "counter", s.draft_calls as f64);
+    prom_line(&mut o, "rsd_fused_calls_total", "counter", s.fused_calls as f64);
+    prom_line(&mut o, "rsd_mid_round_admitted_total", "counter", s.mid_round_admitted as f64);
+    prom_line(&mut o, "rsd_preemptions_total", "counter", s.preemptions as f64);
+    prom_line(&mut o, "rsd_resumes_total", "counter", s.resumes as f64);
+    prom_line(&mut o, "rsd_kv_hit_tokens_total", "counter", s.kv_hit_tokens as f64);
+    prom_line(&mut o, "rsd_kv_lookup_tokens_total", "counter", s.kv_lookup_tokens as f64);
+    prom_line(&mut o, "rsd_kv_cow_copies_total", "counter", s.kv_cow_copies as f64);
+    prom_line(&mut o, "rsd_kv_evictions_total", "counter", s.kv_evictions as f64);
+    prom_line(&mut o, "rsd_kv_blocks_in_use", "gauge", s.kv_blocks_in_use as f64);
+    prom_line(&mut o, "rsd_kv_blocks_total", "gauge", s.kv_blocks_total as f64);
+    prom_line(&mut o, "rsd_kv_hit_rate", "gauge", s.kv_hit_rate);
+    prom_line(&mut o, "rsd_fused_mean_batch", "gauge", s.fused_mean_batch);
+    // latency/ttft/queue-wait quantiles from the bounded histograms
+    let lat = crate::trace::hist::HistSummary {
+        count: s.completed,
+        mean: s.latency_mean,
+        p50: s.latency_p50,
+        p95: s.latency_p95,
+        p99: s.latency_p99,
+    };
+    prom_summary(&mut o, "rsd_request_latency_seconds", &lat);
+    let ttft = crate::trace::hist::HistSummary {
+        count: s.completed,
+        mean: s.ttft_mean,
+        p50: s.ttft_p50,
+        p95: s.ttft_p95,
+        p99: s.ttft_p99,
+    };
+    prom_summary(&mut o, "rsd_ttft_seconds", &ttft);
+    let qw = crate::trace::hist::HistSummary {
+        count: s.admitted,
+        mean: s.queue_wait_mean,
+        p50: s.queue_wait_p50,
+        p95: s.queue_wait_p95,
+        p99: s.queue_wait_p99,
+    };
+    prom_summary(&mut o, "rsd_queue_wait_seconds", &qw);
+    prom_summary(&mut o, "rsd_round_seconds", &s.round_time);
+    prom_summary(&mut o, "rsd_phase_sched_seconds", &s.phase_sched);
+    prom_summary(&mut o, "rsd_phase_draft_seconds", &s.phase_draft);
+    prom_summary(&mut o, "rsd_phase_verify_seconds", &s.phase_verify);
+    prom_summary(&mut o, "rsd_phase_sampling_seconds", &s.phase_host);
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Tracer, PHASE_VERIFY};
+
+    #[test]
+    fn chrome_trace_is_valid_and_balanced() {
+        let t = Tracer::new(64);
+        t.record(EventKind::ReqArrive, 3, 5, 1);
+        t.record(EventKind::ReqAdmit, 3, 0, 9);
+        t.record(EventKind::PhaseBegin, 0, PHASE_DRAFT | (2 << 8), 1);
+        t.record(EventKind::PhaseEnd, 0, PHASE_DRAFT | (2 << 8), 1);
+        t.record(EventKind::PhaseBegin, 0, PHASE_VERIFY, 1);
+        t.record(EventKind::PhaseEnd, 0, PHASE_VERIFY, 1);
+        t.record(EventKind::Commit, 3, 2, 1);
+        t.record(EventKind::ReqDone, 3, 6, 0);
+        let doc = chrome_trace(&t.snapshot());
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // metadata + 8 events
+        assert_eq!(evs.len(), 9);
+        let phs: Vec<&str> =
+            evs.iter().map(|e| e.str_field("ph").unwrap()).collect();
+        assert_eq!(phs.iter().filter(|p| **p == "B").count(), 2);
+        assert_eq!(phs.iter().filter(|p| **p == "E").count(), 2);
+        // the draft slice carries its level
+        let draft = evs
+            .iter()
+            .find(|e| e.str_field("name").ok() == Some("draft"))
+            .unwrap();
+        assert_eq!(draft.get("args").unwrap().usize_field("level").unwrap(), 2);
+        // request events live on the request lane (tid = id + 1)
+        let done = evs
+            .iter()
+            .find(|e| e.str_field("name").ok() == Some("done"))
+            .unwrap();
+        assert_eq!(done.usize_field("tid").unwrap(), 4);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_stable_names() {
+        let m = crate::coordinator::metrics::Metrics::default();
+        m.add(&m.completed, 3);
+        m.record_latency(0.25);
+        m.record_phase(crate::trace::PHASE_DRAFT, 0.004);
+        let text = prometheus(&m.snapshot());
+        for needle in [
+            "# TYPE rsd_requests_completed_total counter",
+            "rsd_requests_completed_total 3",
+            "rsd_request_latency_seconds{quantile=\"0.5\"}",
+            "rsd_phase_draft_seconds_count 1",
+            "rsd_kv_blocks_total",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Fixed-size log-bucketed duration histogram.
+//!
+//! Replaces the unbounded `Mutex<Vec<f64>>` sample lists the metrics
+//! used to keep (they grew forever and were cloned + sorted on every
+//! snapshot). Buckets are geometric: [`BUCKETS_PER_DECADE`] per decade
+//! over [1 µs, 10 000 s), so any reported percentile sits within one
+//! bucket ratio (10^(1/16) ≈ 1.155, i.e. ≤ ~7.5%) of the exact sample
+//! percentile. The mean stays exact via a tracked running sum.
+//!
+//! Memory is constant: 160 × u64 counts + two scalars, whatever the
+//! request volume.
+
+use std::sync::Mutex;
+
+/// Geometric resolution: 16 buckets per decade ⇒ bucket ratio 10^(1/16).
+pub const BUCKETS_PER_DECADE: usize = 16;
+/// Covered range: [1e-6, 1e4) seconds, ten decades.
+pub const DECADES: usize = 10;
+pub const NUM_BUCKETS: usize = BUCKETS_PER_DECADE * DECADES;
+const MIN_VALUE: f64 = 1e-6;
+
+struct Inner {
+    counts: [u64; NUM_BUCKETS],
+    n: u64,
+    sum: f64,
+}
+
+/// Bounded histogram of durations in seconds. All methods take `&self`;
+/// recording is allocation-free (one lock, one counter bump).
+pub struct LogHistogram {
+    inner: Mutex<Inner>,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { inner: Mutex::new(Inner { counts: [0; NUM_BUCKETS], n: 0, sum: 0.0 }) }
+    }
+}
+
+/// Index of the bucket holding `v` (seconds). Values below the range
+/// clamp to bucket 0, above to the last bucket.
+fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v <= MIN_VALUE {
+        return 0;
+    }
+    let idx = ((v / MIN_VALUE).log10() * BUCKETS_PER_DECADE as f64).floor() as isize;
+    idx.clamp(0, NUM_BUCKETS as isize - 1) as usize
+}
+
+/// Geometric center of bucket `i` — the value reported for any
+/// percentile that lands in it.
+fn bucket_center(i: usize) -> f64 {
+    MIN_VALUE * 10f64.powf((i as f64 + 0.5) / BUCKETS_PER_DECADE as f64)
+}
+
+/// Point-in-time summary of one histogram.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    /// Exact mean (running sum / count), not bucket-approximated.
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl LogHistogram {
+    pub fn record(&self, v: f64) {
+        let i = bucket_of(v);
+        let mut g = self.inner.lock().unwrap();
+        g.counts[i] += 1;
+        g.n += 1;
+        g.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().n
+    }
+
+    /// Mean/percentile summary under one lock. Percentiles come from
+    /// geometric bucket centers (±1 bucket of exact); empty ⇒ zeros.
+    pub fn summary(&self) -> HistSummary {
+        let g = self.inner.lock().unwrap();
+        if g.n == 0 {
+            return HistSummary::default();
+        }
+        let pct = |p: f64| -> f64 {
+            let rank = ((g.n as f64 * p).ceil() as u64).clamp(1, g.n);
+            let mut seen = 0u64;
+            for (i, &c) in g.counts.iter().enumerate() {
+                seen += c;
+                if seen >= rank {
+                    return bucket_center(i);
+                }
+            }
+            bucket_center(NUM_BUCKETS - 1)
+        };
+        HistSummary {
+            count: g.n,
+            mean: g.sum / g.n as f64,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Relative tolerance: one bucket ratio, with a little slack.
+    const TOL: f64 = 0.08;
+
+    fn close(got: f64, want: f64) -> bool {
+        (got - want).abs() <= want * TOL
+    }
+
+    #[test]
+    fn percentiles_within_one_bucket_of_exact() {
+        let h = LogHistogram::default();
+        for v in 1..=1000 {
+            h.record(v as f64 / 1000.0); // 1ms .. 1s uniform
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 1000);
+        assert!(close(s.p50, 0.5), "p50 {}", s.p50);
+        assert!(close(s.p95, 0.95), "p95 {}", s.p95);
+        assert!(close(s.p99, 0.99), "p99 {}", s.p99);
+        assert!((s.mean - 0.5005).abs() < 1e-9, "mean is exact, got {}", s.mean);
+    }
+
+    #[test]
+    fn out_of_range_values_clamp() {
+        let h = LogHistogram::default();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(1e-9);
+        h.record(1e9);
+        let s = h.summary();
+        assert_eq!(s.count, 4);
+        // clamped values still report finite in-range centers
+        assert!(s.p50 >= 1e-6 && s.p99 <= 1e4);
+    }
+
+    #[test]
+    fn memory_is_bounded_by_construction() {
+        // the whole point: a million records, still 160 buckets
+        let h = LogHistogram::default();
+        for i in 0..1_000_000u64 {
+            h.record((i % 977) as f64 * 1e-4);
+        }
+        assert_eq!(h.count(), 1_000_000);
+        assert_eq!(std::mem::size_of::<Inner>(), NUM_BUCKETS * 8 + 16);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        assert_eq!(LogHistogram::default().summary(), HistSummary::default());
+    }
+
+    #[test]
+    fn bucket_geometry() {
+        // centers grow by exactly one ratio per bucket
+        let r = 10f64.powf(1.0 / BUCKETS_PER_DECADE as f64);
+        assert!((bucket_center(10) / bucket_center(9) - r).abs() < 1e-12);
+        // a value maps into a bucket whose center is within one ratio
+        for &v in &[2e-6, 1e-3, 0.42, 7.0, 300.0] {
+            let c = bucket_center(bucket_of(v));
+            assert!(c / v < r && v / c < r, "v {v} center {c}");
+        }
+    }
+}

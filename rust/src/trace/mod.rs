@@ -1,0 +1,325 @@
+//! Flight-recorder tracing for the serving engine.
+//!
+//! A preallocated, fixed-capacity ring buffer of compact binary events
+//! ([`TraceEvent`]: 40 bytes, `Copy`) recorded through a cheap cloneable
+//! handle ([`Tracer`]) threaded through the engine round loop, the
+//! batcher, the steppers and the KV pool. Steady-state recording
+//! allocates nothing: the ring is sized once at construction and every
+//! `record` is a mutex lock + one slot write (the hot-path
+//! zero-allocation gate in `benches/hotpath.rs` runs with tracing ON).
+//!
+//! With tracing off the handle is a `None` — one branch per record
+//! call, no journal allocated at all.
+//!
+//! The journal is a *flight recorder*: it keeps the newest `capacity`
+//! events and silently overwrites the oldest, so it is always safe to
+//! leave enabled in production and dump post-mortem (the `trace` wire
+//! command, or the [`watchdog`] when the engine stalls). Export to
+//! Chrome trace-event JSON / Prometheus text lives in [`export`];
+//! bounded log-bucketed histograms for phase timing live in [`hist`].
+
+pub mod export;
+pub mod hist;
+pub mod watchdog;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// What happened. The payload fields `id`/`a`/`b` of [`TraceEvent`] are
+/// interpreted per kind (documented per variant; `export` renders them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Request reached the engine. `id` = request, `a` = prompt tokens,
+    /// `b` = queue depth at arrival.
+    ReqArrive = 0,
+    /// Request admitted to the active batch. `id` = request,
+    /// `a` = 1 if admitted mid-round, `b` = charged weight.
+    ReqAdmit = 1,
+    /// Request suspended under KV pressure. `id` = request,
+    /// `a` = tokens committed so far.
+    ReqPreempt = 2,
+    /// Preempted request re-admitted. `id` = request, `a` = KV tokens
+    /// re-served from cache on resume.
+    ReqResume = 3,
+    /// Request completed. `id` = request, `a` = tokens generated,
+    /// `b` = preemption count.
+    ReqDone = 4,
+    /// Request failed. `id` = request.
+    ReqError = 5,
+    /// Engine round started. `id` = round number, `a` = active
+    /// requests, `b` = queued requests.
+    RoundBegin = 6,
+    /// Engine phase opened. `id` = round number, `a` = phase code
+    /// (low byte, see [`PHASE_SCHED`] etc.) | draft level << 8,
+    /// `b` = fused groups dispatched in the phase.
+    PhaseBegin = 7,
+    /// Engine phase closed; same payload as the matching begin.
+    PhaseEnd = 8,
+    /// Commit boundary for one request. `id` = request, `a` = draft
+    /// tokens accepted this round, `b` = bonus tokens.
+    Commit = 9,
+    /// KV prefix lookup. `id` = request-agnostic (0), `a` = tokens
+    /// served from cache, `b` = tokens requested.
+    KvAcquire = 10,
+    /// Prefix published to the radix index. `a` = blocks newly
+    /// published, `b` = tokens covered.
+    KvPublish = 11,
+    /// Block evicted from the pool LRU. `a` = blocks freed.
+    KvEvict = 12,
+    /// Batcher queue-depth sample. `a` = waiting requests,
+    /// `b` = active requests.
+    QueueDepth = 13,
+    /// Watchdog fired (stall detected). `a` = stalled heartbeat value
+    /// (truncated).
+    Watchdog = 14,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::ReqArrive => "arrive",
+            EventKind::ReqAdmit => "admit",
+            EventKind::ReqPreempt => "preempt",
+            EventKind::ReqResume => "resume",
+            EventKind::ReqDone => "done",
+            EventKind::ReqError => "error",
+            EventKind::RoundBegin => "round",
+            EventKind::PhaseBegin => "phase_begin",
+            EventKind::PhaseEnd => "phase_end",
+            EventKind::Commit => "commit",
+            EventKind::KvAcquire => "kv_acquire",
+            EventKind::KvPublish => "kv_publish",
+            EventKind::KvEvict => "kv_evict",
+            EventKind::QueueDepth => "queue_depth",
+            EventKind::Watchdog => "watchdog",
+        }
+    }
+}
+
+/// Engine phase codes carried in the low byte of `PhaseBegin.a`.
+pub const PHASE_SCHED: u32 = 0;
+pub const PHASE_DRAFT: u32 = 1;
+pub const PHASE_VERIFY: u32 = 2;
+pub const PHASE_HOST: u32 = 3;
+
+pub fn phase_name(code: u32) -> &'static str {
+    match code & 0xff {
+        PHASE_SCHED => "sched",
+        PHASE_DRAFT => "draft",
+        PHASE_VERIFY => "verify",
+        PHASE_HOST => "sampling",
+        _ => "phase?",
+    }
+}
+
+/// One journal slot: fixed-size, `Copy`, no heap behind it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Microseconds since the journal epoch.
+    pub t_us: u64,
+    /// Global record sequence number (monotonic; `seq` differences
+    /// across a snapshot reveal how many events were overwritten).
+    pub seq: u64,
+    pub kind: EventKind,
+    /// Primary subject (request id, round number, ...; per kind).
+    pub id: u64,
+    pub a: u32,
+    pub b: u32,
+}
+
+impl Default for TraceEvent {
+    fn default() -> Self {
+        TraceEvent { t_us: 0, seq: 0, kind: EventKind::ReqArrive, id: 0, a: 0, b: 0 }
+    }
+}
+
+struct Ring {
+    /// Preallocated to capacity at construction; never grows.
+    buf: Vec<TraceEvent>,
+    /// Next sequence number == total events ever recorded.
+    next: u64,
+}
+
+/// The flight-recorder journal: a mutex-guarded ring of the newest
+/// `capacity` events plus a lock-free heartbeat for the watchdog.
+pub struct Journal {
+    epoch: Instant,
+    ring: Mutex<Ring>,
+    /// Phase-boundary heartbeat: bumped by [`Tracer::phase_advanced`],
+    /// watched by the [`watchdog`]. Not a count of anything — only
+    /// "did it change".
+    progress: AtomicU64,
+}
+
+impl Journal {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Journal {
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring {
+                buf: vec![TraceEvent::default(); capacity],
+                next: 0,
+            }),
+            progress: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    /// Events recorded over the journal's lifetime (≥ what a snapshot
+    /// can return once the ring has wrapped).
+    pub fn recorded(&self) -> u64 {
+        self.ring.lock().unwrap().next
+    }
+
+    /// Append one event. Allocation-free: one lock, one slot write.
+    pub fn record(&self, kind: EventKind, id: u64, a: u32, b: u32) {
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let mut g = self.ring.lock().unwrap();
+        let cap = g.buf.len() as u64;
+        let seq = g.next;
+        g.next += 1;
+        g.buf[(seq % cap) as usize] = TraceEvent { t_us, seq, kind, id, a, b };
+    }
+
+    /// Copy out the surviving events, oldest first. Allocates (cold
+    /// path: wire command, watchdog, tests).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let g = self.ring.lock().unwrap();
+        let cap = g.buf.len() as u64;
+        if g.next <= cap {
+            return g.buf[..g.next as usize].to_vec();
+        }
+        let split = (g.next % cap) as usize;
+        let mut out = Vec::with_capacity(cap as usize);
+        out.extend_from_slice(&g.buf[split..]);
+        out.extend_from_slice(&g.buf[..split]);
+        out
+    }
+
+    pub fn progress(&self) -> u64 {
+        self.progress.load(Ordering::Relaxed)
+    }
+}
+
+/// The recording handle: a clone-cheap `Option<Arc<Journal>>`. The
+/// default (`Tracer::off()`) records nothing and holds nothing.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    journal: Option<Arc<Journal>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer").field("enabled", &self.enabled()).finish()
+    }
+}
+
+impl Tracer {
+    /// Disabled tracer: no journal is allocated, `record` is one branch.
+    pub fn off() -> Self {
+        Tracer { journal: None }
+    }
+
+    /// Enabled tracer with a ring of `capacity` events (0 = disabled).
+    pub fn new(capacity: usize) -> Self {
+        if capacity == 0 {
+            return Self::off();
+        }
+        Tracer { journal: Some(Arc::new(Journal::new(capacity))) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.journal.is_some()
+    }
+
+    pub fn journal(&self) -> Option<&Arc<Journal>> {
+        self.journal.as_ref()
+    }
+
+    #[inline]
+    pub fn record(&self, kind: EventKind, id: u64, a: u32, b: u32) {
+        if let Some(j) = &self.journal {
+            j.record(kind, id, a, b);
+        }
+    }
+
+    /// Bump the watchdog heartbeat: call at every engine phase
+    /// boundary. The watchdog treats a frozen heartbeat (with work in
+    /// flight) as a stall.
+    #[inline]
+    pub fn phase_advanced(&self) {
+        if let Some(j) = &self.journal {
+            j.progress.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Heartbeat value (0 when disabled).
+    pub fn progress(&self) -> u64 {
+        self.journal.as_ref().map_or(0, |j| j.progress())
+    }
+
+    /// Snapshot of surviving events (empty when disabled).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.journal.as_ref().map_or_else(Vec::new, |j| j.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_newest_events_across_wraparound() {
+        let j = Journal::new(8);
+        for i in 0..20u64 {
+            j.record(EventKind::Commit, i, i as u32, 0);
+        }
+        let snap = j.snapshot();
+        assert_eq!(snap.len(), 8);
+        let seqs: Vec<u64> = snap.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<_>>());
+        assert!(snap.iter().all(|e| e.id == e.seq), "slot/seq mismatch");
+        assert_eq!(j.recorded(), 20);
+    }
+
+    #[test]
+    fn snapshot_before_wrap_is_exact() {
+        let j = Journal::new(16);
+        j.record(EventKind::ReqArrive, 7, 3, 1);
+        j.record(EventKind::ReqAdmit, 7, 0, 6);
+        let snap = j.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].kind, EventKind::ReqArrive);
+        assert_eq!(snap[1].kind, EventKind::ReqAdmit);
+        assert!(snap[0].t_us <= snap[1].t_us);
+    }
+
+    #[test]
+    fn off_tracer_has_no_journal() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        assert!(t.journal().is_none());
+        t.record(EventKind::Commit, 1, 2, 3); // must be a no-op
+        t.phase_advanced();
+        assert_eq!(t.progress(), 0);
+        assert!(t.snapshot().is_empty());
+        // capacity 0 is the documented "disabled" spelling
+        assert!(!Tracer::new(0).enabled());
+    }
+
+    #[test]
+    fn heartbeat_advances_only_when_told() {
+        let t = Tracer::new(4);
+        assert_eq!(t.progress(), 0);
+        t.record(EventKind::RoundBegin, 0, 0, 0);
+        assert_eq!(t.progress(), 0, "plain records are not heartbeats");
+        t.phase_advanced();
+        t.phase_advanced();
+        assert_eq!(t.progress(), 2);
+    }
+}

@@ -1,0 +1,178 @@
+//! Stall watchdog: post-mortem dumps for a hung engine.
+//!
+//! The engine bumps the journal heartbeat ([`super::Tracer::phase_advanced`])
+//! at every phase boundary. This watchdog watches that heartbeat from
+//! its own thread; if it freezes for longer than the configured stall
+//! interval *while work is in flight* (an idle engine parked on its
+//! request channel is not a stall), it writes one JSON dump — the
+//! engine status (in-flight requests, queue depth, pool occupancy) plus
+//! the full journal as a Chrome trace — so a soak-test hang turns from
+//! "recv timeout" into a readable timeline ending at the stalled
+//! request's last recorded event. One dump per frozen heartbeat value:
+//! it re-arms when progress resumes.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::kvcache::PoolStatus;
+use crate::util::json::Json;
+
+use super::export::chrome_trace;
+use super::{EventKind, Tracer};
+
+/// Coarse engine state for the dump, refreshed by the engine loop at
+/// round boundaries (and when it goes idle).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStatus {
+    /// Rounds completed so far.
+    pub rounds: u64,
+    /// Active requests as (request id, tokens committed so far).
+    pub active: Vec<(u64, u64)>,
+    /// Requests waiting in the batcher queue.
+    pub queued: usize,
+    /// Requests suspended (preempted, awaiting resume).
+    pub parked: usize,
+    /// Target-pool occupancy, when the substrate is pool-backed.
+    pub pool: Option<PoolStatus>,
+}
+
+impl EngineStatus {
+    pub fn in_flight(&self) -> bool {
+        !self.active.is_empty() || self.queued > 0 || self.parked > 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let active = self
+            .active
+            .iter()
+            .map(|&(id, committed)| {
+                Json::obj(vec![
+                    ("request", Json::from(id as usize)),
+                    ("committed", Json::from(committed as usize)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("rounds", Json::from(self.rounds as usize)),
+            ("active", Json::Arr(active)),
+            ("queued", Json::from(self.queued)),
+            ("parked", Json::from(self.parked)),
+        ];
+        if let Some(p) = &self.pool {
+            fields.push((
+                "pool",
+                Json::obj(vec![
+                    ("total_blocks", Json::from(p.total_blocks)),
+                    ("free_blocks", Json::from(p.free_blocks)),
+                    ("leased_blocks", Json::from(p.leased_blocks)),
+                    ("evictable_blocks", Json::from(p.evictable_blocks)),
+                    ("blocks_in_use", Json::from(p.blocks_in_use())),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Handle to the watchdog thread; stops (and joins) on drop.
+pub struct Watchdog {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Watchdog {
+    /// Start watching. Returns `None` when there is nothing to watch
+    /// (tracing disabled or a zero interval).
+    pub fn spawn(
+        tracer: Tracer,
+        status: Arc<Mutex<EngineStatus>>,
+        stall: Duration,
+        path: PathBuf,
+    ) -> Option<Watchdog> {
+        if !tracer.enabled() || stall.is_zero() {
+            return None;
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("rsd-watchdog".into())
+            .spawn(move || watch(tracer, status, stall, path, stop2))
+            .ok()?;
+        Some(Watchdog { stop, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn watch(
+    tracer: Tracer,
+    status: Arc<Mutex<EngineStatus>>,
+    stall: Duration,
+    path: PathBuf,
+    stop: Arc<AtomicBool>,
+) {
+    let tick = (stall / 8).clamp(Duration::from_millis(2), Duration::from_millis(250));
+    let mut last_beat = tracer.progress();
+    let mut frozen_since = Instant::now();
+    // heartbeat value already dumped (never re-dump the same stall)
+    let mut dumped_at: Option<u64> = None;
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(tick);
+        let beat = tracer.progress();
+        if beat != last_beat {
+            last_beat = beat;
+            frozen_since = Instant::now();
+            dumped_at = None;
+            continue;
+        }
+        if frozen_since.elapsed() < stall || dumped_at == Some(beat) {
+            continue;
+        }
+        let st = status.lock().unwrap().clone();
+        if !st.in_flight() {
+            // idle engine: a parked heartbeat is expected, keep waiting
+            frozen_since = Instant::now();
+            continue;
+        }
+        dumped_at = Some(beat);
+        tracer.record(EventKind::Watchdog, 0, beat as u32, 0);
+        let doc = Json::obj(vec![
+            (
+                "watchdog",
+                Json::obj(vec![
+                    ("stalled_ms", Json::from(frozen_since.elapsed().as_millis() as usize)),
+                    ("heartbeat", Json::from(beat as usize)),
+                    ("status", st.to_json()),
+                ]),
+            ),
+            ("trace", chrome_trace(&tracer.snapshot())),
+        ]);
+        if let Err(e) = std::fs::write(&path, format!("{doc}\n")) {
+            eprintln!("watchdog: failed to write {}: {e}", path.display());
+        } else {
+            eprintln!(
+                "watchdog: no phase boundary for {:?} with work in flight; dumped {}",
+                stall,
+                path.display()
+            );
+        }
+    }
+}

@@ -123,8 +123,8 @@ fn engine_mean_efficiency(decoder: DecoderConfig, alpha: f64, seed: u64) -> f64 
     for rrx in receivers {
         while let Ok(ev) = rrx.recv() {
             match ev {
-                Event::Done(stats) => {
-                    effs.push(stats.block_efficiency());
+                Event::Done(r) => {
+                    effs.push(r.stats.block_efficiency());
                     break;
                 }
                 Event::Error(e) => panic!("{e}"),
@@ -204,7 +204,8 @@ fn engine_runs_heterogeneous_adaptive_budgets() {
     for (b, rrx) in receivers {
         loop {
             match rrx.recv().unwrap() {
-                Event::Done(stats) => {
+                Event::Done(r) => {
+                    let stats = r.stats;
                     assert_eq!(stats.generated, 24);
                     assert!(!stats.level_attempts.is_empty());
                     assert!(stats

@@ -54,8 +54,13 @@ fn all_requests_complete_with_exact_token_counts() {
         while let Ok(ev) = rrx.recv() {
             match ev {
                 Event::Tokens(t) => tokens.extend(t),
-                Event::Done(stats) => {
-                    assert_eq!(stats.generated, 10 + i as usize);
+                Event::Done(report) => {
+                    assert_eq!(report.id, i);
+                    assert_eq!(report.stats.generated, 10 + i as usize);
+                    // arrival-relative timeline: wait <= ttft <= latency
+                    assert!(report.queue_wait >= 0.0);
+                    let ttft = report.ttft.expect("tokens were produced");
+                    assert!(report.queue_wait <= ttft && ttft <= report.latency);
                     done = true;
                     break;
                 }
@@ -149,7 +154,7 @@ fn per_request_decoder_override_applies() {
 
     let stats_of = |rrx: mpsc::Receiver<Event>| loop {
         match rrx.recv().unwrap() {
-            Event::Done(s) => return s,
+            Event::Done(r) => return r.stats,
             Event::Error(e) => panic!("{e}"),
             _ => {}
         }

@@ -237,8 +237,8 @@ fn engine_honors_per_request_stop() {
     while let Ok(ev) = rrx.recv() {
         match ev {
             Event::Tokens(t) => stopped.extend(t),
-            Event::Done(s) => {
-                done_stats = Some(s);
+            Event::Done(r) => {
+                done_stats = Some(r.stats);
                 break;
             }
             Event::Error(e) => panic!("{e}"),

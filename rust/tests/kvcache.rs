@@ -74,8 +74,8 @@ fn run_engine(
         loop {
             match rrx.recv().expect("engine dropped request") {
                 Event::Tokens(t) => toks.extend(t),
-                Event::Done(s) => {
-                    stats.push(s);
+                Event::Done(r) => {
+                    stats.push(r.stats);
                     break;
                 }
                 Event::Error(e) => panic!("request {i}: {e}"),
@@ -311,8 +311,8 @@ fn oversized_prompt_gets_clean_error() {
     let mut done = false;
     while let Ok(ev) = rrx2.recv() {
         match ev {
-            Event::Done(s) => {
-                assert_eq!(s.generated, 8);
+            Event::Done(r) => {
+                assert_eq!(r.stats.generated, 8);
                 done = true;
                 break;
             }

@@ -15,15 +15,19 @@
 //!   to a sequential reference run (dense substrate, per-request eval,
 //!   no preemption), so scheduling chaos never leaks into output.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
+use rsd::bench::harness;
 use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig, SamplingPatch};
 use rsd::coordinator::engine::{spawn, Engine, Event, Request};
-use rsd::coordinator::metrics::Snapshot;
+use rsd::coordinator::metrics::{Metrics, Snapshot};
 use rsd::decode::DecodeStats;
 use rsd::kvcache::KvConfig;
 use rsd::sim::SimLm;
+use rsd::trace::export::chrome_trace;
+use rsd::trace::{TraceEvent, Tracer};
+use rsd::util::json::Json;
 use rsd::util::Rng;
 
 const VOCAB: usize = 32;
@@ -87,14 +91,17 @@ fn build_workload(seed: u64) -> Vec<Spec> {
 }
 
 /// Submit the workload, drain every receiver (watchdog per receive) and
-/// return per-request (stream, stats) plus the final metrics snapshot.
+/// return per-request (stream, stats) plus the final metrics snapshot
+/// and the flight-recorder journal (empty when `cfg.trace_events` is 0).
 fn run_workload(
     target: SimLm,
     draft: SimLm,
     cfg: EngineConfig,
     specs: &[Spec],
-) -> (Vec<(Vec<u32>, DecodeStats)>, Snapshot) {
-    let engine = Engine::new(target, draft, cfg);
+) -> (Vec<(Vec<u32>, DecodeStats)>, Snapshot, Vec<TraceEvent>) {
+    let trace = Tracer::new(cfg.trace_events);
+    let engine =
+        Engine::with_telemetry(target, draft, cfg, Arc::new(Metrics::default()), trace.clone());
     let (tx, handle) = spawn(engine);
     let mut receivers = Vec::new();
     for s in specs {
@@ -119,8 +126,8 @@ fn run_workload(
         loop {
             match rrx.recv_timeout(Duration::from_secs(180)) {
                 Ok(Event::Tokens(t)) => toks.extend(t),
-                Ok(Event::Done(stats)) => {
-                    results.push((toks, stats));
+                Ok(Event::Done(r)) => {
+                    results.push((toks, r.stats));
                     break;
                 }
                 Ok(Event::Error(e)) => panic!("request {id} failed: {e}"),
@@ -128,7 +135,7 @@ fn run_workload(
             }
         }
     }
-    (results, handle.join().unwrap().snapshot())
+    (results, handle.join().unwrap().snapshot(), trace.snapshot())
 }
 
 fn base_cfg() -> EngineConfig {
@@ -155,11 +162,16 @@ fn soak_chaos_is_clean_and_deterministic() {
 
     let kv = KvConfig { num_blocks: 24, block_size: 8, share: true };
     let (t, d) = SimLm::pair_paged(SIM_SEED, 0.8, VOCAB, kv);
-    let (chaos, chaos_snap) = run_workload(t, d, base_cfg(), &specs);
+    // the chaos run records into a flight-recorder ring; the reference
+    // run leaves tracing off, so the bit-identity assert below doubles
+    // as "tracing on vs off never changes a stream"
+    let chaos_cfg = EngineConfig { trace_events: 4096, ..base_cfg() };
+    let (chaos, chaos_snap, chaos_events) = run_workload(t, d, chaos_cfg, &specs);
 
     let (t, d) = SimLm::pair(SIM_SEED, 0.8, VOCAB);
     let ref_cfg = EngineConfig { fused: false, ..base_cfg() };
-    let (reference, _) = run_workload(t, d, ref_cfg, &specs);
+    let (reference, _, ref_events) = run_workload(t, d, ref_cfg, &specs);
+    assert!(ref_events.is_empty(), "tracing must stay off by default");
 
     // clean terminal states, all 200 of them
     assert_eq!(chaos_snap.completed, N_REQUESTS);
@@ -191,6 +203,16 @@ fn soak_chaos_is_clean_and_deterministic() {
     // the chaos run actually exercised the machinery under test
     assert!(chaos_snap.preemptions > 0, "undersized pool never preempted");
     assert_eq!(chaos_snap.kv_blocks_total, 24);
+
+    // the flight recorder saw the run: the ring holds the newest 4096
+    // events in strict sequence order, including preemptions
+    assert!(!chaos_events.is_empty(), "tracing was enabled but recorded nothing");
+    assert!(chaos_events.windows(2).all(|w| w[1].seq == w[0].seq + 1), "seq gap/tear");
+    // dump the journal as a Chrome trace so CI can archive the soak
+    // timeline next to the BENCH_*.json snapshots
+    let doc = Json::obj(vec![("trace", chrome_trace(&chaos_events))]);
+    let path = harness::snapshot_path("TRACE_soak.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write TRACE_soak.json");
 }
 
 /// Continuous batching is token-invisible: requests that join MID-ROUND

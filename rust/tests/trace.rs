@@ -1,0 +1,245 @@
+//! Flight-recorder integration tests: ring semantics under concurrency,
+//! zero cost when disabled, the Chrome exporter against a real engine
+//! run, and the stall watchdog's post-mortem dump.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::engine::{spawn, Engine, Event, Request};
+use rsd::sim::SimLm;
+use rsd::trace::export::chrome_trace;
+use rsd::trace::watchdog::{EngineStatus, Watchdog};
+use rsd::trace::{EventKind, Journal, Tracer, PHASE_VERIFY};
+use rsd::util::json::Json;
+
+/// Four writers hammer one ring; the snapshot must hold exactly the
+/// newest `capacity` events with gap-free sequence numbers, and every
+/// event must be internally consistent (no field-level tearing between
+/// two concurrent writers).
+#[test]
+fn concurrent_recorders_never_tear() {
+    const THREADS: u64 = 4;
+    const PER_THREAD: u32 = 1000;
+    const CAP: usize = 512;
+    let j = Arc::new(Journal::new(CAP));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let j = j.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..PER_THREAD {
+                // b is a checksum of (id, a): a torn slot cannot satisfy it
+                j.record(EventKind::Commit, t, i, (t as u32) ^ i.rotate_left(7));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(j.recorded(), THREADS * PER_THREAD as u64);
+    let snap = j.snapshot();
+    assert_eq!(snap.len(), CAP);
+    // gap-free, strictly increasing, ending at the last seq ever issued
+    assert!(snap.windows(2).all(|w| w[1].seq == w[0].seq + 1));
+    assert_eq!(snap.last().unwrap().seq, THREADS * PER_THREAD as u64 - 1);
+    for e in &snap {
+        assert_eq!(e.kind, EventKind::Commit);
+        assert!(e.id < THREADS && e.a < PER_THREAD);
+        assert_eq!(e.b, (e.id as u32) ^ e.a.rotate_left(7), "torn event: {e:?}");
+    }
+}
+
+/// A disabled tracer holds no journal at all — clones share nothing,
+/// records are no-ops, snapshots are empty — so threading it through
+/// the engine costs one branch per call site and zero memory.
+#[test]
+fn disabled_tracing_is_zero_cost() {
+    let t = Tracer::off();
+    assert!(!t.enabled() && t.journal().is_none());
+    let t2 = t.clone();
+    for i in 0..10_000 {
+        t2.record(EventKind::Commit, i, 0, 0);
+        t2.phase_advanced();
+    }
+    assert!(t2.snapshot().is_empty());
+    assert_eq!(t2.progress(), 0);
+    // the config spelling of "off"
+    assert!(!Tracer::new(0).enabled());
+    assert_eq!(EngineConfig::default().trace_events, 0);
+}
+
+/// Run 8 requests through a traced engine and validate the exported
+/// Chrome trace end to end: parseable JSON, balanced B/E slices, and a
+/// complete arrive -> admit -> commit -> done lifecycle per request.
+#[test]
+fn chrome_export_of_a_real_engine_run_is_valid() {
+    let (target, draft) = SimLm::pair(11, 0.8, 64);
+    let cfg = EngineConfig {
+        max_concurrency: 3,
+        max_queue: 64,
+        default_max_tokens: 10,
+        sampling: SamplingConfig::new(0.5, 1.0),
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed: 7,
+        fused: true,
+        trace_events: 4096,
+        ..EngineConfig::default()
+    };
+    let engine = Engine::new(target, draft, cfg);
+    let trace = engine.trace.clone();
+    assert!(trace.enabled(), "config trace_events must enable the journal");
+    let (tx, handle) = spawn(engine);
+    let mut receivers = Vec::new();
+    for id in 0..8u64 {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id,
+            prompt: vec![1 + id as u32, 2, 3],
+            max_new: 10,
+            decoder: None,
+            sampling: None,
+            priority: 0,
+            deadline_ms: None,
+            resp: rtx,
+        })
+        .unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+    for rrx in receivers {
+        while let Ok(ev) = rrx.recv() {
+            if matches!(ev, Event::Done(_) | Event::Error(_)) {
+                break;
+            }
+        }
+    }
+    handle.join().unwrap();
+
+    let events = trace.snapshot();
+    assert!(trace.progress() > 0, "phase boundaries must bump the heartbeat");
+    for id in 0..8u64 {
+        for kind in [EventKind::ReqArrive, EventKind::ReqAdmit, EventKind::ReqDone] {
+            assert!(
+                events.iter().any(|e| e.kind == kind && e.id == id),
+                "request {id}: missing {} event",
+                kind.name()
+            );
+        }
+        assert!(
+            events.iter().any(|e| e.kind == EventKind::Commit && e.id == id),
+            "request {id}: no commit boundary recorded"
+        );
+    }
+    assert!(events.iter().any(|e| e.kind == EventKind::RoundBegin));
+
+    // the exporter's output must survive a parse round-trip
+    let doc = chrome_trace(&events);
+    let parsed = Json::parse(&doc.to_string()).expect("chrome trace is valid JSON");
+    let tev = match parsed.get("traceEvents") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("traceEvents missing: {other:?}"),
+    };
+    assert!(tev.len() > events.len(), "metadata + one entry per event");
+    // B/E slices balance per (tid, name) — nesting is per thread lane
+    let mut depth: std::collections::HashMap<String, i64> = std::collections::HashMap::new();
+    for e in tev {
+        let ph = e.get("ph").and_then(Json::as_str).expect("every event has ph");
+        if ph != "B" && ph != "E" {
+            continue;
+        }
+        let tid = e.get("tid").and_then(Json::as_f64).unwrap_or(-1.0);
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("?");
+        let d = depth.entry(format!("{tid}:{name}")).or_insert(0);
+        *d += if ph == "B" { 1 } else { -1 };
+        assert!(*d >= 0, "E before B for {name} on tid {tid}");
+    }
+    assert!(depth.values().all(|&d| d == 0), "unbalanced slices: {depth:?}");
+}
+
+/// Freeze the heartbeat with work in flight: the watchdog must write a
+/// dump naming the stalled request and carrying its last phase event.
+#[test]
+fn watchdog_dumps_stalled_engine_state() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("rsd-watchdog-test-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let tracer = Tracer::new(256);
+    // a request mid-verify, then silence: the classic hang signature
+    tracer.record(EventKind::ReqAdmit, 7, 0, 1);
+    tracer.record(EventKind::RoundBegin, 3, 1, 0);
+    tracer.record(EventKind::PhaseBegin, 3, PHASE_VERIFY, 1);
+    tracer.phase_advanced();
+
+    let status = Arc::new(Mutex::new(EngineStatus {
+        rounds: 3,
+        active: vec![(7, 42)],
+        queued: 1,
+        parked: 0,
+        pool: None,
+    }));
+    let wd = Watchdog::spawn(
+        tracer.clone(),
+        status,
+        Duration::from_millis(40),
+        path.clone(),
+    )
+    .expect("enabled tracer + nonzero stall must spawn");
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !path.exists() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    wd.stop();
+    let dump = std::fs::read_to_string(&path).expect("watchdog never dumped");
+    let _ = std::fs::remove_file(&path);
+
+    let doc = Json::parse(&dump).expect("dump is valid JSON");
+    let wdj = doc.get("watchdog").expect("watchdog section");
+    assert!(wdj.usize_field("stalled_ms").unwrap() >= 40);
+    let st = wdj.get("status").expect("engine status in dump");
+    assert_eq!(st.usize_field("queued").unwrap(), 1);
+    let active = match st.get("active") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("active missing: {other:?}"),
+    };
+    assert!(
+        active.iter().any(|r| r.usize_field("request").ok() == Some(7)),
+        "stalled request 7 absent from dump"
+    );
+    // the journal in the dump ends at the stalled request's last phase
+    // event (the open verify slice), plus the watchdog's own marker
+    let trace = doc.get("trace").expect("trace section");
+    let tev = match trace.get("traceEvents") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("traceEvents missing: {other:?}"),
+    };
+    assert!(
+        tev.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("B")
+            && e.get("name").and_then(Json::as_str) == Some("verify")),
+        "last phase event (verify begin) missing from dump"
+    );
+    assert!(
+        tev.iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("watchdog")),
+        "watchdog marker missing"
+    );
+
+    // no re-dump for the same frozen heartbeat: spawning again with the
+    // file removed would dump again, but the original must not
+    assert!(!path.exists());
+}
+
+/// Ring wraparound through the public engine-facing handle: only the
+/// newest `capacity` events survive, oldest first.
+#[test]
+fn ring_wraparound_keeps_newest() {
+    let t = Tracer::new(16);
+    for i in 0..100u64 {
+        t.record(EventKind::QueueDepth, 0, i as u32, 0);
+    }
+    let snap = t.snapshot();
+    assert_eq!(snap.len(), 16);
+    assert_eq!(snap.first().unwrap().a, 84);
+    assert_eq!(snap.last().unwrap().a, 99);
+}
