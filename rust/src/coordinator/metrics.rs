@@ -113,6 +113,18 @@ pub struct Snapshot {
     pub tokens_out: u64,
     pub decode_rounds: u64,
     pub draft_calls: u64,
+    /// End-to-end latency distribution with its exact sample count
+    /// (only completions that recorded a latency are counted). The flat
+    /// `latency_*` fields below mirror it.
+    pub latency: HistSummary,
+    /// Time-to-first-token distribution; its count is the number of
+    /// requests that actually streamed a token, which can trail
+    /// `completed`.
+    pub ttft: HistSummary,
+    /// Queue-wait (arrival -> admission) distribution; its count
+    /// includes resume-after-preemption re-admissions, so it can exceed
+    /// `admitted`.
+    pub queue_wait: HistSummary,
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_p99: f64,
@@ -331,6 +343,9 @@ impl Metrics {
             tokens_out: self.tokens_out.load(Ordering::Relaxed),
             decode_rounds: self.decode_rounds.load(Ordering::Relaxed),
             draft_calls: self.draft_calls.load(Ordering::Relaxed),
+            latency: lat,
+            ttft,
+            queue_wait: qwait,
             latency_p50: lat.p50,
             latency_p95: lat.p95,
             latency_p99: lat.p99,
@@ -401,6 +416,9 @@ impl Snapshot {
             ("tokens_out", Json::from(self.tokens_out as usize)),
             ("decode_rounds", Json::from(self.decode_rounds as usize)),
             ("draft_calls", Json::from(self.draft_calls as usize)),
+            ("latency", hist_json(&self.latency)),
+            ("ttft", hist_json(&self.ttft)),
+            ("queue_wait", hist_json(&self.queue_wait)),
             ("latency_p50", Json::Num(self.latency_p50)),
             ("latency_p95", Json::Num(self.latency_p95)),
             ("latency_p99", Json::Num(self.latency_p99)),
@@ -523,6 +541,11 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.usize_field("completed").unwrap(), 2);
         assert!(parsed.get("latency_p50").unwrap().as_f64().unwrap() > 0.0);
+        // the nested summary carries the exact sample count, not the
+        // `completed` counter (one latency was recorded, two completed)
+        let lat = parsed.get("latency").unwrap();
+        assert_eq!(lat.usize_field("count").unwrap(), 1);
+        assert!((lat.get("mean").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
         let verify = parsed.get("phase_verify").unwrap();
         assert_eq!(verify.usize_field("count").unwrap(), 1);
         assert_eq!(parsed.usize_field("fused_calls").unwrap(), 1);

@@ -162,10 +162,35 @@ fn main() -> Result<()> {
                     let _ = status_tx.send(eng.status_handle());
                     Ok(eng)
                 });
-                let _watchdog = status_rx
-                    .recv_timeout(Duration::from_secs(60))
-                    .ok()
-                    .and_then(spawn_watchdog);
+                // arm the watchdog from a helper thread: the listener
+                // must bind now, not after the model finishes loading,
+                // and a build that never reports a status handle is
+                // logged instead of silently dropping the watchdog
+                if trace.enabled() && watchdog_ms > 0 {
+                    let wd_trace = trace.clone();
+                    let wd_path = watchdog_path.clone();
+                    std::thread::Builder::new()
+                        .name("rsd-watchdog-arm".into())
+                        .spawn(move || match status_rx.recv() {
+                            Ok(status) => {
+                                if let Some(w) = Watchdog::spawn(
+                                    wd_trace,
+                                    status,
+                                    Duration::from_millis(watchdog_ms),
+                                    wd_path.into(),
+                                ) {
+                                    // serve() blocks for the process
+                                    // lifetime; dropping the handle here
+                                    // would stop the watchdog at once
+                                    std::mem::forget(w);
+                                }
+                            }
+                            Err(_) => eprintln!(
+                                "rsd: engine exited before reporting status; \
+                                 stall watchdog not armed"
+                            ),
+                        })?;
+                }
                 server::serve(&addr, tx, ctx)?;
             }
         }

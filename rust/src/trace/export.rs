@@ -49,11 +49,26 @@ pub fn chrome_trace(events: &[TraceEvent]) -> Json {
         ("tid", Json::from(ENGINE_TID as usize)),
         ("args", Json::obj(vec![("name", Json::from("engine"))])),
     ]));
+    // Open-slice depth per phase code (unknown codes share the last
+    // slot, matching `phase_name`). Once the ring has wrapped, a
+    // PhaseEnd can survive its matching PhaseBegin; emitting that "E"
+    // unpaired makes chrome://tracing/Perfetto misnest every later
+    // slice on the lane, so orphaned ends are dropped.
+    let mut open_phases = [0u64; 5];
     for e in events {
         let req_lane = e.id + 1;
         match e.kind {
             EventKind::PhaseBegin | EventKind::PhaseEnd => {
-                let ph = if e.kind == EventKind::PhaseBegin { "B" } else { "E" };
+                let slot = ((e.a & 0xff) as usize).min(open_phases.len() - 1);
+                let ph = if e.kind == EventKind::PhaseBegin {
+                    open_phases[slot] += 1;
+                    "B"
+                } else if open_phases[slot] > 0 {
+                    open_phases[slot] -= 1;
+                    "E"
+                } else {
+                    continue; // begin was overwritten by wraparound
+                };
                 let mut args = vec![
                     ("round", Json::from(e.id as usize)),
                     ("groups", Json::from(e.b as usize)),
@@ -218,31 +233,13 @@ pub fn prometheus(s: &Snapshot) -> String {
     prom_line(&mut o, "rsd_kv_blocks_total", "gauge", s.kv_blocks_total as f64);
     prom_line(&mut o, "rsd_kv_hit_rate", "gauge", s.kv_hit_rate);
     prom_line(&mut o, "rsd_fused_mean_batch", "gauge", s.fused_mean_batch);
-    // latency/ttft/queue-wait quantiles from the bounded histograms
-    let lat = crate::trace::hist::HistSummary {
-        count: s.completed,
-        mean: s.latency_mean,
-        p50: s.latency_p50,
-        p95: s.latency_p95,
-        p99: s.latency_p99,
-    };
-    prom_summary(&mut o, "rsd_request_latency_seconds", &lat);
-    let ttft = crate::trace::hist::HistSummary {
-        count: s.completed,
-        mean: s.ttft_mean,
-        p50: s.ttft_p50,
-        p95: s.ttft_p95,
-        p99: s.ttft_p99,
-    };
-    prom_summary(&mut o, "rsd_ttft_seconds", &ttft);
-    let qw = crate::trace::hist::HistSummary {
-        count: s.admitted,
-        mean: s.queue_wait_mean,
-        p50: s.queue_wait_p50,
-        p95: s.queue_wait_p95,
-        p99: s.queue_wait_p99,
-    };
-    prom_summary(&mut o, "rsd_queue_wait_seconds", &qw);
+    // latency/ttft/queue-wait summaries carry their own exact sample
+    // counts: TTFT is only recorded for requests that streamed a token,
+    // and queue-wait counts resume-after-preemption re-admissions, so
+    // neither `completed` nor `admitted` would make `_sum`/`_count` add up
+    prom_summary(&mut o, "rsd_request_latency_seconds", &s.latency);
+    prom_summary(&mut o, "rsd_ttft_seconds", &s.ttft);
+    prom_summary(&mut o, "rsd_queue_wait_seconds", &s.queue_wait);
     prom_summary(&mut o, "rsd_round_seconds", &s.round_time);
     prom_summary(&mut o, "rsd_phase_sched_seconds", &s.phase_sched);
     prom_summary(&mut o, "rsd_phase_draft_seconds", &s.phase_draft);
@@ -288,6 +285,35 @@ mod tests {
             .find(|e| e.str_field("name").ok() == Some("done"))
             .unwrap();
         assert_eq!(done.usize_field("tid").unwrap(), 4);
+    }
+
+    #[test]
+    fn wrapped_ring_drops_orphaned_phase_ends() {
+        let t = Tracer::new(4);
+        t.record(EventKind::PhaseBegin, 0, PHASE_VERIFY, 1);
+        for i in 0..4 {
+            t.record(EventKind::Commit, i, 1, 0); // overwrites the begin
+        }
+        t.record(EventKind::PhaseEnd, 0, PHASE_VERIFY, 1);
+        t.record(EventKind::PhaseBegin, 1, PHASE_DRAFT, 1);
+        t.record(EventKind::PhaseEnd, 1, PHASE_DRAFT, 1);
+        let snap = t.snapshot();
+        // the verify end survived its begin; the draft pair is intact
+        assert!(snap.iter().any(|e| e.kind == EventKind::PhaseEnd && e.a == PHASE_VERIFY));
+        let doc = chrome_trace(&snap);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let count = |ph: &str, name: &str| {
+            evs.iter()
+                .filter(|e| {
+                    e.str_field("ph").unwrap() == ph && e.str_field("name").unwrap() == name
+                })
+                .count()
+        };
+        // the orphaned verify "E" is dropped, never emitted unmatched
+        assert_eq!(count("E", "verify"), 0);
+        assert_eq!(count("B", "draft"), 1);
+        assert_eq!(count("E", "draft"), 1);
     }
 
     #[test]
