@@ -1,0 +1,75 @@
+#!/usr/bin/env bash
+# PGO lane for the sampling hot path: build plain, train an instrumented
+# build on the hotpath + fused benches, rebuild with the merged profile,
+# and record BOTH snapshots —
+#
+#   BENCH_hotpath.json      plain  -C opt-level=3 numbers (the baseline)
+#   BENCH_hotpath_pgo.json  -Cprofile-use numbers
+#
+# so the PGO delta on the kernel layer is a recorded, diffable artifact
+# (CI uploads both; python/bench_diff.py prints the summary).
+#
+# Usage:
+#   bench/run_pgo.sh [--quick]
+#
+# Environment:
+#   PGO_DIR    profile directory (default: <repo>/target/pgo-profiles)
+#   PGO_REUSE  =1 to skip training when $PGO_DIR/merged.profdata exists
+#              (CI restores it from cache to keep the job fast)
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
+
+QUICK=()
+for arg in "$@"; do
+    case "$arg" in
+        --quick) QUICK=(--quick) ;;
+        *) echo "usage: bench/run_pgo.sh [--quick]" >&2; exit 2 ;;
+    esac
+done
+
+PGO_DIR="${PGO_DIR:-$ROOT/target/pgo-profiles}"
+mkdir -p "$PGO_DIR"
+
+echo "==> [1/4] plain build + hotpath snapshot (BENCH_hotpath.json)"
+cargo bench --bench hotpath -- --json ${QUICK[@]+"${QUICK[@]}"}
+mv "$ROOT/BENCH_hotpath.json" "$ROOT/BENCH_hotpath.plain.json"
+
+if [[ "${PGO_REUSE:-0}" == "1" && -f "$PGO_DIR/merged.profdata" ]]; then
+    echo "==> [2/4] PGO_REUSE=1: reusing $PGO_DIR/merged.profdata"
+else
+    echo "==> [2/4] instrumented build + training runs"
+    rm -f "$PGO_DIR"/*.profraw
+    # training runs always use --quick (coverage, not timing) and must
+    # not fail the lane: instrumentation skews the in-bench speedup
+    # gates, which only count on the real builds
+    RUSTFLAGS="-Cprofile-generate=$PGO_DIR" \
+        cargo bench --bench hotpath -- --quick || true
+    RUSTFLAGS="-Cprofile-generate=$PGO_DIR" \
+        cargo bench --bench fused -- --quick || true
+
+    PROFDATA="$(command -v llvm-profdata || true)"
+    if [[ -z "$PROFDATA" ]]; then
+        PROFDATA="$(find "$(rustc --print sysroot)" -name llvm-profdata -type f \
+            2>/dev/null | head -n1)"
+    fi
+    if [[ -z "$PROFDATA" ]]; then
+        echo "error: llvm-profdata not found — rustup component add llvm-tools" >&2
+        mv "$ROOT/BENCH_hotpath.plain.json" "$ROOT/BENCH_hotpath.json"
+        exit 1
+    fi
+    "$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"/*.profraw
+fi
+
+echo "==> [3/4] profile-guided rebuild + hotpath snapshot (BENCH_hotpath_pgo.json)"
+RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata" \
+    cargo bench --bench hotpath -- --json ${QUICK[@]+"${QUICK[@]}"}
+mv "$ROOT/BENCH_hotpath.json" "$ROOT/BENCH_hotpath_pgo.json"
+mv "$ROOT/BENCH_hotpath.plain.json" "$ROOT/BENCH_hotpath.json"
+
+echo "==> [4/4] plain vs PGO summary (threshold 5%, informational)"
+python3 "$ROOT/python/bench_diff.py" \
+    "$ROOT/BENCH_hotpath.json" "$ROOT/BENCH_hotpath_pgo.json" --threshold 0.05 || true
+
+echo "done: BENCH_hotpath.json (plain) + BENCH_hotpath_pgo.json (PGO)"

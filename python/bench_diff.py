@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Warn-only trend diff between two rsd-bench-v1 snapshots.
+
+Joins entries on (section, name) and prints ns_per_op changes, flagging
+regressions beyond a threshold (default 10%). Also diffs the top-level
+per-kernel nanoseconds map (`kernels.*.ns_per_op`) when both snapshots
+carry one.
+
+Always exits 0: this is a trend signal for humans reading CI logs, not a
+gate — the hard perf gates (speedup floors, 0-alloc) live inside the
+bench binary itself. Stdlib only.
+
+Usage:
+    python3 bench_diff.py OLD.json NEW.json [--threshold 0.10]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path, encoding="utf-8") as fh:
+        snap = json.load(fh)
+    if snap.get("schema") not in (None, "rsd-bench-v1"):
+        print(f"note: {path} has unexpected schema {snap.get('schema')!r}")
+    return snap
+
+
+def entry_map(snap: dict) -> dict[tuple[str, str], float]:
+    out: dict[tuple[str, str], float] = {}
+    for e in snap.get("entries", []):
+        ns = e.get("ns_per_op")
+        if isinstance(ns, (int, float)) and ns > 0:
+            out[(e.get("section", ""), e.get("name", ""))] = float(ns)
+    return out
+
+
+def kernel_map(snap: dict) -> dict[tuple[str, str], float]:
+    out: dict[tuple[str, str], float] = {}
+    for name, rec in (snap.get("kernels") or {}).items():
+        ns = rec.get("ns_per_op") if isinstance(rec, dict) else None
+        if isinstance(ns, (int, float)) and ns > 0:
+            out[("kernels", name)] = float(ns)
+    return out
+
+
+def diff(old: dict[tuple[str, str], float], new: dict[tuple[str, str], float],
+         threshold: float) -> int:
+    regressions = 0
+    for key in sorted(set(old) & set(new)):
+        section, name = key
+        o, n = old[key], new[key]
+        ratio = n / o - 1.0
+        if ratio > threshold:
+            regressions += 1
+            flag = "  <-- REGRESSION"
+        elif ratio < -threshold:
+            flag = "  (improved)"
+        else:
+            continue
+        print(f"  [{section}] {name}: {o:.1f} -> {n:.1f} ns/op ({ratio:+.1%}){flag}")
+    only_new = sorted(set(new) - set(old))
+    if only_new:
+        print(f"  {len(only_new)} entr{'y' if len(only_new) == 1 else 'ies'} "
+              "new in this run (no previous baseline)")
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative ns_per_op increase flagged as a regression")
+    args = ap.parse_args()
+    try:
+        old_snap, new_snap = load(args.old), load(args.new)
+    except (OSError, json.JSONDecodeError) as exc:
+        # missing/corrupt previous snapshot is normal on first runs
+        print(f"bench_diff: skipping ({exc})")
+        return 0
+
+    print(f"bench trend: {args.old} -> {args.new} "
+          f"(threshold {args.threshold:.0%}, warn-only)")
+    total = diff(entry_map(old_snap), entry_map(new_snap), args.threshold)
+    total += diff(kernel_map(old_snap), kernel_map(new_snap), args.threshold)
+    if total:
+        print(f"bench_diff: {total} entr{'y' if total == 1 else 'ies'} "
+              f"regressed >{args.threshold:.0%} (warn-only, not failing the build)")
+    else:
+        print("bench_diff: no regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

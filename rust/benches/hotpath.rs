@@ -10,24 +10,31 @@
 //!   substrate for `sd:3`, `rsd-c:2-2-2` and `rsd-s:6x5` — measured with
 //!   a counting global allocator, asserted (the process exits non-zero
 //!   on regression, which is what CI gates on);
-//! * **≥2x faster selection/processing kernels at vocab = 8192** than
-//!   the sort-based, per-call-allocating baseline the pre-optimization
-//!   code ran (kept bit-identical in `rsd::sampling::reference`), also
-//!   asserted.
+//! * **≥2x faster selection/processing kernels at vocab = 8192 and at
+//!   vocab = 32000 (Llama-2 scale)** than the sort-based, per-call-
+//!   allocating baseline the pre-optimization code ran (kept
+//!   bit-identical in `rsd::sampling::reference`), also asserted.
+//!
+//! The `--json` snapshot additionally records a top-level `kernels`
+//! object: per-kernel nanoseconds (whole-slice and per-element) for the
+//! vectorizable math kernels in `rsd::sampling::kernels`, next to their
+//! libm baselines — the kernel-level trend CI diffs run to run.
 //!
 //!     cargo bench --bench hotpath             # human-readable
 //!     cargo bench --bench hotpath -- --json   # + BENCH_hotpath.json (repo root)
 //!     cargo bench --bench hotpath -- --quick  # CI-speed batches
+//!     bench/run_pgo.sh                        # plain + PGO snapshot pair
 
 use rsd::bench::alloc::{self, CountingAlloc};
 use rsd::bench::harness::{bench, section, set_quick, snapshot_entry, write_snapshot, BenchResult};
+use rsd::bench::workload::synth_logits;
 use rsd::config::SamplingConfig;
 use rsd::decode::rrs::{Rrs, VerifyRule};
 use rsd::decode::spec::{SpecStepper, StepOutcome};
 use rsd::decode::{build_parts, generate};
 use rsd::llm::{EvalNode, Llm};
 use rsd::sampling::{
-    gumbel_top_k, gumbel_top_k_into, process_logits, process_logits_into, reference,
+    gumbel_top_k, gumbel_top_k_into, kernels, process_logits, process_logits_into, reference,
     truncated_gumbel_into, SelectScratch, VerifyScratch,
 };
 use rsd::sim::SimLm;
@@ -37,11 +44,6 @@ use rsd::util::Rng;
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
-
-/// Deterministic pseudo-logits with a realistic spread.
-fn synth_logits(vocab: usize) -> Vec<f32> {
-    (0..vocab).map(|i| ((i * 37) % 97) as f32 / 9.0 - ((i * 13) % 29) as f32 / 7.0).collect()
-}
 
 /// Measure steady-state heap allocations per decode round: warm a
 /// stepper until a full round runs allocation-free (pool high-water
@@ -230,6 +232,129 @@ fn main() -> anyhow::Result<()> {
     let nucleus_speedup = nuc_base.mean.as_secs_f64() / nuc.mean.as_secs_f64();
     println!("nucleus partial vs full sort: {nucleus_speedup:.2}x");
 
+    // ---- vectorizable math kernels vs their libm equivalents ------------
+    // the poly kernels win by being branch-light slice maps the compiler
+    // can auto-vectorize; libm's scalar calls are the pre-PR cost model
+    section("fastmath kernels: poly vs libm (n = 8192)");
+    let xs: Vec<f64> = big.iter().map(|&x| x as f64 * 0.25 - 4.0).collect();
+    let mut ybuf = vec![0.0f64; xs.len()];
+    let exp_poly = rec(
+        "kernels-8192",
+        bench("exp/poly", || {
+            for (y, &x) in ybuf.iter_mut().zip(&xs) {
+                *y = kernels::exp(x);
+            }
+            std::hint::black_box(&ybuf);
+        }),
+        &mut entries,
+    );
+    let exp_libm = rec(
+        "kernels-8192",
+        bench("exp/libm (baseline)", || {
+            for (y, &x) in ybuf.iter_mut().zip(&xs) {
+                *y = x.exp();
+            }
+            std::hint::black_box(&ybuf);
+        }),
+        &mut entries,
+    );
+    println!(
+        "exp poly vs libm: {:.2}x",
+        exp_libm.mean.as_secs_f64() / exp_poly.mean.as_secs_f64()
+    );
+    let pos: Vec<f64> = big.iter().map(|&x| (x as f64).abs() + 1e-3).collect();
+    let ln_poly = rec(
+        "kernels-8192",
+        bench("ln/poly", || {
+            for (y, &x) in ybuf.iter_mut().zip(&pos) {
+                *y = kernels::ln(x);
+            }
+            std::hint::black_box(&ybuf);
+        }),
+        &mut entries,
+    );
+    let ln_libm = rec(
+        "kernels-8192",
+        bench("ln/libm (baseline)", || {
+            for (y, &x) in ybuf.iter_mut().zip(&pos) {
+                *y = x.ln();
+            }
+            std::hint::black_box(&ybuf);
+        }),
+        &mut entries,
+    );
+    println!("ln poly vs libm: {:.2}x", ln_libm.mean.as_secs_f64() / ln_poly.mean.as_secs_f64());
+    let us: Vec<f64> = {
+        let mut r2 = Rng::seed_from_u64(11);
+        (0..8192).map(|_| r2.gen_f64_open()).collect()
+    };
+    let gum_poly = rec(
+        "kernels-8192",
+        bench("gumbel_map/poly", || {
+            ybuf.copy_from_slice(&us);
+            kernels::gumbel_map_in_place(&mut ybuf);
+            std::hint::black_box(&ybuf);
+        }),
+        &mut entries,
+    );
+    let gum_libm = rec(
+        "kernels-8192",
+        bench("gumbel_map/libm (baseline)", || {
+            for (y, &u) in ybuf.iter_mut().zip(&us) {
+                *y = -(-(u.ln())).ln();
+            }
+            std::hint::black_box(&ybuf);
+        }),
+        &mut entries,
+    );
+    println!(
+        "gumbel_map poly vs libm: {:.2}x",
+        gum_libm.mean.as_secs_f64() / gum_poly.mean.as_secs_f64()
+    );
+
+    // ---- the same selection contest at Llama-2 vocab scale --------------
+    section("selection kernels: partial vs sort baseline (vocab = 32000)");
+    let llama = synth_logits(32000);
+    let llama_lp = process_logits(&llama, 0.7, 1.0);
+    let heap32 = rec(
+        "selection-32000",
+        bench("gumbel_top_k/heap k=8", || {
+            gumbel_top_k_into(&llama_lp, 8, &mut rng, &mut topk);
+        }),
+        &mut entries,
+    );
+    let sorted32 = rec(
+        "selection-32000",
+        bench("gumbel_top_k/full-sort k=8 (baseline)", || {
+            let _ = reference::gumbel_top_k(&llama_lp, 8, &mut rng);
+        }),
+        &mut entries,
+    );
+    let topk_speedup_32000 = sorted32.mean.as_secs_f64() / heap32.mean.as_secs_f64();
+    println!("gumbel_top_k heap vs sort (vocab 32000): {topk_speedup_32000:.2}x");
+
+    let nuc32 = rec(
+        "selection-32000",
+        bench("process_logits/partial top_p=0.95", || {
+            process_logits_into(&llama, 1.0, 0.95, &mut sel, &mut lp_buf);
+        }),
+        &mut entries,
+    );
+    let nuc32_base = rec(
+        "selection-32000",
+        bench("process_logits/full-sort top_p=0.95 (baseline)", || {
+            let inv_t = 1.0f64;
+            let mut v: Vec<f64> = llama.iter().map(|&x| x as f64 * inv_t).collect();
+            rsd::sampling::log_normalize(&mut v);
+            reference::nucleus_filter(&mut v, 0.95);
+            rsd::sampling::log_normalize(&mut v);
+            std::hint::black_box(&v);
+        }),
+        &mut entries,
+    );
+    let nucleus_speedup_32000 = nuc32_base.mean.as_secs_f64() / nuc32.mean.as_secs_f64();
+    println!("nucleus partial vs full sort (vocab 32000): {nucleus_speedup_32000:.2}x");
+
     // per-round kernel chain at vocab 8192, shaped like one rsd-c:2-2-2
     // round (7 parents x Gumbel-Top-2 + 14 node distributions + one
     // 3-level verification walk): the pre-PR chain allocated per node
@@ -328,15 +453,46 @@ fn main() -> anyhow::Result<()> {
     // write the snapshot BEFORE the gates below: a regressing run must
     // still ship its diagnostic JSON (CI uploads it with `if: always()`)
     if json_out {
-        let extra = vec![(
-            "asserts",
+        // per-kernel nanoseconds (whole slice + per element) — the
+        // kernel-level trend the CI diff step compares run to run
+        let kern = |r: &BenchResult, n: usize| {
             Json::obj(vec![
-                ("steady_state_allocs_per_round", Json::Num(max_allocs_per_round)),
-                ("round_kernel_speedup_vs_baseline", Json::Num(round_speedup)),
-                ("gumbel_top_k_speedup", Json::Num(topk_speedup)),
-                ("nucleus_speedup", Json::Num(nucleus_speedup)),
-            ]),
-        )];
+                ("ns_per_op", Json::Num(r.mean.as_secs_f64() * 1e9)),
+                ("ns_per_element", Json::Num(r.mean.as_secs_f64() * 1e9 / n as f64)),
+            ])
+        };
+        let extra = vec![
+            (
+                "kernels",
+                Json::obj(vec![
+                    ("exp_poly_8192", kern(&exp_poly, 8192)),
+                    ("exp_libm_8192", kern(&exp_libm, 8192)),
+                    ("ln_poly_8192", kern(&ln_poly, 8192)),
+                    ("ln_libm_8192", kern(&ln_libm, 8192)),
+                    ("gumbel_map_poly_8192", kern(&gum_poly, 8192)),
+                    ("gumbel_map_libm_8192", kern(&gum_libm, 8192)),
+                    ("gumbel_top_k_heap_8192", kern(&heap, 8192)),
+                    ("gumbel_top_k_sort_8192", kern(&sorted, 8192)),
+                    ("nucleus_partial_8192", kern(&nuc, 8192)),
+                    ("nucleus_sort_8192", kern(&nuc_base, 8192)),
+                    ("gumbel_top_k_heap_32000", kern(&heap32, 32000)),
+                    ("gumbel_top_k_sort_32000", kern(&sorted32, 32000)),
+                    ("nucleus_partial_32000", kern(&nuc32, 32000)),
+                    ("nucleus_sort_32000", kern(&nuc32_base, 32000)),
+                ]),
+            ),
+            (
+                "asserts",
+                Json::obj(vec![
+                    ("steady_state_allocs_per_round", Json::Num(max_allocs_per_round)),
+                    ("round_kernel_speedup_vs_baseline", Json::Num(round_speedup)),
+                    ("gumbel_top_k_speedup", Json::Num(topk_speedup)),
+                    ("nucleus_speedup", Json::Num(nucleus_speedup)),
+                    ("gumbel_top_k_speedup_32000", Json::Num(topk_speedup_32000)),
+                    ("nucleus_speedup_32000", Json::Num(nucleus_speedup_32000)),
+                ]),
+            ),
+        ];
         let path = write_snapshot("BENCH_hotpath.json", entries, extra)?;
         println!("\nwrote {}", path.display());
     }
@@ -353,6 +509,12 @@ fn main() -> anyhow::Result<()> {
          (got {round_speedup:.2}x)"
     );
     println!("≥2x over the pre-PR kernel baseline at vocab 8192 ✓");
+    assert!(
+        topk_speedup_32000 >= 2.0,
+        "gumbel_top_k must be ≥2x the full-sort baseline at vocab 32000 \
+         (got {topk_speedup_32000:.2}x)"
+    );
+    println!("≥2x over the full-sort top-k baseline at vocab 32000 ✓");
 
     // ---- the real bottleneck: one PJRT step call ------------------------
     if std::path::Path::new("artifacts/manifest.json").exists() {

@@ -29,6 +29,13 @@ pub fn corpus_prompts(
     Ok(out)
 }
 
+/// Deterministic pseudo-logits with a realistic spread: the shared
+/// synthetic vocab-row workload for the kernel benches (one copy here so
+/// every bench binary measures the same distribution shape).
+pub fn synth_logits(vocab: usize) -> Vec<f32> {
+    (0..vocab).map(|i| ((i * 37) % 97) as f32 / 9.0 - ((i * 13) % 29) as f32 / 7.0).collect()
+}
+
 /// Seeded random prompts over a vocab (sim substrate workloads).
 pub fn random_prompts(n: usize, len: usize, vocab: usize, seed: u64) -> Vec<Vec<u32>> {
     let mut rng = Rng::seed_from_u64(seed);

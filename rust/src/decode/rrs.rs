@@ -18,7 +18,7 @@
 //! achieves the highest acceptance rate for without-replacement siblings
 //! (Theorem 3.1, tested statistically in rust/tests/props.rs).
 
-use crate::sampling::{residual_in_place, sample_categorical, LogProbs, VerifyScratch};
+use crate::sampling::{kernels, residual_in_place, sample_categorical, LogProbs, VerifyScratch};
 use crate::util::Rng;
 
 /// Outcome of verifying one sibling set.
@@ -93,8 +93,10 @@ impl VerifyRule for Rrs {
             }
             // p^{(k+1)} = p^{(k)} conditioned on not drawing x (sampling
             // without replacement): zero the tried token, renormalize.
+            // The mass fold is chunked (kernels ULP contract); the
+            // division pass is elementwise and vectorizes as-is.
             p[xi] = 0.0;
-            let z: f64 = p.iter().sum();
+            let z = kernels::sum(p);
             if z <= 0.0 {
                 break;
             }

@@ -16,7 +16,7 @@
 //! partial-selection kernels of [`crate::sampling`].
 
 use crate::sampling::{
-    bounded_heap_offer, gumbel, gumbel_max, gumbel_top_k_into, truncated_gumbel_one, LogProbs,
+    bounded_heap_offer, gumbel_max, gumbel_top_k_into, kernels, truncated_gumbel_one, LogProbs,
     NEG_INF,
 };
 use crate::util::Rng;
@@ -235,14 +235,31 @@ impl StochasticBeam {
     ) {
         let mut phi_tilde = std::mem::take(&mut self.phi_tilde);
         phi_tilde.clear();
-        phi_tilde.extend(lp.0.iter().map(|&l| {
-            if l == NEG_INF {
-                NEG_INF
-            } else {
-                phi_p + l + gumbel(rng)
+        // batched Gumbel perturbation: stage the serial uniform draws
+        // (one per unfiltered token, ascending index — the RNG-order
+        // contract), then run the double-log transform as one
+        // vectorizable slice map. Bit-identical to the scalar
+        // draw-per-token form, which shares the same transform.
+        kernels::with_uniform_scratch(|us| {
+            us.clear();
+            for &l in &lp.0 {
+                if l != NEG_INF {
+                    us.push(rng.gen_f64_open());
+                }
             }
-        }));
-        let z = phi_tilde.iter().cloned().fold(NEG_INF, f64::max);
+            kernels::gumbel_map_in_place(us);
+            let mut j = 0;
+            phi_tilde.extend(lp.0.iter().map(|&l| {
+                if l == NEG_INF {
+                    NEG_INF
+                } else {
+                    let g = us[j];
+                    j += 1;
+                    phi_p + l + g
+                }
+            }));
+        });
+        let z = kernels::max(&phi_tilde);
         let parent_enc = parent.map_or(-1, |p| p as i64);
         for (x, &g) in phi_tilde.iter().enumerate() {
             let f = if lp.0[x] == NEG_INF { NEG_INF } else { phi_p + lp.0[x] };

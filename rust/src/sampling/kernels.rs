@@ -1,0 +1,355 @@
+//! Vectorizable math kernels for the sampling hot path.
+//!
+//! Stable-Rust SIMD strategy (no nightly `std::simd`): every kernel is
+//! either
+//!
+//! * an **elementwise map** ([`exp`], [`ln`], [`gumbel_from_uniform`],
+//!   [`cos_2pi`]) written as straight-line, branch-light code that LLVM
+//!   can inline and auto-vectorize — and that stays *bit-identical per
+//!   element* whether or not the surrounding loop is vectorized, because
+//!   IEEE-754 ops round the same in scalar and packed form and rustc
+//!   never contracts `a * b + c` into an FMA; or
+//! * a **chunked reduction** ([`max`], [`sum`], [`sum_exp_shifted`],
+//!   [`sum_relu_diff`]) over [`LANES`] independent accumulators with a
+//!   scalar tail. The accumulation order is fixed by the code (not by the
+//!   target ISA), so results are deterministic across machines — but for
+//!   float addition they differ from a sequential left fold by
+//!   reassociation. That is the documented ULP contract (see
+//!   `rust/README.md` §Kernel numerics): sums agree with the serial
+//!   reference to ~`n/LANES` ULPs, maxima agree exactly (`f64::max` is
+//!   associative over non-NaN values and NaN-ignoring in both forms).
+//!
+//! # Accuracy of the polynomial kernels
+//!
+//! [`exp`] and [`ln`] replace the libm calls that dominated the Gumbel
+//! perturbation and softmax loops (two `ln` per vocab entry per draft
+//! level for Gumbel-Top-k alone). Both were validated against a
+//! bit-exact model over the full log-probability domain:
+//!
+//! * `exp`: Cody–Waite range reduction with the split-constant pair
+//!   (`LN2_HI`, `LN2_LO`) and a degree-14 Taylor polynomial; observed
+//!   worst-case relative error ~1 ULP on `[-700, 709.3]`. Contract
+//!   deviations from libm, both irrelevant in log-prob space and covered
+//!   by `tests/kernels.rs`: inputs below `-708` flush to `+0.0` (libm
+//!   returns subnormals down to `-745`), and overflow to `+inf` begins
+//!   at `~709.44` (libm at `~709.78`). Specials match libm: `exp(-inf)
+//!   = 0` (masked tokens), `exp(NaN) = NaN`, `exp(+inf) = +inf`,
+//!   `exp(0) = 1` exactly.
+//! * `ln`: exponent/mantissa bit decomposition (subnormals pre-scaled by
+//!   2^54), mantissa folded into `[1/sqrt(2), sqrt(2))`, atanh series
+//!   `ln(m) = 2s(1 + s^2/3 + s^4/5 + ...)` with exact rational
+//!   coefficients through `s^18/21`; observed worst-case relative error
+//!   ~1.7 ULP including subnormals and the cancellation region near 1.
+//!   Specials match libm: `ln(0) = -inf` (the `u = 1` Gumbel draw),
+//!   `ln(x<0) = NaN`, `ln(+inf) = +inf`, `ln(NaN) = NaN`, `ln(1) = 0`
+//!   exactly.
+//!
+//! The Gumbel transform `-ln(-ln(u))` is therefore a *different*
+//! function from the libm-based one it replaced — perturbed values (and
+//! hence sampled token streams) re-randomize, exactly like a seed bump.
+//! What is preserved, and property-tested in `tests/selection.rs`, is
+//! the contract that matters: the optimized selection kernels and
+//! [`crate::sampling::reference`] share this one transform, so kept
+//! sets, output order, perturbed values and RNG stream positions remain
+//! byte-identical between them, and the 50k-draw statistical gates in
+//! `tests/conformance.rs` pin the distributions themselves.
+
+use std::cell::RefCell;
+
+/// Accumulator count for the chunked reductions. Eight f64 lanes cover
+/// one AVX-512 register or two AVX2 registers; on plain SSE2 the same
+/// code compiles to four 2-wide partial sums. The value is part of the
+/// numeric contract (it fixes the reduction tree), so it must not vary
+/// by target.
+pub const LANES: usize = 8;
+
+/// High bits of ln(2) (fdlibm split: top 32 mantissa bits, exact when
+/// multiplied by any |n| <= 2^20).
+const LN2_HI: f64 = f64::from_bits(0x3FE6_2E42_FEE0_0000);
+/// Low correction: ln(2) - LN2_HI to full precision (beyond f64's own
+/// rounding of ln(2)), the fdlibm companion constant.
+const LN2_LO: f64 = f64::from_bits(0x3DEA_39EF_3579_3C76);
+/// 2^54, exact; rescales subnormals into the normal range for [`ln`].
+const TWO54: f64 = 18014398509481984.0;
+
+/// Vectorizable `e^x`: Cody–Waite reduction + degree-14 Taylor + exponent
+/// bit-assembly. See the module docs for the accuracy/overflow contract.
+#[inline(always)]
+pub fn exp(x: f64) -> f64 {
+    /// 1/k! for k = 0..=14 (exact integer factorials, one correctly
+    /// rounded division each — no tuned magic constants).
+    const C: [f64; 15] = [
+        1.0,
+        1.0,
+        1.0 / 2.0,
+        1.0 / 6.0,
+        1.0 / 24.0,
+        1.0 / 120.0,
+        1.0 / 720.0,
+        1.0 / 5040.0,
+        1.0 / 40320.0,
+        1.0 / 362_880.0,
+        1.0 / 3_628_800.0,
+        1.0 / 39_916_800.0,
+        1.0 / 479_001_600.0,
+        1.0 / 6_227_020_800.0,
+        1.0 / 87_178_291_200.0,
+    ];
+    // upper clamp keeps n <= 1024 (the +inf exponent) so the bit-assembly
+    // below never overflows; NaN fails the compare and flows through
+    let xc = if x > 710.0 { 710.0 } else { x };
+    // n = round(x / ln 2), in floor form (vectorizes as a single
+    // round-toward-negative; `round()` would not)
+    let mut n = (xc * std::f64::consts::LOG2_E + 0.5).floor();
+    if n < -1022.0 {
+        n = -1022.0; // lower clamp: result is overridden to 0 below
+    }
+    let n_i = n as i64; // in [-1022, 1024]; NaN saturates to 0
+    // r = x - n*ln2 via the split constant: n*LN2_HI is exact (31-bit
+    // mantissa x 11-bit n), the first subtraction is exact by Sterbenz,
+    // so r carries only the LN2_LO rounding; |r| <= ln(2)/2 + eps
+    let r = (xc - n * LN2_HI) - n * LN2_LO;
+    let mut p = C[14];
+    for &c in C[..14].iter().rev() {
+        p = p * r + c;
+    }
+    // 2^n by exponent assembly; n_i + 1023 is in [1, 2047], where 2047
+    // encodes +inf (the x > ~709.44 overflow path)
+    let scale = f64::from_bits(((n_i + 1023) as u64) << 52);
+    let y = p * scale;
+    // flush-to-zero contract below -708; also maps -inf -> 0. NaN fails
+    // the compare and keeps the poisoned core result (NaN).
+    if x < -708.0 {
+        0.0
+    } else {
+        y
+    }
+}
+
+/// Vectorizable natural log: bit decomposition + atanh series. See the
+/// module docs for the accuracy contract.
+#[inline(always)]
+pub fn ln(x: f64) -> f64 {
+    /// 1/(2k+3) for k = 0..=9: the atanh-series coefficients, exact
+    /// rationals (one correctly rounded division each).
+    const C: [f64; 10] = [
+        1.0 / 3.0,
+        1.0 / 5.0,
+        1.0 / 7.0,
+        1.0 / 9.0,
+        1.0 / 11.0,
+        1.0 / 13.0,
+        1.0 / 15.0,
+        1.0 / 17.0,
+        1.0 / 19.0,
+        1.0 / 21.0,
+    ];
+    // subnormals: rescale by 2^54 (exact) so the exponent field is live
+    let small = x < f64::MIN_POSITIVE; // NaN fails the compare
+    let xs = if small { x * TWO54 } else { x };
+    let ebias = if small { 54.0 } else { 0.0 };
+    let bits = xs.to_bits();
+    let e_raw = ((bits >> 52) & 0x7ff) as i64;
+    // mantissa re-based into [0.5, 1), then folded into
+    // [1/sqrt(2), sqrt(2)) so |s| <= 3 - 2*sqrt(2) below
+    let m0 = f64::from_bits((bits & 0x000F_FFFF_FFFF_FFFF) | 0x3FE0_0000_0000_0000);
+    let fold = m0 < std::f64::consts::FRAC_1_SQRT_2;
+    let m = if fold { m0 * 2.0 } else { m0 };
+    let e = (e_raw - 1022) as f64 - ebias - if fold { 1.0 } else { 0.0 };
+    // atanh form: ln(m) = 2s * (1 + s^2/3 + s^4/5 + ...) with
+    // s = (m-1)/(m+1); m-1 is exact by Sterbenz, so s carries only the
+    // division rounding and relative accuracy survives m -> 1
+    let s = (m - 1.0) / (m + 1.0);
+    let z = s * s;
+    let mut p = C[9];
+    for &c in C[..9].iter().rev() {
+        p = p * z + c;
+    }
+    let lnm = 2.0 * s + 2.0 * s * z * p;
+    let res = e * LN2_HI + (lnm + e * LN2_LO);
+    // specials, resolved after the straight-line core (the core computes
+    // garbage for them; these selects override it)
+    if x == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if x < 0.0 {
+        return f64::NAN;
+    }
+    if !x.is_finite() {
+        return x; // +inf -> +inf, NaN -> NaN
+    }
+    res
+}
+
+/// The standard-Gumbel transform `-ln(-ln(u))` for `u` in (0, 1]. The
+/// single shared implementation behind both the optimized selection
+/// kernels and [`crate::sampling::reference`] — sharing it is what keeps
+/// them bit-identical. `u = 1` (drawn with probability 2^-53) maps to
+/// `-ln(0) = +inf`, matching the libm chain.
+#[inline(always)]
+pub fn gumbel_from_uniform(u: f64) -> f64 {
+    -ln(-ln(u))
+}
+
+/// Apply [`gumbel_from_uniform`] elementwise, in place. A pure map with
+/// no cross-element dependency: per-element results are bit-identical to
+/// the scalar call whether or not LLVM vectorizes the loop.
+pub fn gumbel_map_in_place(us: &mut [f64]) {
+    for u in us.iter_mut() {
+        *u = gumbel_from_uniform(*u);
+    }
+}
+
+/// `cos(2*pi*u)` via range reduction in turns and a degree-9 minimax-free
+/// Taylor polynomial in `(2*pi*t)^2`; absolute error <= ~4e-15 (validated
+/// against libm over [0, 1]). Used by the sim substrate's Box–Muller
+/// transform, where the `u` argument is a hash-derived uniform — the
+/// turns form avoids the `2*pi*u` product-then-reduce of libm `cos` and
+/// vectorizes cleanly.
+#[inline(always)]
+pub fn cos_2pi(u: f64) -> f64 {
+    /// (-1)^k (2*pi)^(2k) / (2k)! for k = 0..=9, rounded from 60-digit
+    /// decimal evaluation.
+    const C: [f64; 10] = [
+        1.0,
+        -19.739208802178716,
+        64.9393940226683,
+        -85.45681720669373,
+        60.24464137187666,
+        -26.4262567833744,
+        7.903536371318469,
+        -1.714390711088672,
+        0.28200596845579123,
+        -0.03638284114254567,
+    ];
+    // v = u mod 1, centered in [-0.5, 0.5]; cosine is even, fold to w
+    let v = u - (u + 0.5).floor();
+    let w = v.abs();
+    // fold the second quarter-turn: cos(2*pi*w) = -cos(2*pi*(1/2 - w)),
+    // leaving t in [0, 1/4] (poly argument <= pi/2)
+    let (t, sign) = if w > 0.25 { (0.5 - w, -1.0) } else { (w, 1.0) };
+    let z = t * t;
+    let mut p = C[9];
+    for &c in C[..9].iter().rev() {
+        p = p * z + c;
+    }
+    sign * p
+}
+
+/// Chunked NaN-ignoring maximum — same semantics as
+/// `iter().fold(NEG_INFINITY, f64::max)`: NaN entries are skipped, empty
+/// or all-NaN input yields `-inf`. `f64::max` is associative and
+/// commutative over the values that can win, so unlike the float sums
+/// this reduction is *exactly* equal to the sequential fold.
+pub fn max(xs: &[f64]) -> f64 {
+    let mut acc = [f64::NEG_INFINITY; LANES];
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for (a, &x) in acc.iter_mut().zip(c) {
+            *a = a.max(x);
+        }
+    }
+    let mut m = f64::NEG_INFINITY;
+    for &x in chunks.remainder() {
+        m = m.max(x);
+    }
+    for a in acc {
+        m = m.max(a);
+    }
+    m
+}
+
+/// Chunked sum with [`LANES`] accumulators. Deterministic accumulation
+/// order (lane-strided body, then the scalar tail, then lanes 0..LANES
+/// left to right) but reassociated relative to a serial fold — ULP
+/// contract, see module docs. NaN/inf propagate as in the serial sum.
+pub fn sum(xs: &[f64]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for (a, &x) in acc.iter_mut().zip(c) {
+            *a += x;
+        }
+    }
+    let mut s = 0.0;
+    for &x in chunks.remainder() {
+        s += x;
+    }
+    for a in acc {
+        s += a;
+    }
+    s
+}
+
+/// `sum(exp(x - shift))` fused and chunked: the log-softmax partition
+/// function. Same accumulation-order contract as [`sum`]; a NaN entry
+/// poisons the result exactly as in the serial form.
+pub fn sum_exp_shifted(xs: &[f64], shift: f64) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut chunks = xs.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for (a, &x) in acc.iter_mut().zip(c) {
+            *a += exp(x - shift);
+        }
+    }
+    let mut s = 0.0;
+    for &x in chunks.remainder() {
+        s += exp(x - shift);
+    }
+    for a in acc {
+        s += a;
+    }
+    s
+}
+
+/// `sum(max(q - p, 0))` fused and chunked: the residual mass of
+/// recursive rejection sampling. `f64::max(x, 0.0)` maps NaN diffs to
+/// `0.0`, matching the serial form it replaced.
+pub fn sum_relu_diff(q: &[f64], p: &[f64]) -> f64 {
+    let n = q.len().min(p.len());
+    let (q, p) = (&q[..n], &p[..n]);
+    let mut acc = [0.0f64; LANES];
+    let mut qc = q.chunks_exact(LANES);
+    let mut pc = p.chunks_exact(LANES);
+    for (cq, cp) in qc.by_ref().zip(pc.by_ref()) {
+        for ((a, &qi), &pi) in acc.iter_mut().zip(cq).zip(cp) {
+            *a += (qi - pi).max(0.0);
+        }
+    }
+    let mut s = 0.0;
+    for (&qi, &pi) in qc.remainder().iter().zip(pc.remainder()) {
+        s += (qi - pi).max(0.0);
+    }
+    for a in acc {
+        s += a;
+    }
+    s
+}
+
+/// `lp[i] -= lz` for unfiltered entries; `-inf` stays `-inf` and NaN
+/// stays NaN, exactly as the branchy serial loop it replaced (the select
+/// form if-converts and vectorizes).
+pub fn sub_from_unfiltered(lp: &mut [f64], lz: f64) {
+    for l in lp.iter_mut() {
+        let v = *l;
+        *l = if v == f64::NEG_INFINITY { v } else { v - lz };
+    }
+}
+
+thread_local! {
+    /// Staging buffer for the batched Gumbel transform: uniform draws are
+    /// inherently serial (the RNG is a stream with a draw-order contract)
+    /// but the double-log transform is elementwise, so callers stage the
+    /// uniforms here and map them as a slice. Thread-local because
+    /// `gumbel_top_k_into`'s public signature carries no scratch;
+    /// capacity sticks at the vocab size after warm-up, so the
+    /// steady-state decode round stays allocation-free (enforced by the
+    /// hotpath bench's 0-alloc gate).
+    static UNIFORM_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's uniform staging buffer. Not reentrant —
+/// callers must not nest (the selection kernels never do).
+pub fn with_uniform_scratch<R>(f: impl FnOnce(&mut Vec<f64>) -> R) -> R {
+    UNIFORM_SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}

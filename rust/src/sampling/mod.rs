@@ -21,10 +21,34 @@
 //! unfiltered entry, ascending index) — which the property tests in
 //! `tests/selection.rs` enforce. The RNG draw order is part of the API:
 //! changing it silently re-randomizes every decoder.
+//!
+//! # Kernel layer
+//!
+//! The float inner loops live in [`kernels`]: vectorizable `exp` / `ln`
+//! replacements for the libm calls that dominated per-round cost, plus
+//! chunked reductions for the softmax folds. Two numeric regimes,
+//! documented per kernel and in `rust/README.md` §Kernel numerics:
+//!
+//! * **bit-exact vs [`reference`]** — everything feeding kept-set
+//!   selection or the RNG stream ([`gumbel_top_k_into`],
+//!   [`nucleus_filter`], [`gumbel_max`], the beam's offer path). The
+//!   optimized and reference forms share one Gumbel transform
+//!   ([`kernels::gumbel_from_uniform`]) and one serial nucleus mass
+//!   loop, so equality holds to the bit and the RNG advances
+//!   identically.
+//! * **ULP-contracted** — pure normalization kernels where the win comes
+//!   from reassociation ([`log_normalize`]'s partition sum,
+//!   [`residual_in_place`]'s mass fold) or from the polynomial `exp`
+//!   ([`LogProbs::probs_into`]). Values move by ULPs relative to the
+//!   serial libm forms; the 50k-draw statistical gates in
+//!   `tests/conformance.rs` pin the resulting distributions.
 
 use std::cmp::Ordering;
 
 use crate::util::Rng;
+
+pub mod kernels;
+pub mod reference;
 
 pub const NEG_INF: f64 = f64::NEG_INFINITY;
 
@@ -43,7 +67,8 @@ impl LogProbs {
         self.0.is_empty()
     }
 
-    /// Probabilities (exact exp; -inf -> 0).
+    /// Probabilities (-inf -> 0). ULP contract: uses the polynomial
+    /// [`kernels::exp`] (~1 ULP vs libm).
     pub fn probs(&self) -> Vec<f64> {
         let mut out = Vec::new();
         self.probs_into(&mut out);
@@ -53,7 +78,7 @@ impl LogProbs {
     /// [`LogProbs::probs`] into a caller-owned buffer (cleared first).
     pub fn probs_into(&self, out: &mut Vec<f64>) {
         out.clear();
-        out.extend(self.0.iter().map(|&l| l.exp()));
+        out.extend(self.0.iter().map(|&l| kernels::exp(l)));
     }
 }
 
@@ -104,18 +129,20 @@ pub fn process_logits_into(
 }
 
 /// In-place log-softmax (stable). `-inf` entries stay `-inf`.
+///
+/// ULP contract: the max fold is exactly the serial fold (see
+/// [`kernels::max`]); the partition sum is chunked + polynomial-`exp`
+/// ([`kernels::sum_exp_shifted`]), so the normalizer moves by ULPs
+/// relative to the serial libm form. `z.ln()` stays on libm — one scalar
+/// call per vocab row is not worth a contract deviation.
 pub fn log_normalize(lp: &mut [f64]) {
-    let m = lp.iter().cloned().fold(NEG_INF, f64::max);
+    let m = kernels::max(lp);
     if m == NEG_INF {
         return; // fully masked; caller's bug, keep as-is
     }
-    let z: f64 = lp.iter().map(|&l| (l - m).exp()).sum();
+    let z = kernels::sum_exp_shifted(lp, m);
     let lz = m + z.ln();
-    for l in lp.iter_mut() {
-        if *l != NEG_INF {
-            *l -= lz;
-        }
-    }
+    kernels::sub_from_unfiltered(lp, lz);
 }
 
 /// Descending-value order with ascending-index tie-break: the total
@@ -123,7 +150,7 @@ pub fn log_normalize(lp: &mut [f64]) {
 /// logits (degenerate upstream distributions) deterministic instead of
 /// panicking mid-round.
 #[inline]
-fn rank_desc(value_a: f64, idx_a: usize, value_b: f64, idx_b: usize) -> Ordering {
+pub(crate) fn rank_desc(value_a: f64, idx_a: usize, value_b: f64, idx_b: usize) -> Ordering {
     value_b.total_cmp(&value_a).then(idx_a.cmp(&idx_b))
 }
 
@@ -134,7 +161,9 @@ fn rank_desc(value_a: f64, idx_a: usize, value_b: f64, idx_b: usize) -> Ordering
 /// ...) and partitions with `select_nth_unstable` — O(V + keep·log keep)
 /// instead of a full sort — while accumulating mass in exactly the
 /// reference's order, so the kept set is byte-identical to
-/// [`reference::nucleus_filter`].
+/// [`reference::nucleus_filter`]. The mass loop stays on libm `exp`
+/// (shared with the reference): it is serial with a data-dependent early
+/// exit, and the kept-set decision must not move by a ULP.
 pub fn nucleus_filter(lp: &mut [f64], top_p: f64, sel: &mut SelectScratch) {
     let n = lp.len();
     if n == 0 {
@@ -180,10 +209,11 @@ pub fn nucleus_filter(lp: &mut [f64], top_p: f64, sel: &mut SelectScratch) {
     }
 }
 
-/// Standard Gumbel(0,1) sample.
+/// Standard Gumbel(0,1) sample, via the shared vectorizable transform
+/// ([`kernels::gumbel_from_uniform`]) so scalar and batched draws are
+/// bit-identical.
 pub fn gumbel(rng: &mut Rng) -> f64 {
-    let u: f64 = rng.gen_f64_open();
-    -(-u.ln()).ln()
+    kernels::gumbel_from_uniform(rng.gen_f64_open())
 }
 
 /// Gumbel-max trick: sample an index from the categorical `lp` directly
@@ -274,18 +304,37 @@ pub fn bounded_heap_offer<T>(
 /// O(V + V log k) instead of the reference's O(V log V) full sort, with
 /// byte-identical output (same values, order, ties and RNG stream —
 /// property-tested against [`reference::gumbel_top_k`]).
+///
+/// The Gumbel perturbation is batched: uniforms are drawn serially (one
+/// per unfiltered entry, ascending index — the RNG-order contract),
+/// staged in a thread-local buffer, and pushed through the double-log
+/// transform as one vectorizable slice map before the sequential heap
+/// pass. Per-element values are bit-identical to the reference's scalar
+/// draw-transform-offer loop because both run the same pure transform.
 pub fn gumbel_top_k_into(lp: &LogProbs, k: usize, rng: &mut Rng, out: &mut Vec<(usize, f64)>) {
     out.clear();
     let worse =
         |a: &(usize, f64), b: &(usize, f64)| rank_desc(a.1, a.0, b.1, b.0) == Ordering::Greater;
-    for (i, &l) in lp.0.iter().enumerate() {
-        if l == NEG_INF {
-            continue;
+    kernels::with_uniform_scratch(|us| {
+        us.clear();
+        for &l in &lp.0 {
+            if l != NEG_INF {
+                // the draw happens even when k == 0: RNG order is part
+                // of the API
+                us.push(rng.gen_f64_open());
+            }
         }
-        // the draw happens even when k == 0: RNG order is part of the API
-        let cand = (i, l + gumbel(rng));
-        bounded_heap_offer(out, k, cand, worse);
-    }
+        kernels::gumbel_map_in_place(us);
+        let mut j = 0;
+        for (i, &l) in lp.0.iter().enumerate() {
+            if l == NEG_INF {
+                continue;
+            }
+            let cand = (i, l + us[j]);
+            j += 1;
+            bounded_heap_offer(out, k, cand, worse);
+        }
+    });
     out.sort_unstable_by(|a, b| rank_desc(a.1, a.0, b.1, b.0));
 }
 
@@ -308,6 +357,10 @@ pub fn truncated_gumbel_into(u: f64, z: f64, phi_tilde: &[f64], out: &mut Vec<f6
 
 /// One element of the truncated-Gumbel map — the single shared formula
 /// (the vector form and the beam's streaming form must not drift).
+/// Deliberately NOT ported to the polynomial kernels: the formula is
+/// branch-heavy, numerically delicate (`ln_1m_exp` near 0), and runs
+/// once per *candidate*, not per vocab entry — libm accuracy is worth
+/// more here than lane throughput.
 #[inline]
 pub fn truncated_gumbel_one(u: f64, z: f64, g: f64) -> f64 {
     if g == NEG_INF {
@@ -340,8 +393,10 @@ fn ln_1p_exp(x: f64) -> f64 {
 }
 
 /// Sample an index from probabilities `p` (need not be normalized).
+/// ULP contract: the total uses the chunked [`kernels::sum`]; the
+/// subtractive scan itself is serial (data-dependent early exit).
 pub fn sample_categorical(p: &[f64], rng: &mut Rng) -> usize {
-    let total: f64 = p.iter().sum();
+    let total = kernels::sum(p);
     assert!(total > 0.0, "cannot sample from zero distribution");
     let mut u: f64 = rng.gen_f64() * total;
     for (i, &pi) in p.iter().enumerate() {
@@ -369,9 +424,11 @@ pub fn residual(q: &[f64], p: &[f64]) -> Option<Vec<f64>> {
 /// [`residual`] computed in place: on success `q` becomes the normalized
 /// residual and `true` is returned; when the residual mass vanishes `q`
 /// is left untouched and `false` is returned (same arithmetic, same
-/// accumulation order — bit-identical to the allocating form).
+/// accumulation order — bit-identical to the allocating form). ULP
+/// contract: the mass fold is the chunked [`kernels::sum_relu_diff`];
+/// the normalizing division is elementwise (vectorizes as-is).
 pub fn residual_in_place(q: &mut [f64], p: &[f64]) -> bool {
-    let z: f64 = q.iter().zip(p).map(|(&qi, &pi)| (qi - pi).max(0.0)).sum();
+    let z = kernels::sum_relu_diff(q, p);
     if z <= 1e-300 {
         return false;
     }
@@ -384,49 +441,6 @@ pub fn residual_in_place(q: &mut [f64], p: &[f64]) -> bool {
 /// Total-variation distance between two probability vectors.
 pub fn tv_distance(a: &[f64], b: &[f64]) -> f64 {
     0.5 * a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).sum::<f64>()
-}
-
-/// Sort-based reference implementations of the partial-selection
-/// routines. These ARE the specification: the optimized forms above must
-/// return byte-identical results (indices, values, order, RNG stream
-/// position), enforced by `tests/selection.rs`. Kept `pub` for those
-/// tests and for the hot-path bench's before/after comparison.
-pub mod reference {
-    use super::*;
-
-    /// Full-sort Gumbel-Top-k (the pre-optimization implementation, with
-    /// the NaN-safe `total_cmp` + index tie-break comparator).
-    pub fn gumbel_top_k(lp: &LogProbs, k: usize, rng: &mut Rng) -> Vec<(usize, f64)> {
-        let mut perturbed: Vec<(usize, f64)> = lp
-            .0
-            .iter()
-            .enumerate()
-            .filter(|(_, &l)| l != NEG_INF)
-            .map(|(i, &l)| (i, l + gumbel(rng)))
-            .collect();
-        perturbed.sort_by(|a, b| rank_desc(a.1, a.0, b.1, b.0));
-        perturbed.truncate(k);
-        perturbed
-    }
-
-    /// Full-sort nucleus filter (the pre-optimization implementation,
-    /// with the NaN-safe comparator).
-    pub fn nucleus_filter(lp: &mut [f64], top_p: f64) {
-        let mut idx: Vec<usize> = (0..lp.len()).collect();
-        idx.sort_by(|&a, &b| rank_desc(lp[a], a, lp[b], b));
-        let mut mass = 0.0;
-        let mut keep = lp.len();
-        for (rank, &i) in idx.iter().enumerate() {
-            mass += lp[i].exp();
-            if mass >= top_p {
-                keep = rank + 1;
-                break;
-            }
-        }
-        for &i in &idx[keep..] {
-            lp[i] = NEG_INF;
-        }
-    }
 }
 
 #[cfg(test)]

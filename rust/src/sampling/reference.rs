@@ -1,0 +1,49 @@
+//! Sort-based reference implementations of the partial-selection
+//! routines. These ARE the specification: the optimized forms in the
+//! parent module must return byte-identical results (indices, values,
+//! order, RNG stream position), enforced by `tests/selection.rs`. Kept
+//! `pub` for those tests and for the hot-path bench's before/after
+//! comparison.
+//!
+//! Both references draw their Gumbels through the same
+//! [`gumbel`](super::gumbel) (and thus
+//! [`kernels::gumbel_from_uniform`](super::kernels::gumbel_from_uniform))
+//! as the optimized kernels, and accumulate nucleus mass with the same
+//! libm `exp` in the same serial early-exit order — sharing the exact
+//! arithmetic is what makes byte-identity achievable at all.
+
+use super::*;
+
+/// Full-sort Gumbel-Top-k (the pre-optimization implementation, with
+/// the NaN-safe `total_cmp` + index tie-break comparator).
+pub fn gumbel_top_k(lp: &LogProbs, k: usize, rng: &mut Rng) -> Vec<(usize, f64)> {
+    let mut perturbed: Vec<(usize, f64)> = lp
+        .0
+        .iter()
+        .enumerate()
+        .filter(|(_, &l)| l != NEG_INF)
+        .map(|(i, &l)| (i, l + gumbel(rng)))
+        .collect();
+    perturbed.sort_by(|a, b| rank_desc(a.1, a.0, b.1, b.0));
+    perturbed.truncate(k);
+    perturbed
+}
+
+/// Full-sort nucleus filter (the pre-optimization implementation,
+/// with the NaN-safe comparator).
+pub fn nucleus_filter(lp: &mut [f64], top_p: f64) {
+    let mut idx: Vec<usize> = (0..lp.len()).collect();
+    idx.sort_by(|&a, &b| rank_desc(lp[a], a, lp[b], b));
+    let mut mass = 0.0;
+    let mut keep = lp.len();
+    for (rank, &i) in idx.iter().enumerate() {
+        mass += lp[i].exp();
+        if mass >= top_p {
+            keep = rank + 1;
+            break;
+        }
+    }
+    for &i in &idx[keep..] {
+        lp[i] = NEG_INF;
+    }
+}

@@ -20,12 +20,17 @@ use anyhow::Result;
 
 use crate::kvcache::{KvConfig, KvPool, PagedSlots, PoolStatus};
 use crate::llm::{EvalNode, Llm, LogitsBatch};
+use crate::sampling::kernels;
 use crate::tree::SessionCore;
 
 /// Markov order of the context hash: only this many trailing tokens
 /// shape a conditional, so per-node context builds are O(CTX_ORDER)
 /// regardless of prefix length (and the context scratch never grows).
 const CTX_ORDER: usize = 8;
+
+/// Stack-buffer width for the chunked logits-row fill: two cache lines
+/// of f64, enough for the autovectorizer to fill any lane width.
+const ROW_CHUNK: usize = 16;
 
 #[derive(Debug, Clone)]
 pub struct SimLm {
@@ -129,14 +134,25 @@ impl SimLm {
         h
     }
 
-    /// Standard-normal-ish value for (hash, stream, index) via Box-Muller
-    /// on two splitmix uniforms.
-    fn normal(h: u64, stream: u64, i: usize) -> f64 {
-        let a = Self::mix(h ^ Self::mix(stream.wrapping_add(1) ^ (i as u64) << 1));
-        let b = Self::mix(a ^ 0xdeadbeefcafef00d);
-        let u1 = ((a >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
-        let u2 = ((b >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
-        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    /// Standard-normal-ish values for (hash, stream, i0..i0+out.len())
+    /// via Box-Muller on two splitmix uniforms per index. Two passes so
+    /// the float transform vectorizes: the integer hashing (64-bit
+    /// multiplies, scalar on most ISAs) stages the uniforms, then one
+    /// elementwise pass runs the polynomial `ln`/`cos_2pi` kernels plus
+    /// `sqrt` — the row fill's former libm inner loop. `out.len()` must
+    /// be <= [`ROW_CHUNK`].
+    fn normal_chunk(h: u64, stream: u64, i0: usize, out: &mut [f64]) {
+        let mut u2 = [0.0f64; ROW_CHUNK];
+        for (j, o) in out.iter_mut().enumerate() {
+            let i = i0 + j;
+            let a = Self::mix(h ^ Self::mix(stream.wrapping_add(1) ^ (i as u64) << 1));
+            let b = Self::mix(a ^ 0xdeadbeefcafef00d);
+            *o = ((a >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
+            u2[j] = ((b >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
+        }
+        for (o, &v2) in out.iter_mut().zip(&u2) {
+            *o = (-2.0 * kernels::ln(*o)).sqrt() * kernels::cos_2pi(v2);
+        }
     }
 
     /// The single row-production path shared by all eval entry points:
@@ -160,22 +176,34 @@ impl SimLm {
     }
 
     /// Raw logits for a context, written in place (deterministic).
+    /// Chunked over [`ROW_CHUNK`]-wide stack buffers so the Box-Muller
+    /// transform and the mixture blend run as vectorizable slice passes;
+    /// the blend keeps the original per-element operation order, so the
+    /// restructuring changes no rounding.
     pub fn logits_into(&self, ctx: &[u32], row: &mut [f32]) {
         debug_assert_eq!(row.len(), self.vocab);
         let h = self.ctx_hash(ctx);
-        for (i, slot) in row.iter_mut().enumerate() {
-            let shared = Self::normal(h, 0, i);
-            let own = if self.stream == 0 || self.alpha >= 1.0 {
-                shared
+        let blend = self.stream != 0 && self.alpha < 1.0;
+        // unit-variance mixture: alpha controls the correlation with the
+        // target only, never the draft's sharpness
+        let a = self.alpha;
+        let norm = (a * a + (1.0 - a) * (1.0 - a)).sqrt();
+        let mut shared = [0.0f64; ROW_CHUNK];
+        let mut noise = [0.0f64; ROW_CHUNK];
+        for (c, chunk) in row.chunks_mut(ROW_CHUNK).enumerate() {
+            let i0 = c * ROW_CHUNK;
+            let n = chunk.len();
+            Self::normal_chunk(h, 0, i0, &mut shared[..n]);
+            if blend {
+                Self::normal_chunk(h, self.stream, i0, &mut noise[..n]);
+                for ((slot, &s), &z) in chunk.iter_mut().zip(&shared[..n]).zip(&noise[..n]) {
+                    *slot = (((a * s + (1.0 - a) * z) / norm) * self.scale) as f32;
+                }
             } else {
-                // unit-variance mixture: alpha controls the correlation
-                // with the target only, never the draft's sharpness
-                let noise = Self::normal(h, self.stream, i);
-                let a = self.alpha;
-                let norm = (a * a + (1.0 - a) * (1.0 - a)).sqrt();
-                (a * shared + (1.0 - a) * noise) / norm
-            };
-            *slot = (own * self.scale) as f32;
+                for (slot, &s) in chunk.iter_mut().zip(&shared[..n]) {
+                    *slot = (s * self.scale) as f32;
+                }
+            }
         }
     }
 

@@ -1,0 +1,259 @@
+//! SATELLITE: accuracy and contract tests for the vectorizable math
+//! kernels in `rsd::sampling::kernels`.
+//!
+//! Two families of assertion:
+//!
+//! * **bit-exactness** where the kernel claims it (the batched Gumbel
+//!   map vs the scalar transform, `max` vs the serial fold,
+//!   `sub_from_unfiltered` vs the branchy loop);
+//! * **ULP / tolerance contracts** where the kernel documents a
+//!   deviation (polynomial `exp`/`ln` vs libm, chunked sums vs serial
+//!   folds, `log_normalize` vs a naive serial libm reference).
+//!
+//! Tolerances here are deliberately looser than the measured worst cases
+//! (~1–2 ULP for the polynomials) so the tests pin the *contract*, not
+//! one libm build.
+
+use rsd::sampling::kernels;
+use rsd::sampling::{log_normalize, NEG_INF};
+use rsd::util::Rng;
+
+fn rel_err(got: f64, want: f64) -> f64 {
+    if want == 0.0 {
+        got.abs()
+    } else {
+        (got - want).abs() / want.abs()
+    }
+}
+
+#[test]
+fn exp_poly_matches_libm_over_logprob_domain() {
+    // dense deterministic sweep + random points over the domain the
+    // sampling code exercises (log-probs and softmax shifts)
+    let mut worst = 0.0f64;
+    let mut i = 0;
+    let mut x = -700.0;
+    while x <= 709.0 {
+        let e = rel_err(kernels::exp(x), x.exp());
+        if e > worst {
+            worst = e;
+        }
+        // irregular stride so we do not sample only near-integer reductions
+        x += 0.137 + 0.011 * ((i % 7) as f64);
+        i += 1;
+    }
+    let mut rng = Rng::seed_from_u64(42);
+    for _ in 0..200_000 {
+        let x = -700.0 + 1409.0 * rng.gen_f64();
+        let e = rel_err(kernels::exp(x), x.exp());
+        if e > worst {
+            worst = e;
+        }
+    }
+    // measured worst case ~1 ULP (2.3e-16); contract allows ~4.5 ULP
+    assert!(worst < 1e-15, "exp worst relative error {worst:e}");
+}
+
+#[test]
+fn exp_poly_specials_and_flush_contract() {
+    assert_eq!(kernels::exp(0.0), 1.0);
+    assert_eq!(kernels::exp(0.0).to_bits(), 1.0f64.to_bits());
+    assert_eq!(kernels::exp(NEG_INF), 0.0);
+    assert_eq!(kernels::exp(f64::INFINITY), f64::INFINITY);
+    assert!(kernels::exp(f64::NAN).is_nan());
+    // documented deviation from libm: flush-to-zero below -708 (libm
+    // returns subnormals down to ~-745) ...
+    assert_eq!(kernels::exp(-709.0), 0.0);
+    assert_eq!(kernels::exp(-5000.0), 0.0);
+    // ... and overflow from ~709.44 (libm from ~709.78)
+    assert_eq!(kernels::exp(710.0), f64::INFINITY);
+    assert_eq!(kernels::exp(1e300), f64::INFINITY);
+    // masked-token path: exp stays exactly 0, never a subnormal
+    assert_eq!(kernels::exp(-708.5).to_bits(), 0.0f64.to_bits());
+}
+
+#[test]
+fn ln_poly_matches_libm_over_positive_domain() {
+    let mut rng = Rng::seed_from_u64(7);
+    let mut worst = 0.0f64;
+    // normals across the full exponent range: random mantissa in [1, 2)
+    // scaled by 2^e
+    for _ in 0..200_000 {
+        let m = 1.0 + rng.gen_f64();
+        let e = rng.gen_range(2001) as i32 - 1000;
+        let x = m * f64::powi(2.0, e);
+        let err = rel_err(kernels::ln(x), x.ln());
+        if err > worst {
+            worst = err;
+        }
+    }
+    // the cancellation region near 1 (atanh form keeps relative accuracy)
+    for k in 1..=10_000i64 {
+        for x in [1.0 + k as f64 * 1e-12, 1.0 - k as f64 * 1e-12] {
+            let err = rel_err(kernels::ln(x), x.ln());
+            if err > worst {
+                worst = err;
+            }
+        }
+    }
+    // subnormals (pre-scaled by 2^54 internally)
+    for x in [5e-324, 1e-320, 1e-310, 2.2e-308] {
+        let err = rel_err(kernels::ln(x), x.ln());
+        if err > worst {
+            worst = err;
+        }
+    }
+    // measured worst case ~1.7 ULP (3.8e-16); contract allows ~4.5 ULP
+    assert!(worst < 1e-15, "ln worst relative error {worst:e}");
+}
+
+#[test]
+fn ln_poly_specials() {
+    assert_eq!(kernels::ln(0.0), NEG_INF);
+    assert_eq!(kernels::ln(-0.0), NEG_INF);
+    assert!(kernels::ln(-1.0).is_nan());
+    assert!(kernels::ln(NEG_INF).is_nan());
+    assert_eq!(kernels::ln(f64::INFINITY), f64::INFINITY);
+    assert!(kernels::ln(f64::NAN).is_nan());
+    // exact anchor: ln(1) = +0 to the bit
+    assert_eq!(kernels::ln(1.0).to_bits(), 0.0f64.to_bits());
+}
+
+#[test]
+fn gumbel_map_bit_identical_to_scalar_transform() {
+    // the batched slice map IS the scalar transform applied elementwise —
+    // this is the keystone of the selection bit-exactness contract
+    let mut rng = Rng::seed_from_u64(99);
+    for len in [0usize, 1, 7, 8, 9, 31, 32, 33, 1000] {
+        let us: Vec<f64> = (0..len).map(|_| rng.gen_f64_open()).collect();
+        let mut batched = us.clone();
+        kernels::gumbel_map_in_place(&mut batched);
+        for (i, (&b, &u)) in batched.iter().zip(&us).enumerate() {
+            assert_eq!(
+                b.to_bits(),
+                kernels::gumbel_from_uniform(u).to_bits(),
+                "len {len} elem {i}"
+            );
+        }
+    }
+    // the u = 1 edge draw (probability 2^-53): -ln(-ln(1)) = +inf, same
+    // as the libm chain
+    assert_eq!(kernels::gumbel_from_uniform(1.0), f64::INFINITY);
+}
+
+#[test]
+fn chunked_max_equals_serial_fold_exactly() {
+    let mut rng = Rng::seed_from_u64(3);
+    for len in 0..=(4 * kernels::LANES + 3) {
+        let mut xs: Vec<f64> = (0..len).map(|_| 20.0 * rng.gen_f64() - 10.0).collect();
+        // sprinkle NaN and -inf: max must ignore NaN like f64::max does
+        if len > 2 {
+            xs[len / 2] = f64::NAN;
+            xs[len / 3] = NEG_INF;
+        }
+        let serial = xs.iter().fold(NEG_INF, |a, &b| a.max(b));
+        assert_eq!(kernels::max(&xs).to_bits(), serial.to_bits(), "len {len}");
+    }
+    assert_eq!(kernels::max(&[]), NEG_INF);
+    assert_eq!(kernels::max(&[f64::NAN, f64::NAN]), NEG_INF);
+}
+
+#[test]
+fn chunked_sums_match_serial_folds_within_ulp_contract() {
+    let mut rng = Rng::seed_from_u64(5);
+    for len in [1usize, 7, 8, 9, 35, 256, 8192, 32000] {
+        let xs: Vec<f64> = (0..len).map(|_| rng.gen_f64()).collect();
+        let serial: f64 = xs.iter().sum();
+        assert!(rel_err(kernels::sum(&xs), serial) < 1e-12, "sum len {len}");
+
+        let shift = 2.0;
+        let serial_exp: f64 = xs.iter().map(|&x| (x - shift).exp()).sum();
+        assert!(
+            rel_err(kernels::sum_exp_shifted(&xs, shift), serial_exp) < 1e-12,
+            "sum_exp_shifted len {len}"
+        );
+
+        let ps: Vec<f64> = (0..len).map(|_| rng.gen_f64()).collect();
+        let serial_relu: f64 = xs.iter().zip(&ps).map(|(&q, &p)| (q - p).max(0.0)).sum();
+        let got = kernels::sum_relu_diff(&xs, &ps);
+        if serial_relu == 0.0 {
+            assert_eq!(got, 0.0, "sum_relu_diff len {len}");
+        } else {
+            assert!(rel_err(got, serial_relu) < 1e-12, "sum_relu_diff len {len}");
+        }
+    }
+}
+
+#[test]
+fn sub_from_unfiltered_preserves_masks_and_nan() {
+    let mut lp = vec![-1.0, NEG_INF, 0.5, f64::NAN, -3.25];
+    kernels::sub_from_unfiltered(&mut lp, 0.75);
+    assert_eq!(lp[0], -1.75);
+    assert_eq!(lp[1], NEG_INF);
+    assert_eq!(lp[2], -0.25);
+    assert!(lp[3].is_nan());
+    assert_eq!(lp[4], -4.0);
+}
+
+#[test]
+fn log_normalize_matches_naive_serial_reference_within_contract() {
+    // the naive pre-PR form: serial max fold, serial libm-exp partition
+    // sum, branchy subtraction
+    fn naive(lp: &mut [f64]) {
+        let m = lp.iter().fold(NEG_INF, |a, &b| a.max(b));
+        if m == NEG_INF {
+            return;
+        }
+        let z: f64 = lp.iter().map(|&l| (l - m).exp()).sum();
+        let lz = m + z.ln();
+        for l in lp.iter_mut() {
+            if *l != NEG_INF {
+                *l -= lz;
+            }
+        }
+    }
+    let mut rng = Rng::seed_from_u64(11);
+    for len in [1usize, 2, 35, 256, 8192, 32000] {
+        let base: Vec<f64> = (0..len)
+            .map(|_| if rng.gen_f64() < 0.1 { NEG_INF } else { -10.0 * rng.gen_f64() })
+            .collect();
+        let mut a = base.clone();
+        let mut b = base;
+        log_normalize(&mut a);
+        naive(&mut b);
+        for (i, (&x, &y)) in a.iter().zip(&b).enumerate() {
+            if y == NEG_INF {
+                assert_eq!(x, NEG_INF, "len {len} elem {i}: mask must survive");
+            } else {
+                // reassociated sum + polynomial exp: values move by ULPs
+                assert!((x - y).abs() < 1e-11, "len {len} elem {i}: {x} vs {y}");
+            }
+        }
+    }
+    // fully-masked rows pass through untouched in both forms
+    let mut all_inf = vec![NEG_INF; 9];
+    log_normalize(&mut all_inf);
+    assert!(all_inf.iter().all(|&x| x == NEG_INF));
+}
+
+#[test]
+fn cos_2pi_matches_libm_cosine() {
+    let mut rng = Rng::seed_from_u64(13);
+    let mut worst = 0.0f64;
+    for _ in 0..200_000 {
+        // the sim substrate feeds uniforms in [0, 1); also probe a few
+        // turns out of range since the reduction is generic
+        let u = 3.0 * rng.gen_f64() - 1.0;
+        let got = kernels::cos_2pi(u);
+        let want = (2.0 * std::f64::consts::PI * u).cos();
+        let err = (got - want).abs();
+        if err > worst {
+            worst = err;
+        }
+    }
+    // validated absolute error <= ~4e-15 over [0, 1]
+    assert!(worst < 1e-12, "cos_2pi worst absolute error {worst:e}");
+    assert_eq!(kernels::cos_2pi(0.0), 1.0);
+    assert!((kernels::cos_2pi(0.5) + 1.0).abs() < 1e-14);
+    assert!(kernels::cos_2pi(0.25).abs() < 1e-14);
+}

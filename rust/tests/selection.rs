@@ -9,7 +9,7 @@
 //! divergence would silently re-randomize every decoder in the repo.
 
 use rsd::sampling::{
-    gumbel_top_k_into, log_normalize, nucleus_filter, reference, LogProbs, SelectScratch,
+    gumbel_top_k_into, kernels, log_normalize, nucleus_filter, reference, LogProbs, SelectScratch,
     NEG_INF,
 };
 use rsd::util::Rng;
@@ -126,6 +126,83 @@ fn nucleus_partial_matches_reference_beyond_prefix_growth() {
             let got: Vec<u64> = a.iter().map(|x| x.to_bits()).collect();
             let want: Vec<u64> = b.iter().map(|x| x.to_bits()).collect();
             assert_eq!(got, want, "vocab {vocab} top_p {top_p}");
+        }
+    }
+}
+
+/// Adversarial vocab rows for the lane/tail sweep: random spread,
+/// all-equal (every comparison ties), fully `-inf`-masked, alternating
+/// `-inf` mask (the batched draw must skip exactly the same entries as
+/// the reference's serial loop), and sprinkled NaN (kept deterministic
+/// by the `total_cmp` comparator).
+fn adversarial_rows(meta: &mut Rng, len: usize) -> Vec<Vec<f64>> {
+    vec![
+        (0..len).map(|_| -8.0 * meta.gen_f64()).collect(),
+        vec![-1.5; len],
+        vec![NEG_INF; len],
+        (0..len)
+            .map(|i| if i % 2 == 0 { NEG_INF } else { -0.5 - i as f64 * 0.1 })
+            .collect(),
+        (0..len)
+            .map(|i| if i % 5 == 3 { f64::NAN } else { -4.0 * meta.gen_f64() })
+            .collect(),
+    ]
+}
+
+/// SATELLITE (SIMD PR): Gumbel-Top-k bit-parity at every length through
+/// the kernel lane/tail boundary (1 ..= 4·LANES + 3) under adversarial
+/// inputs — the batched uniform-staging + slice-map transform must keep
+/// the kept set, order, values AND the RNG stream position identical to
+/// the reference's scalar draw-transform-offer loop.
+#[test]
+fn gumbel_top_k_parity_lane_tail_lengths_adversarial() {
+    let sweep = 4 * kernels::LANES + 3;
+    let mut meta = Rng::seed_from_u64(0x51AD);
+    let mut out = Vec::new();
+    for len in 1..=sweep {
+        for (pi, row) in adversarial_rows(&mut meta, len).into_iter().enumerate() {
+            let lp = LogProbs(row);
+            for k in [0usize, 1, len / 2 + 1, len + 2] {
+                let seed = meta.next_u64();
+                let mut r_heap = Rng::seed_from_u64(seed);
+                let mut r_ref = Rng::seed_from_u64(seed);
+                gumbel_top_k_into(&lp, k, &mut r_heap, &mut out);
+                let want = reference::gumbel_top_k(&lp, k, &mut r_ref);
+                let got: Vec<(usize, u64)> =
+                    out.iter().map(|&(i, v)| (i, v.to_bits())).collect();
+                let want: Vec<(usize, u64)> =
+                    want.iter().map(|&(i, v)| (i, v.to_bits())).collect();
+                assert_eq!(got, want, "len {len} pattern {pi} k {k}");
+                assert_eq!(
+                    r_heap.next_u64(),
+                    r_ref.next_u64(),
+                    "len {len} pattern {pi} k {k}: RNG stream position diverged"
+                );
+            }
+        }
+    }
+}
+
+/// SATELLITE (SIMD PR): nucleus-filter bit-parity over the same
+/// lane/tail length sweep and adversarial rows (the mass loop is shared
+/// serial libm `exp`, so equality must hold to the bit even for NaN and
+/// fully-masked rows).
+#[test]
+fn nucleus_parity_lane_tail_lengths_adversarial() {
+    let sweep = 4 * kernels::LANES + 3;
+    let mut meta = Rng::seed_from_u64(0x0DDB);
+    let mut sel = SelectScratch::default();
+    for len in 1..=sweep {
+        for (pi, row) in adversarial_rows(&mut meta, len).into_iter().enumerate() {
+            for top_p in [0.05, 0.5, 0.95, 0.9999] {
+                let mut a = row.clone();
+                let mut b = row.clone();
+                nucleus_filter(&mut a, top_p, &mut sel);
+                reference::nucleus_filter(&mut b, top_p);
+                let got: Vec<u64> = a.iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u64> = b.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "len {len} pattern {pi} top_p {top_p}");
+            }
         }
     }
 }
