@@ -218,6 +218,14 @@ impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
         self.inner.resume(target, draft)
     }
 
+    /// Abandon an in-flight round after a mid-round fault (see
+    /// [`SpecStepper::abort_round`]). The aborted round never reached
+    /// `feed_target`, so the acceptance estimator observed nothing and
+    /// the retried round reshapes from the same statistics.
+    pub fn abort_round(&mut self, target: &T, draft: &D) -> Result<()> {
+        self.inner.abort_round(target, draft)
+    }
+
     pub fn out(&self) -> &[u32] {
         &self.inner.out
     }

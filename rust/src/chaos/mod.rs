@@ -1,0 +1,522 @@
+//! Deterministic fault injection for the serving engine.
+//!
+//! [`ChaosLm`] wraps any [`Llm`] (in practice [`crate::sim::SimLm`]) and
+//! injects failures according to a seeded [`FaultPlan`]: transient and
+//! persistent eval faults targeting specific *sessions*, latency spikes
+//! on specific *eval calls*, and resume-path failures (the
+//! `begin_with_prefix` calls the engine issues when un-parking a
+//! preempted request). Everything is deterministic — the same plan
+//! against the same workload trips the same faults in the same order —
+//! which is what lets the chaos soak assert bit-identical streams for
+//! unaffected (and retried) requests.
+//!
+//! Fault identity is the *session id*, assigned in `begin` /
+//! `begin_with_prefix` call order. The engine opens target sessions in
+//! admission order (one per stepper), so "session 3" is a stable,
+//! reproducible handle on "the 4th admitted request's target session".
+//! A transient fault poisons a session until it is dropped; the
+//! engine's retry machinery suspends the stepper (dropping its
+//! sessions) and resumes into *fresh* sessions, so a bounded retry
+//! deterministically clears a transient fault. Persistent faults follow
+//! the request id-space the same way but are reported non-retryable.
+//!
+//! ## Atomicity contract
+//!
+//! `eval_batch_into` checks the plan against **every** group before
+//! delegating a single row to the inner model. A fused call that is
+//! going to fail therefore fails without mutating any session — the
+//! precondition for the engine's blast-radius re-drive (retry the phase
+//! per group; only the poisoned group fails).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::errors::{EngineError, ErrorKind};
+use crate::llm::{EvalNode, Llm, LogitsBatch};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Knobs for [`FaultPlan::seeded`].
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Session-id universe faults are drawn from (engine target sessions
+    /// are numbered in admission order, so set this near the request
+    /// count).
+    pub sessions: u64,
+    /// Number of sessions hit by transient (retryable) eval faults.
+    pub transient: usize,
+    /// Number of sessions hit by persistent (terminal) eval faults.
+    pub persistent: usize,
+    /// Number of latency spikes, scattered over the first
+    /// `spike_calls` eval calls.
+    pub spikes: usize,
+    pub spike_calls: u64,
+    /// Deterministic spin rounds per spike.
+    pub spike_spin: u64,
+    /// Fail the first N resume-path `begin_with_prefix` calls.
+    pub resume_faults: u64,
+    /// Only hints longer than this trip a resume fault (resume hints
+    /// are prompt+generated, so a threshold above the longest prompt
+    /// targets resumes exclusively).
+    pub resume_hint_min: usize,
+    /// Report resume faults as retryable (pool exhaustion) or terminal.
+    pub resume_retryable: bool,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            sessions: 64,
+            transient: 4,
+            persistent: 2,
+            spikes: 8,
+            spike_calls: 512,
+            spike_spin: 2_000,
+            resume_faults: 0,
+            resume_hint_min: usize::MAX,
+            resume_retryable: true,
+        }
+    }
+}
+
+/// The full, serializable fault schedule for one chaos run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Sessions whose evals fail retryably until the session is dropped.
+    pub transient_sessions: BTreeSet<u64>,
+    /// Sessions whose evals fail terminally.
+    pub persistent_sessions: BTreeSet<u64>,
+    /// eval-call index → spin rounds burned before that call proceeds.
+    pub latency_spikes: BTreeMap<u64, u64>,
+    /// Fail the first N qualifying `begin_with_prefix` calls.
+    pub resume_faults: u64,
+    /// Hint-length threshold for a resume fault to qualify.
+    pub resume_hint_min: usize,
+    /// Retryable (pool-exhausted) vs terminal resume failures.
+    pub resume_retryable: bool,
+}
+
+impl FaultPlan {
+    /// No faults: the wrapper becomes a transparent passthrough.
+    pub fn none() -> Self {
+        Self { resume_hint_min: usize::MAX, resume_retryable: true, ..Self::default() }
+    }
+
+    /// Draw a deterministic plan from a seed. Persistent targets are
+    /// picked first; transient picks skip them, so the two sets are
+    /// disjoint and a session's failure mode is unambiguous.
+    pub fn seeded(seed: u64, cfg: &ChaosConfig) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut persistent = BTreeSet::new();
+        while persistent.len() < cfg.persistent.min(cfg.sessions as usize) {
+            persistent.insert(rng.next_u64() % cfg.sessions);
+        }
+        let mut transient = BTreeSet::new();
+        let room = (cfg.sessions as usize).saturating_sub(persistent.len());
+        while transient.len() < cfg.transient.min(room) {
+            let id = rng.next_u64() % cfg.sessions;
+            if !persistent.contains(&id) {
+                transient.insert(id);
+            }
+        }
+        let mut latency_spikes = BTreeMap::new();
+        for _ in 0..cfg.spikes {
+            latency_spikes.insert(rng.next_u64() % cfg.spike_calls.max(1), cfg.spike_spin);
+        }
+        Self {
+            transient_sessions: transient,
+            persistent_sessions: persistent,
+            latency_spikes,
+            resume_faults: cfg.resume_faults,
+            resume_hint_min: cfg.resume_hint_min,
+            resume_retryable: cfg.resume_retryable,
+        }
+    }
+
+    /// Serializable schedule (CI uploads this next to the trace so a
+    /// failing soak is reproducible from artifacts alone).
+    pub fn to_json(&self) -> Json {
+        let ids = |s: &BTreeSet<u64>| {
+            Json::Arr(s.iter().map(|&id| Json::from(id as usize)).collect())
+        };
+        let spikes = self
+            .latency_spikes
+            .iter()
+            .map(|(&call, &spin)| {
+                Json::obj(vec![
+                    ("call", Json::from(call as usize)),
+                    ("spin", Json::from(spin as usize)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("transient_sessions", ids(&self.transient_sessions)),
+            ("persistent_sessions", ids(&self.persistent_sessions)),
+            ("latency_spikes", Json::Arr(spikes)),
+            ("resume_faults", Json::from(self.resume_faults as usize)),
+            (
+                "resume_hint_min",
+                if self.resume_hint_min == usize::MAX {
+                    Json::Null
+                } else {
+                    Json::from(self.resume_hint_min)
+                },
+            ),
+            ("resume_retryable", Json::Bool(self.resume_retryable)),
+        ])
+    }
+}
+
+/// How many faults of each class actually fired (assert coverage in
+/// tests: a plan that never trips proves nothing).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosTrips {
+    pub transient: u64,
+    pub persistent: u64,
+    pub resume: u64,
+    pub spikes: u64,
+}
+
+#[derive(Debug)]
+struct ChaosState {
+    plan: FaultPlan,
+    next_session: u64,
+    evals: u64,
+    trips: ChaosTrips,
+}
+
+/// A session with its chaos identity attached.
+#[derive(Debug)]
+pub struct ChaosSession<S> {
+    inner: S,
+    id: u64,
+}
+
+impl<S> ChaosSession<S> {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// Fault-injecting wrapper: see the module docs for the model.
+#[derive(Debug, Clone)]
+pub struct ChaosLm<L: Llm> {
+    inner: L,
+    st: Arc<Mutex<ChaosState>>,
+}
+
+impl<L: Llm> ChaosLm<L> {
+    pub fn new(inner: L, plan: FaultPlan) -> Self {
+        let st = ChaosState {
+            plan,
+            next_session: 0,
+            evals: 0,
+            trips: ChaosTrips::default(),
+        };
+        Self { inner, st: Arc::new(Mutex::new(st)) }
+    }
+
+    pub fn inner(&self) -> &L {
+        &self.inner
+    }
+
+    pub fn plan_json(&self) -> Json {
+        self.st.lock().unwrap().plan.to_json()
+    }
+
+    pub fn trips(&self) -> ChaosTrips {
+        self.st.lock().unwrap().trips
+    }
+
+    /// Deterministic CPU burn standing in for a slow device dispatch
+    /// (a spin, not a sleep: wall-clock noise would break timing-free
+    /// determinism arguments in tests).
+    fn spin(rounds: u64) {
+        let mut acc = 0x9e3779b97f4a7c15u64;
+        for i in 0..rounds {
+            acc = (acc ^ i).wrapping_mul(0xbf58476d1ce4e5b9);
+            acc ^= acc >> 27;
+        }
+        std::hint::black_box(acc);
+    }
+
+    /// One eval call: bump the call counter, burn any scheduled spike,
+    /// and return the fault (if any) for `session_id`.
+    fn fault_for(st: &mut ChaosState, session_id: u64) -> Option<EngineError> {
+        if st.plan.persistent_sessions.contains(&session_id) {
+            st.trips.persistent += 1;
+            return Some(EngineError::new(
+                ErrorKind::EvalPersistent,
+                format!("chaos: persistent eval fault on session {session_id}"),
+            ));
+        }
+        if st.plan.transient_sessions.contains(&session_id) {
+            st.trips.transient += 1;
+            return Some(EngineError::new(
+                ErrorKind::EvalTransient,
+                format!("chaos: transient eval fault on session {session_id}"),
+            ));
+        }
+        None
+    }
+
+    fn on_eval_call(st: &mut ChaosState) -> Option<u64> {
+        let call = st.evals;
+        st.evals += 1;
+        let spin = st.plan.latency_spikes.get(&call).copied();
+        if spin.is_some() {
+            st.trips.spikes += 1;
+        }
+        spin
+    }
+}
+
+impl<L: Llm> Llm for ChaosLm<L> {
+    type Session = ChaosSession<L::Session>;
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn param_count(&self) -> usize {
+        self.inner.param_count()
+    }
+
+    fn begin(&self) -> Result<Self::Session> {
+        let id = {
+            let mut st = self.st.lock().unwrap();
+            let id = st.next_session;
+            st.next_session += 1;
+            id
+        };
+        Ok(ChaosSession { inner: self.inner.begin()?, id })
+    }
+
+    fn begin_with_prefix(&self, prefix_hint: &[u32]) -> Result<Self::Session> {
+        let id = {
+            let mut st = self.st.lock().unwrap();
+            if st.trips.resume < st.plan.resume_faults
+                && prefix_hint.len() > st.plan.resume_hint_min
+            {
+                st.trips.resume += 1;
+                let e = if st.plan.resume_retryable {
+                    EngineError::new(
+                        ErrorKind::PoolExhausted,
+                        "chaos: resume denied (simulated pool exhaustion)",
+                    )
+                } else {
+                    EngineError::new(
+                        ErrorKind::EvalPersistent,
+                        "chaos: resume denied (terminal)",
+                    )
+                };
+                return Err(e.into());
+            }
+            let id = st.next_session;
+            st.next_session += 1;
+            id
+        };
+        Ok(ChaosSession { inner: self.inner.begin_with_prefix(prefix_hint)?, id })
+    }
+
+    fn cache_prefix(&self, tokens: &[u32]) {
+        self.inner.cache_prefix(tokens)
+    }
+
+    fn set_trace(&self, tracer: &crate::trace::Tracer) {
+        self.inner.set_trace(tracer)
+    }
+
+    fn pool_status(&self) -> Option<crate::kvcache::PoolStatus> {
+        self.inner.pool_status()
+    }
+
+    fn session_capacity(&self) -> usize {
+        self.inner.session_capacity()
+    }
+
+    fn eval_into(
+        &self,
+        session: &mut Self::Session,
+        nodes: &[EvalNode],
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
+        let fault = {
+            let mut st = self.st.lock().unwrap();
+            let spike = Self::on_eval_call(&mut st);
+            let fault = Self::fault_for(&mut st, session.id);
+            drop(st);
+            if let Some(rounds) = spike {
+                Self::spin(rounds);
+            }
+            fault
+        };
+        if let Some(e) = fault {
+            return Err(e.into());
+        }
+        self.inner.eval_into(&mut session.inner, nodes, out)
+    }
+
+    fn eval_batch_into(
+        &self,
+        groups: &mut [(&mut Self::Session, &[EvalNode])],
+        out: &mut LogitsBatch,
+    ) -> Result<()> {
+        // Fail BEFORE delegating: a faulted fused call must leave every
+        // session untouched so the engine can re-drive per group.
+        let fault = {
+            let mut st = self.st.lock().unwrap();
+            let spike = Self::on_eval_call(&mut st);
+            let fault = groups
+                .iter()
+                .find_map(|(s, _)| Self::fault_for(&mut st, s.id));
+            drop(st);
+            if let Some(rounds) = spike {
+                Self::spin(rounds);
+            }
+            fault
+        };
+        if let Some(e) = fault {
+            return Err(e.into());
+        }
+        let mut inner_groups: Vec<(&mut L::Session, &[EvalNode])> =
+            groups.iter_mut().map(|(s, n)| (&mut s.inner, *n)).collect();
+        self.inner.eval_batch_into(&mut inner_groups, out)
+    }
+
+    fn commit(&self, session: &mut Self::Session, accepted: &[usize]) -> Result<()> {
+        self.inner.commit(&mut session.inner, accepted)
+    }
+
+    fn prefix_len(&self, session: &Self::Session) -> usize {
+        self.inner.prefix_len(&session.inner)
+    }
+
+    fn capacity_left(&self, session: &Self::Session) -> usize {
+        self.inner.capacity_left(&session.inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimLm;
+
+    fn lm() -> SimLm {
+        SimLm::pair(7, 0.5, 16).0
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_disjoint() {
+        let cfg = ChaosConfig { sessions: 32, transient: 5, persistent: 3, ..Default::default() };
+        let a = FaultPlan::seeded(11, &cfg);
+        let b = FaultPlan::seeded(11, &cfg);
+        assert_eq!(a.transient_sessions, b.transient_sessions);
+        assert_eq!(a.persistent_sessions, b.persistent_sessions);
+        assert_eq!(a.latency_spikes, b.latency_spikes);
+        assert!(a.transient_sessions.is_disjoint(&a.persistent_sessions));
+        assert_eq!(a.transient_sessions.len(), 5);
+        assert_eq!(a.persistent_sessions.len(), 3);
+    }
+
+    #[test]
+    fn passthrough_matches_inner() {
+        let plain = lm();
+        let chaos = ChaosLm::new(lm(), FaultPlan::none());
+        let mut sp = plain.begin().unwrap();
+        let mut sc = chaos.begin().unwrap();
+        let nodes = [EvalNode::root(3), EvalNode::child(5, 0)];
+        let rp = plain.eval(&mut sp, &nodes).unwrap();
+        let rc = chaos.eval(&mut sc, &nodes).unwrap();
+        assert_eq!(rp, rc);
+        chaos.commit(&mut sc, &[0]).unwrap();
+        assert_eq!(chaos.prefix_len(&sc), 1);
+    }
+
+    #[test]
+    fn transient_fault_targets_one_session_and_clears_on_fresh_session() {
+        let plan = FaultPlan {
+            transient_sessions: [1u64].into_iter().collect(),
+            ..FaultPlan::none()
+        };
+        let chaos = ChaosLm::new(lm(), plan);
+        let mut s0 = chaos.begin().unwrap(); // id 0
+        let mut s1 = chaos.begin().unwrap(); // id 1 — faulted
+        let nodes = [EvalNode::root(2)];
+        assert!(chaos.eval(&mut s0, &nodes).is_ok());
+        let err = chaos.eval(&mut s1, &nodes).unwrap_err();
+        let e = EngineError::classify(&err);
+        assert_eq!(e.kind, ErrorKind::EvalTransient);
+        assert!(e.retryable);
+        // Dropping the poisoned session and opening a fresh one clears
+        // the fault (fresh sessions get new ids).
+        drop(s1);
+        let mut s2 = chaos.begin().unwrap(); // id 2
+        assert!(chaos.eval(&mut s2, &nodes).is_ok());
+        assert_eq!(chaos.trips().transient, 1);
+    }
+
+    #[test]
+    fn fused_fault_fails_before_mutating_any_session() {
+        let plan = FaultPlan {
+            persistent_sessions: [1u64].into_iter().collect(),
+            ..FaultPlan::none()
+        };
+        let chaos = ChaosLm::new(lm(), plan);
+        let mut s0 = chaos.begin().unwrap();
+        let mut s1 = chaos.begin().unwrap();
+        let n0 = [EvalNode::root(2)];
+        let n1 = [EvalNode::root(3)];
+        let mut out = LogitsBatch::default();
+        out.reset(chaos.vocab());
+        {
+            let mut groups = vec![(&mut s0, &n0[..]), (&mut s1, &n1[..])];
+            let err = chaos.eval_batch_into(&mut groups, &mut out).unwrap_err();
+            assert_eq!(EngineError::classify(&err).kind, ErrorKind::EvalPersistent);
+        }
+        assert_eq!(out.rows(), 0, "no rows may be appended by a failed fused call");
+        // The healthy session was not mutated: a per-group re-drive
+        // evaluates the same nodes cleanly.
+        assert!(chaos.eval_into(&mut s0, &n0, &mut out).is_ok());
+        assert_eq!(out.rows(), 1);
+    }
+
+    #[test]
+    fn resume_faults_fire_on_long_hints_only() {
+        let plan = FaultPlan {
+            resume_faults: 1,
+            resume_hint_min: 4,
+            resume_retryable: true,
+            ..FaultPlan::none()
+        };
+        let chaos = ChaosLm::new(lm(), plan);
+        // Short hint (a fresh prompt) never trips.
+        assert!(chaos.begin_with_prefix(&[1, 2, 3]).is_ok());
+        // Long hint (a resume) trips once, then the budget is spent.
+        let err = chaos.begin_with_prefix(&[1, 2, 3, 4, 5, 6]).unwrap_err();
+        let e = EngineError::classify(&err);
+        assert_eq!(e.kind, ErrorKind::PoolExhausted);
+        assert!(e.retryable);
+        assert!(chaos.begin_with_prefix(&[1, 2, 3, 4, 5, 6]).is_ok());
+        assert_eq!(chaos.trips().resume, 1);
+    }
+
+    #[test]
+    fn latency_spike_burns_but_preserves_results() {
+        let mut spikes = BTreeMap::new();
+        spikes.insert(0u64, 10_000u64);
+        let plan = FaultPlan { latency_spikes: spikes, ..FaultPlan::none() };
+        let chaos = ChaosLm::new(lm(), plan);
+        let plain = lm();
+        let mut sc = chaos.begin().unwrap();
+        let mut sp = plain.begin().unwrap();
+        let nodes = [EvalNode::root(9)];
+        assert_eq!(
+            chaos.eval(&mut sc, &nodes).unwrap(),
+            plain.eval(&mut sp, &nodes).unwrap()
+        );
+        assert_eq!(chaos.trips().spikes, 1);
+    }
+}

@@ -461,6 +461,19 @@ pub struct EngineConfig {
     pub watchdog_ms: u64,
     /// Where the watchdog writes its post-mortem JSON dump.
     pub watchdog_path: String,
+    /// Per-request budget of engine-side retries for *retryable* faults
+    /// (transient eval failures, pool exhaustion on resume). Each retry
+    /// suspends the stepper, requeues the request at the queue front,
+    /// and resumes after a deterministic backoff; past the budget the
+    /// request terminates with a `retries_exhausted` error.
+    pub retry_budget: usize,
+    /// Base backoff in engine rounds before a retried request is
+    /// re-eligible for admission; doubles per consecutive retry.
+    pub retry_backoff_rounds: usize,
+    /// `true` = queued requests whose `deadline_ms` has elapsed are shed
+    /// at admission boundaries with a typed retryable error. `false`
+    /// (the default) keeps deadlines as a pure scheduling hint.
+    pub enforce_deadlines: bool,
 }
 
 impl Default for EngineConfig {
@@ -480,6 +493,9 @@ impl Default for EngineConfig {
             trace_events: 0,
             watchdog_ms: 0,
             watchdog_path: "rsd-watchdog.json".into(),
+            retry_budget: 3,
+            retry_backoff_rounds: 2,
+            enforce_deadlines: false,
         }
     }
 }
@@ -543,6 +559,15 @@ impl EngineConfig {
         }
         if let Some(s) = j.get("watchdog_path").and_then(Json::as_str) {
             cfg.watchdog_path = s.to_string();
+        }
+        if let Some(v) = j.get("retry_budget").and_then(Json::as_usize) {
+            cfg.retry_budget = v;
+        }
+        if let Some(v) = j.get("retry_backoff_rounds").and_then(Json::as_usize) {
+            cfg.retry_backoff_rounds = v;
+        }
+        if let Some(v) = j.get("enforce_deadlines").and_then(Json::as_bool) {
+            cfg.enforce_deadlines = v;
         }
         if let Some(arr) = j.get("stop").and_then(Json::as_arr) {
             cfg.sampling.stop = parse_stop_tokens(arr)?;

@@ -280,6 +280,60 @@ impl<T> Batcher<T> {
         self.active_weight
     }
 
+    /// Drain queued requests whose declared deadline has already
+    /// elapsed while waiting (deadline *enforcement*, as opposed to the
+    /// deadline-ordered admission above). Only fresh arrivals are
+    /// considered: preempted victims at the front were admitted once and
+    /// keep their turn regardless. Returns the shed items for the caller
+    /// to report typed errors on.
+    pub fn shed_expired(&mut self) -> Vec<T> {
+        let mut shed = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let e = &self.queue[i];
+            let expired = e.deadline_ms != u64::MAX
+                && e.queued_at.elapsed().as_millis() as u64 > e.deadline_ms;
+            if expired {
+                // swap_remove is fine: admission order comes from the
+                // selection key, never from the backing vector's order
+                shed.push(self.queue.swap_remove(i).item);
+            } else {
+                i += 1;
+            }
+        }
+        if !shed.is_empty() {
+            self.sample_depth();
+        }
+        shed
+    }
+
+    /// Remove every waiting request (front or queued) matching `pred` —
+    /// the cancellation path. Returns the removed items.
+    pub fn remove_where<F: Fn(&T) -> bool>(&mut self, pred: F) -> Vec<T> {
+        let mut removed = Vec::new();
+        let mut i = 0;
+        while i < self.front.len() {
+            if pred(&self.front[i].1) {
+                let (_, item, _) = self.front.remove(i).expect("index checked");
+                removed.push(item);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.queue.len() {
+            if pred(&self.queue[i].item) {
+                removed.push(self.queue.swap_remove(i).item);
+            } else {
+                i += 1;
+            }
+        }
+        if !removed.is_empty() {
+            self.sample_depth();
+        }
+        removed
+    }
+
     pub fn queued(&self) -> usize {
         self.front.len() + self.queue.len()
     }
@@ -446,6 +500,33 @@ mod tests {
         c.requeue_front(1, 1);
         assert_eq!(c.admit(), Some(1));
         assert_eq!(c.admit(), Some(2));
+    }
+
+    #[test]
+    fn shed_expired_drops_only_overdue_fresh_arrivals() {
+        let mut b: Batcher<u32> = Batcher::new(1, 8);
+        b.offer_with(1, 0, Some(0)).unwrap(); // expires immediately
+        b.offer_with(2, 0, None).unwrap(); // no deadline: never shed
+        b.offer_with(3, 0, Some(60_000)).unwrap(); // generous: keeps waiting
+        b.requeue_front(4, 0); // preempted victim: exempt
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let shed = b.shed_expired();
+        assert_eq!(shed, vec![1]);
+        assert_eq!(b.queued(), 3);
+        assert_eq!(b.admit(), Some(4));
+    }
+
+    #[test]
+    fn remove_where_cancels_front_and_queue() {
+        let mut b: Batcher<u32> = Batcher::new(1, 8);
+        b.offer(1).unwrap();
+        b.offer(2).unwrap();
+        b.requeue_front(3, 0);
+        let mut removed = b.remove_where(|&x| x == 2 || x == 3);
+        removed.sort_unstable();
+        assert_eq!(removed, vec![2, 3]);
+        assert_eq!(b.queued(), 1);
+        assert_eq!(b.admit(), Some(1));
     }
 
     /// Regression: victims of SEPARATE preemption passes still resume

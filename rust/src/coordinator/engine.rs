@@ -77,6 +77,7 @@ use crate::trace::{EventKind, Tracer, PHASE_DRAFT, PHASE_HOST, PHASE_SCHED, PHAS
 use crate::util::Rng;
 
 use super::batcher::{Admitted, Batcher};
+use super::errors::{EngineError, ErrorKind};
 use super::metrics::Metrics;
 
 /// A generation request submitted to the engine.
@@ -130,8 +131,41 @@ pub enum Event {
     Tokens(Vec<u32>),
     /// Request finished; final stats + timeline.
     Done(RequestReport),
-    /// Request failed or was shed.
-    Error(String),
+    /// Request failed, was shed, or was cancelled. Terminal: a request
+    /// receives exactly one `Error` OR one `Done`, never both, and the
+    /// typed payload carries the scheduler's own retryability verdict.
+    Error(EngineError),
+}
+
+/// Cross-thread cancellation intake: front-ends mark request ids, the
+/// engine drains the set at phase boundaries and aborts the matching
+/// in-flight requests — active ones fail at the next reap point (their
+/// KV blocks return to the pool with the dropped stepper), queued,
+/// parked and retry-delayed ones are removed on the spot. Ids that are
+/// not in flight (already completed, never submitted) are ignored, so
+/// cancellation is always safe to request. Clone freely; all clones
+/// share one set.
+#[derive(Debug, Clone, Default)]
+pub struct CancelRegistry {
+    ids: Arc<Mutex<HashSet<u64>>>,
+}
+
+impl CancelRegistry {
+    /// Mark a request for cancellation at the engine's next phase
+    /// boundary.
+    pub fn request(&self, id: u64) {
+        self.ids.lock().unwrap().insert(id);
+    }
+
+    /// Cheap hot-path pre-check so phase boundaries skip the drain
+    /// while nothing is pending (the overwhelmingly common case).
+    fn is_empty(&self) -> bool {
+        self.ids.lock().unwrap().is_empty()
+    }
+
+    fn drain(&self) -> Vec<u64> {
+        self.ids.lock().unwrap().drain().collect()
+    }
 }
 
 enum AnyStepper<T: Llm, D: Llm> {
@@ -205,6 +239,18 @@ impl<T: Llm, D: Llm> AnyStepper<T, D> {
         }
     }
 
+    /// Abandon an in-flight round after a mid-round fault (the bounded
+    /// retry path): staged phase work is recycled, committed state is
+    /// kept, and the stepper suspends as if the round never started.
+    /// Legal in any phase, unlike `suspend`.
+    fn abort_round(&mut self, target: &T, draft: &D) -> Result<()> {
+        match self {
+            AnyStepper::Ar(s) => s.abort_round(target),
+            AnyStepper::Spec(s) => s.abort_round(target, draft),
+            AnyStepper::Adaptive(s) => s.abort_round(target, draft),
+        }
+    }
+
     /// Attach the flight recorder: the stepper journals its commit
     /// boundaries under this request's id.
     fn set_trace(&mut self, tracer: &Tracer, id: u64) {
@@ -225,8 +271,9 @@ enum RoundState {
     /// Request finished (this round or at `begin_round`); awaiting
     /// delivery + removal at the next reap point.
     Done,
-    /// Request failed; message to deliver at the next reap point.
-    Failed(String),
+    /// Request hit a fault; the next reap point decides policy (bounded
+    /// retry for retryable kinds, typed terminal error otherwise).
+    Failed(EngineError),
 }
 
 struct Active<T: Llm, D: Llm> {
@@ -252,6 +299,17 @@ struct Active<T: Llm, D: Llm> {
     /// recorded in metrics but do not overwrite it).
     queue_wait: f64,
     first_token_at: Option<f64>,
+    /// Mid-decode fault retries already consumed (bounded by
+    /// [`EngineConfig::retry_budget`]).
+    retries: u32,
+    /// RNG stream snapshot taken right after this round's successful
+    /// `begin_round`: an aborted round restores it, so the retried
+    /// round replays exactly the draws the faulted attempt consumed
+    /// and the request's final stream stays bit-identical to a
+    /// fault-free run. (AR commits its round token *inside*
+    /// `begin_round`, before the snapshot, so a committed draw is
+    /// never replayed.)
+    round_rng: Option<Rng>,
     state: RoundState,
 }
 
@@ -259,15 +317,19 @@ impl<T: Llm, D: Llm> Active<T, D> {
     /// Start this request's round now (used both at the pre-round begin
     /// phase and for mid-round joiners at a phase boundary).
     fn begin(&mut self, target: &T, draft: &D) {
+        self.round_rng = None;
         let start = match &mut self.stepper {
             AnyStepper::Ar(s) => s.begin_round(target, &mut self.rng),
             AnyStepper::Spec(s) => s.begin_round(target, draft),
             AnyStepper::Adaptive(s) => s.begin_round(target, draft),
         };
         self.state = match start {
-            Ok(RoundStart::Started) => RoundState::InRound,
+            Ok(RoundStart::Started) => {
+                self.round_rng = Some(self.rng.clone());
+                RoundState::InRound
+            }
             Ok(RoundStart::Finished) => RoundState::Done,
-            Err(e) => RoundState::Failed(e.to_string()),
+            Err(e) => RoundState::Failed(EngineError::classify(&e)),
         };
     }
 }
@@ -285,6 +347,9 @@ struct Parked<T: Llm, D: Llm> {
     started: Instant,
     queue_wait: f64,
     first_token_at: Option<f64>,
+    /// Fault retries already consumed (preserved across park/resume so
+    /// the per-request budget is global, not per-activation).
+    retries: u32,
 }
 
 /// Everything the serve loop mutates, bundled so every helper sees one
@@ -297,6 +362,15 @@ struct EngineState<T: Llm, D: Llm> {
     parked: HashMap<u64, Parked<T, D>>,
     /// Ids currently queued/active/parked (duplicate-id guard).
     in_flight: HashSet<u64>,
+    /// Fault-retried requests waiting out a deterministic backoff:
+    /// `(resume_round, request, rank)`. Entries re-enter the queue
+    /// front when `rounds` reaches `resume_round`, or immediately when
+    /// the engine would otherwise idle (waiting longer cannot change a
+    /// retry's outcome, only stall it).
+    delayed: Vec<(u64, Request, u64)>,
+    /// Retry counts of requests that faulted before ever activating
+    /// (admission-time stepper construction), keyed by id.
+    fresh_retries: HashMap<u64, u32>,
     /// Admission-rank source for preemption victim selection.
     next_seq: u64,
     /// The engine-wide flat logits buffer every fused phase writes into.
@@ -308,42 +382,44 @@ struct EngineState<T: Llm, D: Llm> {
 }
 
 /// Execute one phase's groups into the shared flat logits buffer and
-/// return a per-group outcome (the group's row range in `out`, or an
-/// error message), index-aligned with the groups. The buffer is engine-
+/// return a per-group outcome (the group's row range in `out`, or a
+/// typed error), index-aligned with the groups. The buffer is engine-
 /// owned and recycled across phases and rounds, so a phase performs no
 /// per-row allocation.
 ///
-/// Fused path: one `eval_batch_into` call; on error every participating
-/// session may hold half-applied pending state, so ALL groups fail.
-/// Sequential fallback (`EngineConfig::fused = false`): one `eval_into`
-/// per group, so an error stays confined to the request that hit it —
-/// the other sessions were touched by their own calls only.
+/// Fused path: one `eval_batch_into` call. On error the phase is
+/// **re-driven per group** through `eval_into` — blast-radius
+/// isolation: the atomicity contract on [`Llm::eval_batch_into`]
+/// guarantees a failed fused call mutated no session, so each group can
+/// be retried alone and only the request(s) that actually carry the
+/// fault fail; every co-batched healthy request produces exactly the
+/// rows it would have produced had the poisoned request never shared
+/// its batch. Sequential fallback (`EngineConfig::fused = false`) is
+/// the same per-group loop from the start.
 fn eval_phase<L: Llm>(
     lm: &L,
     fused: bool,
     groups: &mut [(&mut L::Session, &[EvalNode])],
     out: &mut LogitsBatch,
-) -> Vec<std::result::Result<std::ops::Range<usize>, String>> {
+) -> Vec<std::result::Result<std::ops::Range<usize>, EngineError>> {
     out.reset(lm.vocab());
     if fused {
-        let counts: Vec<usize> = groups.iter().map(|(_, nodes)| nodes.len()).collect();
-        return match lm.eval_batch_into(groups, out) {
+        match lm.eval_batch_into(groups, out) {
             Ok(()) => {
                 let mut start = 0;
-                counts
-                    .into_iter()
-                    .map(|n| {
-                        let r = start..start + n;
-                        start += n;
+                return groups
+                    .iter()
+                    .map(|(_, nodes)| {
+                        let r = start..start + nodes.len();
+                        start += nodes.len();
                         Ok(r)
                     })
-                    .collect()
+                    .collect();
             }
-            Err(e) => {
-                let msg = e.to_string();
-                (0..groups.len()).map(|_| Err(msg.clone())).collect()
-            }
-        };
+            // fall through to the per-group re-drive; the failed fused
+            // call appended no rows, but reset defensively anyway
+            Err(_) => out.reset(lm.vocab()),
+        }
     }
     groups
         .iter_mut()
@@ -351,7 +427,7 @@ fn eval_phase<L: Llm>(
             let start = out.rows();
             lm.eval_into(session, nodes, out)
                 .map(|()| start..out.rows())
-                .map_err(|e| e.to_string())
+                .map_err(|e| EngineError::classify(&e))
         })
         .collect()
 }
@@ -374,6 +450,10 @@ pub struct Engine<T: Llm, D: Llm> {
     /// Coarse engine state shared with the stall watchdog, refreshed at
     /// round boundaries (only while tracing is enabled).
     status: Arc<Mutex<EngineStatus>>,
+    /// Cancellation intake, drained at phase boundaries (empty and
+    /// inert unless a front-end was handed a clone via
+    /// [`Engine::with_cancels`]).
+    cancels: CancelRegistry,
 }
 
 impl<T: Llm, D: Llm> Engine<T, D> {
@@ -404,7 +484,16 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             acceptance: Arc::new(GlobalEstimator::default()),
             trace,
             status: Arc::new(Mutex::new(EngineStatus::default())),
+            cancels: CancelRegistry::default(),
         }
+    }
+
+    /// Share a cancellation registry with front-ends: ids marked through
+    /// any clone abort the matching requests at the engine's next phase
+    /// boundary (the server's `cancel` wire command feeds this).
+    pub fn with_cancels(mut self, cancels: CancelRegistry) -> Self {
+        self.cancels = cancels;
+        self
     }
 
     /// Shared handle to the engine's coarse status, for
@@ -425,7 +514,14 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         g.active.clear();
         g.active
             .extend(st.active.iter().map(|a| (a.req.id, a.stepper.committed() as u64)));
-        g.queued = st.batcher.queued();
+        // fault-delayed requests are still in flight: count the ones
+        // whose host state is NOT parked (parked covers the rest)
+        g.queued = st.batcher.queued()
+            + st
+                .delayed
+                .iter()
+                .filter(|(_, r, _)| !st.parked.contains_key(&r.id))
+                .count();
         g.parked = st.parked.len();
         g.pool = self.target.pool_status();
     }
@@ -495,9 +591,9 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         if st.in_flight.contains(&req.id) {
             self.metrics.add(&self.metrics.rejected, 1);
             self.trace.record(EventKind::ReqError, req.id, 0, 0);
-            let _ = req.resp.send(Event::Error(format!(
-                "duplicate request id {} (still in flight)",
-                req.id
+            let _ = req.resp.send(Event::Error(EngineError::new(
+                ErrorKind::InvalidRequest,
+                format!("duplicate request id {} (still in flight)", req.id),
             )));
             return;
         }
@@ -525,21 +621,30 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         if !(target_ok && draft_ok) {
             self.metrics.add(&self.metrics.rejected, 1);
             self.trace.record(EventKind::ReqError, req.id, 0, 0);
-            let _ = req.resp.send(Event::Error(format!(
-                "prompt too long or max_tokens too large: {} prompt tokens + {} \
-                 max_tokens + {} decode transients exceed session capacity",
-                req.prompt.len(),
-                req.max_new,
-                2 * weight + 4,
+            let _ = req.resp.send(Event::Error(EngineError::new(
+                ErrorKind::InvalidRequest,
+                format!(
+                    "prompt too long or max_tokens too large: {} prompt tokens + {} \
+                     max_tokens + {} decode transients exceed session capacity",
+                    req.prompt.len(),
+                    req.max_new,
+                    2 * weight + 4,
+                ),
             )));
             return;
         }
         let id = req.id;
         let (priority, deadline_ms) = (req.priority, req.deadline_ms);
         if let Err((req, _)) = st.batcher.offer_with(req, priority, deadline_ms) {
+            // load shedding, not a request defect: the typed payload is
+            // retryable so clients know to back off and resubmit
             self.metrics.add(&self.metrics.rejected, 1);
+            self.metrics.add(&self.metrics.shed, 1);
             self.trace.record(EventKind::ReqError, req.id, 0, 0);
-            let _ = req.resp.send(Event::Error("queue full".into()));
+            let _ = req.resp.send(Event::Error(EngineError::new(
+                ErrorKind::QueueFull,
+                format!("queue full ({} waiting)", st.batcher.queued()),
+            )));
         } else {
             st.in_flight.insert(id);
         }
@@ -620,6 +725,119 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         self.pools_fit(&needs)
     }
 
+    /// Deterministic exponential backoff, measured in fused rounds:
+    /// attempt 1 waits [`EngineConfig::retry_backoff_rounds`], each
+    /// further attempt doubles it (shift capped so pathological retry
+    /// budgets cannot overflow).
+    fn backoff_rounds(&self, attempt: u32) -> u64 {
+        (self.cfg.retry_backoff_rounds as u64) << attempt.saturating_sub(1).min(10)
+    }
+
+    /// Terminalize a fault that exhausted (or never had) a retry
+    /// budget: still-retryable kinds are wrapped as `retries_exhausted`
+    /// so the client sees both the policy verdict and the last cause;
+    /// terminal kinds pass through unchanged.
+    fn exhaust(&self, e: EngineError) -> EngineError {
+        if e.retryable {
+            EngineError::new(
+                ErrorKind::RetriesExhausted,
+                format!(
+                    "retry budget ({}) exhausted; last error: {e}",
+                    self.cfg.retry_budget
+                ),
+            )
+        } else {
+            e
+        }
+    }
+
+    /// Shed queued requests whose declared deadline already expired
+    /// (opt-in via [`EngineConfig::enforce_deadlines`]): each receives
+    /// one typed, retryable `deadline_expired` error instead of being
+    /// admitted into work whose result it can no longer use. Only fresh
+    /// arrivals are considered — requeued preemption victims and retry
+    /// re-admissions enter at the queue front, which never sheds, so
+    /// in-progress work is never thrown away here.
+    fn shed_expired(&self, st: &mut EngineState<T, D>) {
+        if !self.cfg.enforce_deadlines {
+            return;
+        }
+        for req in st.batcher.shed_expired() {
+            self.metrics.add(&self.metrics.shed, 1);
+            self.trace.record(EventKind::ReqError, req.id, 0, 0);
+            st.in_flight.remove(&req.id);
+            st.fresh_retries.remove(&req.id);
+            let _ = req.resp.send(Event::Error(EngineError::new(
+                ErrorKind::DeadlineExpired,
+                format!(
+                    "deadline of {}ms expired before admission",
+                    req.deadline_ms.unwrap_or(0)
+                ),
+            )));
+        }
+    }
+
+    /// Abort every request the cancel registry names, wherever it
+    /// stands. Active requests are marked failed and delivered at the
+    /// next reap point (dropping the stepper frees their KV blocks);
+    /// queued, retry-delayed and parked requests are removed on the
+    /// spot. Cancelled requests count in `metrics.cancelled`, not
+    /// `failed`, and receive exactly one typed `cancelled` error.
+    fn apply_cancels(&self, st: &mut EngineState<T, D>) {
+        if self.cancels.is_empty() {
+            return;
+        }
+        for id in self.cancels.drain() {
+            if !st.in_flight.contains(&id) {
+                continue; // completed, shed, or never submitted
+            }
+            if let Some(a) = st.active.iter_mut().find(|a| a.req.id == id) {
+                a.state = RoundState::Failed(EngineError::cancelled());
+                continue;
+            }
+            let mut reqs: Vec<Request> = st.batcher.remove_where(|r| r.id == id);
+            let mut i = 0;
+            while i < st.delayed.len() {
+                if st.delayed[i].1.id == id {
+                    reqs.push(st.delayed.swap_remove(i).1);
+                } else {
+                    i += 1;
+                }
+            }
+            // a parked stepper holds no KV (suspended), but drop its
+            // host state so nothing leaks
+            st.parked.remove(&id);
+            st.fresh_retries.remove(&id);
+            for req in reqs {
+                self.metrics.add(&self.metrics.cancelled, 1);
+                self.trace.record(EventKind::ReqError, id, 0, 0);
+                st.in_flight.remove(&id);
+                let _ = req.resp.send(Event::Error(EngineError::cancelled()));
+            }
+        }
+    }
+
+    /// Move every fault-delayed request whose backoff elapsed back to
+    /// the front of the queue (rank-ordered: retries resume
+    /// oldest-first, like preemption victims). With nothing else to
+    /// run, the backoff is cut short — delaying further would idle the
+    /// engine without changing any retry's outcome.
+    fn release_due_retries(&self, st: &mut EngineState<T, D>) {
+        if st.delayed.is_empty() {
+            return;
+        }
+        let force = st.active.is_empty() && st.batcher.queued() == 0;
+        let mut i = 0;
+        while i < st.delayed.len() {
+            if force || st.delayed[i].0 <= st.rounds {
+                let (_, req, seq) = st.delayed.swap_remove(i);
+                st.batcher.requeue_front(req, seq);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
     /// Admit every waiting request the scheduler, the concurrency cap,
     /// the weight cap and the KV headroom allow. This runs at EVERY
     /// phase boundary: `mid_round` joiners begin their round on the spot
@@ -627,6 +845,8 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     /// Under `EngineConfig::drain_batching` admission waits for a full
     /// drain instead (the A/B baseline).
     fn admit_ready(&self, st: &mut EngineState<T, D>, mid_round: bool) {
+        self.shed_expired(st);
+        self.release_due_retries(st);
         if self.cfg.drain_batching && !st.active.is_empty() {
             return;
         }
@@ -661,15 +881,36 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                             started: p.started,
                             queue_wait: p.queue_wait,
                             first_token_at: p.first_token_at,
+                            retries: p.retries,
+                            round_rng: None,
                             state: RoundState::Idle,
                         });
                     }
-                    Err(e) => {
-                        self.metrics.add(&self.metrics.failed, 1);
-                        self.trace.record(EventKind::ReqError, req.id, 0, 0);
-                        let _ = req.resp.send(Event::Error(e.to_string()));
+                    Err(err) => {
+                        // a failed resume leaves the stepper suspended
+                        // (sessions are re-acquired first, state is
+                        // mutated after), so a retryable fault — pool
+                        // exhaustion, a transient device error — parks
+                        // the host state again and retries after the
+                        // backoff instead of dropping generated work
+                        let e = EngineError::classify(&err);
+                        if e.retryable && (p.retries as usize) < self.cfg.retry_budget {
+                            p.retries += 1;
+                            self.metrics.add(&self.metrics.retries, 1);
+                            self.trace
+                                .record(EventKind::ReqPreempt, req.id, 0, p.retries);
+                            let resume_at = st.rounds + self.backoff_rounds(p.retries);
+                            let seq = p.seq;
+                            st.parked.insert(req.id, p);
+                            st.delayed.push((resume_at, req, seq));
+                        } else {
+                            let e = self.exhaust(e);
+                            self.metrics.add(&self.metrics.failed, 1);
+                            self.trace.record(EventKind::ReqError, req.id, 0, 0);
+                            let _ = req.resp.send(Event::Error(e));
+                            st.in_flight.remove(&req.id);
+                        }
                         st.batcher.release_weight(weight);
-                        st.in_flight.remove(&req.id);
                         continue;
                     }
                 }
@@ -697,6 +938,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                         let rng = Rng::seed_from_u64(self.cfg.seed ^ req.id);
                         let seq = st.next_seq;
                         st.next_seq += 1;
+                        let retries = st.fresh_retries.remove(&req.id).unwrap_or(0);
                         st.active.push(Active {
                             req,
                             stepper,
@@ -707,15 +949,37 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                             started: queued_at,
                             queue_wait: wait,
                             first_token_at: None,
+                            retries,
+                            round_rng: None,
                             state: RoundState::Idle,
                         });
                     }
-                    Err(e) => {
-                        self.metrics.add(&self.metrics.failed, 1);
-                        self.trace.record(EventKind::ReqError, req.id, 0, 0);
-                        let _ = req.resp.send(Event::Error(e.to_string()));
+                    Err(err) => {
+                        // stepper construction opens sessions, so this
+                        // is where admission meets pool exhaustion /
+                        // transient substrate faults: retryable ones
+                        // wait out a backoff and try again, bounded by
+                        // the same per-request budget
+                        let e = EngineError::classify(&err);
+                        let tries = st.fresh_retries.get(&req.id).copied().unwrap_or(0);
+                        if e.retryable && (tries as usize) < self.cfg.retry_budget {
+                            st.fresh_retries.insert(req.id, tries + 1);
+                            self.metrics.add(&self.metrics.retries, 1);
+                            self.trace
+                                .record(EventKind::ReqPreempt, req.id, 0, tries + 1);
+                            let resume_at = st.rounds + self.backoff_rounds(tries + 1);
+                            let seq = st.next_seq;
+                            st.next_seq += 1;
+                            st.delayed.push((resume_at, req, seq));
+                        } else {
+                            let e = self.exhaust(e);
+                            st.fresh_retries.remove(&req.id);
+                            self.metrics.add(&self.metrics.failed, 1);
+                            self.trace.record(EventKind::ReqError, req.id, 0, 0);
+                            let _ = req.resp.send(Event::Error(e));
+                            st.in_flight.remove(&req.id);
+                        }
                         st.batcher.release_weight(weight);
-                        st.in_flight.remove(&req.id);
                         continue;
                     }
                 }
@@ -785,6 +1049,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                             started: a.started,
                             queue_wait: a.queue_wait,
                             first_token_at: a.first_token_at,
+                            retries: a.retries,
                         },
                     );
                     debug_assert!(prev.is_none(), "duplicate in-flight request id");
@@ -795,7 +1060,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 Err(e) => {
                     self.metrics.add(&self.metrics.failed, 1);
                     self.trace.record(EventKind::ReqError, a.req.id, 0, 0);
-                    let _ = a.req.resp.send(Event::Error(e.to_string()));
+                    let _ = a.req.resp.send(Event::Error(EngineError::classify(&e)));
                     st.batcher.release_weight(a.weight);
                     st.in_flight.remove(&a.req.id);
                 }
@@ -880,17 +1145,80 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     self.flush_tokens(&mut a);
                     self.finish_request(st, a);
                 }
-                RoundState::Failed(e) => {
-                    self.metrics.add(&self.metrics.failed, 1);
-                    self.trace.record(EventKind::ReqError, a.req.id, 0, 0);
-                    let _ = a.req.resp.send(Event::Error(e));
-                    st.batcher.release_weight(a.weight);
-                    st.in_flight.remove(&a.req.id);
-                    // dropping `a` releases its KV blocks immediately
-                }
+                RoundState::Failed(e) => self.fail_or_retry(st, a, e),
                 _ => unreachable!("terminal state checked above"),
             }
         }
+    }
+
+    /// Policy point for every mid-decode fault. Cancellations and
+    /// terminal faults deliver exactly one typed error and free the
+    /// request's resources; retryable faults under the per-request
+    /// budget instead abort the round (recycling its staged work),
+    /// restore the round-entry RNG snapshot, park the stepper and
+    /// schedule a deterministic-backoff re-admission — the retried
+    /// request's final stream is bit-identical to a fault-free run.
+    fn fail_or_retry(&self, st: &mut EngineState<T, D>, mut a: Active<T, D>, e: EngineError) {
+        if e.kind == ErrorKind::Cancelled {
+            self.metrics.add(&self.metrics.cancelled, 1);
+            self.trace.record(EventKind::ReqError, a.req.id, 0, 0);
+            let _ = a.req.resp.send(Event::Error(e));
+            st.batcher.release_weight(a.weight);
+            st.in_flight.remove(&a.req.id);
+            // dropping `a` releases its KV blocks immediately
+            return;
+        }
+        let mut terminal = e;
+        if terminal.retryable && (a.retries as usize) < self.cfg.retry_budget {
+            match a.stepper.abort_round(&self.target, &self.draft) {
+                Ok(()) => {
+                    // replay the aborted round's RNG draws on retry
+                    if let Some(rng) = a.round_rng.take() {
+                        a.rng = rng;
+                    }
+                    let attempt = a.retries + 1;
+                    self.metrics.add(&self.metrics.retries, 1);
+                    self.trace.record(
+                        EventKind::ReqPreempt,
+                        a.req.id,
+                        a.stepper.committed() as u32,
+                        attempt,
+                    );
+                    st.batcher.release_weight(a.weight);
+                    let resume_at = st.rounds + self.backoff_rounds(attempt);
+                    let prev = st.parked.insert(
+                        a.req.id,
+                        Parked {
+                            stepper: a.stepper,
+                            rng: a.rng,
+                            sent: a.sent,
+                            seq: a.seq,
+                            started: a.started,
+                            queue_wait: a.queue_wait,
+                            first_token_at: a.first_token_at,
+                            retries: attempt,
+                        },
+                    );
+                    debug_assert!(prev.is_none(), "duplicate in-flight request id");
+                    st.delayed.push((resume_at, a.req, a.seq));
+                    return;
+                }
+                Err(abort_err) => {
+                    // the spill itself failed: nothing left to retry
+                    terminal = EngineError::new(
+                        ErrorKind::Internal,
+                        format!("round abort after fault ({terminal}) failed: {abort_err}"),
+                    );
+                }
+            }
+        } else {
+            terminal = self.exhaust(terminal);
+        }
+        self.metrics.add(&self.metrics.failed, 1);
+        self.trace.record(EventKind::ReqError, a.req.id, 0, 0);
+        let _ = a.req.resp.send(Event::Error(terminal));
+        st.batcher.release_weight(a.weight);
+        st.in_flight.remove(&a.req.id);
     }
 
     /// Blocking serve loop. Returns when the request channel closes and
@@ -905,6 +1233,8 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             parked: HashMap::new(),
             in_flight: HashSet::new(),
             next_seq: 0,
+            delayed: Vec::new(),
+            fresh_retries: HashMap::new(),
             logits: LogitsBatch::default(),
             rounds: 0,
             closed: false,
@@ -913,8 +1243,16 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         loop {
             // ---- intake + idle blocking ----------------------------------
             self.intake(&rx, &mut st);
+            self.apply_cancels(&mut st);
             self.update_status(&st);
             if st.active.is_empty() && st.batcher.queued() == 0 {
+                if !st.delayed.is_empty() {
+                    // only backoff-delayed retries remain: release them
+                    // now instead of blocking on the channel (waiting
+                    // longer cannot change a retry's outcome)
+                    self.release_due_retries(&mut st);
+                    continue;
+                }
                 if st.closed {
                     break;
                 }
@@ -979,8 +1317,11 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         self.trace
             .record(EventKind::PhaseBegin, round, PHASE_SCHED, st.active.len() as u32);
         for a in st.active.iter_mut() {
-            debug_assert!(matches!(a.state, RoundState::Idle));
-            a.begin(&self.target, &self.draft);
+            // non-Idle entries were marked by a cancellation between
+            // rounds; leave them for the reap below
+            if matches!(a.state, RoundState::Idle) {
+                a.begin(&self.target, &self.draft);
+            }
         }
         self.reap(st);
         self.trace
@@ -999,6 +1340,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 self.intake(rx, st);
                 self.admit_ready(st, true);
             }
+            self.apply_cancels(st);
             let in_round = st
                 .active
                 .iter()
@@ -1044,7 +1386,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                             AnyStepper::Ar(_) => unreachable!("AR stages no draft work"),
                         };
                         if let Err(e) = fed {
-                            a.state = RoundState::Failed(e.to_string());
+                            a.state = RoundState::Failed(EngineError::classify(&e));
                         }
                     }
                     Err(e) => a.state = RoundState::Failed(e),
@@ -1061,6 +1403,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
 
         // ---- phase 3: one fused target pass (verification) ---------------
         let ts = Instant::now();
+        self.apply_cancels(st);
         let in_round = st
             .active
             .iter()
@@ -1083,7 +1426,12 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                     groups.push(g);
                     who.push(i);
                 }
-                None => a.state = RoundState::Failed("round staged no target work".into()),
+                None => {
+                    a.state = RoundState::Failed(EngineError::new(
+                        ErrorKind::Internal,
+                        "round staged no target work",
+                    ))
+                }
             }
         }
         sched += ts.elapsed().as_secs_f64();
@@ -1121,7 +1469,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 a.state = match fed {
                     Ok(StepOutcome::Progress) => RoundState::Idle,
                     Ok(StepOutcome::Done) => RoundState::Done,
-                    Err(e) => RoundState::Failed(e.to_string()),
+                    Err(e) => RoundState::Failed(EngineError::classify(&e)),
                 };
                 if !matches!(a.state, RoundState::Failed(_)) {
                     self.metrics.add(&self.metrics.decode_rounds, 1);

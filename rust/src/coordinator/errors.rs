@@ -1,0 +1,188 @@
+//! Typed error taxonomy for the serving engine.
+//!
+//! Every failure that reaches a request's event stream is an
+//! [`EngineError`]: a coarse [`ErrorKind`] (stable wire code), a
+//! `retryable` flag the scheduler uses for policy (bounded retry vs
+//! immediate terminal error), and a human-readable detail string. The
+//! round loop never matches on error *strings* — `classify` maps
+//! whatever the substrate returns (including [`crate::kvcache::PoolExhausted`]
+//! surfaced through `anyhow`) onto the taxonomy exactly once, at the
+//! phase boundary where policy is decided.
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// Coarse failure class. The wire code (`code()`) is part of the
+/// protocol surface and must stay stable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrorKind {
+    /// Substrate eval failed but is expected to succeed on retry
+    /// (flaky interconnect, transient device fault).
+    EvalTransient,
+    /// Substrate eval fails deterministically for this request.
+    EvalPersistent,
+    /// KV block pool could not satisfy an allocation.
+    PoolExhausted,
+    /// The request's deadline elapsed before admission.
+    DeadlineExpired,
+    /// Admission queue was full at submit time.
+    QueueFull,
+    /// The client cancelled the request mid-flight.
+    Cancelled,
+    /// A transient fault persisted past the per-request retry budget.
+    RetriesExhausted,
+    /// The request itself was malformed or violated a limit.
+    InvalidRequest,
+    /// Anything the taxonomy cannot name; never retried.
+    Internal,
+}
+
+impl ErrorKind {
+    /// Stable snake_case wire code.
+    pub fn code(self) -> &'static str {
+        match self {
+            ErrorKind::EvalTransient => "eval_transient",
+            ErrorKind::EvalPersistent => "eval_persistent",
+            ErrorKind::PoolExhausted => "pool_exhausted",
+            ErrorKind::DeadlineExpired => "deadline_expired",
+            ErrorKind::QueueFull => "queue_full",
+            ErrorKind::Cancelled => "cancelled",
+            ErrorKind::RetriesExhausted => "retries_exhausted",
+            ErrorKind::InvalidRequest => "invalid_request",
+            ErrorKind::Internal => "internal",
+        }
+    }
+
+    /// Whether a client (or the engine itself) should expect a retry of
+    /// the same request to succeed. Engine-side bounded retry only
+    /// applies to a subset of these (see the engine's reap loop).
+    pub fn default_retryable(self) -> bool {
+        matches!(
+            self,
+            ErrorKind::EvalTransient
+                | ErrorKind::PoolExhausted
+                | ErrorKind::DeadlineExpired
+                | ErrorKind::QueueFull
+        )
+    }
+}
+
+/// The one error type requests terminate with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineError {
+    pub kind: ErrorKind,
+    pub retryable: bool,
+    pub detail: String,
+}
+
+impl EngineError {
+    pub fn new(kind: ErrorKind, detail: impl Into<String>) -> Self {
+        Self { kind, retryable: kind.default_retryable(), detail: detail.into() }
+    }
+
+    pub fn with_retryable(mut self, retryable: bool) -> Self {
+        self.retryable = retryable;
+        self
+    }
+
+    pub fn cancelled() -> Self {
+        Self::new(ErrorKind::Cancelled, "cancelled by client")
+    }
+
+    /// Map an arbitrary substrate/stepper error onto the taxonomy.
+    /// Typed errors pass through unchanged; known substrate failures
+    /// (pool exhaustion in either the paged or dense backing) classify
+    /// as retryable `PoolExhausted`; everything else is `Internal`.
+    pub fn classify(e: &anyhow::Error) -> Self {
+        if let Some(ee) = e.downcast_ref::<EngineError>() {
+            return ee.clone();
+        }
+        for cause in e.chain() {
+            if cause.downcast_ref::<crate::kvcache::PoolExhausted>().is_some() {
+                return Self::new(ErrorKind::PoolExhausted, format!("{e:#}"));
+            }
+        }
+        let msg = format!("{e:#}");
+        if msg.contains("KV cache exhausted") || msg.contains("pool exhausted") {
+            return Self::new(ErrorKind::PoolExhausted, msg);
+        }
+        Self::new(ErrorKind::Internal, msg)
+    }
+
+    /// Structured wire payload: `{code, retryable, message}`.
+    pub fn to_wire(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::Str(self.kind.code().to_string())),
+            ("retryable", Json::Bool(self.retryable)),
+            ("message", Json::Str(self.detail.clone())),
+        ])
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Detail leads so existing substring checks ("queue full",
+        // "prompt too long") keep matching on the rendered form.
+        write!(f, "{} [{}]", self.detail, self.kind.code())
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_unique() {
+        let kinds = [
+            ErrorKind::EvalTransient,
+            ErrorKind::EvalPersistent,
+            ErrorKind::PoolExhausted,
+            ErrorKind::DeadlineExpired,
+            ErrorKind::QueueFull,
+            ErrorKind::Cancelled,
+            ErrorKind::RetriesExhausted,
+            ErrorKind::InvalidRequest,
+            ErrorKind::Internal,
+        ];
+        let mut seen = std::collections::HashSet::new();
+        for k in kinds {
+            assert!(seen.insert(k.code()), "duplicate wire code {}", k.code());
+        }
+    }
+
+    #[test]
+    fn classify_passes_typed_errors_through() {
+        let e = EngineError::new(ErrorKind::EvalPersistent, "device poisoned");
+        let any = anyhow::Error::from(e.clone());
+        assert_eq!(EngineError::classify(&any), e);
+    }
+
+    #[test]
+    fn classify_maps_pool_exhaustion() {
+        let any = anyhow::Error::from(crate::kvcache::PoolExhausted);
+        let e = EngineError::classify(&any);
+        assert_eq!(e.kind, ErrorKind::PoolExhausted);
+        assert!(e.retryable);
+        // Dense backing reports exhaustion by message only.
+        let any = anyhow::anyhow!("KV cache exhausted: need 3 slots, 1 left");
+        assert_eq!(EngineError::classify(&any).kind, ErrorKind::PoolExhausted);
+    }
+
+    #[test]
+    fn wire_payload_shape() {
+        let e = EngineError::new(ErrorKind::QueueFull, "queue full (256 waiting)");
+        let w = e.to_wire();
+        assert_eq!(w.get("code").and_then(Json::as_str), Some("queue_full"));
+        assert_eq!(w.get("retryable").and_then(Json::as_bool), Some(true));
+        assert!(w.get("message").and_then(Json::as_str).unwrap().contains("queue full"));
+    }
+
+    #[test]
+    fn display_keeps_detail_substrings() {
+        let e = EngineError::new(ErrorKind::QueueFull, "queue full (256 waiting)");
+        assert!(e.to_string().contains("queue full"));
+    }
+}

@@ -38,6 +38,14 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// Requests dropped by load/deadline shedding: queue-full rejections
+    /// and queued requests whose deadline expired before admission.
+    pub shed: AtomicU64,
+    /// Engine-side bounded retries of transient faults (suspend +
+    /// requeue + resume cycles that were NOT memory-pressure preemptions).
+    pub retries: AtomicU64,
+    /// Requests aborted by a client `cancel` command.
+    pub cancelled: AtomicU64,
     pub tokens_out: AtomicU64,
     pub decode_rounds: AtomicU64,
     pub draft_calls: AtomicU64,
@@ -110,6 +118,12 @@ pub struct Snapshot {
     pub rejected: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Queue-full + expired-deadline sheds.
+    pub shed: u64,
+    /// Transient-fault retry cycles.
+    pub retries: u64,
+    /// Client-cancelled requests.
+    pub cancelled: u64,
     pub tokens_out: u64,
     pub decode_rounds: u64,
     pub draft_calls: u64,
@@ -340,6 +354,9 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
             tokens_out: self.tokens_out.load(Ordering::Relaxed),
             decode_rounds: self.decode_rounds.load(Ordering::Relaxed),
             draft_calls: self.draft_calls.load(Ordering::Relaxed),
@@ -413,6 +430,9 @@ impl Snapshot {
             ("rejected", Json::from(self.rejected as usize)),
             ("completed", Json::from(self.completed as usize)),
             ("failed", Json::from(self.failed as usize)),
+            ("shed", Json::from(self.shed as usize)),
+            ("retries", Json::from(self.retries as usize)),
+            ("cancelled", Json::from(self.cancelled as usize)),
             ("tokens_out", Json::from(self.tokens_out as usize)),
             ("decode_rounds", Json::from(self.decode_rounds as usize)),
             ("draft_calls", Json::from(self.draft_calls as usize)),

@@ -18,9 +18,11 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod errors;
 pub mod metrics;
 pub mod server;
 
 pub use batcher::Batcher;
-pub use engine::{Engine, Event, Request};
+pub use engine::{CancelRegistry, Engine, Event, Request};
+pub use errors::{EngineError, ErrorKind};
 pub use metrics::Metrics;

@@ -38,25 +38,42 @@
 //!   {"token": "t", "index": 3}
 //! Either way events are emitted as the engine commits them (per
 //! speculative round), never buffered to the end, and the line stream
-//! finishes with
-//!   {"done": {"generated": n, "block_efficiency": x,
+//! finishes with exactly one of
+//!   {"done": {"id": n, "generated": n, "block_efficiency": x,
 //!             "accept_rate_by_level": [..],
 //!             "nodes_per_round_hist": {"nodes": rounds, ..}, ...}}
-//!   {"error": "..."}
+//!   {"error": {"code": "...", "retryable": bool, "message": "..."},
+//!    "id": n?}
 //! The "done" payload carries the controller telemetry for the request:
 //! empirical acceptance rate per tree level, the histogram of
 //! draft-tree nodes the target processed per round (always <= B for
 //! adaptive decoders), and a "timeline" object with the request's
 //! scheduling summary (queue_wait_secs / ttft_secs / latency_secs,
-//! all measured from arrival).
+//! all measured from arrival). Error payloads are structured: "code" is
+//! a stable snake_case [`crate::coordinator::ErrorKind`] code and
+//! "retryable" is the engine's own verdict (e.g. `queue_full` and
+//! `deadline_expired` are worth resubmitting, `invalid_request` is not).
 //!
-//! Two admin commands share the line protocol (any object with a
-//! "cmd" field is a command, never a generation request):
-//!   {"cmd": "metrics"} → {"metrics": {..full snapshot..}}
-//!   {"cmd": "trace"}   → {"trace": {..chrome trace-event json..},
-//!                         "prometheus": "..text exposition.."}
+//! A request may carry its own "id" (a nonzero integer): it names the
+//! request in "done"/"error" events and — the point — makes it
+//! addressable by the `cancel` command below, including from another
+//! connection. Client-chosen ids live in the upper half of the id
+//! space (the server ORs in a high bit) so they can never collide with
+//! server-assigned ones; an id already in flight is answered with a
+//! typed `invalid_request` error.
+//!
+//! Admin commands share the line protocol (any object with a "cmd"
+//! field is a command, never a generation request):
+//!   {"cmd": "metrics"}          → {"metrics": {..full snapshot..}}
+//!   {"cmd": "trace"}            → {"trace": {..chrome trace-event json..},
+//!                                  "prometheus": "..text exposition.."}
+//!   {"cmd": "cancel", "id": n}  → {"cancelled": n}
 //! `trace` answers an error object unless the engine was started with
-//! tracing enabled ("trace_events" > 0 in the engine config).
+//! tracing enabled ("trace_events" > 0 in the engine config). `cancel`
+//! marks the id in the engine's cancel registry; the request itself
+//! (wherever it is — queued, mid-round, parked) receives one terminal
+//! `cancelled` error at the engine's next phase boundary. Cancelling an
+//! unknown or finished id is a harmless no-op (still acknowledged).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -72,20 +89,27 @@ use crate::trace::export::{chrome_trace, prometheus};
 use crate::trace::Tracer;
 use crate::util::Json;
 
-use super::engine::{Event, Request, RequestReport};
+use super::engine::{CancelRegistry, Event, Request, RequestReport};
+use super::errors::{EngineError, ErrorKind};
 use super::metrics::Metrics;
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
+/// Client-chosen request ids are mapped into the upper half of the id
+/// space so they can never collide with the server's own counter.
+const CLIENT_ID_BIT: u64 = 1 << 63;
+
 /// Server-side telemetry handles, shared by every connection: the
-/// metrics registry the engine updates (the `metrics` wire command) and
-/// the flight-recorder tracer (the `trace` wire command). Both default
-/// to absent/off — the observability commands then answer with an
+/// metrics registry the engine updates (the `metrics` wire command),
+/// the flight-recorder tracer (the `trace` wire command) and the
+/// engine's cancellation registry (the `cancel` wire command). All
+/// default to absent/off — the matching commands then answer with an
 /// error object instead of data.
 #[derive(Clone, Default)]
 pub struct ServeCtx {
     pub metrics: Option<Arc<Metrics>>,
     pub trace: Tracer,
+    pub cancels: Option<CancelRegistry>,
 }
 
 /// Serve forever. `submit` feeds the engine thread; `ctx` carries the
@@ -93,6 +117,16 @@ pub struct ServeCtx {
 pub fn serve(addr: &str, submit: mpsc::Sender<Request>, ctx: ServeCtx) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("rsd: serving on {addr}");
+    serve_listener(listener, submit, ctx)
+}
+
+/// Serve an already-bound listener (tests bind port 0 and keep the
+/// resolved address; production goes through [`serve`]).
+pub fn serve_listener(
+    listener: TcpListener,
+    submit: mpsc::Sender<Request>,
+    ctx: ServeCtx,
+) -> Result<()> {
     for stream in listener.incoming() {
         let stream = match stream {
             Ok(s) => s,
@@ -119,14 +153,33 @@ fn send_line(wr: &mut TcpStream, msg: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Structured error envelope: `{"error": {code, retryable, message}}`,
+/// optionally tagged with the request's wire id.
+fn wire_error(e: &EngineError, id: Option<u64>) -> Json {
+    let mut fields = vec![("error", e.to_wire())];
+    if let Some(id) = id {
+        fields.push(("id", (wire_id(id) as usize).into()));
+    }
+    Json::obj(fields)
+}
+
+/// Protocol-level failures (unparseable line, unknown command, missing
+/// capability) as the same structured envelope.
 fn err_json(e: impl std::fmt::Display) -> Json {
-    Json::obj(vec![("error", Json::Str(e.to_string()))])
+    wire_error(&EngineError::new(ErrorKind::InvalidRequest, e.to_string()), None)
+}
+
+/// The id a client sees: its own id for client-tagged requests,
+/// the server counter otherwise.
+fn wire_id(internal: u64) -> u64 {
+    internal & !CLIENT_ID_BIT
 }
 
 /// One parsed wire request (everything the engine's [`Request`] needs,
-/// plus connection-local framing preferences).
+/// plus connection-local framing preferences). Public so protocol
+/// robustness tests can drive the parser directly, without a socket.
 #[derive(Debug)]
-pub(crate) struct WireRequest {
+pub struct WireRequest {
     pub prompt: Vec<u32>,
     pub max_new: usize,
     pub decoder: Option<DecoderConfig>,
@@ -136,9 +189,14 @@ pub(crate) struct WireRequest {
     /// Per-token streaming: one `{"token", "index"}` event per committed
     /// token instead of per-commit `{"tokens"}` fragments.
     pub stream: bool,
+    /// Client-chosen id (already mapped into the client id space); the
+    /// handle the `cancel` command addresses.
+    pub id: Option<u64>,
 }
 
-pub(crate) fn parse_wire_request(line: &str, tok: &Tokenizer) -> Result<WireRequest> {
+/// Parse one request line. Must never panic, whatever the bytes: the
+/// fuzz suite in `tests/protocol.rs` holds it to that.
+pub fn parse_wire_request(line: &str, tok: &Tokenizer) -> Result<WireRequest> {
     let j = Json::parse(line)?;
     let prompt_text = j.str_field("prompt")?;
     let prompt = tok.encode(prompt_text);
@@ -167,13 +225,22 @@ pub(crate) fn parse_wire_request(line: &str, tok: &Tokenizer) -> Result<WireRequ
     };
     let deadline_ms = j.get("deadline_ms").and_then(Json::as_usize).map(|v| v as u64);
     let stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    let id = match j.get("id").and_then(Json::as_usize) {
+        Some(0) => anyhow::bail!("id must be a nonzero integer"),
+        Some(n) => Some(CLIENT_ID_BIT | n as u64),
+        None => match j.get("id") {
+            Some(_) => anyhow::bail!("id must be a nonzero integer"),
+            None => None,
+        },
+    };
     let sampling = if patch.is_empty() { None } else { Some(patch) };
-    Ok(WireRequest { prompt, max_new, decoder, sampling, priority, deadline_ms, stream })
+    Ok(WireRequest { prompt, max_new, decoder, sampling, priority, deadline_ms, stream, id })
 }
 
-/// Answer an admin command line (`{"cmd": "..."}`). Factored out of the
-/// connection loop so the protocol is testable without a socket.
-pub(crate) fn command_response(cmd: &str, ctx: &ServeCtx) -> Json {
+/// Answer an admin command line (`{"cmd": "..."}`, full object in `j`
+/// for argument-carrying commands). Factored out of the connection loop
+/// so the protocol is testable without a socket.
+pub(crate) fn command_response(cmd: &str, j: &Json, ctx: &ServeCtx) -> Json {
     match cmd {
         // full metrics snapshot (counters, gauges, histogram summaries)
         "metrics" => match &ctx.metrics {
@@ -192,6 +259,21 @@ pub(crate) fn command_response(cmd: &str, ctx: &ServeCtx) -> Json {
                 fields.push(("prometheus", Json::Str(prometheus(&m.snapshot()))));
             }
             Json::obj(fields)
+        }
+        // mark a request id for cancellation at the engine's next phase
+        // boundary; the addressed request receives its own terminal
+        // `cancelled` error on whatever connection submitted it
+        "cancel" => {
+            let Some(reg) = &ctx.cancels else {
+                return err_json("cancellation unavailable on this server");
+            };
+            match j.get("id").and_then(Json::as_usize) {
+                Some(n) if n > 0 => {
+                    reg.request(CLIENT_ID_BIT | n as u64);
+                    Json::obj(vec![("cancelled", n.into())])
+                }
+                _ => err_json("cancel requires a nonzero integer \"id\""),
+            }
         }
         other => err_json(format!("unknown command '{other}'")),
     }
@@ -216,6 +298,7 @@ pub(crate) fn done_json(report: &RequestReport) -> Json {
     let nodes_hist =
         Json::Obj(hist.into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect());
     let mut fields = vec![
+        ("id", (wire_id(report.id) as usize).into()),
         ("generated", stats.generated.into()),
         ("block_efficiency", stats.block_efficiency().into()),
         ("decode_calls", stats.decode_calls.into()),
@@ -276,10 +359,11 @@ fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>, ctx: ServeCtx) 
             continue;
         }
         // admin commands share the line protocol with generation
-        // requests: {"cmd": "metrics"} / {"cmd": "trace"}
+        // requests: {"cmd": "metrics"} / {"cmd": "trace"} /
+        // {"cmd": "cancel", "id": n}
         if let Ok(j) = Json::parse(&line) {
             if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
-                send_line(&mut wr, &command_response(cmd, &ctx))?;
+                send_line(&mut wr, &command_response(cmd, &j, &ctx))?;
                 continue;
             }
         }
@@ -292,8 +376,9 @@ fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>, ctx: ServeCtx) 
         };
         let per_token = wire.stream;
         let (tx, rx) = mpsc::channel();
+        let id = wire.id.unwrap_or_else(|| NEXT_ID.fetch_add(1, Ordering::Relaxed));
         let req = Request {
-            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            id,
             prompt: wire.prompt,
             max_new: wire.max_new,
             decoder: wire.decoder,
@@ -303,7 +388,8 @@ fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>, ctx: ServeCtx) 
             resp: tx,
         };
         if submit.send(req).is_err() {
-            send_line(&mut wr, &err_json("engine stopped"))?;
+            let e = EngineError::new(ErrorKind::Internal, "engine stopped");
+            send_line(&mut wr, &wire_error(&e, Some(id)))?;
             return Ok(());
         }
         let mut emitted = 0usize;
@@ -326,7 +412,7 @@ fn handle_conn(stream: TcpStream, submit: mpsc::Sender<Request>, ctx: ServeCtx) 
                     break;
                 }
                 Event::Error(e) => {
-                    send_line(&mut wr, &err_json(e))?;
+                    send_line(&mut wr, &wire_error(&e, Some(id)))?;
                     break;
                 }
             }
@@ -435,8 +521,9 @@ mod tests {
         metrics.add(&metrics.admitted, 3);
         metrics.add(&metrics.completed, 2);
         metrics.record_latency(0.25);
-        let ctx = ServeCtx { metrics: Some(metrics), trace: Tracer::off() };
-        let j = command_response("metrics", &ctx);
+        let ctx =
+            ServeCtx { metrics: Some(metrics), trace: Tracer::off(), cancels: None };
+        let j = command_response("metrics", &Json::Null, &ctx);
         // the reply must parse back and carry the full snapshot
         let j = Json::parse(&j.to_string()).unwrap();
         let m = j.get("metrics").expect("metrics object");
@@ -445,7 +532,7 @@ mod tests {
         let lat = m.get("latency").expect("latency summary");
         assert_eq!(lat.get("count").and_then(Json::as_usize), Some(1));
         // no metrics attached → an error object, not a panic
-        let none = command_response("metrics", &ServeCtx::default());
+        let none = command_response("metrics", &Json::Null, &ServeCtx::default());
         assert!(none.get("error").is_some());
     }
 
@@ -454,8 +541,12 @@ mod tests {
         let trace = Tracer::new(64);
         trace.record(crate::trace::EventKind::ReqArrive, 1, 5, 0);
         trace.record(crate::trace::EventKind::ReqDone, 1, 8, 0);
-        let ctx = ServeCtx { metrics: Some(Arc::new(Metrics::default())), trace };
-        let j = command_response("trace", &ctx);
+        let ctx = ServeCtx {
+            metrics: Some(Arc::new(Metrics::default())),
+            trace,
+            cancels: None,
+        };
+        let j = command_response("trace", &Json::Null, &ctx);
         let j = Json::parse(&j.to_string()).unwrap();
         let events =
             j.get("trace").and_then(|t| t.get("traceEvents")).and_then(Json::as_arr).unwrap();
@@ -464,10 +555,57 @@ mod tests {
         let prom = j.get("prometheus").and_then(Json::as_str).unwrap();
         assert!(prom.contains("rsd_requests_completed_total"));
         // tracing off → an error object
-        let off = command_response("trace", &ServeCtx::default());
+        let off = command_response("trace", &Json::Null, &ServeCtx::default());
         assert!(off.get("error").is_some());
         // unknown commands answer cleanly too
-        assert!(command_response("bogus", &ctx).get("error").is_some());
+        assert!(command_response("bogus", &Json::Null, &ctx).get("error").is_some());
+    }
+
+    #[test]
+    fn cancel_command_marks_the_mapped_id() {
+        let reg = CancelRegistry::default();
+        let ctx = ServeCtx {
+            metrics: None,
+            trace: Tracer::off(),
+            cancels: Some(reg.clone()),
+        };
+        let line = Json::parse(r#"{"cmd": "cancel", "id": 7}"#).unwrap();
+        let j = command_response("cancel", &line, &ctx);
+        assert_eq!(j.get("cancelled").and_then(Json::as_usize), Some(7));
+        // no id / zero id / no registry are clean error objects
+        let noid = Json::parse(r#"{"cmd": "cancel"}"#).unwrap();
+        assert!(command_response("cancel", &noid, &ctx).get("error").is_some());
+        let zero = Json::parse(r#"{"cmd": "cancel", "id": 0}"#).unwrap();
+        assert!(command_response("cancel", &zero, &ctx).get("error").is_some());
+        assert!(command_response("cancel", &line, &ServeCtx::default())
+            .get("error")
+            .is_some());
+    }
+
+    #[test]
+    fn client_ids_map_into_the_upper_half_and_back() {
+        let tok = Tokenizer::new();
+        let w = parse_wire_request(r#"{"prompt": "hi", "id": 42}"#, &tok).unwrap();
+        let internal = w.id.unwrap();
+        assert_eq!(internal, CLIENT_ID_BIT | 42);
+        assert_eq!(wire_id(internal), 42);
+        // zero and non-numeric ids are clean parse errors
+        assert!(parse_wire_request(r#"{"prompt": "hi", "id": 0}"#, &tok).is_err());
+        assert!(parse_wire_request(r#"{"prompt": "hi", "id": "x"}"#, &tok).is_err());
+    }
+
+    #[test]
+    fn error_envelope_is_structured() {
+        let e = EngineError::new(ErrorKind::QueueFull, "queue full (9 waiting)");
+        let j = wire_error(&e, Some(CLIENT_ID_BIT | 3));
+        let inner = j.get("error").expect("error object");
+        assert_eq!(inner.get("code").and_then(Json::as_str), Some("queue_full"));
+        assert_eq!(inner.get("retryable").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("id").and_then(Json::as_usize), Some(3));
+        // protocol-level failures use the same envelope
+        let pe = err_json("bad request: not json");
+        let inner = pe.get("error").expect("error object");
+        assert_eq!(inner.get("code").and_then(Json::as_str), Some("invalid_request"));
     }
 
     #[test]
@@ -488,6 +626,7 @@ mod tests {
         };
         let j = done_json(&report);
         let done = j.get("done").unwrap();
+        assert_eq!(done.get("id").and_then(Json::as_usize), Some(9));
         let rates = done.get("accept_rate_by_level").and_then(Json::as_arr).unwrap();
         assert_eq!(rates.len(), 2);
         assert!((rates[0].as_f64().unwrap() - 0.75).abs() < 1e-12);

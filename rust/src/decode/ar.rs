@@ -179,6 +179,23 @@ impl<T: Llm> ArStepper<T> {
         Ok(())
     }
 
+    /// Abandon an in-flight round after a mid-round fault (the engine's
+    /// bounded-retry path): recycle the staged nodes, then suspend as if
+    /// the round had never started. Any token this round's `begin_round`
+    /// sampled is already committed in `out` (AR tokens are final at
+    /// sampling), so the rebuilt prefill includes it and the retried
+    /// request never replays an RNG draw.
+    pub fn abort_round(&mut self, target: &T) -> Result<()> {
+        match mem::replace(&mut self.phase, Phase::Idle) {
+            Phase::Idle => {}
+            Phase::AwaitPrefill { mut nodes } | Phase::AwaitDecode { mut nodes } => {
+                nodes.clear();
+                self.node_pool.push(nodes);
+            }
+        }
+        self.suspend(target)
+    }
+
     /// Start a round: sample the next token from the current distribution
     /// and stage its evaluation, or stage the prompt prefill on round 1.
     /// [`RoundStart::Finished`] means the request just finished without

@@ -596,6 +596,43 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         Ok(())
     }
 
+    /// Abandon an in-flight round after a mid-round fault (the engine's
+    /// bounded-retry path): recycle every staged phase/round buffer back
+    /// to its pool, then suspend as if the round had never started.
+    /// Dropping the sessions discards whatever pending KV a partial
+    /// phase already appended; the tails are rebuilt as prompt +
+    /// generated, so the resumed request replays from its last commit
+    /// boundary. Consumes no RNG — with the engine's round-start RNG
+    /// snapshot restored, the retried round redraws identically.
+    pub fn abort_round(&mut self, target: &T, draft: &D) -> Result<()> {
+        match mem::replace(&mut self.phase, Phase::Idle) {
+            Phase::Idle => {}
+            Phase::AwaitDraft { mut nodes, .. } | Phase::AwaitTarget { mut nodes } => {
+                nodes.clear();
+                self.node_pool.push(nodes);
+            }
+        }
+        if let Some(mut ctx) = self.round.take() {
+            // mirror feed_target's recycle block: every pooled buffer
+            // the aborted round holds goes back to its pool
+            self.scratch.recycle(mem::take(&mut ctx.tree.root_draft_lp));
+            for n in ctx.tree.nodes.drain(..) {
+                if let Some(lp) = n.draft_lp {
+                    self.scratch.recycle(lp);
+                }
+            }
+            for mut lvl in ctx.tree.levels.drain(..) {
+                lvl.clear();
+                self.level_pool.push(lvl);
+            }
+            for lp in self.node_target_lp.drain(..) {
+                self.scratch.recycle(lp);
+            }
+            self.spare = Some(ctx);
+        }
+        self.suspend(target, draft)
+    }
+
     fn finish(&mut self) -> StepOutcome {
         self.out.truncate(self.max_new);
         self.stats.generated = self.out.len();

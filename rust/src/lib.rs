@@ -33,6 +33,7 @@
 
 pub mod adaptive;
 pub mod bench;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod decode;

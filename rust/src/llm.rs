@@ -235,10 +235,17 @@ pub trait Llm {
     /// on. Implementations override this to amortize per-call overhead
     /// (one padded device dispatch instead of N).
     ///
-    /// On error, sessions of earlier groups may already hold the new
-    /// pending nodes while their rows are lost; callers must treat every
-    /// participating session as poisoned (the engine fails all
-    /// participating requests).
+    /// Error contract: a fused implementation SHOULD validate every
+    /// group up front and fail *before mutating any session* — that is
+    /// what lets the engine isolate blast radius by re-driving a failed
+    /// phase per group through [`Llm::eval_into`], where only the
+    /// poisoned group(s) fail and every other group produces identical
+    /// rows ([`crate::sim::SimLm`] and [`crate::chaos::ChaosLm`] uphold
+    /// this). This default fallback loop is best-effort only: an
+    /// earlier group may already hold its new pending nodes when a
+    /// later group fails, so under the default a caller must still
+    /// treat participating sessions as suspect. Fused substrates used
+    /// by the serving engine override this with the atomic form.
     fn eval_batch_into(
         &self,
         groups: &mut [(&mut Self::Session, &[EvalNode])],

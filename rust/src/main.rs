@@ -110,7 +110,12 @@ fn main() -> Result<()> {
             let trace = Tracer::new(cfg.trace_events);
             let watchdog_ms = cfg.watchdog_ms;
             let watchdog_path = cfg.watchdog_path.clone();
-            let ctx = server::ServeCtx { metrics: Some(metrics.clone()), trace: trace.clone() };
+            let cancels = rsd::coordinator::CancelRegistry::default();
+            let ctx = server::ServeCtx {
+                metrics: Some(metrics.clone()),
+                trace: trace.clone(),
+                cancels: Some(cancels.clone()),
+            };
             let spawn_watchdog = |status| {
                 Watchdog::spawn(
                     trace.clone(),
@@ -138,7 +143,8 @@ fn main() -> Result<()> {
                     SimLm::pair(seed, 0.8, 256)
                 };
                 let eng =
-                    engine::Engine::with_telemetry(target, draft, cfg, metrics, trace.clone());
+                    engine::Engine::with_telemetry(target, draft, cfg, metrics, trace.clone())
+                        .with_cancels(cancels);
                 let _watchdog = spawn_watchdog(eng.status_handle());
                 let (tx, _handle) = engine::spawn(eng);
                 server::serve(&addr, tx, ctx)?;
@@ -158,7 +164,8 @@ fn main() -> Result<()> {
                         cfg,
                         eng_metrics,
                         eng_trace,
-                    );
+                    )
+                    .with_cancels(cancels);
                     let _ = status_tx.send(eng.status_handle());
                     Ok(eng)
                 });

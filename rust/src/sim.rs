@@ -16,10 +16,10 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::kvcache::{KvConfig, KvPool, PagedSlots, PoolStatus};
-use crate::llm::{EvalNode, Llm, LogitsBatch};
+use crate::llm::{EvalNode, Llm, LogitsBatch, PARENT_PREFIX};
 use crate::sampling::kernels;
 use crate::tree::SessionCore;
 
@@ -306,12 +306,39 @@ impl Llm for SimLm {
     /// production path ([`SimLm::eval_rows_into`]), so fused and
     /// per-session results cannot diverge (also property-tested in
     /// tests/fused.rs).
+    ///
+    /// Upholds the fused atomicity contract ([`Llm::eval_batch_into`]):
+    /// every group is validated (capacity, parent topology) before any
+    /// session is mutated, so a failing fused call leaves all sessions
+    /// untouched and the engine can re-drive per group. Residual: with a
+    /// shared paged pool, one group's allocations can starve a later
+    /// group mid-call — the engine's admission headroom check prevents
+    /// co-scheduling groups that don't jointly fit.
     fn eval_batch_into(
         &self,
         groups: &mut [(&mut Self::Session, &[EvalNode])],
         out: &mut LogitsBatch,
     ) -> Result<()> {
         self.spin_dispatch();
+        for (s, nodes) in groups.iter() {
+            if nodes.len() > s.core.capacity_left() {
+                bail!(
+                    "KV cache exhausted: need {} slots, {} free",
+                    nodes.len(),
+                    s.core.capacity_left()
+                );
+            }
+            let start = s.core.pending.len();
+            for (i, n) in nodes.iter().enumerate() {
+                if n.parent != PARENT_PREFIX && n.parent as usize >= start + i {
+                    bail!(
+                        "node {} references parent {} not yet evaluated",
+                        start + i,
+                        n.parent
+                    );
+                }
+            }
+        }
         for (s, nodes) in groups.iter_mut() {
             self.eval_rows_into(s, nodes, out)?;
         }

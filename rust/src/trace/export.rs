@@ -218,6 +218,9 @@ pub fn prometheus(s: &Snapshot) -> String {
     prom_line(&mut o, "rsd_requests_rejected_total", "counter", s.rejected as f64);
     prom_line(&mut o, "rsd_requests_completed_total", "counter", s.completed as f64);
     prom_line(&mut o, "rsd_requests_failed_total", "counter", s.failed as f64);
+    prom_line(&mut o, "rsd_requests_shed_total", "counter", s.shed as f64);
+    prom_line(&mut o, "rsd_retries_total", "counter", s.retries as f64);
+    prom_line(&mut o, "rsd_requests_cancelled_total", "counter", s.cancelled as f64);
     prom_line(&mut o, "rsd_tokens_out_total", "counter", s.tokens_out as f64);
     prom_line(&mut o, "rsd_decode_rounds_total", "counter", s.decode_rounds as f64);
     prom_line(&mut o, "rsd_draft_calls_total", "counter", s.draft_calls as f64);
@@ -329,6 +332,9 @@ mod tests {
             "rsd_request_latency_seconds{quantile=\"0.5\"}",
             "rsd_phase_draft_seconds_count 1",
             "rsd_kv_blocks_total",
+            "# TYPE rsd_requests_shed_total counter",
+            "rsd_retries_total 0",
+            "rsd_requests_cancelled_total 0",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

@@ -23,7 +23,7 @@ pub enum Json {
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -116,12 +116,24 @@ impl From<usize> for Json {
     }
 }
 
+/// Nesting cap for the recursive-descent parser: hostile input
+/// (`[[[[...`) must return an error, not overflow the thread stack.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} at byte {}", self.i);
+        }
+        Ok(())
+    }
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -222,11 +234,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -242,6 +256,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 other => bail!("expected ',' or '}}', got {other:?}"),
@@ -250,11 +265,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut a = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(a));
         }
         loop {
@@ -265,6 +282,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(a));
                 }
                 other => bail!("expected ',' or ']', got {other:?}"),
@@ -337,6 +355,19 @@ fn write_json(v: &Json, out: &mut String) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        let deep = "[".repeat(100_000) + &"]".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+        let mixed = "{\"a\":".repeat(10_000) + "1" + &"}".repeat(10_000);
+        assert!(Json::parse(&mixed).is_err());
+        // Sane nesting stays parseable.
+        let ok = "[".repeat(64) + &"]".repeat(64);
+        assert!(Json::parse(&ok).is_ok());
+        // Huge exponents saturate to inf rather than failing or panicking.
+        assert!(Json::parse("1e999").is_ok());
+    }
 
     #[test]
     fn parses_manifest_like_document() {

@@ -1,0 +1,607 @@
+//! Fault-injection chaos tier: the engine under a seeded [`ChaosLm`]
+//! fault schedule — transient and persistent eval faults, resume-path
+//! failures, latency spikes — combined with enforced deadlines and
+//! client cancellation, over the same undersized paged pool the soak
+//! suite uses to force preemption churn.
+//!
+//! Invariants asserted:
+//! * no deadlock — every request reaches a terminal state (watchdog
+//!   timeout per receive turns a hang into a failure);
+//! * exactly one terminal event per request — a `Done` or a typed
+//!   `Error`, never both, never two;
+//! * blast-radius isolation — a fused-batch eval fault fails only the
+//!   poisoned request; co-batched requests stream bit-identical to a
+//!   fault-free reference run;
+//! * bounded retry — transient faults retry with deterministic backoff
+//!   and the retried streams are bit-identical to the reference
+//!   (round-start RNG snapshots make replays invisible);
+//! * typed terminal errors — persistent faults, shed deadlines and
+//!   cancellations each surface their own [`ErrorKind`];
+//! * zero leaked KV blocks after the engine drains.
+
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use rsd::bench::harness;
+use rsd::chaos::{ChaosConfig, ChaosLm, FaultPlan};
+use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig, SamplingPatch};
+use rsd::coordinator::engine::{spawn, CancelRegistry, Engine, Event, Request};
+use rsd::coordinator::errors::{EngineError, ErrorKind};
+use rsd::coordinator::metrics::{Metrics, Snapshot};
+use rsd::decode::DecodeStats;
+use rsd::kvcache::KvConfig;
+use rsd::llm::Llm;
+use rsd::sim::SimLm;
+use rsd::trace::export::chrome_trace;
+use rsd::trace::{TraceEvent, Tracer};
+use rsd::util::json::Json;
+use rsd::util::Rng;
+
+const VOCAB: usize = 32;
+const N_REQUESTS: u64 = 200;
+const SIM_SEED: u64 = 17;
+const ENGINE_SEED: u64 = 99;
+const PLAN_SEED: u64 = 4242;
+
+/// Requests cancelled right after submission: low priority and deep in
+/// the queue, so they are still queued when the mark lands.
+const CANCEL_IDS: std::ops::RangeInclusive<u64> = 180..=185;
+
+/// One pre-generated request, so the chaos run and the fault-free
+/// reference run submit byte-identical workloads.
+#[derive(Clone)]
+struct Spec {
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    decoder: Option<DecoderConfig>,
+    sampling: Option<SamplingPatch>,
+    priority: u8,
+    deadline_ms: Option<u64>,
+}
+
+fn is_deadline_victim(id: u64) -> bool {
+    id % 13 == 5
+}
+
+/// Seeded-random workload, mirroring the soak generator (adaptive
+/// decoders excluded: their tree shapes depend on the shared estimator
+/// and scheduling, which would break bit-identity). Differences from
+/// the soak: requests with `id % 13 == 5` carry an already-hopeless
+/// 1 ms deadline (the chaos engine enforces deadlines, the reference
+/// treats them as scheduling hints), and the cancellation victims are
+/// pinned to priority 0 so they cannot be admitted before the cancel
+/// mark lands.
+fn build_workload(seed: u64) -> Vec<Spec> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let decoders: [Option<DecoderConfig>; 6] = [
+        None, // engine default (rsd-s:3x3)
+        Some(DecoderConfig::Ar),
+        Some(DecoderConfig::Sd { l: 3 }),
+        Some(DecoderConfig::RsdC { branches: vec![2, 2] }),
+        Some(DecoderConfig::RsdS { w: 3, l: 2 }),
+        Some(DecoderConfig::SpecTr { k: 2, l: 2 }),
+    ];
+    (0..N_REQUESTS)
+        .map(|id| {
+            let prompt_len = 1 + rng.gen_range(20);
+            let prompt: Vec<u32> =
+                (0..prompt_len).map(|_| rng.gen_range(VOCAB) as u32).collect();
+            let max_new = 1 + rng.gen_range(12);
+            let decoder = decoders[rng.gen_range(decoders.len())].clone();
+            let sampling = if rng.gen_range(4) == 0 {
+                Some(SamplingPatch {
+                    stop: Some(vec![rng.gen_range(VOCAB) as u32]),
+                    ..Default::default()
+                })
+            } else {
+                None
+            };
+            let priority =
+                if CANCEL_IDS.contains(&id) { 0 } else { rng.gen_range(3) as u8 };
+            let deadline_ms = if is_deadline_victim(id) { Some(1) } else { None };
+            Spec { id, prompt, max_new, decoder, sampling, priority, deadline_ms }
+        })
+        .collect()
+}
+
+/// Terminal outcome of one request.
+#[derive(Debug)]
+enum Outcome {
+    Done(Vec<u32>, DecodeStats),
+    Fail(Vec<u32>, EngineError),
+}
+
+impl Outcome {
+    fn stream(&self) -> &[u32] {
+        match self {
+            Outcome::Done(t, _) | Outcome::Fail(t, _) => t,
+        }
+    }
+}
+
+/// Submit the workload, optionally cancel `cancel_ids` right after
+/// submission, drain every receiver to its terminal event (watchdog
+/// per receive), and — after the engine exits — verify each response
+/// channel is closed with nothing after the terminal event.
+fn run_workload<T, D>(
+    target: T,
+    draft: D,
+    cfg: EngineConfig,
+    specs: &[Spec],
+    cancel_ids: &[u64],
+) -> (Vec<Outcome>, Snapshot, Vec<TraceEvent>)
+where
+    T: Llm + Send + 'static,
+    D: Llm + Send + 'static,
+    T::Session: Send,
+    D::Session: Send,
+{
+    let trace = Tracer::new(cfg.trace_events);
+    let cancels = CancelRegistry::default();
+    let engine =
+        Engine::with_telemetry(target, draft, cfg, Arc::new(Metrics::default()), trace.clone())
+            .with_cancels(cancels.clone());
+    let (tx, handle) = spawn(engine);
+    let mut receivers = Vec::new();
+    for s in specs {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id: s.id,
+            prompt: s.prompt.clone(),
+            max_new: s.max_new,
+            decoder: s.decoder.clone(),
+            sampling: s.sampling.clone(),
+            priority: s.priority,
+            deadline_ms: s.deadline_ms,
+            resp: rtx,
+        })
+        .unwrap();
+        receivers.push((s.id, rrx));
+    }
+    for &id in cancel_ids {
+        cancels.request(id);
+    }
+    drop(tx);
+    let mut results = Vec::new();
+    for (id, rrx) in &receivers {
+        let mut toks = Vec::new();
+        loop {
+            match rrx.recv_timeout(Duration::from_secs(180)) {
+                Ok(Event::Tokens(t)) => toks.extend(t),
+                Ok(Event::Done(r)) => {
+                    results.push(Outcome::Done(std::mem::take(&mut toks), r.stats));
+                    break;
+                }
+                Ok(Event::Error(e)) => {
+                    results.push(Outcome::Fail(std::mem::take(&mut toks), e));
+                    break;
+                }
+                Err(e) => panic!("request {id} starved or engine deadlocked: {e}"),
+            }
+        }
+    }
+    let snap = handle.join().unwrap().snapshot();
+    // Engine gone -> every sender dropped. A channel still holding an
+    // event means a request received something AFTER its terminal
+    // event; a non-disconnected channel means a leaked sender.
+    for (id, rrx) in &receivers {
+        match rrx.try_recv() {
+            Err(mpsc::TryRecvError::Disconnected) => {}
+            Ok(ev) => panic!("request {id}: event after terminal state: {ev:?}"),
+            Err(mpsc::TryRecvError::Empty) => {
+                panic!("request {id}: response sender leaked past engine exit")
+            }
+        }
+    }
+    (results, snap, trace.snapshot())
+}
+
+fn base_cfg() -> EngineConfig {
+    EngineConfig {
+        max_concurrency: 6,
+        max_queue: 256,
+        default_max_tokens: 8,
+        max_active_budget: 0,
+        sampling: SamplingConfig::new(0.6, 1.0),
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed: ENGINE_SEED,
+        fused: true,
+        ..EngineConfig::default()
+    }
+}
+
+/// A small, all-defaults workload for the focused fault tests: three
+/// fused co-batched requests, fixed-length prompts (so resume-hint
+/// thresholds can separate admissions from resumes), no deadlines.
+fn trio() -> Vec<Spec> {
+    (0..3u64)
+        .map(|id| Spec {
+            id,
+            prompt: vec![1 + id as u32, 7, 3, 9],
+            max_new: 10,
+            decoder: None,
+            sampling: None,
+            priority: 0,
+            deadline_ms: None,
+        })
+        .collect()
+}
+
+fn trio_cfg() -> EngineConfig {
+    EngineConfig { max_concurrency: 3, ..base_cfg() }
+}
+
+/// Fault-free reference streams for a workload: dense substrate,
+/// unfused, no wrapper.
+fn reference_streams(specs: &[Spec], cfg: EngineConfig) -> Vec<Vec<u32>> {
+    let (t, d) = SimLm::pair(SIM_SEED, 0.8, VOCAB);
+    let (res, snap, _) =
+        run_workload(t, d, EngineConfig { fused: false, ..cfg }, specs, &[]);
+    assert_eq!(snap.failed, 0, "reference run must be clean");
+    res.into_iter()
+        .map(|o| match o {
+            Outcome::Done(t, _) => t,
+            Outcome::Fail(_, e) => panic!("reference run failed: {e}"),
+        })
+        .collect()
+}
+
+/// Regression for the blast-radius fix: a persistent eval fault inside
+/// a fused batch must fail ONLY the poisoned request. Before the
+/// per-group re-drive, the fused `eval_batch_into` error failed every
+/// co-batched request.
+#[test]
+fn fused_eval_fault_fails_only_the_poisoned_request() {
+    let specs = trio();
+    let reference = reference_streams(&specs, trio_cfg());
+
+    // Target sessions are opened in admission order: session 1 belongs
+    // to request id 1.
+    let plan = FaultPlan {
+        persistent_sessions: [1u64].into_iter().collect(),
+        ..FaultPlan::none()
+    };
+    let (t, d) = SimLm::pair(SIM_SEED, 0.8, VOCAB);
+    let chaos = ChaosLm::new(t, plan);
+    let trips = chaos.clone();
+    let (res, snap, _) = run_workload(chaos, d, trio_cfg(), &specs, &[]);
+
+    assert!(trips.trips().persistent >= 1, "the persistent fault never fired");
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.retries, 0, "persistent faults must not be retried");
+    match &res[1] {
+        Outcome::Fail(toks, e) => {
+            assert_eq!(e.kind, ErrorKind::EvalPersistent, "{e}");
+            assert!(!e.retryable, "{e}");
+            assert!(toks.is_empty(), "poisoned request must not stream: {toks:?}");
+        }
+        other => panic!("request 1 should have failed, got {other:?}"),
+    }
+    for i in [0usize, 2] {
+        assert_eq!(
+            res[i].stream(),
+            &reference[i][..],
+            "request {i}: co-batched healthy stream diverged from reference"
+        );
+    }
+}
+
+/// Transient faults engage the bounded-retry path: abort the round,
+/// park, resume into a fresh session (which clears the fault), and
+/// replay from the round-start RNG snapshot — so every stream is
+/// bit-identical to the fault-free reference.
+#[test]
+fn transient_fault_retries_to_bit_identical_completion() {
+    let specs = trio();
+    let reference = reference_streams(&specs, trio_cfg());
+
+    let plan = FaultPlan {
+        transient_sessions: [1u64].into_iter().collect(),
+        ..FaultPlan::none()
+    };
+    let (t, d) = SimLm::pair(SIM_SEED, 0.8, VOCAB);
+    let chaos = ChaosLm::new(t, plan);
+    let trips = chaos.clone();
+    let (res, snap, _) = run_workload(chaos, d, trio_cfg(), &specs, &[]);
+
+    assert!(trips.trips().transient >= 1, "the transient fault never fired");
+    assert_eq!(snap.completed, 3, "transient faults must not be terminal");
+    assert_eq!(snap.failed, 0);
+    assert!(snap.retries >= 1, "retry machinery never engaged");
+    for (i, (out, want)) in res.iter().zip(&reference).enumerate() {
+        assert_eq!(
+            out.stream(),
+            &want[..],
+            "request {i}: stream diverged across a transient-fault retry"
+        );
+    }
+}
+
+/// A transient fault that never clears exhausts the per-request retry
+/// budget and surfaces as a typed `RetriesExhausted` terminal error;
+/// the co-batched requests still finish on-reference.
+#[test]
+fn unclearing_transient_fault_exhausts_the_retry_budget() {
+    let specs = trio();
+    let reference = reference_streams(&specs, trio_cfg());
+
+    // Poison request 1's initial session AND every session a retry
+    // could resume into (retries open fresh, monotonically increasing
+    // ids), so the fault survives each suspend/resume cycle.
+    let plan = FaultPlan {
+        transient_sessions: (1u64..64).collect(),
+        ..FaultPlan::none()
+    };
+    let (t, d) = SimLm::pair(SIM_SEED, 0.8, VOCAB);
+    let chaos = ChaosLm::new(t, plan);
+    let cfg = EngineConfig { retry_budget: 2, retry_backoff_rounds: 1, ..trio_cfg() };
+    let (res, snap, _) = run_workload(chaos, d, cfg, &specs, &[]);
+
+    assert_eq!(snap.completed, 1, "only the fault-free request 0 completes");
+    assert_eq!(snap.failed, 2);
+    assert_eq!(snap.retries, 4, "two victims x retry budget of 2");
+    for i in [1usize, 2] {
+        match &res[i] {
+            Outcome::Fail(_, e) => {
+                assert_eq!(e.kind, ErrorKind::RetriesExhausted, "request {i}: {e}");
+                assert!(!e.retryable, "exhaustion is terminal: {e}");
+                assert!(
+                    e.to_string().contains("retry budget (2) exhausted"),
+                    "request {i}: {e}"
+                );
+            }
+            other => panic!("request {i} should have exhausted retries, got {other:?}"),
+        }
+    }
+    assert_eq!(res[0].stream(), &reference[0][..], "request 0 diverged");
+}
+
+/// Satellite: a retryable failure while ADMITTING a request (the
+/// stepper's initial `begin_with_prefix` hits an exhausted pool) must
+/// requeue the request — with backoff, against the retry budget — not
+/// drop it.
+#[test]
+fn admission_pool_exhaustion_requeues_the_request() {
+    let specs = trio();
+    let reference = reference_streams(&specs, trio_cfg());
+
+    // hint_min 0: every begin_with_prefix qualifies, so the fault
+    // budget of 1 is spent on the very first admission attempt.
+    let plan = FaultPlan {
+        resume_faults: 1,
+        resume_hint_min: 0,
+        resume_retryable: true,
+        ..FaultPlan::none()
+    };
+    let (t, d) = SimLm::pair(SIM_SEED, 0.8, VOCAB);
+    let chaos = ChaosLm::new(t, plan);
+    let trips = chaos.clone();
+    let (res, snap, _) = run_workload(chaos, d, trio_cfg(), &specs, &[]);
+
+    assert_eq!(trips.trips().resume, 1, "the admission fault never fired");
+    assert_eq!(snap.completed, 3, "a retryable admission failure must not drop");
+    assert_eq!(snap.failed, 0);
+    assert!(snap.retries >= 1, "requeue must count as a retry");
+    for (i, (out, want)) in res.iter().zip(&reference).enumerate() {
+        assert_eq!(out.stream(), &want[..], "request {i}: stream diverged");
+    }
+}
+
+/// AR-only trio for the resume-fault tests: AR sessions grow one slot
+/// per round, so a 40-slot pool admits all three, then provably runs
+/// out mid-generation — forcing a preemption whose victim has
+/// committed tokens. Its resume `begin_with_prefix` hint (prompt +
+/// generated) is therefore longer than any prompt, which is what lets
+/// `resume_hint_min` target resumes exclusively.
+fn ar_trio() -> Vec<Spec> {
+    (0..3u64)
+        .map(|id| Spec {
+            id,
+            prompt: vec![1 + id as u32, 7, 3, 9],
+            max_new: 16,
+            decoder: Some(DecoderConfig::Ar),
+            sampling: None,
+            priority: 0,
+            deadline_ms: None,
+        })
+        .collect()
+}
+
+/// Satellite: resume-path failures after a mid-flight park. Retryable
+/// variant: the victim re-parks, retries, completes bit-identically.
+#[test]
+fn retryable_resume_failure_reparks_and_completes() {
+    let specs = ar_trio();
+    let cfg = trio_cfg();
+    let reference = reference_streams(&specs, cfg.clone());
+
+    // 3 AR target sessions (prompt 4 + up to 16 generated) share 40
+    // slots: growth past the pool forces preemption mid-generation.
+    let kv = KvConfig { num_blocks: 10, block_size: 4, share: true };
+    let plan = FaultPlan {
+        resume_faults: 1,
+        resume_hint_min: 4, // == prompt length: only resumes qualify
+        resume_retryable: true,
+        ..FaultPlan::none()
+    };
+    let (t, d) = SimLm::pair_paged(SIM_SEED, 0.8, VOCAB, kv);
+    let pool = t.kv_pool().expect("paged sim").clone();
+    let chaos = ChaosLm::new(t, plan);
+    let trips = chaos.clone();
+    let (res, snap, _) = run_workload(chaos, d, cfg, &specs, &[]);
+
+    assert!(snap.preemptions >= 1, "pool never forced a preemption");
+    assert_eq!(trips.trips().resume, 1, "the resume fault never fired");
+    assert_eq!(snap.completed, 3, "a retryable resume failure must not drop");
+    assert_eq!(snap.failed, 0);
+    assert!(snap.retries >= 1, "resume requeue must count as a retry");
+    assert_eq!(pool.status().blocks_in_use(), 0, "leaked KV blocks");
+    for (i, (out, want)) in res.iter().zip(&reference).enumerate() {
+        assert_eq!(out.stream(), &want[..], "request {i}: stream diverged");
+    }
+}
+
+/// Satellite: the terminal variant — a non-retryable resume failure
+/// produces exactly one typed terminal error for the victim; everyone
+/// else finishes on-reference and no blocks leak.
+#[test]
+fn terminal_resume_failure_is_a_typed_error() {
+    let specs = ar_trio();
+    let cfg = trio_cfg();
+    let reference = reference_streams(&specs, cfg.clone());
+
+    let kv = KvConfig { num_blocks: 10, block_size: 4, share: true };
+    let plan = FaultPlan {
+        resume_faults: 1,
+        resume_hint_min: 4,
+        resume_retryable: false,
+        ..FaultPlan::none()
+    };
+    let (t, d) = SimLm::pair_paged(SIM_SEED, 0.8, VOCAB, kv);
+    let pool = t.kv_pool().expect("paged sim").clone();
+    let chaos = ChaosLm::new(t, plan);
+    let trips = chaos.clone();
+    let (res, snap, _) = run_workload(chaos, d, cfg, &specs, &[]);
+
+    assert_eq!(trips.trips().resume, 1, "the resume fault never fired");
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.failed, 1);
+    assert_eq!(pool.status().blocks_in_use(), 0, "leaked KV blocks");
+    let mut failed = 0usize;
+    for (i, out) in res.iter().enumerate() {
+        match out {
+            Outcome::Fail(_, e) => {
+                failed += 1;
+                assert_eq!(e.kind, ErrorKind::EvalPersistent, "request {i}: {e}");
+                assert!(!e.retryable, "request {i}: {e}");
+            }
+            Outcome::Done(toks, _) => {
+                assert_eq!(toks, &reference[i], "request {i}: survivor diverged");
+            }
+        }
+    }
+    assert_eq!(failed, 1, "exactly one victim");
+}
+
+/// The 200-request chaos soak (see module docs): seeded fault plan +
+/// enforced deadlines + client cancellation over the preemption-heavy
+/// undersized pool. Every request terminates exactly once; every
+/// completed stream is bit-identical to the fault-free reference; the
+/// terminal-error population reconciles with the metrics counters; no
+/// KV block leaks. Dumps the fault schedule and the flight-recorder
+/// journal for CI artifacts.
+#[test]
+fn chaos_soak_is_isolated_deterministic_and_leak_free() {
+    let specs = build_workload(2024);
+    let cancel_ids: Vec<u64> = CANCEL_IDS.collect();
+
+    // Fault universe [0, 128): ~200 admissions open at least that many
+    // target sessions, so every planned fault id is guaranteed to be
+    // exercised.
+    let plan = FaultPlan::seeded(
+        PLAN_SEED,
+        &ChaosConfig {
+            sessions: 128,
+            transient: 5,
+            persistent: 3,
+            spikes: 8,
+            spike_calls: 2_000,
+            spike_spin: 2_000,
+            resume_faults: 0, // resume faults have dedicated tests above
+            resume_hint_min: usize::MAX,
+            resume_retryable: true,
+        },
+    );
+    let plan_doc = plan.to_json();
+
+    let kv = KvConfig { num_blocks: 24, block_size: 8, share: true };
+    let (t, d) = SimLm::pair_paged(SIM_SEED, 0.8, VOCAB, kv);
+    let pool = t.kv_pool().expect("paged sim").clone();
+    let chaos = ChaosLm::new(t, plan);
+    let trips_handle = chaos.clone();
+    let cfg = EngineConfig { enforce_deadlines: true, trace_events: 4096, ..base_cfg() };
+    let (res, snap, events) = run_workload(chaos, d, cfg, &specs, &cancel_ids);
+
+    let reference = reference_streams(&specs, base_cfg());
+
+    // The plan actually bit: both fault classes fired.
+    let trips = trips_handle.trips();
+    assert!(trips.transient >= 1, "no transient fault fired: {trips:?}");
+    assert!(trips.persistent >= 1, "no persistent fault fired: {trips:?}");
+
+    // Terminal accounting: every request lands in exactly one bucket,
+    // and the per-request typed errors reconcile with the counters.
+    let (mut cancelled, mut shed, mut failed, mut completed) = (0u64, 0u64, 0u64, 0u64);
+    for (spec, out) in specs.iter().zip(&res) {
+        match out {
+            Outcome::Done(toks, stats) => {
+                completed += 1;
+                assert_eq!(stats.generated, toks.len(), "id {}: stats vs stream", spec.id);
+                assert!(toks.len() <= spec.max_new, "id {}: overlong stream", spec.id);
+            }
+            Outcome::Fail(_, e) => match e.kind {
+                ErrorKind::Cancelled => {
+                    cancelled += 1;
+                    assert!(cancel_ids.contains(&spec.id), "spurious cancel on {}", spec.id);
+                }
+                ErrorKind::DeadlineExpired => {
+                    shed += 1;
+                    assert!(e.retryable, "shed must be retryable: {e}");
+                    assert!(is_deadline_victim(spec.id), "spurious shed on {}", spec.id);
+                }
+                ErrorKind::EvalPersistent | ErrorKind::RetriesExhausted => {
+                    failed += 1;
+                    assert!(!e.retryable, "terminal fault must not be retryable: {e}");
+                }
+                other => panic!("id {}: unexpected terminal kind {other:?}: {e}", spec.id),
+            },
+        }
+    }
+    assert_eq!(completed + failed + shed + cancelled, N_REQUESTS);
+    assert_eq!(snap.completed, completed);
+    assert_eq!(snap.failed, failed);
+    assert_eq!(snap.shed, shed);
+    assert_eq!(snap.cancelled, cancelled);
+    assert_eq!(
+        cancelled,
+        cancel_ids.len() as u64,
+        "every queued cancel victim gets exactly one Cancelled terminal"
+    );
+    assert!(shed >= 1, "no hopeless deadline was shed");
+    assert!(failed >= 1, "persistent faults fired but nothing failed");
+    assert!(snap.retries >= 1, "transient faults fired but nothing retried");
+    assert_eq!(snap.rejected, 0, "queue 256 must never overflow");
+
+    // Blast-radius + retry transparency: every request the faults did
+    // NOT kill streams bit-identically to the fault-free reference —
+    // including requests that were co-batched with a poisoned session
+    // and requests that replayed rounds after a transient retry.
+    let mut compared = 0usize;
+    for ((spec, out), want) in specs.iter().zip(&res).zip(&reference) {
+        if let Outcome::Done(toks, _) = out {
+            compared += 1;
+            assert_eq!(
+                toks, want,
+                "id {}: stream diverged from fault-free reference",
+                spec.id
+            );
+        }
+    }
+    assert!(compared as u64 == completed && completed >= N_REQUESTS / 2);
+
+    // Resource hygiene: the pool drained completely despite failures,
+    // sheds, cancels and preemption churn.
+    assert_eq!(pool.status().blocks_in_use(), 0, "leaked KV blocks");
+    assert!(snap.preemptions >= 1, "undersized pool never preempted");
+
+    // Flight recorder saw the run; dump schedule + journal for CI.
+    assert!(!events.is_empty(), "tracing was enabled but recorded nothing");
+    assert!(events.windows(2).all(|w| w[1].seq == w[0].seq + 1), "seq gap/tear");
+    let doc = Json::obj(vec![("trace", chrome_trace(&events))]);
+    std::fs::write(harness::snapshot_path("TRACE_chaos.json"), format!("{doc}\n"))
+        .expect("write TRACE_chaos.json");
+    std::fs::write(harness::snapshot_path("FAULTS_chaos.json"), format!("{plan_doc}\n"))
+        .expect("write FAULTS_chaos.json");
+}

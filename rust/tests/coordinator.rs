@@ -102,7 +102,9 @@ fn queue_overflow_is_shed_with_error() {
                     break;
                 }
                 Event::Error(e) => {
-                    assert!(e.contains("queue full"), "{e}");
+                    assert!(e.to_string().contains("queue full"), "{e}");
+                    assert_eq!(e.kind, rsd::coordinator::ErrorKind::QueueFull);
+                    assert!(e.retryable, "queue-full must be retryable: {e}");
                     shed += 1;
                     break;
                 }
@@ -114,6 +116,7 @@ fn queue_overflow_is_shed_with_error() {
     let snap = metrics.snapshot();
     assert_eq!(snap.completed as usize, completed);
     assert_eq!(snap.rejected as usize, shed);
+    assert_eq!(snap.shed as usize, shed, "queue-full rejections count as shed");
     assert!(shed > 0, "expected at least one shed request");
     assert_eq!(completed + shed, 12);
 }

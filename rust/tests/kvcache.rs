@@ -304,7 +304,8 @@ fn oversized_prompt_gets_clean_error() {
     drop(tx);
     match rrx.recv().unwrap() {
         Event::Error(e) => {
-            assert!(e.contains("prompt too long"), "unexpected error: {e}");
+            assert!(e.to_string().contains("prompt too long"), "unexpected error: {e}");
+            assert!(!e.retryable, "an oversized request must be terminal: {e}");
         }
         other => panic!("expected a clean error, got {other:?}"),
     }

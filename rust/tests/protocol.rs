@@ -1,0 +1,275 @@
+//! Wire-protocol robustness: seeded, structure-aware fuzzing of the
+//! JSON-lines protocol.
+//!
+//! Two layers:
+//! * 10k mutated request lines through [`parse_wire_request`] — the
+//!   parser must never panic (truncations, type swaps, random bytes,
+//!   pathological nesting, huge numbers) and must classify every line
+//!   as `Ok` or `Err`;
+//! * a smaller corpus against a LIVE server ([`serve_listener`] on an
+//!   ephemeral port, sim engine behind it) — every non-empty line must
+//!   be answered, terminating in a `done`, an `error` envelope, or a
+//!   command response; the connection and the engine survive the whole
+//!   corpus.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
+use rsd::coordinator::engine::{spawn, CancelRegistry, Engine};
+use rsd::coordinator::server::{parse_wire_request, serve_listener, ServeCtx};
+use rsd::coordinator::Metrics;
+use rsd::sim::SimLm;
+use rsd::tokenizer::Tokenizer;
+use rsd::trace::Tracer;
+use rsd::util::json::Json;
+use rsd::util::Rng;
+
+/// Valid protocol lines used as mutation bases (and, unmutated, as the
+/// "parser still accepts good input" control group).
+const TEMPLATES: &[&str] = &[
+    r#"{"prompt": "hello world", "max_tokens": 4}"#,
+    r#"{"prompt": "the quick brown fox", "max_tokens": 3, "decoder": "rsd-s:2x2", "temperature": 0.7, "top_p": 0.9}"#,
+    r#"{"prompt": "a", "max_tokens": 2, "id": 7, "priority": 2, "deadline_ms": 1000, "stream": true}"#,
+    r#"{"prompt": "stop here", "max_tokens": 3, "stop": [1, 2]}"#,
+    r#"{"cmd": "metrics"}"#,
+    r#"{"cmd": "cancel", "id": 3}"#,
+];
+
+const FIELDS: &[&str] = &[
+    "prompt",
+    "max_tokens",
+    "decoder",
+    "temperature",
+    "top_p",
+    "stop",
+    "priority",
+    "deadline_ms",
+    "stream",
+    "id",
+    "cmd",
+];
+
+/// Typed/extreme values for structure-aware field swaps: right types,
+/// wrong types, boundary numbers, nested junk.
+const VALUES: &[&str] = &[
+    r#""hello world""#,
+    r#""""#,
+    "0",
+    "-1",
+    "1e308",
+    "-1e308",
+    "18446744073709551616",
+    "null",
+    "true",
+    "false",
+    "[1, 2, 3]",
+    r#"{"a": [{}]}"#,
+    r#""rsd-s:3x3""#,
+    r#""bogus:decoder""#,
+    "-0.5",
+    "3.5",
+    r#""metrics""#,
+    r#""cancel""#,
+    "[[[[[]]]]]",
+];
+
+/// One seeded fuzz line: a structured random object, a byte-mutated
+/// template, or raw garbage.
+fn fuzz_line(rng: &mut Rng) -> String {
+    match rng.gen_range(8) {
+        // random object from known fields x typed/extreme values
+        0..=2 => {
+            let n = rng.gen_range(6);
+            let fields: Vec<String> = (0..n)
+                .map(|_| {
+                    format!(
+                        r#""{}": {}"#,
+                        FIELDS[rng.gen_range(FIELDS.len())],
+                        VALUES[rng.gen_range(VALUES.len())]
+                    )
+                })
+                .collect();
+            format!("{{{}}}", fields.join(", "))
+        }
+        // byte-level mutation of a valid template
+        3..=5 => {
+            let base = TEMPLATES[rng.gen_range(TEMPLATES.len())];
+            let mut bytes = base.as_bytes().to_vec();
+            match rng.gen_range(3) {
+                0 => bytes.truncate(rng.gen_range(bytes.len().max(1))),
+                1 => {
+                    let i = rng.gen_range(bytes.len());
+                    bytes[i] = (rng.next_u64() & 0xff) as u8;
+                }
+                _ => {
+                    let at = rng.gen_range(bytes.len() + 1);
+                    let ins: Vec<u8> =
+                        (0..1 + rng.gen_range(8)).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+                    bytes.splice(at..at, ins);
+                }
+            }
+            String::from_utf8_lossy(&bytes).into_owned()
+        }
+        // deep nesting (must hit the parser's depth guard, not the stack)
+        6 => {
+            let depth = 1 + rng.gen_range(512);
+            format!("{}1{}", "[".repeat(depth), "]".repeat(depth))
+        }
+        // raw garbage
+        _ => {
+            let n = rng.gen_range(64);
+            (0..n).map(|_| (rng.next_u64() & 0xff) as u8).map(|b| b as char).collect()
+        }
+    }
+}
+
+/// 10k seeded mutations through the line parser: no panics, every line
+/// classified, and the control group (unmutated templates) still parses.
+#[test]
+fn parser_survives_10k_structure_aware_mutations() {
+    let tok = Tokenizer::new();
+    let mut rng = Rng::seed_from_u64(0xF0CC);
+    let (mut oks, mut errs) = (0usize, 0usize);
+    for i in 0..10_000 {
+        let line = if i % 100 == 0 {
+            TEMPLATES[i / 100 % TEMPLATES.len()].to_string()
+        } else {
+            fuzz_line(&mut rng)
+        };
+        match parse_wire_request(&line, &tok) {
+            Ok(_) => oks += 1,
+            Err(_) => errs += 1,
+        }
+    }
+    assert!(oks > 0, "corpus never produced a valid request");
+    assert!(errs > 0, "corpus never produced an invalid request");
+}
+
+/// Handcrafted adversarial inputs: pathological nesting and size must
+/// come back as clean `Err`s (depth guard, not a stack overflow or
+/// panic), while boundary numerics stay accepted-and-clamped.
+#[test]
+fn parser_rejects_pathological_inputs_without_panicking() {
+    let tok = Tokenizer::new();
+    let deep_arr = format!("{}1{}", "[".repeat(10_000), "]".repeat(10_000));
+    assert!(parse_wire_request(&deep_arr, &tok).is_err());
+    let deep_obj = format!(r#"{{"prompt": {}"x"{}}}"#, r#"{"a": "#.repeat(8_192), "}".repeat(8_192));
+    assert!(parse_wire_request(&deep_obj, &tok).is_err());
+    let huge = format!(r#"{{"prompt": "{}"}}"#, "a".repeat(1 << 20));
+    assert!(parse_wire_request(&huge, &tok).is_ok(), "long valid prompt must parse");
+    assert!(parse_wire_request("", &tok).is_err());
+    assert!(parse_wire_request("\u{0}\u{1}\u{2}", &tok).is_err());
+    // huge max_tokens clamps instead of overflowing
+    let w = parse_wire_request(r#"{"prompt": "a", "max_tokens": 1e308}"#, &tok).unwrap();
+    assert!(w.max_new <= 192);
+    // id 0 and non-numeric ids are rejected, not mapped
+    assert!(parse_wire_request(r#"{"prompt": "a", "id": 0}"#, &tok).is_err());
+    assert!(parse_wire_request(r#"{"prompt": "a", "id": "seven"}"#, &tok).is_err());
+}
+
+/// Live-server fuzz: every non-empty line is answered with a terminal
+/// reply (`done` / `error` envelope / command response); tokens stream
+/// in between; the connection survives the whole corpus; crafted
+/// requests round-trip their client id and the cancel command acks.
+#[test]
+fn live_server_answers_every_line_with_a_terminal_reply() {
+    let (target, draft) = SimLm::pair(0, 0.8, 64);
+    let cfg = EngineConfig {
+        max_concurrency: 4,
+        max_queue: 64,
+        default_max_tokens: 8,
+        max_active_budget: 0,
+        sampling: SamplingConfig::new(0.6, 1.0),
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed: 1,
+        fused: true,
+        ..EngineConfig::default()
+    };
+    let metrics = Arc::new(Metrics::default());
+    let cancels = CancelRegistry::default();
+    let engine = Engine::with_telemetry(target, draft, cfg, metrics.clone(), Tracer::new(0))
+        .with_cancels(cancels.clone());
+    let (tx, _engine_handle) = spawn(engine);
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap();
+    let ctx = ServeCtx { metrics: Some(metrics), trace: Tracer::new(0), cancels: Some(cancels) };
+    std::thread::spawn(move || {
+        let _ = serve_listener(listener, tx, ctx);
+    });
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut wr = stream.try_clone().unwrap();
+    let mut rd = BufReader::new(stream);
+
+    // One request line -> reply lines until the first non-token line,
+    // which is the terminal reply for that request.
+    let read_terminal = |rd: &mut BufReader<TcpStream>, sent: &str| -> Json {
+        loop {
+            let mut line = String::new();
+            let n = rd.read_line(&mut line).unwrap_or_else(|e| {
+                panic!("no terminal reply for line {sent:?}: {e}");
+            });
+            assert!(n > 0, "server closed the connection on line {sent:?}");
+            let j = Json::parse(&line)
+                .unwrap_or_else(|e| panic!("unparseable reply {line:?} to {sent:?}: {e}"));
+            if j.get("tokens").is_none() && j.get("token").is_none() {
+                return j;
+            }
+        }
+    };
+
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    let mut answered = 0usize;
+    for i in 0..400 {
+        let raw = if i % 40 == 0 {
+            TEMPLATES[i / 40 % TEMPLATES.len()].to_string()
+        } else {
+            fuzz_line(&mut rng)
+        };
+        // one send == one protocol line: strip embedded line breaks and
+        // skip lines the server ignores (blank after trim)
+        let line: String =
+            raw.chars().map(|c| if c == '\n' || c == '\r' { ' ' } else { c }).collect();
+        if line.trim().is_empty() {
+            continue;
+        }
+        writeln!(wr, "{line}").expect("send fuzz line");
+        let reply = read_terminal(&mut rd, &line);
+        assert!(
+            reply.get("done").is_some()
+                || reply.get("error").is_some()
+                || reply.get("metrics").is_some()
+                || reply.get("trace").is_some()
+                || reply.get("cancelled").is_some(),
+            "reply to {line:?} is not a terminal: {reply:?}"
+        );
+        answered += 1;
+    }
+    assert!(answered >= 300, "corpus degenerated to blank lines");
+
+    // Crafted end-to-end checks on the same connection: client id
+    // round-trips into the done envelope ...
+    writeln!(wr, r#"{{"prompt": "hi there", "max_tokens": 2, "id": 9}}"#).unwrap();
+    let done = read_terminal(&mut rd, "id round-trip");
+    let id = done
+        .get("done")
+        .and_then(|d| d.get("id"))
+        .and_then(Json::as_usize)
+        .expect("done envelope carries the id");
+    assert_eq!(id, 9);
+    // ... the cancel command acks with the unmasked id ...
+    writeln!(wr, r#"{{"cmd": "cancel", "id": 9}}"#).unwrap();
+    let ack = read_terminal(&mut rd, "cancel ack");
+    assert_eq!(ack.get("cancelled").and_then(Json::as_usize), Some(9));
+    // ... and a structured error envelope carries {code, retryable}.
+    writeln!(wr, r#"{{"prompt": 42}}"#).unwrap();
+    let err = read_terminal(&mut rd, "typed error envelope");
+    let env = err.get("error").expect("error envelope");
+    assert!(env.get("code").and_then(Json::as_str).is_some(), "{err:?}");
+    assert!(env.get("retryable").is_some(), "{err:?}");
+}
