@@ -71,17 +71,23 @@ fn run_one(
         fused: true,
         ..EngineConfig::default()
     };
+    // keep a handle on the speculation analytics so the ledger can be
+    // read back after the engine drains (the engine records into the
+    // same handle it is handed)
+    let analytics = rsd::obs::Analytics::from_config(&cfg);
     let (tx, handle) = if use_sim {
         let cfg = cfg.clone();
+        let a = analytics.clone();
         spawn_with(move || {
             let (target, draft) = SimLm::pair(0, 0.8, 256);
-            Ok(Engine::new(target, draft, cfg))
+            Ok(Engine::new(target, draft, cfg).with_analytics(a))
         })
     } else {
+        let a = analytics.clone();
         spawn_with(move || {
             let rt = Runtime::cpu()?;
             let (target, draft) = PjrtLm::load_pair(&rt, "artifacts")?;
-            Ok(Engine::new(target, draft, cfg))
+            Ok(Engine::new(target, draft, cfg).with_analytics(a))
         })
     };
 
@@ -176,6 +182,26 @@ fn run_one(
             .map(|(nodes, count)| format!("{nodes}:{count}"))
             .collect();
         println!("nodes-per-round histogram: {{{}}}", hist.join(", "));
+    }
+    // the speculation ledger: compute-budget accounting for the whole
+    // scenario — accepted tokens per target forward is the paper's
+    // fixed-budget headline metric
+    let totals = analytics.totals();
+    if totals.target_forwards > 0 {
+        println!(
+            "target forwards {}  |  tree nodes {}  |  accepted/forward {:.3}  |  tokens/forward {:.3}",
+            totals.target_forwards,
+            totals.tree_nodes,
+            totals.accepted_per_target_forward(),
+            totals.tokens_per_target_forward()
+        );
+        let used = totals.level_attempts.iter().rposition(|&a| a > 0).map_or(0, |p| p + 1);
+        if used > 0 {
+            let curve = totals.acceptance_by_level();
+            let rates: Vec<String> =
+                curve[..used].iter().map(|r| format!("{r:.2}")).collect();
+            println!("ledger acceptance curve (by tree level): [{}]", rates.join(", "));
+        }
     }
     Ok(())
 }

@@ -1,17 +1,30 @@
 #!/usr/bin/env python3
-"""Warn-only trend diff between two rsd-bench-v1 snapshots.
+"""Trend diff between two rsd-bench-v1 snapshots.
 
 Joins entries on (section, name) and prints ns_per_op changes, flagging
 regressions beyond a threshold (default 10%). Also diffs the top-level
 per-kernel nanoseconds map (`kernels.*.ns_per_op`) when both snapshots
 carry one.
 
-Always exits 0: this is a trend signal for humans reading CI logs, not a
-gate — the hard perf gates (speedup floors, 0-alloc) live inside the
-bench binary itself. Stdlib only.
+Two modes:
+
+* default (warn-only): always exits 0 — a trend signal for humans
+  reading CI logs, not a gate. The hard perf gates (speedup floors,
+  0-alloc) live inside the bench binaries themselves.
+* `--gate PCT`: timing regressions beyond PCT percent are still
+  warn-only (shared CI runners are too noisy to gate wallclock), but
+  STRUCTURAL regressions fail the build with exit 1:
+    - schema mismatch between the two snapshots, and
+    - coverage regression — any (section, name) entry present in the
+      old snapshot but missing from the new one (a silently dropped
+      bench reads as "no regression" forever otherwise).
+  A missing/corrupt OLD snapshot still exits 0 (normal on first runs);
+  an unreadable NEW snapshot always fails under --gate.
+
+Stdlib only.
 
 Usage:
-    python3 bench_diff.py OLD.json NEW.json [--threshold 0.10]
+    python3 bench_diff.py OLD.json NEW.json [--threshold 0.10] [--gate 25]
 """
 
 from __future__ import annotations
@@ -48,7 +61,8 @@ def kernel_map(snap: dict) -> dict[tuple[str, str], float]:
 
 
 def diff(old: dict[tuple[str, str], float], new: dict[tuple[str, str], float],
-         threshold: float) -> int:
+         threshold: float) -> tuple[int, list[tuple[str, str]]]:
+    """Returns (timing regressions beyond threshold, entries dropped)."""
     regressions = 0
     for key in sorted(set(old) & set(new)):
         section, name = key
@@ -66,7 +80,10 @@ def diff(old: dict[tuple[str, str], float], new: dict[tuple[str, str], float],
     if only_new:
         print(f"  {len(only_new)} entr{'y' if len(only_new) == 1 else 'ies'} "
               "new in this run (no previous baseline)")
-    return regressions
+    dropped = sorted(set(old) - set(new))
+    for section, name in dropped:
+        print(f"  [{section}] {name}: present in old snapshot, MISSING from new")
+    return regressions, dropped
 
 
 def main() -> int:
@@ -75,23 +92,63 @@ def main() -> int:
     ap.add_argument("new")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="relative ns_per_op increase flagged as a regression")
+    ap.add_argument("--gate", type=float, default=None, metavar="PCT",
+                    help="warn at PCT%% timing regressions; fail (exit 1) on "
+                         "schema mismatch or dropped bench coverage")
     args = ap.parse_args()
+    if args.gate is not None:
+        args.threshold = args.gate / 100.0
     try:
-        old_snap, new_snap = load(args.old), load(args.new)
+        old_snap = load(args.old)
     except (OSError, json.JSONDecodeError) as exc:
         # missing/corrupt previous snapshot is normal on first runs
         print(f"bench_diff: skipping ({exc})")
         return 0
+    try:
+        new_snap = load(args.new)
+    except (OSError, json.JSONDecodeError) as exc:
+        if args.gate is not None:
+            print(f"bench_diff: FAIL — new snapshot unreadable ({exc})")
+            return 1
+        print(f"bench_diff: skipping ({exc})")
+        return 0
 
+    mode = "gated" if args.gate is not None else "warn-only"
     print(f"bench trend: {args.old} -> {args.new} "
-          f"(threshold {args.threshold:.0%}, warn-only)")
-    total = diff(entry_map(old_snap), entry_map(new_snap), args.threshold)
-    total += diff(kernel_map(old_snap), kernel_map(new_snap), args.threshold)
+          f"(threshold {args.threshold:.0%}, {mode})")
+
+    failures: list[str] = []
+    old_schema = old_snap.get("schema")
+    new_schema = new_snap.get("schema")
+    if old_schema != new_schema:
+        msg = f"schema mismatch: {old_schema!r} -> {new_schema!r}"
+        print(f"  {msg}")
+        failures.append(msg)
+
+    total = 0
+    dropped_all: list[tuple[str, str]] = []
+    for pair in (
+        (entry_map(old_snap), entry_map(new_snap)),
+        (kernel_map(old_snap), kernel_map(new_snap)),
+    ):
+        regs, dropped = diff(pair[0], pair[1], args.threshold)
+        total += regs
+        dropped_all.extend(dropped)
+    if dropped_all:
+        failures.append(
+            f"{len(dropped_all)} bench entr"
+            f"{'y' if len(dropped_all) == 1 else 'ies'} dropped from coverage")
+
     if total:
         print(f"bench_diff: {total} entr{'y' if total == 1 else 'ies'} "
-              f"regressed >{args.threshold:.0%} (warn-only, not failing the build)")
+              f"regressed >{args.threshold:.0%} (timings are warn-only)")
     else:
-        print("bench_diff: no regressions beyond threshold")
+        print("bench_diff: no timing regressions beyond threshold")
+
+    if args.gate is not None and failures:
+        for f in failures:
+            print(f"bench_diff: FAIL — {f}")
+        return 1
     return 0
 
 

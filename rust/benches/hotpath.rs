@@ -78,17 +78,23 @@ fn steady_state_allocs(
     let mut rng = Rng::seed_from_u64(7);
     let mut st =
         SpecStepper::new(&target, &draft, strategy, rule, sampling, &[1, 2, 3], 1 << 16)?;
-    // the gate runs with the flight recorder ENABLED: recording into the
-    // preallocated ring (commit boundaries + KV pool traffic) must not
-    // add a single allocation to the steady-state round
+    // the gate runs with the flight recorder AND the speculation
+    // analytics ENABLED: recording into the preallocated ring (commit
+    // boundaries + KV pool traffic), bumping the atomic ledger and
+    // ticking the windowed aggregator must not add a single allocation
+    // to the steady-state round
     let tracer = rsd::trace::Tracer::new(4096);
     st.set_trace(&tracer, 1);
     target.set_trace(&tracer);
     draft.set_trace(&tracer);
+    let analytics = rsd::obs::Analytics::new(8, 64, 0, 0);
+    st.set_analytics(&analytics, rsd::obs::Family::RsdS);
+    let tick_metrics = rsd::coordinator::metrics::Metrics::default();
     let mut warm = 0;
     loop {
         let (a0, _) = alloc::counts();
         assert_eq!(st.step(&target, &draft, &mut rng)?, StepOutcome::Progress);
+        analytics.tick(&tick_metrics, 0, 1);
         let (a1, _) = alloc::counts();
         warm += 1;
         // bounded so a genuine regression (no clean round ever) still
@@ -100,6 +106,7 @@ fn steady_state_allocs(
     let (a0, b0) = alloc::counts();
     for _ in 0..rounds {
         assert_eq!(st.step(&target, &draft, &mut rng)?, StepOutcome::Progress);
+        analytics.tick(&tick_metrics, 0, 1);
     }
     let (a1, b1) = alloc::counts();
     Ok(((a1 - a0) as f64 / rounds as f64, (b1 - b0) as f64 / rounds as f64))

@@ -1,18 +1,22 @@
-//! Observability overhead bench: proves the flight recorder is cheap
-//! enough to leave on in production, and gates that claim in CI.
+//! Observability overhead bench: proves the flight recorder AND the
+//! speculation-analytics ledger are cheap enough to leave on in
+//! production, and gates both claims in CI.
 //!
-//! Three layers, matching the tracing design:
+//! Four layers, matching the observability design:
 //!
 //! * **record path** — one `Tracer::record` into the preallocated ring
-//!   must be allocation-free (asserted via the counting allocator) and
-//!   sub-microsecond; a disabled tracer must cost one branch;
+//!   and one `Analytics::record_commit` into the atomic ledger must
+//!   each be allocation-free (asserted via the counting allocator) and
+//!   sub-microsecond; disabled handles must cost one branch;
 //! * **per-round overhead** — identical speculative decode rounds with
-//!   tracing off vs on, interleaved min-of-N to damp scheduler noise.
-//!   Gate: tracing adds **≤5%** per round (or ≤250 ns absolute, which
-//!   catches the "ratio blew up because the round got faster" case);
-//! * **export path** — Chrome-trace rendering of a full ring and the
-//!   Prometheus exposition, measured but not gated (cold path by
-//!   design: wire command / watchdog / post-mortem only).
+//!   tracing off vs on, then analytics off vs on, interleaved
+//!   min-of-N to damp scheduler noise. Gate: each layer adds **≤5%**
+//!   per round (or ≤250 ns absolute, which catches the "ratio blew up
+//!   because the round got faster" case);
+//! * **export path** — Chrome-trace rendering of a full ring, the
+//!   Prometheus exposition and the windowed `stats_json` report,
+//!   measured but not gated (cold path by design: wire command /
+//!   watchdog / post-mortem only).
 //!
 //!     cargo bench --bench obs             # human-readable
 //!     cargo bench --bench obs -- --json   # + BENCH_obs.json (repo root)
@@ -27,6 +31,7 @@ use rsd::config::SamplingConfig;
 use rsd::coordinator::metrics::Metrics;
 use rsd::decode::build_parts;
 use rsd::decode::spec::{SpecStepper, StepOutcome};
+use rsd::obs::{Analytics, Family};
 use rsd::sim::SimLm;
 use rsd::trace::export::{chrome_trace, prometheus};
 use rsd::trace::{EventKind, Tracer, PHASE_DRAFT};
@@ -59,6 +64,26 @@ fn main() -> anyhow::Result<()> {
         off.record(EventKind::Commit, 9, 3, 1);
     });
     entries.push(snapshot_entry("record", &rec_off));
+
+    // ---- analytics record path ------------------------------------------
+    section("analytics record path (ledger + windowed ring)");
+    let analytics = Analytics::new(8, 64, 0, 0);
+    let trials = [(3usize, 1usize), (2, 1), (2, 0)];
+    let led = bench("analytics.record_commit", || {
+        analytics.record_forward(Family::RsdS, 9);
+        analytics.record_commit(Family::RsdS, 2, 0, &trials);
+    });
+    entries.push(snapshot_entry("record", &led));
+    let tick_metrics = Metrics::default();
+    let tick = bench("analytics.tick", || {
+        analytics.tick(&tick_metrics, 3, 2);
+    });
+    entries.push(snapshot_entry("record", &tick));
+    let analytics_off = Analytics::off();
+    let led_off = bench("analytics.record/disabled", || {
+        analytics_off.record_commit(Family::RsdS, 2, 0, &trials);
+    });
+    entries.push(snapshot_entry("record", &led_off));
 
     // ---- per-round overhead: tracing off vs on --------------------------
     section("speculative rounds, tracing off vs on (SimLm, rsd-s:3x3)");
@@ -107,6 +132,45 @@ fn main() -> anyhow::Result<()> {
         (ratio - 1.0) * 100.0
     );
 
+    // ---- per-round overhead: analytics off vs on ------------------------
+    section("speculative rounds, analytics off vs on (SimLm, rsd-s:3x3)");
+    // same interleaved min-of-N protocol; the analytics variant also
+    // ticks the windowed aggregator every round, as the engine does
+    let measure_stats = |analytics: Option<&Analytics>, name: &str| -> BenchResult {
+        let mut st = mk();
+        if let Some(a) = analytics {
+            st.set_analytics(a, Family::RsdS);
+        }
+        let mut rng = Rng::seed_from_u64(11);
+        bench(name, || {
+            if st.step(&target, &draft, &mut rng).unwrap() != StepOutcome::Progress {
+                st = mk();
+                if let Some(a) = analytics {
+                    st.set_analytics(a, Family::RsdS);
+                }
+            }
+            if let Some(a) = analytics {
+                a.tick(&tick_metrics, 0, 1);
+            }
+        })
+    };
+    let mut stats_best_off = f64::INFINITY;
+    let mut stats_best_on = f64::INFINITY;
+    for rep in 0..reps {
+        let r = measure_stats(None, &format!("round/stats-off/rep{rep}"));
+        stats_best_off = stats_best_off.min(r.mean.as_secs_f64());
+        entries.push(snapshot_entry("round-overhead", &r));
+        let r = measure_stats(Some(&analytics), &format!("round/stats-on/rep{rep}"));
+        stats_best_on = stats_best_on.min(r.mean.as_secs_f64());
+        entries.push(snapshot_entry("round-overhead", &r));
+    }
+    let stats_ratio = stats_best_on / stats_best_off.max(1e-12);
+    let stats_delta_ns = (stats_best_on - stats_best_off) * 1e9;
+    println!(
+        "analytics overhead: {:.2}% per round ({stats_delta_ns:+.0} ns)",
+        (stats_ratio - 1.0) * 100.0
+    );
+
     // ---- export path (cold, informational) ------------------------------
     section("export path (cold)");
     // the record bench above filled the ring; freeze one full snapshot
@@ -128,6 +192,14 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(prometheus(&snap));
     });
     entries.push(snapshot_entry("export", &r));
+    let r = bench("export.stats_json", || {
+        std::hint::black_box(analytics.stats_json(8));
+    });
+    entries.push(snapshot_entry("export", &r));
+    let r = bench("export.analytics_prometheus", || {
+        std::hint::black_box(analytics.prometheus());
+    });
+    entries.push(snapshot_entry("export", &r));
 
     // write the snapshot BEFORE the gates: a regressing run must still
     // ship its diagnostic JSON (CI uploads it with `if: always()`)
@@ -139,6 +211,11 @@ fn main() -> anyhow::Result<()> {
                 ("tracing_overhead_ns_per_round", Json::Num(delta_ns)),
                 ("record_ns", Json::Num(rec.mean.as_secs_f64() * 1e9)),
                 ("record_allocs_per_op", Json::Num(rec.allocs_per_op)),
+                ("analytics_overhead_ratio", Json::Num(stats_ratio)),
+                ("analytics_overhead_ns_per_round", Json::Num(stats_delta_ns)),
+                ("analytics_record_ns", Json::Num(led.mean.as_secs_f64() * 1e9)),
+                ("analytics_record_allocs_per_op", Json::Num(led.allocs_per_op)),
+                ("analytics_tick_allocs_per_op", Json::Num(tick.allocs_per_op)),
             ]),
         )];
         let path = write_snapshot("BENCH_obs.json", entries, extra)?;
@@ -160,5 +237,25 @@ fn main() -> anyhow::Result<()> {
         (ratio - 1.0) * 100.0
     );
     println!("≤5% tracing overhead per round ✓");
+    assert!(
+        led.allocs_per_op == 0.0,
+        "recording into the analytics ledger must be allocation-free \
+         (got {} allocs/record)",
+        led.allocs_per_op
+    );
+    assert!(
+        tick.allocs_per_op == 0.0,
+        "the analytics window tick must be allocation-free \
+         (got {} allocs/tick)",
+        tick.allocs_per_op
+    );
+    println!("0 allocations per analytics record + tick ✓");
+    assert!(
+        stats_ratio <= 1.05 || stats_delta_ns <= 250.0,
+        "analytics must add ≤5% per decode round \
+         (got {:.2}%, {stats_delta_ns:+.0} ns/round)",
+        (stats_ratio - 1.0) * 100.0
+    );
+    println!("≤5% analytics overhead per round ✓");
     Ok(())
 }

@@ -213,6 +213,13 @@ impl<T: Llm, D: Llm> AdaptiveStepper<T, D> {
         self.inner.set_trace(tracer, id);
     }
 
+    /// Attach a speculation-analytics handle (delegates to the wrapped
+    /// [`SpecStepper`], so rounds are recorded exactly once — under
+    /// `family`, whatever tree shape the controller picks per round).
+    pub fn set_analytics(&mut self, analytics: &crate::obs::Analytics, family: crate::obs::Family) {
+        self.inner.set_analytics(analytics, family);
+    }
+
     /// Re-admit after a suspend (see [`SpecStepper::resume`]).
     pub fn resume(&mut self, target: &T, draft: &D) -> Result<()> {
         self.inner.resume(target, draft)

@@ -148,8 +148,25 @@ pub fn snapshot_path(file: &str) -> PathBuf {
     }
 }
 
+/// The commit the snapshot was taken at, for trend provenance
+/// ("unknown" outside a git checkout or when git is unavailable).
+fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 /// Write a perf snapshot: `entries` (from [`snapshot_entry`]) plus
-/// free-form top-level fields. Returns the written path.
+/// free-form top-level fields. Every snapshot carries the shared
+/// provenance header (`schema` / `git_sha` / `config`) so trend
+/// tooling can refuse cross-machine or cross-schema comparisons.
+/// Returns the written path.
 pub fn write_snapshot(
     file: &str,
     entries: Vec<Json>,
@@ -157,6 +174,15 @@ pub fn write_snapshot(
 ) -> std::io::Result<PathBuf> {
     let mut fields = vec![
         ("schema", Json::from("rsd-bench-v1")),
+        ("git_sha", Json::from(git_sha().as_str())),
+        (
+            "config",
+            Json::obj(vec![
+                ("os", Json::from(std::env::consts::OS)),
+                ("arch", Json::from(std::env::consts::ARCH)),
+                ("quick", Json::Bool(quick())),
+            ]),
+        ),
         ("quick", Json::Bool(quick())),
         ("entries", Json::Arr(entries)),
     ];

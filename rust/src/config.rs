@@ -474,6 +474,19 @@ pub struct EngineConfig {
     /// at admission boundaries with a typed retryable error. `false`
     /// (the default) keeps deadlines as a pure scheduling hint.
     pub enforce_deadlines: bool,
+    /// Speculation-analytics window length in engine rounds (0 =
+    /// analytics off). The acceptance ledger and SLO tracker roll a
+    /// cumulative boundary snapshot into the stats ring every this
+    /// many rounds; the `stats` wire command aggregates across them.
+    pub stats_window_rounds: usize,
+    /// Stats ring capacity in window boundaries (how far back the
+    /// `stats` command can aggregate; preallocated once).
+    pub stats_windows: usize,
+    /// TTFT service-level objective in milliseconds (0 = objective
+    /// disabled). Attainment against it is reported per stats window.
+    pub slo_ttft_ms: u64,
+    /// End-to-end latency SLO in milliseconds (0 = disabled).
+    pub slo_latency_ms: u64,
 }
 
 impl Default for EngineConfig {
@@ -496,6 +509,10 @@ impl Default for EngineConfig {
             retry_budget: 3,
             retry_backoff_rounds: 2,
             enforce_deadlines: false,
+            stats_window_rounds: 32,
+            stats_windows: 64,
+            slo_ttft_ms: 0,
+            slo_latency_ms: 0,
         }
     }
 }
@@ -568,6 +585,18 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("enforce_deadlines").and_then(Json::as_bool) {
             cfg.enforce_deadlines = v;
+        }
+        if let Some(v) = j.get("stats_window_rounds").and_then(Json::as_usize) {
+            cfg.stats_window_rounds = v;
+        }
+        if let Some(v) = j.get("stats_windows").and_then(Json::as_usize) {
+            cfg.stats_windows = v;
+        }
+        if let Some(v) = j.get("slo_ttft_ms").and_then(Json::as_usize) {
+            cfg.slo_ttft_ms = v as u64;
+        }
+        if let Some(v) = j.get("slo_latency_ms").and_then(Json::as_usize) {
+            cfg.slo_latency_ms = v as u64;
         }
         if let Some(arr) = j.get("stop").and_then(Json::as_arr) {
             cfg.sampling.stop = parse_stop_tokens(arr)?;

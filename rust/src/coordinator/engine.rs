@@ -260,6 +260,16 @@ impl<T: Llm, D: Llm> AnyStepper<T, D> {
             AnyStepper::Adaptive(s) => s.set_trace(tracer, id),
         }
     }
+
+    /// Attach the speculation analytics: the stepper accrues target
+    /// forwards and commit boundaries to `family`'s ledger rows.
+    fn set_analytics(&mut self, analytics: &crate::obs::Analytics, family: crate::obs::Family) {
+        match self {
+            AnyStepper::Ar(s) => s.set_analytics(analytics),
+            AnyStepper::Spec(s) => s.set_analytics(analytics, family),
+            AnyStepper::Adaptive(s) => s.set_analytics(analytics, family),
+        }
+    }
 }
 
 /// Where one active request stands within the current fused round.
@@ -447,6 +457,11 @@ pub struct Engine<T: Llm, D: Llm> {
     /// [`Engine::with_telemetry`]). Clone it before [`spawn`] consumes
     /// the engine to dump the journal from outside.
     pub trace: Tracer,
+    /// Speculation-analytics handle: the per-family acceptance ledger,
+    /// windowed live stats and SLO tracker. On by default
+    /// (`EngineConfig::stats_window_rounds`); clone it before [`spawn`]
+    /// consumes the engine to read stats from outside.
+    pub analytics: crate::obs::Analytics,
     /// Coarse engine state shared with the stall watchdog, refreshed at
     /// round boundaries (only while tracing is enabled).
     status: Arc<Mutex<EngineStatus>>,
@@ -476,6 +491,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     ) -> Self {
         target.set_trace(&trace);
         draft.set_trace(&trace);
+        let analytics = crate::obs::Analytics::from_config(&cfg);
         Self {
             target,
             draft,
@@ -483,6 +499,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             metrics,
             acceptance: Arc::new(GlobalEstimator::default()),
             trace,
+            analytics,
             status: Arc::new(Mutex::new(EngineStatus::default())),
             cancels: CancelRegistry::default(),
         }
@@ -493,6 +510,14 @@ impl<T: Llm, D: Llm> Engine<T, D> {
     /// boundary (the server's `cancel` wire command feeds this).
     pub fn with_cancels(mut self, cancels: CancelRegistry) -> Self {
         self.cancels = cancels;
+        self
+    }
+
+    /// Share a speculation-analytics handle with front-ends (the
+    /// server's `stats` wire command reads the same ledger the engine
+    /// records into). Replaces the config-built handle.
+    pub fn with_analytics(mut self, analytics: crate::obs::Analytics) -> Self {
+        self.analytics = analytics;
         self
     }
 
@@ -932,9 +957,11 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 if !matches!(decoder, DecoderConfig::Ar) {
                     self.draft.cache_prefix(&req.prompt);
                 }
+                let family = crate::obs::Family::of(decoder);
                 match self.make_stepper(&req) {
                     Ok(mut stepper) => {
                         stepper.set_trace(&self.trace, req.id);
+                        stepper.set_analytics(&self.analytics, family);
                         let rng = Rng::seed_from_u64(self.cfg.seed ^ req.id);
                         let seq = st.next_seq;
                         st.next_seq += 1;
@@ -1107,6 +1134,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         self.metrics.add(&self.metrics.draft_calls, stats.draft_calls as u64);
         let latency = a.started.elapsed().as_secs_f64();
         self.metrics.record_latency(latency);
+        self.analytics.on_done(a.first_token_at, latency, a.req.deadline_ms);
         self.trace.record(
             EventKind::ReqDone,
             a.req.id,
@@ -1277,6 +1305,7 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             // ---- one fused round; membership churns at phase boundaries --
             self.run_round(&rx, &mut st);
             self.update_status(&st);
+            self.analytics.tick(&self.metrics, st.batcher.queued(), st.active.len());
 
             // ---- export pool gauges (cheap; stores, not sums) ------------
             if let Some(ps) = self.target.pool_status() {
@@ -1368,9 +1397,12 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 break;
             }
             // one draft tree level across every participating request;
-            // the level rides in the phase code's high bits
+            // the level rides in the phase code's high bits and the
+            // staged node count in the event's `c` payload
             let code = PHASE_DRAFT | (level << 8);
-            self.trace.record(EventKind::PhaseBegin, round, code, who.len() as u32);
+            let staged: u32 = groups.iter().map(|(_, n)| n.len() as u32).sum();
+            self.trace
+                .record_c(EventKind::PhaseBegin, round, code, who.len() as u32, staged);
             let td = Instant::now();
             let results = eval_phase(&self.draft, self.cfg.fused, &mut groups, logits);
             drop(groups);
@@ -1393,7 +1425,8 @@ impl<T: Llm, D: Llm> Engine<T, D> {
                 }
             }
             self.metrics.record_phase(code, td.elapsed().as_secs_f64());
-            self.trace.record(EventKind::PhaseEnd, round, code, who.len() as u32);
+            self.trace
+                .record_c(EventKind::PhaseEnd, round, code, who.len() as u32, staged);
             self.trace.phase_advanced();
             let tr = Instant::now();
             self.reap(st);
@@ -1436,14 +1469,15 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         }
         sched += ts.elapsed().as_secs_f64();
         if !groups.is_empty() {
+            let staged: u32 = groups.iter().map(|(_, n)| n.len() as u32).sum();
             self.trace
-                .record(EventKind::PhaseBegin, round, PHASE_VERIFY, who.len() as u32);
+                .record_c(EventKind::PhaseBegin, round, PHASE_VERIFY, who.len() as u32, staged);
             let tv = Instant::now();
             let results = eval_phase(&self.target, self.cfg.fused, &mut groups, logits);
             drop(groups);
             self.metrics.record_phase(PHASE_VERIFY, tv.elapsed().as_secs_f64());
             self.trace
-                .record(EventKind::PhaseEnd, round, PHASE_VERIFY, who.len() as u32);
+                .record_c(EventKind::PhaseEnd, round, PHASE_VERIFY, who.len() as u32, staged);
             self.metrics.record_fused(who.len(), in_round);
             // host-side verification + commit + emission ("sampling")
             self.trace.record(EventKind::PhaseBegin, round, PHASE_HOST, who.len() as u32);

@@ -401,6 +401,65 @@ impl Metrics {
     }
 }
 
+/// One scalar exported by BOTH the snapshot JSON (`json_key`) and the
+/// Prometheus exposition (`prom_name`/`prom_kind`). Keeping the two
+/// renderings on one table makes key drift structurally impossible —
+/// the reflection test in `trace::export` diffs each rendering against
+/// this table.
+pub struct ScalarExport {
+    pub json_key: &'static str,
+    pub prom_name: &'static str,
+    /// `"counter"` or `"gauge"`.
+    pub prom_kind: &'static str,
+    pub value: f64,
+    /// Render as an integer in JSON (counters and occupancy gauges).
+    pub integer: bool,
+}
+
+impl Snapshot {
+    /// Every scalar this snapshot exports, in exposition order.
+    pub fn scalar_exports(&self) -> Vec<ScalarExport> {
+        let c = |json_key, prom_name, v: u64| ScalarExport {
+            json_key,
+            prom_name,
+            prom_kind: "counter",
+            value: v as f64,
+            integer: true,
+        };
+        let g = |json_key, prom_name, v: f64, integer| ScalarExport {
+            json_key,
+            prom_name,
+            prom_kind: "gauge",
+            value: v,
+            integer,
+        };
+        vec![
+            c("admitted", "rsd_requests_admitted_total", self.admitted),
+            c("rejected", "rsd_requests_rejected_total", self.rejected),
+            c("completed", "rsd_requests_completed_total", self.completed),
+            c("failed", "rsd_requests_failed_total", self.failed),
+            c("shed", "rsd_requests_shed_total", self.shed),
+            c("retries", "rsd_retries_total", self.retries),
+            c("cancelled", "rsd_requests_cancelled_total", self.cancelled),
+            c("tokens_out", "rsd_tokens_out_total", self.tokens_out),
+            c("decode_rounds", "rsd_decode_rounds_total", self.decode_rounds),
+            c("draft_calls", "rsd_draft_calls_total", self.draft_calls),
+            c("fused_calls", "rsd_fused_calls_total", self.fused_calls),
+            c("mid_round_admitted", "rsd_mid_round_admitted_total", self.mid_round_admitted),
+            c("preemptions", "rsd_preemptions_total", self.preemptions),
+            c("resumes", "rsd_resumes_total", self.resumes),
+            c("kv_hit_tokens", "rsd_kv_hit_tokens_total", self.kv_hit_tokens),
+            c("kv_lookup_tokens", "rsd_kv_lookup_tokens_total", self.kv_lookup_tokens),
+            c("kv_cow_copies", "rsd_kv_cow_copies_total", self.kv_cow_copies),
+            c("kv_evictions", "rsd_kv_evictions_total", self.kv_evictions),
+            g("kv_blocks_in_use", "rsd_kv_blocks_in_use", self.kv_blocks_in_use as f64, true),
+            g("kv_blocks_total", "rsd_kv_blocks_total", self.kv_blocks_total as f64, true),
+            g("kv_hit_rate", "rsd_kv_hit_rate", self.kv_hit_rate, false),
+            g("fused_mean_batch", "rsd_fused_mean_batch", self.fused_mean_batch, false),
+        ]
+    }
+}
+
 fn hist_json(h: &HistSummary) -> Json {
     Json::obj(vec![
         ("count", Json::from(h.count as usize)),
@@ -425,17 +484,17 @@ impl Snapshot {
         let deciles = |h: &[u64; FILL_BUCKETS]| {
             Json::Arr(h.iter().map(|&c| Json::from(c as usize)).collect())
         };
-        Json::obj(vec![
-            ("admitted", Json::from(self.admitted as usize)),
-            ("rejected", Json::from(self.rejected as usize)),
-            ("completed", Json::from(self.completed as usize)),
-            ("failed", Json::from(self.failed as usize)),
-            ("shed", Json::from(self.shed as usize)),
-            ("retries", Json::from(self.retries as usize)),
-            ("cancelled", Json::from(self.cancelled as usize)),
-            ("tokens_out", Json::from(self.tokens_out as usize)),
-            ("decode_rounds", Json::from(self.decode_rounds as usize)),
-            ("draft_calls", Json::from(self.draft_calls as usize)),
+        // every shared scalar comes off the export table (keeps JSON
+        // and Prometheus key sets in lockstep; see `scalar_exports`)
+        let mut pairs: Vec<(&str, Json)> = self
+            .scalar_exports()
+            .into_iter()
+            .map(|e| {
+                let v = if e.integer { Json::from(e.value as usize) } else { Json::Num(e.value) };
+                (e.json_key, v)
+            })
+            .collect();
+        pairs.extend(vec![
             ("latency", hist_json(&self.latency)),
             ("ttft", hist_json(&self.ttft)),
             ("queue_wait", hist_json(&self.queue_wait)),
@@ -456,27 +515,16 @@ impl Snapshot {
             ("phase_draft", hist_json(&self.phase_draft)),
             ("phase_verify", hist_json(&self.phase_verify)),
             ("phase_host", hist_json(&self.phase_host)),
-            ("mid_round_admitted", Json::from(self.mid_round_admitted as usize)),
             (
                 "accept_rate_by_level",
                 Json::Arr(self.accept_rate_by_level.iter().map(|&r| Json::Num(r)).collect()),
             ),
             ("round_nodes_hist", sparse_hist(&self.round_nodes_hist)),
-            ("fused_calls", Json::from(self.fused_calls as usize)),
             ("fused_batch_hist", sparse_hist(&self.fused_batch_hist)),
             ("fused_fill_hist", deciles(&self.fused_fill_hist)),
-            ("fused_mean_batch", Json::Num(self.fused_mean_batch)),
-            ("preemptions", Json::from(self.preemptions as usize)),
-            ("resumes", Json::from(self.resumes as usize)),
-            ("kv_hit_tokens", Json::from(self.kv_hit_tokens as usize)),
-            ("kv_lookup_tokens", Json::from(self.kv_lookup_tokens as usize)),
-            ("kv_cow_copies", Json::from(self.kv_cow_copies as usize)),
-            ("kv_evictions", Json::from(self.kv_evictions as usize)),
-            ("kv_blocks_in_use", Json::from(self.kv_blocks_in_use as usize)),
-            ("kv_blocks_total", Json::from(self.kv_blocks_total as usize)),
-            ("kv_hit_rate", Json::Num(self.kv_hit_rate)),
             ("kv_hit_hist", deciles(&self.kv_hit_hist)),
-        ])
+        ]);
+        Json::obj(pairs)
     }
 }
 

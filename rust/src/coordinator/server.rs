@@ -110,6 +110,9 @@ pub struct ServeCtx {
     pub metrics: Option<Arc<Metrics>>,
     pub trace: Tracer,
     pub cancels: Option<CancelRegistry>,
+    /// Speculation-analytics handle shared with the engine (the
+    /// `stats` wire command; appended to the `trace` exposition).
+    pub analytics: crate::obs::Analytics,
 }
 
 /// Serve forever. `submit` feeds the engine thread; `ctx` carries the
@@ -256,9 +259,24 @@ pub(crate) fn command_response(cmd: &str, j: &Json, ctx: &ServeCtx) -> Json {
             }
             let mut fields = vec![("trace", chrome_trace(&ctx.trace.snapshot()))];
             if let Some(m) = &ctx.metrics {
-                fields.push(("prometheus", Json::Str(prometheus(&m.snapshot()))));
+                let mut text = prometheus(&m.snapshot());
+                // the analytics series ride the same exposition
+                text.push_str(&ctx.analytics.prometheus());
+                fields.push(("prometheus", Json::Str(text)));
             }
             Json::obj(fields)
+        }
+        // windowed speculation analytics: per-level acceptance,
+        // accepted-tokens-per-target-forward, throughput/SLO trends
+        // over the last `window` completed stats windows (default 1)
+        "stats" => {
+            if !ctx.analytics.enabled() {
+                return err_json(
+                    "analytics disabled (set \"stats_window_rounds\" in the engine config)",
+                );
+            }
+            let window = j.get("window").and_then(Json::as_usize).unwrap_or(1).max(1);
+            Json::obj(vec![("stats", ctx.analytics.stats_json(window))])
         }
         // mark a request id for cancellation at the engine's next phase
         // boundary; the addressed request receives its own terminal
@@ -327,6 +345,26 @@ pub(crate) fn done_json(report: &RequestReport) -> Json {
             ]),
         ));
     }
+    // compute-budget attribution: what this request cost the target
+    // model and what each unit of that budget bought (the paper's
+    // accepted-tokens-per-target-forward, per request)
+    let per_forward = |n: usize| {
+        if stats.decode_calls == 0 {
+            0.0
+        } else {
+            n as f64 / stats.decode_calls as f64
+        }
+    };
+    fields.push((
+        "budget",
+        Json::obj(vec![
+            ("target_forwards", stats.decode_calls.into()),
+            ("tree_nodes", stats.tree_nodes.into()),
+            ("accepted_per_forward", per_forward(stats.accepted_draft_tokens).into()),
+            ("tokens_per_forward", per_forward(stats.generated).into()),
+            ("nodes_per_forward", per_forward(stats.tree_nodes).into()),
+        ]),
+    ));
     fields.push(("wall_secs", stats.wall.as_secs_f64().into()));
     // per-request scheduling timeline (queue → first token → done), all
     // seconds from arrival
@@ -522,7 +560,7 @@ mod tests {
         metrics.add(&metrics.completed, 2);
         metrics.record_latency(0.25);
         let ctx =
-            ServeCtx { metrics: Some(metrics), trace: Tracer::off(), cancels: None };
+            ServeCtx { metrics: Some(metrics), trace: Tracer::off(), ..Default::default() };
         let j = command_response("metrics", &Json::Null, &ctx);
         // the reply must parse back and carry the full snapshot
         let j = Json::parse(&j.to_string()).unwrap();
@@ -544,7 +582,7 @@ mod tests {
         let ctx = ServeCtx {
             metrics: Some(Arc::new(Metrics::default())),
             trace,
-            cancels: None,
+            ..Default::default()
         };
         let j = command_response("trace", &Json::Null, &ctx);
         let j = Json::parse(&j.to_string()).unwrap();
@@ -568,6 +606,7 @@ mod tests {
             metrics: None,
             trace: Tracer::off(),
             cancels: Some(reg.clone()),
+            ..Default::default()
         };
         let line = Json::parse(r#"{"cmd": "cancel", "id": 7}"#).unwrap();
         let j = command_response("cancel", &line, &ctx);

@@ -72,6 +72,9 @@ pub struct ArStepper<T: Llm> {
     /// commit events carry.
     tracer: crate::trace::Tracer,
     trace_id: u64,
+    /// Speculation-analytics handle (default off); AR forwards carry a
+    /// zero node budget and each committed token counts as bonus.
+    analytics: crate::obs::Analytics,
 }
 
 impl<T: Llm> ArStepper<T> {
@@ -110,6 +113,7 @@ impl<T: Llm> ArStepper<T> {
             done: false,
             tracer: crate::trace::Tracer::off(),
             trace_id: 0,
+            analytics: crate::obs::Analytics::off(),
         })
     }
 
@@ -122,6 +126,12 @@ impl<T: Llm> ArStepper<T> {
     pub fn set_trace(&mut self, tracer: &crate::trace::Tracer, id: u64) {
         self.tracer = tracer.clone();
         self.trace_id = id;
+    }
+
+    /// Attach a speculation-analytics handle; AR always accrues to the
+    /// `ar` family ledger.
+    pub fn set_analytics(&mut self, analytics: &crate::obs::Analytics) {
+        self.analytics = analytics.clone();
     }
 
     /// The streaming commit boundary (see
@@ -234,6 +244,7 @@ impl<T: Llm> ArStepper<T> {
         self.out.push(token);
         // AR's commit boundary: the sampled token is final immediately
         self.tracer.record(crate::trace::EventKind::Commit, self.trace_id, 0, 1);
+        self.analytics.record_commit(crate::obs::Family::Ar, 0, 1, &[]);
         if self.out.len() >= self.max_new || target.capacity_left(&self.sess) < 2 {
             self.finish();
             return Ok(RoundStart::Finished);
@@ -274,6 +285,7 @@ impl<T: Llm> ArStepper<T> {
             bail!("feed_target: {} rows for {} staged nodes", rows.len(), nodes_len);
         }
         self.stats.decode_calls += 1;
+        self.analytics.record_forward(crate::obs::Family::Ar, 0);
         self.chain.clear();
         self.chain.extend(0..nodes_len);
         target.commit(&mut self.sess, &self.chain)?;

@@ -410,6 +410,10 @@ pub struct SpecStepper<T: Llm, D: Llm> {
     /// commit-boundary events carry. Recording allocates nothing.
     tracer: crate::trace::Tracer,
     trace_id: u64,
+    /// Speculation-analytics handle (default off) and the decoder
+    /// family this session's ledger rows accrue under.
+    analytics: crate::obs::Analytics,
+    family: crate::obs::Family,
     /// The original prompt (immutable): with `out` it reconstructs the
     /// full logical sequence, which is all suspend/resume needs to spill
     /// and rebuild KV state losslessly.
@@ -492,6 +496,8 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             has_report: false,
             tracer: crate::trace::Tracer::off(),
             trace_id: 0,
+            analytics: crate::obs::Analytics::off(),
+            family: crate::obs::Family::RsdS,
             prompt: prompt.to_vec(),
             out,
             stats,
@@ -529,6 +535,13 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
     pub fn set_trace(&mut self, tracer: &crate::trace::Tracer, id: u64) {
         self.tracer = tracer.clone();
         self.trace_id = id;
+    }
+
+    /// Attach a speculation-analytics handle; this session's target
+    /// forwards and commit boundaries accrue to `family`'s ledger.
+    pub fn set_analytics(&mut self, analytics: &crate::obs::Analytics, family: crate::obs::Family) {
+        self.analytics = analytics.clone();
+        self.family = family;
     }
 
     /// Swap the tree strategy before the next round (adaptive tree
@@ -844,6 +857,7 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         let (temp, top_p) = (self.sampling.temperature, self.sampling.top_p);
         self.stats.decode_calls += 1;
         self.stats.tree_nodes += ctx.tree.nodes.len();
+        self.analytics.record_forward(self.family, ctx.tree.nodes.len() as u32);
         let root_target_lp = self.scratch.process_into(rows.row(ttail_len - 1), temp, top_p);
         // normally a no-op (drained when the round closed); after a
         // mid-round commit error the stale distributions must not shift
@@ -916,6 +930,12 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
             self.trace_id,
             eff_accepted as u32,
             u32::from(eff_bonus),
+        );
+        self.analytics.record_commit(
+            self.family,
+            eff_accepted,
+            usize::from(eff_bonus),
+            &vr.level_trials,
         );
 
         // ---- zero-copy KV commit (FilterKVCache) --------------------------

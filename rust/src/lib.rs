@@ -40,6 +40,7 @@ pub mod decode;
 pub mod kvcache;
 pub mod llm;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sampling;
 pub mod sim;

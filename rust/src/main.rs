@@ -48,7 +48,11 @@ COMMANDS:
               for per-token {"token", "index"} events.
               --trace N keeps a flight-recorder ring of the newest N
               events ({"cmd": "trace"} dumps Chrome trace JSON +
-              Prometheus text; {"cmd": "metrics"} dumps counters);
+              Prometheus text; {"cmd": "metrics"} dumps counters;
+              {"cmd": "stats", "window": K} dumps speculation
+              analytics — per-level acceptance, accepted tokens
+              per target forward, SLO attainment — over the last
+              K windows of "stats_window_rounds" rounds each);
               --watchdog-ms MS snapshots journal + engine state to
               --watchdog-path when no phase boundary advances for MS)
   exp1       --dl 2,3,4,5 --max-tokens N --reps N [--sim] [--alpha A]
@@ -108,6 +112,10 @@ fn main() -> Result<()> {
             }
             let metrics = Arc::new(Metrics::default());
             let trace = Tracer::new(cfg.trace_events);
+            // one analytics handle shared by the engine (records) and the
+            // server ({"cmd": "stats"} reads) — from_config returns the
+            // inert handle when "stats_window_rounds" is 0
+            let analytics = rsd::obs::Analytics::from_config(&cfg);
             let watchdog_ms = cfg.watchdog_ms;
             let watchdog_path = cfg.watchdog_path.clone();
             let cancels = rsd::coordinator::CancelRegistry::default();
@@ -115,6 +123,7 @@ fn main() -> Result<()> {
                 metrics: Some(metrics.clone()),
                 trace: trace.clone(),
                 cancels: Some(cancels.clone()),
+                analytics: analytics.clone(),
             };
             let spawn_watchdog = |status| {
                 Watchdog::spawn(
@@ -144,7 +153,8 @@ fn main() -> Result<()> {
                 };
                 let eng =
                     engine::Engine::with_telemetry(target, draft, cfg, metrics, trace.clone())
-                        .with_cancels(cancels);
+                        .with_cancels(cancels)
+                        .with_analytics(analytics);
                 let _watchdog = spawn_watchdog(eng.status_handle());
                 let (tx, _handle) = engine::spawn(eng);
                 server::serve(&addr, tx, ctx)?;
@@ -165,7 +175,8 @@ fn main() -> Result<()> {
                         eng_metrics,
                         eng_trace,
                     )
-                    .with_cancels(cancels);
+                    .with_cancels(cancels)
+                    .with_analytics(analytics);
                     let _ = status_tx.send(eng.status_handle());
                     Ok(eng)
                 });

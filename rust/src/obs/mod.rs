@@ -1,0 +1,1054 @@
+//! Speculation analytics: the per-(decoder-family, tree-level)
+//! acceptance ledger, compute-budget accounting, windowed live stats
+//! and SLO tracking for the serving engine.
+//!
+//! The paper's central empirical claim is about *fixed target
+//! computational budgets* — accepted tokens per target forward — so
+//! this module accounts target compute at its source: every target
+//! forward a stepper issues ([`Analytics::record_forward`], charged
+//! with the draft-tree nodes it verified) and every commit boundary
+//! ([`Analytics::record_commit`], carrying the accepted/bonus token
+//! counts and the per-level verification trials). From those two
+//! record points the ledger yields live accepted-tokens-per-target-
+//! forward and per-level acceptance curves, per decoder family.
+//!
+//! Three layers, all behind one cloneable handle ([`Analytics`],
+//! mirroring [`crate::trace::Tracer`]: a disabled handle is a `None`
+//! and every record call is one branch):
+//!
+//! 1. **Acceptance ledger** — fixed-size per-(family, level) atomics.
+//!    Recording is zero-allocation and lock-free (relaxed atomic adds
+//!    into preallocated arrays); the hot-path 0-alloc gate in
+//!    `benches/hotpath.rs` runs with analytics enabled.
+//! 2. **Windowed aggregator** — a preallocated ring of cumulative
+//!    boundary snapshots ([`Cume`], `Copy`, no heap), rotated every
+//!    `stats_window_rounds` engine rounds by [`Analytics::tick`].
+//!    A window's aggregate is the delta between two boundaries, so
+//!    ticks never sum anything retroactively and never allocate.
+//! 3. **SLO tracker** — TTFT/latency objective attainment and
+//!    deadline-hit counters fed by [`Analytics::on_done`], reported
+//!    per window with error-budget burn against a 99% objective.
+//!
+//! Analytics never consumes RNG and never changes control flow, so
+//! token streams are bit-identical analytics-on vs analytics-off (the
+//! soak suite asserts this). Export is cold-path: the `stats` wire
+//! command renders [`Analytics::stats_json`], Prometheus series come
+//! from [`Analytics::prometheus`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::DecoderConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::util::json::Json;
+
+/// Tree levels tracked per family; deeper levels fold into the last
+/// slot (deeper than any shipped decoder: `ADAPTIVE_MAX_DEPTH` is 8).
+pub const MAX_LEVELS: usize = 16;
+
+/// Number of [`Family`] variants (ledger array size).
+pub const NUM_FAMILIES: usize = 7;
+
+/// SLO attainment objective the error-budget burn is measured against.
+pub const SLO_OBJECTIVE: f64 = 0.99;
+
+/// Decoder family a ledger row is keyed by — the decoder *kind*, not
+/// its shape parameters, so per-request width/depth variations of one
+/// algorithm aggregate into one comparable row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Family {
+    Ar = 0,
+    Sd = 1,
+    SpecTr = 2,
+    RsdC = 3,
+    RsdCMr = 4,
+    RsdS = 5,
+    Adaptive = 6,
+}
+
+impl Family {
+    pub const ALL: [Family; NUM_FAMILIES] = [
+        Family::Ar,
+        Family::Sd,
+        Family::SpecTr,
+        Family::RsdC,
+        Family::RsdCMr,
+        Family::RsdS,
+        Family::Adaptive,
+    ];
+
+    /// The family of a decoder config (adaptive requests stay
+    /// `Adaptive` whichever shape family the controller picks).
+    pub fn of(cfg: &DecoderConfig) -> Family {
+        match cfg {
+            DecoderConfig::Ar => Family::Ar,
+            DecoderConfig::Sd { .. } => Family::Sd,
+            DecoderConfig::SpecTr { .. } => Family::SpecTr,
+            DecoderConfig::RsdC { .. } => Family::RsdC,
+            DecoderConfig::RsdCMultiRound { .. } => Family::RsdCMr,
+            DecoderConfig::RsdS { .. } => Family::RsdS,
+            DecoderConfig::Adaptive { .. } => Family::Adaptive,
+        }
+    }
+
+    /// Stable label (Prometheus `family` label, stats JSON key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Ar => "ar",
+            Family::Sd => "sd",
+            Family::SpecTr => "spectr",
+            Family::RsdC => "rsd-c",
+            Family::RsdCMr => "rsd-c-mr",
+            Family::RsdS => "rsd-s",
+            Family::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// One family's ledger row: fixed-size, all-atomic, preallocated.
+#[derive(Default)]
+struct FamilyLedger {
+    /// Target-model forwards issued (the budget denominator; prefill
+    /// rounds count, matching `DecodeStats::decode_calls`).
+    target_forwards: AtomicU64,
+    /// Draft-tree nodes the target verified across those forwards.
+    tree_nodes: AtomicU64,
+    /// Draft tokens accepted by verification.
+    accepted: AtomicU64,
+    /// Bonus tokens (walk exited the tree / AR round tokens).
+    bonus: AtomicU64,
+    /// Tokens committed to the output stream
+    /// (= accepted + bonus + resamples).
+    committed: AtomicU64,
+    /// Residual-resample events (one per rejected level trial: the
+    /// committed token came from the residual, not the tree).
+    resamples: AtomicU64,
+    /// Commit boundaries recorded.
+    commits: AtomicU64,
+    /// Per-level verification attempts (index = tree level, clamped
+    /// to [`MAX_LEVELS`]).
+    level_attempts: [AtomicU64; MAX_LEVELS],
+    /// Per-level accepted verifications.
+    level_accepts: [AtomicU64; MAX_LEVELS],
+}
+
+/// Plain-data copy of one ledger row (or a sum of rows) for tests and
+/// export. Cold path.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LedgerTotals {
+    pub target_forwards: u64,
+    pub tree_nodes: u64,
+    pub accepted: u64,
+    pub bonus: u64,
+    pub committed: u64,
+    pub resamples: u64,
+    pub commits: u64,
+    pub level_attempts: Vec<u64>,
+    pub level_accepts: Vec<u64>,
+}
+
+impl LedgerTotals {
+    /// Accepted draft tokens per target forward — the paper's
+    /// fixed-budget headline metric (0 before any forward).
+    pub fn accepted_per_target_forward(&self) -> f64 {
+        if self.target_forwards == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.target_forwards as f64
+        }
+    }
+
+    /// Committed tokens per target forward (block efficiency).
+    pub fn tokens_per_target_forward(&self) -> f64 {
+        if self.target_forwards == 0 {
+            0.0
+        } else {
+            self.committed as f64 / self.target_forwards as f64
+        }
+    }
+
+    /// Per-level acceptance rates, trimmed to attempted levels.
+    pub fn acceptance_by_level(&self) -> Vec<f64> {
+        self.level_attempts
+            .iter()
+            .zip(&self.level_accepts)
+            .map(|(&n, &s)| if n == 0 { 0.0 } else { s as f64 / n as f64 })
+            .collect()
+    }
+
+    fn add_assign(&mut self, o: &LedgerTotals) {
+        self.target_forwards += o.target_forwards;
+        self.tree_nodes += o.tree_nodes;
+        self.accepted += o.accepted;
+        self.bonus += o.bonus;
+        self.committed += o.committed;
+        self.resamples += o.resamples;
+        self.commits += o.commits;
+        if self.level_attempts.len() < o.level_attempts.len() {
+            self.level_attempts.resize(o.level_attempts.len(), 0);
+            self.level_accepts.resize(o.level_accepts.len(), 0);
+        }
+        for (i, (&a, &s)) in o.level_attempts.iter().zip(&o.level_accepts).enumerate() {
+            self.level_attempts[i] += a;
+            self.level_accepts[i] += s;
+        }
+    }
+}
+
+/// One cumulative boundary snapshot: everything a window aggregate is
+/// a delta of. `Copy`, fixed-size, no heap — ring rotation is a slot
+/// write.
+#[derive(Debug, Clone, Copy, Default)]
+struct Cume {
+    /// Microseconds since the analytics epoch.
+    t_us: u64,
+    /// Engine rounds ticked.
+    rounds: u64,
+    // engine/metrics counters
+    tokens_out: u64,
+    completed: u64,
+    failed: u64,
+    shed: u64,
+    retries: u64,
+    preemptions: u64,
+    kv_hit_tokens: u64,
+    kv_lookup_tokens: u64,
+    // ledger sums (all families)
+    target_forwards: u64,
+    tree_nodes: u64,
+    accepted: u64,
+    bonus: u64,
+    committed: u64,
+    resamples: u64,
+    level_attempts: [u64; MAX_LEVELS],
+    level_accepts: [u64; MAX_LEVELS],
+    // SLO counters
+    ttft_hits: u64,
+    ttft_total: u64,
+    latency_hits: u64,
+    latency_total: u64,
+    deadline_hits: u64,
+    deadline_total: u64,
+    // gauges at the boundary
+    queue_depth: u64,
+    active: u64,
+}
+
+impl Cume {
+    fn delta(&self, start: &Cume) -> Cume {
+        let mut d = *self;
+        d.t_us -= start.t_us;
+        d.rounds -= start.rounds;
+        d.tokens_out -= start.tokens_out;
+        d.completed -= start.completed;
+        d.failed -= start.failed;
+        d.shed -= start.shed;
+        d.retries -= start.retries;
+        d.preemptions -= start.preemptions;
+        d.kv_hit_tokens -= start.kv_hit_tokens;
+        d.kv_lookup_tokens -= start.kv_lookup_tokens;
+        d.target_forwards -= start.target_forwards;
+        d.tree_nodes -= start.tree_nodes;
+        d.accepted -= start.accepted;
+        d.bonus -= start.bonus;
+        d.committed -= start.committed;
+        d.resamples -= start.resamples;
+        for i in 0..MAX_LEVELS {
+            d.level_attempts[i] -= start.level_attempts[i];
+            d.level_accepts[i] -= start.level_accepts[i];
+        }
+        d.ttft_hits -= start.ttft_hits;
+        d.ttft_total -= start.ttft_total;
+        d.latency_hits -= start.latency_hits;
+        d.latency_total -= start.latency_total;
+        d.deadline_hits -= start.deadline_hits;
+        d.deadline_total -= start.deadline_total;
+        // queue_depth/active stay the END-of-window gauges (deltas of
+        // gauges are meaningless)
+        d
+    }
+}
+
+struct Ring {
+    /// Boundary `j` (1-based rotation count) lives at slot
+    /// `(j - 1) % capacity`; preallocated, never grows.
+    buf: Vec<Cume>,
+    /// Boundaries pushed over the ring's lifetime.
+    pushed: u64,
+}
+
+/// The analytics state behind an enabled handle.
+pub struct AnalyticsInner {
+    epoch: Instant,
+    /// Rotation period in engine rounds.
+    window_rounds: usize,
+    slo_ttft_ms: u64,
+    slo_latency_ms: u64,
+    ledger: [FamilyLedger; NUM_FAMILIES],
+    ticks: AtomicU64,
+    ttft_hits: AtomicU64,
+    ttft_total: AtomicU64,
+    latency_hits: AtomicU64,
+    latency_total: AtomicU64,
+    deadline_hits: AtomicU64,
+    deadline_total: AtomicU64,
+    /// Cumulative state at the latest tick (stats read this instead of
+    /// taking a `Metrics` handle; at most one round stale).
+    latest: Mutex<Cume>,
+    ring: Mutex<Ring>,
+}
+
+impl AnalyticsInner {
+    fn new(window_rounds: usize, windows: usize, slo_ttft_ms: u64, slo_latency_ms: u64) -> Self {
+        AnalyticsInner {
+            epoch: Instant::now(),
+            window_rounds: window_rounds.max(1),
+            slo_ttft_ms,
+            slo_latency_ms,
+            ledger: std::array::from_fn(|_| FamilyLedger::default()),
+            ticks: AtomicU64::new(0),
+            ttft_hits: AtomicU64::new(0),
+            ttft_total: AtomicU64::new(0),
+            latency_hits: AtomicU64::new(0),
+            latency_total: AtomicU64::new(0),
+            deadline_hits: AtomicU64::new(0),
+            deadline_total: AtomicU64::new(0),
+            latest: Mutex::new(Cume::default()),
+            ring: Mutex::new(Ring { buf: vec![Cume::default(); windows.max(1)], pushed: 0 }),
+        }
+    }
+
+    /// Gather the cumulative state NOW (atomic loads only; no alloc).
+    fn collect(&self, m: &Metrics, queued: usize, active: usize, rounds: u64) -> Cume {
+        let ld = Ordering::Relaxed;
+        let mut c = Cume {
+            t_us: self.epoch.elapsed().as_micros() as u64,
+            rounds,
+            tokens_out: m.tokens_out.load(ld),
+            completed: m.completed.load(ld),
+            failed: m.failed.load(ld),
+            shed: m.shed.load(ld),
+            retries: m.retries.load(ld),
+            preemptions: m.preemptions.load(ld),
+            kv_hit_tokens: m.kv_hit_tokens.load(ld),
+            kv_lookup_tokens: m.kv_lookup_tokens.load(ld),
+            ttft_hits: self.ttft_hits.load(ld),
+            ttft_total: self.ttft_total.load(ld),
+            latency_hits: self.latency_hits.load(ld),
+            latency_total: self.latency_total.load(ld),
+            deadline_hits: self.deadline_hits.load(ld),
+            deadline_total: self.deadline_total.load(ld),
+            queue_depth: queued as u64,
+            active: active as u64,
+            ..Cume::default()
+        };
+        for row in &self.ledger {
+            c.target_forwards += row.target_forwards.load(ld);
+            c.tree_nodes += row.tree_nodes.load(ld);
+            c.accepted += row.accepted.load(ld);
+            c.bonus += row.bonus.load(ld);
+            c.committed += row.committed.load(ld);
+            c.resamples += row.resamples.load(ld);
+            for i in 0..MAX_LEVELS {
+                c.level_attempts[i] += row.level_attempts[i].load(ld);
+                c.level_accepts[i] += row.level_accepts[i].load(ld);
+            }
+        }
+        c
+    }
+
+    fn family_totals(&self, fam: Family) -> LedgerTotals {
+        let ld = Ordering::Relaxed;
+        let row = &self.ledger[fam as usize];
+        LedgerTotals {
+            target_forwards: row.target_forwards.load(ld),
+            tree_nodes: row.tree_nodes.load(ld),
+            accepted: row.accepted.load(ld),
+            bonus: row.bonus.load(ld),
+            committed: row.committed.load(ld),
+            resamples: row.resamples.load(ld),
+            commits: row.commits.load(ld),
+            level_attempts: row.level_attempts.iter().map(|a| a.load(ld)).collect(),
+            level_accepts: row.level_accepts.iter().map(|a| a.load(ld)).collect(),
+        }
+    }
+}
+
+/// The recording handle: a clone-cheap `Option<Arc<AnalyticsInner>>`.
+/// The default ([`Analytics::off`]) records nothing and holds nothing.
+#[derive(Clone, Default)]
+pub struct Analytics {
+    inner: Option<Arc<AnalyticsInner>>,
+}
+
+impl std::fmt::Debug for Analytics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Analytics").field("enabled", &self.enabled()).finish()
+    }
+}
+
+impl Analytics {
+    /// Disabled analytics: nothing allocated, every record one branch.
+    pub fn off() -> Self {
+        Analytics { inner: None }
+    }
+
+    /// Enabled analytics rotating a window every `window_rounds`
+    /// engine rounds over a ring of `windows` boundaries
+    /// (`window_rounds == 0` = disabled). `slo_*_ms` of 0 disable the
+    /// matching objective.
+    pub fn new(window_rounds: usize, windows: usize, slo_ttft_ms: u64, slo_latency_ms: u64) -> Self {
+        if window_rounds == 0 {
+            return Self::off();
+        }
+        Analytics {
+            inner: Some(Arc::new(AnalyticsInner::new(
+                window_rounds,
+                windows,
+                slo_ttft_ms,
+                slo_latency_ms,
+            ))),
+        }
+    }
+
+    /// Build from the engine config's analytics knobs.
+    pub fn from_config(cfg: &crate::config::EngineConfig) -> Self {
+        Self::new(cfg.stats_window_rounds, cfg.stats_windows, cfg.slo_ttft_ms, cfg.slo_latency_ms)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Record one target forward that verified `nodes` draft-tree
+    /// nodes (0 for AR). Zero-alloc, lock-free.
+    #[inline]
+    pub fn record_forward(&self, fam: Family, nodes: u32) {
+        if let Some(i) = &self.inner {
+            let row = &i.ledger[fam as usize];
+            row.target_forwards.fetch_add(1, Ordering::Relaxed);
+            row.tree_nodes.fetch_add(nodes as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one commit boundary: `accepted` draft tokens survived
+    /// verification, `bonus` extra committed tokens (the tree-exit
+    /// bonus draw, or AR's round token), and the per-level trials
+    /// (`(nodes, success)` per attempted level, stop-truncated the
+    /// same way the stream was). A failed trial is one residual-
+    /// resample event whose drawn token was committed, so the
+    /// committed-token count is `accepted + bonus + failed trials` —
+    /// exactly the tokens the round emitted. Zero-alloc, lock-free.
+    #[inline]
+    pub fn record_commit(&self, fam: Family, accepted: usize, bonus: usize, trials: &[(usize, usize)]) {
+        if let Some(i) = &self.inner {
+            let row = &i.ledger[fam as usize];
+            let mut resamples = 0u64;
+            for (level, &(_, success)) in trials.iter().enumerate() {
+                let slot = level.min(MAX_LEVELS - 1);
+                row.level_attempts[slot].fetch_add(1, Ordering::Relaxed);
+                row.level_accepts[slot].fetch_add(success as u64, Ordering::Relaxed);
+                if success == 0 {
+                    resamples += 1;
+                }
+            }
+            row.commits.fetch_add(1, Ordering::Relaxed);
+            row.accepted.fetch_add(accepted as u64, Ordering::Relaxed);
+            row.bonus.fetch_add(bonus as u64, Ordering::Relaxed);
+            row.resamples.fetch_add(resamples, Ordering::Relaxed);
+            row.committed.fetch_add(accepted as u64 + bonus as u64 + resamples, Ordering::Relaxed);
+        }
+    }
+
+    /// Engine-round tick: refresh the live cumulative snapshot and
+    /// rotate a window boundary every `window_rounds` ticks. Allocates
+    /// nothing (two short mutex holds over preallocated `Copy` state).
+    #[inline]
+    pub fn tick(&self, m: &Metrics, queued: usize, active: usize) {
+        let Some(i) = &self.inner else { return };
+        let rounds = i.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        let cume = i.collect(m, queued, active, rounds);
+        *i.latest.lock().unwrap() = cume;
+        if rounds % i.window_rounds as u64 == 0 {
+            let mut r = i.ring.lock().unwrap();
+            let cap = r.buf.len() as u64;
+            let slot = (r.pushed % cap) as usize;
+            r.buf[slot] = cume;
+            r.pushed += 1;
+        }
+    }
+
+    /// Record one completed request's SLO outcomes. Zero-alloc.
+    #[inline]
+    pub fn on_done(&self, ttft: Option<f64>, latency: f64, deadline_ms: Option<u64>) {
+        let Some(i) = &self.inner else { return };
+        if i.slo_ttft_ms > 0 {
+            if let Some(t) = ttft {
+                i.ttft_total.fetch_add(1, Ordering::Relaxed);
+                if t * 1e3 <= i.slo_ttft_ms as f64 {
+                    i.ttft_hits.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if i.slo_latency_ms > 0 {
+            i.latency_total.fetch_add(1, Ordering::Relaxed);
+            if latency * 1e3 <= i.slo_latency_ms as f64 {
+                i.latency_hits.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if let Some(d) = deadline_ms {
+            i.deadline_total.fetch_add(1, Ordering::Relaxed);
+            if latency * 1e3 <= d as f64 {
+                i.deadline_hits.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Ledger totals summed over every family (cold path; tests and
+    /// export).
+    pub fn totals(&self) -> LedgerTotals {
+        let mut sum = LedgerTotals::default();
+        if self.inner.is_some() {
+            for fam in Family::ALL {
+                sum.add_assign(&self.family_totals(fam));
+            }
+        }
+        sum
+    }
+
+    /// One family's ledger totals (all-zero when disabled).
+    pub fn family_totals(&self, fam: Family) -> LedgerTotals {
+        match &self.inner {
+            Some(i) => i.family_totals(fam),
+            None => LedgerTotals::default(),
+        }
+    }
+
+    /// The `{"cmd": "stats"}` payload: aggregate over the current
+    /// (partial) window plus the last `window` completed windows, a
+    /// per-window trend series, the cumulative per-family ledger and
+    /// the SLO/config echo. `Json::Null` when disabled. Cold path.
+    pub fn stats_json(&self, window: usize) -> Json {
+        let Some(i) = &self.inner else { return Json::Null };
+        let k = window.max(1) as u64;
+        let latest = *i.latest.lock().unwrap();
+        let (complete, start, trend_cumes, ring_cap) = {
+            let r = i.ring.lock().unwrap();
+            let cap = r.buf.len() as u64;
+            let oldest_retained = r.pushed.saturating_sub(cap) + 1;
+            // aggregate start = state at boundary (pushed - k): the
+            // zero state when k covers all history, the oldest
+            // retained boundary when the requested one was evicted
+            let j0 = match r.pushed.saturating_sub(k) {
+                0 => 0,
+                j if j >= oldest_retained => j,
+                _ => oldest_retained,
+            };
+            let back = r.pushed - j0;
+            let start = if j0 == 0 {
+                Cume::default()
+            } else {
+                r.buf[((j0 - 1) % cap) as usize]
+            };
+            // trend: the last `back` complete windows (both boundaries
+            // still retained), oldest first
+            let mut trend = Vec::new();
+            for j in (j0 + 1)..=r.pushed {
+                if j < oldest_retained {
+                    continue; // end boundary evicted
+                }
+                let end = r.buf[((j - 1) % cap) as usize];
+                let s = if j == 1 {
+                    Cume::default()
+                } else if j - 1 >= oldest_retained {
+                    r.buf[((j - 2) % cap) as usize]
+                } else {
+                    continue; // start boundary evicted
+                };
+                trend.push(end.delta(&s));
+            }
+            (back, start, trend, r.buf.len())
+        };
+        let agg = latest.delta(&start);
+        let cfg = Json::obj(vec![
+            ("window_rounds", Json::from(i.window_rounds)),
+            ("windows", Json::from(ring_cap)),
+            ("slo_ttft_ms", Json::from(i.slo_ttft_ms as usize)),
+            ("slo_latency_ms", Json::from(i.slo_latency_ms as usize)),
+        ]);
+        let now = Json::obj(vec![
+            ("rounds", Json::from(latest.rounds as usize)),
+            ("uptime_secs", Json::Num(i.epoch.elapsed().as_secs_f64())),
+            ("queue_depth", Json::from(latest.queue_depth as usize)),
+            ("active", Json::from(latest.active as usize)),
+        ]);
+        let mut families = Vec::new();
+        for fam in Family::ALL {
+            let t = i.family_totals(fam);
+            if t.target_forwards == 0 && t.commits == 0 {
+                continue;
+            }
+            families.push((fam.name(), ledger_json(&t)));
+        }
+        let trend = Json::Arr(
+            trend_cumes
+                .iter()
+                .map(|w| {
+                    Json::obj(vec![
+                        ("rounds", Json::from(w.rounds as usize)),
+                        ("span_secs", Json::Num(w.t_us as f64 / 1e6)),
+                        ("tokens_per_sec", Json::Num(rate(w.tokens_out, w.t_us))),
+                        (
+                            "accepted_per_target_forward",
+                            Json::Num(ratio(w.accepted, w.target_forwards)),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("config", cfg),
+            ("now", now),
+            ("window", window_json(&agg, complete)),
+            ("trend", trend),
+            (
+                "cumulative",
+                Json::obj(vec![
+                    ("families", Json::obj(families)),
+                    ("slo", slo_json(&latest, i.slo_ttft_ms, i.slo_latency_ms)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Prometheus text exposition of the analytics series (empty when
+    /// disabled). Appended to the metrics exposition by the `trace`
+    /// wire command; names are stable (README Observability).
+    pub fn prometheus(&self) -> String {
+        let Some(i) = &self.inner else { return String::new() };
+        let mut o = String::new();
+        let typed = |o: &mut String, name: &str, kind: &str| {
+            o.push_str(&format!("# TYPE {name} {kind}\n"));
+        };
+        for (metric, get) in [
+            ("rsd_spec_target_forwards_total", 0usize),
+            ("rsd_spec_tree_nodes_total", 1),
+            ("rsd_spec_accepted_total", 2),
+            ("rsd_spec_bonus_total", 3),
+            ("rsd_spec_committed_total", 4),
+            ("rsd_spec_resamples_total", 5),
+        ] {
+            typed(&mut o, metric, "counter");
+            for fam in Family::ALL {
+                let t = i.family_totals(fam);
+                if t.target_forwards == 0 && t.commits == 0 {
+                    continue;
+                }
+                let v = match get {
+                    0 => t.target_forwards,
+                    1 => t.tree_nodes,
+                    2 => t.accepted,
+                    3 => t.bonus,
+                    4 => t.committed,
+                    _ => t.resamples,
+                };
+                o.push_str(&format!("{metric}{{family=\"{}\"}} {v}\n", fam.name()));
+            }
+        }
+        typed(&mut o, "rsd_spec_accepted_per_forward", "gauge");
+        typed(&mut o, "rsd_spec_accept_rate", "gauge");
+        for fam in Family::ALL {
+            let t = i.family_totals(fam);
+            if t.target_forwards == 0 && t.commits == 0 {
+                continue;
+            }
+            o.push_str(&format!(
+                "rsd_spec_accepted_per_forward{{family=\"{}\"}} {}\n",
+                fam.name(),
+                t.accepted_per_target_forward()
+            ));
+            let rates = t.acceptance_by_level();
+            for (level, r) in rates.iter().enumerate() {
+                if t.level_attempts[level] == 0 {
+                    continue;
+                }
+                o.push_str(&format!(
+                    "rsd_spec_accept_rate{{family=\"{}\",level=\"{level}\"}} {r}\n",
+                    fam.name()
+                ));
+            }
+        }
+        let ld = Ordering::Relaxed;
+        for (name, hits, total) in [
+            ("rsd_slo_ttft_attainment", i.ttft_hits.load(ld), i.ttft_total.load(ld)),
+            ("rsd_slo_latency_attainment", i.latency_hits.load(ld), i.latency_total.load(ld)),
+            ("rsd_slo_deadline_hit_rate", i.deadline_hits.load(ld), i.deadline_total.load(ld)),
+        ] {
+            typed(&mut o, name, "gauge");
+            o.push_str(&format!("{name} {}\n", ratio(hits, total)));
+        }
+        o
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+fn rate(count: u64, span_us: u64) -> f64 {
+    if span_us == 0 {
+        0.0
+    } else {
+        count as f64 / (span_us as f64 / 1e6)
+    }
+}
+
+fn ledger_json(t: &LedgerTotals) -> Json {
+    Json::obj(vec![
+        ("target_forwards", Json::from(t.target_forwards as usize)),
+        ("tree_nodes", Json::from(t.tree_nodes as usize)),
+        ("accepted", Json::from(t.accepted as usize)),
+        ("bonus", Json::from(t.bonus as usize)),
+        ("committed", Json::from(t.committed as usize)),
+        ("resamples", Json::from(t.resamples as usize)),
+        ("commits", Json::from(t.commits as usize)),
+        ("accepted_per_target_forward", Json::Num(t.accepted_per_target_forward())),
+        ("tokens_per_target_forward", Json::Num(t.tokens_per_target_forward())),
+        (
+            "acceptance_by_level",
+            Json::Arr(trim_levels(&t.acceptance_by_level(), &t.level_attempts)),
+        ),
+    ])
+}
+
+/// Drop trailing never-attempted levels from an acceptance curve.
+fn trim_levels(rates: &[f64], attempts: &[u64]) -> Vec<Json> {
+    let used = attempts.iter().rposition(|&a| a > 0).map_or(0, |p| p + 1);
+    rates[..used.min(rates.len())].iter().map(|&r| Json::Num(r)).collect()
+}
+
+fn window_json(w: &Cume, complete_windows: u64) -> Json {
+    let attempts: Vec<u64> = w.level_attempts.to_vec();
+    let rates: Vec<f64> = w
+        .level_attempts
+        .iter()
+        .zip(&w.level_accepts)
+        .map(|(&n, &s)| ratio(s, n))
+        .collect();
+    Json::obj(vec![
+        ("complete_windows", Json::from(complete_windows as usize)),
+        ("rounds", Json::from(w.rounds as usize)),
+        ("span_secs", Json::Num(w.t_us as f64 / 1e6)),
+        ("tokens_out", Json::from(w.tokens_out as usize)),
+        ("tokens_per_sec", Json::Num(rate(w.tokens_out, w.t_us))),
+        ("target_forwards", Json::from(w.target_forwards as usize)),
+        ("tree_nodes", Json::from(w.tree_nodes as usize)),
+        ("accepted", Json::from(w.accepted as usize)),
+        ("bonus", Json::from(w.bonus as usize)),
+        ("committed", Json::from(w.committed as usize)),
+        ("resamples", Json::from(w.resamples as usize)),
+        ("accepted_per_target_forward", Json::Num(ratio(w.accepted, w.target_forwards))),
+        ("tokens_per_target_forward", Json::Num(ratio(w.committed, w.target_forwards))),
+        ("nodes_per_target_forward", Json::Num(ratio(w.tree_nodes, w.target_forwards))),
+        ("acceptance_by_level", Json::Arr(trim_levels(&rates, &attempts))),
+        ("kv_hit_rate", Json::Num(ratio(w.kv_hit_tokens, w.kv_lookup_tokens))),
+        ("completed", Json::from(w.completed as usize)),
+        ("failed", Json::from(w.failed as usize)),
+        ("shed", Json::from(w.shed as usize)),
+        ("retries", Json::from(w.retries as usize)),
+        ("preemptions", Json::from(w.preemptions as usize)),
+        ("queue_depth", Json::from(w.queue_depth as usize)),
+        ("active", Json::from(w.active as usize)),
+        ("slo", slo_json(w, 1, 1)),
+    ])
+}
+
+/// SLO attainment block: `null` attainment for objectives that never
+/// counted (disabled, or nothing completed yet); burn = worst enabled
+/// miss rate over the error budget `1 - SLO_OBJECTIVE`.
+fn slo_json(w: &Cume, slo_ttft_ms: u64, slo_latency_ms: u64) -> Json {
+    let att = |hits: u64, total: u64, enabled: bool| {
+        if !enabled || total == 0 {
+            Json::Null
+        } else {
+            Json::Num(ratio(hits, total))
+        }
+    };
+    let mut burn: f64 = 0.0;
+    for (hits, total) in [
+        (w.ttft_hits, w.ttft_total),
+        (w.latency_hits, w.latency_total),
+        (w.deadline_hits, w.deadline_total),
+    ] {
+        if total > 0 {
+            let miss = 1.0 - ratio(hits, total);
+            burn = burn.max(miss / (1.0 - SLO_OBJECTIVE));
+        }
+    }
+    Json::obj(vec![
+        ("objective", Json::Num(SLO_OBJECTIVE)),
+        ("ttft_attainment", att(w.ttft_hits, w.ttft_total, slo_ttft_ms > 0)),
+        ("latency_attainment", att(w.latency_hits, w.latency_total, slo_latency_ms > 0)),
+        ("deadline_hit_rate", att(w.deadline_hits, w.deadline_total, true)),
+        ("error_budget_burn", Json::Num(burn)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled(window_rounds: usize, windows: usize) -> Analytics {
+        Analytics::new(window_rounds, windows, 100, 1000)
+    }
+
+    #[test]
+    fn off_handle_is_inert() {
+        let a = Analytics::off();
+        assert!(!a.enabled());
+        a.record_forward(Family::RsdS, 6);
+        a.record_commit(Family::RsdS, 2, 1, &[(3, 1), (2, 0)]);
+        a.on_done(Some(0.01), 0.5, Some(100));
+        a.tick(&Metrics::default(), 0, 0);
+        assert_eq!(a.totals(), LedgerTotals::default());
+        assert!(matches!(a.stats_json(1), Json::Null));
+        assert!(a.prometheus().is_empty());
+        // window_rounds 0 is the documented "disabled" spelling
+        assert!(!Analytics::new(0, 8, 0, 0).enabled());
+    }
+
+    #[test]
+    fn ledger_accumulates_per_family_and_level() {
+        let a = enabled(4, 8);
+        a.record_forward(Family::RsdS, 6);
+        a.record_commit(Family::RsdS, 2, 1, &[(3, 1), (3, 1)]);
+        a.record_forward(Family::RsdS, 6);
+        a.record_commit(Family::RsdS, 0, 0, &[(3, 0)]);
+        a.record_forward(Family::Ar, 0);
+        a.record_commit(Family::Ar, 0, 1, &[]);
+        let rsds = a.family_totals(Family::RsdS);
+        assert_eq!(rsds.target_forwards, 2);
+        assert_eq!(rsds.tree_nodes, 12);
+        assert_eq!(rsds.accepted, 2);
+        assert_eq!(rsds.bonus, 1);
+        // round 1 committed its 2 accepts + the bonus draw; round 2
+        // committed the residual-resample token of its rejected trial
+        assert_eq!(rsds.committed, 4);
+        assert_eq!(rsds.resamples, 1, "a rejected trial is one residual resample");
+        assert_eq!(rsds.level_attempts[0], 2);
+        assert_eq!(rsds.level_accepts[0], 1);
+        assert_eq!(rsds.level_attempts[1], 1);
+        assert!((rsds.accepted_per_target_forward() - 1.0).abs() < 1e-12);
+        assert!((rsds.tokens_per_target_forward() - 2.0).abs() < 1e-12);
+        let ar = a.family_totals(Family::Ar);
+        assert_eq!(ar.committed, 1);
+        assert_eq!(ar.tree_nodes, 0);
+        let sum = a.totals();
+        assert_eq!(sum.target_forwards, 3);
+        assert_eq!(sum.committed, 5);
+    }
+
+    #[test]
+    fn family_of_maps_every_decoder() {
+        use crate::config::AdaptiveFamily;
+        let cases = [
+            (DecoderConfig::Ar, Family::Ar),
+            (DecoderConfig::Sd { l: 3 }, Family::Sd),
+            (DecoderConfig::SpecTr { k: 2, l: 2 }, Family::SpecTr),
+            (DecoderConfig::RsdC { branches: vec![2, 2] }, Family::RsdC),
+            (DecoderConfig::RsdCMultiRound { branches: vec![2] }, Family::RsdCMr),
+            (DecoderConfig::RsdS { w: 3, l: 2 }, Family::RsdS),
+            (
+                DecoderConfig::Adaptive { budget: 6, family: AdaptiveFamily::Auto },
+                Family::Adaptive,
+            ),
+        ];
+        for (cfg, fam) in cases {
+            assert_eq!(Family::of(&cfg), fam, "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn deep_trials_clamp_into_the_last_level_slot() {
+        let a = enabled(4, 8);
+        let trials: Vec<(usize, usize)> = (0..MAX_LEVELS + 4).map(|_| (1, 1)).collect();
+        a.record_commit(Family::Sd, trials.len(), 0, &trials);
+        let t = a.family_totals(Family::Sd);
+        assert_eq!(t.level_attempts[MAX_LEVELS - 1], 5);
+        assert_eq!(t.level_attempts.iter().sum::<u64>(), (MAX_LEVELS + 4) as u64);
+    }
+
+    #[test]
+    fn windows_aggregate_deltas_not_lifetime_sums() {
+        let a = enabled(2, 8);
+        let m = Metrics::default();
+        // window 1: two rounds, 10 tokens
+        a.record_forward(Family::RsdS, 6);
+        a.record_commit(Family::RsdS, 3, 1, &[(3, 1)]);
+        m.add(&m.tokens_out, 10);
+        a.tick(&m, 1, 2);
+        a.tick(&m, 1, 2); // rotates
+        // window 2: 5 more tokens, one more forward
+        m.add(&m.tokens_out, 5);
+        a.record_forward(Family::RsdS, 6);
+        a.record_commit(Family::RsdS, 1, 0, &[(3, 1)]);
+        a.tick(&m, 0, 1);
+        a.tick(&m, 0, 1); // rotates
+        let j = a.stats_json(1);
+        let w = j.get("window").unwrap();
+        // last complete window + empty partial: only window 2's deltas
+        assert_eq!(w.usize_field("tokens_out").unwrap(), 5);
+        assert_eq!(w.usize_field("target_forwards").unwrap(), 1);
+        assert_eq!(w.usize_field("accepted").unwrap(), 1);
+        assert_eq!(w.usize_field("rounds").unwrap(), 2);
+        // widening the window to 2 covers everything
+        let j = a.stats_json(2);
+        let w = j.get("window").unwrap();
+        assert_eq!(w.usize_field("tokens_out").unwrap(), 15);
+        assert_eq!(w.usize_field("target_forwards").unwrap(), 2);
+        let trend = j.get("trend").unwrap().as_arr().unwrap();
+        assert_eq!(trend.len(), 2);
+        assert_eq!(trend[0].usize_field("rounds").unwrap(), 2);
+    }
+
+    #[test]
+    fn ring_wraparound_clamps_to_oldest_retained_boundary() {
+        let a = enabled(1, 3); // every tick is a boundary; ring holds 3
+        let m = Metrics::default();
+        for _ in 0..10u64 {
+            m.add(&m.tokens_out, 1);
+            a.tick(&m, 0, 0);
+        }
+        // a window request covering all history aggregates from zero
+        // (the cumulative state needs no evicted boundary)
+        let j = a.stats_json(100);
+        let w = j.get("window").unwrap();
+        assert_eq!(w.usize_field("complete_windows").unwrap(), 10);
+        assert_eq!(w.usize_field("tokens_out").unwrap(), 10);
+        assert_eq!(w.usize_field("rounds").unwrap(), 10);
+        let trend = j.get("trend").unwrap().as_arr().unwrap();
+        // per-window deltas need BOTH boundaries retained: only the
+        // windows ending at boundaries 9 and 10 render
+        assert_eq!(trend.len(), 2);
+        for t in trend {
+            assert_eq!(t.usize_field("rounds").unwrap(), 1);
+        }
+        // a mid-size request whose start boundary was evicted clamps
+        // to the oldest retained boundary (8): 2 windows, 2 tokens
+        let j = a.stats_json(5);
+        let w = j.get("window").unwrap();
+        assert_eq!(w.usize_field("complete_windows").unwrap(), 2);
+        assert_eq!(w.usize_field("tokens_out").unwrap(), 2);
+    }
+
+    #[test]
+    fn empty_window_yields_zeroes_not_nans() {
+        let a = enabled(4, 4);
+        let j = a.stats_json(1);
+        let w = j.get("window").unwrap();
+        assert_eq!(w.usize_field("rounds").unwrap(), 0);
+        assert_eq!(w.get("tokens_per_sec").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(
+            w.get("accepted_per_target_forward").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        assert_eq!(w.get("kv_hit_rate").unwrap().as_f64().unwrap(), 0.0);
+        assert!(w.get("acceptance_by_level").unwrap().as_arr().unwrap().is_empty());
+        // the whole document round-trips through the parser (no NaN —
+        // NaN would not serialize to valid JSON)
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn slo_counters_and_burn() {
+        let a = Analytics::new(4, 4, 100, 1000);
+        // ttft 50ms hit, latency 0.5s hit, deadline 200ms hit
+        a.on_done(Some(0.05), 0.5, Some(200));
+        // ttft miss, latency miss, deadline miss
+        a.on_done(Some(0.5), 2.0, Some(100));
+        // no first token: ttft not counted, latency hit, no deadline
+        a.on_done(None, 0.9, None);
+        let m = Metrics::default();
+        a.tick(&m, 0, 0);
+        let j = a.stats_json(1);
+        let slo = j.get("window").unwrap().get("slo").unwrap();
+        assert!((slo.get("ttft_attainment").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        let lat = slo.get("latency_attainment").unwrap().as_f64().unwrap();
+        assert!((lat - 2.0 / 3.0).abs() < 1e-12);
+        assert!((slo.get("deadline_hit_rate").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        // worst miss rate 0.5 over a 1% budget = 50x burn
+        assert!((slo.get("error_budget_burn").unwrap().as_f64().unwrap() - 50.0).abs() < 1e-9);
+        // disabled objectives answer null, not 0
+        let b = Analytics::new(4, 4, 0, 0);
+        b.on_done(Some(0.05), 0.5, None);
+        b.tick(&m, 0, 0);
+        let j = b.stats_json(1);
+        let slo = j.get("window").unwrap().get("slo").unwrap();
+        assert!(matches!(slo.get("ttft_attainment"), Some(Json::Null)));
+        assert!(matches!(slo.get("latency_attainment"), Some(Json::Null)));
+        assert!(matches!(slo.get("deadline_hit_rate"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_stable_names() {
+        let a = enabled(4, 4);
+        a.record_forward(Family::RsdS, 6);
+        a.record_commit(Family::RsdS, 2, 1, &[(3, 1), (3, 0)]);
+        a.on_done(Some(0.01), 0.1, Some(500));
+        let text = a.prometheus();
+        for needle in [
+            "# TYPE rsd_spec_target_forwards_total counter",
+            "rsd_spec_target_forwards_total{family=\"rsd-s\"} 1",
+            "rsd_spec_accepted_total{family=\"rsd-s\"} 2",
+            "rsd_spec_committed_total{family=\"rsd-s\"} 4",
+            "rsd_spec_resamples_total{family=\"rsd-s\"} 1",
+            "rsd_spec_accepted_per_forward{family=\"rsd-s\"} 2",
+            "rsd_spec_accept_rate{family=\"rsd-s\",level=\"0\"} 1",
+            "rsd_spec_accept_rate{family=\"rsd-s\",level=\"1\"} 0",
+            "# TYPE rsd_slo_ttft_attainment gauge",
+            "rsd_slo_deadline_hit_rate 1",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // families that never recorded are omitted entirely
+        assert!(!text.contains("family=\"spectr\""));
+    }
+
+    #[test]
+    fn stats_json_roundtrips_and_carries_headline_metrics() {
+        let a = enabled(2, 4);
+        let m = Metrics::default();
+        a.record_forward(Family::Adaptive, 8);
+        a.record_commit(Family::Adaptive, 3, 1, &[(4, 1), (4, 1), (2, 0)]);
+        m.add(&m.tokens_out, 4);
+        a.tick(&m, 2, 1);
+        a.tick(&m, 2, 1);
+        let j = Json::parse(&a.stats_json(1).to_string()).unwrap();
+        let w = j.get("window").unwrap();
+        assert!((w.get("accepted_per_target_forward").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-12);
+        let curve = w.get("acceptance_by_level").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 3);
+        assert!((curve[0].as_f64().unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(curve[2].as_f64().unwrap(), 0.0);
+        let fam = j
+            .get("cumulative")
+            .unwrap()
+            .get("families")
+            .unwrap()
+            .get("adaptive")
+            .unwrap();
+        assert_eq!(fam.usize_field("target_forwards").unwrap(), 1);
+        assert_eq!(fam.usize_field("resamples").unwrap(), 1);
+        assert_eq!(j.get("now").unwrap().usize_field("queue_depth").unwrap(), 2);
+        assert_eq!(
+            j.get("config").unwrap().usize_field("window_rounds").unwrap(),
+            2
+        );
+    }
+}

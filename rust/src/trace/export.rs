@@ -76,6 +76,10 @@ pub fn chrome_trace(events: &[TraceEvent]) -> Json {
                 if e.a & 0xff == PHASE_DRAFT {
                     args.push(("level", Json::from((e.a >> 8) as usize)));
                 }
+                if e.c > 0 {
+                    // round tree shape: draft-tree nodes in flight
+                    args.push(("nodes", Json::from(e.c as usize)));
+                }
                 out.push(ev(ph, phase_name(e.a), ENGINE_TID, e.t_us, args));
             }
             EventKind::RoundBegin => out.push(ev(
@@ -214,28 +218,11 @@ fn prom_summary(out: &mut String, name: &str, s: &crate::trace::hist::HistSummar
 /// stable (documented in the README's Observability section).
 pub fn prometheus(s: &Snapshot) -> String {
     let mut o = String::new();
-    prom_line(&mut o, "rsd_requests_admitted_total", "counter", s.admitted as f64);
-    prom_line(&mut o, "rsd_requests_rejected_total", "counter", s.rejected as f64);
-    prom_line(&mut o, "rsd_requests_completed_total", "counter", s.completed as f64);
-    prom_line(&mut o, "rsd_requests_failed_total", "counter", s.failed as f64);
-    prom_line(&mut o, "rsd_requests_shed_total", "counter", s.shed as f64);
-    prom_line(&mut o, "rsd_retries_total", "counter", s.retries as f64);
-    prom_line(&mut o, "rsd_requests_cancelled_total", "counter", s.cancelled as f64);
-    prom_line(&mut o, "rsd_tokens_out_total", "counter", s.tokens_out as f64);
-    prom_line(&mut o, "rsd_decode_rounds_total", "counter", s.decode_rounds as f64);
-    prom_line(&mut o, "rsd_draft_calls_total", "counter", s.draft_calls as f64);
-    prom_line(&mut o, "rsd_fused_calls_total", "counter", s.fused_calls as f64);
-    prom_line(&mut o, "rsd_mid_round_admitted_total", "counter", s.mid_round_admitted as f64);
-    prom_line(&mut o, "rsd_preemptions_total", "counter", s.preemptions as f64);
-    prom_line(&mut o, "rsd_resumes_total", "counter", s.resumes as f64);
-    prom_line(&mut o, "rsd_kv_hit_tokens_total", "counter", s.kv_hit_tokens as f64);
-    prom_line(&mut o, "rsd_kv_lookup_tokens_total", "counter", s.kv_lookup_tokens as f64);
-    prom_line(&mut o, "rsd_kv_cow_copies_total", "counter", s.kv_cow_copies as f64);
-    prom_line(&mut o, "rsd_kv_evictions_total", "counter", s.kv_evictions as f64);
-    prom_line(&mut o, "rsd_kv_blocks_in_use", "gauge", s.kv_blocks_in_use as f64);
-    prom_line(&mut o, "rsd_kv_blocks_total", "gauge", s.kv_blocks_total as f64);
-    prom_line(&mut o, "rsd_kv_hit_rate", "gauge", s.kv_hit_rate);
-    prom_line(&mut o, "rsd_fused_mean_batch", "gauge", s.fused_mean_batch);
+    // every shared scalar comes off the export table (keeps JSON and
+    // Prometheus key sets in lockstep; see `Snapshot::scalar_exports`)
+    for e in s.scalar_exports() {
+        prom_line(&mut o, e.prom_name, e.prom_kind, e.value);
+    }
     // latency/ttft/queue-wait summaries carry their own exact sample
     // counts: TTFT is only recorded for requests that streamed a token,
     // and queue-wait counts resume-after-preemption re-admissions, so
@@ -317,6 +304,82 @@ mod tests {
         assert_eq!(count("E", "verify"), 0);
         assert_eq!(count("B", "draft"), 1);
         assert_eq!(count("E", "draft"), 1);
+    }
+
+    #[test]
+    fn phase_slices_carry_tree_shape_args() {
+        let t = Tracer::new(16);
+        t.record_c(EventKind::PhaseBegin, 7, PHASE_DRAFT | (1 << 8), 3, 12);
+        t.record_c(EventKind::PhaseEnd, 7, PHASE_DRAFT | (1 << 8), 3, 12);
+        t.record(EventKind::PhaseBegin, 7, PHASE_VERIFY, 3);
+        t.record(EventKind::PhaseEnd, 7, PHASE_VERIFY, 3);
+        let doc = chrome_trace(&t.snapshot());
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let draft = evs
+            .iter()
+            .find(|e| e.str_field("name").ok() == Some("draft"))
+            .unwrap();
+        assert_eq!(draft.get("args").unwrap().usize_field("nodes").unwrap(), 12);
+        // no c payload recorded -> no nodes arg
+        let verify = evs
+            .iter()
+            .find(|e| e.str_field("name").ok() == Some("verify"))
+            .unwrap();
+        assert!(verify.get("args").unwrap().get("nodes").is_none());
+    }
+
+    /// Reflection gate for the cumulative-vs-window drift class of bug:
+    /// every scalar on the shared export table must appear in BOTH the
+    /// snapshot JSON and the Prometheus exposition, every exposed `#
+    /// TYPE` must be a table scalar or a known summary, and every
+    /// scalar JSON key must be a table entry or a known derived field.
+    #[test]
+    fn snapshot_json_and_prometheus_scalars_stay_in_lockstep() {
+        let m = crate::coordinator::metrics::Metrics::default();
+        m.add(&m.completed, 3);
+        m.record_latency(0.25);
+        let s = m.snapshot();
+        let table = s.scalar_exports();
+        let json = s.to_json();
+        let text = prometheus(&s);
+        for e in &table {
+            assert!(json.get(e.json_key).is_some(), "table key {:?} missing from JSON", e.json_key);
+            assert!(
+                text.contains(&format!("# TYPE {} {}\n", e.prom_name, e.prom_kind)),
+                "table metric {:?} missing from exposition",
+                e.prom_name
+            );
+        }
+        // every exposed metric family is accounted for
+        let summaries = [
+            "rsd_request_latency_seconds",
+            "rsd_ttft_seconds",
+            "rsd_queue_wait_seconds",
+            "rsd_round_seconds",
+            "rsd_phase_sched_seconds",
+            "rsd_phase_draft_seconds",
+            "rsd_phase_verify_seconds",
+            "rsd_phase_sampling_seconds",
+        ];
+        for line in text.lines().filter(|l| l.starts_with("# TYPE ")) {
+            let name = line.split_whitespace().nth(2).unwrap();
+            let known = table.iter().any(|e| e.prom_name == name) || summaries.contains(&name);
+            assert!(known, "exposed metric {name:?} is not on the export table");
+        }
+        // every scalar JSON key is a table entry or a derived field
+        // whose source histogram IS exported as a Prometheus summary
+        let derived = [
+            "latency_p50", "latency_p95", "latency_p99", "latency_mean",
+            "ttft_p50", "ttft_p95", "ttft_p99", "ttft_mean",
+            "queue_wait_p50", "queue_wait_p95", "queue_wait_p99", "queue_wait_mean",
+        ];
+        for (key, val) in json.as_obj().unwrap() {
+            if matches!(val, Json::Num(_)) {
+                let known = table.iter().any(|e| e.json_key == key)
+                    || derived.contains(&key.as_str());
+                assert!(known, "scalar JSON key {key:?} is not on the export table");
+            }
+        }
     }
 
     #[test]

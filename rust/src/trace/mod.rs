@@ -127,11 +127,14 @@ pub struct TraceEvent {
     pub id: u64,
     pub a: u32,
     pub b: u32,
+    /// Extra payload (fits the struct's existing padding): draft-tree
+    /// node count on phase slices, 0 elsewhere.
+    pub c: u32,
 }
 
 impl Default for TraceEvent {
     fn default() -> Self {
-        TraceEvent { t_us: 0, seq: 0, kind: EventKind::ReqArrive, id: 0, a: 0, b: 0 }
+        TraceEvent { t_us: 0, seq: 0, kind: EventKind::ReqArrive, id: 0, a: 0, b: 0, c: 0 }
     }
 }
 
@@ -178,12 +181,17 @@ impl Journal {
 
     /// Append one event. Allocation-free: one lock, one slot write.
     pub fn record(&self, kind: EventKind, id: u64, a: u32, b: u32) {
+        self.record_c(kind, id, a, b, 0);
+    }
+
+    /// [`Journal::record`] with the extra `c` payload word.
+    pub fn record_c(&self, kind: EventKind, id: u64, a: u32, b: u32, c: u32) {
         let t_us = self.epoch.elapsed().as_micros() as u64;
         let mut g = self.ring.lock().unwrap();
         let cap = g.buf.len() as u64;
         let seq = g.next;
         g.next += 1;
-        g.buf[(seq % cap) as usize] = TraceEvent { t_us, seq, kind, id, a, b };
+        g.buf[(seq % cap) as usize] = TraceEvent { t_us, seq, kind, id, a, b, c };
     }
 
     /// Copy out the surviving events, oldest first. Allocates (cold
@@ -245,6 +253,15 @@ impl Tracer {
     pub fn record(&self, kind: EventKind, id: u64, a: u32, b: u32) {
         if let Some(j) = &self.journal {
             j.record(kind, id, a, b);
+        }
+    }
+
+    /// [`Tracer::record`] with the extra `c` payload word (tree-shape
+    /// args on phase slices).
+    #[inline]
+    pub fn record_c(&self, kind: EventKind, id: u64, a: u32, b: u32, c: u32) {
+        if let Some(j) = &self.journal {
+            j.record_c(kind, id, a, b, c);
         }
     }
 

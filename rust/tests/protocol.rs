@@ -196,7 +196,12 @@ fn live_server_answers_every_line_with_a_terminal_reply() {
 
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
     let addr = listener.local_addr().unwrap();
-    let ctx = ServeCtx { metrics: Some(metrics), trace: Tracer::new(0), cancels: Some(cancels) };
+    let ctx = ServeCtx {
+        metrics: Some(metrics),
+        trace: Tracer::new(0),
+        cancels: Some(cancels),
+        ..Default::default()
+    };
     std::thread::spawn(move || {
         let _ = serve_listener(listener, tx, ctx);
     });

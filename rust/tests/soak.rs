@@ -24,6 +24,7 @@ use rsd::coordinator::engine::{spawn, Engine, Event, Request};
 use rsd::coordinator::metrics::{Metrics, Snapshot};
 use rsd::decode::DecodeStats;
 use rsd::kvcache::KvConfig;
+use rsd::obs::Analytics;
 use rsd::sim::SimLm;
 use rsd::trace::export::chrome_trace;
 use rsd::trace::{TraceEvent, Tracer};
@@ -91,17 +92,20 @@ fn build_workload(seed: u64) -> Vec<Spec> {
 }
 
 /// Submit the workload, drain every receiver (watchdog per receive) and
-/// return per-request (stream, stats) plus the final metrics snapshot
-/// and the flight-recorder journal (empty when `cfg.trace_events` is 0).
+/// return per-request (stream, stats) plus the final metrics snapshot,
+/// the flight-recorder journal (empty when `cfg.trace_events` is 0) and
+/// the speculation-analytics handle (inert when `stats_window_rounds`
+/// is 0).
 fn run_workload(
     target: SimLm,
     draft: SimLm,
     cfg: EngineConfig,
     specs: &[Spec],
-) -> (Vec<(Vec<u32>, DecodeStats)>, Snapshot, Vec<TraceEvent>) {
+) -> (Vec<(Vec<u32>, DecodeStats)>, Snapshot, Vec<TraceEvent>, Analytics) {
     let trace = Tracer::new(cfg.trace_events);
     let engine =
         Engine::with_telemetry(target, draft, cfg, Arc::new(Metrics::default()), trace.clone());
+    let analytics = engine.analytics.clone();
     let (tx, handle) = spawn(engine);
     let mut receivers = Vec::new();
     for s in specs {
@@ -135,7 +139,7 @@ fn run_workload(
             }
         }
     }
-    (results, handle.join().unwrap().snapshot(), trace.snapshot())
+    (results, handle.join().unwrap().snapshot(), trace.snapshot(), analytics)
 }
 
 fn base_cfg() -> EngineConfig {
@@ -162,16 +166,18 @@ fn soak_chaos_is_clean_and_deterministic() {
 
     let kv = KvConfig { num_blocks: 24, block_size: 8, share: true };
     let (t, d) = SimLm::pair_paged(SIM_SEED, 0.8, VOCAB, kv);
-    // the chaos run records into a flight-recorder ring; the reference
-    // run leaves tracing off, so the bit-identity assert below doubles
-    // as "tracing on vs off never changes a stream"
-    let chaos_cfg = EngineConfig { trace_events: 4096, ..base_cfg() };
-    let (chaos, chaos_snap, chaos_events) = run_workload(t, d, chaos_cfg, &specs);
+    // the chaos run records into a flight-recorder ring AND the
+    // speculation-analytics ledger; the reference run turns both off,
+    // so the bit-identity assert below doubles as "tracing/analytics
+    // on vs off never changes a stream"
+    let chaos_cfg = EngineConfig { trace_events: 4096, stats_window_rounds: 16, ..base_cfg() };
+    let (chaos, chaos_snap, chaos_events, chaos_stats) = run_workload(t, d, chaos_cfg, &specs);
 
     let (t, d) = SimLm::pair(SIM_SEED, 0.8, VOCAB);
-    let ref_cfg = EngineConfig { fused: false, ..base_cfg() };
-    let (reference, _, ref_events) = run_workload(t, d, ref_cfg, &specs);
+    let ref_cfg = EngineConfig { fused: false, stats_window_rounds: 0, ..base_cfg() };
+    let (reference, _, ref_events, ref_stats) = run_workload(t, d, ref_cfg, &specs);
     assert!(ref_events.is_empty(), "tracing must stay off by default");
+    assert!(!ref_stats.enabled(), "analytics must be off in the reference run");
 
     // clean terminal states, all 200 of them
     assert_eq!(chaos_snap.completed, N_REQUESTS);
@@ -208,11 +214,23 @@ fn soak_chaos_is_clean_and_deterministic() {
     // events in strict sequence order, including preemptions
     assert!(!chaos_events.is_empty(), "tracing was enabled but recorded nothing");
     assert!(chaos_events.windows(2).all(|w| w[1].seq == w[0].seq + 1), "seq gap/tear");
+    // the analytics ledger saw the run too: committed tokens reconcile
+    // exactly with the delivered streams (the full cross-family
+    // reconciliation property lives in tests/stats.rs)
+    let totals = chaos_stats.totals();
+    let delivered: u64 = chaos.iter().map(|(toks, _)| toks.len() as u64).sum();
+    assert_eq!(totals.committed, delivered, "ledger committed vs delivered tokens");
+    assert!(totals.target_forwards > 0, "analytics recorded no target forwards");
+
     // dump the journal as a Chrome trace so CI can archive the soak
     // timeline next to the BENCH_*.json snapshots
     let doc = Json::obj(vec![("trace", chrome_trace(&chaos_events))]);
     let path = harness::snapshot_path("TRACE_soak.json");
     std::fs::write(&path, format!("{doc}\n")).expect("write TRACE_soak.json");
+    // and the windowed speculation-analytics report as STATS_soak.json
+    let stats_doc = Json::obj(vec![("stats", chaos_stats.stats_json(8))]);
+    let stats_path = harness::snapshot_path("STATS_soak.json");
+    std::fs::write(&stats_path, format!("{stats_doc}\n")).expect("write STATS_soak.json");
 }
 
 /// Continuous batching is token-invisible: requests that join MID-ROUND

@@ -1,0 +1,315 @@
+//! Speculation-analytics reconciliation suite: the acceptance ledger
+//! is accounting, not sampling — its totals must agree EXACTLY with
+//! the sum of per-request [`DecodeStats`], family by family, across a
+//! mixed ar/rsd-c/rsd-s/adaptive workload pushed through the serving
+//! engine with an undersized paged KV pool (preemption churn) and a
+//! seeded transient-fault schedule (abort + retry churn).
+//!
+//! Why exactness is the right bar: steppers bump their `DecodeStats`
+//! and the ledger at the same commit boundary, aborted rounds reach
+//! neither, and retried rounds replay from a round-start RNG snapshot
+//! — so any drift between the two is a double- or under-count bug,
+//! never legitimate noise.
+
+use std::collections::BTreeSet;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use rsd::chaos::{ChaosLm, FaultPlan};
+use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig, SamplingPatch};
+use rsd::coordinator::engine::{spawn, Engine, Event, Request};
+use rsd::coordinator::metrics::{Metrics, Snapshot};
+use rsd::decode::DecodeStats;
+use rsd::kvcache::KvConfig;
+use rsd::obs::{Analytics, Family, LedgerTotals, MAX_LEVELS};
+use rsd::sim::SimLm;
+use rsd::trace::Tracer;
+use rsd::util::json::Json;
+use rsd::util::Rng;
+
+const VOCAB: usize = 32;
+const N_REQUESTS: u64 = 120;
+const SIM_SEED: u64 = 17;
+const ENGINE_SEED: u64 = 99;
+
+#[derive(Clone)]
+struct Spec {
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    decoder: Option<DecoderConfig>,
+    sampling: Option<SamplingPatch>,
+    priority: u8,
+}
+
+/// Seeded-random workload over EVERY stepper kind, adaptive included:
+/// reconciliation (unlike the soak's bit-identity) does not care that
+/// adaptive tree shapes depend on scheduling, so nothing is excluded.
+fn build_workload(seed: u64) -> Vec<Spec> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let decoders: [Option<DecoderConfig>; 8] = [
+        None, // engine default (rsd-s:3x3)
+        Some(DecoderConfig::Ar),
+        Some(DecoderConfig::Sd { l: 3 }),
+        Some(DecoderConfig::RsdC { branches: vec![2, 2] }),
+        Some(DecoderConfig::RsdS { w: 3, l: 2 }),
+        Some(DecoderConfig::SpecTr { k: 2, l: 2 }),
+        Some(DecoderConfig::Adaptive {
+            budget: 9,
+            family: rsd::config::AdaptiveFamily::Auto,
+        }),
+        Some(DecoderConfig::Adaptive {
+            budget: 6,
+            family: rsd::config::AdaptiveFamily::RsdS,
+        }),
+    ];
+    (0..N_REQUESTS)
+        .map(|id| {
+            let prompt_len = 1 + rng.gen_range(20);
+            let prompt: Vec<u32> =
+                (0..prompt_len).map(|_| rng.gen_range(VOCAB) as u32).collect();
+            let max_new = 1 + rng.gen_range(12);
+            let decoder = decoders[rng.gen_range(decoders.len())].clone();
+            let sampling = if rng.gen_range(4) == 0 {
+                Some(SamplingPatch {
+                    stop: Some(vec![rng.gen_range(VOCAB) as u32]),
+                    ..Default::default()
+                })
+            } else {
+                None
+            };
+            Spec { id, prompt, max_new, decoder, sampling, priority: rng.gen_range(3) as u8 }
+        })
+        .collect()
+}
+
+fn base_cfg() -> EngineConfig {
+    EngineConfig {
+        max_concurrency: 6,
+        max_queue: 256,
+        default_max_tokens: 8,
+        sampling: SamplingConfig::new(0.6, 1.0),
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed: ENGINE_SEED,
+        fused: true,
+        stats_window_rounds: 8,
+        stats_windows: 4, // deliberately tiny: the run wraps the ring many times
+        ..EngineConfig::default()
+    }
+}
+
+/// Drive the workload to completion and return per-request stats (in
+/// submission order), the analytics handle and the metrics snapshot.
+fn run(
+    specs: &[Spec],
+    cfg: EngineConfig,
+    plan: FaultPlan,
+) -> (Vec<DecodeStats>, Analytics, Snapshot) {
+    let kv = KvConfig { num_blocks: 24, block_size: 8, share: true };
+    let (t, d) = SimLm::pair_paged(SIM_SEED, 0.8, VOCAB, kv);
+    let chaos = ChaosLm::new(t, plan);
+    let engine = Engine::with_telemetry(
+        chaos,
+        d,
+        cfg,
+        Arc::new(Metrics::default()),
+        Tracer::off(),
+    );
+    let analytics = engine.analytics.clone();
+    let (tx, handle) = spawn(engine);
+    let mut receivers = Vec::new();
+    for s in specs {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id: s.id,
+            prompt: s.prompt.clone(),
+            max_new: s.max_new,
+            decoder: s.decoder.clone(),
+            sampling: s.sampling.clone(),
+            priority: s.priority,
+            deadline_ms: None,
+            resp: rtx,
+        })
+        .unwrap();
+        receivers.push((s.id, rrx));
+    }
+    drop(tx);
+    let mut stats = Vec::new();
+    for (id, rrx) in receivers {
+        loop {
+            match rrx.recv_timeout(Duration::from_secs(180)) {
+                Ok(Event::Tokens(_)) => {}
+                Ok(Event::Done(r)) => {
+                    stats.push(r.stats);
+                    break;
+                }
+                Ok(Event::Error(e)) => panic!("request {id} failed: {e}"),
+                Err(e) => panic!("request {id} starved or engine deadlocked: {e}"),
+            }
+        }
+    }
+    (stats, analytics, handle.join().unwrap().snapshot())
+}
+
+/// Sum a workload's per-request stats into per-family expectations.
+fn expected_by_family(
+    specs: &[Spec],
+    stats: &[DecodeStats],
+    default: &DecoderConfig,
+) -> Vec<(Family, LedgerTotals)> {
+    let mut by_family: Vec<(Family, LedgerTotals)> = Vec::new();
+    for (spec, st) in specs.iter().zip(stats) {
+        let fam = Family::of(spec.decoder.as_ref().unwrap_or(default));
+        let idx = match by_family.iter().position(|(f, _)| *f == fam) {
+            Some(i) => i,
+            None => {
+                by_family.push((fam, LedgerTotals::default()));
+                by_family.len() - 1
+            }
+        };
+        let slot = &mut by_family[idx].1;
+        slot.target_forwards += st.decode_calls as u64;
+        slot.tree_nodes += st.tree_nodes as u64;
+        slot.accepted += st.accepted_draft_tokens as u64;
+        slot.bonus += st.bonus_tokens as u64;
+        slot.committed += st.generated as u64;
+        if slot.level_attempts.len() < MAX_LEVELS {
+            slot.level_attempts.resize(MAX_LEVELS, 0);
+            slot.level_accepts.resize(MAX_LEVELS, 0);
+        }
+        for (lvl, (&a, &s)) in st.level_attempts.iter().zip(&st.level_accepts).enumerate() {
+            let lvl = lvl.min(MAX_LEVELS - 1);
+            slot.level_attempts[lvl] += a;
+            slot.level_accepts[lvl] += s;
+        }
+    }
+    by_family
+}
+
+/// The reconciliation property (see module docs): every ledger row ==
+/// the sum of the DecodeStats of the requests routed to that family,
+/// exactly, under preemption + transient-fault retry churn.
+#[test]
+fn ledger_reconciles_exactly_with_per_request_stats() {
+    let specs = build_workload(7177);
+    // transient faults on a handful of target sessions: each trips an
+    // abort + requeue + replay; persistent faults are deliberately
+    // absent so every request completes and reports its DecodeStats
+    let plan = FaultPlan {
+        transient_sessions: [2u64, 9, 23, 41].into_iter().collect::<BTreeSet<u64>>(),
+        ..FaultPlan::none()
+    };
+    let (stats, analytics, snap) = run(&specs, base_cfg(), plan);
+
+    // the run exercised what it claims to: churn actually happened
+    assert_eq!(snap.completed, N_REQUESTS);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.preemptions > 0, "undersized pool never preempted");
+    assert!(snap.retries > 0, "transient faults never tripped a retry");
+
+    let expected = expected_by_family(&specs, &stats, &base_cfg().decoder);
+    let mut families_seen = 0u32;
+    for (fam, want) in &expected {
+        let got = analytics.family_totals(*fam);
+        families_seen += 1;
+        assert_eq!(
+            got.target_forwards,
+            want.target_forwards,
+            "{}: target_forwards ledger vs stats",
+            fam.name()
+        );
+        assert_eq!(got.tree_nodes, want.tree_nodes, "{}: tree_nodes", fam.name());
+        assert_eq!(got.accepted, want.accepted, "{}: accepted", fam.name());
+        assert_eq!(got.committed, want.committed, "{}: committed", fam.name());
+        if *fam == Family::Ar {
+            // AR accounting: no draft tree, every committed token is a
+            // "bonus" (target-sampled) token, nothing is ever resampled
+            assert_eq!(got.tree_nodes, 0, "ar: tree_nodes must be 0");
+            assert_eq!(got.accepted, 0, "ar: accepted must be 0");
+            assert_eq!(got.bonus, got.committed, "ar: bonus == committed");
+            assert_eq!(got.resamples, 0, "ar: resamples must be 0");
+        } else {
+            assert_eq!(got.bonus, want.bonus, "{}: bonus", fam.name());
+            assert_eq!(
+                got.level_attempts,
+                want.level_attempts,
+                "{}: per-level attempts",
+                fam.name()
+            );
+            assert_eq!(
+                got.level_accepts,
+                want.level_accepts,
+                "{}: per-level accepts",
+                fam.name()
+            );
+            // committed = accepted + bonus + residual resamples, so the
+            // resample count is pinned by the other three
+            assert_eq!(
+                got.resamples,
+                got.committed - got.accepted - got.bonus,
+                "{}: resamples identity",
+                fam.name()
+            );
+        }
+    }
+    assert!(families_seen >= 4, "workload was expected to span >= 4 families");
+
+    // the grand total is the sum of the family rows — and matches the
+    // engine's own token counter
+    let totals = analytics.totals();
+    let committed_sum: u64 = expected.iter().map(|(_, t)| t.committed).sum();
+    assert_eq!(totals.committed, committed_sum);
+    assert_eq!(totals.committed, snap.tokens_out, "ledger vs Metrics::tokens_out");
+    let forwards_sum: u64 = expected.iter().map(|(_, t)| t.target_forwards).sum();
+    assert_eq!(totals.target_forwards, forwards_sum);
+}
+
+/// The windowed report stays coherent after heavy ring wraparound: the
+/// tiny 4-window ring rotates dozens of times during the run, yet any
+/// requested span must clamp to retained history — never a negative
+/// delta, never an aggregate exceeding the cumulative ledger.
+#[test]
+fn windowed_report_survives_ring_wraparound() {
+    let specs = build_workload(90210);
+    let (_, analytics, snap) = run(&specs, base_cfg(), FaultPlan::none());
+    assert_eq!(snap.completed, N_REQUESTS);
+
+    let totals = analytics.totals();
+    for window in [1usize, 3, 4, 50, 10_000] {
+        let j = analytics.stats_json(window);
+        let w = j.get("window").expect("window object");
+        let committed = w.get("committed").and_then(Json::as_usize).unwrap() as u64;
+        let forwards = w.get("target_forwards").and_then(Json::as_usize).unwrap() as u64;
+        assert!(
+            committed <= totals.committed,
+            "window {window}: aggregate committed {committed} exceeds lifetime {}",
+            totals.committed
+        );
+        assert!(forwards <= totals.target_forwards, "window {window}: forwards");
+        let trend = match j.get("trend") {
+            Some(Json::Arr(t)) => t.len(),
+            other => panic!("trend must be an array, got {other:?}"),
+        };
+        // a 4-slot ring retains at most 3 complete trend windows (both
+        // boundaries must survive) plus nothing fabricated beyond the
+        // request
+        assert!(trend <= window.min(4), "window {window}: trend len {trend}");
+        // the report round-trips through the wire format
+        let parsed = Json::parse(&j.to_string()).expect("stats JSON re-parses");
+        assert!(parsed.get("cumulative").is_some());
+    }
+
+    // an empty window request against a fresh (ticked-but-idle) handle
+    // yields zeroes, not NaNs — mirrors the unit test, but through the
+    // full serve-side JSON path
+    let idle = Analytics::new(4, 4, 0, 0);
+    idle.tick(&Metrics::default(), 0, 0);
+    let j = idle.stats_json(1);
+    let w = j.get("window").expect("window object");
+    assert_eq!(w.get("committed").and_then(Json::as_usize), Some(0));
+    let tps = match w.get("tokens_per_sec") {
+        Some(Json::Num(n)) => *n,
+        other => panic!("tokens_per_sec must be a number, got {other:?}"),
+    };
+    assert!(tps.is_finite(), "idle window must not produce NaN/inf rates");
+}
