@@ -16,11 +16,13 @@
 //!     cargo bench --bench kvcache -- --json   # + BENCH_kvcache.json (repo root)
 //!     cargo bench --bench kvcache -- --quick  # shorter workload for CI
 
+use std::path::Path;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use rsd::bench::alloc::CountingAlloc;
 use rsd::bench::harness::write_snapshot;
+use rsd::chaos::{damage_spill_files, SpillDamage};
 use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
 use rsd::coordinator::engine::{spawn, Engine, Event, Request};
 use rsd::kvcache::{KvConfig, KvStats};
@@ -107,6 +109,89 @@ fn run(share: bool, sys_len: usize, max_new: usize) -> (Vec<Vec<u32>>, f64, KvSt
     (streams, total as f64 / wall, tpool.stats())
 }
 
+/// Distinct tenants for the cold-tier section: the radix working set
+/// (every tenant's system prompt) is ~4x the pool, so serving them
+/// round-robin evicts each tenant's blocks before its next request.
+const TENANTS: u64 = 8;
+
+fn tenant_prompt(i: u64, sys_len: usize) -> Vec<u32> {
+    let t = (i % TENANTS) as u32;
+    let mut p: Vec<u32> =
+        (0..sys_len as u32).map(|x| (x * 7 + 13 * t + 3) % VOCAB as u32).collect();
+    p.extend((0..SUFFIX as u32).map(|x| (x * 31 + 11 * i as u32 + 1) % VOCAB as u32));
+    p
+}
+
+/// One engine run of the multi-tenant workload over a pool sized to
+/// ~1/4 of the radix working set, serially (so eviction provably hits
+/// every tenant between its two requests). `cold_dir` None = no cold
+/// tier: evicted prefixes are simply recomputed.
+fn run_cold(
+    cold_dir: Option<&Path>,
+    sys_len: usize,
+    max_new: usize,
+) -> (Vec<Vec<u32>>, f64, KvStats) {
+    let n = 2 * TENANTS;
+    let kv = KvConfig { num_blocks: 2 * (sys_len / 16), block_size: 16, share: true };
+    let (target, draft) = match cold_dir {
+        Some(dir) => SimLm::pair_paged_cold(3, 0.8, VOCAB, kv, dir, 4096).expect("cold attach"),
+        None => SimLm::pair_paged(3, 0.8, VOCAB, kv),
+    };
+    let tpool = target.kv_pool().expect("paged").clone();
+    let target = target.with_call_overhead(DISPATCH_OVERHEAD);
+    let draft = draft.with_call_overhead(DISPATCH_OVERHEAD);
+    let ecfg = EngineConfig {
+        max_concurrency: 1,
+        max_queue: 64,
+        default_max_tokens: max_new,
+        max_active_budget: 0,
+        sampling: SamplingConfig::new(0.5, 1.0),
+        decoder: DecoderConfig::RsdS { w: 3, l: 3 },
+        seed: 42,
+        fused: true,
+        ..EngineConfig::default()
+    };
+    let engine = Engine::new(target, draft, ecfg);
+    let (tx, handle) = spawn(engine);
+
+    let t0 = Instant::now();
+    let mut receivers = Vec::new();
+    for i in 0..n {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id: i,
+            prompt: tenant_prompt(i, sys_len),
+            max_new,
+            decoder: None,
+            sampling: None,
+            priority: 0,
+            deadline_ms: None,
+            resp: rtx,
+        })
+        .unwrap();
+        receivers.push(rrx);
+    }
+    drop(tx);
+
+    let mut streams = Vec::new();
+    let mut total = 0usize;
+    for rrx in receivers {
+        let mut toks = Vec::new();
+        while let Ok(ev) = rrx.recv() {
+            match ev {
+                Event::Tokens(t) => toks.extend(t),
+                Event::Done(_) => break,
+                Event::Error(e) => panic!("{e}"),
+            }
+        }
+        total += toks.len();
+        streams.push(toks);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    handle.join().unwrap();
+    (streams, total as f64 / wall, tpool.stats())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let json_out = args.iter().any(|a| a == "--json");
@@ -153,6 +238,63 @@ fn main() {
     );
     println!("\n≥1.5x acceptance criterion met ✓");
 
+    // ---- cold tier: spill/revive vs re-prefill ----------------------
+    println!(
+        "\n=== cold tier on vs off vs corrupted ({} requests round-robin over \
+         {TENANTS} tenants, radix working set ~4x pool) ===",
+        2 * TENANTS
+    );
+    let dir = std::env::temp_dir().join("rsd-bench-kvcold");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let (coff_streams, coff_tps, coff) = run_cold(None, sys_len, max_new);
+    let (con_streams, con_tps, con) = run_cold(Some(&dir), sys_len, max_new);
+    // break every spilled block on disk, then restart over the damaged
+    // store: detection must degrade to re-prefill, never change tokens
+    for (sub, mode) in [("target", SpillDamage::CorruptByte), ("draft", SpillDamage::Truncate)] {
+        let hit = damage_spill_files(&dir.join(sub), 5, usize::MAX, mode);
+        assert!(!hit.is_empty(), "no {sub} spill files to damage");
+    }
+    let (cc_streams, cc_tps, cc) = run_cold(Some(&dir), sys_len, max_new);
+
+    assert_eq!(coff_streams, con_streams, "cold tier must be token-invisible");
+    assert_eq!(coff_streams, cc_streams, "corrupted cold store must be token-invisible");
+    println!("decoded tokens identical cold-off / cold-on / corrupted ✓");
+
+    // the gate is deterministic token accounting, not wall-clock: every
+    // prompt token not served by the radix (hot or revived) was
+    // re-prefilled at O(vocab) compute
+    let reprefill = |s: &KvStats| s.lookup_tokens - s.hit_tokens;
+    println!(
+        "cold off:  {:>10.1} tok/s  ({} tokens re-prefilled)",
+        coff_tps,
+        reprefill(&coff)
+    );
+    println!(
+        "cold on:   {:>10.1} tok/s  ({} tokens re-prefilled, {} revived from cold, \
+         {} spills)",
+        con_tps,
+        reprefill(&con),
+        con.cold_hit_tokens,
+        con.cold_spills
+    );
+    println!(
+        "corrupted: {:>10.1} tok/s  ({} tokens re-prefilled, {} corrupt blocks dropped)",
+        cc_tps,
+        reprefill(&cc),
+        cc.cold_corrupt
+    );
+    assert!(con.cold_hit_tokens > 0, "eviction churn must produce cold revivals");
+    assert!(
+        reprefill(&con) < reprefill(&coff),
+        "cold tier must beat re-prefill: {} vs {} tokens recomputed",
+        reprefill(&con),
+        reprefill(&coff)
+    );
+    assert!(cc.cold_corrupt > 0, "damaged store must be detected, not trusted");
+    println!("cold tier saves re-prefill and survives corruption ✓");
+    let _ = std::fs::remove_dir_all(&dir);
+
     if json_out {
         let entry = |name: &str, tps: f64| {
             Json::obj(vec![
@@ -166,8 +308,16 @@ fn main() {
         let entries = vec![
             entry("sharing-off/token", off_tps),
             entry("sharing-on/token", on_tps),
+            entry("cold-off/token", coff_tps),
+            entry("cold-on/token", con_tps),
+            entry("cold-corrupted/token", cc_tps),
         ];
         let extra = vec![
+            ("cold_reprefill_tokens", Json::from(reprefill(&con) as usize)),
+            ("nocold_reprefill_tokens", Json::from(reprefill(&coff) as usize)),
+            ("cold_hit_tokens", Json::from(con.cold_hit_tokens as usize)),
+            ("cold_spills", Json::from(con.cold_spills as usize)),
+            ("cold_corrupt_dropped", Json::from(cc.cold_corrupt as usize)),
             ("speedup", Json::Num(speedup)),
             ("hit_rate", Json::Num(on_stats.hit_rate())),
             ("hit_tokens", Json::from(on_stats.hit_tokens as usize)),

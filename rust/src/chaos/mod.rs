@@ -29,6 +29,9 @@
 //! per group; only the poisoned group fails).
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::fs::OpenOptions;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -271,6 +274,110 @@ impl<L: Llm> ChaosLm<L> {
         }
         spin
     }
+
+    /// Shared admission gate for `begin_with_prefix` / `begin_sized`:
+    /// trips a resume fault when the hint qualifies, otherwise assigns
+    /// the next session id. Both entry points share one budget — the
+    /// engine resumes through `begin_sized` when the substrate supports
+    /// right-sized sessions, and the fault plan must not care which
+    /// doorway the resume used.
+    fn admit_with_hint(&self, prefix_hint: &[u32]) -> Result<u64> {
+        let mut st = self.st.lock().unwrap();
+        if st.trips.resume < st.plan.resume_faults
+            && prefix_hint.len() > st.plan.resume_hint_min
+        {
+            st.trips.resume += 1;
+            let e = if st.plan.resume_retryable {
+                EngineError::new(
+                    ErrorKind::PoolExhausted,
+                    "chaos: resume denied (simulated pool exhaustion)",
+                )
+            } else {
+                EngineError::new(ErrorKind::EvalPersistent, "chaos: resume denied (terminal)")
+            };
+            return Err(e.into());
+        }
+        let id = st.next_session;
+        st.next_session += 1;
+        Ok(id)
+    }
+}
+
+/// How to damage a cold-tier spill file on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillDamage {
+    /// Flip one byte in the middle of the file (checksum mismatch).
+    CorruptByte,
+    /// Cut the file to half its length (truncated header/payload).
+    Truncate,
+}
+
+/// Deterministically damage up to `count` cold-tier spill files under
+/// `dir`, returning the paths actually hit. Victims are drawn with a
+/// seeded RNG over the *sorted* `spill_*.tensors` listing, so the same
+/// seed against the same store damages the same files — the chaos soak
+/// needs reproducible corruption to assert the read path degrades (and
+/// deletes the bad file) rather than faulting. Non-spill files (the
+/// radix snapshot) are left alone; pass them explicitly to
+/// [`damage_file`] to soak snapshot corruption.
+pub fn damage_spill_files(
+    dir: &Path,
+    seed: u64,
+    count: usize,
+    mode: SpillDamage,
+) -> Vec<PathBuf> {
+    let mut spills: Vec<PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("spill_") && n.ends_with(".tensors"))
+            })
+            .collect(),
+        Err(_) => return Vec::new(),
+    };
+    spills.sort();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut hit = Vec::new();
+    for _ in 0..count.min(spills.len()) {
+        let idx = (rng.next_u64() % spills.len() as u64) as usize;
+        let p = spills.swap_remove(idx);
+        if damage_file(&p, mode) {
+            hit.push(p);
+        }
+    }
+    hit
+}
+
+/// Apply one [`SpillDamage`] to a single file; returns whether the
+/// damage stuck (a vanished or empty file counts as already-damaged
+/// enough to skip).
+pub fn damage_file(path: &Path, mode: SpillDamage) -> bool {
+    let Ok(meta) = std::fs::metadata(path) else { return false };
+    let len = meta.len();
+    if len == 0 {
+        return false;
+    }
+    match mode {
+        SpillDamage::Truncate => {
+            let Ok(f) = OpenOptions::new().write(true).open(path) else { return false };
+            f.set_len(len / 2).is_ok()
+        }
+        SpillDamage::CorruptByte => {
+            let Ok(mut f) = OpenOptions::new().read(true).write(true).open(path) else {
+                return false;
+            };
+            let pos = len / 2;
+            let mut b = [0u8; 1];
+            if f.seek(SeekFrom::Start(pos)).is_err() || f.read_exact(&mut b).is_err() {
+                return false;
+            }
+            b[0] ^= 0xA5;
+            f.seek(SeekFrom::Start(pos)).is_ok() && f.write_all(&b).is_ok()
+        }
+    }
 }
 
 impl<L: Llm> Llm for ChaosLm<L> {
@@ -295,30 +402,13 @@ impl<L: Llm> Llm for ChaosLm<L> {
     }
 
     fn begin_with_prefix(&self, prefix_hint: &[u32]) -> Result<Self::Session> {
-        let id = {
-            let mut st = self.st.lock().unwrap();
-            if st.trips.resume < st.plan.resume_faults
-                && prefix_hint.len() > st.plan.resume_hint_min
-            {
-                st.trips.resume += 1;
-                let e = if st.plan.resume_retryable {
-                    EngineError::new(
-                        ErrorKind::PoolExhausted,
-                        "chaos: resume denied (simulated pool exhaustion)",
-                    )
-                } else {
-                    EngineError::new(
-                        ErrorKind::EvalPersistent,
-                        "chaos: resume denied (terminal)",
-                    )
-                };
-                return Err(e.into());
-            }
-            let id = st.next_session;
-            st.next_session += 1;
-            id
-        };
+        let id = self.admit_with_hint(prefix_hint)?;
         Ok(ChaosSession { inner: self.inner.begin_with_prefix(prefix_hint)?, id })
+    }
+
+    fn begin_sized(&self, prefix_hint: &[u32], max_slots: usize) -> Result<Self::Session> {
+        let id = self.admit_with_hint(prefix_hint)?;
+        Ok(ChaosSession { inner: self.inner.begin_sized(prefix_hint, max_slots)?, id })
     }
 
     fn cache_prefix(&self, tokens: &[u32]) {
@@ -335,6 +425,22 @@ impl<L: Llm> Llm for ChaosLm<L> {
 
     fn session_capacity(&self) -> usize {
         self.inner.session_capacity()
+    }
+
+    fn export_block(&self, chain: &[u32]) -> Option<Vec<f32>> {
+        self.inner.export_block(chain)
+    }
+
+    fn import_block(&self, chain: &[u32], payload: &[f32]) -> bool {
+        self.inner.import_block(chain, payload)
+    }
+
+    fn cached_prefix_len(&self, tokens: &[u32]) -> usize {
+        self.inner.cached_prefix_len(tokens)
+    }
+
+    fn persist_cold(&self) {
+        self.inner.persist_cold()
     }
 
     fn eval_into(

@@ -449,6 +449,17 @@ pub struct EngineConfig {
     pub kv_blocks: usize,
     /// Tokens per KV block (only meaningful with `kv_blocks > 0`).
     pub kv_block_size: usize,
+    /// Cold-tier directory (only meaningful with `kv_blocks > 0`):
+    /// blocks evicted from the radix index spill here as checksummed
+    /// tensorfiles and prefix lookups revive them instead of
+    /// re-prefilling; a radix snapshot in the same directory persists
+    /// hot prefixes across restarts. `None` (the default) disables the
+    /// cold tier.
+    pub cold_dir: Option<String>,
+    /// Maximum spilled blocks the cold tier retains per model store
+    /// (a disk-footprint bound; spills past it are dropped, not
+    /// errors). Only meaningful with `cold_dir` set.
+    pub cold_blocks: usize,
     /// Flight-recorder journal capacity in events (0 = tracing off).
     /// The ring is preallocated once at engine construction and the
     /// newest events overwrite the oldest; steady-state recording
@@ -503,6 +514,8 @@ impl Default for EngineConfig {
             drain_batching: false,
             kv_blocks: 0,
             kv_block_size: 16,
+            cold_dir: None,
+            cold_blocks: 4096,
             trace_events: 0,
             watchdog_ms: 0,
             watchdog_path: "rsd-watchdog.json".into(),
@@ -567,6 +580,12 @@ impl EngineConfig {
                 );
             }
             cfg.kv_block_size = v;
+        }
+        if let Some(s) = j.get("cold_dir").and_then(Json::as_str) {
+            cfg.cold_dir = Some(s.to_string());
+        }
+        if let Some(v) = j.get("cold_blocks").and_then(Json::as_usize) {
+            cfg.cold_blocks = v;
         }
         if let Some(v) = j.get("trace_events").and_then(Json::as_usize) {
             cfg.trace_events = v;
@@ -709,5 +728,16 @@ mod tests {
         assert_eq!(cfg.decoder, DecoderConfig::RsdC { branches: vec![2, 2, 1] });
         assert!((cfg.sampling.temperature - 0.7).abs() < 1e-6);
         assert_eq!(cfg.max_queue, 256); // default kept
+    }
+
+    #[test]
+    fn engine_config_cold_tier_knobs() {
+        let d = EngineConfig::default();
+        assert!(d.cold_dir.is_none(), "cold tier is opt-in");
+        assert_eq!(d.cold_blocks, 4096);
+        let j = Json::parse(r#"{"cold_dir": "/tmp/rsd-cold", "cold_blocks": 128}"#).unwrap();
+        let cfg = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.cold_dir.as_deref(), Some("/tmp/rsd-cold"));
+        assert_eq!(cfg.cold_blocks, 128);
     }
 }

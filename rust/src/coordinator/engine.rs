@@ -736,7 +736,20 @@ impl<T: Llm, D: Llm> Engine<T, D> {
         }
         let cand_need = match st.parked.get(&cand.id) {
             Some(p) => p.stepper.round_need(),
-            None => cand.prompt.len() + self.request_weight(cand) + 2,
+            None => {
+                // discount the prompt prefix already servable from the
+                // radix index or the cold tier: a cold hit re-imports
+                // blocks instead of re-prefilling, so it consumes pool
+                // blocks but no fresh prefill slots beyond the match
+                // (capped at len-1 — the tail chain is never empty, and
+                // a stale membership answer only costs an extra
+                // preemption, never correctness)
+                let cached = self
+                    .target
+                    .cached_prefix_len(&cand.prompt)
+                    .min(cand.prompt.len().saturating_sub(1));
+                cand.prompt.len() - cached + self.request_weight(cand) + 2
+            }
         };
         let mut needs: Vec<(usize, bool)> = st
             .active
@@ -1313,6 +1326,11 @@ impl<T: Llm, D: Llm> Engine<T, D> {
             }
         }
         self.update_status(&st);
+        // clean shutdown: spill the still-resident radix index and
+        // snapshot the hot prefixes, so a restarted engine pointed at
+        // the same cold_dir serves system prompts without re-prefill
+        self.target.persist_cold();
+        self.draft.persist_cold();
         if let Some(ps) = self.target.pool_status() {
             self.metrics.set_kv_pool(&ps);
         }

@@ -103,6 +103,13 @@ pub struct Metrics {
     pub kv_lookup_tokens: AtomicU64,
     pub kv_cow_copies: AtomicU64,
     pub kv_evictions: AtomicU64,
+    /// Latest target-pool cold-tier cumulative counters (stored like
+    /// the hot counters above; all zero when the cold tier is off).
+    pub kv_cold_spills: AtomicU64,
+    pub kv_cold_hits: AtomicU64,
+    pub kv_cold_hit_tokens: AtomicU64,
+    pub kv_cold_misses: AtomicU64,
+    pub kv_cold_corrupt: AtomicU64,
     /// Latest target-pool occupancy gauges.
     pub kv_blocks_in_use: AtomicU64,
     pub kv_blocks_total: AtomicU64,
@@ -187,12 +194,24 @@ pub struct Snapshot {
     pub kv_lookup_tokens: u64,
     pub kv_cow_copies: u64,
     pub kv_evictions: u64,
+    /// Target-pool cold-tier counters: blocks spilled to disk, cold
+    /// fetches that revived a block / missed / failed validation
+    /// (corrupt files degrade to re-prefill, counted here), and the
+    /// tokens cold hits served (all 0 when the cold tier is off).
+    pub kv_cold_spills: u64,
+    pub kv_cold_hits: u64,
+    pub kv_cold_hit_tokens: u64,
+    pub kv_cold_misses: u64,
+    pub kv_cold_corrupt: u64,
     /// Target-pool occupancy gauges at snapshot time.
     pub kv_blocks_in_use: u64,
     pub kv_blocks_total: u64,
     /// Cumulative prefix hit rate (hit / looked-up tokens; 0 when no
     /// lookups happened).
     pub kv_hit_rate: f64,
+    /// Cold-tier hit rate (hits / consults; 0 when the cold tier never
+    /// answered a lookup).
+    pub kv_cold_hit_rate: f64,
     /// Per-request hit-ratio deciles (bucket `b` = ratio in
     /// `[b/10, (b+1)/10)`, full hits in the last bucket).
     pub kv_hit_hist: [u64; FILL_BUCKETS],
@@ -289,6 +308,11 @@ impl Metrics {
         self.kv_lookup_tokens.store(ps.stats.lookup_tokens, st);
         self.kv_cow_copies.store(ps.stats.cow_copies, st);
         self.kv_evictions.store(ps.stats.evictions, st);
+        self.kv_cold_spills.store(ps.stats.cold_spills, st);
+        self.kv_cold_hits.store(ps.stats.cold_hits, st);
+        self.kv_cold_hit_tokens.store(ps.stats.cold_hit_tokens, st);
+        self.kv_cold_misses.store(ps.stats.cold_misses, st);
+        self.kv_cold_corrupt.store(ps.stats.cold_corrupt, st);
         self.kv_blocks_in_use.store(ps.blocks_in_use() as u64, st);
         self.kv_blocks_total.store(ps.total_blocks as u64, st);
     }
@@ -349,6 +373,15 @@ impl Metrics {
         } else {
             kv_hit_tokens as f64 / kv_lookup_tokens as f64
         };
+        let kv_cold_hits = self.kv_cold_hits.load(Ordering::Relaxed);
+        let kv_cold_misses = self.kv_cold_misses.load(Ordering::Relaxed);
+        let kv_cold_corrupt = self.kv_cold_corrupt.load(Ordering::Relaxed);
+        let cold_consults = kv_cold_hits + kv_cold_misses + kv_cold_corrupt;
+        let kv_cold_hit_rate = if cold_consults == 0 {
+            0.0
+        } else {
+            kv_cold_hits as f64 / cold_consults as f64
+        };
         Snapshot {
             admitted: self.admitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -393,9 +426,15 @@ impl Metrics {
             kv_lookup_tokens,
             kv_cow_copies: self.kv_cow_copies.load(Ordering::Relaxed),
             kv_evictions: self.kv_evictions.load(Ordering::Relaxed),
+            kv_cold_spills: self.kv_cold_spills.load(Ordering::Relaxed),
+            kv_cold_hits,
+            kv_cold_hit_tokens: self.kv_cold_hit_tokens.load(Ordering::Relaxed),
+            kv_cold_misses,
+            kv_cold_corrupt,
             kv_blocks_in_use: self.kv_blocks_in_use.load(Ordering::Relaxed),
             kv_blocks_total: self.kv_blocks_total.load(Ordering::Relaxed),
             kv_hit_rate,
+            kv_cold_hit_rate,
             kv_hit_hist: *self.kv_hit_hist.lock().unwrap(),
         }
     }
@@ -452,9 +491,15 @@ impl Snapshot {
             c("kv_lookup_tokens", "rsd_kv_lookup_tokens_total", self.kv_lookup_tokens),
             c("kv_cow_copies", "rsd_kv_cow_copies_total", self.kv_cow_copies),
             c("kv_evictions", "rsd_kv_evictions_total", self.kv_evictions),
+            c("kv_cold_spills", "rsd_kv_cold_spills_total", self.kv_cold_spills),
+            c("kv_cold_hits", "rsd_kv_cold_hits_total", self.kv_cold_hits),
+            c("kv_cold_hit_tokens", "rsd_kv_cold_hit_tokens_total", self.kv_cold_hit_tokens),
+            c("kv_cold_misses", "rsd_kv_cold_misses_total", self.kv_cold_misses),
+            c("kv_cold_corrupt", "rsd_kv_cold_corrupt_total", self.kv_cold_corrupt),
             g("kv_blocks_in_use", "rsd_kv_blocks_in_use", self.kv_blocks_in_use as f64, true),
             g("kv_blocks_total", "rsd_kv_blocks_total", self.kv_blocks_total as f64, true),
             g("kv_hit_rate", "rsd_kv_hit_rate", self.kv_hit_rate, false),
+            g("kv_cold_hit_rate", "rsd_kv_cold_hit_rate", self.kv_cold_hit_rate, false),
             g("fused_mean_batch", "rsd_fused_mean_batch", self.fused_mean_batch, false),
         ]
     }
@@ -678,6 +723,11 @@ mod tests {
         assert!((s.kv_hit_rate - 1.0).abs() < 1e-12);
         assert_eq!(s.kv_blocks_total, 8);
         assert!(s.kv_blocks_in_use >= 1, "leased shared blocks count as in use");
+        // no cold tier attached: counters and rate stay zero
+        assert_eq!(s.kv_cold_spills, 0);
+        assert_eq!(s.kv_cold_hits, 0);
+        assert_eq!(s.kv_cold_corrupt, 0);
+        assert_eq!(s.kv_cold_hit_rate, 0.0);
         assert_eq!(s.kv_hit_hist[8], 1);
         assert_eq!(s.kv_hit_hist[9], 1);
         assert_eq!(s.kv_hit_hist[0], 1);

@@ -342,6 +342,15 @@ pub(crate) fn done_json(report: &RequestReport) -> Json {
                 ("evictions", (ps.stats.evictions as usize).into()),
                 ("blocks_in_use", ps.blocks_in_use().into()),
                 ("blocks_total", ps.total_blocks.into()),
+                // cold-tier traffic (all zero when no "cold_dir" is
+                // configured): spills to disk, revivals and the tokens
+                // of prefill they saved, and corrupt blocks dropped
+                ("cold_spills", (ps.stats.cold_spills as usize).into()),
+                ("cold_hits", (ps.stats.cold_hits as usize).into()),
+                ("cold_hit_tokens", (ps.stats.cold_hit_tokens as usize).into()),
+                ("cold_misses", (ps.stats.cold_misses as usize).into()),
+                ("cold_corrupt", (ps.stats.cold_corrupt as usize).into()),
+                ("cold_hit_rate", ps.stats.cold_hit_rate().into()),
             ]),
         ));
     }

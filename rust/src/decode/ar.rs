@@ -87,7 +87,9 @@ impl<T: Llm> ArStepper<T> {
         if prompt.is_empty() {
             bail!("prompt must be non-empty");
         }
-        let sess = target.begin_with_prefix(prompt)?;
+        // right-sized session: an AR request never holds more than the
+        // committed sequence plus a one-token decode margin
+        let sess = target.begin_sized(prompt, prompt.len() + max_new.min(1 << 20) + 2)?;
         let prefill_start = target.prefix_len(&sess);
         debug_assert!(prefill_start < prompt.len());
         let stats = DecodeStats { kv_hit_tokens: prefill_start, ..Default::default() };
@@ -183,7 +185,8 @@ impl<T: Llm> ArStepper<T> {
     /// Re-admit after a suspend: whatever prefix of the spilled sequence
     /// is still radix-cached is mapped back without recompute.
     pub fn resume(&mut self, target: &T) -> Result<()> {
-        self.sess = target.begin_with_prefix(&self.prefill)?;
+        let max_slots = self.prompt.len() + self.max_new.min(1 << 20) + 2;
+        self.sess = target.begin_sized(&self.prefill, max_slots)?;
         self.prefill_start = target.prefix_len(&self.sess);
         self.stats.kv_hit_tokens += self.prefill_start;
         Ok(())

@@ -450,9 +450,12 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
         // radix-cached prefix of the prompt it holds; those tokens are
         // already committed, so the tails start at the first uncached one
         // (cap at len-1 guaranteed by the trait contract — the tail chain
-        // is never empty)
-        let tsess = target.begin_with_prefix(prompt)?;
-        let dsess = draft.begin_with_prefix(prompt)?;
+        // is never empty). Sized to the session's worst case — committed
+        // sequence plus one full tree plus residual/bonus margin — so a
+        // paged substrate reserves per-session footprint, not the pool.
+        let max_slots = prompt.len() + max_new.min(1 << 20) + max_nodes + 2;
+        let tsess = target.begin_sized(prompt, max_slots)?;
+        let dsess = draft.begin_sized(prompt, max_slots)?;
         let tm = target.prefix_len(&tsess);
         let dm = draft.prefix_len(&dsess);
         debug_assert!(tm < prompt.len() && dm < prompt.len());
@@ -599,10 +602,12 @@ impl<T: Llm, D: Llm> SpecStepper<T, D> {
     /// radix-cached is mapped back without recompute, the rest stays in
     /// the tails and is re-prefilled by the next round's phase machine.
     pub fn resume(&mut self, target: &T, draft: &D) -> Result<()> {
-        self.tsess = target.begin_with_prefix(&self.tail_target)?;
+        let max_slots =
+            self.prompt.len() + self.max_new.min(1 << 20) + self.strategy.max_nodes() + 2;
+        self.tsess = target.begin_sized(&self.tail_target, max_slots)?;
         let tm = target.prefix_len(&self.tsess);
         self.tail_target.drain(..tm);
-        self.dsess = draft.begin_with_prefix(&self.tail_draft)?;
+        self.dsess = draft.begin_sized(&self.tail_draft, max_slots)?;
         let dm = draft.prefix_len(&self.dsess);
         self.tail_draft.drain(..dm);
         self.stats.kv_hit_tokens += tm + dm;

@@ -1,0 +1,354 @@
+//! Cold KV tier: a host-side persistent store for radix blocks evicted
+//! from the hot pool, in the checksummed tensorfile format.
+//!
+//! Each spilled block is one `.tensors` file keyed by the block's full
+//! token chain (context start through the block's last token):
+//!
+//! * `tokens` — i32 `[chain_len]`, the chain itself (identity check on
+//!   revival: the filename hash is not trusted);
+//! * `payload` — f32 `[n]`, the substrate-exported KV payload
+//!   ([`crate::llm::Llm::export_block`]).
+//!
+//! Every tensor carries a CRC-32 the reader verifies, and files are
+//! written atomically (tmp + rename), so the read path has exactly three
+//! outcomes: a validated hit, a miss, or *corrupt* — in which case the
+//! offending file is deleted and the caller degrades to re-prefill. A
+//! damaged cold tier can cost recompute, never correctness and never a
+//! crash (chaos-tested in `rust/tests/chaos.rs`).
+//!
+//! A `radix.tensors` snapshot in the same directory records the leaf
+//! chains of the hot radix index at shutdown
+//! ([`crate::kvcache::KvPool::persist_radix`]); on boot the pool
+//! replays it through the ordinary validated-revival path, so hot
+//! system prompts survive restarts without re-prefill.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensorfile::{self, Dtype, Tensor, Tensors};
+
+/// Stable 64-bit chain key (FNV-1a over little-endian token bytes).
+/// Deterministic across processes — it names spill files on disk.
+pub fn chain_key(chain: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in chain {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Outcome of a cold lookup. `Corrupt` means the file existed but
+/// failed validation (checksum, truncation, chain mismatch) and has
+/// been deleted — the caller re-prefills.
+#[derive(Debug)]
+pub enum Fetch {
+    Hit(Vec<f32>),
+    Miss,
+    Corrupt,
+}
+
+/// The on-disk spill store: a directory of per-block `.tensors` files
+/// plus an in-memory key index (rebuilt by scanning the directory on
+/// open, so a store survives the process that wrote it).
+#[derive(Debug)]
+pub struct ColdStore {
+    dir: PathBuf,
+    /// Capacity bound in blocks; spills beyond it are dropped.
+    max_blocks: usize,
+    index: HashSet<u64>,
+}
+
+const SNAPSHOT_FILE: &str = "radix.tensors";
+
+impl ColdStore {
+    /// Open (creating if needed) a store rooted at `dir`, indexing any
+    /// spill files a previous process left there. File contents are not
+    /// read here — corruption is detected (and the file discarded) on
+    /// fetch, keeping open O(#files).
+    pub fn open(dir: impl AsRef<Path>, max_blocks: usize) -> Result<ColdStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cold-tier dir {}", dir.display()))?;
+        let mut index = HashSet::new();
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("scanning cold-tier dir {}", dir.display()))?
+        {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(hex) = name.strip_prefix("spill_").and_then(|n| n.strip_suffix(".tensors"))
+            {
+                if let Ok(key) = u64::from_str_radix(hex, 16) {
+                    index.insert(key);
+                }
+            }
+        }
+        Ok(ColdStore { dir, max_blocks, index })
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Index membership for the block closing `chain` (no file I/O; the
+    /// admission-headroom probe calls this per candidate).
+    pub fn contains(&self, chain: &[u32]) -> bool {
+        self.index.contains(&chain_key(chain))
+    }
+
+    fn path_for(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("spill_{key:016x}.tensors"))
+    }
+
+    /// Persist one evicted block. Returns `true` when the block is in
+    /// the store afterwards (including "already there"); `false` when
+    /// dropped (capacity bound) or the write failed — spilling is
+    /// strictly best-effort and must never take the eviction path down.
+    pub fn spill(&mut self, chain: &[u32], payload: &[f32]) -> bool {
+        let key = chain_key(chain);
+        if self.index.contains(&key) {
+            return true;
+        }
+        if self.index.len() >= self.max_blocks {
+            return false;
+        }
+        let mut ts = Tensors::new();
+        let mut tok_bytes = Vec::with_capacity(chain.len() * 4);
+        for &t in chain {
+            tok_bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        ts.insert(
+            "tokens".to_string(),
+            Tensor { dtype: Dtype::I32, shape: vec![chain.len()], data: tok_bytes },
+        );
+        let payload = match Tensor::from_f32(vec![payload.len()], payload) {
+            Ok(t) => t,
+            Err(_) => return false,
+        };
+        ts.insert("payload".to_string(), payload);
+        if tensorfile::save(self.path_for(key), &ts).is_err() {
+            return false;
+        }
+        self.index.insert(key);
+        true
+    }
+
+    /// Look up the block closing `chain`, fully validated: checksummed
+    /// load, then an exact chain-identity check (the key hash is not
+    /// trusted against collisions or renamed files). Any violation
+    /// deletes the file and reports [`Fetch::Corrupt`].
+    pub fn fetch(&mut self, chain: &[u32]) -> Fetch {
+        let key = chain_key(chain);
+        if !self.index.contains(&key) {
+            return Fetch::Miss;
+        }
+        let path = self.path_for(key);
+        let valid = tensorfile::load(&path).ok().and_then(|ts| {
+            let tok = ts.get("tokens")?;
+            if tok.dtype != Dtype::I32 || tok.shape != [chain.len()] {
+                return None;
+            }
+            let same = tok
+                .data
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .eq(chain.iter().copied());
+            if !same {
+                return None;
+            }
+            ts.get("payload")?.as_f32().ok()
+        });
+        match valid {
+            Some(payload) => Fetch::Hit(payload),
+            None => {
+                self.discard(key);
+                Fetch::Corrupt
+            }
+        }
+    }
+
+    /// Drop the block closing `chain` from the store, if present.
+    pub fn remove(&mut self, chain: &[u32]) {
+        self.discard(chain_key(chain));
+    }
+
+    fn discard(&mut self, key: u64) {
+        self.index.remove(&key);
+        let _ = std::fs::remove_file(self.path_for(key));
+    }
+
+    /// Write the radix snapshot: one i32 tensor per leaf chain. The
+    /// write is atomic (tensorfile staging), so a crash mid-persist
+    /// leaves the previous snapshot intact.
+    pub fn write_snapshot(&self, chains: &[Vec<u32>]) -> Result<()> {
+        let mut ts = Tensors::new();
+        for (i, chain) in chains.iter().enumerate() {
+            let mut bytes = Vec::with_capacity(chain.len() * 4);
+            for &t in chain {
+                bytes.extend_from_slice(&t.to_le_bytes());
+            }
+            ts.insert(
+                format!("chain_{i:05}"),
+                Tensor { dtype: Dtype::I32, shape: vec![chain.len()], data: bytes },
+            );
+        }
+        tensorfile::save(self.dir.join(SNAPSHOT_FILE), &ts)
+    }
+
+    /// Read the radix snapshot left by a previous process. A missing or
+    /// corrupt snapshot yields no chains (never an error): restart
+    /// recovery is best-effort, the blocks themselves are still
+    /// individually revivable on demand.
+    pub fn read_snapshot(&self) -> Vec<Vec<u32>> {
+        let path = self.dir.join(SNAPSHOT_FILE);
+        if !path.exists() {
+            return Vec::new();
+        }
+        let Ok(ts) = tensorfile::load(&path) else { return Vec::new() };
+        let mut chains: Vec<Vec<u32>> = Vec::new();
+        for t in ts.values() {
+            if t.dtype != Dtype::I32 {
+                continue;
+            }
+            chains.push(
+                t.data
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+        }
+        chains
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cold_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn spill_fetch_roundtrip_and_reopen() {
+        let dir = tdir("rt");
+        let chain: Vec<u32> = (0..16).collect();
+        let payload: Vec<f32> = (0..16).map(|i| i as f32 * 0.5).collect();
+        {
+            let mut s = ColdStore::open(&dir, 8).unwrap();
+            assert!(!s.contains(&chain));
+            assert!(s.spill(&chain, &payload));
+            assert!(s.contains(&chain));
+            match s.fetch(&chain) {
+                Fetch::Hit(p) => assert_eq!(p, payload),
+                other => panic!("expected hit, got {other:?}"),
+            }
+        }
+        // a fresh store over the same dir re-indexes the spill
+        let mut s = ColdStore::open(&dir, 8).unwrap();
+        assert_eq!(s.len(), 1);
+        assert!(matches!(s.fetch(&chain), Fetch::Hit(_)));
+        // a different chain with the same length misses
+        let other: Vec<u32> = (100..116).collect();
+        assert!(matches!(s.fetch(&other), Fetch::Miss));
+    }
+
+    #[test]
+    fn corrupt_file_degrades_to_miss_and_is_deleted() {
+        let dir = tdir("corrupt");
+        let chain: Vec<u32> = (0..8).collect();
+        let payload = vec![1.5f32; 8];
+        let mut s = ColdStore::open(&dir, 8).unwrap();
+        assert!(s.spill(&chain, &payload));
+        // flip a payload byte on disk
+        let file = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .find(|p| p.file_name().unwrap().to_str().unwrap().starts_with("spill_"))
+            .unwrap();
+        let mut bytes = std::fs::read(&file).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&file, &bytes).unwrap();
+        assert!(matches!(s.fetch(&chain), Fetch::Corrupt));
+        assert!(!file.exists(), "corrupt spill must be deleted");
+        assert!(matches!(s.fetch(&chain), Fetch::Miss), "second fetch is a plain miss");
+    }
+
+    #[test]
+    fn truncated_file_is_corrupt_not_fatal() {
+        let dir = tdir("trunc");
+        let chain: Vec<u32> = (0..8).collect();
+        let mut s = ColdStore::open(&dir, 8).unwrap();
+        assert!(s.spill(&chain, &[2.0f32; 8]));
+        let key = chain_key(&chain);
+        let path = s.path_for(key);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(matches!(s.fetch(&chain), Fetch::Corrupt));
+    }
+
+    #[test]
+    fn chain_identity_is_checked_not_just_the_key() {
+        let dir = tdir("ident");
+        let a: Vec<u32> = (0..8).collect();
+        let b: Vec<u32> = (8..16).collect();
+        let mut s = ColdStore::open(&dir, 8).unwrap();
+        assert!(s.spill(&a, &[1.0f32; 8]));
+        // graft a's file onto b's key: must be rejected as corrupt
+        std::fs::rename(s.path_for(chain_key(&a)), s.path_for(chain_key(&b))).unwrap();
+        s.index.insert(chain_key(&b));
+        assert!(matches!(s.fetch(&b), Fetch::Corrupt));
+    }
+
+    #[test]
+    fn capacity_bound_drops_spills() {
+        let dir = tdir("cap");
+        let mut s = ColdStore::open(&dir, 2).unwrap();
+        assert!(s.spill(&[1, 2], &[0.0; 2]));
+        assert!(s.spill(&[3, 4], &[0.0; 2]));
+        assert!(!s.spill(&[5, 6], &[0.0; 2]), "store at capacity must drop");
+        assert!(s.spill(&[3, 4], &[0.0; 2]), "re-spill of a resident block is a no-op success");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_and_corrupt_snapshot_degrades() {
+        let dir = tdir("snap");
+        let s = ColdStore::open(&dir, 8).unwrap();
+        assert!(s.read_snapshot().is_empty());
+        let chains = vec![(0..16u32).collect::<Vec<_>>(), (40..48u32).collect()];
+        s.write_snapshot(&chains).unwrap();
+        let back = ColdStore::open(&dir, 8).unwrap().read_snapshot();
+        assert_eq!(back.len(), 2);
+        assert!(back.contains(&chains[0]) && back.contains(&chains[1]));
+        // truncate the snapshot: boot sees no chains, not an error
+        let snap = dir.join(SNAPSHOT_FILE);
+        let bytes = std::fs::read(&snap).unwrap();
+        std::fs::write(&snap, &bytes[..6]).unwrap();
+        assert!(ColdStore::open(&dir, 8).unwrap().read_snapshot().is_empty());
+    }
+
+    #[test]
+    fn chain_key_is_order_sensitive_and_stable() {
+        assert_ne!(chain_key(&[1, 2, 3]), chain_key(&[3, 2, 1]));
+        assert_ne!(chain_key(&[1]), chain_key(&[1, 0]));
+        // pinned value: the key names files on disk, so it must never
+        // drift between builds
+        assert_eq!(chain_key(&[]), 0xcbf2_9ce4_8422_2325);
+    }
+}

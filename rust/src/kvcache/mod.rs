@@ -20,7 +20,12 @@
 //!   consume;
 //! * [`PoolStatus`] / [`KvStats`] — the occupancy and hit/CoW/eviction
 //!   telemetry surfaced through [`crate::llm::Llm::pool_status`], the
-//!   engine metrics and the server `done` payload.
+//!   engine metrics and the server `done` payload;
+//! * [`cold::ColdStore`] — the persistent cold tier: blocks evicted
+//!   from the radix index spill to checksummed host-side tensorfiles
+//!   (via the [`crate::llm::Llm::export_block`] seam), prefix lookups
+//!   revive them (validated; corruption degrades to re-prefill), and a
+//!   radix snapshot persists hot prefixes across restarts.
 //!
 //! Ownership rules (enforced by refcounts, exercised by the tests in
 //! this module and `rust/tests/kvcache.rs`):
@@ -39,11 +44,13 @@
 //!    rest through the ordinary phase machine, consuming no RNG, so
 //!    token streams are bit-identical with and without preemption.
 
+pub mod cold;
 pub mod pool;
 pub mod table;
 
+pub use cold::ColdStore;
 pub use pool::{
-    KvConfig, KvPool, KvStats, PoolExhausted, PoolStatus, PrefixMatch, SharedLease,
-    MAX_BLOCK_SIZE,
+    ColdExporter, ColdImporter, KvConfig, KvPool, KvStats, PoolExhausted, PoolStatus,
+    PrefixMatch, SharedLease, MAX_BLOCK_SIZE,
 };
 pub use table::PagedSlots;

@@ -41,6 +41,7 @@
 use std::fmt;
 use std::sync::Mutex;
 
+use super::cold::{ColdStore, Fetch};
 use crate::trace::{EventKind, Tracer};
 
 /// Occupancy masks in [`super::table::PagedSlots`] are `u64`.
@@ -97,6 +98,19 @@ pub struct KvStats {
     pub evictions: u64,
     /// Blocks registered in the radix index by [`KvPool::publish`].
     pub published_blocks: u64,
+    /// Evicted blocks persisted to the cold tier (incl. shutdown
+    /// persists; re-spills of already-resident blocks don't count).
+    pub cold_spills: u64,
+    /// Blocks revived from the cold tier back into the radix index.
+    pub cold_hits: u64,
+    /// Tokens those revivals covered (prefill compute saved).
+    pub cold_hit_tokens: u64,
+    /// Cold consults that found no spilled block.
+    pub cold_misses: u64,
+    /// Spilled blocks rejected on revival — bad checksum, truncation,
+    /// chain mismatch or payload validation failure. Each one is
+    /// deleted and the lookup degrades to re-prefill (never fatal).
+    pub cold_corrupt: u64,
 }
 
 impl KvStats {
@@ -107,6 +121,39 @@ impl KvStats {
         } else {
             self.hit_tokens as f64 / self.lookup_tokens as f64
         }
+    }
+
+    /// Fraction of cold-tier consults that revived a block.
+    pub fn cold_hit_rate(&self) -> f64 {
+        let consults = self.cold_hits + self.cold_misses + self.cold_corrupt;
+        if consults == 0 {
+            0.0
+        } else {
+            self.cold_hits as f64 / consults as f64
+        }
+    }
+}
+
+/// Substrate hook extracting the serializable KV payload for the block
+/// that closes `chain` (the full committed token path through the
+/// block's last token). `None` = this substrate cannot spill.
+pub type ColdExporter = Box<dyn Fn(&[u32]) -> Option<Vec<f32>> + Send>;
+
+/// Substrate hook validating a revived payload for `chain`: `true` iff
+/// the block is servable exactly as stored.
+pub type ColdImporter = Box<dyn Fn(&[u32], &[f32]) -> bool + Send>;
+
+/// The pool's attached cold tier: the on-disk store plus the substrate
+/// seams that (de)serialize block payloads.
+struct ColdTier {
+    store: ColdStore,
+    exporter: ColdExporter,
+    importer: ColdImporter,
+}
+
+impl fmt::Debug for ColdTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ColdTier").field("store", &self.store).finish_non_exhaustive()
     }
 }
 
@@ -194,6 +241,10 @@ struct PoolInner {
     /// Flight-recorder handle (default off); lives inside the pool
     /// mutex so eviction deep in [`KvPool::alloc_block`] can record.
     tracer: Tracer,
+    /// Attached cold tier (default none — with it absent, every cold
+    /// path below is a single branch and the hot paths stay
+    /// allocation-free).
+    cold: Option<ColdTier>,
 }
 
 /// The shared paged KV-cache pool (see module docs). Cheap to share via
@@ -229,6 +280,7 @@ impl KvPool {
                 stats: KvStats::default(),
                 evictable: 0,
                 tracer: Tracer::off(),
+                cold: None,
             }),
         }
     }
@@ -238,6 +290,66 @@ impl KvPool {
     /// allocation-free (the journal is preallocated).
     pub fn set_trace(&self, tracer: &Tracer) {
         self.inner.lock().unwrap().tracer = tracer.clone();
+    }
+
+    /// Attach a cold tier: evicted radix blocks spill to `store`
+    /// through `exporter`, prefix lookups revive spilled blocks through
+    /// `importer` validation, and [`KvPool::persist_radix`] /
+    /// [`KvPool::load_radix`] snapshot the index across restarts. The
+    /// hooks must be pure functions of the token chain — they run under
+    /// the pool mutex and must not call back into this pool.
+    pub fn set_cold(&self, store: ColdStore, exporter: ColdExporter, importer: ColdImporter) {
+        self.inner.lock().unwrap().cold = Some(ColdTier { store, exporter, importer });
+    }
+
+    pub fn has_cold(&self) -> bool {
+        self.inner.lock().unwrap().cold.is_some()
+    }
+
+    /// Spilled blocks currently resident in the cold tier.
+    pub fn cold_blocks(&self) -> usize {
+        self.inner.lock().unwrap().cold.as_ref().map_or(0, |c| c.store.len())
+    }
+
+    /// The full token chain from the context start through node `id`'s
+    /// block (the cold tier's block identity).
+    fn chain_of(g: &PoolInner, id: usize) -> Vec<u32> {
+        let mut ids = Vec::new();
+        let mut at = id;
+        while at != NO_NODE {
+            ids.push(at);
+            at = g.nodes[at].parent;
+        }
+        let mut chain = Vec::new();
+        for &i in ids.iter().rev() {
+            chain.extend_from_slice(&g.nodes[i].tokens);
+        }
+        chain
+    }
+
+    /// Best-effort spill of node `id` to the cold tier (no-op without
+    /// one). Must run while the node and its root path are still live.
+    /// Returns whether the block is resident in the store afterwards.
+    fn spill_node(g: &mut PoolInner, id: usize) -> bool {
+        if g.cold.is_none() {
+            return false;
+        }
+        let chain = Self::chain_of(g, id);
+        let (resident, newly) = {
+            let cold = g.cold.as_mut().unwrap();
+            if cold.store.contains(&chain) {
+                (true, false)
+            } else if let Some(payload) = (cold.exporter)(&chain) {
+                let ok = cold.store.spill(&chain, &payload);
+                (ok, ok)
+            } else {
+                (false, false)
+            }
+        };
+        if newly {
+            g.stats.cold_spills += 1;
+        }
+        resident
     }
 
     pub fn block_size(&self) -> usize {
@@ -325,6 +437,77 @@ impl KvPool {
                 break; // partial match: the walk cannot continue below it
             }
             children = &g.nodes[id].children;
+        }
+        // Cold-tier extension: the hot walk stalled on a block boundary
+        // with whole blocks still wanted — revive spilled blocks into
+        // fresh radix nodes and keep matching. Free-list only (like
+        // `publish`: never evict a warmer prefix to revive a colder
+        // one); a corrupt or unvalidated payload deletes the spill file
+        // and degrades to re-prefill.
+        if g.cold.is_some() {
+            let b = self.block_size;
+            let mut parent = match path.last() {
+                Some(&(id, k)) if k == b => id,
+                Some(_) => NO_NODE, // partial tail: misaligned, loop won't run
+                None => NO_NODE,
+            };
+            while pos % b == 0 && cap - pos >= b && !g.free.is_empty() {
+                let chain = &tokens[pos..pos + b];
+                let full_chain = &tokens[..pos + b];
+                let fetched = g.cold.as_mut().unwrap().store.fetch(full_chain);
+                let payload = match fetched {
+                    Fetch::Miss => {
+                        g.stats.cold_misses += 1;
+                        break;
+                    }
+                    Fetch::Corrupt => {
+                        g.stats.cold_corrupt += 1;
+                        break;
+                    }
+                    Fetch::Hit(p) => p,
+                };
+                let usable = (g.cold.as_ref().unwrap().importer)(full_chain, &payload);
+                if !usable {
+                    g.stats.cold_corrupt += 1;
+                    g.cold.as_mut().unwrap().store.remove(full_chain);
+                    break;
+                }
+                let Some(block) = g.free.pop() else { break };
+                debug_assert_eq!(g.refs[block as usize], 0);
+                g.evictable += 1; // fresh nodes carry no leases (yet)
+                let node = Node {
+                    tokens: chain.to_vec(),
+                    block,
+                    parent,
+                    children: Vec::new(),
+                    leases: 0,
+                    pinned_desc: 0,
+                    lru: tick,
+                    live: true,
+                };
+                let id = match g.node_free.pop() {
+                    Some(id) => {
+                        g.nodes[id] = node;
+                        id
+                    }
+                    None => {
+                        g.nodes.push(node);
+                        g.nodes.len() - 1
+                    }
+                };
+                if parent == NO_NODE {
+                    g.roots.push(id);
+                } else {
+                    g.nodes[parent].children.push(id);
+                }
+                g.stats.cold_hits += 1;
+                g.stats.cold_hit_tokens += b as u64;
+                // the lease loop below picks this node up like any
+                // hot-matched one
+                path.push((id, b));
+                parent = id;
+                pos += b;
+            }
         }
         for &(id, used) in &path {
             let n = &mut g.nodes[id];
@@ -493,6 +676,9 @@ impl KvPool {
             }
         }
         let Some((id, _)) = victim else { return false };
+        // Spill before the node dies: eviction is leaf-first, so the
+        // chain through `id` is intact exactly now.
+        Self::spill_node(g, id);
         let (block, parent) = {
             let n = &mut g.nodes[id];
             debug_assert_eq!(n.pinned_desc, 0, "leafless unleased node must be unpinned");
@@ -522,6 +708,177 @@ impl KvPool {
             n += 1;
         }
         n
+    }
+
+    /// Non-mutating admission probe: how many leading tokens of
+    /// `tokens` could be served without re-prefill right now — the hot
+    /// radix match plus the cold tier's block-aligned continuation (by
+    /// index membership only; payloads are validated on the real
+    /// acquire). Takes no leases, touches no LRU state, performs no
+    /// file I/O — a hint for admission headroom, never a reservation.
+    pub fn peek_prefix(&self, tokens: &[u32]) -> usize {
+        if !self.share {
+            return 0;
+        }
+        let b = self.block_size;
+        let g = self.inner.lock().unwrap();
+        let mut children: &[usize] = &g.roots;
+        let mut pos = 0usize;
+        loop {
+            let want = &tokens[pos..];
+            if want.is_empty() {
+                break;
+            }
+            let mut best: Option<(usize, usize)> = None;
+            for &id in children {
+                let n = &g.nodes[id];
+                let k = n
+                    .tokens
+                    .iter()
+                    .zip(want.iter())
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                if k > best.map_or(0, |(_, k)| k) {
+                    best = Some((id, k));
+                }
+            }
+            let Some((id, k)) = best else { break };
+            pos += k;
+            if k < b {
+                return pos;
+            }
+            children = &g.nodes[id].children;
+        }
+        if let Some(cold) = g.cold.as_ref() {
+            while pos % b == 0
+                && tokens.len() - pos >= b
+                && cold.store.contains(&tokens[..pos + b])
+            {
+                pos += b;
+            }
+        }
+        pos
+    }
+
+    /// Persist the radix index across a restart: spill every live
+    /// node's block to the cold tier and write the chain snapshot
+    /// ([`KvPool::load_radix`] replays it on boot). Best-effort on
+    /// every file operation. Returns the number of live nodes resident
+    /// in the cold store afterwards.
+    pub fn persist_radix(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        if g.cold.is_none() {
+            return 0;
+        }
+        let live: Vec<usize> = (0..g.nodes.len()).filter(|&i| g.nodes[i].live).collect();
+        let mut persisted = 0;
+        let mut leaves: Vec<Vec<u32>> = Vec::new();
+        for id in live {
+            if Self::spill_node(&mut g, id) {
+                persisted += 1;
+            }
+            if g.nodes[id].children.is_empty() {
+                leaves.push(Self::chain_of(&g, id));
+            }
+        }
+        let _ = g.cold.as_ref().unwrap().store.write_snapshot(&leaves);
+        persisted
+    }
+
+    /// Replay the radix snapshot left by a previous process: revive
+    /// each persisted chain's blocks from the cold tier into the index
+    /// (validated block by block — a corrupt block truncates that chain
+    /// and degrades to re-prefill, it never fails the boot). Returns
+    /// blocks revived.
+    pub fn load_radix(&self) -> usize {
+        if !self.share {
+            return 0;
+        }
+        let b = self.block_size;
+        let mut g = self.inner.lock().unwrap();
+        if g.cold.is_none() {
+            return 0;
+        }
+        let chains = g.cold.as_ref().unwrap().store.read_snapshot();
+        g.tick += 1;
+        let tick = g.tick;
+        let mut revived = 0usize;
+        for chain in &chains {
+            let mut parent = NO_NODE;
+            let mut pos = 0usize;
+            for chunk in chain.chunks_exact(b) {
+                // dedupe: a sibling chain's shared prefix may already
+                // have revived this block
+                let exact = {
+                    let children: &[usize] = if parent == NO_NODE {
+                        &g.roots
+                    } else {
+                        &g.nodes[parent].children
+                    };
+                    children
+                        .iter()
+                        .copied()
+                        .find(|&id| g.nodes[id].tokens.as_slice() == chunk)
+                };
+                if let Some(id) = exact {
+                    g.nodes[id].lru = tick;
+                    parent = id;
+                    pos += b;
+                    continue;
+                }
+                let full_chain = &chain[..pos + b];
+                let payload = match g.cold.as_mut().unwrap().store.fetch(full_chain) {
+                    Fetch::Miss => {
+                        g.stats.cold_misses += 1;
+                        break;
+                    }
+                    Fetch::Corrupt => {
+                        g.stats.cold_corrupt += 1;
+                        break;
+                    }
+                    Fetch::Hit(p) => p,
+                };
+                if !(g.cold.as_ref().unwrap().importer)(full_chain, &payload) {
+                    g.stats.cold_corrupt += 1;
+                    g.cold.as_mut().unwrap().store.remove(full_chain);
+                    break;
+                }
+                let Some(block) = g.free.pop() else { break };
+                debug_assert_eq!(g.refs[block as usize], 0);
+                g.evictable += 1;
+                let node = Node {
+                    tokens: chunk.to_vec(),
+                    block,
+                    parent,
+                    children: Vec::new(),
+                    leases: 0,
+                    pinned_desc: 0,
+                    lru: tick,
+                    live: true,
+                };
+                let id = match g.node_free.pop() {
+                    Some(id) => {
+                        g.nodes[id] = node;
+                        id
+                    }
+                    None => {
+                        g.nodes.push(node);
+                        g.nodes.len() - 1
+                    }
+                };
+                if parent == NO_NODE {
+                    g.roots.push(id);
+                } else {
+                    g.nodes[parent].children.push(id);
+                }
+                g.stats.cold_hits += 1;
+                g.stats.cold_hit_tokens += b as u64;
+                revived += 1;
+                parent = id;
+                pos += b;
+            }
+        }
+        revived
     }
 
     /// Blocks a session could obtain right now (free + evictable). O(1)

@@ -50,14 +50,27 @@ pub struct PagedSlots {
 }
 
 impl PagedSlots {
-    /// A fresh lease with no blocks. The block vector is reserved for
-    /// the whole pool up front (a session may lease every block), so
-    /// the decode path never regrows it — part of the zero-allocation
-    /// contract `benches/hotpath.rs` gates on.
+    /// A fresh lease with no blocks, reserved for the whole pool (a
+    /// session *may* lease every block). Callers that know the
+    /// session's worst-case footprint should use
+    /// [`PagedSlots::sized`] instead — reserving the full pool for
+    /// every session is O(sessions x pool) host memory.
     pub fn empty(pool: Arc<KvPool>) -> Self {
+        let slots = pool.total_slots();
+        Self::sized(pool, slots)
+    }
+
+    /// A fresh lease sized for a session that will hold at most
+    /// `max_slots` private slots: the block vector reserves exactly the
+    /// worst-case block count (plus one for cursor/partial-block
+    /// slack), clamped to the pool size — so `alloc_slot`'s push never
+    /// regrows it, which is part of the zero-allocation contract
+    /// `benches/hotpath.rs` gates on. `max_slots` is a sizing hint, not
+    /// a limit: exceeding it costs a reallocation, not an error.
+    pub fn sized(pool: Arc<KvPool>, max_slots: usize) -> Self {
         let bs = pool.block_size();
         let full_mask = if bs == 64 { u64::MAX } else { (1u64 << bs) - 1 };
-        let reserve = pool.total_blocks();
+        let reserve = max_slots.div_ceil(bs).saturating_add(1).min(pool.total_blocks());
         Self {
             pool,
             shared: Vec::new(),
@@ -71,6 +84,18 @@ impl PagedSlots {
     /// [`KvPool::acquire_prefix`]).
     pub fn from_acquire(pool: Arc<KvPool>, leases: Vec<SharedLease>) -> Self {
         let mut s = Self::empty(pool);
+        s.shared = leases;
+        s
+    }
+
+    /// [`PagedSlots::from_acquire`] with the [`PagedSlots::sized`]
+    /// worst-case reservation.
+    pub fn from_acquire_sized(
+        pool: Arc<KvPool>,
+        leases: Vec<SharedLease>,
+        max_slots: usize,
+    ) -> Self {
+        let mut s = Self::sized(pool, max_slots);
         s.shared = leases;
         s
     }

@@ -168,6 +168,17 @@ pub trait Llm {
         self.begin()
     }
 
+    /// [`Llm::begin_with_prefix`] plus the session's worst-case KV
+    /// footprint in slots (committed + pending high-water mark), so a
+    /// pool-backed implementation can right-size per-session
+    /// bookkeeping instead of reserving for the whole pool.
+    /// `max_slots` is a sizing hint, never a limit — a session may
+    /// exceed it at the cost of a reallocation, not an error. Default:
+    /// ignores the hint.
+    fn begin_sized(&self, prefix_hint: &[u32], _max_slots: usize) -> Result<Self::Session> {
+        self.begin_with_prefix(prefix_hint)
+    }
+
     /// Hint that `tokens` is a prompt / persistent prefix worth caching
     /// for future sessions. When — and whether — the blocks become
     /// servable is the implementation's contract: the sim recomputes
@@ -197,6 +208,40 @@ pub trait Llm {
     fn session_capacity(&self) -> usize {
         usize::MAX
     }
+
+    /// Serialize the KV payload of the cache block that *closes*
+    /// `chain`, where `chain` is the full committed token path from the
+    /// context start through the block's last token (always a whole
+    /// number of blocks). The cold tier ([`crate::kvcache::cold`])
+    /// calls this when an evicted radix block spills to disk. `None` =
+    /// this substrate cannot serialize KV state (the default; the PJRT
+    /// backend's caches are device-resident).
+    fn export_block(&self, _chain: &[u32]) -> Option<Vec<f32>> {
+        None
+    }
+
+    /// Validate a payload previously produced by [`Llm::export_block`]
+    /// for `chain`: `true` iff the bytes are exactly what this
+    /// substrate would export, i.e. the revived block is servable.
+    /// Defense in depth behind the file-level checksum — it also
+    /// catches stale or cross-model payloads. Default: reject.
+    fn import_block(&self, _chain: &[u32], _payload: &[f32]) -> bool {
+        false
+    }
+
+    /// How many leading tokens of `tokens` this substrate could serve
+    /// without re-prefill right now (hot radix match plus cold-tier
+    /// membership). Admission headroom uses this to discount a
+    /// candidate's prefill cost; it is a hint, never a reservation.
+    /// Default: 0.
+    fn cached_prefix_len(&self, _tokens: &[u32]) -> usize {
+        0
+    }
+
+    /// Flush whatever should survive a restart — the paged sim persists
+    /// its radix snapshot and resident blocks to the cold tier. The
+    /// engine calls this once on clean shutdown. Default: no-op.
+    fn persist_cold(&self) {}
 
     /// Evaluate `nodes`, appending them to the session's pending set, and
     /// APPEND one raw-logits row per node to `out` (next-token logits

@@ -40,8 +40,13 @@ COMMANDS:
              --top-p P --seed N [--sim] [--artifacts DIR]
   serve      --addr HOST:PORT [--config FILE.json] [--artifacts DIR] [--sim]
              [--trace N] [--watchdog-ms MS] [--watchdog-path FILE]
+             [--cold-dir DIR]
              (config "kv_blocks"/"kv_block_size" enable the paged KV
               pool with radix prefix sharing on the sim substrate;
+              "cold_dir"/--cold-dir adds the persistent cold tier:
+              evicted blocks spill to checksummed tensorfiles there,
+              "cold_blocks" bounds the disk footprint, and hot
+              prefixes survive restarts via the radix snapshot;
               "drain_batching": true switches continuous phase-boundary
               admission off, as the A/B baseline. Per-request wire
               fields: "priority" 0-255, "deadline_ms", "stream": true
@@ -135,19 +140,31 @@ fn main() -> Result<()> {
             };
             if args.has("sim") {
                 // sim substrate: paged KV pools when the config asks for
-                // them ("kv_blocks" > 0), dense per-session caches else
+                // them ("kv_blocks" > 0), dense per-session caches else.
+                // "cold_dir" (or --cold-dir) additionally attaches the
+                // persistent cold tier: evicted blocks spill to disk and
+                // hot prefixes survive restarts via the radix snapshot
                 let seed = cfg.seed;
+                if let Some(d) = args.get("cold-dir") {
+                    cfg.cold_dir = Some(d.to_string());
+                }
                 let (target, draft) = if cfg.kv_blocks > 0 {
-                    rsd::sim::SimLm::pair_paged(
-                        seed,
-                        0.8,
-                        256,
-                        rsd::kvcache::KvConfig {
-                            num_blocks: cfg.kv_blocks,
-                            block_size: cfg.kv_block_size,
-                            share: true,
-                        },
-                    )
+                    let kv = rsd::kvcache::KvConfig {
+                        num_blocks: cfg.kv_blocks,
+                        block_size: cfg.kv_block_size,
+                        share: true,
+                    };
+                    match &cfg.cold_dir {
+                        Some(dir) => rsd::sim::SimLm::pair_paged_cold(
+                            seed,
+                            0.8,
+                            256,
+                            kv,
+                            dir,
+                            cfg.cold_blocks,
+                        )?,
+                        None => rsd::sim::SimLm::pair_paged(seed, 0.8, 256, kv),
+                    }
                 } else {
                     SimLm::pair(seed, 0.8, 256)
                 };

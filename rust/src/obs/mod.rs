@@ -215,6 +215,9 @@ struct Cume {
     preemptions: u64,
     kv_hit_tokens: u64,
     kv_lookup_tokens: u64,
+    kv_cold_hits: u64,
+    /// Cold-tier consults: hits + misses + corrupt drops.
+    kv_cold_consults: u64,
     // ledger sums (all families)
     target_forwards: u64,
     tree_nodes: u64,
@@ -249,6 +252,8 @@ impl Cume {
         d.preemptions -= start.preemptions;
         d.kv_hit_tokens -= start.kv_hit_tokens;
         d.kv_lookup_tokens -= start.kv_lookup_tokens;
+        d.kv_cold_hits -= start.kv_cold_hits;
+        d.kv_cold_consults -= start.kv_cold_consults;
         d.target_forwards -= start.target_forwards;
         d.tree_nodes -= start.tree_nodes;
         d.accepted -= start.accepted;
@@ -334,6 +339,10 @@ impl AnalyticsInner {
             preemptions: m.preemptions.load(ld),
             kv_hit_tokens: m.kv_hit_tokens.load(ld),
             kv_lookup_tokens: m.kv_lookup_tokens.load(ld),
+            kv_cold_hits: m.kv_cold_hits.load(ld),
+            kv_cold_consults: m.kv_cold_hits.load(ld)
+                + m.kv_cold_misses.load(ld)
+                + m.kv_cold_corrupt.load(ld),
             ttft_hits: self.ttft_hits.load(ld),
             ttft_total: self.ttft_total.load(ld),
             latency_hits: self.latency_hits.load(ld),
@@ -758,6 +767,7 @@ fn window_json(w: &Cume, complete_windows: u64) -> Json {
         ("nodes_per_target_forward", Json::Num(ratio(w.tree_nodes, w.target_forwards))),
         ("acceptance_by_level", Json::Arr(trim_levels(&rates, &attempts))),
         ("kv_hit_rate", Json::Num(ratio(w.kv_hit_tokens, w.kv_lookup_tokens))),
+        ("kv_cold_hit_rate", Json::Num(ratio(w.kv_cold_hits, w.kv_cold_consults))),
         ("completed", Json::from(w.completed as usize)),
         ("failed", Json::from(w.failed as usize)),
         ("shed", Json::from(w.shed as usize)),
@@ -959,6 +969,7 @@ mod tests {
             0.0
         );
         assert_eq!(w.get("kv_hit_rate").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(w.get("kv_cold_hit_rate").unwrap().as_f64().unwrap(), 0.0);
         assert!(w.get("acceptance_by_level").unwrap().as_arr().unwrap().is_empty());
         // the whole document round-trips through the parser (no NaN —
         // NaN would not serialize to valid JSON)

@@ -14,11 +14,12 @@
 //! Theorem 3.1/3.2 statistical tests run thousands of decode iterations
 //! per second with fully reproducible behaviour.
 
+use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::kvcache::{KvConfig, KvPool, PagedSlots, PoolStatus};
+use crate::kvcache::{ColdStore, KvConfig, KvPool, PagedSlots, PoolStatus};
 use crate::llm::{EvalNode, Llm, LogitsBatch, PARENT_PREFIX};
 use crate::sampling::kernels;
 use crate::tree::SessionCore;
@@ -89,6 +90,75 @@ impl SimLm {
         target.kv = Some(Arc::new(KvPool::new(cfg)));
         draft.kv = Some(Arc::new(KvPool::new(cfg)));
         (target, draft)
+    }
+
+    /// [`SimLm::pair_paged`] plus a persistent cold tier rooted at
+    /// `dir`: blocks evicted from each pool's radix index spill to
+    /// `<dir>/target` / `<dir>/draft` (separate stores — the two
+    /// models' KV contents differ), prefix lookups revive them, and any
+    /// radix snapshot a previous process persisted there is loaded
+    /// immediately, so hot prefixes survive restarts without
+    /// re-prefill. `max_cold_blocks` bounds each store.
+    pub fn pair_paged_cold(
+        seed: u64,
+        alpha: f64,
+        vocab: usize,
+        cfg: KvConfig,
+        dir: impl AsRef<Path>,
+        max_cold_blocks: usize,
+    ) -> Result<(SimLm, SimLm)> {
+        let (target, draft) = Self::pair_paged(seed, alpha, vocab, cfg);
+        target.attach_cold(dir.as_ref().join("target"), max_cold_blocks)?;
+        draft.attach_cold(dir.as_ref().join("draft"), max_cold_blocks)?;
+        Ok((target, draft))
+    }
+
+    /// Wire this model's pool to a cold store at `dir` and replay any
+    /// radix snapshot persisted there. The exporter/importer closures
+    /// capture a pool-less clone of this model: payloads are pure
+    /// functions of the token chain, so the hooks never re-enter the
+    /// pool they run under.
+    pub fn attach_cold(&self, dir: impl AsRef<Path>, max_blocks: usize) -> Result<()> {
+        let pool = self.kv.as_ref().context("cold tier needs a paged pool")?;
+        let store = ColdStore::open(dir, max_blocks)?;
+        let bs = pool.block_size();
+        let exporter = SimLm { kv: None, ..self.clone() };
+        let importer = exporter.clone();
+        pool.set_cold(
+            store,
+            Box::new(move |chain| exporter.block_payload(chain, bs)),
+            Box::new(move |chain, payload| match importer.block_payload(chain, bs) {
+                Some(want) => {
+                    want.len() == payload.len()
+                        && want.iter().zip(payload).all(|(a, b)| a.to_bits() == b.to_bits())
+                }
+                None => false,
+            }),
+        );
+        pool.load_radix();
+        Ok(())
+    }
+
+    /// Deterministic pseudo-KV payload for the block closing `chain`:
+    /// one f32 per slot, derived from the rolling context hash at that
+    /// slot (plus this model's seed/stream identity, so target and
+    /// draft payloads differ exactly like their logits do). Bit-exact
+    /// reproducible, so import validation is an equality check and any
+    /// corruption the file layer misses is still caught.
+    fn block_payload(&self, chain: &[u32], block_size: usize) -> Option<Vec<f32>> {
+        if chain.len() < block_size || chain.len() % block_size != 0 {
+            return None;
+        }
+        let start = chain.len() - block_size;
+        let salt = Self::mix(self.seed ^ self.stream.wrapping_add(0x5eed) ^ self.alpha.to_bits());
+        let mut out = Vec::with_capacity(block_size);
+        for j in 0..block_size {
+            let h = Self::mix(self.ctx_hash(&chain[..start + j + 1]) ^ salt);
+            // mantissa bits under a fixed exponent: always finite, never
+            // NaN, bitwise comparable
+            out.push(f32::from_bits(((h >> 40) as u32 & 0x007F_FFFF) | 0x3F80_0000));
+        }
+        Some(out)
     }
 
     /// The model's shared KV pool, when paged.
@@ -249,10 +319,20 @@ impl Llm for SimLm {
     /// trait docs); the caller skips evaluating those tokens. Dense
     /// sessions ignore the hint.
     fn begin_with_prefix(&self, prefix_hint: &[u32]) -> Result<Self::Session> {
+        let max_slots = self.session_capacity();
+        self.begin_sized(prefix_hint, max_slots)
+    }
+
+    /// [`SimLm::begin_with_prefix`] with a right-sized private-block
+    /// table: the session reserves bookkeeping for `max_slots` (clamped
+    /// to the pool) instead of the whole pool, fixing the O(sessions x
+    /// pool) host-memory footprint while keeping the decode path
+    /// allocation-free.
+    fn begin_sized(&self, prefix_hint: &[u32], max_slots: usize) -> Result<Self::Session> {
         let Some(pool) = &self.kv else { return self.begin() };
         let m = pool.acquire_prefix(prefix_hint, prefix_hint.len().saturating_sub(1));
         let matched = m.matched;
-        let slots = PagedSlots::from_acquire(pool.clone(), m.leases);
+        let slots = PagedSlots::from_acquire_sized(pool.clone(), m.leases, max_slots);
         Ok(SimSession {
             core: SessionCore::paged(
                 slots,
@@ -287,6 +367,32 @@ impl Llm for SimLm {
         match &self.kv {
             Some(pool) => pool.total_slots(),
             None => self.cache_len - 1,
+        }
+    }
+
+    fn export_block(&self, chain: &[u32]) -> Option<Vec<f32>> {
+        let bs = self.kv.as_ref()?.block_size();
+        self.block_payload(chain, bs)
+    }
+
+    fn import_block(&self, chain: &[u32], payload: &[f32]) -> bool {
+        let Some(pool) = &self.kv else { return false };
+        match self.block_payload(chain, pool.block_size()) {
+            Some(want) => {
+                want.len() == payload.len()
+                    && want.iter().zip(payload).all(|(a, b)| a.to_bits() == b.to_bits())
+            }
+            None => false,
+        }
+    }
+
+    fn cached_prefix_len(&self, tokens: &[u32]) -> usize {
+        self.kv.as_ref().map_or(0, |p| p.peek_prefix(tokens))
+    }
+
+    fn persist_cold(&self) {
+        if let Some(pool) = &self.kv {
+            pool.persist_radix();
         }
     }
 

@@ -1,12 +1,29 @@
-//! safetensors-lite reader: the weights interchange format produced by
-//! `python/compile/tensorfile.py`.
+//! safetensors-lite reader/writer: the weights interchange format
+//! produced by `python/compile/tensorfile.py`, now also the on-disk
+//! format for the cold KV tier ([`crate::kvcache::cold`]).
 //!
 //! Layout: `[u64 LE header_len][header JSON][raw tensor data]`, tensors
-//! raw little-endian C-contiguous. See the python writer for the header
-//! schema.
+//! raw little-endian C-contiguous, offsets relative to the start of the
+//! data section. Header schema per tensor:
+//! `{"dtype": "f32"|"i32", "shape": [..], "offset": N, "nbytes": M}`
+//! plus an optional `"crc32"` field (IEEE CRC-32 of the tensor bytes).
+//! The python writer does not emit checksums; [`save`] always does, and
+//! [`load`] verifies them whenever present — so cold-tier spill files
+//! are integrity-checked while legacy weight files stay loadable.
+//!
+//! Hardening invariants (the cold tier trusts this layer with cache
+//! state, so adversarial/corrupt headers must fail *cleanly*):
+//! * all size arithmetic is checked — `offset + nbytes` and
+//!   `product(shape) * 4` reject on overflow instead of wrapping past a
+//!   bounds check;
+//! * tensor ranges may not overlap each other;
+//! * reads are ranged (seek + exact read per tensor), so peak memory is
+//!   one tensor, not 2x the file;
+//! * any violation — truncation, bad utf-8, bad JSON, bad checksum —
+//!   is an `Err`, never a panic.
 
 use std::collections::BTreeMap;
-use std::io::Read;
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -17,6 +34,15 @@ use crate::util::Json;
 pub enum Dtype {
     F32,
     I32,
+}
+
+impl Dtype {
+    fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+        }
+    }
 }
 
 /// One named tensor loaded from a `.tensors` file.
@@ -43,29 +69,67 @@ impl Tensor {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
+
+    /// Pack an f32 slice into an `f32` tensor of the given shape.
+    pub fn from_f32(shape: Vec<usize>, vals: &[f32]) -> Result<Tensor> {
+        let want = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .context("shape element count overflows")?;
+        if want != vals.len() {
+            bail!("shape/value mismatch ({want} != {})", vals.len());
+        }
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(Tensor { dtype: Dtype::F32, shape, data })
+    }
 }
 
 /// All tensors in a file, keyed by name (ordered for determinism).
 pub type Tensors = BTreeMap<String, Tensor>;
 
-pub fn load(path: impl AsRef<Path>) -> Result<Tensors> {
-    let path = path.as_ref();
-    let mut f = std::fs::File::open(path)
-        .with_context(|| format!("opening tensors file {}", path.display()))?;
-    let mut len8 = [0u8; 8];
-    f.read_exact(&mut len8).context("reading header length")?;
-    let hlen = u64::from_le_bytes(len8) as usize;
-    if hlen > 16 << 20 {
-        bail!("implausible header length {hlen}");
+/// IEEE CRC-32 (the polynomial zlib/zip use), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    const fn table() -> [u32; 256] {
+        let mut t = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            t[i] = c;
+            i += 1;
+        }
+        t
     }
-    let mut hjson = vec![0u8; hlen];
-    f.read_exact(&mut hjson).context("reading header json")?;
-    let htext = std::str::from_utf8(&hjson).context("header not utf-8")?;
-    let header = Json::parse(htext).context("parsing header json")?;
-    let mut data = Vec::new();
-    f.read_to_end(&mut data).context("reading data section")?;
+    static TABLE: [u32; 256] = table();
+    let mut c = u32::MAX;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
 
-    let mut out = Tensors::new();
+/// One validated header entry: where the tensor lives in the data
+/// section and what it must look like.
+struct Entry {
+    name: String,
+    dtype: Dtype,
+    shape: Vec<usize>,
+    offset: u64,
+    nbytes: u64,
+    crc: Option<u32>,
+}
+
+/// Parse and validate the header against the actual data-section size.
+/// All arithmetic is checked; ranges are bounds- and overlap-checked.
+fn plan_entries(header: &Json, data_len: u64) -> Result<Vec<Entry>> {
+    let mut plan = Vec::new();
     for (name, e) in header.as_obj().context("header must be an object")? {
         let dtype = match e.str_field("dtype")? {
             "f32" => Dtype::F32,
@@ -79,28 +143,144 @@ pub fn load(path: impl AsRef<Path>) -> Result<Tensors> {
             .iter()
             .map(|x| x.as_usize().with_context(|| format!("{name}: bad shape entry")))
             .collect::<Result<_>>()?;
-        let offset = e.usize_field("offset")?;
-        let nbytes = e.usize_field("nbytes")?;
-        let want: usize = shape.iter().product::<usize>() * 4;
+        let offset = e.usize_field("offset")? as u64;
+        let nbytes = e.usize_field("nbytes")? as u64;
+        let want = shape
+            .iter()
+            .try_fold(1u64, |a, &d| a.checked_mul(d as u64))
+            .and_then(|n| n.checked_mul(4))
+            .with_context(|| format!("{name}: shape size overflows"))?;
         if want != nbytes {
             bail!("{name}: shape/nbytes mismatch ({want} != {nbytes})");
         }
-        let end = offset + nbytes;
-        if end > data.len() {
-            bail!("{name}: data range {offset}..{end} out of bounds ({})", data.len());
+        let end = offset
+            .checked_add(nbytes)
+            .with_context(|| format!("{name}: offset + nbytes overflows"))?;
+        if end > data_len {
+            bail!("{name}: data range {offset}..{end} out of bounds ({data_len})");
         }
-        out.insert(
-            name.clone(),
-            Tensor { dtype, shape, data: data[offset..end].to_vec() },
-        );
+        let crc = match e.get("crc32") {
+            None => None,
+            Some(c) => {
+                let n = c
+                    .as_f64()
+                    .filter(|f| f.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(f))
+                    .with_context(|| format!("{name}: invalid crc32 field"))?;
+                Some(n as u32)
+            }
+        };
+        plan.push(Entry { name: name.clone(), dtype, shape, offset, nbytes, crc });
+    }
+    // Reject overlapping ranges: a header that aliases two tensors onto
+    // the same bytes is corrupt (or adversarial), not a weights file.
+    let mut ranges: Vec<(u64, u64, &str)> = plan
+        .iter()
+        .filter(|e| e.nbytes > 0)
+        .map(|e| (e.offset, e.offset + e.nbytes, e.name.as_str()))
+        .collect();
+    ranges.sort_unstable();
+    for w in ranges.windows(2) {
+        if w[1].0 < w[0].1 {
+            bail!("tensors '{}' and '{}' overlap in the data section", w[0].2, w[1].2);
+        }
+    }
+    Ok(plan)
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Tensors> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening tensors file {}", path.display()))?;
+    let file_len = f.metadata().context("stat tensors file")?.len();
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8).context("reading header length")?;
+    let hlen = u64::from_le_bytes(len8);
+    if hlen > 16 << 20 {
+        bail!("implausible header length {hlen}");
+    }
+    let data_start = 8u64
+        .checked_add(hlen)
+        .filter(|&s| s <= file_len)
+        .with_context(|| format!("truncated file: header {hlen} exceeds length {file_len}"))?;
+    let data_len = file_len - data_start;
+    let mut hjson = vec![0u8; hlen as usize];
+    f.read_exact(&mut hjson).context("reading header json")?;
+    let htext = std::str::from_utf8(&hjson).context("header not utf-8")?;
+    let header = Json::parse(htext).context("parsing header json")?;
+
+    let mut out = Tensors::new();
+    for e in plan_entries(&header, data_len)? {
+        // Ranged read: seek to this tensor and read exactly its bytes,
+        // so peak memory is one tensor rather than the whole section.
+        f.seek(SeekFrom::Start(data_start + e.offset))
+            .with_context(|| format!("{}: seeking to data", e.name))?;
+        let mut data = vec![0u8; e.nbytes as usize];
+        f.read_exact(&mut data)
+            .with_context(|| format!("{}: reading {} data bytes", e.name, e.nbytes))?;
+        if let Some(want) = e.crc {
+            let got = crc32(&data);
+            if got != want {
+                bail!("{}: checksum mismatch (header {want:#010x}, data {got:#010x})", e.name);
+            }
+        }
+        out.insert(e.name, Tensor { dtype: e.dtype, shape: e.shape, data });
     }
     Ok(out)
+}
+
+/// Write tensors in the interchange format, checksummed and atomic: the
+/// file is staged as `<path>.tmp` and renamed into place, so readers
+/// never observe a half-written file (a torn write at worst leaves a
+/// stale tmp behind). Offsets are assigned in key order; every entry
+/// carries a `crc32` the reader will verify.
+pub fn save(path: impl AsRef<Path>, tensors: &Tensors) -> Result<()> {
+    let path = path.as_ref();
+    let mut offset = 0usize;
+    let mut entries: Vec<(String, Json)> = Vec::new();
+    for (name, t) in tensors {
+        let want = t
+            .shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .and_then(|n| n.checked_mul(4))
+            .with_context(|| format!("{name}: shape size overflows"))?;
+        if want != t.data.len() {
+            bail!("{name}: shape/data mismatch ({want} != {})", t.data.len());
+        }
+        entries.push((
+            name.clone(),
+            Json::obj(vec![
+                ("dtype", Json::from(t.dtype.name())),
+                ("shape", Json::Arr(t.shape.iter().map(|&d| Json::from(d)).collect())),
+                ("offset", Json::from(offset)),
+                ("nbytes", Json::from(t.data.len())),
+                ("crc32", Json::Num(crc32(&t.data) as f64)),
+            ]),
+        ));
+        offset = offset
+            .checked_add(t.data.len())
+            .context("total data size overflows")?;
+    }
+    let header = Json::Obj(entries.into_iter().collect()).to_string();
+
+    let tmp = path.with_extension("tensors.tmp");
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(&(header.len() as u64).to_le_bytes()).context("writing header length")?;
+    f.write_all(header.as_bytes()).context("writing header")?;
+    for t in tensors.values() {
+        f.write_all(&t.data).context("writing tensor data")?;
+    }
+    f.sync_all().context("syncing tensors file")?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Write;
 
     fn write_file(dir: &std::path::Path, header: &str, data: &[u8]) -> std::path::PathBuf {
         let p = dir.join("t.tensors");
@@ -111,10 +291,15 @@ mod tests {
         p
     }
 
+    fn tdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("tf_test_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip_small() {
-        let dir = std::env::temp_dir().join(format!("tf_test_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tdir("rt");
         let vals: Vec<f32> = vec![1.0, -2.5, 3.25, 0.0, 7.0, 8.0];
         let mut data = Vec::new();
         for v in &vals {
@@ -130,8 +315,7 @@ mod tests {
 
     #[test]
     fn rejects_out_of_bounds() {
-        let dir = std::env::temp_dir().join(format!("tf_test_oob_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tdir("oob");
         let header = r#"{"a": {"dtype": "f32", "shape": [4], "offset": 0, "nbytes": 16}}"#;
         let p = write_file(&dir, header, &[0u8; 8]);
         assert!(load(&p).is_err());
@@ -139,10 +323,115 @@ mod tests {
 
     #[test]
     fn rejects_shape_mismatch() {
-        let dir = std::env::temp_dir().join(format!("tf_test_sm_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tdir("sm");
         let header = r#"{"a": {"dtype": "f32", "shape": [4], "offset": 0, "nbytes": 12}}"#;
         let p = write_file(&dir, header, &[0u8; 16]);
         assert!(load(&p).is_err());
+    }
+
+    /// Regression: `offset + nbytes` used to wrap on adversarial
+    /// offsets, letting the bounds check pass and the slice panic.
+    #[test]
+    fn rejects_offset_nbytes_overflow() {
+        let dir = tdir("ov1");
+        let header = format!(
+            r#"{{"a": {{"dtype": "f32", "shape": [4], "offset": {}, "nbytes": 16}}}}"#,
+            u64::MAX - 8
+        );
+        let p = write_file(&dir, &header, &[0u8; 16]);
+        assert!(load(&p).is_err());
+        // saturated-to-MAX offset (JSON f64 -> usize saturates)
+        let header = format!(
+            r#"{{"a": {{"dtype": "f32", "shape": [4], "offset": {}, "nbytes": 16}}}}"#,
+            u64::MAX
+        );
+        let p = write_file(&dir, &header, &[0u8; 16]);
+        assert!(load(&p).is_err());
+    }
+
+    /// Regression: `product(shape) * 4` used to wrap, matching a small
+    /// nbytes and passing validation with a bogus element count.
+    #[test]
+    fn rejects_shape_product_overflow() {
+        let dir = tdir("ov2");
+        // 2^62 * 4 wraps to 0 in u64; must be an Err, not a 0-byte "match"
+        let header = format!(
+            r#"{{"a": {{"dtype": "f32", "shape": [{}, 4], "offset": 0, "nbytes": 0}}}}"#,
+            1u64 << 62
+        );
+        let p = write_file(&dir, &header, &[0u8; 16]);
+        assert!(load(&p).is_err());
+        // huge multi-dim product
+        let header = format!(
+            r#"{{"a": {{"dtype": "f32", "shape": [{0}, {0}, {0}], "offset": 0, "nbytes": 16}}}}"#,
+            u32::MAX
+        );
+        let p = write_file(&dir, &header, &[0u8; 16]);
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_overlapping_ranges() {
+        let dir = tdir("olap");
+        let header = r#"{"a": {"dtype": "f32", "shape": [4], "offset": 0, "nbytes": 16},
+                         "b": {"dtype": "f32", "shape": [4], "offset": 8, "nbytes": 16}}"#;
+        let p = write_file(&dir, header, &[0u8; 24]);
+        let err = load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("overlap"), "{err:#}");
+        // adjacent (end == start) is fine
+        let header = r#"{"a": {"dtype": "f32", "shape": [4], "offset": 0, "nbytes": 16},
+                         "b": {"dtype": "f32", "shape": [2], "offset": 16, "nbytes": 8}}"#;
+        let p = write_file(&dir, header, &[0u8; 24]);
+        assert!(load(&p).is_ok());
+    }
+
+    #[test]
+    fn rejects_header_longer_than_file() {
+        let dir = tdir("trunc");
+        let p = dir.join("t.tensors");
+        std::fs::write(&p, (1u64 << 20).to_le_bytes()).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_checksums() {
+        let dir = tdir("save");
+        let p = dir.join("w.tensors");
+        let mut ts = Tensors::new();
+        ts.insert("w".into(), Tensor::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap());
+        ts.insert(
+            "b".into(),
+            Tensor { dtype: Dtype::I32, shape: vec![3], data: vec![1, 0, 0, 0, 2, 0, 0, 0, 3, 0, 0, 0] },
+        );
+        save(&p, &ts).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["w"].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(back["b"].dtype, Dtype::I32);
+        assert_eq!(back["b"].data, ts["b"].data);
+        assert!(!dir.join("w.tensors.tmp").exists(), "tmp staging file left behind");
+    }
+
+    #[test]
+    fn detects_checksum_mismatch() {
+        let dir = tdir("crc");
+        let p = dir.join("w.tensors");
+        let mut ts = Tensors::new();
+        ts.insert("w".into(), Tensor::from_f32(vec![4], &[1.0, 2.0, 3.0, 4.0]).unwrap());
+        save(&p, &ts).unwrap();
+        // flip one payload byte (last byte of the file is tensor data)
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // standard IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
     }
 }

@@ -23,7 +23,7 @@ use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use rsd::bench::harness;
-use rsd::chaos::{ChaosConfig, ChaosLm, FaultPlan};
+use rsd::chaos::{damage_spill_files, ChaosConfig, ChaosLm, FaultPlan, SpillDamage};
 use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig, SamplingPatch};
 use rsd::coordinator::engine::{spawn, CancelRegistry, Engine, Event, Request};
 use rsd::coordinator::errors::{EngineError, ErrorKind};
@@ -604,4 +604,79 @@ fn chaos_soak_is_isolated_deterministic_and_leak_free() {
         .expect("write TRACE_chaos.json");
     std::fs::write(harness::snapshot_path("FAULTS_chaos.json"), format!("{plan_doc}\n"))
         .expect("write FAULTS_chaos.json");
+}
+
+/// Corrupt-spill soak: the 200-request workload over the undersized
+/// pool WITH a cold tier, run twice over the same store — and between
+/// the runs every spilled block file is damaged (bit flips on the
+/// target store, truncation on the draft store). Invariants: per-
+/// request streams are bit-identical across cold-off, cold-on and
+/// corrupted-cold runs; corruption surfaces only as `kv_cold_corrupt`
+/// telemetry (zero failures, zero leaked blocks); the [`ChaosLm`]
+/// wrapper forwards the cold seams transparently.
+#[test]
+fn corrupt_spill_soak_degrades_cleanly_and_stays_bit_identical() {
+    let specs = build_workload(2024);
+    let dir = std::env::temp_dir().join("rsd-chaos-coldsoak");
+    let _ = std::fs::remove_dir_all(&dir);
+    let kv = KvConfig { num_blocks: 24, block_size: 8, share: true };
+    // base_cfg leaves enforce_deadlines off, and no cancels are issued:
+    // deadline fields are scheduling hints here, so all three runs are
+    // fully deterministic and comparable request by request.
+    let reference = reference_streams(&specs, base_cfg());
+
+    let run_cold = |expect_clean_store: bool| {
+        let (t, d) = SimLm::pair_paged_cold(SIM_SEED, 0.8, VOCAB, kv, &dir, 512)
+            .expect("cold tier attach");
+        let pool = t.kv_pool().expect("paged sim").clone();
+        if expect_clean_store {
+            assert_eq!(pool.stats().cold_corrupt, 0, "store should boot clean");
+        } else {
+            let s = pool.stats();
+            assert!(s.cold_corrupt > 0, "damage went undetected at boot: {s:?}");
+            assert_eq!(s.cold_hits, 0, "a damaged block revived: {s:?}");
+        }
+        // wrap in a fault-free ChaosLm so the soak also covers the
+        // wrapper's forwarding of the cold seams (export/import/peek/
+        // persist) the engine drives
+        let chaos = ChaosLm::new(t, FaultPlan::none());
+        let (res, snap, _) = run_workload(chaos, d, base_cfg(), &specs, &[]);
+        assert_eq!(snap.completed, N_REQUESTS, "cold tier must never fail a request");
+        assert_eq!(snap.failed, 0);
+        assert!(snap.preemptions >= 1, "undersized pool never preempted");
+        assert_eq!(pool.status().blocks_in_use(), 0, "leaked KV blocks");
+        let streams: Vec<Vec<u32>> = res
+            .into_iter()
+            .map(|o| match o {
+                Outcome::Done(t, _) => t,
+                Outcome::Fail(_, e) => panic!("cold-soak request failed: {e}"),
+            })
+            .collect();
+        assert_eq!(streams, reference, "cold tier must be token-invisible");
+        snap
+    };
+
+    let snap1 = run_cold(true);
+    assert!(snap1.kv_cold_spills > 0, "evictions + shutdown must spill");
+
+    let hit_t = damage_spill_files(&dir.join("target"), 7, usize::MAX, SpillDamage::CorruptByte);
+    let hit_d = damage_spill_files(&dir.join("draft"), 8, usize::MAX, SpillDamage::Truncate);
+    assert!(!hit_t.is_empty() && !hit_d.is_empty(), "no spill files to damage");
+
+    let snap2 = run_cold(false);
+    assert!(snap2.kv_cold_corrupt > 0, "degradation must be counted");
+    assert_eq!(snap2.completed, N_REQUESTS);
+
+    let doc = Json::obj(vec![
+        ("damaged_target_files", hit_t.len().into()),
+        ("damaged_draft_files", hit_d.len().into()),
+        ("run1_cold_spills", (snap1.kv_cold_spills as usize).into()),
+        ("run1_cold_hits", (snap1.kv_cold_hits as usize).into()),
+        ("run2_cold_corrupt", (snap2.kv_cold_corrupt as usize).into()),
+        ("run2_cold_hits", (snap2.kv_cold_hits as usize).into()),
+        ("requests", (N_REQUESTS as usize).into()),
+    ]);
+    std::fs::write(harness::snapshot_path("COLD_chaos.json"), format!("{doc}\n"))
+        .expect("write COLD_chaos.json");
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -4,13 +4,16 @@
 //! pool preempts instead of rejecting — and still completes everything
 //! bit-identically.
 
+use std::path::PathBuf;
 use std::sync::mpsc;
 
+use rsd::chaos::{damage_spill_files, SpillDamage};
 use rsd::config::{DecoderConfig, EngineConfig, SamplingConfig};
 use rsd::coordinator::engine::{spawn, Engine, Event, Request};
 use rsd::decode::spec::{SpecStepper, StepOutcome};
 use rsd::decode::{build_parts, DecodeStats};
 use rsd::kvcache::KvConfig;
+use rsd::llm::Llm;
 use rsd::sim::SimLm;
 use rsd::util::Rng;
 
@@ -325,6 +328,137 @@ fn oversized_prompt_gets_clean_error() {
     let snap = handle.join().unwrap().snapshot();
     assert_eq!(snap.rejected, 1);
     assert_eq!(snap.completed, 1);
+}
+
+/// Fresh per-test cold-tier root under the OS temp dir; removed up
+/// front so reruns never see a previous run's spills.
+fn cold_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rsd-kvtest-{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Tentpole, stepper level: blocks evicted from the radix index spill
+/// to the cold store, and the next session over the same prompt revives
+/// them instead of re-prefilling — with a token stream bit-identical to
+/// a run that never lost its cache.
+#[test]
+fn cold_tier_revives_evicted_prefix() {
+    let kv = KvConfig { num_blocks: 64, block_size: 8, share: true };
+    let prompt: Vec<u32> = (0..24u32).map(|t| (t * 3 + 2) % VOCAB as u32).collect();
+    let max_new = 16;
+    let cfg: DecoderConfig = "rsd-s:3x3".parse().unwrap();
+    let sampling = SamplingConfig::new(0.6, 1.0);
+
+    let reference = {
+        let (target, draft) = SimLm::pair_paged(5, 0.8, VOCAB, kv);
+        let (strategy, rule) = build_parts(&cfg);
+        let mut rng = Rng::seed_from_u64(9);
+        let mut st = SpecStepper::new(
+            &target, &draft, strategy, rule, sampling.clone(), &prompt, max_new,
+        )
+        .unwrap();
+        while st.step(&target, &draft, &mut rng).unwrap() == StepOutcome::Progress {}
+        st.out.clone()
+    };
+
+    let dir = cold_dir("revive");
+    let (target, draft) = SimLm::pair_paged_cold(5, 0.8, VOCAB, kv, &dir, 256).unwrap();
+    let tpool = target.kv_pool().unwrap().clone();
+    target.cache_prefix(&prompt);
+    draft.cache_prefix(&prompt);
+    assert!(tpool.evict_all() > 0, "published prefix was evictable");
+    draft.kv_pool().unwrap().evict_all();
+    assert!(tpool.stats().cold_spills > 0, "eviction must spill to the cold tier");
+    // the cold index answers prefix probes without touching disk
+    assert!(target.cached_prefix_len(&prompt) >= 16, "peek sees the spilled chain");
+
+    let (strategy, rule) = build_parts(&cfg);
+    let mut rng = Rng::seed_from_u64(9);
+    let mut st =
+        SpecStepper::new(&target, &draft, strategy, rule, sampling, &prompt, max_new)
+            .unwrap();
+    while st.step(&target, &draft, &mut rng).unwrap() == StepOutcome::Progress {}
+
+    assert_eq!(st.out, reference, "cold revival must be token-invisible");
+    let s = tpool.stats();
+    // prefix match is capped at len-1 = 23, so exactly the first two of
+    // the three spilled blocks (16 tokens) are revivable
+    assert!(s.cold_hits >= 2, "revival went through the cold tier: {s:?}");
+    assert!(s.cold_hit_tokens >= 16, "revived blocks saved prefill: {s:?}");
+    assert_eq!(s.cold_corrupt, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Tentpole, engine level: a clean shutdown persists the radix snapshot
+/// and a RESTARTED engine (fresh pools, same cold_dir) serves the
+/// shared system prompt from the snapshot — bit-identical streams with
+/// cold hits instead of re-prefill.
+#[test]
+fn engine_restart_serves_prefix_from_cold_snapshot() {
+    let dir = cold_dir("restart");
+    let kv = KvConfig { num_blocks: 256, block_size: 8, share: true };
+    let n = 4u64;
+    let max_new = 12;
+
+    let (t, d) = SimLm::pair_paged_cold(11, 0.8, VOCAB, kv, &dir, 256).unwrap();
+    let (streams1, _, snap1) =
+        run_engine(t, d, engine_cfg(4, max_new), n, max_new, prompt_for, mixed_decoder);
+    assert_eq!(snap1.completed, n);
+    assert!(snap1.kv_cold_spills > 0, "shutdown persists the radix to cold");
+
+    // "restart": brand-new models and pools over the same cold_dir —
+    // attach_cold replays the persisted snapshot before any request
+    let (t, d) = SimLm::pair_paged_cold(11, 0.8, VOCAB, kv, &dir, 256).unwrap();
+    let revived = t.kv_pool().unwrap().stats();
+    assert!(revived.cold_hits > 0, "snapshot load revives blocks: {revived:?}");
+    assert!(
+        t.cached_prefix_len(&prompt_for(0)) >= 40,
+        "system prompt is hot before the first request"
+    );
+    let (streams2, stats2, snap2) =
+        run_engine(t, d, engine_cfg(4, max_new), n, max_new, prompt_for, mixed_decoder);
+
+    assert_eq!(streams2, streams1, "restart must be token-for-token invisible");
+    assert!(snap2.kv_cold_hits > 0);
+    assert!(snap2.kv_cold_hit_rate > 0.0);
+    assert!(stats2.iter().all(|s| s.generated == max_new));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Tentpole, failure path: corrupting EVERY spilled block between runs
+/// (bit flips on the target store, truncation on the draft store) must
+/// degrade to re-prefill — same streams, all requests complete, the
+/// damage only visible as `kv_cold_corrupt` telemetry.
+#[test]
+fn corrupt_cold_blocks_degrade_to_reprefill() {
+    let dir = cold_dir("corrupt");
+    let kv = KvConfig { num_blocks: 256, block_size: 8, share: true };
+    let n = 4u64;
+    let max_new = 12;
+
+    let (t, d) = SimLm::pair_paged_cold(11, 0.8, VOCAB, kv, &dir, 256).unwrap();
+    let (streams1, _, snap1) =
+        run_engine(t, d, engine_cfg(4, max_new), n, max_new, prompt_for, mixed_decoder);
+    assert!(snap1.kv_cold_spills > 0);
+
+    let hit = damage_spill_files(&dir.join("target"), 1, usize::MAX, SpillDamage::CorruptByte);
+    assert!(!hit.is_empty(), "target store had spill files to damage");
+    let hit = damage_spill_files(&dir.join("draft"), 2, usize::MAX, SpillDamage::Truncate);
+    assert!(!hit.is_empty(), "draft store had spill files to damage");
+
+    let (t, d) = SimLm::pair_paged_cold(11, 0.8, VOCAB, kv, &dir, 256).unwrap();
+    let after_load = t.kv_pool().unwrap().stats();
+    assert_eq!(after_load.cold_hits, 0, "nothing corrupt may revive: {after_load:?}");
+    assert!(after_load.cold_corrupt > 0, "corruption was detected: {after_load:?}");
+    let (streams2, _, snap2) =
+        run_engine(t, d, engine_cfg(4, max_new), n, max_new, prompt_for, mixed_decoder);
+
+    assert_eq!(streams2, streams1, "corruption must never change tokens");
+    assert_eq!(snap2.completed, n);
+    assert_eq!(snap2.failed, 0);
+    assert!(snap2.kv_cold_corrupt > 0, "degradation is counted, not hidden");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Dense substrates are untouched by the admission guard: the dense sim

@@ -1,0 +1,293 @@
+//! Adversarial tensorfile suite: the cold KV tier trusts this layer
+//! with persisted cache state, so `tensorfile::load` must survive
+//! arbitrary header/byte corruption — truncation, overflowing offsets,
+//! aliased ranges, garbage dtypes — with a clean `Err`, never a panic
+//! and never a bogus tensor. Mirrors the seeded structure-aware fuzz
+//! idiom of `tests/protocol.rs`, plus cross-writer round-trips against
+//! the `python/compile/tensorfile.py` layout (no per-tensor checksums).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use rsd::tensorfile::{crc32, load, save, Dtype, Tensor, Tensors};
+use rsd::util::json::Json;
+use rsd::util::Rng;
+
+fn tdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tf_fuzz_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write `[u64 LE header_len][header][data]` with an explicit (possibly
+/// lying) header length — the knob most corruptions turn.
+fn write_raw(path: &Path, hlen: u64, header: &[u8], data: &[u8]) {
+    let mut f = std::fs::File::create(path).unwrap();
+    f.write_all(&hlen.to_le_bytes()).unwrap();
+    f.write_all(header).unwrap();
+    f.write_all(data).unwrap();
+}
+
+/// The exact layout `python/compile/tensorfile.py` emits: sorted keys,
+/// `", "` / `": "` separators, NO `crc32` fields.
+fn python_style_file(path: &Path) -> Vec<f32> {
+    let vals: Vec<f32> = (0..12).map(|i| i as f32 * 0.75 - 3.0).collect();
+    let mut data = Vec::new();
+    for v in &vals {
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    let ints: [i32; 3] = [-1, 0, 7];
+    for v in ints {
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    let header = r#"{"idx": {"dtype": "i32", "nbytes": 12, "offset": 48, "shape": [3]}, "w": {"dtype": "f32", "nbytes": 48, "offset": 0, "shape": [3, 4]}}"#;
+    write_raw(path, header.len() as u64, header.as_bytes(), &data);
+    vals
+}
+
+/// Rust reads the python writer's output (legacy weight files carry no
+/// checksums and must stay loadable verbatim).
+#[test]
+fn loads_python_writer_layout() {
+    let dir = tdir("py");
+    let p = dir.join("weights.tensors");
+    let vals = python_style_file(&p);
+    let ts = load(&p).unwrap();
+    assert_eq!(ts.len(), 2);
+    assert_eq!(ts["w"].shape, vec![3, 4]);
+    assert_eq!(ts["w"].as_f32().unwrap(), vals);
+    assert_eq!(ts["idx"].dtype, Dtype::I32);
+    assert_eq!(ts["idx"].data.len(), 12);
+}
+
+/// The Rust writer's output stays readable by the python reader's
+/// contract: u64 LE header length, JSON header whose per-tensor
+/// `dtype`/`shape`/`offset`/`nbytes` fields slice the data section
+/// (extra fields like `crc32` are ignored by the python side).
+#[test]
+fn rust_writer_honors_the_python_reader_contract() {
+    let dir = tdir("contract");
+    let p = dir.join("out.tensors");
+    let mut ts = Tensors::new();
+    let vals = [0.5f32, -1.5, 2.0, 1e-20];
+    ts.insert("a".into(), Tensor::from_f32(vec![4], &vals).unwrap());
+    ts.insert("z".into(), Tensor::from_f32(vec![1, 2], &[9.0, 8.0]).unwrap());
+    save(&p, &ts).unwrap();
+
+    // replay the python reader: struct.unpack("<Q"), json.loads, slice
+    let bytes = std::fs::read(&p).unwrap();
+    let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+    let header = Json::parse(std::str::from_utf8(&bytes[8..8 + hlen]).unwrap()).unwrap();
+    let data = &bytes[8 + hlen..];
+    for (name, want) in [("a", &vals[..]), ("z", &[9.0f32, 8.0][..])] {
+        let meta = header.get(name).unwrap();
+        assert_eq!(meta.str_field("dtype").unwrap(), "f32");
+        let off = meta.usize_field("offset").unwrap();
+        let nbytes = meta.usize_field("nbytes").unwrap();
+        let got: Vec<f32> = data[off..off + nbytes]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(got, want, "tensor {name} bytes diverge from the header plan");
+        // the checksum the python reader ignores is present and correct
+        let crc = meta.get("crc32").unwrap().as_f64().unwrap() as u32;
+        assert_eq!(crc, crc32(&data[off..off + nbytes]));
+    }
+    // and the Rust reader round-trips its own writer bit-exactly
+    let back = load(&p).unwrap();
+    assert_eq!(back["a"].as_f32().unwrap(), vals);
+}
+
+const DTYPES: &[&str] = &["f32", "i32", "f64", "bf16", "", "F32", "junk"];
+
+/// Extreme header field values (as raw JSON snippets).
+const NUMS: &[&str] = &[
+    "0",
+    "1",
+    "4",
+    "16",
+    "24",
+    "-1",
+    "-16",
+    "18446744073709551615",
+    "18446744073709551616",
+    "9223372036854775807",
+    "4611686018427387904",
+    "1e308",
+    "-1e308",
+    "0.5",
+    "null",
+    "\"16\"",
+    "[16]",
+];
+
+const SHAPES: &[&str] = &[
+    "[4]",
+    "[2, 2]",
+    "[]",
+    "[0]",
+    "[1, 0, 9]",
+    "[4611686018427387904, 4]",
+    "[4294967295, 4294967295, 4294967295]",
+    "[-1]",
+    "[1.5]",
+    "[null]",
+    "\"4\"",
+    "4",
+];
+
+/// One structure-aware random header: plausible tensor entries with
+/// extreme or ill-typed fields, sometimes missing fields, sometimes
+/// duplicated ranges.
+fn fuzz_header(rng: &mut Rng) -> String {
+    let n = rng.gen_range(4);
+    let entries: Vec<String> = (0..n)
+        .map(|i| {
+            let mut fields = Vec::new();
+            if rng.gen_range(8) != 0 {
+                fields.push(format!(r#""dtype": "{}""#, DTYPES[rng.gen_range(DTYPES.len())]));
+            }
+            if rng.gen_range(8) != 0 {
+                fields.push(format!(r#""shape": {}"#, SHAPES[rng.gen_range(SHAPES.len())]));
+            }
+            if rng.gen_range(8) != 0 {
+                fields.push(format!(r#""offset": {}"#, NUMS[rng.gen_range(NUMS.len())]));
+            }
+            if rng.gen_range(8) != 0 {
+                fields.push(format!(r#""nbytes": {}"#, NUMS[rng.gen_range(NUMS.len())]));
+            }
+            if rng.gen_range(4) == 0 {
+                fields.push(format!(r#""crc32": {}"#, NUMS[rng.gen_range(NUMS.len())]));
+            }
+            format!(r#""t{i}": {{{}}}"#, fields.join(", "))
+        })
+        .collect();
+    format!("{{{}}}", entries.join(", "))
+}
+
+/// 2k seeded structure-aware headers through `load`: random field
+/// combinations, lying header lengths, random data-section sizes. Every
+/// call must return (Ok or Err) — a panic aborts the test. The control
+/// group (a well-formed header every 64th round) must keep loading.
+#[test]
+fn header_fuzz_never_panics() {
+    let dir = tdir("hdr");
+    let p = dir.join("fuzz.tensors");
+    let mut rng = Rng::seed_from_u64(0x7E45_0125);
+    let (mut oks, mut errs) = (0usize, 0usize);
+    for i in 0..2_000 {
+        let header = if i % 64 == 0 {
+            r#"{"a": {"dtype": "f32", "shape": [4], "offset": 0, "nbytes": 16}}"#.to_string()
+        } else {
+            fuzz_header(&mut rng)
+        };
+        let data_len = rng.gen_range(64);
+        let data: Vec<u8> = (0..data_len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        // lie about the header length every 8th round
+        let hlen = match rng.gen_range(8) {
+            0 => rng.next_u64(),
+            1 => header.len() as u64 + rng.gen_range(64) as u64,
+            2 => (header.len() as u64).saturating_sub(rng.gen_range(8) as u64),
+            _ => header.len() as u64,
+        };
+        write_raw(&p, hlen, header.as_bytes(), &data);
+        match load(&p) {
+            Ok(ts) => {
+                oks += 1;
+                // anything that loads obeys its own header plan
+                for t in ts.values() {
+                    assert_eq!(t.data.len(), t.element_count() * 4);
+                }
+            }
+            Err(_) => errs += 1,
+        }
+    }
+    assert!(oks > 0, "fuzz corpus never produced a loadable file");
+    assert!(errs > 0, "fuzz corpus never produced a rejected file");
+}
+
+/// Byte-level corruption of a valid checksummed file: flip, truncate or
+/// splice at seeded positions. `load` must never panic, and a payload
+/// byte flip must never yield the original tensor values silently.
+#[test]
+fn byte_mutation_fuzz_never_panics_or_passes_corruption() {
+    let dir = tdir("bytes");
+    let p = dir.join("victim.tensors");
+    let vals: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+    let mut ts = Tensors::new();
+    ts.insert("w".into(), Tensor::from_f32(vec![32], &vals).unwrap());
+    save(&p, &ts).unwrap();
+    let pristine = std::fs::read(&p).unwrap();
+
+    let mut rng = Rng::seed_from_u64(0xB17E);
+    for _ in 0..2_000 {
+        let mut bytes = pristine.clone();
+        match rng.gen_range(3) {
+            0 => bytes.truncate(rng.gen_range(bytes.len())),
+            1 => {
+                let i = rng.gen_range(bytes.len());
+                bytes[i] ^= 1 << rng.gen_range(8);
+            }
+            _ => {
+                let at = rng.gen_range(bytes.len() + 1);
+                let ins: Vec<u8> =
+                    (0..1 + rng.gen_range(8)).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+                bytes.splice(at..at, ins);
+            }
+        }
+        if bytes == pristine {
+            continue;
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        if let Ok(ts) = load(&p) {
+            // a mutated file may still parse (e.g. the flip landed in
+            // JSON whitespace), but checksummed payload bytes can never
+            // silently change value
+            if let Some(w) = ts.get("w") {
+                if w.shape == [32] && w.dtype == Dtype::F32 {
+                    assert_eq!(
+                        w.as_f32().unwrap(),
+                        vals,
+                        "corrupted payload passed the checksum"
+                    );
+                }
+            }
+        }
+    }
+    // control: the pristine bytes still load
+    std::fs::write(&p, &pristine).unwrap();
+    assert_eq!(load(&p).unwrap()["w"].as_f32().unwrap(), vals);
+}
+
+/// Handcrafted adversarial headers the fuzzer might take a while to
+/// find: overflowing `offset + nbytes`, wrapping shape products and
+/// aliased tensor ranges must all reject cleanly.
+#[test]
+fn adversarial_headers_reject_cleanly() {
+    let dir = tdir("adv");
+    let p = dir.join("adv.tensors");
+    let cases = [
+        // offset + nbytes wraps past the bounds check
+        format!(
+            r#"{{"a": {{"dtype": "f32", "shape": [4], "offset": {}, "nbytes": 16}}}}"#,
+            u64::MAX - 4
+        ),
+        // shape product wraps to a tiny nbytes
+        format!(
+            r#"{{"a": {{"dtype": "f32", "shape": [{}, 4], "offset": 0, "nbytes": 0}}}}"#,
+            1u64 << 62
+        ),
+        // two tensors aliasing the same bytes
+        r#"{"a": {"dtype": "f32", "shape": [4], "offset": 0, "nbytes": 16},
+           "b": {"dtype": "f32", "shape": [4], "offset": 4, "nbytes": 16}}"#
+            .to_string(),
+        // implausible header length is rejected before allocation
+        r#"{"a": 1}"#.to_string(),
+    ];
+    for (i, header) in cases.iter().enumerate() {
+        let hlen =
+            if i == cases.len() - 1 { 17 << 20 } else { header.len() as u64 };
+        write_raw(&p, hlen, header.as_bytes(), &[0u8; 32]);
+        assert!(load(&p).is_err(), "case {i} must reject: {header}");
+    }
+}
